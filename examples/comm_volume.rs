@@ -1,0 +1,76 @@
+//! Table-5-style report: communication volume and modeled time for one GCN
+//! layer under pre / post / hybrid / hybrid+Int2 on a power-law graph.
+//!
+//!     cargo run --release --example comm_volume -- --dataset mag240m-s --procs 16
+
+use supergcn::datasets;
+use supergcn::exp::Table;
+use supergcn::hier::remote_pairs;
+use supergcn::hier::volume::{volume, RemoteStrategy};
+use supergcn::partition::{multilevel, vertex_weights};
+use supergcn::perfmodel::{t_comm, t_quant_comm_total, MachineProfile};
+use supergcn::util::args::Args;
+use supergcn::util::fmt_bytes;
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::new("comm_volume", "Table 5: comm volume/time per strategy")
+        .opt("dataset", "mag240m-s", "catalog dataset")
+        .opt("procs", "16", "parts")
+        .parse();
+    let spec = datasets::by_name(&a.get_str("dataset"))?;
+    let k = a.get_usize("procs");
+    let lg = spec.build();
+    let w = vertex_weights(&lg.graph, None, 4);
+    let part = multilevel::multilevel(
+        &lg.graph,
+        k,
+        &w,
+        &multilevel::MultilevelOpts::default(),
+    );
+    let pairs = remote_pairs(&lg.graph, &part);
+    let machine = MachineProfile::fugaku();
+    let f = spec.feat_dim;
+
+    let mut t = Table::new(
+        &format!(
+            "Table 5 analogue: {} on {} procs, feat {f} (1 GCN layer)",
+            spec.name, k
+        ),
+        &["method", "comm volume", "modeled comm time"],
+    );
+    for s in [
+        RemoteStrategy::PreOnly,
+        RemoteStrategy::PostOnly,
+        RemoteStrategy::Hybrid,
+    ] {
+        let v = volume(k, &pairs, s);
+        let values: Vec<Vec<usize>> = v.rows.iter().map(|r| r.iter().map(|&x| x * f).collect()).collect();
+        t.row(vec![
+            format!("SuperGCN ({})", s.name()),
+            fmt_bytes(v.payload_bytes(f, 32)),
+            format!("{:.3} ms", t_comm(&values, &machine) * 1e3),
+        ]);
+    }
+    // Hybrid + Int2: data and params reported separately, like the paper.
+    let v = volume(k, &pairs, RemoteStrategy::Hybrid);
+    let values: Vec<Vec<usize>> = v.rows.iter().map(|r| r.iter().map(|&x| x * f).collect()).collect();
+    let params: Vec<Vec<usize>> = v
+        .rows
+        .iter()
+        .map(|r| r.iter().map(|&x| x.div_ceil(4) * 2).collect())
+        .collect();
+    let sub = vec![0f64; k];
+    let tq = t_quant_comm_total(&values, &params, &sub, 2.0, &machine);
+    t.row(vec![
+        "SuperGCN (pre_post+Int2) data".into(),
+        fmt_bytes(v.payload_bytes(f, 2)),
+        format!("{:.3} ms (incl quant)", tq * 1e3),
+    ]);
+    t.row(vec![
+        "SuperGCN (pre_post+Int2) params".into(),
+        fmt_bytes(v.param_bytes(4)),
+        "-".into(),
+    ]);
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! Fig-7 analytic sweep: speedup of quantized communication vs process
+//! count for Int2/Int4/Int8, showing the throughput-bound → latency-bound
+//! transition (Eqn 7/8).
+//!
+//!     cargo run --release --example perf_model -- --machine fugaku
+
+use supergcn::exp::Table;
+use supergcn::perfmodel::{crossover_procs, fig7_sweep, MachineProfile};
+use supergcn::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::new("perf_model", "Fig 7 analytic speedup curves")
+        .opt("machine", "fugaku", "abci | fugaku")
+        .opt("volume", "1e8", "total cut volume at P=1 (f32 values)")
+        .parse();
+    let machine = if a.get_str("machine") == "abci" {
+        MachineProfile::abci()
+    } else {
+        MachineProfile::fugaku()
+    };
+    let vol = a.get_f64("volume");
+    let procs: Vec<usize> = (1..=13).map(|i| 1usize << i).collect();
+
+    let mut t = Table::new(
+        &format!("Fig 7: quantization speedup on {} (β={:.0})", machine.name, machine.beta()),
+        &["procs", "int2 speedup", "int4 speedup", "int8 speedup", "δ (int2)"],
+    );
+    let sweeps: Vec<_> = [2.0, 4.0, 8.0]
+        .iter()
+        .map(|&b| fig7_sweep(vol, 1.0 / 256.0, b, &procs, &machine))
+        .collect();
+    for (i, &p) in procs.iter().enumerate() {
+        t.row(vec![
+            p.to_string(),
+            format!("{:.2}x", sweeps[0][i].speedup),
+            format!("{:.2}x", sweeps[1][i].speedup),
+            format!("{:.2}x", sweeps[2][i].speedup),
+            format!("{:.3}", sweeps[0][i].delta),
+        ]);
+    }
+    t.print();
+    if let Some(px) = crossover_procs(&sweeps[0]) {
+        println!(
+            "int2 goes latency-bound at P' = {px}; beyond that the speedup decays \
+             toward 1x but never below (paper §6.2.2)."
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Strong-scaling sweep (Fig 9/10 style): epoch time vs simulated worker
+//! count, with and without the paper's communication optimizations.
+//!
+//!     cargo run --release --example scaling -- --dataset products-s --procs 2,4,8,16
+
+use supergcn::coordinator::trainer::TrainConfig;
+use supergcn::exp::{steady_epoch_secs, train_native, Table};
+use supergcn::datasets;
+use supergcn::hier::volume::RemoteStrategy;
+use supergcn::perfmodel::MachineProfile;
+use supergcn::quant::Bits;
+use supergcn::util::args::Args;
+
+fn main() -> anyhow::Result<()> {
+    let a = Args::new("scaling", "strong-scaling sweep")
+        .opt("dataset", "products-s", "catalog dataset")
+        .opt("procs", "2,4,8,16", "worker counts")
+        .opt("epochs", "8", "epochs per point")
+        .opt("machine", "fugaku", "abci | fugaku")
+        .parse();
+    let spec = datasets::by_name(&a.get_str("dataset"))?;
+    let machine = if a.get_str("machine") == "abci" {
+        MachineProfile::abci()
+    } else {
+        MachineProfile::fugaku()
+    };
+    let epochs = a.get_usize("epochs");
+
+    let mut t = Table::new(
+        &format!("strong scaling on {} ({})", spec.name, machine.name),
+        &["procs", "w/o comm opt (s/epoch)", "w/ comm opt (s/epoch)", "speedup"],
+    );
+    for k in a.get_usize_list("procs") {
+        let base = TrainConfig {
+            strategy: RemoteStrategy::PostOnly,
+            quant: None,
+            machine: machine.clone(),
+            ..Default::default()
+        };
+        let opt = TrainConfig {
+            strategy: RemoteStrategy::Hybrid,
+            quant: Some(Bits::Int2),
+            label_prop: true,
+            machine: machine.clone(),
+            ..Default::default()
+        };
+        let (s0, _) = train_native(&spec, k, base, Some(epochs))?;
+        let (s1, _) = train_native(&spec, k, opt, Some(epochs))?;
+        let t0 = steady_epoch_secs(&s0, epochs / 2);
+        let t1 = steady_epoch_secs(&s1, epochs / 2);
+        t.row(vec![
+            k.to_string(),
+            format!("{t0:.4}"),
+            format!("{t1:.4}"),
+            format!("{:.2}x", t0 / t1),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,75 @@
+//! End-to-end three-layer validation driver (the EXPERIMENTS.md §E2E run):
+//! trains the same partitioned dataset twice —
+//!
+//!  1. through the **XLA backend**: AOT'd JAX/Pallas artifacts executed
+//!     via PJRT (build them first: `make artifacts`), proving
+//!     L3 (Rust coordinator) ∘ L2 (JAX model) ∘ L1 (Pallas kernel)
+//!     compose on a real workload;
+//!  2. through the **native backend** for the long haul, asserting the
+//!     two agree epoch-for-epoch before continuing to convergence.
+//!
+//!     make artifacts && cargo run --release --example train_e2e
+
+use std::path::Path;
+use supergcn::backend::native::NativeBackend;
+use supergcn::backend::xla::XlaBackend;
+use supergcn::coordinator::planner::prepare;
+use supergcn::coordinator::trainer::{TrainConfig, Trainer};
+use supergcn::graph::generate::sbm;
+use supergcn::graph::stats::stats;
+use supergcn::hier::volume::RemoteStrategy;
+use supergcn::quant::Bits;
+use supergcn::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    anyhow::ensure!(
+        artifacts.join("manifest.json").exists(),
+        "artifacts not built — run `make artifacts` first"
+    );
+
+    // A dataset sized for the "quickstart" artifact config (n_pad 1536,
+    // f=64, c=16, 4 workers).
+    let lg = sbm(4000, 16, 7.0, 0.72, 64, 3.0, 1001);
+    println!("dataset: {}", stats(&lg.graph));
+
+    let rt = Runtime::load(artifacts, "quickstart")?;
+    let shape_cfg = rt.config.clone();
+    let tc = TrainConfig {
+        epochs: 10,
+        lr: 0.01,
+        quant: Some(Bits::Int2),
+        label_prop: true,
+        strategy: RemoteStrategy::Hybrid,
+        ..Default::default()
+    };
+    let (ctxs, cfg, _) = prepare(&lg, 4, tc.strategy, Some(shape_cfg), tc.seed)?;
+
+    // Phase 1: the full three-layer stack through PJRT.
+    println!("\n-- phase 1: XLA backend (AOT JAX/Pallas artifacts via PJRT) --");
+    let mut tr_x = Trainer::new(ctxs.clone(), Box::new(XlaBackend::new(rt)), tc.clone());
+    let xla_stats = tr_x.run(true)?;
+
+    // Phase 2: native engine; must match epoch-for-epoch.
+    println!("\n-- phase 2: native engine parity + convergence --");
+    let tc_native = TrainConfig {
+        epochs: 150,
+        ..tc
+    };
+    let mut tr_n = Trainer::new(ctxs, Box::new(NativeBackend::new(cfg)), tc_native);
+    let native_stats = tr_n.run(true)?;
+
+    let mut max_dl = 0f32;
+    for (a, b) in xla_stats.iter().zip(native_stats.iter()) {
+        max_dl = max_dl.max((a.train_loss - b.train_loss).abs());
+    }
+    println!("\nxla-vs-native max loss divergence over {} epochs: {max_dl:.5}", xla_stats.len());
+    anyhow::ensure!(max_dl < 5e-3, "backends diverged: {max_dl}");
+
+    let last = native_stats.last().unwrap();
+    println!(
+        "converged: loss {:.4}, test acc {:.3} — three-layer stack validated",
+        last.train_loss, last.test_acc
+    );
+    Ok(())
+}

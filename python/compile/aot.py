@@ -1,0 +1,189 @@
+"""AOT pipeline: lower every L2 stage to HLO **text** + a JSON manifest.
+
+Run once at build time (`make artifacts`); the Rust runtime
+(`rust/src/runtime`) loads the text through
+`HloModuleProto::from_text_file` and compiles it on the PJRT CPU client.
+HLO text — not `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+protos with 64-bit instruction ids that xla_extension 0.5.1 rejects; the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+EB = 128  # edge/row block of the Pallas kernels; all padded dims are multiples
+
+
+class Config:
+    """Static shape configuration for one artifact set.
+
+    All tensor dims every worker pads to. `n_pad` includes the reserved
+    zero row (n_pad−2) and trash row (n_pad−1).
+    """
+
+    def __init__(self, name, n_pad, f_in, hidden, classes,
+                 e_local, e_pre, p_pre, r_pre, r_post, e_post):
+        for dim, mult in [(n_pad, EB), (e_local, EB), (e_pre, EB)]:
+            assert dim % mult == 0, f"{name}: {dim} not a multiple of {mult}"
+        self.name = name
+        self.n_pad = n_pad
+        self.f_in = f_in
+        self.hidden = hidden
+        self.classes = classes
+        self.e_local = e_local
+        self.e_pre = e_pre
+        self.p_pre = p_pre      # pre segments incl. 1 trash segment
+        self.r_pre = r_pre      # received partial rows (pads zeroed)
+        self.r_post = r_post    # received raw rows incl. 1 zero row (last)
+        self.e_post = e_post    # post edges (pads → zero row / trash dst)
+
+    def layer_dims(self):
+        return [(self.f_in, self.hidden, True),
+                (self.hidden, self.hidden, True),
+                (self.hidden, self.classes, False)]
+
+    def to_json(self):
+        return {k: getattr(self, k) for k in
+                ("name", "n_pad", "f_in", "hidden", "classes", "e_local",
+                 "e_pre", "p_pre", "r_pre", "r_post", "e_post")}
+
+
+CONFIGS = [
+    # Fast CI/testing config.
+    Config("tiny", n_pad=256, f_in=16, hidden=16, classes=4,
+           e_local=1024, e_pre=256, p_pre=128, r_pre=128, r_post=128,
+           e_post=256),
+    # The quickstart / train_e2e config: arxiv-s (n=4000) on 4 workers.
+    Config("quickstart", n_pad=1536, f_in=64, hidden=64, classes=16,
+           e_local=12288, e_pre=4096, p_pre=2048, r_pre=2048, r_post=2048,
+           e_post=8192),
+]
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(fn, example_args, arg_names):
+    """jit-lower `fn` at `example_args`; returns (hlo_text, io_spec)."""
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    inputs = [
+        {"name": n, "shape": list(a.shape), "dtype": str(a.dtype)}
+        for n, a in zip(arg_names, example_args)
+    ]
+    out = jax.eval_shape(fn, *example_args)
+    leaves = jax.tree_util.tree_leaves(out)
+    outputs = [{"shape": list(o.shape), "dtype": str(o.dtype)} for o in leaves]
+    return text, {"inputs": inputs, "outputs": outputs}
+
+
+def build_config(cfg: Config, out_dir: str):
+    arts = {}
+
+    def emit(role, fn, args, names):
+        text, io = lower_artifact(fn, args, names)
+        fname = f"{cfg.name}_{role}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        arts[role] = {"file": fname, **io}
+        print(f"  {cfg.name}/{role}: {len(text)} chars")
+
+    n, ep, pp = cfg.n_pad, cfg.e_pre, cfg.p_pre
+
+    # pre_fwd / pre_bwd per distinct input width.
+    for f in sorted({cfg.f_in, cfg.hidden}):
+        pre_args = (f32(n, f), i32(ep), i32(ep), i32(ep))
+        emit(
+            f"pre_fwd_f{f}",
+            functools.partial(model.pre_fwd, n_pre_seg=pp),
+            pre_args,
+            ["h", "pre_gather", "pre_segrel", "pre_blockseg"],
+        )
+        emit(
+            f"pre_bwd_f{f}",
+            functools.partial(model.pre_bwd, n_pre_seg=pp),
+            pre_args[:1] + pre_args[1:] + (f32(n, f), f32(pp, f)),
+            ["h", "pre_gather", "pre_segrel", "pre_blockseg", "d_h_norm", "d_partials"],
+        )
+
+    # layer_fwd / layer_bwd per layer.
+    el, rp, ro, epo = cfg.e_local, cfg.r_pre, cfg.r_post, cfg.e_post
+    for l, (fin, fout, relu) in enumerate(cfg.layer_dims()):
+        common = (
+            f32(n, fin), f32(rp, fin), f32(ro, fin),
+            f32(fin, fout), f32(fin, fout), f32(fout),
+            i32(el), i32(el), i32(el),
+            i32(rp), i32(epo), i32(epo), f32(n),
+        )
+        names = [
+            "h_norm", "recv_pre", "recv_post", "w_self", "w_neigh", "b",
+            "local_gather", "local_segrel", "local_blockseg",
+            "rpre_dst", "post_row", "post_dst", "deg_inv",
+        ]
+        emit(
+            f"layer_fwd_{l}",
+            functools.partial(model.layer_fwd, relu=relu),
+            common,
+            names,
+        )
+        emit(
+            f"layer_bwd_{l}",
+            functools.partial(model.layer_bwd, relu=relu),
+            common + (f32(n, fout),),
+            names + ["d_out"],
+        )
+
+    emit(
+        "loss_head",
+        model.loss_head,
+        (f32(n, cfg.classes), i32(n), f32(n)),
+        ["logits", "labels", "mask"],
+    )
+    return {**cfg.to_json(), "artifacts": arts}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="",
+                    help="comma-separated subset of config names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    want = set(filter(None, args.configs.split(",")))
+    manifest = {"version": 1, "eb": EB, "configs": []}
+    for cfg in CONFIGS:
+        if want and cfg.name not in want:
+            continue
+        print(f"lowering config '{cfg.name}' ...")
+        manifest["configs"].append(build_config(cfg, args.out_dir))
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {path}")
+
+
+if __name__ == "__main__":
+    main()

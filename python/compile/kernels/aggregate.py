@@ -1,0 +1,155 @@
+"""L1 Pallas kernel: blocked segment-sum aggregation.
+
+TPU re-think of the paper's §4 CPU operator (DESIGN.md §2
+Hardware-Adaptation): edges arrive **sorted by destination** (the paper's
+clustering/sorting step, done once on the host by the Rust planner); the
+kernel processes fixed-size edge blocks, and within a block the
+per-destination accumulation is expressed as
+
+    partial = one_hot(seg_rel)ᵀ @ gathered_rows        # [SEG, EB] @ [EB, FB]
+
+i.e. an MXU matmul — the systolic-array analogue of the paper's
+vector-register-blocked scatter. Feature columns are tiled by BlockSpec so
+a (rows, one-hot, accumulator) triple fits VMEM (see DESIGN.md §8 for the
+footprint estimate). Block partials are combined by a cheap scatter-add in
+plain XLA (the 2D-parallel reduction of Fig 3(d)).
+
+Both the forward (reduce) and backward (broadcast, `onehot @ d_partial`)
+are Pallas kernels wrapped in one `jax.custom_vjp`.
+
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Edge-block size and per-block segment capacity. EB == SEGB guarantees any
+# block's distinct destinations fit (≤ EB of them).
+EB = 128
+
+
+def plan_segments(seg, eb=EB):
+    """Host-side planning (numpy): given sorted segment ids `seg[e]`,
+    produce (seg_rel[e], block_seg[nb*eb]) where within each eb-block
+    seg_rel is the dense rank of the segment and block_seg maps
+    (block, rank) → global segment (or `trash` = max+1 for unused slots).
+
+    The Rust planner reimplements this; this copy serves the Python tests
+    and the AOT examples.
+    """
+    seg = np.asarray(seg, dtype=np.int32)
+    e = len(seg)
+    assert e % eb == 0, "edge count must be padded to a block multiple"
+    nb = e // eb
+    seg_rel = np.zeros(e, dtype=np.int32)
+    block_seg = np.full(nb * eb, -1, dtype=np.int32)
+    for b in range(nb):
+        blk = seg[b * eb : (b + 1) * eb]
+        uniq, inv = np.unique(blk, return_inverse=True)
+        seg_rel[b * eb : (b + 1) * eb] = inv.astype(np.int32)
+        block_seg[b * eb : b * eb + len(uniq)] = uniq
+    return seg_rel, block_seg
+
+
+def _fwd_kernel(rows_ref, segrel_ref, out_ref):
+    """One (edge-block, feature-block) tile: out = onehotᵀ @ rows."""
+    rel = segrel_ref[...]  # [EB]
+    onehot = (rel[:, None] == jax.lax.broadcasted_iota(jnp.int32, (EB, EB), 1)).astype(
+        rows_ref.dtype
+    )  # [EB, SEGB]
+    out_ref[...] = jnp.dot(
+        onehot.T, rows_ref[...], preferred_element_type=rows_ref.dtype
+    )
+
+
+def _bwd_kernel(dpart_ref, segrel_ref, drows_ref):
+    """Backward tile: d_rows = onehot @ d_partials."""
+    rel = segrel_ref[...]
+    onehot = (rel[:, None] == jax.lax.broadcasted_iota(jnp.int32, (EB, EB), 1)).astype(
+        dpart_ref.dtype
+    )
+    drows_ref[...] = jnp.dot(
+        onehot, dpart_ref[...], preferred_element_type=dpart_ref.dtype
+    )
+
+
+def _block_reduce(rows, seg_rel):
+    """partials[nb*EB, f] from rows[e, f] and seg_rel[e] (Pallas)."""
+    e, f = rows.shape
+    assert e % EB == 0
+    nb = e // EB
+    fb = min(f, 128)
+    assert f % fb == 0, "feature dim must divide the 128 block (pad on host)"
+    return pl.pallas_call(
+        _fwd_kernel,
+        grid=(nb, f // fb),
+        in_specs=[
+            pl.BlockSpec((EB, fb), lambda i, j: (i, j)),
+            pl.BlockSpec((EB,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((EB, fb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nb * EB, f), rows.dtype),
+        interpret=True,
+    )(rows, seg_rel)
+
+
+def _block_broadcast(d_partials, seg_rel):
+    """d_rows[e, f] from d_partials[nb*EB, f] (Pallas backward)."""
+    e = seg_rel.shape[0]
+    f = d_partials.shape[1]
+    nb = e // EB
+    fb = min(f, 128)
+    return pl.pallas_call(
+        _bwd_kernel,
+        grid=(nb, f // fb),
+        in_specs=[
+            pl.BlockSpec((EB, fb), lambda i, j: (i, j)),
+            pl.BlockSpec((EB,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((EB, fb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((e, f), d_partials.dtype),
+        interpret=True,
+    )(d_partials, seg_rel)
+
+
+@jax.custom_vjp
+def _segment_reduce(rows, seg_rel):
+    return _block_reduce(rows, seg_rel)
+
+
+def _segment_reduce_fwd(rows, seg_rel):
+    # seg_rel (int32) rides along as the residual; its own cotangent is None.
+    return _block_reduce(rows, seg_rel), seg_rel
+
+
+def _segment_reduce_bwd(seg_rel, d_partials):
+    return (_block_broadcast(d_partials, seg_rel), None)
+
+
+_segment_reduce.defvjp(_segment_reduce_fwd, _segment_reduce_bwd)
+
+
+def segment_sum(h, gather, seg_rel, block_seg, n_seg):
+    """Full segment sum `out[s] = Σ_{i: seg(i)=s} h[gather[i]]`.
+
+    h:         [n, f] feature rows (differentiable)
+    gather:    [e] int32 source-row index per contribution (padded entries
+               must point at a zero row of `h`)
+    seg_rel:   [e] int32 within-block segment rank (host-planned)
+    block_seg: [e] int32 (= nb*EB) rank → global segment map; unused slots
+               must be ≥ n_seg (they fall into the trash row and are
+               sliced off)
+    n_seg:     static segment count
+    Returns [n_seg, f].
+    """
+    rows = h[gather]  # XLA gather (DMA on real hardware)
+    partials = _segment_reduce(rows, seg_rel)  # Pallas hot loop
+    safe = jnp.minimum(block_seg, n_seg)  # clamp trash slots to row n_seg
+    out = jnp.zeros((n_seg + 1, h.shape[1]), dtype=h.dtype)
+    out = out.at[safe].add(partials)
+    return out[:n_seg]

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: row-wise LayerNorm (no affine params).
+
+Paper §6.1(2): LayerNorm is applied to the embedding table before each GCN
+layer to remove large-magnitude outliers so aggressive (Int2) quantization
+keeps small error. Rows are independent, so the kernel tiles over row
+blocks; mean/variance stay in VMEM registers per row.
+
+Forward and backward (the standard non-affine LN gradient
+`dx = inv_std/f · (f·dy − Σdy − x̂·Σ(dy·x̂))`) are both Pallas kernels
+under one `jax.custom_vjp`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+RB = 128  # rows per block
+EPS = 1e-5
+
+
+def _ln_fwd_kernel(x_ref, y_ref):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=1, keepdims=True)
+    y_ref[...] = (x - mean) * jax.lax.rsqrt(var + EPS)
+
+
+def _ln_bwd_kernel(x_ref, dy_ref, dx_ref):
+    x = x_ref[...]
+    dy = dy_ref[...]
+    f = x.shape[1]
+    mean = jnp.mean(x, axis=1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=1, keepdims=True)
+    inv = jax.lax.rsqrt(var + EPS)
+    xhat = (x - mean) * inv
+    sum_dy = jnp.sum(dy, axis=1, keepdims=True)
+    sum_dyx = jnp.sum(dy * xhat, axis=1, keepdims=True)
+    dx_ref[...] = (inv / f) * (f * dy - sum_dy - xhat * sum_dyx)
+
+
+def _run(kernel, out_shape, *args):
+    n, f = args[0].shape
+    assert n % RB == 0, "row count must be padded to the 128 block"
+    return pl.pallas_call(
+        kernel,
+        grid=(n // RB,),
+        in_specs=[pl.BlockSpec((RB, f), lambda i: (i, 0)) for _ in args],
+        out_specs=pl.BlockSpec((RB, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, f), args[0].dtype),
+        interpret=True,
+    )(*args)
+
+
+@jax.custom_vjp
+def layernorm(x):
+    """Row-wise non-affine LayerNorm; x: [n, f], n % 128 == 0."""
+    return _run(_ln_fwd_kernel, x.shape, x)
+
+
+def _fwd(x):
+    return layernorm(x), x
+
+
+def _bwd(x, dy):
+    return (_run(_ln_bwd_kernel, x.shape, x, dy),)
+
+
+layernorm.defvjp(_fwd, _bwd)

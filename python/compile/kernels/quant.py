@@ -1,0 +1,85 @@
+"""L1 Pallas kernel: stochastic integer quantization / dequantization.
+
+Mirrors the paper's §7.3 fused kernel on TPU terms: one grid step loads a
+4-row group into VMEM, computes (zero, scale) from the group min/max,
+quantizes with a *precomputed noise tensor* — the paper's optimization of
+eliminating RNG from the kernel's dependency chain; the Rust coordinator
+generates the noise stream — and emits integer codes. Bit-packing is a
+byte-level concern of the wire and stays on the host (Rust), where the
+paper also does it.
+
+These kernels are the compile-path twins of `rust/src/quant/fused.rs`
+(which owns the runtime comm path); pytest checks both against
+`ref.quantize_ref`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GROUP_ROWS = 4
+
+
+def _quant_kernel(max_code: int, x_ref, noise_ref, codes_ref, zero_ref, scale_ref):
+    x = x_ref[...]  # [GROUP_ROWS, f]
+    mn = jnp.min(x)
+    mx = jnp.max(x)
+    scale = (mx - mn) / max_code
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    t = (x - mn) * inv + noise_ref[...]
+    codes_ref[...] = jnp.clip(jnp.floor(t), 0, max_code).astype(jnp.int32)
+    zero_ref[...] = jnp.full((1,), mn, dtype=x.dtype)
+    scale_ref[...] = jnp.full((1,), scale, dtype=x.dtype)
+
+
+def quantize(x, noise, bits: int):
+    """x, noise: [rows, f] with rows % 4 == 0. Returns (codes i32, zero
+    [rows//4], scale [rows//4])."""
+    rows, f = x.shape
+    assert rows % GROUP_ROWS == 0
+    ng = rows // GROUP_ROWS
+    max_code = (1 << bits) - 1
+    kernel = functools.partial(_quant_kernel, max_code)
+    return pl.pallas_call(
+        kernel,
+        grid=(ng,),
+        in_specs=[
+            pl.BlockSpec((GROUP_ROWS, f), lambda i: (i, 0)),
+            pl.BlockSpec((GROUP_ROWS, f), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((GROUP_ROWS, f), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, f), jnp.int32),
+            jax.ShapeDtypeStruct((ng,), x.dtype),
+            jax.ShapeDtypeStruct((ng,), x.dtype),
+        ],
+        interpret=True,
+    )(x, noise)
+
+
+def _dequant_kernel(codes_ref, zero_ref, scale_ref, y_ref):
+    y_ref[...] = codes_ref[...].astype(jnp.float32) * scale_ref[0] + zero_ref[0]
+
+
+def dequantize(codes, zero, scale):
+    """codes: [rows, f] int32; zero/scale: [rows//4]. Returns f32 [rows,f]."""
+    rows, f = codes.shape
+    ng = rows // GROUP_ROWS
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(ng,),
+        in_specs=[
+            pl.BlockSpec((GROUP_ROWS, f), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((GROUP_ROWS, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, f), jnp.float32),
+        interpret=True,
+    )(codes, zero, scale)

@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for every Pallas kernel (correctness references).
+
+The pytest suite asserts the Pallas kernels (interpret=True) match these
+references across shapes, dtypes and edge distributions (Hypothesis), and
+the AOT'd L2 model is built on the kernels, so agreement here is what makes
+the Rust-side artifacts trustworthy.
+"""
+
+import jax.numpy as jnp
+
+
+def segment_sum_ref(h, gather, seg, n_seg):
+    """out[seg[i]] += h[gather[i]] — the aggregation operator of paper §4.
+
+    h: [n, f]; gather, seg: [e] int32; returns [n_seg, f].
+    """
+    rows = h[gather]
+    out = jnp.zeros((n_seg, h.shape[1]), dtype=h.dtype)
+    return out.at[seg].add(rows)
+
+
+def layernorm_ref(x, eps=1e-5):
+    """Row-wise LayerNorm without affine params (paper §6.1(2): outlier
+    removal before quantization)."""
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mean) / jnp.sqrt(var + eps)
+
+
+def quantize_ref(x, noise, bits):
+    """Stochastic integer quantization (paper §2.4) over 4-row groups.
+
+    x: [rows, cols] with rows % 4 == 0; noise: same shape, U[0,1).
+    Returns (codes int32 [rows, cols], zero [rows//4], scale [rows//4]).
+    """
+    rows, cols = x.shape
+    assert rows % 4 == 0
+    g = x.reshape(rows // 4, 4 * cols)
+    mn = jnp.min(g, axis=1)
+    mx = jnp.max(g, axis=1)
+    max_code = (1 << bits) - 1
+    scale = (mx - mn) / max_code
+    inv = jnp.where(scale > 0, 1.0 / jnp.where(scale > 0, scale, 1.0), 0.0)
+    t = (g - mn[:, None]) * inv[:, None] + noise.reshape(rows // 4, 4 * cols)
+    codes = jnp.clip(jnp.floor(t), 0, max_code).astype(jnp.int32)
+    return codes.reshape(rows, cols), mn, scale
+
+
+def dequantize_ref(codes, zero, scale):
+    """codes: [rows, cols] int32 grouped by 4 rows; zero/scale: [rows//4]."""
+    rows, cols = codes.shape
+    g = codes.reshape(rows // 4, 4 * cols).astype(jnp.float32)
+    out = g * scale[:, None] + zero[:, None]
+    return out.reshape(rows, cols)

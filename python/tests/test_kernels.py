@@ -1,0 +1,180 @@
+"""L1 Pallas kernels vs pure-jnp oracles (ref.py), swept with Hypothesis."""
+
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels import ref
+from compile.kernels.aggregate import EB, plan_segments, segment_sum
+from compile.kernels.layernorm import layernorm
+from compile.kernels.quant import dequantize, quantize
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def run_segment_sum(h, gather, seg, n_seg):
+    """Pad to the edge block and invoke the Pallas path."""
+    e = len(gather)
+    e_pad = ((e + EB - 1) // EB) * EB if e else EB
+    n = h.shape[0]
+    # zero row for padded gathers, trash segment for padded segs
+    h_z = np.vstack([h, np.zeros((1, h.shape[1]), h.dtype)])
+    g = np.concatenate([gather, np.full(e_pad - e, n, np.int32)]).astype(np.int32)
+    s = np.concatenate([seg, np.full(e_pad - e, n_seg, np.int32)]).astype(np.int32)
+    order = np.argsort(s, kind="stable")
+    g, s = g[order], s[order]
+    seg_rel, block_seg = plan_segments(s, EB)
+    out = segment_sum(jnp.asarray(h_z), jnp.asarray(g), jnp.asarray(seg_rel),
+                      jnp.asarray(block_seg), n_seg + 1)
+    return np.asarray(out)[:n_seg]
+
+
+@st.composite
+def segsum_problem(draw):
+    n = draw(st.integers(1, 60))
+    f = draw(st.sampled_from([1, 3, 8, 16, 32]))
+    n_seg = draw(st.integers(1, 40))
+    e = draw(st.integers(0, 300))
+    h = draw(
+        hnp.arrays(np.float32, (n, f),
+                   elements=st.floats(-8, 8, width=32)))
+    gather = draw(hnp.arrays(np.int32, (e,), elements=st.integers(0, n - 1)))
+    seg = draw(hnp.arrays(np.int32, (e,), elements=st.integers(0, n_seg - 1)))
+    return h, gather, np.sort(seg), n_seg
+
+
+@given(segsum_problem())
+def test_segment_sum_matches_ref(problem):
+    h, gather, seg, n_seg = problem
+    got = run_segment_sum(h, gather, seg, n_seg)
+    want = np.asarray(ref.segment_sum_ref(jnp.asarray(h), jnp.asarray(gather),
+                                          jnp.asarray(seg), n_seg))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_segment_sum_known_values():
+    h = np.array([[1.0, 10.0], [2.0, 20.0], [3.0, 30.0]], np.float32)
+    gather = np.array([0, 2, 1], np.int32)
+    seg = np.array([0, 0, 1], np.int32)
+    out = run_segment_sum(h, gather, seg, 3)
+    np.testing.assert_allclose(out, [[4, 40], [2, 20], [0, 0]])
+
+
+def test_segment_sum_multi_block():
+    # > EB edges so several blocks + segments spanning block boundaries.
+    rng = np.random.default_rng(0)
+    n, f, n_seg, e = 50, 16, 7, 5 * EB
+    h = rng.normal(size=(n, f)).astype(np.float32)
+    gather = rng.integers(0, n, e).astype(np.int32)
+    seg = np.sort(rng.integers(0, n_seg, e).astype(np.int32))
+    got = run_segment_sum(h, gather, seg, n_seg)
+    want = np.asarray(ref.segment_sum_ref(jnp.asarray(h), jnp.asarray(gather),
+                                          jnp.asarray(seg), n_seg))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_segment_sum_gradient():
+    """custom_vjp (Pallas bwd kernel) vs autodiff of the reference."""
+    rng = np.random.default_rng(1)
+    n, f, n_seg, e = 20, 8, 6, EB
+    h = rng.normal(size=(n + 1, f)).astype(np.float32)  # +zero row
+    h[n] = 0
+    gather = rng.integers(0, n, e).astype(np.int32)
+    seg = np.sort(rng.integers(0, n_seg, e).astype(np.int32))
+    seg_rel, block_seg = plan_segments(seg, EB)
+
+    def f_pallas(hh):
+        out = segment_sum(hh, jnp.asarray(gather), jnp.asarray(seg_rel),
+                          jnp.asarray(block_seg), n_seg)
+        return jnp.sum(out ** 2)
+
+    def f_ref(hh):
+        out = ref.segment_sum_ref(hh, jnp.asarray(gather), jnp.asarray(seg), n_seg)
+        return jnp.sum(out ** 2)
+
+    g1 = jax.grad(f_pallas)(jnp.asarray(h))
+    g2 = jax.grad(f_ref)(jnp.asarray(h))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+@given(
+    st.integers(1, 3),
+    st.sampled_from([2, 5, 16, 64]),
+    st.integers(0, 10_000),
+)
+def test_layernorm_matches_ref(blocks, f, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(scale=4.0, size=(blocks * 128, f)).astype(np.float32)
+    got = np.asarray(layernorm(jnp.asarray(x)))
+    want = np.asarray(ref.layernorm_ref(jnp.asarray(x)))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_gradient():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(128, 12)).astype(np.float32))
+    t = jnp.asarray(rng.normal(size=(128, 12)).astype(np.float32))
+    g1 = jax.grad(lambda v: jnp.sum(layernorm(v) * t))(x)
+    g2 = jax.grad(lambda v: jnp.sum(ref.layernorm_ref(v) * t))(x)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-3, atol=1e-4)
+
+
+def test_layernorm_removes_outliers():
+    x = np.ones((128, 32), np.float32)
+    x[0, 0] = 1e4  # huge outlier
+    y = np.asarray(layernorm(jnp.asarray(x)))
+    assert np.abs(y).max() < 10.0
+
+
+# ---------------------------------------------------------------------------
+# Quantization
+# ---------------------------------------------------------------------------
+
+@given(
+    st.integers(1, 6),
+    st.sampled_from([4, 16, 33]),
+    st.sampled_from([2, 4, 8]),
+    st.integers(0, 10_000),
+)
+def test_quant_matches_ref(groups, f, bits, seed):
+    rng = np.random.default_rng(seed)
+    rows = groups * 4
+    x = rng.normal(scale=3.0, size=(rows, f)).astype(np.float32)
+    noise = rng.random(size=(rows, f)).astype(np.float32)
+    c1, z1, s1 = quantize(jnp.asarray(x), jnp.asarray(noise), bits)
+    c2, z2, s2 = ref.quantize_ref(jnp.asarray(x), jnp.asarray(noise), bits)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+    np.testing.assert_allclose(np.asarray(z1), np.asarray(z2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    # Round trip error ≤ scale.
+    y = np.asarray(dequantize(c1, z1, s1))
+    bound = np.repeat(np.asarray(s1), 4)[:, None] + 1e-6
+    assert (np.abs(y - x) <= bound).all()
+
+
+def test_dequantize_matches_ref():
+    rng = np.random.default_rng(9)
+    codes = jnp.asarray(rng.integers(0, 4, size=(8, 10)).astype(np.int32))
+    zero = jnp.asarray(rng.normal(size=2).astype(np.float32))
+    scale = jnp.asarray(rng.random(2).astype(np.float32))
+    got = np.asarray(dequantize(codes, zero, scale))
+    want = np.asarray(ref.dequantize_ref(codes, zero, scale))
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_quant_constant_rows_zero_scale():
+    x = jnp.full((4, 8), 2.5, jnp.float32)
+    noise = jnp.zeros((4, 8), jnp.float32)
+    codes, zero, scale = quantize(x, noise, 2)
+    assert np.asarray(scale)[0] == 0.0
+    y = np.asarray(dequantize(codes, zero, scale))
+    np.testing.assert_allclose(y, 2.5)

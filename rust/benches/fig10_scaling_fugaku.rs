@@ -1,0 +1,115 @@
+//! Fig. 10: performance and scaling on the Fugaku profile (A64FX +
+//! Tofu-D), SuperGCN w/o vs w/ the communication optimizations.
+//!
+//! Small/medium P points are *executed* (simulated workers, measured
+//! compute + modeled wire). Large-P points run the full preprocessing
+//! (partition → MVC plans → exact per-pair volumes) and combine modeled
+//! comm with compute scaled from the largest executed run — the honest
+//! extension of the simulator to thousands-of-ranks territory.
+//!
+//! Expected shape (paper): comm-opt speedup is largest at medium scale
+//! (throughput-bound), shrinking at large scale (latency-bound) but never
+//! negative; w/ comm-opt always ≥ w/o.
+
+use supergcn::coordinator::planner::prepare;
+use supergcn::coordinator::trainer::TrainConfig;
+use supergcn::datasets;
+use supergcn::exp::{steady_epoch_secs, train_native, Table};
+use supergcn::hier::remote_pairs;
+use supergcn::hier::volume::{volume, RemoteStrategy};
+use supergcn::partition::{multilevel, vertex_weights};
+use supergcn::perfmodel::{t_comm, t_quant_comm_total, MachineProfile};
+use supergcn::quant::Bits;
+
+fn main() {
+    let machine = MachineProfile::fugaku();
+    let epochs = 5;
+    for name in ["papers100m-s", "uk2007-s"] {
+        let spec = datasets::by_name(name).unwrap();
+        let lg = spec.build();
+        let f = spec.feat_dim;
+        let mut t = Table::new(
+            &format!("Fig 10: {} on Fugaku profile (modeled epoch seconds)", name),
+            &["procs", "w/o comm opt", "w/ comm opt", "speedup", "mode"],
+        );
+
+        // Executed points.
+        let mut compute_ref: Option<(usize, f64)> = None; // (P, epoch compute secs)
+        for k in [4usize, 16, 64] {
+            let base = TrainConfig {
+                strategy: RemoteStrategy::PostOnly,
+                quant: None,
+                machine: machine.clone(),
+                ..Default::default()
+            };
+            let opt = TrainConfig {
+                strategy: RemoteStrategy::Hybrid,
+                quant: Some(Bits::Int2),
+                label_prop: true,
+                machine: machine.clone(),
+                ..Default::default()
+            };
+            let (s0, _) = train_native(&spec, k, base, Some(epochs)).unwrap();
+            let (s1, _) = train_native(&spec, k, opt, Some(epochs)).unwrap();
+            let t0 = steady_epoch_secs(&s0, epochs);
+            let t1 = steady_epoch_secs(&s1, epochs);
+            t.row(vec![
+                k.to_string(),
+                format!("{t0:.4}"),
+                format!("{t1:.4}"),
+                format!("{:.2}x", t0 / t1),
+                "executed".into(),
+            ]);
+            // Compute share of the epoch (subtract modeled comm).
+            let comm1: f64 = s1.iter().map(|s| s.breakdown.get(supergcn::util::timer::Category::Comm)).sum::<f64>() / s1.len() as f64;
+            compute_ref = Some((k, (t1 - comm1).max(1e-6)));
+        }
+
+        // Volume-modeled large-P points: full preprocessing, modeled wire,
+        // compute ∝ 1/P from the P=64 measurement.
+        let (k_ref, comp_ref) = compute_ref.unwrap();
+        let w = vertex_weights(&lg.graph, None, 4);
+        for k in [256usize, 1024, 2048] {
+            if lg.n() / k < 16 {
+                break;
+            }
+            let part = multilevel::multilevel(
+                &lg.graph,
+                k,
+                &w,
+                &multilevel::MultilevelOpts::default(),
+            );
+            let pairs = remote_pairs(&lg.graph, &part);
+            // 3 layers, forward halo each + equal-volume reverse (FP32).
+            let post = volume(k, &pairs, RemoteStrategy::PostOnly);
+            let hyb = volume(k, &pairs, RemoteStrategy::Hybrid);
+            let vals = |v: &supergcn::hier::volume::VolumeReport| -> Vec<Vec<usize>> {
+                v.rows.iter().map(|r| r.iter().map(|&x| x * f).collect()).collect()
+            };
+            let params: Vec<Vec<usize>> = hyb
+                .rows
+                .iter()
+                .map(|r| r.iter().map(|&x| x.div_ceil(4) * 2).collect())
+                .collect();
+            let sub = vec![(lg.n() / k * f) as f64; k];
+            let comm0 = 6.0 * t_comm(&vals(&post), &machine);
+            let comm1 = 3.0 * t_quant_comm_total(&vals(&hyb), &params, &sub, 2.0, &machine)
+                + 3.0 * t_comm(&vals(&hyb), &machine);
+            let comp = comp_ref * k_ref as f64 / k as f64;
+            let t0 = comp + comm0;
+            let t1 = comp + comm1;
+            t.row(vec![
+                k.to_string(),
+                format!("{t0:.4}"),
+                format!("{t1:.4}"),
+                format!("{:.2}x", t0 / t1),
+                "volume-modeled".into(),
+            ]);
+        }
+        t.print();
+    }
+    println!(
+        "\n(executed = simulated workers with measured compute; volume-modeled = \
+         exact MVC plans + Eqn 2/5 wire model + 1/P-scaled compute)"
+    );
+}

@@ -1,0 +1,75 @@
+//! Fig. 11: test-accuracy-vs-epoch curves for the five training settings —
+//! DistGNN (cd-5), SuperGCN FP32/Int2 × w/o-LP/w-LP.
+//!
+//! Expected shape (paper): Int2 ≈ FP32 on easy datasets; on harder ones
+//! Int2 w/o LP converges lower; enabling masked label propagation closes
+//! the gap (and speeds convergence); DistGNN's staleness converges lower /
+//! noisier.
+
+use supergcn::coordinator::trainer::TrainConfig;
+use supergcn::datasets;
+use supergcn::exp::{best_test_acc, train_native, Table};
+use supergcn::hier::volume::RemoteStrategy;
+use supergcn::quant::Bits;
+
+fn settings() -> Vec<(&'static str, TrainConfig)> {
+    vec![
+        (
+            "DistGNN(cd-5)",
+            TrainConfig {
+                strategy: RemoteStrategy::PreOnly,
+                delay_comm: 5,
+                ..Default::default()
+            },
+        ),
+        ("FP32 w/o LP", TrainConfig::default()),
+        (
+            "Int2 w/o LP",
+            TrainConfig {
+                quant: Some(Bits::Int2),
+                ..Default::default()
+            },
+        ),
+        (
+            "FP32 w/ LP",
+            TrainConfig {
+                label_prop: true,
+                ..Default::default()
+            },
+        ),
+        (
+            "Int2 w/ LP",
+            TrainConfig {
+                quant: Some(Bits::Int2),
+                label_prop: true,
+                ..Default::default()
+            },
+        ),
+    ]
+}
+
+fn main() {
+    for (name, epochs, k) in [("arxiv-s", 64usize, 4usize), ("products-s", 32, 4)] {
+        let spec = datasets::by_name(name).unwrap();
+        let every = epochs / 8;
+        let mut headers: Vec<String> = vec!["setting".into()];
+        headers.extend((0..8).map(|i| format!("ep{}", (i + 1) * every)));
+        headers.push("best".into());
+        let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(
+            &format!("Fig 11: test accuracy vs epoch — {} ({k} procs)", name),
+            &hdr_refs,
+        );
+        for (label, tc) in settings() {
+            let (stats, _) = train_native(&spec, k, tc, Some(epochs)).unwrap();
+            let mut row = vec![label.to_string()];
+            for i in 0..8 {
+                let e = ((i + 1) * every - 1).min(stats.len() - 1);
+                row.push(format!("{:.3}", stats[e].test_acc));
+            }
+            row.push(format!("{:.3}", best_test_acc(&stats)));
+            t.row(row);
+        }
+        t.print();
+    }
+}

@@ -1,0 +1,76 @@
+//! Fig. 12: training-time breakdown (Aggr / Comm / Quant / Sync / Other),
+//! Base vs Opt, at small and large worker counts.
+//!
+//! Base = vanilla scatter operators + post-only remote graphs + FP32
+//! (the PyG-style implementation). Opt = SuperGCN (sorted/blocked ops +
+//! MVC hybrid + Int2 + LP).
+//!
+//! Expected shape (paper): small scale is aggregation-bound and the §4
+//! operators shrink that slice; large scale is communication-bound and
+//! the §5/§6 optimizations shrink that slice.
+
+use supergcn::backend::native::NativeBackend;
+use supergcn::coordinator::planner::prepare;
+use supergcn::coordinator::trainer::{TrainConfig, Trainer};
+use supergcn::datasets;
+use supergcn::exp::Table;
+use supergcn::hier::volume::RemoteStrategy;
+use supergcn::perfmodel::MachineProfile;
+use supergcn::quant::Bits;
+use supergcn::util::timer::{Breakdown, ALL_CATEGORIES};
+
+fn run(spec_name: &str, k: usize, opt: bool, epochs: usize) -> Breakdown {
+    let spec = datasets::by_name(spec_name).unwrap();
+    let lg = spec.build();
+    let tc = if opt {
+        TrainConfig {
+            strategy: RemoteStrategy::Hybrid,
+            quant: Some(Bits::Int2),
+            label_prop: true,
+            machine: MachineProfile::abci(),
+            epochs,
+            lr: spec.lr,
+            ..Default::default()
+        }
+    } else {
+        TrainConfig {
+            strategy: RemoteStrategy::PostOnly,
+            quant: None,
+            machine: MachineProfile::abci(),
+            epochs,
+            lr: spec.lr,
+            ..Default::default()
+        }
+    };
+    let (ctxs, cfg, _) = prepare(&lg, k, tc.strategy, None, tc.seed).unwrap();
+    let backend = Box::new(NativeBackend::new(cfg).with_vanilla_agg(!opt));
+    let mut tr = Trainer::new(ctxs, backend, tc);
+    let stats = tr.run(false).unwrap();
+    let mut total = Breakdown::new();
+    for s in stats.iter().skip(1) {
+        total.merge(&s.breakdown);
+    }
+    total.scale(1.0 / (stats.len() - 1) as f64);
+    total
+}
+
+fn main() {
+    let mut t = Table::new(
+        "Fig 12: per-epoch time breakdown (seconds; Base = vanilla ops + post-only FP32)",
+        &["dataset", "procs", "variant", "aggr", "comm", "quant", "sync", "other", "total"],
+    );
+    for (name, small, large) in [("products-s", 4usize, 16usize), ("reddit-s", 4, 16)] {
+        for k in [small, large] {
+            for (variant, opt) in [("Base", false), ("Opt", true)] {
+                let b = run(name, k, opt, 4);
+                let mut row = vec![name.to_string(), k.to_string(), variant.into()];
+                for c in ALL_CATEGORIES {
+                    row.push(format!("{:.4}", b.get(c)));
+                }
+                row.push(format!("{:.4}", b.total()));
+                t.row(row);
+            }
+        }
+    }
+    t.print();
+}

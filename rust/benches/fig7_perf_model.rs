@@ -1,0 +1,44 @@
+//! Fig. 7: analytic speedup of quantized communication (Eqn 7/8) across
+//! process counts and bit widths, on both machine profiles.
+//!
+//! Expected shape (paper): ≈γ speedup while throughput-bound (Int2 → 16×
+//! asymptotically, reduced by the quant/dequant overhead term), decaying
+//! to 1× as δ → ∞ (latency-bound), never below 1×.
+
+use supergcn::exp::Table;
+use supergcn::perfmodel::{crossover_procs, fig7_sweep, MachineProfile};
+
+fn main() {
+    for machine in [MachineProfile::abci(), MachineProfile::fugaku()] {
+        let procs: Vec<usize> = (1..=13).map(|i| 1usize << i).collect();
+        let mut t = Table::new(
+            &format!("Fig 7 on {} (β = {:.0})", machine.name, machine.beta()),
+            &["procs", "int2", "int4", "int8", "δ(int2)", "regime"],
+        );
+        let sweeps: Vec<_> = [2.0, 4.0, 8.0]
+            .iter()
+            .map(|&b| fig7_sweep(1e8, 1.0 / 256.0, b, &procs, &machine))
+            .collect();
+        for (i, &p) in procs.iter().enumerate() {
+            t.row(vec![
+                p.to_string(),
+                format!("{:.2}x", sweeps[0][i].speedup),
+                format!("{:.2}x", sweeps[1][i].speedup),
+                format!("{:.2}x", sweeps[2][i].speedup),
+                format!("{:.3}", sweeps[0][i].delta),
+                sweeps[0][i].regime.into(),
+            ]);
+        }
+        t.print();
+        if let Some(px) = crossover_procs(&sweeps[0]) {
+            println!("int2 latency-bound crossover: P' = {px}");
+        }
+        // Sanity assertions on the paper-claimed shape.
+        assert!(sweeps[0][0].speedup > 8.0, "medium-scale int2 should approach γ");
+        assert!(sweeps[0].last().unwrap().speedup < 2.0, "large scale decays to ~1");
+        assert!(
+            sweeps[0].iter().all(|p| p.speedup >= 1.0 - 1e-9),
+            "quantization must never hurt"
+        );
+    }
+}

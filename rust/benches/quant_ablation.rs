@@ -1,0 +1,88 @@
+//! §7.3 quantization kernel ablation: the naive two-pass / divide /
+//! sequential-RNG kernel vs the fused / reciprocal / counter-noise kernel,
+//! plus dequantization throughput, across message sizes.
+//!
+//! Expected shape (paper): fusion + reciprocal + RNG elimination give a
+//! solid single-core speedup that grows with message size (cache reuse).
+
+use std::time::Instant;
+use supergcn::exp::Table;
+use supergcn::quant::{fused, naive, Bits};
+use supergcn::util::rng::Rng;
+
+fn bench_gbs(bytes: usize, reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    bytes as f64 / best / 1e9
+}
+
+fn main() {
+    let mut t = Table::new(
+        "§7.3 ablation: quantization kernel throughput (GB/s of fp32 input, int2)",
+        &["rows×cols", "naive quant", "fused quant", "speedup", "dequant"],
+    );
+    let mut rng = Rng::new(1);
+    for (rows, cols) in [(64usize, 128usize), (1024, 128), (8192, 128), (8192, 512)] {
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        let bytes = x.len() * 4;
+        let g_naive = bench_gbs(5, 5, || {
+            std::hint::black_box(naive::quantize(&x, rows, cols, Bits::Int2, 7));
+        });
+        let mut params = Vec::new();
+        let mut data = Vec::new();
+        let g_fused = bench_gbs(bytes, 5, || {
+            fused::quantize_into(&x, rows, cols, Bits::Int2, 7, &mut params, &mut data);
+            std::hint::black_box(&data);
+        });
+        // naive throughput recomputed over bytes (bench_gbs misuse guard)
+        let g_naive = {
+            let t0 = Instant::now();
+            for _ in 0..5 {
+                std::hint::black_box(naive::quantize(&x, rows, cols, Bits::Int2, 7));
+            }
+            let _ = g_naive;
+            bytes as f64 * 5.0 / t0.elapsed().as_secs_f64() / 1e9
+        };
+        let q = fused::quantize(&x, rows, cols, Bits::Int2, 7);
+        let mut out = vec![0f32; rows * cols];
+        let g_dq = bench_gbs(bytes, 5, || {
+            fused::dequantize_into(&q, &mut out);
+            std::hint::black_box(&out);
+        });
+        t.row(vec![
+            format!("{rows}x{cols}"),
+            format!("{g_naive:.2}"),
+            format!("{g_fused:.2}"),
+            format!("{:.2}x", g_fused / g_naive),
+            format!("{g_dq:.2}"),
+        ]);
+    }
+    t.print();
+
+    // Bit-width sweep at a fixed size (γ trade-off table).
+    let (rows, cols) = (4096usize, 128usize);
+    let x: Vec<f32> = (0..rows * cols).map(|_| rng.f32()).collect();
+    let mut t2 = Table::new(
+        "quantize throughput by bit width (fused kernel)",
+        &["bits", "GB/s", "wire reduction"],
+    );
+    for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+        let mut params = Vec::new();
+        let mut data = Vec::new();
+        let g = bench_gbs(rows * cols * 4, 5, || {
+            fused::quantize_into(&x, rows, cols, bits, 3, &mut params, &mut data);
+            std::hint::black_box(&data);
+        });
+        t2.row(vec![
+            bits.name().into(),
+            format!("{g:.2}"),
+            format!("{}x", 32 / bits.bits()),
+        ]);
+    }
+    t2.print();
+}

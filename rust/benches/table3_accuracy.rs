@@ -1,0 +1,73 @@
+//! Table 3: final test accuracy across process counts × training settings.
+//!
+//! Expected shape (paper): SuperGCN accuracy is stable across process
+//! counts (full-batch semantics are partition-invariant); Int2 w/o LP can
+//! drop on hard datasets; LP restores it; DistGNN (cd-5 staleness) lands
+//! lower.
+
+use supergcn::coordinator::trainer::TrainConfig;
+use supergcn::datasets;
+use supergcn::exp::{best_test_acc, train_native, Table};
+use supergcn::hier::volume::RemoteStrategy;
+use supergcn::quant::Bits;
+
+fn main() {
+    let settings: Vec<(&str, TrainConfig)> = vec![
+        (
+            "DistGNN(cd-5)",
+            TrainConfig {
+                strategy: RemoteStrategy::PreOnly,
+                delay_comm: 5,
+                ..Default::default()
+            },
+        ),
+        ("SuperGCN FP32 w/o LP", TrainConfig::default()),
+        (
+            "SuperGCN Int2 w/o LP",
+            TrainConfig {
+                quant: Some(Bits::Int2),
+                ..Default::default()
+            },
+        ),
+        (
+            "SuperGCN FP32 w/ LP",
+            TrainConfig {
+                label_prop: true,
+                ..Default::default()
+            },
+        ),
+        (
+            "SuperGCN Int2 w/ LP",
+            TrainConfig {
+                quant: Some(Bits::Int2),
+                label_prop: true,
+                ..Default::default()
+            },
+        ),
+    ];
+
+    let procs = [2usize, 4, 8];
+    let spec = datasets::by_name("arxiv-s").unwrap();
+    let mut headers = vec!["method".to_string()];
+    headers.extend(procs.iter().map(|k| format!("{k} procs")));
+    let hdr: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Table 3: arxiv-s best test accuracy (%)", &hdr);
+    for (label, tc) in &settings {
+        let mut row = vec![label.to_string()];
+        for &k in &procs {
+            let (stats, _) = train_native(&spec, k, tc.clone(), Some(50)).unwrap();
+            row.push(format!("{:.2}", best_test_acc(&stats) * 100.0));
+        }
+        t.row(row);
+    }
+    t.print();
+
+    // Second dataset at a single scale (keeps the bench under budget).
+    let spec2 = datasets::by_name("products-s").unwrap();
+    let mut t2 = Table::new("Table 3 (cont.): products-s best test accuracy (%), 4 procs", &["method", "acc"]);
+    for (label, tc) in &settings {
+        let (stats, _) = train_native(&spec2, 4, tc.clone(), Some(30)).unwrap();
+        t2.row(vec![label.to_string(), format!("{:.2}", best_test_acc(&stats) * 100.0)]);
+    }
+    t2.print();
+}

@@ -1,0 +1,70 @@
+//! Table 4: absolute epoch time + accuracy versus the published GPU
+//! baselines (their numbers transcribed from the paper; ours measured on
+//! the simulator at the best configuration).
+//!
+//! Absolute comparability note: the paper's point is *shape* — a CPU
+//! system with strong scaling reaches epoch times competitive with
+//! maxed-out GPU baselines. Our datasets are ~10³ scaled replicas, so we
+//! report our measured epoch time alongside the paper's own SuperGCN
+//! numbers and the GPU rows verbatim for context.
+
+use supergcn::coordinator::trainer::TrainConfig;
+use supergcn::datasets;
+use supergcn::exp::{best_test_acc, steady_epoch_secs, train_native, Table};
+use supergcn::hier::volume::RemoteStrategy;
+use supergcn::perfmodel::MachineProfile;
+use supergcn::quant::Bits;
+
+fn main() {
+    // Paper Table 4 rows (products, reddit): (method, platform, time s, acc %).
+    let published: Vec<(&str, &str, &str, &str, &str, &str)> = vec![
+        ("DGL",      "GPU", "0.99", "79.19", "7.28", "97.10"),
+        ("PipeGCN",  "GPU", "0.43", "78.77", "0.43", "97.10"),
+        ("BNS-GCN",  "GPU", "0.28", "79.30", "0.19", "97.15"),
+        ("AdaptQ",   "GPU", "0.47", "78.90", "0.38", "96.53"),
+        ("SYLVIE",   "GPU", "0.23", "78.85", "0.50", "96.87"),
+        ("SuperGCN (paper)", "CPU", "0.07", "80.24", "0.13", "96.55"),
+    ];
+    let mut t = Table::new(
+        "Table 4: published baselines (verbatim from the paper)",
+        &["method", "platform", "products t(s)", "products acc", "reddit t(s)", "reddit acc"],
+    );
+    for (m, p, t1, a1, t2, a2) in published {
+        t.row(vec![m.into(), p.into(), t1.into(), a1.into(), t2.into(), a2.into()]);
+    }
+    t.print();
+
+    // Our measured rows on the scaled analogues (best config = hybrid +
+    // Int2 + LP on the ABCI profile, P swept for the best epoch time).
+    let mut t2 = Table::new(
+        "Table 4 (ours): scaled analogues on the simulator (native engine)",
+        &["dataset", "best procs", "epoch time (s, modeled)", "best test acc (%)"],
+    );
+    for name in ["products-s", "reddit-s"] {
+        let spec = datasets::by_name(name).unwrap();
+        let mut best: Option<(usize, f64, f32)> = None;
+        for k in [4usize, 8, 16] {
+            let tc = TrainConfig {
+                strategy: RemoteStrategy::Hybrid,
+                quant: Some(Bits::Int2),
+                label_prop: true,
+                machine: MachineProfile::abci(),
+                ..Default::default()
+            };
+            let (stats, _) = train_native(&spec, k, tc, Some(30)).unwrap();
+            let et = steady_epoch_secs(&stats, 10);
+            let acc = best_test_acc(&stats);
+            if best.map(|(_, t, _)| et < t).unwrap_or(true) {
+                best = Some((k, et, acc));
+            }
+        }
+        let (k, et, acc) = best.unwrap();
+        t2.row(vec![
+            name.into(),
+            k.to_string(),
+            format!("{et:.4}"),
+            format!("{:.2}", acc * 100.0),
+        ]);
+    }
+    t2.print();
+}

@@ -1,0 +1,76 @@
+//! Table 5: communication volume and modeled time for one GCN layer under
+//! pre / post / hybrid / hybrid+Int2 (data and params rows), mag240M-like
+//! workload on the Fugaku profile.
+//!
+//! Expected shape (paper): hybrid ≈ 1.5× less volume/time than pre or
+//! post alone; +Int2 ≈ 15× further on the data row with a small params
+//! row (α ≫ 1).
+
+use supergcn::datasets;
+use supergcn::exp::Table;
+use supergcn::hier::remote_pairs;
+use supergcn::hier::volume::{volume, RemoteStrategy};
+use supergcn::partition::{multilevel, vertex_weights};
+use supergcn::perfmodel::{t_comm, t_quant_comm_total, MachineProfile};
+use supergcn::util::fmt_bytes;
+
+fn main() {
+    let machine = MachineProfile::fugaku();
+    for (name, k) in [("mag240m-s", 16usize), ("uk2007-s", 16)] {
+        let spec = datasets::by_name(name).unwrap();
+        let lg = spec.build();
+        let f = spec.feat_dim;
+        let w = vertex_weights(&lg.graph, None, 4);
+        let part = multilevel::multilevel(&lg.graph, k, &w, &multilevel::MultilevelOpts::default());
+        let pairs = remote_pairs(&lg.graph, &part);
+
+        let mut t = Table::new(
+            &format!("Table 5: {} on {k} procs, feat {f}, 1 GCN layer", name),
+            &["method", "comm volume", "modeled comm time (ms)"],
+        );
+        let mut vols = Vec::new();
+        for s in [RemoteStrategy::PreOnly, RemoteStrategy::PostOnly, RemoteStrategy::Hybrid] {
+            let v = volume(k, &pairs, s);
+            let values: Vec<Vec<usize>> =
+                v.rows.iter().map(|r| r.iter().map(|&x| x * f).collect()).collect();
+            let secs = t_comm(&values, &machine);
+            vols.push((s, v.payload_bytes(f, 32), secs));
+            t.row(vec![
+                format!("SuperGCN ({})", s.name()),
+                fmt_bytes(v.payload_bytes(f, 32)),
+                format!("{:.3}", secs * 1e3),
+            ]);
+        }
+        let v = volume(k, &pairs, RemoteStrategy::Hybrid);
+        let values: Vec<Vec<usize>> =
+            v.rows.iter().map(|r| r.iter().map(|&x| x * f).collect()).collect();
+        let params: Vec<Vec<usize>> = v
+            .rows
+            .iter()
+            .map(|r| r.iter().map(|&x| x.div_ceil(4) * 2).collect())
+            .collect();
+        let sub = vec![(lg.n() / k * f) as f64; k];
+        let tq = t_quant_comm_total(&values, &params, &sub, 2.0, &machine);
+        t.row(vec![
+            "SuperGCN (pre_post+Int2)  data".into(),
+            fmt_bytes(v.payload_bytes(f, 2)),
+            format!("{:.3} (incl quant/dequant)", tq * 1e3),
+        ]);
+        t.row(vec![
+            "SuperGCN (pre_post+Int2) params".into(),
+            fmt_bytes(v.param_bytes(4)),
+            "-".into(),
+        ]);
+        t.print();
+
+        // Shape assertions (paper's claims).
+        let hybrid = vols[2];
+        let best_single = vols[0].1.min(vols[1].1);
+        println!(
+            "hybrid saves {:.2}x volume vs best(pre, post); Int2 shrinks the data row {:.1}x",
+            best_single / hybrid.1,
+            hybrid.1 / v.payload_bytes(f, 2),
+        );
+        assert!(hybrid.1 <= best_single);
+    }
+}

@@ -1,0 +1,176 @@
+//! 2D dynamic parallelism with FLOPS-based load balancing (Fig. 3(d)).
+//!
+//! Work is tiled over (destination-block × feature-block). Destination
+//! blocks are cut at segment-run boundaries so every tile writes a
+//! disjoint slice of `out` (no atomics), and block boundaries are chosen
+//! by **cumulative edge count** — the FLOPS proxy — rather than by node
+//! count, which is what keeps power-law graphs balanced. Tiles are pulled
+//! dynamically from the shared counter in `util::pool`.
+
+use super::blocked;
+use crate::util::pool;
+
+/// Choose destination-block boundaries so each block has ≈ equal
+/// contributions (edges). Returns segment indices `cuts[0]=0 < … =n_seg`.
+pub fn flops_balanced_cuts(offsets: &[usize], n_blocks: usize) -> Vec<usize> {
+    let n_seg = offsets.len() - 1;
+    let total = offsets[n_seg];
+    let n_blocks = n_blocks.max(1);
+    let mut cuts = Vec::with_capacity(n_blocks + 1);
+    cuts.push(0usize);
+    for b in 1..n_blocks {
+        let target = total * b / n_blocks;
+        // First segment boundary whose cumulative edge count exceeds the
+        // target; pick whichever neighbor boundary is closer to the target.
+        let hi = offsets.partition_point(|&o| o <= target).min(n_seg);
+        let lo = hi.saturating_sub(1);
+        let s = if target - offsets[lo] <= offsets[hi] - target { lo } else { hi };
+        cuts.push(s.max(*cuts.last().unwrap()).min(n_seg));
+    }
+    cuts.push(n_seg);
+    // De-duplicate degenerate cuts (blocks may be empty on tiny inputs).
+    cuts.dedup();
+    if cuts.len() == 1 {
+        cuts.push(n_seg);
+    }
+    cuts
+}
+
+/// Parallel segment sum: `out[seg[i]] += h[gather[i]]`, `seg` sorted.
+///
+/// `threads` ≤ 1 degrades to the serial blocked kernel. `n_seg` is the
+/// number of output segments (`out.len() == n_seg * f`).
+pub fn segment_sum_n(
+    threads: usize,
+    h: &[f32],
+    f: usize,
+    gather: &[u32],
+    seg: &[u32],
+    n_seg: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), n_seg * f);
+    if threads <= 1 || gather.len() < 4096 {
+        blocked::segment_sum(h, f, gather, seg, out);
+        return;
+    }
+    let offsets = blocked::segment_offsets(seg, n_seg);
+    // 2D tiling: more dst blocks than threads for dynamic balance; feature
+    // dim kept whole per tile (f is small in GCN layers; splitting it
+    // would duplicate gather traffic).
+    let n_blocks = threads * 4;
+    let cuts = flops_balanced_cuts(&offsets, n_blocks);
+    let n_tiles = cuts.len() - 1;
+    // Each tile owns rows cuts[t]..cuts[t+1] of `out` — disjoint, so we
+    // hand out raw sub-slices via pointers guarded by the tiling.
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let base = SendPtr(out.as_mut_ptr());
+    let base_ref = &base; // capture the Sync wrapper, not the raw pointer field
+    pool::parallel_for(threads, n_tiles, |t| {
+        let (lo, hi) = (cuts[t], cuts[t + 1]);
+        if lo >= hi {
+            return;
+        }
+        // SAFETY: tiles write disjoint row ranges [lo*f, hi*f).
+        let slice = unsafe {
+            let p = base_ref.0.add(lo * f);
+            std::slice::from_raw_parts_mut(p, (hi - lo) * f)
+        };
+        // Shift offsets into the local slice.
+        for s in lo..hi {
+            let (a, b) = (offsets[s], offsets[s + 1]);
+            if a == b {
+                continue;
+            }
+            let dst = &mut slice[(s - lo) * f..(s - lo + 1) * f];
+            run_add(h, f, &gather[a..b], dst);
+        }
+    });
+}
+
+#[inline]
+fn run_add(h: &[f32], f: usize, gathers: &[u32], dst: &mut [f32]) {
+    // Delegate to the blocked kernel's run accumulation via a 1-run call.
+    let seg = vec![0u32; gathers.len()];
+    blocked::segment_sum(h, f, gathers, &seg, dst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agg::testutil::random_problem;
+    use crate::agg::vanilla;
+    use crate::util::propcheck::{prop_assert, prop_close, propcheck};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cuts_balance_edges() {
+        // 4 segments with runs of 100, 1, 1, 1 edges → first block should
+        // be just segment 0.
+        let seg: Vec<u32> = std::iter::repeat(0u32)
+            .take(100)
+            .chain([1, 2, 3])
+            .collect();
+        let off = blocked::segment_offsets(&seg, 4);
+        let cuts = flops_balanced_cuts(&off, 2);
+        assert_eq!(cuts.first(), Some(&0));
+        assert_eq!(cuts.last(), Some(&4));
+        assert!(cuts.contains(&1), "skewed run must get its own block: {cuts:?}");
+    }
+
+    #[test]
+    fn cuts_cover_everything_monotone() {
+        let seg = vec![0u32, 0, 2, 5, 5, 5, 9];
+        let off = blocked::segment_offsets(&seg, 10);
+        for nb in [1, 2, 3, 7, 50] {
+            let cuts = flops_balanced_cuts(&off, nb);
+            assert_eq!(*cuts.first().unwrap(), 0);
+            assert_eq!(*cuts.last().unwrap(), 10);
+            for w in cuts.windows(2) {
+                assert!(w[0] < w[1], "non-monotone cuts {cuts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_matches_vanilla_large() {
+        let mut rng = Rng::new(31);
+        let (n_src, n_seg, m, f) = (500, 300, 20_000, 32);
+        let (h, gather, seg) = random_problem(&mut rng, n_src, n_seg, m, f);
+        let mut a = vec![0f32; n_seg * f];
+        vanilla::segment_sum(&h, f, &gather, &seg, &mut a);
+        let mut b = vec![0f32; n_seg * f];
+        segment_sum_n(4, &h, f, &gather, &seg, n_seg, &mut b);
+        assert_eq!(a, b, "parallel tiling must preserve per-run order");
+    }
+
+    #[test]
+    fn small_input_serial_path() {
+        let mut rng = Rng::new(5);
+        let (h, gather, seg) = random_problem(&mut rng, 10, 6, 30, 4);
+        let mut a = vec![0f32; 24];
+        vanilla::segment_sum(&h, 4, &gather, &seg, &mut a);
+        let mut b = vec![0f32; 24];
+        segment_sum_n(8, &h, 4, &gather, &seg, 6, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn prop_parallel_equals_vanilla() {
+        propcheck(16, |gen| {
+            let n_src = gen.usize(1, 80);
+            let n_seg = gen.usize(1, 60);
+            let m = gen.usize(0, 6000);
+            let f = gen.usize(1, 24);
+            let (h, gather, seg) = random_problem(&mut gen.rng, n_src, n_seg, m, f);
+            let mut a = vec![0f32; n_seg * f];
+            vanilla::segment_sum(&h, f, &gather, &seg, &mut a);
+            let mut b = vec![0f32; n_seg * f];
+            segment_sum_n(3, &h, f, &gather, &seg, n_seg, &mut b);
+            prop_assert(a.len() == b.len(), "len")?;
+            prop_close(&a, &b, 1e-6, 1e-6)
+        });
+    }
+}

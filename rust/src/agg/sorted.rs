@@ -1,0 +1,105 @@
+//! Clustering & sorting for `index_add` (Fig. 3(b)) — the preprocessing
+//! that turns an unordered index into sorted segment runs, plus the
+//! reusable plan object (`SortedIndexAdd`) the trainer builds once per
+//! graph and applies every epoch.
+
+use super::blocked;
+
+/// A sorted index_add plan: the permutation that clusters contributions by
+/// destination, cached so the (expensive) sort happens once.
+#[derive(Clone, Debug)]
+pub struct SortedIndexAdd {
+    pub n_dst: usize,
+    /// Contribution order after clustering: position i takes source row
+    /// `perm[i]`.
+    pub perm: Vec<u32>,
+    /// Non-decreasing destination per contribution.
+    pub seg: Vec<u32>,
+    /// CSR offsets per destination segment.
+    pub offsets: Vec<usize>,
+}
+
+impl SortedIndexAdd {
+    /// Build from an unordered index (`idx[i]` = destination of source row
+    /// i, `n_dst` destinations).
+    pub fn new(idx: &[u32], n_dst: usize) -> Self {
+        let mut order: Vec<u32> = (0..idx.len() as u32).collect();
+        // Stable sort keeps per-destination source order == input order,
+        // so results match the vanilla accumulation bitwise.
+        order.sort_by_key(|&i| idx[i as usize]);
+        let seg: Vec<u32> = order.iter().map(|&i| idx[i as usize]).collect();
+        let offsets = blocked::segment_offsets(&seg, n_dst);
+        Self {
+            n_dst,
+            perm: order,
+            seg,
+            offsets,
+        }
+    }
+
+    /// `dst += index_add(src)` using the cached clustering and the
+    /// register-blocked kernel. `src` is m × f, `dst` n_dst × f.
+    pub fn apply(&self, src: &[f32], f: usize, dst: &mut [f32]) {
+        assert_eq!(src.len(), self.perm.len() * f);
+        assert_eq!(dst.len(), self.n_dst * f);
+        blocked::segment_sum(src, f, &self.perm, &self.seg, dst);
+    }
+
+    /// Number of contributions.
+    pub fn m(&self) -> usize {
+        self.perm.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agg::vanilla;
+    use crate::util::propcheck::{prop_assert, prop_close, propcheck};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_vanilla_index_add() {
+        let mut rng = Rng::new(21);
+        let (m, n, f) = (300, 50, 20);
+        let src: Vec<f32> = (0..m * f).map(|_| rng.f32() - 0.5).collect();
+        let idx: Vec<u32> = (0..m).map(|_| rng.index(n) as u32).collect();
+        let mut a = vec![0f32; n * f];
+        vanilla::index_add(&mut a, f, &src, &idx);
+        let plan = SortedIndexAdd::new(&idx, n);
+        let mut b = vec![0f32; n * f];
+        plan.apply(&src, f, &mut b);
+        assert_eq!(a, b, "stable clustering must preserve accumulation order");
+    }
+
+    #[test]
+    fn plan_is_reusable() {
+        let idx = vec![2u32, 0, 2, 1];
+        let plan = SortedIndexAdd::new(&idx, 3);
+        let src = vec![1.0, 2.0, 3.0, 4.0];
+        let mut d1 = vec![0f32; 3];
+        plan.apply(&src, 1, &mut d1);
+        assert_eq!(d1, vec![2.0, 4.0, 4.0]);
+        // Second application accumulates again.
+        plan.apply(&src, 1, &mut d1);
+        assert_eq!(d1, vec![4.0, 8.0, 8.0]);
+    }
+
+    #[test]
+    fn prop_sorted_plan_equals_vanilla() {
+        propcheck(32, |gen| {
+            let n = gen.usize(1, 50);
+            let m = gen.usize(0, 200);
+            let f = gen.usize(1, 40);
+            let src = gen.vec_f32(m * f, -3.0, 3.0);
+            let idx: Vec<u32> = (0..m).map(|_| gen.rng.index(n) as u32).collect();
+            let mut a = vec![0f32; n * f];
+            vanilla::index_add(&mut a, f, &src, &idx);
+            let plan = SortedIndexAdd::new(&idx, n);
+            prop_assert(plan.m() == m, "m mismatch")?;
+            let mut b = vec![0f32; n * f];
+            plan.apply(&src, f, &mut b);
+            prop_close(&a, &b, 1e-6, 1e-6)
+        });
+    }
+}

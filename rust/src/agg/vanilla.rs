@@ -1,0 +1,69 @@
+//! Vanilla scatter-style aggregation — the PyG-equivalent baseline of
+//! Fig. 3(a)/Fig. 8 ("Base"): iterate contributions in given order, add
+//! each source row into its destination row. No sorting, no clustering, no
+//! destination reuse — the destination row is re-loaded from memory for
+//! every contribution.
+
+/// `out[seg[i]] += h[gather[i]]` for all i, any `seg` order.
+pub fn segment_sum(h: &[f32], f: usize, gather: &[u32], seg: &[u32], out: &mut [f32]) {
+    assert_eq!(gather.len(), seg.len());
+    for (&g, &s) in gather.iter().zip(seg.iter()) {
+        let src = &h[g as usize * f..(g as usize + 1) * f];
+        let dst = &mut out[s as usize * f..(s as usize + 1) * f];
+        for (d, &x) in dst.iter_mut().zip(src.iter()) {
+            *d += x;
+        }
+    }
+}
+
+/// Vanilla `index_add`: rows of `src` (m × f) are added into `dst` (n × f)
+/// at positions `idx` (unordered) — the operator of Fig. 3(a) verbatim.
+pub fn index_add(dst: &mut [f32], f: usize, src: &[f32], idx: &[u32]) {
+    assert_eq!(src.len(), idx.len() * f);
+    for (i, &d) in idx.iter().enumerate() {
+        let s = &src[i * f..(i + 1) * f];
+        let o = &mut dst[d as usize * f..(d as usize + 1) * f];
+        for (a, &b) in o.iter_mut().zip(s.iter()) {
+            *a += b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_sum_known() {
+        // h rows: [1,10], [2,20], [3,30]
+        let h = vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0];
+        let gather = vec![0, 2, 1];
+        let seg = vec![1, 1, 0];
+        let mut out = vec![0.0; 4];
+        segment_sum(&h, 2, &gather, &seg, &mut out);
+        assert_eq!(out, vec![2.0, 20.0, 4.0, 40.0]);
+    }
+
+    #[test]
+    fn index_add_known() {
+        let mut dst = vec![0.0; 4];
+        let src = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        index_add(&mut dst, 2, &src, &[1, 0, 1]);
+        assert_eq!(dst, vec![3.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn accumulates_into_existing() {
+        let h = vec![1.0];
+        let mut out = vec![5.0];
+        segment_sum(&h, 1, &[0], &[0], &mut out);
+        assert_eq!(out, vec![6.0]);
+    }
+
+    #[test]
+    fn empty_is_noop() {
+        let mut out = vec![1.0, 2.0];
+        segment_sum(&[], 2, &[], &[], &mut out);
+        assert_eq!(out, vec![1.0, 2.0]);
+    }
+}

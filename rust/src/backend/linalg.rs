@@ -1,0 +1,279 @@
+//! Dense f32 linear algebra for the native backend: blocked matmuls,
+//! LayerNorm forward/backward, activations, reductions. Sizes are modest
+//! (n_pad × ≤128), so simple register-blocked loops that auto-vectorize
+//! are the right tool.
+
+/// `c += a @ b`, a: m×k, b: k×n, row-major.
+pub fn matmul_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(c.len(), m * n);
+    // i-k-j loop order: unit-stride inner loop over both b and c.
+    for i in 0..m {
+        let ai = &a[i * k..(i + 1) * k];
+        let ci = &mut c[i * n..(i + 1) * n];
+        for (kk, &aik) in ai.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let bk = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                ci[j] += aik * bk[j];
+            }
+        }
+    }
+}
+
+/// `c = a @ b` (overwrite).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    c.iter_mut().for_each(|x| *x = 0.0);
+    matmul_acc(a, b, m, k, n, c);
+}
+
+/// `c += aᵀ @ b`, a: m×k (so aᵀ: k×m), b: m×n, c: k×n.
+pub fn matmul_tn_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), m * n);
+    assert_eq!(c.len(), k * n);
+    for i in 0..m {
+        let ai = &a[i * k..(i + 1) * k];
+        let bi = &b[i * n..(i + 1) * n];
+        for (kk, &aik) in ai.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let ck = &mut c[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                ck[j] += aik * bi[j];
+            }
+        }
+    }
+}
+
+/// `c += a @ bᵀ`, a: m×k, b: n×k (so bᵀ: k×n), c: m×n.
+pub fn matmul_nt_acc(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, c: &mut [f32]) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let ai = &a[i * k..(i + 1) * k];
+        let ci = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let bj = &b[j * k..(j + 1) * k];
+            let mut acc = 0f32;
+            for kk in 0..k {
+                acc += ai[kk] * bj[kk];
+            }
+            ci[j] += acc;
+        }
+    }
+}
+
+/// Add a row vector to every row: `x[i] += b`.
+pub fn add_bias(x: &mut [f32], n_rows: usize, b: &[f32]) {
+    let n = b.len();
+    for i in 0..n_rows {
+        let row = &mut x[i * n..(i + 1) * n];
+        for (r, &bb) in row.iter_mut().zip(b.iter()) {
+            *r += bb;
+        }
+    }
+}
+
+/// Column sums: `out[j] += Σ_i x[i][j]`.
+pub fn col_sum_acc(x: &[f32], n_rows: usize, n_cols: usize, out: &mut [f32]) {
+    assert_eq!(out.len(), n_cols);
+    for i in 0..n_rows {
+        let row = &x[i * n_cols..(i + 1) * n_cols];
+        for (o, &v) in out.iter_mut().zip(row.iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// In-place ReLU.
+pub fn relu(x: &mut [f32]) {
+    for v in x {
+        if *v < 0.0 {
+            *v = 0.0;
+        }
+    }
+}
+
+/// `dx = d_out ⊙ (out > 0)` — ReLU backward via the saved output.
+pub fn relu_bwd(d_out: &[f32], out: &[f32], dx: &mut [f32]) {
+    for ((d, &o), x) in d_out.iter().zip(out.iter()).zip(dx.iter_mut()) {
+        *x = if o > 0.0 { *d } else { 0.0 };
+    }
+}
+
+pub const LN_EPS: f32 = 1e-5;
+
+/// Row-wise non-affine LayerNorm, matching `kernels/layernorm.py` and
+/// jnp exactly (mean/biased-variance).
+pub fn layernorm(x: &[f32], n_rows: usize, f: usize, out: &mut [f32]) {
+    for i in 0..n_rows {
+        let row = &x[i * f..(i + 1) * f];
+        let o = &mut out[i * f..(i + 1) * f];
+        let mean = row.iter().sum::<f32>() / f as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / f as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        for (oo, &v) in o.iter_mut().zip(row.iter()) {
+            *oo = (v - mean) * inv;
+        }
+    }
+}
+
+/// LayerNorm backward: `dx = inv/f · (f·dy − Σdy − x̂·Σ(dy·x̂))`.
+pub fn layernorm_bwd(x: &[f32], dy: &[f32], n_rows: usize, f: usize, dx: &mut [f32]) {
+    for i in 0..n_rows {
+        let row = &x[i * f..(i + 1) * f];
+        let dyr = &dy[i * f..(i + 1) * f];
+        let dxr = &mut dx[i * f..(i + 1) * f];
+        let mean = row.iter().sum::<f32>() / f as f32;
+        let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / f as f32;
+        let inv = 1.0 / (var + LN_EPS).sqrt();
+        let mut sum_dy = 0f32;
+        let mut sum_dyx = 0f32;
+        for (&d, &v) in dyr.iter().zip(row.iter()) {
+            let xhat = (v - mean) * inv;
+            sum_dy += d;
+            sum_dyx += d * xhat;
+        }
+        let ff = f as f32;
+        for ((dxo, &d), &v) in dxr.iter_mut().zip(dyr.iter()).zip(row.iter()) {
+            let xhat = (v - mean) * inv;
+            *dxo = (inv / ff) * (ff * d - sum_dy - xhat * sum_dyx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{prop_close, propcheck};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matmul_known() {
+        // [[1,2],[3,4]] @ [[5,6],[7,8]] = [[19,22],[43,50]]
+        let a = vec![1., 2., 3., 4.];
+        let b = vec![5., 6., 7., 8.];
+        let mut c = vec![0f32; 4];
+        matmul(&a, &b, 2, 2, 2, &mut c);
+        assert_eq!(c, vec![19., 22., 43., 50.]);
+    }
+
+    fn naive_matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                for kk in 0..k {
+                    c[i * n + j] += a[i * k + kk] * b[kk * n + j];
+                }
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn prop_matmul_variants_agree() {
+        propcheck(24, |gen| {
+            let m = gen.usize(1, 20);
+            let k = gen.usize(1, 20);
+            let n = gen.usize(1, 20);
+            let a = gen.vec_f32(m * k, -2.0, 2.0);
+            let b = gen.vec_f32(k * n, -2.0, 2.0);
+            let want = naive_matmul(&a, &b, m, k, n);
+            let mut c = vec![0f32; m * n];
+            matmul(&a, &b, m, k, n, &mut c);
+            prop_close(&c, &want, 1e-4, 1e-4)?;
+            // aᵀ via matmul_tn: (aᵀ)ᵀ @ b — transpose a into at: k×m.
+            let mut at = vec![0f32; k * m];
+            for i in 0..m {
+                for kk in 0..k {
+                    at[kk * m + i] = a[i * k + kk];
+                }
+            }
+            let mut c2 = vec![0f32; m * n];
+            matmul_tn_acc(&at, &b, k, m, n, &mut c2);
+            prop_close(&c2, &want, 1e-4, 1e-4)?;
+            // a @ bᵀᵀ via matmul_nt with bt: n×k.
+            let mut bt = vec![0f32; n * k];
+            for kk in 0..k {
+                for j in 0..n {
+                    bt[j * k + kk] = b[kk * n + j];
+                }
+            }
+            let mut c3 = vec![0f32; m * n];
+            matmul_nt_acc(&a, &bt, m, k, n, &mut c3);
+            prop_close(&c3, &want, 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Rng::new(5);
+        let (n, f) = (10, 32);
+        let x: Vec<f32> = (0..n * f).map(|_| rng.f32() * 10.0 - 5.0).collect();
+        let mut y = vec![0f32; n * f];
+        layernorm(&x, n, f, &mut y);
+        for i in 0..n {
+            let row = &y[i * f..(i + 1) * f];
+            let mean = row.iter().sum::<f32>() / f as f32;
+            let var = row.iter().map(|&v| (v - mean) * (v - mean)).sum::<f32>() / f as f32;
+            assert!(mean.abs() < 1e-4, "mean {mean}");
+            assert!((var - 1.0).abs() < 1e-2, "var {var}");
+        }
+    }
+
+    #[test]
+    fn layernorm_bwd_matches_finite_difference() {
+        let mut rng = Rng::new(6);
+        let (n, f) = (3, 8);
+        let x: Vec<f32> = (0..n * f).map(|_| rng.f32() * 4.0 - 2.0).collect();
+        let dy: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+        let mut dx = vec![0f32; n * f];
+        layernorm_bwd(&x, &dy, n, f, &mut dx);
+        // finite differences of scalar L = Σ ln(x)·dy
+        let eps = 1e-3f32;
+        for idx in [0usize, 5, 13, 23] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let mut yp = vec![0f32; n * f];
+            let mut ym = vec![0f32; n * f];
+            layernorm(&xp, n, f, &mut yp);
+            layernorm(&xm, n, f, &mut ym);
+            let lp: f32 = yp.iter().zip(dy.iter()).map(|(a, b)| a * b).sum();
+            let lm: f32 = ym.iter().zip(dy.iter()).map(|(a, b)| a * b).sum();
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - dx[idx]).abs() < 2e-2,
+                "idx {idx}: fd {fd} vs analytic {}",
+                dx[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn relu_and_bwd() {
+        let mut x = vec![-1.0f32, 2.0, 0.0];
+        relu(&mut x);
+        assert_eq!(x, vec![0.0, 2.0, 0.0]);
+        let mut dx = vec![9f32; 3];
+        relu_bwd(&[1.0, 1.0, 1.0], &x, &mut dx);
+        assert_eq!(dx, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn bias_and_colsum() {
+        let mut x = vec![1.0f32, 2.0, 3.0, 4.0];
+        add_bias(&mut x, 2, &[10.0, 20.0]);
+        assert_eq!(x, vec![11.0, 22.0, 13.0, 24.0]);
+        let mut cs = vec![0f32; 2];
+        col_sum_acc(&x, 2, 2, &mut cs);
+        assert_eq!(cs, vec![24.0, 46.0]);
+    }
+}

@@ -1,0 +1,236 @@
+//! Compute backends: one trait, two engines.
+//!
+//! * [`native`] — pure-Rust f32 kernels built on the §4 aggregation
+//!   operators (`agg::*`). This *is* the paper's CPU compute path and the
+//!   engine used for the large benches.
+//! * [`xla`] — executes the AOT'd JAX/Pallas artifacts through PJRT
+//!   (`runtime::Runtime`): the three-layer architecture's L2/L1 engine.
+//!
+//! Both implement [`Backend`] over identical padded buffers and are
+//! cross-validated against each other in `rust/tests/backend_parity.rs` —
+//! that agreement is what lets the fast native engine stand in for the
+//! artifact path on big runs.
+
+pub mod linalg;
+pub mod native;
+pub mod xla;
+
+use crate::model::LayerParams;
+use crate::runtime::ShapeConfig;
+use anyhow::Result;
+
+/// One padded segment-sum problem (local aggregation, pre-aggregation, or
+/// one of their transposes), carrying both the sorted global segment form
+/// (native engine) and the per-block relative form (Pallas artifacts).
+#[derive(Clone, Debug, Default)]
+pub struct SegSpec {
+    /// Source row per contribution (pads → the zero row).
+    pub gather: Vec<u32>,
+    /// Non-decreasing destination segment per contribution (pads → trash).
+    pub seg: Vec<u32>,
+    /// Total segments (incl. the trash segment).
+    pub n_seg: usize,
+    /// i32 copies for literal building.
+    pub gather_i32: Vec<i32>,
+    /// Within-block dense rank of each segment (Pallas kernel input).
+    pub seg_rel: Vec<i32>,
+    /// (block, rank) → global segment; unused slots = n_seg (clamped to
+    /// the sliced-off trash row inside the artifact).
+    pub block_seg: Vec<i32>,
+}
+
+impl SegSpec {
+    /// Build from sorted segments. `gather.len()` must be a multiple of
+    /// `eb` (the caller pads), or zero.
+    pub fn new(gather: Vec<u32>, seg: Vec<u32>, n_seg: usize, eb: usize) -> Self {
+        assert_eq!(gather.len(), seg.len());
+        assert!(gather.len() % eb == 0, "entries must be padded to the edge block");
+        debug_assert!(crate::agg::is_sorted_segs(&seg));
+        let (seg_rel, block_seg) = plan_segments(&seg, n_seg, eb);
+        let gather_i32 = gather.iter().map(|&g| g as i32).collect();
+        Self {
+            gather,
+            seg,
+            n_seg,
+            gather_i32,
+            seg_rel,
+            block_seg,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.gather.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gather.is_empty()
+    }
+}
+
+/// Host-side planning for the Pallas blocked segment-sum kernel — the Rust
+/// twin of `python/compile/kernels/aggregate.plan_segments`.
+pub fn plan_segments(seg: &[u32], n_seg: usize, eb: usize) -> (Vec<i32>, Vec<i32>) {
+    let e = seg.len();
+    assert!(e % eb == 0);
+    let nb = e / eb;
+    let mut seg_rel = vec![0i32; e];
+    let mut block_seg = vec![n_seg as i32; nb * eb];
+    for b in 0..nb {
+        let blk = &seg[b * eb..(b + 1) * eb];
+        let mut rank = 0i32;
+        let mut prev = u32::MAX;
+        for (i, &s) in blk.iter().enumerate() {
+            if s != prev {
+                if prev != u32::MAX {
+                    rank += 1;
+                }
+                block_seg[b * eb + rank as usize] = s as i32;
+                prev = s;
+            } else if i == 0 {
+                block_seg[b * eb] = s as i32;
+            }
+            seg_rel[b * eb + i] = rank;
+        }
+        if !blk.is_empty() {
+            block_seg[b * eb] = blk[0] as i32;
+        }
+    }
+    (seg_rel, block_seg)
+}
+
+/// Everything a layer's forward/backward needs besides tensors.
+#[derive(Clone, Debug)]
+pub struct LayerSpec {
+    /// Local-edge aggregation: gather = src, seg = dst (sorted), n_seg = n_pad.
+    pub local: SegSpec,
+    /// Transpose for the native backward: gather = dst, seg = src (sorted).
+    pub local_t: SegSpec,
+    /// Received partial i scatter-adds into local row rpre_dst[i] (pads → trash).
+    pub rpre_dst: Vec<u32>,
+    pub rpre_dst_i32: Vec<i32>,
+    /// Post edges: z[post_dst[k]] += recv_post[post_row[k]].
+    pub post_row: Vec<u32>,
+    pub post_row_i32: Vec<i32>,
+    pub post_dst: Vec<u32>,
+    pub post_dst_i32: Vec<i32>,
+    /// Native backward of the post scatter: gather = post_dst,
+    /// seg = post_row (sorted), n_seg = r_post.
+    pub post_t: SegSpec,
+    /// 1 / full in-degree (0 on pads, reserved rows, isolated nodes).
+    pub deg_inv: Vec<f32>,
+}
+
+/// Loss head outputs (per worker). `d_logits` is the gradient of the
+/// *sum* loss; the trainer rescales by 1/global_mask_sum.
+#[derive(Clone, Debug)]
+pub struct LossOut {
+    pub loss_sum: f32,
+    pub correct: f32,
+    pub mask_sum: f32,
+    pub d_logits: Vec<f32>,
+}
+
+/// The per-layer compute engine shared by the trainer.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    fn config(&self) -> &ShapeConfig;
+
+    /// LayerNorm + pre-aggregation partials. `fdim` selects the artifact
+    /// width (f_in or hidden).
+    fn pre_fwd(
+        &mut self,
+        fdim: usize,
+        h: &[f32],
+        pre: &SegSpec,
+        h_norm: &mut [f32],
+        partials: &mut [f32],
+    ) -> Result<()>;
+
+    /// Aggregate + SAGE update for `layer`.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_fwd(
+        &mut self,
+        layer: usize,
+        h_norm: &[f32],
+        recv_pre: &[f32],
+        recv_post: &[f32],
+        params: &LayerParams,
+        spec: &LayerSpec,
+        out: &mut [f32],
+    ) -> Result<()>;
+
+    /// Cotangents of `layer_fwd`. `out` is the forward result (used for
+    /// the ReLU mask). Parameter grads are *accumulated* into `grads`.
+    #[allow(clippy::too_many_arguments)]
+    fn layer_bwd(
+        &mut self,
+        layer: usize,
+        h_norm: &[f32],
+        recv_pre: &[f32],
+        recv_post: &[f32],
+        params: &LayerParams,
+        spec: &LayerSpec,
+        out: &[f32],
+        d_out: &[f32],
+        d_h_norm: &mut [f32],
+        d_recv_pre: &mut [f32],
+        d_recv_post: &mut [f32],
+        grads: &mut LayerParams,
+    ) -> Result<()>;
+
+    /// Cotangent of `pre_fwd` w.r.t. `h`. `d_h_norm` must already include
+    /// all producer-side contributions (layer bwd + returned post rows).
+    fn pre_bwd(
+        &mut self,
+        fdim: usize,
+        h: &[f32],
+        pre: &SegSpec,
+        d_h_norm: &[f32],
+        d_partials: &[f32],
+        d_h: &mut [f32],
+    ) -> Result<()>;
+
+    /// Masked softmax cross-entropy over the padded logits.
+    fn loss_head(&mut self, logits: &[f32], labels: &[i32], mask: &[f32]) -> Result<LossOut>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_segments_matches_python_semantics() {
+        // Mirrors aggregate.plan_segments: ranks dense within each block.
+        let eb = 4;
+        let seg = vec![0u32, 0, 2, 2, 2, 5, 5, 7];
+        let (rel, blk) = plan_segments(&seg, 8, eb);
+        assert_eq!(rel, vec![0, 0, 1, 1, 0, 1, 1, 2]);
+        assert_eq!(&blk[0..2], &[0, 2]);
+        assert_eq!(&blk[4..7], &[2, 5, 7]);
+        // Unused slots are the trash id (= n_seg).
+        assert_eq!(blk[2], 8);
+        assert_eq!(blk[3], 8);
+        assert_eq!(blk[7], 8);
+    }
+
+    #[test]
+    fn segspec_roundtrip_consistency() {
+        // Reconstruct (seg) from (seg_rel, block_seg): they must agree.
+        let eb = 8;
+        let gather: Vec<u32> = (0..24).map(|i| i % 5).collect();
+        let mut seg: Vec<u32> = (0..24).map(|i| (i / 3) as u32).collect();
+        seg.sort_unstable();
+        let spec = SegSpec::new(gather, seg.clone(), 10, eb);
+        for (i, (&rel, &s)) in spec.seg_rel.iter().zip(seg.iter()).enumerate() {
+            let b = i / eb;
+            assert_eq!(spec.block_seg[b * eb + rel as usize], s as i32, "entry {i}");
+        }
+    }
+
+    #[test]
+    fn empty_spec() {
+        let spec = SegSpec::new(vec![], vec![], 4, 128);
+        assert!(spec.is_empty());
+        assert_eq!(spec.seg_rel.len(), 0);
+    }
+}

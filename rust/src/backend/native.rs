@@ -1,0 +1,533 @@
+//! Native compute engine: the paper's CPU path, built on the §4
+//! aggregation operators with explicit hand-derived backward passes.
+//!
+//! Numerics match the JAX definitions (same LN epsilon, same accumulation
+//! structure); `rust/tests/backend_parity.rs` asserts agreement with the
+//! artifact engine to f32 tolerance.
+
+use super::linalg as la;
+use super::{Backend, LayerSpec, LossOut, SegSpec};
+use crate::agg::parallel::segment_sum_n;
+use crate::model::LayerParams;
+use crate::runtime::ShapeConfig;
+use anyhow::Result;
+
+/// Fine-grained timing sink so the trainer can split the Fig-12 breakdown
+/// into aggregation vs NN time even inside one backend call.
+#[derive(Clone, Debug, Default)]
+pub struct NativeTimings {
+    pub aggr_secs: f64,
+    pub nn_secs: f64,
+}
+
+pub struct NativeBackend {
+    cfg: ShapeConfig,
+    threads: usize,
+    /// Use the unoptimized scatter operator (the "Base"/PyG-like engine of
+    /// Fig. 8 / Fig. 12) instead of the §4-optimized kernels.
+    vanilla_agg: bool,
+    pub timings: NativeTimings,
+    // Scratch buffers reused across calls (no allocation on the hot path).
+    z: Vec<f32>,
+    dz: Vec<f32>,
+    dpre: Vec<f32>,
+    dhn_tmp: Vec<f32>,
+}
+
+impl NativeBackend {
+    pub fn new(cfg: ShapeConfig) -> Self {
+        let maxf = cfg.f_in.max(cfg.hidden).max(cfg.classes);
+        let n = cfg.n_pad;
+        Self {
+            cfg,
+            threads: 1,
+            vanilla_agg: false,
+            timings: NativeTimings::default(),
+            z: vec![0.0; n * maxf],
+            dz: vec![0.0; n * maxf],
+            dpre: vec![0.0; n * maxf],
+            dhn_tmp: vec![0.0; n * maxf],
+        }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Switch to the vanilla scatter aggregation (baseline engine).
+    pub fn with_vanilla_agg(mut self, vanilla: bool) -> Self {
+        self.vanilla_agg = vanilla;
+        self
+    }
+
+    #[inline]
+    fn segsum(&self, h: &[f32], f: usize, spec_gather: &[u32], spec_seg: &[u32], n_seg: usize, out: &mut [f32]) {
+        if self.vanilla_agg {
+            crate::agg::vanilla::segment_sum(h, f, spec_gather, spec_seg, out);
+        } else {
+            segment_sum_n(self.threads, h, f, spec_gather, spec_seg, n_seg, out);
+        }
+    }
+
+    fn aggr<T>(&mut self, f: impl FnOnce(&mut Self) -> T) -> T {
+        let t = std::time::Instant::now();
+        let r = f(self);
+        self.timings.aggr_secs += t.elapsed().as_secs_f64();
+        r
+    }
+
+    /// Recompute `z` (the mean-aggregated neighborhood) for a layer.
+    fn compute_z(
+        &mut self,
+        h_norm: &[f32],
+        recv_pre: &[f32],
+        recv_post: &[f32],
+        spec: &LayerSpec,
+        fin: usize,
+    ) {
+        let n = self.cfg.n_pad;
+        let z = &mut self.z[..n * fin];
+        z.iter_mut().for_each(|x| *x = 0.0);
+        if self.vanilla_agg {
+            crate::agg::vanilla::segment_sum(h_norm, fin, &spec.local.gather, &spec.local.seg, z);
+        } else {
+            segment_sum_n(self.threads, h_norm, fin, &spec.local.gather, &spec.local.seg, n, z);
+        }
+        // Received partials scatter.
+        for (i, &d) in spec.rpre_dst.iter().enumerate() {
+            let src = &recv_pre[i * fin..(i + 1) * fin];
+            let dst = &mut z[d as usize * fin..(d as usize + 1) * fin];
+            for (a, &b) in dst.iter_mut().zip(src.iter()) {
+                *a += b;
+            }
+        }
+        // Post edges scatter.
+        for (&row, &d) in spec.post_row.iter().zip(spec.post_dst.iter()) {
+            let src = &recv_post[row as usize * fin..(row as usize + 1) * fin];
+            let dst = &mut z[d as usize * fin..(d as usize + 1) * fin];
+            for (a, &b) in dst.iter_mut().zip(src.iter()) {
+                *a += b;
+            }
+        }
+        // Mean: multiply by deg_inv.
+        for (i, &dv) in spec.deg_inv.iter().enumerate() {
+            let row = &mut z[i * fin..(i + 1) * fin];
+            for v in row.iter_mut() {
+                *v *= dv;
+            }
+        }
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn config(&self) -> &ShapeConfig {
+        &self.cfg
+    }
+
+    fn pre_fwd(
+        &mut self,
+        fdim: usize,
+        h: &[f32],
+        pre: &SegSpec,
+        h_norm: &mut [f32],
+        partials: &mut [f32],
+    ) -> Result<()> {
+        let n = self.cfg.n_pad;
+        la::layernorm(h, n, fdim, h_norm);
+        partials.iter_mut().for_each(|x| *x = 0.0);
+        let vanilla = self.vanilla_agg;
+        let threads = self.threads;
+        self.aggr(|_s| {
+            if vanilla {
+                crate::agg::vanilla::segment_sum(h_norm, fdim, &pre.gather, &pre.seg, partials);
+            } else {
+                segment_sum_n(threads, h_norm, fdim, &pre.gather, &pre.seg, pre.n_seg, partials);
+            }
+        });
+        Ok(())
+    }
+
+    fn layer_fwd(
+        &mut self,
+        layer: usize,
+        h_norm: &[f32],
+        recv_pre: &[f32],
+        recv_post: &[f32],
+        params: &LayerParams,
+        spec: &LayerSpec,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let (fin, fout, relu) = self.cfg.layer_dims()[layer];
+        let n = self.cfg.n_pad;
+        self.aggr(|s| s.compute_z(h_norm, recv_pre, recv_post, spec, fin));
+        let t = std::time::Instant::now();
+        la::matmul(h_norm, &params.w_self, n, fin, fout, out);
+        la::matmul_acc(&self.z[..n * fin], &params.w_neigh, n, fin, fout, out);
+        la::add_bias(out, n, &params.b);
+        if relu {
+            la::relu(out);
+        }
+        self.timings.nn_secs += t.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    fn layer_bwd(
+        &mut self,
+        layer: usize,
+        h_norm: &[f32],
+        recv_pre: &[f32],
+        recv_post: &[f32],
+        params: &LayerParams,
+        spec: &LayerSpec,
+        out: &[f32],
+        d_out: &[f32],
+        d_h_norm: &mut [f32],
+        d_recv_pre: &mut [f32],
+        d_recv_post: &mut [f32],
+        grads: &mut LayerParams,
+    ) -> Result<()> {
+        let (fin, fout, relu) = self.cfg.layer_dims()[layer];
+        let n = self.cfg.n_pad;
+
+        // dPre = d_out ⊙ relu'(preact) (relu mask from saved `out`).
+        let t_nn = std::time::Instant::now();
+        let dpre = &mut self.dpre[..n * fout];
+        if relu {
+            la::relu_bwd(d_out, out, dpre);
+        } else {
+            dpre.copy_from_slice(d_out);
+        }
+        self.timings.nn_secs += t_nn.elapsed().as_secs_f64();
+
+        // z is needed for dW_neigh — recompute (aggregation path).
+        self.aggr(|s| s.compute_z(h_norm, recv_pre, recv_post, spec, fin));
+
+        let t_nn = std::time::Instant::now();
+        let dpre = &self.dpre[..n * fout];
+        // Parameter grads.
+        la::matmul_tn_acc(h_norm, dpre, n, fin, fout, &mut grads.w_self);
+        la::matmul_tn_acc(&self.z[..n * fin], dpre, n, fin, fout, &mut grads.w_neigh);
+        la::col_sum_acc(dpre, n, fout, &mut grads.b);
+        // d_h_norm (self path) and dZ.
+        d_h_norm.iter_mut().for_each(|x| *x = 0.0);
+        la::matmul_nt_acc(dpre, &params.w_self, n, fout, fin, d_h_norm);
+        let dz = &mut self.dz[..n * fin];
+        dz.iter_mut().for_each(|x| *x = 0.0);
+        la::matmul_nt_acc(dpre, &params.w_neigh, n, fout, fin, dz);
+        // Mean scaling folds into dZ.
+        for (i, &dv) in spec.deg_inv.iter().enumerate() {
+            let row = &mut dz[i * fin..(i + 1) * fin];
+            for v in row.iter_mut() {
+                *v *= dv;
+            }
+        }
+        self.timings.nn_secs += t_nn.elapsed().as_secs_f64();
+
+        // dZ flows back through the three aggregation paths.
+        let threads = self.threads;
+        let vanilla = self.vanilla_agg;
+        let t_ag = std::time::Instant::now();
+        {
+            let dz = &self.dz[..n * fin];
+            // (1) local edges, transposed: d_h_norm[src] += dz[dst].
+            if vanilla {
+                crate::agg::vanilla::segment_sum(dz, fin, &spec.local_t.gather, &spec.local_t.seg, d_h_norm);
+            } else {
+                segment_sum_n(
+                    threads,
+                    dz,
+                    fin,
+                    &spec.local_t.gather,
+                    &spec.local_t.seg,
+                    n,
+                    d_h_norm,
+                );
+            }
+            // (2) received partials: d_recv_pre[i] = dz[rpre_dst[i]].
+            for (i, &d) in spec.rpre_dst.iter().enumerate() {
+                d_recv_pre[i * fin..(i + 1) * fin]
+                    .copy_from_slice(&dz[d as usize * fin..(d as usize + 1) * fin]);
+            }
+            // (3) post rows: d_recv_post[row] += dz[dst] (transposed spec).
+            d_recv_post.iter_mut().for_each(|x| *x = 0.0);
+            if vanilla {
+                crate::agg::vanilla::segment_sum(dz, fin, &spec.post_t.gather, &spec.post_t.seg, d_recv_post);
+            } else {
+                segment_sum_n(
+                    threads,
+                    dz,
+                    fin,
+                    &spec.post_t.gather,
+                    &spec.post_t.seg,
+                    spec.post_t.n_seg,
+                    d_recv_post,
+                );
+            }
+        }
+        self.timings.aggr_secs += t_ag.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    fn pre_bwd(
+        &mut self,
+        fdim: usize,
+        h: &[f32],
+        pre: &SegSpec,
+        d_h_norm: &[f32],
+        d_partials: &[f32],
+        d_h: &mut [f32],
+    ) -> Result<()> {
+        let n = self.cfg.n_pad;
+        // Total h_norm cotangent = d_h_norm + scatter of d_partials back
+        // through the pre gather: d_hn[gather[i]] += d_partials[seg[i]].
+        let dhn = &mut self.dhn_tmp[..n * fdim];
+        dhn.copy_from_slice(d_h_norm);
+        let t = std::time::Instant::now();
+        for (&g, &s) in pre.gather.iter().zip(pre.seg.iter()) {
+            let src = &d_partials[s as usize * fdim..(s as usize + 1) * fdim];
+            let dst = &mut dhn[g as usize * fdim..(g as usize + 1) * fdim];
+            for (a, &b) in dst.iter_mut().zip(src.iter()) {
+                *a += b;
+            }
+        }
+        self.timings.aggr_secs += t.elapsed().as_secs_f64();
+        la::layernorm_bwd(h, &self.dhn_tmp[..n * fdim], n, fdim, d_h);
+        Ok(())
+    }
+
+    fn loss_head(&mut self, logits: &[f32], labels: &[i32], mask: &[f32]) -> Result<LossOut> {
+        let n = self.cfg.n_pad;
+        let c = self.cfg.classes;
+        let mut d_logits = vec![0f32; n * c];
+        let mut loss_sum = 0f64;
+        let mut correct = 0f64;
+        let mut mask_sum = 0f64;
+        for i in 0..n {
+            let m = mask[i];
+            let row = &logits[i * c..(i + 1) * c];
+            // log-softmax (stable).
+            let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            let sum_exp: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+            let log_z = mx + sum_exp.ln();
+            let label = labels[i] as usize;
+            if m > 0.0 {
+                loss_sum += (log_z - row[label]) as f64 * m as f64;
+                mask_sum += m as f64;
+                let argmax = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap_or(0);
+                if argmax == label {
+                    correct += m as f64;
+                }
+            }
+            if m > 0.0 {
+                let d = &mut d_logits[i * c..(i + 1) * c];
+                for (j, dj) in d.iter_mut().enumerate() {
+                    let sm = (row[j] - log_z).exp();
+                    *dj = (sm - if j == label { 1.0 } else { 0.0 }) * m;
+                }
+            }
+        }
+        Ok(LossOut {
+            loss_sum: loss_sum as f32,
+            correct: correct as f32,
+            mask_sum: mask_sum as f32,
+            d_logits,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_config;
+    use crate::util::rng::Rng;
+
+    fn empty_layer_spec(cfg: &ShapeConfig) -> LayerSpec {
+        // All pads: no local edges, no remote.
+        let eb = 128;
+        let zero = cfg.zero_row() as u32;
+        let trash = cfg.trash_row() as u32;
+        let local = SegSpec::new(
+            vec![zero; eb],
+            vec![trash; eb],
+            cfg.n_pad,
+            eb,
+        );
+        let local_t = local.clone();
+        let post_t = SegSpec::new(vec![trash; eb], vec![(cfg.r_post - 1) as u32; eb], cfg.r_post, eb);
+        LayerSpec {
+            local,
+            local_t,
+            rpre_dst: vec![trash; cfg.r_pre],
+            rpre_dst_i32: vec![trash as i32; cfg.r_pre],
+            post_row: vec![(cfg.r_post - 1) as u32; cfg.e_post],
+            post_row_i32: vec![(cfg.r_post - 1) as i32; cfg.e_post],
+            post_dst: vec![trash; cfg.e_post],
+            post_dst_i32: vec![trash as i32; cfg.e_post],
+            post_t,
+            deg_inv: vec![0.0; cfg.n_pad],
+        }
+    }
+
+    #[test]
+    fn loss_head_known_values() {
+        let cfg = test_config();
+        let mut be = NativeBackend::new(cfg.clone());
+        let n = cfg.n_pad;
+        let c = cfg.classes;
+        let mut logits = vec![0f32; n * c];
+        let mut labels = vec![0i32; n];
+        let mut mask = vec![0f32; n];
+        for v in 0..8 {
+            labels[v] = (v % c) as i32;
+            logits[v * c + v % c] = 10.0;
+            mask[v] = 1.0;
+        }
+        let out = be.loss_head(&logits, &labels, &mask).unwrap();
+        assert_eq!(out.mask_sum, 8.0);
+        assert_eq!(out.correct, 8.0);
+        assert!(out.loss_sum < 0.01);
+        // Unmasked rows get zero gradient.
+        assert!(out.d_logits[9 * c..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn loss_gradient_finite_difference() {
+        let cfg = test_config();
+        let mut be = NativeBackend::new(cfg.clone());
+        let n = cfg.n_pad;
+        let c = cfg.classes;
+        let mut rng = Rng::new(3);
+        let mut logits: Vec<f32> = (0..n * c).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let labels: Vec<i32> = (0..n).map(|_| rng.index(c) as i32).collect();
+        let mut mask = vec![0f32; n];
+        for m in mask.iter_mut().take(20) {
+            *m = 1.0;
+        }
+        let out = be.loss_head(&logits, &labels, &mask).unwrap();
+        let eps = 1e-2f32;
+        for idx in [0usize, 5, 37] {
+            let orig = logits[idx];
+            logits[idx] = orig + eps;
+            let lp = be.loss_head(&logits, &labels, &mask).unwrap().loss_sum;
+            logits[idx] = orig - eps;
+            let lm = be.loss_head(&logits, &labels, &mask).unwrap().loss_sum;
+            logits[idx] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - out.d_logits[idx]).abs() < 1e-2,
+                "idx {idx}: fd {fd} vs {}",
+                out.d_logits[idx]
+            );
+        }
+    }
+
+    #[test]
+    fn pre_fwd_layernorm_and_empty_partials() {
+        let cfg = test_config();
+        let mut be = NativeBackend::new(cfg.clone());
+        let f = cfg.f_in;
+        let n = cfg.n_pad;
+        let mut rng = Rng::new(9);
+        let h: Vec<f32> = (0..n * f).map(|_| rng.f32() * 4.0).collect();
+        let pre = SegSpec::new(
+            vec![cfg.zero_row() as u32; 128],
+            vec![(cfg.p_pre - 1) as u32; 128],
+            cfg.p_pre,
+            128,
+        );
+        let mut h_norm = vec![0f32; n * f];
+        let mut partials = vec![0f32; cfg.p_pre * f];
+        be.pre_fwd(f, &h, &pre, &mut h_norm, &mut partials).unwrap();
+        // Rows are normalized.
+        let row = &h_norm[0..f];
+        let mean = row.iter().sum::<f32>() / f as f32;
+        assert!(mean.abs() < 1e-4);
+        // Only the trash partial may be non-zero (zero row → zeros anyway).
+        assert!(partials[..(cfg.p_pre - 1) * f].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn layer_fwd_bwd_gradcheck_no_remote() {
+        // Finite-difference check of d_h_norm through the full layer on a
+        // small local graph.
+        let cfg = test_config();
+        let mut be = NativeBackend::new(cfg.clone());
+        let (fin, fout, _) = cfg.layer_dims()[0];
+        let n = cfg.n_pad;
+        let mut rng = Rng::new(17);
+        let mut spec = empty_layer_spec(&cfg);
+        // A few real local edges: 0→1, 2→1, 1→3 (sorted by dst).
+        let eb = 128;
+        let mut gather = vec![cfg.zero_row() as u32; eb];
+        let mut seg = vec![cfg.trash_row() as u32; eb];
+        gather[0] = 0;
+        seg[0] = 1;
+        gather[1] = 2;
+        seg[1] = 1;
+        gather[2] = 1;
+        seg[2] = 3;
+        // keep sorted: seg = [1,1,3,trash...]
+        spec.local = SegSpec::new(gather, seg, n, eb);
+        let mut tg = vec![cfg.zero_row() as u32; eb];
+        let mut ts = vec![cfg.trash_row() as u32; eb];
+        // transpose: src 0 gets dz[1]; src 1 gets dz[3]; src 2 gets dz[1]
+        tg[0] = 1;
+        ts[0] = 0;
+        tg[1] = 3;
+        ts[1] = 1;
+        tg[2] = 1;
+        ts[2] = 2;
+        spec.local_t = SegSpec::new(tg, ts, n, eb);
+        spec.deg_inv[1] = 0.5;
+        spec.deg_inv[3] = 1.0;
+
+        let h_norm: Vec<f32> = (0..n * fin).map(|_| rng.f32() - 0.5).collect();
+        let recv_pre = vec![0f32; cfg.r_pre * fin];
+        let recv_post = vec![0f32; cfg.r_post * fin];
+        let params = LayerParams::glorot(fin, fout, &mut rng);
+        let t: Vec<f32> = (0..n * fout).map(|_| rng.f32() - 0.5).collect();
+
+        let mut out = vec![0f32; n * fout];
+        be.layer_fwd(0, &h_norm, &recv_pre, &recv_post, &params, &spec, &mut out)
+            .unwrap();
+        let mut d_hn = vec![0f32; n * fin];
+        let mut d_rp = vec![0f32; cfg.r_pre * fin];
+        let mut d_ro = vec![0f32; cfg.r_post * fin];
+        let mut grads = params.zeros_like();
+        be.layer_bwd(
+            0, &h_norm, &recv_pre, &recv_post, &params, &spec, &out, &t, &mut d_hn,
+            &mut d_rp, &mut d_ro, &mut grads,
+        )
+        .unwrap();
+
+        let scalar = |be: &mut NativeBackend, h: &[f32]| -> f32 {
+            let mut o = vec![0f32; n * fout];
+            be.layer_fwd(0, h, &recv_pre, &recv_post, &params, &spec, &mut o)
+                .unwrap();
+            o.iter().zip(t.iter()).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-2f32;
+        for idx in [0usize, fin + 2, 2 * fin + 5, 3 * fin + 1] {
+            let mut hp = h_norm.clone();
+            hp[idx] += eps;
+            let mut hm = h_norm.clone();
+            hm[idx] -= eps;
+            let fd = (scalar(&mut be, &hp) - scalar(&mut be, &hm)) / (2.0 * eps);
+            assert!(
+                (fd - d_hn[idx]).abs() < 3e-2,
+                "idx {idx}: fd {fd} vs analytic {}",
+                d_hn[idx]
+            );
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! XLA compute engine: executes the AOT'd JAX/Pallas artifacts through the
+//! PJRT runtime. This is the three-layer architecture's L2/L1 path — every
+//! numerical layer op runs inside a compiled HLO module whose hot loop is
+//! the Pallas blocked segment-sum kernel.
+
+use super::{Backend, LayerSpec, LossOut, SegSpec};
+use crate::model::LayerParams;
+use crate::runtime::{self, Runtime, ShapeConfig};
+use anyhow::{Context, Result};
+
+pub struct XlaBackend {
+    rt: Runtime,
+    cfg: ShapeConfig,
+}
+
+impl XlaBackend {
+    pub fn new(rt: Runtime) -> Self {
+        let cfg = rt.config.clone();
+        Self { rt, cfg }
+    }
+
+    /// Load from the artifacts directory (convenience).
+    pub fn load(artifacts_dir: &std::path::Path, config_name: &str) -> Result<Self> {
+        Ok(Self::new(Runtime::load(artifacts_dir, config_name)?))
+    }
+
+    fn check_pre(&self, fdim: usize, pre: &SegSpec) -> Result<()> {
+        anyhow::ensure!(
+            pre.len() == self.cfg.e_pre,
+            "pre spec has {} entries, config expects {}",
+            pre.len(),
+            self.cfg.e_pre
+        );
+        anyhow::ensure!(
+            fdim == self.cfg.f_in || fdim == self.cfg.hidden,
+            "no pre artifact for width {fdim}"
+        );
+        Ok(())
+    }
+}
+
+impl Backend for XlaBackend {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn config(&self) -> &ShapeConfig {
+        &self.cfg
+    }
+
+    fn pre_fwd(
+        &mut self,
+        fdim: usize,
+        h: &[f32],
+        pre: &SegSpec,
+        h_norm: &mut [f32],
+        partials: &mut [f32],
+    ) -> Result<()> {
+        self.check_pre(fdim, pre)?;
+        let n = self.cfg.n_pad;
+        let outs = self
+            .rt
+            .run(
+                &format!("pre_fwd_f{fdim}"),
+                &[
+                    runtime::lit_f32(h, n, fdim)?,
+                    runtime::lit_i32_vec(&pre.gather_i32),
+                    runtime::lit_i32_vec(&pre.seg_rel),
+                    runtime::lit_i32_vec(&pre.block_seg),
+                ],
+            )
+            .context("pre_fwd artifact")?;
+        anyhow::ensure!(outs.len() == 2, "pre_fwd returns 2 outputs");
+        runtime::lit_to_f32(&outs[0], h_norm)?;
+        runtime::lit_to_f32(&outs[1], partials)?;
+        Ok(())
+    }
+
+    fn layer_fwd(
+        &mut self,
+        layer: usize,
+        h_norm: &[f32],
+        recv_pre: &[f32],
+        recv_post: &[f32],
+        params: &LayerParams,
+        spec: &LayerSpec,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let (fin, fout, _) = self.cfg.layer_dims()[layer];
+        let n = self.cfg.n_pad;
+        let outs = self
+            .rt
+            .run(
+                &format!("layer_fwd_{layer}"),
+                &[
+                    runtime::lit_f32(h_norm, n, fin)?,
+                    runtime::lit_f32(recv_pre, self.cfg.r_pre, fin)?,
+                    runtime::lit_f32(recv_post, self.cfg.r_post, fin)?,
+                    runtime::lit_f32(&params.w_self, fin, fout)?,
+                    runtime::lit_f32(&params.w_neigh, fin, fout)?,
+                    runtime::lit_f32_vec(&params.b),
+                    runtime::lit_i32_vec(&spec.local.gather_i32),
+                    runtime::lit_i32_vec(&spec.local.seg_rel),
+                    runtime::lit_i32_vec(&spec.local.block_seg),
+                    runtime::lit_i32_vec(&spec.rpre_dst_i32),
+                    runtime::lit_i32_vec(&spec.post_row_i32),
+                    runtime::lit_i32_vec(&spec.post_dst_i32),
+                    runtime::lit_f32_vec(&spec.deg_inv),
+                ],
+            )
+            .context("layer_fwd artifact")?;
+        anyhow::ensure!(outs.len() == 1, "layer_fwd returns 1 output");
+        runtime::lit_to_f32(&outs[0], out)?;
+        Ok(())
+    }
+
+    fn layer_bwd(
+        &mut self,
+        layer: usize,
+        h_norm: &[f32],
+        recv_pre: &[f32],
+        recv_post: &[f32],
+        params: &LayerParams,
+        spec: &LayerSpec,
+        _out: &[f32],
+        d_out: &[f32],
+        d_h_norm: &mut [f32],
+        d_recv_pre: &mut [f32],
+        d_recv_post: &mut [f32],
+        grads: &mut LayerParams,
+    ) -> Result<()> {
+        let (fin, fout, _) = self.cfg.layer_dims()[layer];
+        let n = self.cfg.n_pad;
+        let outs = self
+            .rt
+            .run(
+                &format!("layer_bwd_{layer}"),
+                &[
+                    runtime::lit_f32(h_norm, n, fin)?,
+                    runtime::lit_f32(recv_pre, self.cfg.r_pre, fin)?,
+                    runtime::lit_f32(recv_post, self.cfg.r_post, fin)?,
+                    runtime::lit_f32(&params.w_self, fin, fout)?,
+                    runtime::lit_f32(&params.w_neigh, fin, fout)?,
+                    runtime::lit_f32_vec(&params.b),
+                    runtime::lit_i32_vec(&spec.local.gather_i32),
+                    runtime::lit_i32_vec(&spec.local.seg_rel),
+                    runtime::lit_i32_vec(&spec.local.block_seg),
+                    runtime::lit_i32_vec(&spec.rpre_dst_i32),
+                    runtime::lit_i32_vec(&spec.post_row_i32),
+                    runtime::lit_i32_vec(&spec.post_dst_i32),
+                    runtime::lit_f32_vec(&spec.deg_inv),
+                    runtime::lit_f32(d_out, n, fout)?,
+                ],
+            )
+            .context("layer_bwd artifact")?;
+        // 6 cotangents + the primal output (kept to defeat XLA's
+        // dead-parameter pruning; ignored here).
+        anyhow::ensure!(outs.len() == 7, "layer_bwd returns 6 cotangents + primal");
+        runtime::lit_to_f32(&outs[0], d_h_norm)?;
+        runtime::lit_to_f32(&outs[1], d_recv_pre)?;
+        runtime::lit_to_f32(&outs[2], d_recv_post)?;
+        // Parameter grads accumulate.
+        let mut tmp = vec![0f32; fin * fout];
+        runtime::lit_to_f32(&outs[3], &mut tmp)?;
+        for (g, &t) in grads.w_self.iter_mut().zip(tmp.iter()) {
+            *g += t;
+        }
+        runtime::lit_to_f32(&outs[4], &mut tmp)?;
+        for (g, &t) in grads.w_neigh.iter_mut().zip(tmp.iter()) {
+            *g += t;
+        }
+        let mut tb = vec![0f32; fout];
+        runtime::lit_to_f32(&outs[5], &mut tb)?;
+        for (g, &t) in grads.b.iter_mut().zip(tb.iter()) {
+            *g += t;
+        }
+        Ok(())
+    }
+
+    fn pre_bwd(
+        &mut self,
+        fdim: usize,
+        h: &[f32],
+        pre: &SegSpec,
+        d_h_norm: &[f32],
+        d_partials: &[f32],
+        d_h: &mut [f32],
+    ) -> Result<()> {
+        self.check_pre(fdim, pre)?;
+        let n = self.cfg.n_pad;
+        let outs = self
+            .rt
+            .run(
+                &format!("pre_bwd_f{fdim}"),
+                &[
+                    runtime::lit_f32(h, n, fdim)?,
+                    runtime::lit_i32_vec(&pre.gather_i32),
+                    runtime::lit_i32_vec(&pre.seg_rel),
+                    runtime::lit_i32_vec(&pre.block_seg),
+                    runtime::lit_f32(d_h_norm, n, fdim)?,
+                    runtime::lit_f32(d_partials, self.cfg.p_pre, fdim)?,
+                ],
+            )
+            .context("pre_bwd artifact")?;
+        anyhow::ensure!(outs.len() == 1, "pre_bwd returns 1 output");
+        runtime::lit_to_f32(&outs[0], d_h)?;
+        Ok(())
+    }
+
+    fn loss_head(&mut self, logits: &[f32], labels: &[i32], mask: &[f32]) -> Result<LossOut> {
+        let n = self.cfg.n_pad;
+        let c = self.cfg.classes;
+        let outs = self
+            .rt
+            .run(
+                "loss_head",
+                &[
+                    runtime::lit_f32(logits, n, c)?,
+                    runtime::lit_i32_vec(labels),
+                    runtime::lit_f32_vec(mask),
+                ],
+            )
+            .context("loss_head artifact")?;
+        anyhow::ensure!(outs.len() == 4, "loss_head returns 4 outputs");
+        let mut d_logits = vec![0f32; n * c];
+        runtime::lit_to_f32(&outs[1], &mut d_logits)?;
+        Ok(LossOut {
+            loss_sum: runtime::lit_scalar_f32(&outs[0])?,
+            d_logits,
+            correct: runtime::lit_scalar_f32(&outs[2])?,
+            mask_sum: runtime::lit_scalar_f32(&outs[3])?,
+        })
+    }
+}

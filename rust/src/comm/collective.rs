@@ -1,0 +1,96 @@
+//! Collectives beyond alltoallv: ring allreduce (gradient averaging) and
+//! barrier-style max-reduction used for epoch-time combination.
+//!
+//! Numerically the allreduce is an exact element-wise sum (computed once,
+//! broadcast by clone — SPMD simulation), while the *charged* wire time
+//! follows the standard ring-allreduce model:
+//! `2·(P−1)/P · bytes / BW + 2·(P−1)·L`.
+
+use crate::perfmodel::MachineProfile;
+
+/// Sum-allreduce of per-worker gradient buffers; every worker receives the
+/// sum. Returns the modeled collective seconds.
+pub fn allreduce_sum(buffers: &mut [Vec<f32>], profile: &MachineProfile) -> f64 {
+    let p = buffers.len();
+    if p == 0 {
+        return 0.0;
+    }
+    let n = buffers[0].len();
+    assert!(buffers.iter().all(|b| b.len() == n), "gradient length mismatch");
+    if p == 1 {
+        return 0.0;
+    }
+    let mut sum = vec![0f32; n];
+    for b in buffers.iter() {
+        for (s, &x) in sum.iter_mut().zip(b.iter()) {
+            *s += x;
+        }
+    }
+    for b in buffers.iter_mut() {
+        b.copy_from_slice(&sum);
+    }
+    ring_allreduce_secs(n * 4, p, profile)
+}
+
+/// Modeled ring allreduce time for `bytes` per rank.
+pub fn ring_allreduce_secs(bytes: usize, ranks: usize, profile: &MachineProfile) -> f64 {
+    if ranks <= 1 || bytes == 0 {
+        return 0.0;
+    }
+    let steps = 2 * (ranks - 1);
+    let chunk_bits = bytes as f64 * 8.0 / ranks as f64;
+    steps as f64 * (chunk_bits / profile.bw_comm + profile.latency)
+}
+
+/// Max-allreduce of scalars (load-imbalance / sync accounting).
+pub fn allreduce_max(values: &[f64]) -> f64 {
+    values.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_sums_and_broadcasts() {
+        let p = MachineProfile::abci();
+        let mut bufs = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let t = allreduce_sum(&mut bufs, &p);
+        for b in &bufs {
+            assert_eq!(b, &vec![9.0, 12.0]);
+        }
+        assert!(t > 0.0);
+    }
+
+    #[test]
+    fn single_rank_free() {
+        let p = MachineProfile::fugaku();
+        let mut bufs = vec![vec![1.0, 2.0]];
+        assert_eq!(allreduce_sum(&mut bufs, &p), 0.0);
+        assert_eq!(bufs[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn ring_model_scales_with_ranks_and_bytes() {
+        let p = MachineProfile::abci();
+        let t2 = ring_allreduce_secs(1 << 20, 2, &p);
+        let t8 = ring_allreduce_secs(1 << 20, 8, &p);
+        assert!(t8 > t2);
+        let tbig = ring_allreduce_secs(1 << 24, 8, &p);
+        assert!(tbig > t8);
+        assert_eq!(ring_allreduce_secs(0, 8, &p), 0.0);
+    }
+
+    #[test]
+    fn max_reduce() {
+        assert_eq!(allreduce_max(&[1.0, 5.0, 3.0]), 5.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "gradient length mismatch")]
+    fn mismatched_lengths_panic() {
+        let p = MachineProfile::abci();
+        let mut bufs = vec![vec![1.0], vec![1.0, 2.0]];
+        allreduce_sum(&mut bufs, &p);
+    }
+}

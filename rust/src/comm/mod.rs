@@ -1,0 +1,231 @@
+//! Simulated interconnect: `MPI_Alltoallv`-style halo exchange and ring
+//! allreduce between the SPMD workers of the trainer, with byte-exact
+//! volume accounting and modeled wire time (paper Eqn 2/5 via
+//! `perfmodel`).
+//!
+//! Workers execute as SPMD steps inside one process (the hardware gate —
+//! see DESIGN.md §1): payloads move by memcpy (so numerics are bit-exact
+//! end to end), while *time* is charged analytically from the machine
+//! profile. `CommStats` keeps both the measured local cost (pack/unpack,
+//! quantize) and the modeled wire cost.
+
+pub mod collective;
+
+use crate::perfmodel::MachineProfile;
+use crate::quant::Quantized;
+
+/// One message on the simulated wire.
+#[derive(Clone, Debug)]
+pub enum Payload {
+    /// Raw FP32 rows (values).
+    F32(Vec<f32>),
+    /// Quantized rows + params.
+    Quant(Quantized),
+    /// Empty marker (no data between this pair).
+    Empty,
+}
+
+impl Payload {
+    /// Payload size in *bits* on the wire, split (data_bits, param_bits).
+    pub fn wire_bits(&self) -> (f64, f64) {
+        match self {
+            Payload::F32(v) => (v.len() as f64 * 32.0, 0.0),
+            Payload::Quant(q) => (
+                q.payload_bytes() as f64 * 8.0,
+                q.param_bytes() as f64 * 8.0,
+            ),
+            Payload::Empty => (0.0, 0.0),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        match self {
+            Payload::F32(v) => v.is_empty(),
+            Payload::Quant(q) => q.rows == 0,
+            Payload::Empty => true,
+        }
+    }
+}
+
+/// Accumulated communication accounting for one training run.
+#[derive(Clone, Debug, Default)]
+pub struct CommStats {
+    /// Wire bits per (src, dst) pair, data payload.
+    pub data_bits: Vec<Vec<f64>>,
+    /// Wire bits per (src, dst) pair, quantization params.
+    pub param_bits: Vec<Vec<f64>>,
+    /// Number of messages per pair.
+    pub messages: Vec<Vec<usize>>,
+    /// Modeled wire seconds (Eqn 2/5), accumulated per *sender*.
+    pub modeled_send_secs: Vec<f64>,
+}
+
+impl CommStats {
+    pub fn new(k: usize) -> Self {
+        Self {
+            data_bits: vec![vec![0.0; k]; k],
+            param_bits: vec![vec![0.0; k]; k],
+            messages: vec![vec![0; k]; k],
+            modeled_send_secs: vec![0.0; k],
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.modeled_send_secs.len()
+    }
+
+    pub fn total_data_bytes(&self) -> f64 {
+        self.data_bits.iter().flatten().sum::<f64>() / 8.0
+    }
+
+    pub fn total_param_bytes(&self) -> f64 {
+        self.param_bits.iter().flatten().sum::<f64>() / 8.0
+    }
+
+    /// Eqn-2-style bottleneck time: slowest sender's accumulated wire time.
+    pub fn modeled_comm_secs(&self) -> f64 {
+        self.modeled_send_secs.iter().fold(0.0, |a, &b| a.max(b))
+    }
+
+    fn charge(&mut self, from: usize, to: usize, p: &Payload, profile: &MachineProfile) {
+        let (db, pb) = p.wire_bits();
+        if db + pb <= 0.0 {
+            return;
+        }
+        self.data_bits[from][to] += db;
+        self.param_bits[from][to] += pb;
+        self.messages[from][to] += 1;
+        self.modeled_send_secs[from] += (db + pb) / profile.bw_comm + profile.latency;
+    }
+}
+
+/// All-to-all personalized exchange: `sends[i][j]` is i's payload for j.
+/// Returns `recvs` with `recvs[j][i]` = what j received from i, and charges
+/// modeled wire time to `stats`.
+pub fn alltoallv(
+    sends: Vec<Vec<Payload>>,
+    profile: &MachineProfile,
+    stats: &mut CommStats,
+) -> Vec<Vec<Payload>> {
+    let k = sends.len();
+    assert!(sends.iter().all(|row| row.len() == k), "square send matrix required");
+    let mut recvs: Vec<Vec<Payload>> = (0..k)
+        .map(|_| (0..k).map(|_| Payload::Empty).collect())
+        .collect();
+    for (i, row) in sends.into_iter().enumerate() {
+        for (j, p) in row.into_iter().enumerate() {
+            stats.charge(i, j, &p, profile);
+            recvs[j][i] = p;
+        }
+    }
+    recvs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{fused, Bits};
+    use crate::util::propcheck::{prop_assert, propcheck};
+
+    #[test]
+    fn alltoallv_routes_correctly() {
+        let p = MachineProfile::abci();
+        let mut stats = CommStats::new(3);
+        let sends: Vec<Vec<Payload>> = (0..3)
+            .map(|i| {
+                (0..3)
+                    .map(|j| Payload::F32(vec![(i * 10 + j) as f32]))
+                    .collect()
+            })
+            .collect();
+        let recvs = alltoallv(sends, &p, &mut stats);
+        for j in 0..3 {
+            for i in 0..3 {
+                match &recvs[j][i] {
+                    Payload::F32(v) => assert_eq!(v[0], (i * 10 + j) as f32),
+                    _ => panic!("wrong payload"),
+                }
+            }
+        }
+        assert_eq!(stats.messages.iter().flatten().sum::<usize>(), 9);
+    }
+
+    #[test]
+    fn conservation_bytes_sent_equals_received() {
+        propcheck(16, |gen| {
+            let k = gen.usize(1, 5);
+            let p = MachineProfile::fugaku();
+            let mut stats = CommStats::new(k);
+            let mut sent_total = 0usize;
+            let sends: Vec<Vec<Payload>> = (0..k)
+                .map(|_| {
+                    (0..k)
+                        .map(|_| {
+                            let n = gen.usize(0, 50);
+                            sent_total += n;
+                            Payload::F32(gen.vec_f32(n, -1.0, 1.0))
+                        })
+                        .collect()
+                })
+                .collect();
+            let recvs = alltoallv(sends, &p, &mut stats);
+            let recv_total: usize = recvs
+                .iter()
+                .flatten()
+                .map(|p| match p {
+                    Payload::F32(v) => v.len(),
+                    _ => 0,
+                })
+                .sum();
+            prop_assert(recv_total == sent_total, "value conservation")?;
+            prop_assert(
+                (stats.total_data_bytes() - sent_total as f64 * 4.0).abs() < 1e-9,
+                "byte accounting",
+            )
+        });
+    }
+
+    #[test]
+    fn quant_payload_is_16x_cheaper_on_wire() {
+        let p = MachineProfile::abci();
+        let x = vec![0.5f32; 64 * 128];
+        let mut s_fp = CommStats::new(2);
+        alltoallv(
+            vec![
+                vec![Payload::Empty, Payload::F32(x.clone())],
+                vec![Payload::Empty, Payload::Empty],
+            ],
+            &p,
+            &mut s_fp,
+        );
+        let q = fused::quantize(&x, 64, 128, Bits::Int2, 1);
+        let mut s_q = CommStats::new(2);
+        alltoallv(
+            vec![
+                vec![Payload::Empty, Payload::Quant(q)],
+                vec![Payload::Empty, Payload::Empty],
+            ],
+            &p,
+            &mut s_q,
+        );
+        let ratio = s_fp.total_data_bytes() / (s_q.total_data_bytes() + s_q.total_param_bytes());
+        assert!(ratio > 14.0 && ratio <= 16.0, "ratio {ratio}");
+        assert!(s_q.modeled_comm_secs() < s_fp.modeled_comm_secs());
+    }
+
+    #[test]
+    fn empty_payloads_charge_nothing() {
+        let p = MachineProfile::abci();
+        let mut stats = CommStats::new(2);
+        alltoallv(
+            vec![
+                vec![Payload::Empty, Payload::Empty],
+                vec![Payload::Empty, Payload::F32(vec![])],
+            ],
+            &p,
+            &mut stats,
+        );
+        assert_eq!(stats.modeled_comm_secs(), 0.0);
+        assert_eq!(stats.messages.iter().flatten().sum::<usize>(), 0);
+    }
+}

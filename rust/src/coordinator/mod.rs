@@ -1,0 +1,16 @@
+//! The distributed full-batch GCN training coordinator (paper §3).
+//!
+//! * [`planner`] — turns (dataset, partition, halo plans, shape config)
+//!   into per-worker padded contexts: the preprocessing of Fig. 2 steps
+//!   1–2 (partition, local/pre/post split, plan exchange).
+//! * [`trainer`] — the epoch loop of Fig. 2 steps 3–7: masked label
+//!   propagation, per-layer LayerNorm + pre-aggregation, (quantized) halo
+//!   exchange, aggregation + update, loss, exact reverse-halo backward,
+//!   gradient allreduce, Adam — with the Fig. 12 time breakdown and
+//!   Eqn 2/5 modeled communication.
+
+pub mod planner;
+pub mod trainer;
+
+pub use planner::{fit_config, WorkerCtx};
+pub use trainer::{EpochStats, TrainConfig, Trainer};

@@ -1,0 +1,394 @@
+//! Preprocessing: build per-worker padded training contexts from the
+//! dataset, the partition, and the hierarchical-aggregation plans.
+//!
+//! Everything runtime-shaped is decided here, once: padded index arrays
+//! (with the zero-row / trash-row conventions of DESIGN.md §4), the
+//! Pallas block planning, per-peer slice ranges into the flat send/recv
+//! buffers, and the degree vector for mean aggregation.
+
+use crate::backend::{LayerSpec, SegSpec};
+use crate::graph::generate::{LabelledGraph, SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
+use crate::hier::plan::WorkerPlan;
+use crate::runtime::ShapeConfig;
+use anyhow::{Context, Result};
+
+/// The Pallas edge block; padded index arrays are multiples of this.
+pub const EB: usize = 128;
+
+fn round_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m).max(1) * m
+}
+
+/// Everything one worker carries through training.
+#[derive(Clone, Debug)]
+pub struct WorkerCtx {
+    pub worker: usize,
+    pub n_real: usize,
+    pub local_nodes: Vec<u32>,
+    /// Send-side pre-aggregation (peers concatenated; n_seg = p_pre,
+    /// trash segment last).
+    pub pre: SegSpec,
+    /// Per peer: segment range `[lo, hi)` of its partials inside the
+    /// partials buffer.
+    pub send_pre_range: Vec<(usize, usize)>,
+    /// Per peer: local rows whose (normalized) features ship raw.
+    pub send_post_rows: Vec<Vec<u32>>,
+    /// Per peer: row range inside the recv_pre buffer.
+    pub recv_pre_range: Vec<(usize, usize)>,
+    /// Per peer: row range inside the recv_post buffer (last row of the
+    /// buffer is the reserved zero row).
+    pub recv_post_range: Vec<(usize, usize)>,
+    /// Shared per-layer topology (identical for all three layers).
+    pub spec: LayerSpec,
+    /// Padded features (n_pad × f_in), labels and masks.
+    pub features: Vec<f32>,
+    pub labels: Vec<u32>,
+    pub labels_i32: Vec<i32>,
+    pub train_mask: Vec<bool>,
+    pub train_mask_f: Vec<f32>,
+    pub val_mask: Vec<f32>,
+    pub test_mask: Vec<f32>,
+}
+
+impl WorkerCtx {
+    /// Rows this worker sends per layer (pre partials + post rows).
+    pub fn send_rows(&self, peer: usize) -> usize {
+        (self.send_pre_range[peer].1 - self.send_pre_range[peer].0)
+            + self.send_post_rows[peer].len()
+    }
+}
+
+/// Compute the smallest [`ShapeConfig`] that fits `plans` (used by the
+/// native engine, which has no static-shape constraint from artifacts).
+pub fn fit_config(
+    name: &str,
+    f_in: usize,
+    hidden: usize,
+    classes: usize,
+    plans: &[WorkerPlan],
+) -> ShapeConfig {
+    let mut n_local = 1;
+    let mut e_local = 1;
+    let mut e_pre = 1;
+    let mut p_pre = 1;
+    let mut r_pre = 1;
+    let mut r_post = 1;
+    let mut e_post = 1;
+    for p in plans {
+        n_local = n_local.max(p.n_local());
+        e_local = e_local.max(p.local_edges.len());
+        e_pre = e_pre.max(p.sends.iter().map(|s| s.pre_gather.len()).sum::<usize>());
+        p_pre = p_pre.max(p.sends.iter().map(|s| s.n_pre_segments).sum::<usize>());
+        r_pre = r_pre.max(p.recvs.iter().map(|r| r.pre_dst.len()).sum::<usize>());
+        r_post = r_post.max(p.recvs.iter().map(|r| r.n_post_rows).sum::<usize>());
+        e_post = e_post.max(p.recvs.iter().map(|r| r.post_edges.len()).sum::<usize>());
+    }
+    ShapeConfig {
+        name: name.to_string(),
+        n_pad: round_up(n_local + 2, EB),
+        f_in,
+        hidden,
+        classes,
+        e_local: round_up(e_local, EB),
+        e_pre: round_up(e_pre, EB),
+        p_pre: p_pre + 1,     // + trash segment
+        r_pre: r_pre.max(1),
+        r_post: r_post + 1,   // + reserved zero row
+        e_post: e_post.max(1),
+    }
+}
+
+/// Check a manifest config can host these plans.
+pub fn check_fits(cfg: &ShapeConfig, plans: &[WorkerPlan]) -> Result<()> {
+    let need = fit_config(&cfg.name, cfg.f_in, cfg.hidden, cfg.classes, plans);
+    let checks = [
+        ("n_pad", need.n_pad, cfg.n_pad),
+        ("e_local", need.e_local, cfg.e_local),
+        ("e_pre", need.e_pre, cfg.e_pre),
+        ("p_pre", need.p_pre, cfg.p_pre),
+        ("r_pre", need.r_pre, cfg.r_pre),
+        ("r_post", need.r_post, cfg.r_post),
+        ("e_post", need.e_post, cfg.e_post),
+    ];
+    for (what, needed, have) in checks {
+        anyhow::ensure!(
+            needed <= have,
+            "config '{}' too small: {what} needs {needed}, artifact has {have} \
+             (regenerate artifacts with a larger config or use a smaller dataset)",
+            cfg.name
+        );
+    }
+    Ok(())
+}
+
+/// Build all worker contexts.
+pub fn build_worker_ctxs(
+    lg: &LabelledGraph,
+    plans: &[WorkerPlan],
+    cfg: &ShapeConfig,
+) -> Result<Vec<WorkerCtx>> {
+    check_fits(cfg, plans)?;
+    anyhow::ensure!(lg.feat_dim == cfg.f_in, "feature dim mismatch");
+    anyhow::ensure!(lg.num_classes <= cfg.classes, "class count exceeds config");
+    plans
+        .iter()
+        .map(|p| build_one(lg, p, cfg))
+        .collect::<Result<Vec<_>>>()
+}
+
+fn build_one(lg: &LabelledGraph, plan: &WorkerPlan, cfg: &ShapeConfig) -> Result<WorkerCtx> {
+    let n_pad = cfg.n_pad;
+    let zero = cfg.zero_row() as u32;
+    let trash = cfg.trash_row() as u32;
+    let n_real = plan.n_local();
+    let k = plan.sends.len();
+
+    // ---- local aggregation spec (edges already sorted by dst) ----------
+    let mut lg_gather: Vec<u32> = plan.local_edges.iter().map(|e| e.0).collect();
+    let mut lg_seg: Vec<u32> = plan.local_edges.iter().map(|e| e.1).collect();
+    pad_to(&mut lg_gather, cfg.e_local, zero);
+    pad_to(&mut lg_seg, cfg.e_local, trash);
+    let local = SegSpec::new(lg_gather, lg_seg, n_pad, EB);
+
+    // Transposed local edges (sorted by src) for the native backward.
+    let mut t_edges: Vec<(u32, u32)> = plan.local_edges.iter().map(|&(s, d)| (d, s)).collect();
+    t_edges.sort_unstable_by_key(|&(_, s)| s);
+    let mut lt_gather: Vec<u32> = t_edges.iter().map(|e| e.0).collect();
+    let mut lt_seg: Vec<u32> = t_edges.iter().map(|e| e.1).collect();
+    pad_to(&mut lt_gather, cfg.e_local, zero);
+    pad_to(&mut lt_seg, cfg.e_local, trash);
+    let local_t = SegSpec::new(lt_gather, lt_seg, n_pad, EB);
+
+    // ---- send-side pre aggregation --------------------------------------
+    let mut pre_gather = Vec::new();
+    let mut pre_seg = Vec::new();
+    let mut send_pre_range = Vec::with_capacity(k);
+    let mut seg_off = 0usize;
+    for sp in &plan.sends {
+        pre_gather.extend_from_slice(&sp.pre_gather);
+        pre_seg.extend(sp.pre_seg.iter().map(|&s| s + seg_off as u32));
+        send_pre_range.push((seg_off, seg_off + sp.n_pre_segments));
+        seg_off += sp.n_pre_segments;
+    }
+    anyhow::ensure!(seg_off < cfg.p_pre, "pre segments overflow");
+    pad_to(&mut pre_gather, cfg.e_pre, zero);
+    pad_to(&mut pre_seg, cfg.e_pre, (cfg.p_pre - 1) as u32);
+    let pre = SegSpec::new(pre_gather, pre_seg, cfg.p_pre, EB);
+
+    let send_post_rows: Vec<Vec<u32>> = plan.sends.iter().map(|s| s.post_rows.clone()).collect();
+
+    // ---- receive side ----------------------------------------------------
+    let mut rpre_dst = Vec::new();
+    let mut recv_pre_range = Vec::with_capacity(k);
+    for rp in &plan.recvs {
+        let lo = rpre_dst.len();
+        rpre_dst.extend_from_slice(&rp.pre_dst);
+        recv_pre_range.push((lo, rpre_dst.len()));
+    }
+    anyhow::ensure!(rpre_dst.len() <= cfg.r_pre, "recv_pre overflow");
+    rpre_dst.resize(cfg.r_pre, trash);
+
+    let zero_recv_row = (cfg.r_post - 1) as u32;
+    let mut post_row = Vec::new();
+    let mut post_dst = Vec::new();
+    let mut recv_post_range = Vec::with_capacity(k);
+    let mut row_off = 0usize;
+    for rp in &plan.recvs {
+        recv_post_range.push((row_off, row_off + rp.n_post_rows));
+        for &(r, d) in &rp.post_edges {
+            post_row.push(r + row_off as u32);
+            post_dst.push(d);
+        }
+        row_off += rp.n_post_rows;
+    }
+    anyhow::ensure!(row_off < cfg.r_post, "recv_post overflow");
+    anyhow::ensure!(post_row.len() <= cfg.e_post, "post edges overflow");
+    pad_to(&mut post_row, cfg.e_post, zero_recv_row);
+    pad_to(&mut post_dst, cfg.e_post, trash);
+
+    // Transposed post edges (grouped by received row) for native backward:
+    // d_recv_post[row] += dz[dst]. Pads scatter into the reserved zero row.
+    let mut pt: Vec<(u32, u32)> = post_dst.iter().zip(post_row.iter()).map(|(&d, &r)| (d, r)).collect();
+    pt.sort_unstable_by_key(|&(_, r)| r);
+    let pt_gather: Vec<u32> = pt.iter().map(|e| e.0).collect();
+    let pt_seg: Vec<u32> = pt.iter().map(|e| e.1).collect();
+    // post arrays may not be EB multiples — pad both to EB for SegSpec.
+    let e_post_pad = round_up(cfg.e_post, EB);
+    let mut pt_gather = pt_gather;
+    let mut pt_seg = pt_seg;
+    pad_to(&mut pt_gather, e_post_pad, zero);
+    pad_to(&mut pt_seg, e_post_pad, zero_recv_row);
+    // Re-sort after padding (pads carry the max seg only if zero_recv_row
+    // is the max — it is, by construction).
+    let post_t = SegSpec::new(pt_gather, pt_seg, cfg.r_post, EB);
+
+    // ---- degrees ----------------------------------------------------------
+    let mut deg_inv = vec![0f32; n_pad];
+    for (i, &d) in plan.degrees.iter().enumerate() {
+        if d > 0 {
+            deg_inv[i] = 1.0 / d as f32;
+        }
+    }
+
+    // ---- features / labels / masks ---------------------------------------
+    let f = lg.feat_dim;
+    let mut features = vec![0f32; n_pad * f];
+    let mut labels = vec![0u32; n_pad];
+    let mut train_mask = vec![false; n_pad];
+    let mut train_mask_f = vec![0f32; n_pad];
+    let mut val_mask = vec![0f32; n_pad];
+    let mut test_mask = vec![0f32; n_pad];
+    for (i, &v) in plan.local_nodes.iter().enumerate() {
+        let v = v as usize;
+        features[i * f..(i + 1) * f].copy_from_slice(lg.feature_row(v));
+        labels[i] = lg.labels[v];
+        match lg.split[v] {
+            SPLIT_TRAIN => {
+                train_mask[i] = true;
+                train_mask_f[i] = 1.0;
+            }
+            SPLIT_VAL => val_mask[i] = 1.0,
+            SPLIT_TEST => test_mask[i] = 1.0,
+            _ => {}
+        }
+    }
+    let labels_i32: Vec<i32> = labels.iter().map(|&l| l as i32).collect();
+
+    let spec = LayerSpec {
+        local,
+        local_t,
+        rpre_dst_i32: rpre_dst.iter().map(|&x| x as i32).collect(),
+        rpre_dst,
+        post_row_i32: post_row.iter().map(|&x| x as i32).collect(),
+        post_row,
+        post_dst_i32: post_dst.iter().map(|&x| x as i32).collect(),
+        post_dst,
+        post_t,
+        deg_inv,
+    };
+
+    Ok(WorkerCtx {
+        worker: plan.worker,
+        n_real,
+        local_nodes: plan.local_nodes.clone(),
+        pre,
+        send_pre_range,
+        send_post_rows,
+        recv_pre_range,
+        recv_post_range,
+        spec,
+        features,
+        labels,
+        labels_i32,
+        train_mask,
+        train_mask_f,
+        val_mask,
+        test_mask,
+    })
+}
+
+fn pad_to(v: &mut Vec<u32>, len: usize, fill: u32) {
+    assert!(v.len() <= len, "buffer {} exceeds padded length {}", v.len(), len);
+    v.resize(len, fill);
+}
+
+/// Full preprocessing pipeline: partition → plans → contexts, with the
+/// in-degree + train-mask vertex weights of §7.2.
+pub fn prepare(
+    lg: &LabelledGraph,
+    k: usize,
+    strategy: crate::hier::volume::RemoteStrategy,
+    cfg: Option<ShapeConfig>,
+    seed: u64,
+) -> Result<(Vec<WorkerCtx>, ShapeConfig, Vec<WorkerPlan>)> {
+    use crate::partition::multilevel::{multilevel, MultilevelOpts};
+    let mask: Vec<bool> = lg.split.iter().map(|&s| s == SPLIT_TRAIN).collect();
+    let weights = crate::partition::vertex_weights(&lg.graph, Some(&mask), 4);
+    let opts = MultilevelOpts {
+        seed,
+        ..Default::default()
+    };
+    let part = multilevel(&lg.graph, k, &weights, &opts);
+    let plans = crate::hier::plan::build_plans(&lg.graph, &part, strategy);
+    crate::hier::plan::validate_plans(&lg.graph, &part, &plans).context("plan validation")?;
+    let cfg = match cfg {
+        Some(c) => c,
+        None => fit_config("fit", lg.feat_dim, 64, lg.num_classes, &plans),
+    };
+    let ctxs = build_worker_ctxs(lg, &plans, &cfg)?;
+    Ok((ctxs, cfg, plans))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::sbm;
+    use crate::hier::volume::RemoteStrategy;
+
+    #[test]
+    fn fit_and_build_small() {
+        let lg = sbm(500, 4, 8.0, 0.85, 16, 0.5, 5);
+        let (ctxs, cfg, plans) = prepare(&lg, 3, RemoteStrategy::Hybrid, None, 7).unwrap();
+        assert_eq!(ctxs.len(), 3);
+        assert_eq!(cfg.n_pad % EB, 0);
+        for (ctx, plan) in ctxs.iter().zip(plans.iter()) {
+            assert_eq!(ctx.n_real, plan.n_local());
+            // Send ranges consistent with plan.
+            for (peer, sp) in plan.sends.iter().enumerate() {
+                let (lo, hi) = ctx.send_pre_range[peer];
+                assert_eq!(hi - lo, sp.n_pre_segments);
+                assert_eq!(ctx.send_post_rows[peer].len(), sp.post_rows.len());
+            }
+            // Spec arrays fully padded.
+            assert_eq!(ctx.spec.local.len(), cfg.e_local);
+            assert_eq!(ctx.pre.len(), cfg.e_pre);
+            assert_eq!(ctx.spec.rpre_dst.len(), cfg.r_pre);
+            assert_eq!(ctx.spec.post_row.len(), cfg.e_post);
+            // Send/recv rows match pairwise.
+            for peer in 0..ctxs.len() {
+                let (plo, phi) = ctxs[peer].recv_pre_range[ctx.worker];
+                assert_eq!(phi - plo, ctx.send_pre_range[peer].1 - ctx.send_pre_range[peer].0);
+                let (qlo, qhi) = ctxs[peer].recv_post_range[ctx.worker];
+                assert_eq!(qhi - qlo, ctx.send_post_rows[peer].len());
+            }
+        }
+    }
+
+    #[test]
+    fn masks_partition_split() {
+        let lg = sbm(400, 4, 6.0, 0.8, 8, 0.5, 9);
+        let (ctxs, _, _) = prepare(&lg, 2, RemoteStrategy::Hybrid, None, 3).unwrap();
+        let total_train: usize = ctxs
+            .iter()
+            .map(|c| c.train_mask.iter().filter(|&&t| t).count())
+            .sum();
+        assert_eq!(total_train, lg.count_split(SPLIT_TRAIN));
+        let total_test: f32 = ctxs.iter().map(|c| c.test_mask.iter().sum::<f32>()).sum();
+        assert_eq!(total_test as usize, lg.count_split(SPLIT_TEST));
+    }
+
+    #[test]
+    fn too_small_config_rejected() {
+        let lg = sbm(500, 4, 8.0, 0.85, 16, 0.5, 5);
+        let (_, fitted, plans) = prepare(&lg, 3, RemoteStrategy::Hybrid, None, 7).unwrap();
+        let mut small = fitted.clone();
+        small.n_pad = 128;
+        assert!(build_worker_ctxs(&lg, &plans, &small).is_err());
+    }
+
+    #[test]
+    fn degrees_match_global_graph() {
+        let lg = sbm(300, 3, 6.0, 0.8, 8, 0.5, 2);
+        let (ctxs, _, _) = prepare(&lg, 2, RemoteStrategy::PostOnly, None, 1).unwrap();
+        for ctx in &ctxs {
+            for (i, &v) in ctx.local_nodes.iter().enumerate() {
+                let d = lg.graph.in_degree(v as usize);
+                if d > 0 {
+                    assert!((ctx.spec.deg_inv[i] - 1.0 / d as f32).abs() < 1e-7);
+                } else {
+                    assert_eq!(ctx.spec.deg_inv[i], 0.0);
+                }
+            }
+        }
+    }
+}

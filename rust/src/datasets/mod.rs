@@ -1,0 +1,222 @@
+//! Dataset catalog mirroring the paper's Table 2, scaled to this testbed
+//! (DESIGN.md §1: synthetic substitutes with matching *shape* — vertex/edge
+//! ratio, feature width, class count, split — not matching absolute size).
+//!
+//! Accuracy experiments use SBM (homophilous, learnable); communication
+//! experiments use R-MAT (power-law, partition-stressing). Each config
+//! carries the model hyperparameters of Table 2.
+
+use crate::graph::generate::{attach_labels, rmat, sbm, LabelledGraph};
+
+/// Generator family behind a catalog entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    /// Stochastic block model (accuracy-bearing).
+    Sbm,
+    /// R-MAT power law with attached labels (comm-stressing).
+    Rmat,
+}
+
+/// One Table-2-style dataset description.
+#[derive(Clone, Debug)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// Which paper dataset this stands in for.
+    pub paper_analog: &'static str,
+    pub family: Family,
+    pub n: usize,
+    pub avg_deg: f64,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    pub hidden: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    /// Materialize the dataset (deterministic per seed).
+    pub fn build(&self) -> LabelledGraph {
+        match self.family {
+            // Harder settings (lower homophily, heavy feature noise) keep
+            // accuracy off the ceiling so quantization/LP effects are
+            // visible in the Fig-11 analogues.
+            Family::Sbm => sbm(
+                self.n,
+                self.num_classes,
+                self.avg_deg,
+                0.72,
+                self.feat_dim,
+                3.0,
+                self.seed,
+            ),
+            Family::Rmat => {
+                let scale = (self.n as f64).log2().ceil() as u32;
+                let g = rmat(scale, self.avg_deg / 2.0, 0.57, 0.19, 0.19, true, self.seed);
+                attach_labels(g, self.num_classes, self.feat_dim, self.seed)
+            }
+        }
+    }
+}
+
+/// The catalog. Names mirror Table 2; sizes are scaled by ~10³ so every
+/// experiment runs on one core while preserving edge/vertex ratios.
+pub fn catalog() -> Vec<DatasetSpec> {
+    vec![
+        DatasetSpec {
+            name: "arxiv-s",
+            paper_analog: "Ogbn-arxiv (169K nodes, deg~6.9)",
+            family: Family::Sbm,
+            n: 4_000,
+            avg_deg: 7.0,
+            feat_dim: 64,
+            num_classes: 16,
+            hidden: 64,
+            epochs: 200,
+            lr: 0.01,
+            seed: 1001,
+        },
+        DatasetSpec {
+            name: "reddit-s",
+            paper_analog: "Reddit (233K nodes, deg~492)",
+            family: Family::Sbm,
+            n: 3_000,
+            avg_deg: 60.0,
+            feat_dim: 96,
+            num_classes: 16,
+            hidden: 64,
+            epochs: 200,
+            lr: 0.01,
+            seed: 1002,
+        },
+        DatasetSpec {
+            name: "products-s",
+            paper_analog: "Ogbn-products (2.4M nodes, deg~25)",
+            family: Family::Sbm,
+            n: 12_000,
+            avg_deg: 25.0,
+            feat_dim: 64,
+            num_classes: 24,
+            hidden: 64,
+            epochs: 200,
+            lr: 0.01,
+            seed: 1003,
+        },
+        DatasetSpec {
+            name: "proteins-s",
+            paper_analog: "Proteins (8.7M nodes, deg~150)",
+            family: Family::Rmat,
+            n: 16_384,
+            avg_deg: 60.0,
+            feat_dim: 64,
+            num_classes: 16,
+            hidden: 64,
+            epochs: 100,
+            lr: 0.01,
+            seed: 1004,
+        },
+        DatasetSpec {
+            name: "papers100m-s",
+            paper_analog: "Ogbn-papers100M (111M nodes, deg~14.5)",
+            family: Family::Rmat,
+            n: 65_536,
+            avg_deg: 15.0,
+            feat_dim: 64,
+            num_classes: 32,
+            hidden: 64,
+            epochs: 100,
+            lr: 0.005,
+            seed: 1005,
+        },
+        DatasetSpec {
+            name: "mag240m-s",
+            paper_analog: "Ogb-lsc-mag240M (122M nodes, deg~21, feat 768)",
+            family: Family::Rmat,
+            n: 65_536,
+            avg_deg: 21.0,
+            feat_dim: 128,
+            num_classes: 32,
+            hidden: 64,
+            epochs: 100,
+            lr: 0.005,
+            seed: 1006,
+        },
+        DatasetSpec {
+            name: "uk2007-s",
+            paper_analog: "UK-2007-05 (106M nodes, deg~35)",
+            family: Family::Rmat,
+            n: 32_768,
+            avg_deg: 35.0,
+            feat_dim: 64,
+            num_classes: 32,
+            hidden: 32,
+            epochs: 100,
+            lr: 0.01,
+            seed: 1007,
+        },
+        DatasetSpec {
+            name: "igb260m-s",
+            paper_analog: "IGB260M (269M nodes, deg~15, feat 1024)",
+            family: Family::Rmat,
+            n: 131_072,
+            avg_deg: 15.0,
+            feat_dim: 128,
+            num_classes: 19,
+            hidden: 64,
+            epochs: 100,
+            lr: 0.01,
+            seed: 1008,
+        },
+    ]
+}
+
+/// Look up a spec by name.
+pub fn by_name(name: &str) -> anyhow::Result<DatasetSpec> {
+    catalog()
+        .into_iter()
+        .find(|d| d.name == name)
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown dataset '{name}'; available: {}",
+                catalog().iter().map(|d| d.name).collect::<Vec<_>>().join(", ")
+            )
+        })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_entries_build_and_validate() {
+        // Build the small ones; big R-MATs are exercised by benches.
+        for spec in catalog().into_iter().filter(|d| d.n <= 8_000) {
+            let g = spec.build();
+            g.validate().unwrap();
+            assert_eq!(g.feat_dim, spec.feat_dim);
+            assert_eq!(g.num_classes, spec.num_classes);
+            let avg = g.graph.m() as f64 / g.n() as f64;
+            assert!(
+                avg > spec.avg_deg * 0.4 && avg < spec.avg_deg * 3.0,
+                "{}: avg deg {avg} vs spec {}",
+                spec.name,
+                spec.avg_deg
+            );
+        }
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("arxiv-s").is_ok());
+        assert!(by_name("nope").is_err());
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let names: Vec<_> = catalog().iter().map(|d| d.name).collect();
+        let mut dedup = names.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(names.len(), dedup.len());
+    }
+}

@@ -1,0 +1,138 @@
+//! Experiment support: table printers and the shared run helpers used by
+//! the bench harnesses (one per paper table/figure) and examples.
+
+use crate::backend::native::NativeBackend;
+use crate::coordinator::planner::prepare;
+use crate::coordinator::trainer::{EpochStats, TrainConfig, Trainer};
+use crate::datasets::DatasetSpec;
+use anyhow::Result;
+
+/// A fixed-width console table (benches print paper-style rows).
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row.iter()) {
+                *w = (*w).max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let s: Vec<String> = cells
+                .iter()
+                .zip(widths.iter())
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect();
+            println!("| {} |", s.join(" | "));
+        };
+        line(&self.headers);
+        println!(
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Markdown rendering (for EXPERIMENTS.md capture).
+    pub fn markdown(&self) -> String {
+        let mut s = format!("### {}\n\n| {} |\n|{}|\n",
+            self.title,
+            self.headers.join(" | "),
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|"));
+        for row in &self.rows {
+            s.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        s
+    }
+}
+
+/// Train `spec` on `k` simulated workers with the native engine.
+pub fn train_native(
+    spec: &DatasetSpec,
+    k: usize,
+    mut tc: TrainConfig,
+    epochs_override: Option<usize>,
+) -> Result<(Vec<EpochStats>, Trainer)> {
+    let lg = spec.build();
+    tc.lr = spec.lr;
+    if let Some(e) = epochs_override {
+        tc.epochs = e;
+    }
+    let (ctxs, mut cfg, _) = prepare(&lg, k, tc.strategy, None, tc.seed)?;
+    cfg.hidden = spec.hidden;
+    // `prepare` fit used hidden=64 default; refit classes/hidden widths.
+    let backend = Box::new(NativeBackend::new(cfg));
+    let mut tr = Trainer::new(ctxs, backend, tc);
+    let stats = tr.run(false)?;
+    Ok((stats, tr))
+}
+
+/// Mean of the last `n` epochs' modeled seconds (steady-state epoch time).
+pub fn steady_epoch_secs(stats: &[EpochStats], n: usize) -> f64 {
+    let tail = &stats[stats.len().saturating_sub(n)..];
+    tail.iter().map(|s| s.modeled_secs).sum::<f64>() / tail.len().max(1) as f64
+}
+
+/// Best (max) test accuracy over a run.
+pub fn best_test_acc(stats: &[EpochStats]) -> f32 {
+    stats.iter().map(|s| s.test_acc).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("demo", &["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let md = t.markdown();
+        assert!(md.contains("| a | bb |"));
+        assert!(md.contains("| 1 | 2 |"));
+        t.print();
+    }
+
+    #[test]
+    fn steady_state_helpers() {
+        let mk = |m: f64, acc: f32| EpochStats {
+            epoch: 0,
+            train_loss: 0.0,
+            train_acc: 0.0,
+            val_acc: 0.0,
+            test_acc: acc,
+            modeled_secs: m,
+            measured_secs: m,
+            breakdown: Default::default(),
+            comm_data_bytes: 0.0,
+            comm_param_bytes: 0.0,
+        };
+        let stats = vec![mk(10.0, 0.1), mk(2.0, 0.5), mk(4.0, 0.4)];
+        assert!((steady_epoch_secs(&stats, 2) - 3.0).abs() < 1e-12);
+        assert_eq!(best_test_acc(&stats), 0.5);
+    }
+}

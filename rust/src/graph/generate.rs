@@ -1,0 +1,379 @@
+//! Synthetic graph generators — the data substitute for the paper's OGB /
+//! Reddit / IGB260M datasets (see DESIGN.md §1).
+//!
+//! * `sbm` — stochastic block model with label-correlated Gaussian
+//!   features: the training-accuracy experiments (Fig 11, Table 3) need
+//!   homophilous graphs where a GCN genuinely learns.
+//! * `rmat` — R-MAT power-law graphs: the communication experiments
+//!   (Table 5, Fig 9/10) need the skewed degree distributions that make
+//!   hybrid pre/post-aggregation pay off.
+//! * `erdos_renyi` — uniform random baseline used in tests/ablations.
+
+use super::CsrGraph;
+use crate::util::rng::Rng;
+
+/// A labelled attributed graph: what a GNN dataset is.
+#[derive(Clone, Debug)]
+pub struct LabelledGraph {
+    pub graph: CsrGraph,
+    /// Row-major `n × feat_dim`.
+    pub features: Vec<f32>,
+    pub feat_dim: usize,
+    pub labels: Vec<u32>,
+    pub num_classes: usize,
+    /// 0 = unused, 1 = train, 2 = val, 3 = test.
+    pub split: Vec<u8>,
+}
+
+pub const SPLIT_TRAIN: u8 = 1;
+pub const SPLIT_VAL: u8 = 2;
+pub const SPLIT_TEST: u8 = 3;
+
+impl LabelledGraph {
+    pub fn n(&self) -> usize {
+        self.graph.n
+    }
+
+    pub fn feature_row(&self, v: usize) -> &[f32] {
+        &self.features[v * self.feat_dim..(v + 1) * self.feat_dim]
+    }
+
+    pub fn count_split(&self, s: u8) -> usize {
+        self.split.iter().filter(|&&x| x == s).count()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.graph.validate()?;
+        anyhow::ensure!(self.features.len() == self.n() * self.feat_dim, "feature size");
+        anyhow::ensure!(self.labels.len() == self.n(), "label size");
+        anyhow::ensure!(self.split.len() == self.n(), "split size");
+        anyhow::ensure!(
+            self.labels.iter().all(|&l| (l as usize) < self.num_classes),
+            "label out of range"
+        );
+        Ok(())
+    }
+}
+
+/// Stochastic block model: `n` nodes in `k` equal blocks; arc probability
+/// `p_in` within a block, `p_out` across. Features = one Gaussian cluster
+/// center per class + noise; symmetric arcs. `avg_deg` parameterizes the
+/// edge budget instead of raw probabilities so configs scale with n:
+/// expected degree is split `homophily`-fraction intra-block.
+pub fn sbm(
+    n: usize,
+    k: usize,
+    avg_deg: f64,
+    homophily: f64,
+    feat_dim: usize,
+    feat_noise: f32,
+    seed: u64,
+) -> LabelledGraph {
+    assert!(k >= 1 && n >= k);
+    let mut rng = Rng::new(seed);
+    // Block assignment: contiguous-ish but shuffled so partitioning can't
+    // trivially align blocks with workers.
+    let mut labels: Vec<u32> = (0..n).map(|i| (i % k) as u32).collect();
+    rng.shuffle(&mut labels);
+
+    // Per-class membership lists for intra-block sampling.
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (v, &c) in labels.iter().enumerate() {
+        members[c as usize].push(v as u32);
+    }
+
+    let m_target = ((n as f64) * avg_deg / 2.0) as usize; // undirected pairs
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(m_target * 2);
+    for _ in 0..m_target {
+        let u = rng.index(n) as u32;
+        let v = if rng.chance(homophily) {
+            // intra-block partner
+            let blk = &members[labels[u as usize] as usize];
+            blk[rng.index(blk.len())]
+        } else {
+            rng.index(n) as u32
+        };
+        if u != v {
+            edges.push((u, v));
+            edges.push((v, u));
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    let graph = CsrGraph::from_edges(n, &edges);
+
+    // Class centers on the unit sphere-ish; features = center + noise.
+    let mut centers = vec![0f32; k * feat_dim];
+    for c in centers.iter_mut() {
+        *c = rng.normal() as f32;
+    }
+    let inv_sqrt = 1.0 / (feat_dim as f32).sqrt();
+    for c in 0..k {
+        for j in 0..feat_dim {
+            centers[c * feat_dim + j] *= inv_sqrt * 2.0;
+        }
+    }
+    let mut features = vec![0f32; n * feat_dim];
+    for v in 0..n {
+        let c = labels[v] as usize;
+        for j in 0..feat_dim {
+            features[v * feat_dim + j] =
+                centers[c * feat_dim + j] + feat_noise * rng.normal() as f32;
+        }
+    }
+
+    let split = make_split(n, 0.5, 0.25, &mut rng);
+    LabelledGraph {
+        graph,
+        features,
+        feat_dim,
+        labels,
+        num_classes: k,
+        split,
+    }
+}
+
+/// Standard 60/20/20-style split (ratios configurable): train/val/test.
+pub fn make_split(n: usize, train: f64, val: f64, rng: &mut Rng) -> Vec<u8> {
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let n_train = ((n as f64) * train) as usize;
+    let n_val = ((n as f64) * val) as usize;
+    let mut split = vec![SPLIT_TEST; n];
+    for &v in &order[..n_train] {
+        split[v] = SPLIT_TRAIN;
+    }
+    for &v in &order[n_train..(n_train + n_val).min(n)] {
+        split[v] = SPLIT_VAL;
+    }
+    split
+}
+
+/// R-MAT (recursive matrix) generator with the classic (a,b,c,d)
+/// quadrant probabilities; produces the heavy-tailed degree distributions
+/// of web/social graphs (UK-2007-05-like). Returns a directed arc list
+/// (deduped), optionally symmetrized.
+pub fn rmat(
+    scale: u32,
+    avg_deg: f64,
+    a: f64,
+    b: f64,
+    c: f64,
+    undirected: bool,
+    seed: u64,
+) -> CsrGraph {
+    let n = 1usize << scale;
+    let m = (n as f64 * avg_deg) as usize;
+    let d = 1.0 - a - b - c;
+    assert!(d >= 0.0, "quadrant probs must sum <= 1");
+    let mut rng = Rng::new(seed);
+    let mut edges = Vec::with_capacity(m * if undirected { 2 } else { 1 });
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for level in (0..scale).rev() {
+            let r = rng.f64();
+            let (du, dv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u |= du << level;
+            v |= dv << level;
+        }
+        if u != v {
+            edges.push((u as u32, v as u32));
+            if undirected {
+                edges.push((v as u32, u as u32));
+            }
+        }
+    }
+    edges.sort_unstable();
+    edges.dedup();
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Attach SBM-style labels/features to an arbitrary structural graph (used
+/// to make R-MAT graphs trainable): labels from hashing + light smoothing,
+/// features = class center + noise.
+pub fn attach_labels(graph: CsrGraph, k: usize, feat_dim: usize, seed: u64) -> LabelledGraph {
+    let n = graph.n;
+    let mut rng = Rng::new(seed ^ 0xABCD);
+    let mut labels: Vec<u32> = (0..n).map(|_| rng.index(k) as u32).collect();
+    // One round of majority smoothing so labels correlate with structure.
+    let mut counts = vec![0u32; k];
+    for v in 0..n {
+        for c in counts.iter_mut() {
+            *c = 0;
+        }
+        for &s in graph.in_neighbors(v) {
+            counts[labels[s as usize] as usize] += 1;
+        }
+        if let Some((best, &cnt)) = counts.iter().enumerate().max_by_key(|(_, &c)| c) {
+            if cnt > 0 {
+                labels[v] = best as u32;
+            }
+        }
+    }
+    let mut centers = vec![0f32; k * feat_dim];
+    for c in centers.iter_mut() {
+        *c = rng.normal() as f32 * 2.0 / (feat_dim as f32).sqrt();
+    }
+    let mut features = vec![0f32; n * feat_dim];
+    for v in 0..n {
+        let c = labels[v] as usize;
+        for j in 0..feat_dim {
+            features[v * feat_dim + j] = centers[c * feat_dim + j] + 0.5 * rng.normal() as f32;
+        }
+    }
+    let split = make_split(n, 0.5, 0.25, &mut rng);
+    LabelledGraph {
+        graph,
+        features,
+        feat_dim,
+        labels,
+        num_classes: k,
+        split,
+    }
+}
+
+/// Erdős–Rényi G(n, m): m distinct directed arcs.
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let mut set = std::collections::HashSet::with_capacity(m);
+    let cap = n.saturating_mul(n.saturating_sub(1));
+    let m = m.min(cap);
+    while set.len() < m {
+        let u = rng.index(n) as u32;
+        let v = rng.index(n) as u32;
+        if u != v {
+            set.insert((u, v));
+        }
+    }
+    let edges: Vec<(u32, u32)> = set.into_iter().collect();
+    CsrGraph::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sbm_valid_and_homophilous() {
+        let g = sbm(400, 4, 12.0, 0.85, 16, 0.5, 7);
+        g.validate().unwrap();
+        assert!(g.graph.m() > 400, "too few edges: {}", g.graph.m());
+        // Count intra-class arcs: should be clear majority.
+        let mut intra = 0usize;
+        for (s, d) in g.graph.edges() {
+            if g.labels[s as usize] == g.labels[d as usize] {
+                intra += 1;
+            }
+        }
+        let frac = intra as f64 / g.graph.m() as f64;
+        assert!(frac > 0.6, "homophily too low: {frac}");
+    }
+
+    #[test]
+    fn sbm_features_separate_classes() {
+        let g = sbm(300, 3, 10.0, 0.9, 8, 0.3, 11);
+        // Mean distance to own class center < to other centers (via class
+        // means recomputed from features).
+        let k = g.num_classes;
+        let f = g.feat_dim;
+        let mut means = vec![0f64; k * f];
+        let mut cnt = vec![0usize; k];
+        for v in 0..g.n() {
+            let c = g.labels[v] as usize;
+            cnt[c] += 1;
+            for j in 0..f {
+                means[c * f + j] += g.features[v * f + j] as f64;
+            }
+        }
+        for c in 0..k {
+            for j in 0..f {
+                means[c * f + j] /= cnt[c].max(1) as f64;
+            }
+        }
+        let mut own = 0f64;
+        let mut other = 0f64;
+        let mut n_other = 0usize;
+        for v in 0..g.n() {
+            let c = g.labels[v] as usize;
+            for cc in 0..k {
+                let d: f64 = (0..f)
+                    .map(|j| (g.features[v * f + j] as f64 - means[cc * f + j]).powi(2))
+                    .sum();
+                if cc == c {
+                    own += d;
+                } else {
+                    other += d;
+                    n_other += 1;
+                }
+            }
+        }
+        assert!(own / (g.n() as f64) < other / (n_other as f64));
+    }
+
+    #[test]
+    fn split_fractions() {
+        let g = sbm(1000, 4, 6.0, 0.8, 4, 0.5, 3);
+        let tr = g.count_split(SPLIT_TRAIN);
+        let va = g.count_split(SPLIT_VAL);
+        let te = g.count_split(SPLIT_TEST);
+        assert_eq!(tr + va + te, 1000);
+        assert!((tr as i64 - 500).abs() <= 1);
+        assert!((va as i64 - 250).abs() <= 1);
+    }
+
+    #[test]
+    fn rmat_skewed_degrees() {
+        let g = rmat(10, 8.0, 0.57, 0.19, 0.19, true, 5);
+        g.validate().unwrap();
+        let max_deg = (0..g.n).map(|v| g.in_degree(v)).max().unwrap();
+        let mean_deg = g.m() as f64 / g.n as f64;
+        assert!(
+            max_deg as f64 > 6.0 * mean_deg,
+            "R-MAT not skewed: max {max_deg} mean {mean_deg}"
+        );
+        // Symmetry.
+        for (s, d) in g.edges().iter().take(200) {
+            assert!(g.in_neighbors(*s as usize).contains(d));
+        }
+    }
+
+    #[test]
+    fn erdos_renyi_exact_m() {
+        let g = erdos_renyi(50, 300, 9);
+        g.validate().unwrap();
+        assert_eq!(g.m(), 300);
+    }
+
+    #[test]
+    fn attach_labels_correlates() {
+        let s = rmat(9, 6.0, 0.45, 0.22, 0.22, true, 13);
+        let g = attach_labels(s, 5, 8, 13);
+        g.validate().unwrap();
+        let mut intra = 0usize;
+        for (s, d) in g.graph.edges() {
+            if g.labels[s as usize] == g.labels[d as usize] {
+                intra += 1;
+            }
+        }
+        // Better than the 1/k = 20% chance level.
+        assert!(intra as f64 / g.graph.m() as f64 > 0.3);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = sbm(200, 3, 8.0, 0.8, 8, 0.4, 42);
+        let b = sbm(200, 3, 8.0, 0.8, 8, 0.4, 42);
+        assert_eq!(a.graph, b.graph);
+        assert_eq!(a.features, b.features);
+        let c = sbm(200, 3, 8.0, 0.8, 8, 0.4, 43);
+        assert_ne!(a.graph.edges(), c.graph.edges());
+    }
+}

@@ -1,0 +1,137 @@
+//! Graph IO: text edge lists (interoperability) and a compact binary CSR
+//! format (fast reload of generated datasets between bench runs).
+
+use super::CsrGraph;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Write `src dst` lines (CSR order). Lines starting with `#` or `%` are
+/// comments on read.
+pub fn write_edge_list(g: &CsrGraph, path: &Path) -> anyhow::Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "# supergcn edge list: n={} m={}", g.n, g.m())?;
+    for (s, d) in g.edges() {
+        writeln!(w, "{s} {d}")?;
+    }
+    Ok(())
+}
+
+/// Read an edge list; `n` is inferred as max id + 1 unless given.
+pub fn read_edge_list(path: &Path, n: Option<usize>) -> anyhow::Result<CsrGraph> {
+    let r = BufReader::new(std::fs::File::open(path)?);
+    let mut edges = Vec::new();
+    let mut max_id = 0u32;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let s: u32 = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing src", lineno + 1))?
+            .parse()?;
+        let d: u32 = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing dst", lineno + 1))?
+            .parse()?;
+        max_id = max_id.max(s).max(d);
+        edges.push((s, d));
+    }
+    let n = n.unwrap_or(if edges.is_empty() { 0 } else { max_id as usize + 1 });
+    Ok(CsrGraph::from_edges(n, &edges))
+}
+
+const MAGIC: &[u8; 8] = b"SGCNCSR1";
+
+/// Compact binary CSR dump.
+pub fn write_binary(g: &CsrGraph, path: &Path) -> anyhow::Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(g.n as u64).to_le_bytes())?;
+    w.write_all(&(g.m() as u64).to_le_bytes())?;
+    for &p in &g.row_ptr {
+        w.write_all(&(p as u64).to_le_bytes())?;
+    }
+    for &c in &g.col_idx {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+pub fn read_binary(path: &Path) -> anyhow::Result<CsrGraph> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad magic: not a supergcn CSR file");
+    let mut b8 = [0u8; 8];
+    r.read_exact(&mut b8)?;
+    let n = u64::from_le_bytes(b8) as usize;
+    r.read_exact(&mut b8)?;
+    let m = u64::from_le_bytes(b8) as usize;
+    let mut row_ptr = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        r.read_exact(&mut b8)?;
+        row_ptr.push(u64::from_le_bytes(b8) as usize);
+    }
+    let mut col_idx = Vec::with_capacity(m);
+    let mut b4 = [0u8; 4];
+    for _ in 0..m {
+        r.read_exact(&mut b4)?;
+        col_idx.push(u32::from_le_bytes(b4));
+    }
+    let g = CsrGraph { n, row_ptr, col_idx };
+    g.validate()?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::erdos_renyi;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("supergcn_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = erdos_renyi(40, 200, 1);
+        let p = tmp("el.txt");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = read_edge_list(&p, Some(40)).unwrap();
+        assert_eq!(g, g2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edge_list_infers_n_and_skips_comments() {
+        let p = tmp("el2.txt");
+        std::fs::write(&p, "# hi\n0 1\n% c\n2 3\n\n1 2\n").unwrap();
+        let g = read_edge_list(&p, None).unwrap();
+        assert_eq!(g.n, 4);
+        assert_eq!(g.m(), 3);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let g = erdos_renyi(100, 700, 2);
+        let p = tmp("g.bin");
+        write_binary(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        assert_eq!(g, g2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let p = tmp("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC........").unwrap();
+        assert!(read_binary(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

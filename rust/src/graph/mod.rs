@@ -1,0 +1,199 @@
+//! Graph substrate: CSR storage, builders, generators, IO and statistics.
+//!
+//! All graphs in SuperGCN are directed in storage; "undirected" datasets
+//! store both arcs. Node ids are `u32` (the largest graphs we instantiate
+//! on this testbed stay well below 2^32 nodes); edge offsets are `usize`.
+
+pub mod generate;
+pub mod io;
+pub mod stats;
+
+/// Compressed-sparse-row graph: for each node `v`, `row_ptr[v]..row_ptr[v+1]`
+/// indexes `col_idx` with the **in-neighbors** of `v` (aggregation pulls
+/// from sources into destinations, so CSR-by-destination is the layout the
+/// aggregation operators of §4 want).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrGraph {
+    pub n: usize,
+    pub row_ptr: Vec<usize>,
+    pub col_idx: Vec<u32>,
+}
+
+impl CsrGraph {
+    /// Build from an arc list `(src, dst)` — arcs aggregate src → dst.
+    /// Duplicate arcs are kept (multi-edges add weight, matching
+    /// index_add semantics).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Self {
+        let mut deg = vec![0usize; n];
+        for &(_, d) in edges {
+            deg[d as usize] += 1;
+        }
+        let mut row_ptr = vec![0usize; n + 1];
+        for v in 0..n {
+            row_ptr[v + 1] = row_ptr[v] + deg[v];
+        }
+        let mut cursor = row_ptr.clone();
+        let mut col_idx = vec![0u32; edges.len()];
+        for &(s, d) in edges {
+            let c = &mut cursor[d as usize];
+            col_idx[*c] = s;
+            *c += 1;
+        }
+        // Sort each row's sources for deterministic layouts (and better
+        // locality in the sequential-gather kernels).
+        for v in 0..n {
+            col_idx[row_ptr[v]..row_ptr[v + 1]].sort_unstable();
+        }
+        Self { n, row_ptr, col_idx }
+    }
+
+    /// Number of arcs.
+    pub fn m(&self) -> usize {
+        self.col_idx.len()
+    }
+
+    /// In-degree of `v`.
+    #[inline]
+    pub fn in_degree(&self, v: usize) -> usize {
+        self.row_ptr[v + 1] - self.row_ptr[v]
+    }
+
+    /// In-neighbors (sources) of `v`.
+    #[inline]
+    pub fn in_neighbors(&self, v: usize) -> &[u32] {
+        &self.col_idx[self.row_ptr[v]..self.row_ptr[v + 1]]
+    }
+
+    /// Out-degrees (computed; not stored).
+    pub fn out_degrees(&self) -> Vec<usize> {
+        let mut deg = vec![0usize; self.n];
+        for &s in &self.col_idx {
+            deg[s as usize] += 1;
+        }
+        deg
+    }
+
+    /// Flat arc list `(src, dst)` in CSR order.
+    pub fn edges(&self) -> Vec<(u32, u32)> {
+        let mut out = Vec::with_capacity(self.m());
+        for v in 0..self.n {
+            for &s in self.in_neighbors(v) {
+                out.push((s, v as u32));
+            }
+        }
+        out
+    }
+
+    /// The reverse graph (CSR over out-neighbors): needed by the backward
+    /// pass, where cotangents flow dst → src.
+    pub fn transpose(&self) -> CsrGraph {
+        let rev: Vec<(u32, u32)> = self.edges().iter().map(|&(s, d)| (d, s)).collect();
+        CsrGraph::from_edges(self.n, &rev)
+    }
+
+    /// Make the graph symmetric (add every reverse arc, dedup) — the paper
+    /// converts papers100M to undirected the same way.
+    pub fn to_undirected(&self) -> CsrGraph {
+        let mut es = self.edges();
+        es.extend(self.edges().iter().map(|&(s, d)| (d, s)));
+        es.sort_unstable();
+        es.dedup();
+        CsrGraph::from_edges(self.n, &es)
+    }
+
+    /// Validate structural invariants (used by property tests).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.row_ptr.len() == self.n + 1, "row_ptr length");
+        anyhow::ensure!(self.row_ptr[0] == 0, "row_ptr[0]");
+        anyhow::ensure!(*self.row_ptr.last().unwrap() == self.col_idx.len(), "row_ptr[-1]");
+        for v in 0..self.n {
+            anyhow::ensure!(self.row_ptr[v] <= self.row_ptr[v + 1], "row_ptr monotone at {v}");
+        }
+        for &s in &self.col_idx {
+            anyhow::ensure!((s as usize) < self.n, "col_idx {s} out of range (n={})", self.n);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{prop_assert, propcheck};
+
+    fn toy() -> CsrGraph {
+        // Arcs: 0->1, 0->2, 1->2, 2->0, 2->0 (multi-edge)
+        CsrGraph::from_edges(3, &[(0, 1), (0, 2), (1, 2), (2, 0), (2, 0)])
+    }
+
+    #[test]
+    fn csr_basbasics() {
+        let g = toy();
+        assert_eq!(g.n, 3);
+        assert_eq!(g.m(), 5);
+        assert_eq!(g.in_degree(0), 2); // two copies of 2->0
+        assert_eq!(g.in_neighbors(2), &[0, 1]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let g = toy();
+        let gt = g.transpose();
+        assert_eq!(gt.in_neighbors(0), &[1, 2]); // out-neighbors of 0 were {1,2}
+        let gtt = gt.transpose();
+        assert_eq!(g, gtt);
+    }
+
+    #[test]
+    fn out_degrees_match_edges() {
+        let g = toy();
+        let od = g.out_degrees();
+        assert_eq!(od, vec![2, 1, 2]);
+        assert_eq!(od.iter().sum::<usize>(), g.m());
+    }
+
+    #[test]
+    fn undirected_is_symmetric() {
+        let g = toy().to_undirected();
+        for (s, d) in g.edges() {
+            assert!(
+                g.in_neighbors(s as usize).contains(&d),
+                "missing reverse of ({s},{d})"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_csr_roundtrip_and_invariants() {
+        propcheck(48, |gen| {
+            let n = gen.usize(1, 64);
+            let m = gen.usize(0, 256);
+            let mut edges = gen.edges(n, m, true);
+            let g = CsrGraph::from_edges(n, &edges);
+            g.validate().map_err(|e| e.to_string())?;
+            prop_assert(g.m() == m, format!("edge count {} != {}", g.m(), m))?;
+            // Round-trip through edges(): same multiset of arcs.
+            let mut back = g.edges();
+            edges.sort_unstable();
+            back.sort_unstable();
+            prop_assert(edges == back, "edge multiset mismatch")
+        });
+    }
+
+    #[test]
+    fn prop_transpose_preserves_arcs() {
+        propcheck(32, |gen| {
+            let n = gen.usize(1, 40);
+            let m = gen.usize(0, 160);
+            let edges = gen.edges(n, m, true);
+            let g = CsrGraph::from_edges(n, &edges);
+            let mut fwd = g.edges();
+            let mut rev: Vec<(u32, u32)> =
+                g.transpose().edges().iter().map(|&(s, d)| (d, s)).collect();
+            fwd.sort_unstable();
+            rev.sort_unstable();
+            prop_assert(fwd == rev, "transpose lost arcs")
+        });
+    }
+}

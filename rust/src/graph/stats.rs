@@ -1,0 +1,111 @@
+//! Graph statistics: degree distribution summaries used by dataset
+//! catalogs, bench headers, and the FLOPS-based load balancer.
+
+use super::CsrGraph;
+
+#[derive(Clone, Debug)]
+pub struct GraphStats {
+    pub n: usize,
+    pub m: usize,
+    pub avg_in_degree: f64,
+    pub max_in_degree: usize,
+    pub p99_in_degree: usize,
+    pub median_in_degree: usize,
+    pub isolated: usize,
+    /// Gini coefficient of the in-degree distribution — the skew measure
+    /// we report next to R-MAT configs (power-law graphs ≫ ER graphs).
+    pub degree_gini: f64,
+}
+
+pub fn stats(g: &CsrGraph) -> GraphStats {
+    let mut degs: Vec<usize> = (0..g.n).map(|v| g.in_degree(v)).collect();
+    degs.sort_unstable();
+    let m = g.m();
+    let n = g.n.max(1);
+    let isolated = degs.iter().take_while(|&&d| d == 0).count();
+    let pct = |p: f64| -> usize {
+        if degs.is_empty() {
+            0
+        } else {
+            degs[((degs.len() - 1) as f64 * p) as usize]
+        }
+    };
+    // Gini = sum_i (2i - n + 1) x_i / (n * sum x)
+    let total: f64 = degs.iter().map(|&d| d as f64).sum();
+    let gini = if total > 0.0 {
+        let mut acc = 0.0;
+        for (i, &d) in degs.iter().enumerate() {
+            acc += (2.0 * i as f64 - n as f64 + 1.0) * d as f64;
+        }
+        acc / (n as f64 * total)
+    } else {
+        0.0
+    };
+    GraphStats {
+        n: g.n,
+        m,
+        avg_in_degree: m as f64 / n as f64,
+        max_in_degree: degs.last().copied().unwrap_or(0),
+        p99_in_degree: pct(0.99),
+        median_in_degree: pct(0.5),
+        isolated,
+        degree_gini: gini,
+    }
+}
+
+impl std::fmt::Display for GraphStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "n={} m={} avg_deg={:.2} max_deg={} p99={} median={} isolated={} gini={:.3}",
+            self.n,
+            self.m,
+            self.avg_in_degree,
+            self.max_in_degree,
+            self.p99_in_degree,
+            self.median_in_degree,
+            self.isolated,
+            self.degree_gini
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{erdos_renyi, rmat};
+
+    #[test]
+    fn stats_small_known() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (2, 1), (3, 1), (0, 2)]);
+        let s = stats(&g);
+        assert_eq!(s.n, 4);
+        assert_eq!(s.m, 4);
+        assert_eq!(s.max_in_degree, 3);
+        assert_eq!(s.isolated, 2); // nodes 0 and 3 have in-degree 0
+        assert!((s.avg_in_degree - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rmat_more_skewed_than_er() {
+        let er = erdos_renyi(1024, 8192, 3);
+        let rm = rmat(10, 8.0, 0.57, 0.19, 0.19, false, 3);
+        let s_er = stats(&er);
+        let s_rm = stats(&rm);
+        assert!(
+            s_rm.degree_gini > s_er.degree_gini + 0.1,
+            "rmat gini {} vs er gini {}",
+            s_rm.degree_gini,
+            s_er.degree_gini
+        );
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = CsrGraph::from_edges(0, &[]);
+        let s = stats(&g);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.m, 0);
+        assert_eq!(s.degree_gini, 0.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Connected components of the bipartite remote graph — Algorithm 1
+//! line 2 runs minimum vertex cover *per component*. Matchings and covers
+//! decompose over components, so whole-graph Hopcroft–Karp (what
+//! `prepost::split_pair` uses) computes the same optimum; this module
+//! provides the explicit per-component path, used (a) to mirror the
+//! paper's algorithm literally and (b) as a cross-check in tests.
+
+use super::hopcroft_karp::Bipartite;
+use super::vertex_cover::{minimum_vertex_cover, Cover};
+
+/// Component id per left and right vertex (isolated vertices get their
+/// own ids).
+#[derive(Clone, Debug)]
+pub struct Components {
+    pub comp_u: Vec<u32>,
+    pub comp_v: Vec<u32>,
+    pub n_components: usize,
+}
+
+/// Union-find based bipartite connected components.
+pub fn connected_components(g: &Bipartite) -> Components {
+    let n = g.nu + g.nv;
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize];
+            x = parent[x as usize];
+        }
+        x
+    }
+    for (u, vs) in g.adj.iter().enumerate() {
+        for &v in vs {
+            let a = find(&mut parent, u as u32);
+            let b = find(&mut parent, (g.nu + v as usize) as u32);
+            if a != b {
+                parent[a as usize] = b;
+            }
+        }
+    }
+    // Compact roots to dense component ids.
+    let mut id_of_root = std::collections::HashMap::new();
+    let mut comp = vec![0u32; n];
+    let mut next = 0u32;
+    for x in 0..n as u32 {
+        let r = find(&mut parent, x);
+        let id = *id_of_root.entry(r).or_insert_with(|| {
+            let i = next;
+            next += 1;
+            i
+        });
+        comp[x as usize] = id;
+    }
+    Components {
+        comp_u: comp[..g.nu].to_vec(),
+        comp_v: comp[g.nu..].to_vec(),
+        n_components: next as usize,
+    }
+}
+
+/// Per-component minimum vertex cover, merged back into a whole-graph
+/// cover (the literal Algorithm-1 lines 1–3).
+pub fn per_component_cover(g: &Bipartite) -> Cover {
+    let comps = connected_components(g);
+    let mut in_u = vec![false; g.nu];
+    let mut in_v = vec![false; g.nv];
+    for c in 0..comps.n_components {
+        // Extract the component's subgraph with compacted indices.
+        let us: Vec<usize> = (0..g.nu).filter(|&u| comps.comp_u[u] == c as u32).collect();
+        let vs: Vec<usize> = (0..g.nv).filter(|&v| comps.comp_v[v] == c as u32).collect();
+        if us.is_empty() || vs.is_empty() {
+            continue;
+        }
+        let vmap: std::collections::HashMap<usize, u32> =
+            vs.iter().enumerate().map(|(i, &v)| (v, i as u32)).collect();
+        let edges: Vec<(u32, u32)> = us
+            .iter()
+            .enumerate()
+            .flat_map(|(iu, &u)| {
+                g.adj[u]
+                    .iter()
+                    .map(move |&v| (iu as u32, v))
+                    .collect::<Vec<_>>()
+            })
+            .filter_map(|(iu, v)| vmap.get(&(v as usize)).map(|&iv| (iu, iv)))
+            .collect();
+        let sub = Bipartite::from_edges(us.len(), vs.len(), &edges);
+        let (cover, _) = minimum_vertex_cover(&sub);
+        for (iu, &u) in us.iter().enumerate() {
+            if cover.in_u[iu] {
+                in_u[u] = true;
+            }
+        }
+        for (iv, &v) in vs.iter().enumerate() {
+            if cover.in_v[iv] {
+                in_v[v] = true;
+            }
+        }
+    }
+    Cover { in_u, in_v }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{prop_assert, propcheck};
+
+    #[test]
+    fn components_of_disjoint_stars() {
+        // Star A: u0-{v0,v1}; star B: u1-{v2}; isolated u2, v3.
+        let g = Bipartite::from_edges(3, 4, &[(0, 0), (0, 1), (1, 2)]);
+        let c = connected_components(&g);
+        assert_eq!(c.comp_u[0], c.comp_v[0]);
+        assert_eq!(c.comp_u[0], c.comp_v[1]);
+        assert_eq!(c.comp_u[1], c.comp_v[2]);
+        assert_ne!(c.comp_u[0], c.comp_u[1]);
+        // isolated vertices get their own components
+        assert_eq!(c.n_components, 4);
+    }
+
+    #[test]
+    fn per_component_cover_is_valid_and_minimal() {
+        let g = Bipartite::from_edges(
+            5,
+            5,
+            &[(0, 0), (0, 1), (1, 1), (2, 2), (3, 3), (4, 3), (4, 4)],
+        );
+        let c = per_component_cover(&g);
+        assert!(c.is_cover(&g));
+        let (whole, m) = minimum_vertex_cover(&g);
+        assert_eq!(c.size(), whole.size());
+        assert_eq!(c.size(), m.size());
+    }
+
+    #[test]
+    fn prop_per_component_equals_whole_graph_optimum() {
+        // Matchings/covers decompose over components: both paths must
+        // yield the same size (the optimum), and both must be covers.
+        propcheck(40, |gen| {
+            let nu = gen.usize(1, 25);
+            let nv = gen.usize(1, 25);
+            let ne = gen.usize(0, 60);
+            let edges: Vec<(u32, u32)> = (0..ne)
+                .map(|_| (gen.rng.index(nu) as u32, gen.rng.index(nv) as u32))
+                .collect();
+            let g = Bipartite::from_edges(nu, nv, &edges);
+            let per_comp = per_component_cover(&g);
+            let (whole, _) = minimum_vertex_cover(&g);
+            prop_assert(per_comp.is_cover(&g), "per-component result not a cover")?;
+            prop_assert(
+                per_comp.size() == whole.size(),
+                format!("sizes differ: per-comp {} vs whole {}", per_comp.size(), whole.size()),
+            )
+        });
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Bipartite::from_edges(3, 2, &[]);
+        let c = connected_components(&g);
+        assert_eq!(c.n_components, 5);
+        let cover = per_component_cover(&g);
+        assert_eq!(cover.size(), 0);
+    }
+}

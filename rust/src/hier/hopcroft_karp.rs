@@ -1,0 +1,264 @@
+//! Hopcroft–Karp maximum bipartite matching, O(E·√V) (paper §5.3 cites
+//! [27]). Operates on a bipartite graph given as adjacency of the left
+//! side U over right-side indices V.
+
+/// Bipartite graph in left-adjacency form.
+#[derive(Clone, Debug)]
+pub struct Bipartite {
+    pub nu: usize,
+    pub nv: usize,
+    /// adj[u] = right-neighbors of left vertex u.
+    pub adj: Vec<Vec<u32>>,
+}
+
+impl Bipartite {
+    pub fn from_edges(nu: usize, nv: usize, edges: &[(u32, u32)]) -> Self {
+        let mut adj = vec![Vec::new(); nu];
+        for &(u, v) in edges {
+            debug_assert!((u as usize) < nu && (v as usize) < nv);
+            adj[u as usize].push(v);
+        }
+        for a in &mut adj {
+            a.sort_unstable();
+            a.dedup();
+        }
+        Self { nu, nv, adj }
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adj.iter().map(|a| a.len()).sum()
+    }
+}
+
+/// Result of maximum matching: `match_u[u] = Some(v)` and vice versa.
+#[derive(Clone, Debug)]
+pub struct Matching {
+    pub match_u: Vec<Option<u32>>,
+    pub match_v: Vec<Option<u32>>,
+}
+
+impl Matching {
+    pub fn size(&self) -> usize {
+        self.match_u.iter().filter(|m| m.is_some()).count()
+    }
+
+    /// Validate: consistent, edges exist.
+    pub fn validate(&self, g: &Bipartite) -> anyhow::Result<()> {
+        for (u, m) in self.match_u.iter().enumerate() {
+            if let Some(v) = m {
+                anyhow::ensure!(
+                    g.adj[u].binary_search(v).is_ok(),
+                    "matched non-edge ({u},{v})"
+                );
+                anyhow::ensure!(
+                    self.match_v[*v as usize] == Some(u as u32),
+                    "inconsistent match at u={u}"
+                );
+            }
+        }
+        for (v, m) in self.match_v.iter().enumerate() {
+            if let Some(u) = m {
+                anyhow::ensure!(
+                    self.match_u[*u as usize] == Some(v as u32),
+                    "inconsistent match at v={v}"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+const INF: u32 = u32::MAX;
+
+/// Hopcroft–Karp: repeated BFS layering + DFS augmentation along shortest
+/// augmenting paths.
+pub fn max_matching(g: &Bipartite) -> Matching {
+    let nu = g.nu;
+    let mut match_u: Vec<Option<u32>> = vec![None; nu];
+    let mut match_v: Vec<Option<u32>> = vec![None; g.nv];
+    let mut dist = vec![INF; nu];
+    let mut queue = std::collections::VecDeque::new();
+
+    loop {
+        // BFS from all free U vertices.
+        queue.clear();
+        let mut found_free_v = false;
+        for u in 0..nu {
+            if match_u[u].is_none() {
+                dist[u] = 0;
+                queue.push_back(u as u32);
+            } else {
+                dist[u] = INF;
+            }
+        }
+        let mut layer_limit = INF;
+        while let Some(u) = queue.pop_front() {
+            if dist[u as usize] >= layer_limit {
+                continue;
+            }
+            for &v in &g.adj[u as usize] {
+                match match_v[v as usize] {
+                    None => {
+                        // Found a shortest augmenting layer.
+                        if layer_limit == INF {
+                            layer_limit = dist[u as usize] + 1;
+                        }
+                        found_free_v = true;
+                    }
+                    Some(u2) => {
+                        if dist[u2 as usize] == INF {
+                            dist[u2 as usize] = dist[u as usize] + 1;
+                            queue.push_back(u2);
+                        }
+                    }
+                }
+            }
+        }
+        if !found_free_v {
+            break;
+        }
+        // DFS augmentation.
+        fn dfs(
+            u: usize,
+            g: &Bipartite,
+            dist: &mut [u32],
+            match_u: &mut [Option<u32>],
+            match_v: &mut [Option<u32>],
+        ) -> bool {
+            for i in 0..g.adj[u].len() {
+                let v = g.adj[u][i] as usize;
+                let ok = match match_v[v] {
+                    None => true,
+                    Some(u2) => {
+                        dist[u2 as usize] == dist[u] + 1
+                            && dfs(u2 as usize, g, dist, match_u, match_v)
+                    }
+                };
+                if ok {
+                    match_u[u] = Some(v as u32);
+                    match_v[v] = Some(u as u32);
+                    return true;
+                }
+            }
+            dist[u] = INF;
+            false
+        }
+        for u in 0..nu {
+            if match_u[u].is_none() {
+                dfs(u, g, &mut dist, &mut match_u, &mut match_v);
+            }
+        }
+    }
+    Matching { match_u, match_v }
+}
+
+/// Brute-force maximum matching size by recursion (test oracle; exponential,
+/// only for tiny graphs).
+#[cfg(test)]
+pub fn brute_force_matching_size(g: &Bipartite) -> usize {
+    fn go(u: usize, g: &Bipartite, used_v: &mut Vec<bool>) -> usize {
+        if u == g.nu {
+            return 0;
+        }
+        // Skip u.
+        let mut best = go(u + 1, g, used_v);
+        for &v in &g.adj[u] {
+            if !used_v[v as usize] {
+                used_v[v as usize] = true;
+                best = best.max(1 + go(u + 1, g, used_v));
+                used_v[v as usize] = false;
+            }
+        }
+        best
+    }
+    go(0, g, &mut vec![false; g.nv])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{prop_assert, propcheck};
+
+    #[test]
+    fn figure4_matching_size_two() {
+        // Paper Fig 4/5: U = {4,5,6} (srcs), V = {1,2,3} (dsts) with edges
+        // 4-1, 4-2, 4-3, 5-2, 6-2. Max matching = 2 (e.g. 4-1, 5-2).
+        let g = Bipartite::from_edges(
+            3,
+            3,
+            &[(0, 0), (0, 1), (0, 2), (1, 1), (2, 1)], // u: 4,5,6 → v: 1,2,3
+        );
+        let m = max_matching(&g);
+        m.validate(&g).unwrap();
+        assert_eq!(m.size(), 2);
+    }
+
+    #[test]
+    fn perfect_matching_on_cycle() {
+        // Even cycle as bipartite: u_i — v_i and u_i — v_{i+1}.
+        let n = 6;
+        let mut edges = Vec::new();
+        for i in 0..n as u32 {
+            edges.push((i, i));
+            edges.push((i, (i + 1) % n as u32));
+        }
+        let g = Bipartite::from_edges(n, n, &edges);
+        let m = max_matching(&g);
+        m.validate(&g).unwrap();
+        assert_eq!(m.size(), n);
+    }
+
+    #[test]
+    fn empty_and_degenerate() {
+        let g = Bipartite::from_edges(0, 0, &[]);
+        assert_eq!(max_matching(&g).size(), 0);
+        let g = Bipartite::from_edges(3, 2, &[]);
+        assert_eq!(max_matching(&g).size(), 0);
+        let g = Bipartite::from_edges(1, 1, &[(0, 0)]);
+        assert_eq!(max_matching(&g).size(), 1);
+    }
+
+    #[test]
+    fn star_graph_matches_one() {
+        let g = Bipartite::from_edges(1, 5, &[(0, 0), (0, 1), (0, 2), (0, 3), (0, 4)]);
+        assert_eq!(max_matching(&g).size(), 1);
+        let g2 = Bipartite::from_edges(5, 1, &[(0, 0), (1, 0), (2, 0), (3, 0), (4, 0)]);
+        assert_eq!(max_matching(&g2).size(), 1);
+    }
+
+    #[test]
+    fn prop_matches_brute_force() {
+        propcheck(60, |gen| {
+            let nu = gen.usize(1, 7);
+            let nv = gen.usize(1, 7);
+            let ne = gen.usize(0, 14);
+            let edges: Vec<(u32, u32)> = (0..ne)
+                .map(|_| (gen.rng.index(nu) as u32, gen.rng.index(nv) as u32))
+                .collect();
+            let g = Bipartite::from_edges(nu, nv, &edges);
+            let m = max_matching(&g);
+            m.validate(&g).map_err(|e| e.to_string())?;
+            let bf = brute_force_matching_size(&g);
+            prop_assert(
+                m.size() == bf,
+                format!("HK {} != brute force {} on {edges:?}", m.size(), bf),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_matching_valid_on_larger_graphs() {
+        propcheck(24, |gen| {
+            let nu = gen.usize(1, 80);
+            let nv = gen.usize(1, 80);
+            let ne = gen.usize(0, 400);
+            let edges: Vec<(u32, u32)> = (0..ne)
+                .map(|_| (gen.rng.index(nu) as u32, gen.rng.index(nv) as u32))
+                .collect();
+            let g = Bipartite::from_edges(nu, nv, &edges);
+            let m = max_matching(&g);
+            m.validate(&g).map_err(|e| e.to_string())?;
+            prop_assert(m.size() <= nu.min(nv), "matching too large")
+        });
+    }
+}

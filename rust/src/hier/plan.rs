@@ -1,0 +1,396 @@
+//! Halo-exchange plans: the preprocessing output consumed by the trainer
+//! (paper Fig. 2 steps 1–2: partition, split into local / pre- / post-
+//! aggregation graphs, exchange the pre-aggregation graph between workers).
+//!
+//! All node indices inside a plan are **local** to their owning worker;
+//! the plan is the only place global ids are translated.
+
+use super::prepost::{split_pair, PrePostSplit};
+use super::volume::RemoteStrategy;
+use super::{remote_pairs, RemotePair};
+use crate::graph::CsrGraph;
+use crate::partition::Partition;
+
+/// What worker `w` sends to one peer each layer.
+#[derive(Clone, Debug, Default)]
+pub struct SendPlan {
+    pub peer: usize,
+    /// Pre-aggregation segment-sum spec over *local* node indices:
+    /// `partial[pre_seg[i]] += H[pre_gather[i]]`.
+    pub pre_gather: Vec<u32>,
+    pub pre_seg: Vec<u32>,
+    pub n_pre_segments: usize,
+    /// Raw rows shipped for post-aggregation: local node index per row.
+    pub post_rows: Vec<u32>,
+}
+
+impl SendPlan {
+    /// Feature rows on the wire.
+    pub fn rows(&self) -> usize {
+        self.n_pre_segments + self.post_rows.len()
+    }
+}
+
+/// What worker `w` receives from one peer each layer.
+#[derive(Clone, Debug, Default)]
+pub struct RecvPlan {
+    pub peer: usize,
+    /// Received partial `i` scatter-adds into local dst `pre_dst[i]`.
+    pub pre_dst: Vec<u32>,
+    /// Number of raw post rows received.
+    pub n_post_rows: usize,
+    /// Post aggregation edges: (received row index, local dst index).
+    pub post_edges: Vec<(u32, u32)>,
+}
+
+impl RecvPlan {
+    pub fn rows(&self) -> usize {
+        self.pre_dst.len() + self.n_post_rows
+    }
+}
+
+/// Everything one worker needs for training.
+#[derive(Clone, Debug)]
+pub struct WorkerPlan {
+    pub worker: usize,
+    /// Global ids of the nodes this worker owns (ascending). Local index
+    /// `i` ↔ global id `local_nodes[i]`.
+    pub local_nodes: Vec<u32>,
+    /// Aggregation arcs with both endpoints local: (src_local, dst_local),
+    /// sorted by dst (the §4 "clustering and sorting" step happens here,
+    /// once, at preprocessing time).
+    pub local_edges: Vec<(u32, u32)>,
+    /// Full in-degree of each local node in the *global* graph (mean
+    /// aggregation must divide by the true neighborhood size).
+    pub degrees: Vec<u32>,
+    pub sends: Vec<SendPlan>,
+    pub recvs: Vec<RecvPlan>,
+}
+
+impl WorkerPlan {
+    pub fn n_local(&self) -> usize {
+        self.local_nodes.len()
+    }
+
+    /// Rows sent per layer (all peers).
+    pub fn send_rows(&self) -> usize {
+        self.sends.iter().map(|s| s.rows()).sum()
+    }
+
+    /// Rows received per layer (all peers).
+    pub fn recv_rows(&self) -> usize {
+        self.recvs.iter().map(|r| r.rows()).sum()
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let n = self.n_local();
+        for &(s, d) in &self.local_edges {
+            anyhow::ensure!((s as usize) < n && (d as usize) < n, "local edge oob");
+        }
+        anyhow::ensure!(self.degrees.len() == n, "degrees length");
+        for sp in &self.sends {
+            anyhow::ensure!(sp.pre_gather.len() == sp.pre_seg.len(), "pre spec length");
+            anyhow::ensure!(
+                sp.pre_gather.iter().all(|&i| (i as usize) < n),
+                "pre_gather oob"
+            );
+            anyhow::ensure!(
+                sp.pre_seg.iter().all(|&s| (s as usize) < sp.n_pre_segments),
+                "pre_seg oob"
+            );
+            // Every segment id must be used at least once.
+            let mut used = vec![false; sp.n_pre_segments];
+            for &s in &sp.pre_seg {
+                used[s as usize] = true;
+            }
+            anyhow::ensure!(used.iter().all(|&u| u), "empty pre segment");
+            anyhow::ensure!(sp.post_rows.iter().all(|&i| (i as usize) < n), "post_rows oob");
+        }
+        for rp in &self.recvs {
+            anyhow::ensure!(rp.pre_dst.iter().all(|&d| (d as usize) < n), "pre_dst oob");
+            for &(r, d) in &rp.post_edges {
+                anyhow::ensure!((r as usize) < rp.n_post_rows, "post edge row oob");
+                anyhow::ensure!((d as usize) < n, "post edge dst oob");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Build a split for a pair under any strategy, reusing the pre/post
+/// containers (Raw is expressed as post with per-edge duplicate rows).
+fn strategy_split(pair: &RemotePair, strategy: RemoteStrategy) -> PrePostSplit {
+    match strategy {
+        RemoteStrategy::Hybrid => split_pair(pair),
+        RemoteStrategy::PreOnly => {
+            let mut map: std::collections::BTreeMap<u32, Vec<u32>> = Default::default();
+            for &(s, d) in &pair.edges {
+                map.entry(d).or_default().push(s);
+            }
+            PrePostSplit {
+                pre_groups: map
+                    .into_iter()
+                    .map(|(d, mut ss)| {
+                        ss.sort_unstable();
+                        (d, ss)
+                    })
+                    .collect(),
+                post_srcs: vec![],
+                post_edges: vec![],
+            }
+        }
+        RemoteStrategy::PostOnly => {
+            let mut post_edges = pair.edges.clone();
+            post_edges.sort_unstable();
+            let mut post_srcs: Vec<u32> = post_edges.iter().map(|e| e.0).collect();
+            post_srcs.sort_unstable();
+            post_srcs.dedup();
+            PrePostSplit {
+                pre_groups: vec![],
+                post_srcs,
+                post_edges,
+            }
+        }
+        RemoteStrategy::Raw => {
+            // One row per edge: duplicates allowed in post_srcs; the recv
+            // side maps row i → edge i's dst.
+            let post_edges = pair.edges.clone();
+            let post_srcs = post_edges.iter().map(|e| e.0).collect();
+            PrePostSplit {
+                pre_groups: vec![],
+                post_srcs,
+                post_edges,
+            }
+        }
+    }
+}
+
+/// Build all worker plans for `(graph, partition)` under `strategy`.
+pub fn build_plans(g: &CsrGraph, part: &Partition, strategy: RemoteStrategy) -> Vec<WorkerPlan> {
+    let k = part.k;
+    let nodes = part.part_nodes();
+    // global → local index maps.
+    let mut g2l = vec![u32::MAX; g.n];
+    for p in 0..k {
+        for (i, &v) in nodes[p].iter().enumerate() {
+            g2l[v as usize] = i as u32;
+        }
+    }
+    let mut plans: Vec<WorkerPlan> = (0..k)
+        .map(|w| WorkerPlan {
+            worker: w,
+            local_nodes: nodes[w].clone(),
+            local_edges: Vec::new(),
+            degrees: nodes[w].iter().map(|&v| g.in_degree(v as usize) as u32).collect(),
+            sends: (0..k).map(|peer| SendPlan { peer, ..Default::default() }).collect(),
+            recvs: (0..k).map(|peer| RecvPlan { peer, ..Default::default() }).collect(),
+        })
+        .collect();
+
+    // Local edges, sorted by destination (clustering for §4 operators).
+    for d in 0..g.n {
+        let pd = part.assign[d] as usize;
+        for &s in g.in_neighbors(d) {
+            if part.assign[s as usize] as usize == pd {
+                plans[pd].local_edges.push((g2l[s as usize], g2l[d]));
+            }
+        }
+    }
+    for plan in &mut plans {
+        plan.local_edges.sort_unstable_by_key(|&(s, d)| (d, s));
+    }
+
+    // Remote pairs → send/recv plans.
+    for pair in remote_pairs(g, part) {
+        let split = strategy_split(&pair, strategy);
+        let p = pair.producer;
+        let c = pair.consumer;
+        // Producer send plan.
+        {
+            let sp = &mut plans[p].sends[c];
+            for (seg, (_d, srcs)) in split.pre_groups.iter().enumerate() {
+                for &s in srcs {
+                    sp.pre_gather.push(g2l[s as usize]);
+                    sp.pre_seg.push(seg as u32);
+                }
+            }
+            sp.n_pre_segments = split.pre_groups.len();
+            sp.post_rows = split.post_srcs.iter().map(|&s| g2l[s as usize]).collect();
+        }
+        // Consumer recv plan.
+        {
+            let rp = &mut plans[c].recvs[p];
+            rp.pre_dst = split.pre_groups.iter().map(|(d, _)| g2l[*d as usize]).collect();
+            rp.n_post_rows = split.post_srcs.len();
+            // Map each post edge's src to its row index in post_srcs.
+            rp.post_edges = split
+                .post_edges
+                .iter()
+                .map(|&(s, d)| {
+                    let row = if strategy == RemoteStrategy::Raw {
+                        // raw: row i == edge i (post_srcs has duplicates)
+                        split.post_edges.iter().position(|e| *e == (s, d)).unwrap() as u32
+                    } else {
+                        split.post_srcs.binary_search(&s).unwrap() as u32
+                    };
+                    (row, g2l[d as usize])
+                })
+                .collect();
+        }
+    }
+    plans
+}
+
+/// Global sanity: sends and recvs agree pairwise; every cut arc is realized
+/// exactly once across local edges, pre groups, and post edges.
+pub fn validate_plans(g: &CsrGraph, part: &Partition, plans: &[WorkerPlan]) -> anyhow::Result<()> {
+    let k = part.k;
+    anyhow::ensure!(plans.len() == k, "plan count");
+    for w in 0..k {
+        plans[w].validate()?;
+        for peer in 0..k {
+            let sp = &plans[w].sends[peer];
+            let rp = &plans[peer].recvs[w];
+            anyhow::ensure!(
+                sp.n_pre_segments == rp.pre_dst.len(),
+                "pre segment count mismatch {w}→{peer}"
+            );
+            anyhow::ensure!(
+                sp.post_rows.len() == rp.n_post_rows,
+                "post row count mismatch {w}→{peer}"
+            );
+        }
+    }
+    // Edge conservation: count aggregation contributions per destination.
+    // Every global arc must contribute exactly once to its dst.
+    let mut contrib = vec![0usize; g.n];
+    for plan in plans {
+        for &(_, d) in &plan.local_edges {
+            contrib[plan.local_nodes[d as usize] as usize] += 1;
+        }
+        for rp in &plan.recvs {
+            for &(_row, d) in &rp.post_edges {
+                contrib[plan.local_nodes[d as usize] as usize] += 1;
+            }
+        }
+        // Pre partials: each segment carries the producer's srcs for that dst.
+        for sp in &plan.sends {
+            let rp = &plans[sp.peer].recvs[plan.worker];
+            let mut seg_count = vec![0usize; sp.n_pre_segments];
+            for &s in &sp.pre_seg {
+                seg_count[s as usize] += 1;
+            }
+            for (seg, &cnt) in seg_count.iter().enumerate() {
+                let d_local = rp.pre_dst[seg];
+                contrib[plans[sp.peer].local_nodes[d_local as usize] as usize] += cnt;
+            }
+        }
+    }
+    for v in 0..g.n {
+        // Dedup'd arcs: remote multi-arcs were collapsed, local kept.
+        let mut ins: Vec<u32> = g.in_neighbors(v).to_vec();
+        let pd = part.assign[v];
+        let local: usize = ins.iter().filter(|&&s| part.assign[s as usize] == pd).count();
+        ins.retain(|&s| part.assign[s as usize] != pd);
+        ins.sort_unstable();
+        ins.dedup();
+        let expect = local + ins.len();
+        anyhow::ensure!(
+            contrib[v] == expect,
+            "node {v}: {} contributions, expected {}",
+            contrib[v],
+            expect
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{rmat, sbm};
+    use crate::partition::{multilevel::multilevel, multilevel::MultilevelOpts, random, vertex_weights};
+    use crate::util::propcheck::propcheck;
+
+    fn check_all_strategies(g: &CsrGraph, part: &Partition) {
+        for strategy in [
+            RemoteStrategy::PreOnly,
+            RemoteStrategy::PostOnly,
+            RemoteStrategy::Hybrid,
+            RemoteStrategy::Raw,
+        ] {
+            let plans = build_plans(g, part, strategy);
+            validate_plans(g, part, &plans)
+                .unwrap_or_else(|e| panic!("{}: {e}", strategy.name()));
+        }
+    }
+
+    #[test]
+    fn plans_validate_on_sbm() {
+        let lg = sbm(600, 4, 8.0, 0.85, 4, 0.5, 17);
+        let w = vertex_weights(&lg.graph, None, 0);
+        let part = multilevel(&lg.graph, 4, &w, &MultilevelOpts::default());
+        check_all_strategies(&lg.graph, &part);
+    }
+
+    #[test]
+    fn plans_validate_on_powerlaw_random_partition() {
+        let g = rmat(9, 6.0, 0.57, 0.19, 0.19, true, 5);
+        let part = random(g.n, 3, 11);
+        check_all_strategies(&g, &part);
+    }
+
+    #[test]
+    fn hybrid_send_rows_match_volume_report() {
+        let g = rmat(10, 8.0, 0.57, 0.19, 0.19, true, 7);
+        let part = random(g.n, 4, 3);
+        let plans = build_plans(&g, &part, RemoteStrategy::Hybrid);
+        let pairs = remote_pairs(&g, &part);
+        let vol = super::super::volume::volume(4, &pairs, RemoteStrategy::Hybrid);
+        let plan_total: usize = plans.iter().map(|p| p.send_rows()).sum();
+        assert_eq!(plan_total, vol.total_rows());
+        // send rows == recv rows globally
+        let recv_total: usize = plans.iter().map(|p| p.recv_rows()).sum();
+        assert_eq!(plan_total, recv_total);
+    }
+
+    #[test]
+    fn prop_plans_validate_under_random_partitions() {
+        propcheck(16, |gen| {
+            let n = gen.usize(8, 150);
+            let m = gen.usize(n, 600);
+            let edges = gen.edges(n, m, false);
+            let g = CsrGraph::from_edges(n, &edges);
+            let k = gen.usize(2, 5);
+            let part = random(n, k, gen.u64(0, 1 << 32));
+            for strategy in [RemoteStrategy::PreOnly, RemoteStrategy::PostOnly, RemoteStrategy::Hybrid] {
+                let plans = build_plans(&g, &part, strategy);
+                validate_plans(&g, &part, &plans).map_err(|e| format!("{}: {e}", strategy.name()))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_worker_plan_has_no_comm() {
+        let g = rmat(8, 4.0, 0.5, 0.2, 0.2, true, 1);
+        let part = Partition { k: 1, assign: vec![0; g.n] };
+        let plans = build_plans(&g, &part, RemoteStrategy::Hybrid);
+        assert_eq!(plans.len(), 1);
+        assert_eq!(plans[0].send_rows(), 0);
+        assert_eq!(plans[0].local_edges.len(), g.m());
+        validate_plans(&g, &part, &plans).unwrap();
+    }
+
+    #[test]
+    fn local_edges_sorted_by_dst() {
+        let lg = sbm(200, 2, 6.0, 0.8, 4, 0.5, 9);
+        let part = random(lg.graph.n, 2, 5);
+        let plans = build_plans(&lg.graph, &part, RemoteStrategy::Hybrid);
+        for p in &plans {
+            for w in p.local_edges.windows(2) {
+                assert!(w[0].1 <= w[1].1, "local edges not clustered by dst");
+            }
+        }
+    }
+}

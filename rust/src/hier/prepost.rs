@@ -1,0 +1,220 @@
+//! Algorithm 1 of the paper: transform a remote graph into a hybrid of
+//! pre-aggregation and post-aggregation graphs using the minimum vertex
+//! cover of its bipartite form.
+//!
+//! * edge whose **src is in the cover** → `post` (ship the raw src row
+//!   once; it covers all its cut edges, aggregation happens at the
+//!   consumer),
+//! * otherwise its **dst is in the cover** → `pre` (aggregate at the
+//!   producer into one partial per dst, ship the partial).
+
+use super::hopcroft_karp::Bipartite;
+use super::vertex_cover::minimum_vertex_cover;
+use super::RemotePair;
+
+/// The hybrid split of one remote pair's cut edges.
+#[derive(Clone, Debug)]
+pub struct PrePostSplit {
+    /// Edges aggregated at the producer before transfer, grouped by dst:
+    /// `pre_groups[i] = (global dst, global srcs)`, srcs sorted.
+    pub pre_groups: Vec<(u32, Vec<u32>)>,
+    /// Distinct raw src rows shipped for consumer-side aggregation, sorted.
+    pub post_srcs: Vec<u32>,
+    /// Post edges (global src, global dst), sorted.
+    pub post_edges: Vec<(u32, u32)>,
+}
+
+impl PrePostSplit {
+    /// Number of feature rows this split transfers (the comm volume in
+    /// units of node features): one partial per pre group + one raw row
+    /// per post src.
+    pub fn transfer_rows(&self) -> usize {
+        self.pre_groups.len() + self.post_srcs.len()
+    }
+}
+
+/// Apply Algorithm 1 to one remote pair.
+pub fn split_pair(pair: &RemotePair) -> PrePostSplit {
+    // Compact global ids to bipartite indices.
+    let mut srcs: Vec<u32> = pair.edges.iter().map(|e| e.0).collect();
+    srcs.sort_unstable();
+    srcs.dedup();
+    let mut dsts: Vec<u32> = pair.edges.iter().map(|e| e.1).collect();
+    dsts.sort_unstable();
+    dsts.dedup();
+    let src_idx = |s: u32| srcs.binary_search(&s).unwrap() as u32;
+    let dst_idx = |d: u32| dsts.binary_search(&d).unwrap() as u32;
+
+    let bedges: Vec<(u32, u32)> = pair
+        .edges
+        .iter()
+        .map(|&(s, d)| (src_idx(s), dst_idx(d)))
+        .collect();
+    let bg = Bipartite::from_edges(srcs.len(), dsts.len(), &bedges);
+    // (Connected components are implicit: Hopcroft–Karp over the whole
+    // bipartite graph computes the same optimum as per-component MVC,
+    // since matchings/covers decompose over components.)
+    let (cover, _) = minimum_vertex_cover(&bg);
+
+    let mut post_edges: Vec<(u32, u32)> = Vec::new();
+    let mut pre_map: std::collections::BTreeMap<u32, Vec<u32>> = std::collections::BTreeMap::new();
+    for &(s, d) in &pair.edges {
+        if cover.in_u[src_idx(s) as usize] {
+            post_edges.push((s, d));
+        } else {
+            debug_assert!(
+                cover.in_v[dst_idx(d) as usize],
+                "MVC must cover every edge"
+            );
+            pre_map.entry(d).or_default().push(s);
+        }
+    }
+    post_edges.sort_unstable();
+    let mut post_srcs: Vec<u32> = post_edges.iter().map(|e| e.0).collect();
+    post_srcs.sort_unstable();
+    post_srcs.dedup();
+    let pre_groups: Vec<(u32, Vec<u32>)> = pre_map
+        .into_iter()
+        .map(|(d, mut ss)| {
+            ss.sort_unstable();
+            (d, ss)
+        })
+        .collect();
+    PrePostSplit {
+        pre_groups,
+        post_srcs,
+        post_edges,
+    }
+}
+
+/// Verify the split covers the pair's edges exactly once (test/debug aid).
+pub fn validate_split(pair: &RemotePair, split: &PrePostSplit) -> anyhow::Result<()> {
+    let mut covered: Vec<(u32, u32)> = split.post_edges.clone();
+    for (d, ss) in &split.pre_groups {
+        for &s in ss {
+            covered.push((s, *d));
+        }
+    }
+    covered.sort_unstable();
+    let mut expect = pair.edges.clone();
+    expect.sort_unstable();
+    anyhow::ensure!(covered == expect, "split does not partition the remote edges");
+    // post_srcs must be exactly the distinct srcs of post_edges.
+    let mut ps: Vec<u32> = split.post_edges.iter().map(|e| e.0).collect();
+    ps.sort_unstable();
+    ps.dedup();
+    anyhow::ensure!(ps == split.post_srcs, "post_srcs inconsistent");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{prop_assert, propcheck};
+
+    fn fig4_pair() -> RemotePair {
+        RemotePair {
+            producer: 1,
+            consumer: 0,
+            edges: vec![(4, 1), (4, 2), (4, 3), (5, 2), (6, 2)],
+        }
+    }
+
+    #[test]
+    fn figure4_hybrid_volume_is_two() {
+        // Paper Fig 4(d): cover {4 (src), 2 (dst)} → post = node 4 raw,
+        // pre = partial for dst 2 (from srcs 5,6). Volume = 2.
+        let pair = fig4_pair();
+        let split = split_pair(&pair);
+        validate_split(&pair, &split).unwrap();
+        assert_eq!(split.transfer_rows(), 2);
+        assert_eq!(split.post_srcs, vec![4]);
+        assert_eq!(split.post_edges, vec![(4, 1), (4, 2), (4, 3)]);
+        assert_eq!(split.pre_groups, vec![(2, vec![5, 6])]);
+    }
+
+    #[test]
+    fn hybrid_beats_pre_and_post_on_fig4() {
+        let pair = fig4_pair();
+        let split = split_pair(&pair);
+        let pre_only = pair.distinct_dsts(); // 3
+        let post_only = pair.distinct_srcs(); // 3
+        assert!(split.transfer_rows() < pre_only);
+        assert!(split.transfer_rows() < post_only);
+    }
+
+    #[test]
+    fn prop_hybrid_never_worse_and_partitions_edges() {
+        propcheck(48, |gen| {
+            let ns = gen.usize(1, 30);
+            let nd = gen.usize(1, 30);
+            let ne = gen.usize(1, 120);
+            // Globals: srcs 1000.., dsts 0..
+            let edges: Vec<(u32, u32)> = (0..ne)
+                .map(|_| (1000 + gen.rng.index(ns) as u32, gen.rng.index(nd) as u32))
+                .collect();
+            let mut dedup = edges.clone();
+            dedup.sort_unstable();
+            dedup.dedup();
+            let pair = RemotePair {
+                producer: 0,
+                consumer: 1,
+                edges: dedup,
+            };
+            let split = split_pair(&pair);
+            validate_split(&pair, &split).map_err(|e| e.to_string())?;
+            let v = split.transfer_rows();
+            prop_assert(
+                v <= pair.distinct_srcs() && v <= pair.distinct_dsts(),
+                format!(
+                    "hybrid {} worse than pre {} / post {}",
+                    v,
+                    pair.distinct_dsts(),
+                    pair.distinct_srcs()
+                ),
+            )
+        });
+    }
+
+    #[test]
+    fn single_edge_costs_one() {
+        let pair = RemotePair {
+            producer: 0,
+            consumer: 1,
+            edges: vec![(7, 3)],
+        };
+        let split = split_pair(&pair);
+        validate_split(&pair, &split).unwrap();
+        assert_eq!(split.transfer_rows(), 1);
+    }
+
+    #[test]
+    fn star_src_goes_post() {
+        // One src feeding many dsts: shipping the src once is optimal.
+        let pair = RemotePair {
+            producer: 0,
+            consumer: 1,
+            edges: (0..10).map(|d| (99, d)).collect(),
+        };
+        let split = split_pair(&pair);
+        assert_eq!(split.transfer_rows(), 1);
+        assert_eq!(split.post_srcs, vec![99]);
+        assert!(split.pre_groups.is_empty());
+    }
+
+    #[test]
+    fn star_dst_goes_pre() {
+        // Many srcs feeding one dst: one partial is optimal.
+        let pair = RemotePair {
+            producer: 0,
+            consumer: 1,
+            edges: (0..10).map(|s| (s + 100, 5)).collect(),
+        };
+        let split = split_pair(&pair);
+        assert_eq!(split.transfer_rows(), 1);
+        assert!(split.post_srcs.is_empty());
+        assert_eq!(split.pre_groups.len(), 1);
+        assert_eq!(split.pre_groups[0].0, 5);
+        assert_eq!(split.pre_groups[0].1.len(), 10);
+    }
+}

@@ -1,0 +1,181 @@
+//! Minimum vertex cover on bipartite graphs via König's theorem
+//! (paper §5.3): |MVC| = |maximum matching|, and the cover is constructed
+//! from the matching by alternating reachability.
+
+use super::hopcroft_karp::{max_matching, Bipartite, Matching};
+
+/// A vertex cover split by side.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Cover {
+    pub in_u: Vec<bool>,
+    pub in_v: Vec<bool>,
+}
+
+impl Cover {
+    pub fn size(&self) -> usize {
+        self.in_u.iter().filter(|&&b| b).count() + self.in_v.iter().filter(|&&b| b).count()
+    }
+
+    /// Check every edge has an endpoint in the cover.
+    pub fn is_cover(&self, g: &Bipartite) -> bool {
+        for (u, vs) in g.adj.iter().enumerate() {
+            for &v in vs {
+                if !self.in_u[u] && !self.in_v[v as usize] {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// König construction: let Z = free U vertices ∪ vertices reachable from
+/// them by alternating paths (unmatched U→V, matched V→U).
+/// MVC = (U \ Z) ∪ (V ∩ Z).
+pub fn minimum_vertex_cover(g: &Bipartite) -> (Cover, Matching) {
+    let m = max_matching(g);
+    let mut z_u = vec![false; g.nu];
+    let mut z_v = vec![false; g.nv];
+    let mut queue = std::collections::VecDeque::new();
+    for u in 0..g.nu {
+        if m.match_u[u].is_none() {
+            z_u[u] = true;
+            queue.push_back(u as u32);
+        }
+    }
+    while let Some(u) = queue.pop_front() {
+        for &v in &g.adj[u as usize] {
+            // Traverse only NON-matching edges U→V.
+            if m.match_u[u as usize] == Some(v) {
+                continue;
+            }
+            if !z_v[v as usize] {
+                z_v[v as usize] = true;
+                // Traverse the matching edge V→U.
+                if let Some(u2) = m.match_v[v as usize] {
+                    if !z_u[u2 as usize] {
+                        z_u[u2 as usize] = true;
+                        queue.push_back(u2);
+                    }
+                }
+            }
+        }
+    }
+    let in_u: Vec<bool> = z_u.iter().map(|&z| !z).collect();
+    let in_v = z_v;
+    // Prune isolated U vertices (König picks U\Z ⊇ matched-but-isolated
+    // never occurs; isolated U are free ⇒ in Z ⇒ excluded already).
+    (Cover { in_u, in_v }, m)
+}
+
+/// Brute-force MVC size (test oracle, exponential — tiny graphs only).
+#[cfg(test)]
+pub fn brute_force_cover_size(g: &Bipartite) -> usize {
+    let total = g.nu + g.nv;
+    assert!(total <= 20, "too large for brute force");
+    let edges: Vec<(usize, usize)> = g
+        .adj
+        .iter()
+        .enumerate()
+        .flat_map(|(u, vs)| vs.iter().map(move |&v| (u, v as usize)))
+        .collect();
+    let mut best = total;
+    'outer: for mask in 0u32..(1 << total) {
+        let cnt = mask.count_ones() as usize;
+        if cnt >= best {
+            continue;
+        }
+        for &(u, v) in &edges {
+            let u_in = mask & (1 << u) != 0;
+            let v_in = mask & (1 << (g.nu + v)) != 0;
+            if !u_in && !v_in {
+                continue 'outer;
+            }
+        }
+        best = cnt;
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{prop_assert, propcheck};
+
+    #[test]
+    fn figure5_cover_is_nodes_2_and_4() {
+        // Paper Fig 5: srcs U={4,5,6} (u-index 0,1,2), dsts V={1,2,3}
+        // (v-index 0,1,2); edges 4-1,4-2,4-3,5-2,6-2.
+        // MVC = {4, 2} → u-index 0 in U, v-index 1 in V. Size 2.
+        let g = Bipartite::from_edges(3, 3, &[(0, 0), (0, 1), (0, 2), (1, 1), (2, 1)]);
+        let (c, m) = minimum_vertex_cover(&g);
+        assert!(c.is_cover(&g));
+        assert_eq!(c.size(), 2);
+        assert_eq!(c.size(), m.size(), "König: |MVC| = |matching|");
+        assert!(c.in_u[0], "node 4 (src) must be in the cover");
+        assert!(c.in_v[1], "node 2 (dst) must be in the cover");
+        assert!(!c.in_u[1] && !c.in_u[2] && !c.in_v[0] && !c.in_v[2]);
+    }
+
+    #[test]
+    fn empty_graph_empty_cover() {
+        let g = Bipartite::from_edges(4, 3, &[]);
+        let (c, _) = minimum_vertex_cover(&g);
+        assert_eq!(c.size(), 0);
+        assert!(c.is_cover(&g));
+    }
+
+    #[test]
+    fn complete_bipartite_cover_is_smaller_side() {
+        let mut edges = Vec::new();
+        for u in 0..3u32 {
+            for v in 0..5u32 {
+                edges.push((u, v));
+            }
+        }
+        let g = Bipartite::from_edges(3, 5, &edges);
+        let (c, _) = minimum_vertex_cover(&g);
+        assert!(c.is_cover(&g));
+        assert_eq!(c.size(), 3);
+    }
+
+    #[test]
+    fn prop_koenig_equals_brute_force() {
+        propcheck(60, |gen| {
+            let nu = gen.usize(1, 6);
+            let nv = gen.usize(1, 6);
+            let ne = gen.usize(0, 12);
+            let edges: Vec<(u32, u32)> = (0..ne)
+                .map(|_| (gen.rng.index(nu) as u32, gen.rng.index(nv) as u32))
+                .collect();
+            let g = Bipartite::from_edges(nu, nv, &edges);
+            let (c, m) = minimum_vertex_cover(&g);
+            prop_assert(c.is_cover(&g), format!("not a cover for {edges:?}"))?;
+            prop_assert(
+                c.size() == m.size(),
+                format!("König violated: cover {} matching {}", c.size(), m.size()),
+            )?;
+            let bf = brute_force_cover_size(&g);
+            prop_assert(
+                c.size() == bf,
+                format!("cover {} != brute force {} on {edges:?}", c.size(), bf),
+            )
+        });
+    }
+
+    #[test]
+    fn prop_cover_valid_on_larger_graphs() {
+        propcheck(24, |gen| {
+            let nu = gen.usize(1, 60);
+            let nv = gen.usize(1, 60);
+            let ne = gen.usize(0, 300);
+            let edges: Vec<(u32, u32)> = (0..ne)
+                .map(|_| (gen.rng.index(nu) as u32, gen.rng.index(nv) as u32))
+                .collect();
+            let g = Bipartite::from_edges(nu, nv, &edges);
+            let (c, m) = minimum_vertex_cover(&g);
+            prop_assert(c.is_cover(&g), "not a cover")?;
+            prop_assert(c.size() == m.size(), "size != matching")
+        });
+    }
+}

@@ -1,0 +1,178 @@
+//! Communication-volume accounting across remote-graph strategies
+//! (paper Fig. 4, Table 5).
+
+use super::prepost::split_pair;
+use super::RemotePair;
+
+/// How a remote graph is transformed before communication.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RemoteStrategy {
+    /// Ship one src row per cut edge (no transform; Fig 4a).
+    Raw,
+    /// Aggregate at producer, one partial per distinct dst (DistGNN; Fig 4b).
+    PreOnly,
+    /// Ship each distinct boundary src once (SAR/BNS-GCN et al.; Fig 4c).
+    PostOnly,
+    /// The paper's MVC hybrid (Fig 4d).
+    Hybrid,
+}
+
+impl RemoteStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RemoteStrategy::Raw => "raw",
+            RemoteStrategy::PreOnly => "pre_aggr",
+            RemoteStrategy::PostOnly => "post_aggr",
+            RemoteStrategy::Hybrid => "pre_post_aggr",
+        }
+    }
+}
+
+pub const ALL_STRATEGIES: [RemoteStrategy; 4] = [
+    RemoteStrategy::Raw,
+    RemoteStrategy::PreOnly,
+    RemoteStrategy::PostOnly,
+    RemoteStrategy::Hybrid,
+];
+
+/// Feature rows transferred for one pair under a strategy.
+pub fn pair_rows(pair: &RemotePair, strategy: RemoteStrategy) -> usize {
+    match strategy {
+        RemoteStrategy::Raw => pair.edges.len(),
+        RemoteStrategy::PreOnly => pair.distinct_dsts(),
+        RemoteStrategy::PostOnly => pair.distinct_srcs(),
+        RemoteStrategy::Hybrid => split_pair(pair).transfer_rows(),
+    }
+}
+
+/// Per-pair row-count matrix `rows[producer][consumer]` plus totals.
+#[derive(Clone, Debug)]
+pub struct VolumeReport {
+    pub k: usize,
+    pub strategy: RemoteStrategy,
+    /// rows[p][c] = node-feature rows sent p→c.
+    pub rows: Vec<Vec<usize>>,
+}
+
+impl VolumeReport {
+    pub fn total_rows(&self) -> usize {
+        self.rows.iter().flatten().sum()
+    }
+
+    /// Bytes on the wire for the feature payload at `feat_dim` f32 features
+    /// per row and `bits` per value (32 = fp32, 2 = int2 …).
+    pub fn payload_bytes(&self, feat_dim: usize, bits: usize) -> f64 {
+        self.total_rows() as f64 * feat_dim as f64 * bits as f64 / 8.0
+    }
+
+    /// Quantization parameter bytes: zero-point + scale (2×f32) per
+    /// `group_rows` rows (the paper fixes groups of 4 rows, §7.3(2)).
+    pub fn param_bytes(&self, group_rows: usize) -> f64 {
+        let groups: usize = self
+            .rows
+            .iter()
+            .flatten()
+            .map(|&r| r.div_ceil(group_rows))
+            .sum();
+        groups as f64 * 2.0 * 4.0
+    }
+
+    /// Max row count sent by any single producer (the Eqn-2 bottleneck view).
+    pub fn max_producer_rows(&self) -> usize {
+        self.rows.iter().map(|r| r.iter().sum()).max().unwrap_or(0)
+    }
+}
+
+/// Account volumes for all pairs under `strategy`.
+pub fn volume(k: usize, pairs: &[RemotePair], strategy: RemoteStrategy) -> VolumeReport {
+    let mut rows = vec![vec![0usize; k]; k];
+    for pair in pairs {
+        rows[pair.producer][pair.consumer] += pair_rows(pair, strategy);
+    }
+    VolumeReport { k, strategy, rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::rmat;
+    use crate::graph::CsrGraph;
+    use crate::hier::remote_pairs;
+    use crate::partition::{multilevel::multilevel, multilevel::MultilevelOpts, vertex_weights};
+    use crate::partition::Partition;
+    use crate::util::propcheck::{prop_assert, propcheck};
+
+    #[test]
+    fn figure4_all_strategies() {
+        let pair = RemotePair {
+            producer: 1,
+            consumer: 0,
+            edges: vec![(4, 1), (4, 2), (4, 3), (5, 2), (6, 2)],
+        };
+        assert_eq!(pair_rows(&pair, RemoteStrategy::Raw), 5);
+        assert_eq!(pair_rows(&pair, RemoteStrategy::PreOnly), 3);
+        assert_eq!(pair_rows(&pair, RemoteStrategy::PostOnly), 3);
+        assert_eq!(pair_rows(&pair, RemoteStrategy::Hybrid), 2);
+    }
+
+    #[test]
+    fn prop_strategy_ordering() {
+        // hybrid ≤ min(pre, post) ≤ raw, always.
+        propcheck(40, |gen| {
+            let ns = gen.usize(1, 25);
+            let nd = gen.usize(1, 25);
+            let ne = gen.usize(1, 100);
+            let mut edges: Vec<(u32, u32)> = (0..ne)
+                .map(|_| (500 + gen.rng.index(ns) as u32, gen.rng.index(nd) as u32))
+                .collect();
+            edges.sort_unstable();
+            edges.dedup();
+            let pair = RemotePair {
+                producer: 0,
+                consumer: 1,
+                edges,
+            };
+            let raw = pair_rows(&pair, RemoteStrategy::Raw);
+            let pre = pair_rows(&pair, RemoteStrategy::PreOnly);
+            let post = pair_rows(&pair, RemoteStrategy::PostOnly);
+            let hyb = pair_rows(&pair, RemoteStrategy::Hybrid);
+            prop_assert(hyb <= pre.min(post), format!("hyb {hyb} > min({pre},{post})"))?;
+            prop_assert(pre <= raw && post <= raw, "pre/post worse than raw")
+        });
+    }
+
+    #[test]
+    fn volume_report_on_real_partition() {
+        let g = rmat(11, 8.0, 0.57, 0.19, 0.19, true, 3);
+        let w = vertex_weights(&g, None, 0);
+        let part = multilevel(&g, 4, &w, &MultilevelOpts::default());
+        let pairs = remote_pairs(&g, &part);
+        let raw = volume(4, &pairs, RemoteStrategy::Raw);
+        let pre = volume(4, &pairs, RemoteStrategy::PreOnly);
+        let post = volume(4, &pairs, RemoteStrategy::PostOnly);
+        let hyb = volume(4, &pairs, RemoteStrategy::Hybrid);
+        assert!(hyb.total_rows() <= pre.total_rows().min(post.total_rows()));
+        assert!(pre.total_rows() <= raw.total_rows());
+        assert!(hyb.total_rows() > 0, "power-law 4-way cut can't be empty");
+        // Int2 payload is 16x smaller than fp32.
+        let f32b = hyb.payload_bytes(128, 32);
+        let i2b = hyb.payload_bytes(128, 2);
+        assert!((f32b / i2b - 16.0).abs() < 1e-9);
+        // Params are small relative to fp32 payload (α ~ O(10^2)).
+        assert!(hyb.param_bytes(4) < f32b / 32.0);
+    }
+
+    #[test]
+    fn symmetric_cut_has_symmetric_pairs() {
+        // Undirected graph → pair p→c nonempty iff c→p nonempty.
+        let g = CsrGraph::from_edges(4, &[(0, 2), (2, 0), (1, 3), (3, 1)]);
+        let part = Partition {
+            k: 2,
+            assign: vec![0, 0, 1, 1],
+        };
+        let pairs = remote_pairs(&g, &part);
+        assert_eq!(pairs.len(), 2);
+        let v = volume(2, &pairs, RemoteStrategy::PostOnly);
+        assert_eq!(v.rows[0][1], v.rows[1][0]);
+    }
+}

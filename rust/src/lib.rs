@@ -1,0 +1,32 @@
+//! # SuperGCN
+//!
+//! A from-scratch reproduction of *"Scaling Large-scale GNN Training to
+//! Thousands of Processors on CPU-based Supercomputers"* (SuperGCN,
+//! ICS '25) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3** (this crate): the distributed full-batch GCN training
+//!   coordinator — graph substrate, METIS-like partitioner, the paper's
+//!   MVC-based hierarchical pre/post-aggregation planner, Int2 stochastic
+//!   quantization, a simulated supercomputer interconnect, optimized CPU
+//!   aggregation operators, and the epoch loop.
+//! * **L2/L1** (`python/compile`): JAX per-layer compute graphs calling
+//!   Pallas kernels, AOT-lowered to HLO-text artifacts executed from Rust
+//!   through PJRT (`runtime`).
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured results.
+
+pub mod agg;
+pub mod backend;
+pub mod comm;
+pub mod coordinator;
+pub mod datasets;
+pub mod exp;
+pub mod graph;
+pub mod hier;
+pub mod model;
+pub mod partition;
+pub mod perfmodel;
+pub mod quant;
+pub mod runtime;
+pub mod util;

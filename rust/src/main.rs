@@ -1,0 +1,305 @@
+//! `supergcn` — the leader binary: distributed full-batch GCN training on
+//! a simulated CPU supercomputer (see DESIGN.md §1 for the simulation
+//! contract).
+//!
+//! Subcommands:
+//!   train       end-to-end training run (native or xla backend)
+//!   partition   partition a dataset, report quality vs baselines
+//!   volume      Table-5-style comm-volume report across strategies
+//!   perfmodel   Fig-7 analytic speedup sweep
+//!   datasets    list the Table-2-style catalog
+
+use anyhow::Result;
+use supergcn::backend::native::NativeBackend;
+use supergcn::backend::xla::XlaBackend;
+use supergcn::backend::Backend;
+use supergcn::coordinator::planner::prepare;
+use supergcn::coordinator::trainer::{TrainConfig, Trainer};
+use supergcn::datasets;
+use supergcn::exp::Table;
+use supergcn::graph::stats::stats;
+use supergcn::hier::volume::{volume, RemoteStrategy, ALL_STRATEGIES};
+use supergcn::hier::remote_pairs;
+use supergcn::model::optimizer::OptKind;
+use supergcn::partition::{self, multilevel};
+use supergcn::perfmodel::{crossover_procs, fig7_sweep, MachineProfile};
+use supergcn::quant::Bits;
+use supergcn::util::args::Args;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = argv.first().map(|s| s.as_str()).unwrap_or("help");
+    let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
+    let r = match cmd {
+        "train" => cmd_train(&rest),
+        "partition" => cmd_partition(&rest),
+        "volume" => cmd_volume(&rest),
+        "perfmodel" => cmd_perfmodel(&rest),
+        "datasets" => cmd_datasets(),
+        _ => {
+            eprintln!(
+                "usage: supergcn <train|partition|volume|perfmodel|datasets> [--help]\n\
+                 SuperGCN: distributed full-batch GCN training for CPU supercomputers."
+            );
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_strategy(s: &str) -> Result<RemoteStrategy> {
+    Ok(match s {
+        "raw" => RemoteStrategy::Raw,
+        "pre" => RemoteStrategy::PreOnly,
+        "post" => RemoteStrategy::PostOnly,
+        "hybrid" => RemoteStrategy::Hybrid,
+        _ => anyhow::bail!("strategy must be raw|pre|post|hybrid"),
+    })
+}
+
+fn parse_machine(s: &str) -> Result<MachineProfile> {
+    Ok(match s {
+        "abci" => MachineProfile::abci(),
+        "fugaku" => MachineProfile::fugaku(),
+        _ => anyhow::bail!("machine must be abci|fugaku"),
+    })
+}
+
+fn parse_quant(s: &str) -> Result<Option<Bits>> {
+    Ok(match s {
+        "fp32" | "none" => None,
+        "int2" => Some(Bits::Int2),
+        "int4" => Some(Bits::Int4),
+        "int8" => Some(Bits::Int8),
+        _ => anyhow::bail!("quant must be fp32|int2|int4|int8"),
+    })
+}
+
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let a = Args::new("supergcn train", "distributed full-batch GCN training")
+        .opt("dataset", "arxiv-s", "catalog dataset name (see `datasets`)")
+        .opt("procs", "4", "number of simulated workers")
+        .opt("epochs", "0", "override epochs (0 = dataset default)")
+        .opt("backend", "native", "native | xla")
+        .opt("config", "quickstart", "artifact config (xla backend)")
+        .opt("artifacts", "artifacts", "artifacts directory (xla backend)")
+        .opt("quant", "fp32", "fp32 | int2 | int4 | int8")
+        .opt("strategy", "hybrid", "raw | pre | post | hybrid")
+        .opt("machine", "abci", "abci | fugaku network model")
+        .opt("delay-comm", "1", "halo exchange every N epochs (DistGNN cd-N)")
+        .opt("seed", "42", "random seed")
+        .flag("label-prop", "enable masked label propagation")
+        .parse_from(argv)?;
+
+    let spec = datasets::by_name(&a.get_str("dataset"))?;
+    let k = a.get_usize("procs");
+    let epochs = a.get_usize("epochs");
+    let lg = spec.build();
+    println!("dataset {} ({}): {}", spec.name, spec.paper_analog, stats(&lg.graph));
+
+    let tc = TrainConfig {
+        epochs: if epochs == 0 { spec.epochs } else { epochs },
+        lr: spec.lr,
+        opt: OptKind::Adam,
+        quant: parse_quant(&a.get_str("quant"))?,
+        label_prop: a.get_flag("label-prop"),
+        lp_frac: 0.5,
+        strategy: parse_strategy(&a.get_str("strategy"))?,
+        delay_comm: a.get_usize("delay-comm"),
+        machine: parse_machine(&a.get_str("machine"))?,
+        seed: a.get_u64("seed"),
+    };
+
+    let backend_name = a.get_str("backend");
+    let (ctxs, cfg) = match backend_name.as_str() {
+        "xla" => {
+            let rt = supergcn::runtime::Runtime::load(
+                std::path::Path::new(&a.get_str("artifacts")),
+                &a.get_str("config"),
+            )?;
+            let cfg = rt.config.clone();
+            let (ctxs, cfg, _) = prepare(&lg, k, tc.strategy, Some(cfg), tc.seed)?;
+            let backend: Box<dyn Backend> = Box::new(XlaBackend::new(rt));
+            return run_training(ctxs, backend, tc, cfg.name);
+        }
+        "native" => {
+            let (ctxs, mut cfg, _) = prepare(&lg, k, tc.strategy, None, tc.seed)?;
+            cfg.hidden = spec.hidden;
+            (ctxs, cfg)
+        }
+        other => anyhow::bail!("unknown backend '{other}'"),
+    };
+    let backend: Box<dyn Backend> = Box::new(NativeBackend::new(cfg.clone()));
+    run_training(ctxs, backend, tc, cfg.name)
+}
+
+fn run_training(
+    ctxs: Vec<supergcn::coordinator::planner::WorkerCtx>,
+    backend: Box<dyn Backend>,
+    tc: TrainConfig,
+    cfg_name: String,
+) -> Result<()> {
+    println!(
+        "training: {} workers, backend={}, config={}, quant={:?}, lp={}, strategy={}, machine={}",
+        ctxs.len(),
+        backend.name(),
+        cfg_name,
+        tc.quant.map(|b| b.name()).unwrap_or("fp32"),
+        tc.label_prop,
+        tc.strategy.name(),
+        tc.machine.name,
+    );
+    let epochs = tc.epochs;
+    let mut tr = Trainer::new(ctxs, backend, tc);
+    let stats = tr.run(true)?;
+    let last = stats.last().unwrap();
+    let steady = supergcn::exp::steady_epoch_secs(&stats, 10);
+    println!(
+        "\ndone: {} epochs  loss {:.4}  train {:.4}  val {:.4}  test {:.4}",
+        epochs, last.train_loss, last.train_acc, last.val_acc, last.test_acc
+    );
+    println!(
+        "modeled epoch time {:.4}s  breakdown: {}",
+        steady,
+        last.breakdown.report()
+    );
+    println!(
+        "total comm: data {}  params {}",
+        supergcn::util::fmt_bytes(tr.comm_stats.total_data_bytes()),
+        supergcn::util::fmt_bytes(tr.comm_stats.total_param_bytes()),
+    );
+    Ok(())
+}
+
+fn cmd_partition(argv: &[String]) -> Result<()> {
+    let a = Args::new("supergcn partition", "partition quality report")
+        .opt("dataset", "arxiv-s", "catalog dataset name")
+        .opt("procs", "8", "parts")
+        .opt("seed", "42", "seed")
+        .parse_from(argv)?;
+    let spec = datasets::by_name(&a.get_str("dataset"))?;
+    let lg = spec.build();
+    let k = a.get_usize("procs");
+    let w = partition::vertex_weights(&lg.graph, None, 4);
+    let mut t = Table::new(
+        &format!("partition quality: {} k={k}", spec.name),
+        &["method", "edge cut", "cut %", "weight imbalance"],
+    );
+    let ml = multilevel::multilevel(
+        &lg.graph,
+        k,
+        &w,
+        &multilevel::MultilevelOpts {
+            seed: a.get_u64("seed"),
+            ..Default::default()
+        },
+    );
+    for (name, part) in [
+        ("multilevel (METIS-like)", ml),
+        ("random", partition::random(lg.n(), k, 1)),
+        ("block", partition::block(lg.n(), k, &w)),
+    ] {
+        let q = partition::quality(&lg.graph, &part, &w);
+        t.row(vec![
+            name.into(),
+            q.edge_cut.to_string(),
+            format!("{:.1}%", q.cut_fraction * 100.0),
+            format!("{:.3}", q.weight_imbalance),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_volume(argv: &[String]) -> Result<()> {
+    let a = Args::new("supergcn volume", "comm volume across remote-graph strategies")
+        .opt("dataset", "products-s", "catalog dataset name")
+        .opt("procs", "8", "parts")
+        .opt("seed", "42", "seed")
+        .parse_from(argv)?;
+    let spec = datasets::by_name(&a.get_str("dataset"))?;
+    let lg = spec.build();
+    let k = a.get_usize("procs");
+    let w = partition::vertex_weights(&lg.graph, None, 4);
+    let part = multilevel::multilevel(
+        &lg.graph,
+        k,
+        &w,
+        &multilevel::MultilevelOpts {
+            seed: a.get_u64("seed"),
+            ..Default::default()
+        },
+    );
+    let pairs = remote_pairs(&lg.graph, &part);
+    let mut t = Table::new(
+        &format!("comm volume: {} k={k} feat={}", spec.name, spec.feat_dim),
+        &["strategy", "rows", "fp32 bytes", "int2 bytes (+params)"],
+    );
+    for s in ALL_STRATEGIES {
+        let v = volume(k, &pairs, s);
+        t.row(vec![
+            s.name().into(),
+            v.total_rows().to_string(),
+            supergcn::util::fmt_bytes(v.payload_bytes(spec.feat_dim, 32)),
+            format!(
+                "{} (+{})",
+                supergcn::util::fmt_bytes(v.payload_bytes(spec.feat_dim, 2)),
+                supergcn::util::fmt_bytes(v.param_bytes(4))
+            ),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_perfmodel(argv: &[String]) -> Result<()> {
+    let a = Args::new("supergcn perfmodel", "Fig-7 analytic quantization speedup sweep")
+        .opt("machine", "fugaku", "abci | fugaku")
+        .opt("bits", "2", "quantization bit width")
+        .opt("volume", "1e8", "total cut volume at P=1 (f32 values)")
+        .parse_from(argv)?;
+    let machine = parse_machine(&a.get_str("machine"))?;
+    let bits = a.get_f64("bits");
+    let procs: Vec<usize> = (1..=13).map(|i| 1usize << i).collect();
+    let pts = fig7_sweep(a.get_f64("volume"), 1.0 / 256.0, bits, &procs, &machine);
+    let mut t = Table::new(
+        &format!("Fig 7: quantized-comm speedup on {} (int{bits})", machine.name),
+        &["procs", "delta", "speedup", "regime"],
+    );
+    for p in &pts {
+        t.row(vec![
+            p.procs.to_string(),
+            format!("{:.3}", p.delta),
+            format!("{:.2}x", p.speedup),
+            p.regime.into(),
+        ]);
+    }
+    t.print();
+    if let Some(px) = crossover_procs(&pts) {
+        println!("latency-bound crossover at P' = {px}");
+    }
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    let mut t = Table::new(
+        "dataset catalog (Table-2 analogues, scaled; DESIGN.md §1)",
+        &["name", "paper analog", "n", "avg deg", "feat", "classes", "epochs"],
+    );
+    for d in datasets::catalog() {
+        t.row(vec![
+            d.name.into(),
+            d.paper_analog.into(),
+            d.n.to_string(),
+            format!("{:.0}", d.avg_deg),
+            d.feat_dim.to_string(),
+            d.num_classes.to_string(),
+            d.epochs.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}

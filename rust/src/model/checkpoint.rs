@@ -1,0 +1,110 @@
+//! Model checkpointing: binary save/load of the flattened parameters plus
+//! shape metadata, so long training runs (and the examples) can resume.
+
+use super::ModelParams;
+use anyhow::{Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SGCNCKP1";
+
+/// Save parameters (+ the epoch counter) to `path`.
+pub fn save(params: &ModelParams, epoch: usize, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(epoch as u64).to_le_bytes())?;
+    w.write_all(&(params.num_classes as u64).to_le_bytes())?;
+    w.write_all(&(params.f_in as u64).to_le_bytes())?;
+    w.write_all(&(params.layers.len() as u64).to_le_bytes())?;
+    for l in &params.layers {
+        w.write_all(&(l.fin as u64).to_le_bytes())?;
+        w.write_all(&(l.fout as u64).to_le_bytes())?;
+    }
+    let flat = params.flatten();
+    w.write_all(&(flat.len() as u64).to_le_bytes())?;
+    for v in &flat {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Load a checkpoint into `params` (shapes must match); returns the epoch.
+pub fn load(params: &mut ModelParams, path: &Path) -> Result<usize> {
+    let mut r = BufReader::new(std::fs::File::open(path).context("opening checkpoint")?);
+    let mut m = [0u8; 8];
+    r.read_exact(&mut m)?;
+    anyhow::ensure!(&m == MAGIC, "not a supergcn checkpoint");
+    let mut u64buf = [0u8; 8];
+    let mut next = |r: &mut BufReader<std::fs::File>| -> Result<u64> {
+        r.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let epoch = next(&mut r)? as usize;
+    let classes = next(&mut r)? as usize;
+    let f_in = next(&mut r)? as usize;
+    anyhow::ensure!(
+        classes == params.num_classes && f_in == params.f_in,
+        "checkpoint shape mismatch: classes {classes}/f_in {f_in}"
+    );
+    let n_layers = next(&mut r)? as usize;
+    anyhow::ensure!(n_layers == params.layers.len(), "layer count mismatch");
+    for l in &params.layers {
+        let fin = next(&mut r)? as usize;
+        let fout = next(&mut r)? as usize;
+        anyhow::ensure!(fin == l.fin && fout == l.fout, "layer dim mismatch");
+    }
+    let n = next(&mut r)? as usize;
+    anyhow::ensure!(n == params.n_params(), "parameter count mismatch");
+    let mut flat = vec![0f32; n];
+    let mut f4 = [0u8; 4];
+    for v in &mut flat {
+        r.read_exact(&mut f4)?;
+        *v = f32::from_le_bytes(f4);
+    }
+    params.unflatten_into(&flat);
+    Ok(epoch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_config;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("supergcn_ckpt_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let p = ModelParams::init(&test_config(), 7);
+        let path = tmp("rt.bin");
+        save(&p, 42, &path).unwrap();
+        let mut q = ModelParams::init(&test_config(), 99);
+        assert_ne!(q.flatten(), p.flatten());
+        let epoch = load(&mut q, &path).unwrap();
+        assert_eq!(epoch, 42);
+        assert_eq!(q.flatten(), p.flatten());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let p = ModelParams::init(&test_config(), 1);
+        let path = tmp("mm.bin");
+        save(&p, 0, &path).unwrap();
+        let mut cfg2 = test_config();
+        cfg2.classes = 8;
+        let mut q = ModelParams::init(&cfg2, 1);
+        assert!(load(&mut q, &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        let path = tmp("garb.bin");
+        std::fs::write(&path, b"NOTACKPT").unwrap();
+        let mut p = ModelParams::init(&test_config(), 1);
+        assert!(load(&mut p, &path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,215 @@
+//! Model state: GraphSAGE parameters, Glorot init, Adam/SGD optimizers,
+//! and the masked-label-propagation embedding table (paper §2.5, §6.1(1)).
+
+pub mod checkpoint;
+pub mod labelprop;
+pub mod optimizer;
+
+use crate::runtime::ShapeConfig;
+use crate::util::rng::Rng;
+
+/// Parameters of one GraphSAGE layer: `out = act(h·w_self + z·w_neigh + b)`.
+#[derive(Clone, Debug)]
+pub struct LayerParams {
+    pub fin: usize,
+    pub fout: usize,
+    pub w_self: Vec<f32>,
+    pub w_neigh: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl LayerParams {
+    pub fn glorot(fin: usize, fout: usize, rng: &mut Rng) -> Self {
+        let lim = (6.0 / (fin + fout) as f64).sqrt();
+        let mut init = || {
+            (0..fin * fout)
+                .map(|_| ((rng.f64() * 2.0 - 1.0) * lim) as f32)
+                .collect::<Vec<f32>>()
+        };
+        Self {
+            fin,
+            fout,
+            w_self: init(),
+            w_neigh: init(),
+            b: vec![0f32; fout],
+        }
+    }
+
+    pub fn zeros_like(&self) -> Self {
+        Self {
+            fin: self.fin,
+            fout: self.fout,
+            w_self: vec![0.0; self.fin * self.fout],
+            w_neigh: vec![0.0; self.fin * self.fout],
+            b: vec![0.0; self.fout],
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        2 * self.fin * self.fout + self.fout
+    }
+}
+
+/// Full model: 3 SAGE layers + the label-propagation embedding table
+/// (`num_classes × f_in`, added to input features of selected nodes).
+#[derive(Clone, Debug)]
+pub struct ModelParams {
+    pub layers: Vec<LayerParams>,
+    pub w_embed: Vec<f32>,
+    pub num_classes: usize,
+    pub f_in: usize,
+}
+
+impl ModelParams {
+    pub fn init(cfg: &ShapeConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let layers = cfg
+            .layer_dims()
+            .iter()
+            .map(|&(fin, fout, _)| LayerParams::glorot(fin, fout, &mut rng))
+            .collect();
+        // Embedding init small so LP starts as a gentle signal.
+        let w_embed = (0..cfg.classes * cfg.f_in)
+            .map(|_| ((rng.f64() * 2.0 - 1.0) * 0.05) as f32)
+            .collect();
+        Self {
+            layers,
+            w_embed,
+            num_classes: cfg.classes,
+            f_in: cfg.f_in,
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.n_params()).sum::<usize>() + self.w_embed.len()
+    }
+
+    /// Flatten all parameters (the gradient-allreduce wire format).
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.n_params());
+        for l in &self.layers {
+            out.extend_from_slice(&l.w_self);
+            out.extend_from_slice(&l.w_neigh);
+            out.extend_from_slice(&l.b);
+        }
+        out.extend_from_slice(&self.w_embed);
+        out
+    }
+
+    /// Inverse of [`flatten`].
+    pub fn unflatten_into(&mut self, flat: &[f32]) {
+        let mut off = 0;
+        for l in &mut self.layers {
+            let n = l.w_self.len();
+            l.w_self.copy_from_slice(&flat[off..off + n]);
+            off += n;
+            let n = l.w_neigh.len();
+            l.w_neigh.copy_from_slice(&flat[off..off + n]);
+            off += n;
+            let n = l.b.len();
+            l.b.copy_from_slice(&flat[off..off + n]);
+            off += n;
+        }
+        let n = self.w_embed.len();
+        self.w_embed.copy_from_slice(&flat[off..off + n]);
+        off += n;
+        assert_eq!(off, flat.len());
+    }
+}
+
+/// Gradient accumulator with the same layout as [`ModelParams`].
+#[derive(Clone, Debug)]
+pub struct ModelGrads {
+    pub layers: Vec<LayerParams>,
+    pub w_embed: Vec<f32>,
+}
+
+impl ModelGrads {
+    pub fn zeros(params: &ModelParams) -> Self {
+        Self {
+            layers: params.layers.iter().map(|l| l.zeros_like()).collect(),
+            w_embed: vec![0.0; params.w_embed.len()],
+        }
+    }
+
+    pub fn clear(&mut self) {
+        for l in &mut self.layers {
+            l.w_self.iter_mut().for_each(|x| *x = 0.0);
+            l.w_neigh.iter_mut().for_each(|x| *x = 0.0);
+            l.b.iter_mut().for_each(|x| *x = 0.0);
+        }
+        self.w_embed.iter_mut().for_each(|x| *x = 0.0);
+    }
+
+    pub fn flatten(&self) -> Vec<f32> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            out.extend_from_slice(&l.w_self);
+            out.extend_from_slice(&l.w_neigh);
+            out.extend_from_slice(&l.b);
+        }
+        out.extend_from_slice(&self.w_embed);
+        out
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_config() -> ShapeConfig {
+    ShapeConfig {
+        name: "t".into(),
+        n_pad: 256,
+        f_in: 16,
+        hidden: 16,
+        classes: 4,
+        e_local: 1024,
+        e_pre: 256,
+        p_pre: 128,
+        r_pre: 128,
+        r_post: 128,
+        e_post: 256,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn init_shapes() {
+        let p = ModelParams::init(&test_config(), 1);
+        assert_eq!(p.layers.len(), 3);
+        assert_eq!(p.layers[0].w_self.len(), 16 * 16);
+        assert_eq!(p.layers[2].w_neigh.len(), 16 * 4);
+        assert_eq!(p.w_embed.len(), 4 * 16);
+    }
+
+    #[test]
+    fn glorot_bounds() {
+        let p = ModelParams::init(&test_config(), 2);
+        let lim = (6.0f64 / 32.0).sqrt() as f32;
+        assert!(p.layers[0].w_self.iter().all(|&w| w.abs() <= lim));
+        // Not all zero.
+        assert!(p.layers[0].w_self.iter().any(|&w| w.abs() > 1e-4));
+    }
+
+    #[test]
+    fn flatten_roundtrip() {
+        let p = ModelParams::init(&test_config(), 3);
+        let flat = p.flatten();
+        assert_eq!(flat.len(), p.n_params());
+        let mut q = ModelParams::init(&test_config(), 99);
+        q.unflatten_into(&flat);
+        assert_eq!(q.flatten(), flat);
+        assert_eq!(q.layers[1].w_neigh, p.layers[1].w_neigh);
+    }
+
+    #[test]
+    fn grads_zero_and_clear() {
+        let p = ModelParams::init(&test_config(), 4);
+        let mut g = ModelGrads::zeros(&p);
+        assert!(g.flatten().iter().all(|&x| x == 0.0));
+        g.layers[0].b[0] = 5.0;
+        g.clear();
+        assert!(g.flatten().iter().all(|&x| x == 0.0));
+    }
+}

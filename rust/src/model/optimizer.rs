@@ -1,0 +1,102 @@
+//! Optimizers over the flattened parameter vector: SGD and Adam (the
+//! paper trains with Adam-style settings; Table 2's learning rates).
+
+/// Optimizer choice.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum OptKind {
+    Sgd,
+    Adam,
+}
+
+/// Adam with bias correction (β1=0.9, β2=0.999, ε=1e-8), or plain SGD.
+#[derive(Clone, Debug)]
+pub struct Optimizer {
+    pub kind: OptKind,
+    pub lr: f32,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    t: u64,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptKind, lr: f32, n_params: usize) -> Self {
+        Self {
+            kind,
+            lr,
+            m: vec![0.0; n_params],
+            v: vec![0.0; n_params],
+            t: 0,
+        }
+    }
+
+    /// Apply one update in place: `params -= lr * step(grads)`.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len());
+        assert_eq!(params.len(), self.m.len());
+        match self.kind {
+            OptKind::Sgd => {
+                for (p, &g) in params.iter_mut().zip(grads.iter()) {
+                    *p -= self.lr * g;
+                }
+            }
+            OptKind::Adam => {
+                const B1: f32 = 0.9;
+                const B2: f32 = 0.999;
+                const EPS: f32 = 1e-8;
+                self.t += 1;
+                let bc1 = 1.0 - B1.powi(self.t as i32);
+                let bc2 = 1.0 - B2.powi(self.t as i32);
+                for i in 0..params.len() {
+                    let g = grads[i];
+                    self.m[i] = B1 * self.m[i] + (1.0 - B1) * g;
+                    self.v[i] = B2 * self.v[i] + (1.0 - B2) * g * g;
+                    let mh = self.m[i] / bc1;
+                    let vh = self.v[i] / bc2;
+                    params[i] -= self.lr * mh / (vh.sqrt() + EPS);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_step_exact() {
+        let mut opt = Optimizer::new(OptKind::Sgd, 0.1, 2);
+        let mut p = vec![1.0f32, -2.0];
+        opt.step(&mut p, &[10.0, -10.0]);
+        assert_eq!(p, vec![0.0, -1.0]);
+    }
+
+    #[test]
+    fn adam_minimizes_quadratic() {
+        // min (x-3)^2: grad = 2(x-3).
+        let mut opt = Optimizer::new(OptKind::Adam, 0.1, 1);
+        let mut p = vec![0.0f32];
+        for _ in 0..500 {
+            let g = 2.0 * (p[0] - 3.0);
+            opt.step(&mut p, &[g]);
+        }
+        assert!((p[0] - 3.0).abs() < 0.05, "converged to {}", p[0]);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // With bias correction the first Adam step ≈ lr * sign(grad).
+        let mut opt = Optimizer::new(OptKind::Adam, 0.01, 1);
+        let mut p = vec![1.0f32];
+        opt.step(&mut p, &[42.0]);
+        assert!((p[0] - (1.0 - 0.01)).abs() < 1e-4, "step {}", 1.0 - p[0]);
+    }
+
+    #[test]
+    fn zero_grad_no_motion_sgd() {
+        let mut opt = Optimizer::new(OptKind::Sgd, 0.5, 3);
+        let mut p = vec![1.0, 2.0, 3.0];
+        opt.step(&mut p, &[0.0, 0.0, 0.0]);
+        assert_eq!(p, vec![1.0, 2.0, 3.0]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Graph partitioning (paper §5.1, §7.2).
+//!
+//! The paper uses METIS with vertex weights set from in-degree and the
+//! training mask, so that both computation (FLOPS ∝ in-degree) and
+//! training samples are balanced across workers. METIS is unavailable
+//! offline; `multilevel` is a from-scratch multilevel k-way min-cut
+//! partitioner of the same family (heavy-edge-matching coarsening →
+//! greedy growing initial partition → boundary Fiduccia–Mattheyses
+//! refinement). `random` and `hash` are the quality baselines.
+
+pub mod multilevel;
+
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+
+/// A k-way partition: `assign[v] ∈ [0, k)`.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    pub k: usize,
+    pub assign: Vec<u32>,
+}
+
+impl Partition {
+    pub fn part_sizes(&self) -> Vec<usize> {
+        let mut s = vec![0usize; self.k];
+        for &p in &self.assign {
+            s[p as usize] += 1;
+        }
+        s
+    }
+
+    /// Nodes of each part, in ascending node order.
+    pub fn part_nodes(&self) -> Vec<Vec<u32>> {
+        let mut out = vec![Vec::new(); self.k];
+        for (v, &p) in self.assign.iter().enumerate() {
+            out[p as usize].push(v as u32);
+        }
+        out
+    }
+
+    pub fn validate(&self, n: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.assign.len() == n, "assignment length");
+        anyhow::ensure!(
+            self.assign.iter().all(|&p| (p as usize) < self.k),
+            "part id out of range"
+        );
+        Ok(())
+    }
+}
+
+/// Quality metrics for a partition (reported in `partition_quality` bench).
+#[derive(Clone, Debug)]
+pub struct PartitionQuality {
+    /// Number of arcs whose endpoints live in different parts.
+    pub edge_cut: usize,
+    /// max weighted part size / average weighted part size.
+    pub weight_imbalance: f64,
+    /// max node count / average node count.
+    pub node_imbalance: f64,
+    /// Fraction of arcs cut.
+    pub cut_fraction: f64,
+}
+
+/// Vertex weights per §7.2: `1 + in_degree + train_bonus·is_train`.
+/// In-degree dominates FLOPS of aggregation; the train bonus balances
+/// loss-bearing samples.
+pub fn vertex_weights(g: &CsrGraph, train_mask: Option<&[bool]>, train_bonus: u64) -> Vec<u64> {
+    (0..g.n)
+        .map(|v| {
+            let base = 1 + g.in_degree(v) as u64;
+            let bonus = match train_mask {
+                Some(m) if m[v] => train_bonus,
+                _ => 0,
+            };
+            base + bonus
+        })
+        .collect()
+}
+
+pub fn quality(g: &CsrGraph, part: &Partition, weights: &[u64]) -> PartitionQuality {
+    let mut cut = 0usize;
+    for v in 0..g.n {
+        let pv = part.assign[v];
+        for &s in g.in_neighbors(v) {
+            if part.assign[s as usize] != pv {
+                cut += 1;
+            }
+        }
+    }
+    let mut wsum = vec![0u64; part.k];
+    let mut nsum = vec![0usize; part.k];
+    for (v, &p) in part.assign.iter().enumerate() {
+        wsum[p as usize] += weights[v];
+        nsum[p as usize] += 1;
+    }
+    let wavg = wsum.iter().sum::<u64>() as f64 / part.k as f64;
+    let navg = nsum.iter().sum::<usize>() as f64 / part.k as f64;
+    PartitionQuality {
+        edge_cut: cut,
+        weight_imbalance: wsum.iter().copied().max().unwrap_or(0) as f64 / wavg.max(1.0),
+        node_imbalance: nsum.iter().copied().max().unwrap_or(0) as f64 / navg.max(1.0),
+        cut_fraction: cut as f64 / g.m().max(1) as f64,
+    }
+}
+
+/// Uniform random assignment (worst-case comm baseline).
+pub fn random(n: usize, k: usize, seed: u64) -> Partition {
+    let mut rng = Rng::new(seed);
+    Partition {
+        k,
+        assign: (0..n).map(|_| rng.index(k) as u32).collect(),
+    }
+}
+
+/// Contiguous-range ("hash"/block) assignment, weight-balanced: nodes in id
+/// order, split at weight quantiles. Cheap, locality only if ids are.
+pub fn block(n: usize, k: usize, weights: &[u64]) -> Partition {
+    let total: u64 = weights.iter().sum();
+    let mut assign = vec![0u32; n];
+    let mut acc = 0u64;
+    let mut p = 0u32;
+    for v in 0..n {
+        // move to next part when cumulative weight passes the boundary
+        while p as usize + 1 < k && acc * k as u64 >= total * (p as u64 + 1) {
+            p += 1;
+        }
+        assign[v] = p;
+        acc += weights[v];
+    }
+    Partition { k, assign }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::erdos_renyi;
+    use crate::util::propcheck::{prop_assert, propcheck};
+
+    #[test]
+    fn weights_reflect_degree_and_mask() {
+        let g = CsrGraph::from_edges(3, &[(0, 1), (2, 1)]);
+        let mask = vec![true, false, false];
+        let w = vertex_weights(&g, Some(&mask), 10);
+        assert_eq!(w, vec![1 + 0 + 10, 1 + 2, 1 + 0]);
+    }
+
+    #[test]
+    fn random_partition_valid() {
+        let p = random(100, 7, 3);
+        p.validate(100).unwrap();
+        assert_eq!(p.part_sizes().iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn block_partition_balances_weight() {
+        let n = 1000;
+        let weights: Vec<u64> = (0..n).map(|i| 1 + (i % 13) as u64).collect();
+        let p = block(n, 8, &weights);
+        p.validate(n).unwrap();
+        let g = erdos_renyi(n, 4000, 5);
+        let q = quality(&g, &p, &weights);
+        assert!(q.weight_imbalance < 1.15, "imbalance {}", q.weight_imbalance);
+    }
+
+    #[test]
+    fn quality_counts_cut_exactly() {
+        // 4 nodes, parts {0,1} and {2,3}; arcs 0->1 (internal), 1->2 (cut), 3->2 (internal), 0->3 (cut)
+        let g = CsrGraph::from_edges(4, &[(0, 1), (1, 2), (3, 2), (0, 3)]);
+        let p = Partition {
+            k: 2,
+            assign: vec![0, 0, 1, 1],
+        };
+        let q = quality(&g, &p, &[1, 1, 1, 1]);
+        assert_eq!(q.edge_cut, 2);
+        assert!((q.cut_fraction - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_part_nodes_is_partition() {
+        propcheck(32, |gen| {
+            let n = gen.usize(1, 200);
+            let k = gen.usize(1, 8);
+            let p = random(n, k, gen.u64(0, 1 << 40));
+            let nodes = p.part_nodes();
+            let total: usize = nodes.iter().map(|v| v.len()).sum();
+            prop_assert(total == n, "not a partition")?;
+            for (pi, vs) in nodes.iter().enumerate() {
+                for &v in vs {
+                    prop_assert(p.assign[v as usize] as usize == pi, "wrong bucket")?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,460 @@
+//! Multilevel k-way min-cut partitioner (METIS-family; DESIGN.md §1).
+//!
+//! Pipeline: (1) **coarsen** by heavy-edge matching until the graph is
+//! small, accumulating vertex and edge weights; (2) **initial partition**
+//! of the coarsest graph by weighted greedy graph growing (BFS frontier,
+//! best-gain expansion); (3) **uncoarsen** and refine at every level with
+//! a bounded Fiduccia–Mattheyses pass over boundary vertices.
+//!
+//! Objective: minimize total cut edge weight subject to
+//! `max part weight ≤ (1+ε)·avg`.
+
+use super::Partition;
+use crate::graph::CsrGraph;
+use crate::util::rng::Rng;
+
+/// Internal weighted undirected adjacency used across levels.
+struct WGraph {
+    n: usize,
+    /// CSR over undirected weighted edges.
+    xadj: Vec<usize>,
+    adj: Vec<u32>,
+    ewt: Vec<u64>,
+    vwt: Vec<u64>,
+}
+
+impl WGraph {
+    fn neighbors(&self, v: usize) -> impl Iterator<Item = (u32, u64)> + '_ {
+        (self.xadj[v]..self.xadj[v + 1]).map(move |i| (self.adj[i], self.ewt[i]))
+    }
+
+    fn total_vwt(&self) -> u64 {
+        self.vwt.iter().sum()
+    }
+
+    /// Build from a directed CsrGraph: symmetrize, merge parallel edges
+    /// into weights.
+    fn from_csr(g: &CsrGraph, vwt: Vec<u64>) -> WGraph {
+        let mut pairs: Vec<(u32, u32)> = Vec::with_capacity(g.m() * 2);
+        for (s, d) in g.edges() {
+            if s != d {
+                pairs.push((s.min(d), s.max(d)));
+            }
+        }
+        pairs.sort_unstable();
+        pairs.dedup(); // treat multi-arcs as weight-1 undirected edges
+        build_wgraph(g.n, &pairs, &[], vwt)
+    }
+}
+
+/// Build an undirected weighted CSR from unique (u<v) pairs; `wts` parallel
+/// to pairs or empty (=1).
+fn build_wgraph(n: usize, pairs: &[(u32, u32)], wts: &[u64], vwt: Vec<u64>) -> WGraph {
+    let mut deg = vec![0usize; n];
+    for &(u, v) in pairs {
+        deg[u as usize] += 1;
+        deg[v as usize] += 1;
+    }
+    let mut xadj = vec![0usize; n + 1];
+    for v in 0..n {
+        xadj[v + 1] = xadj[v] + deg[v];
+    }
+    let mut cursor = xadj.clone();
+    let mut adj = vec![0u32; pairs.len() * 2];
+    let mut ewt = vec![0u64; pairs.len() * 2];
+    for (i, &(u, v)) in pairs.iter().enumerate() {
+        let w = wts.get(i).copied().unwrap_or(1);
+        let cu = &mut cursor[u as usize];
+        adj[*cu] = v;
+        ewt[*cu] = w;
+        *cu += 1;
+        let cv = &mut cursor[v as usize];
+        adj[*cv] = u;
+        ewt[*cv] = w;
+        *cv += 1;
+    }
+    WGraph { n, xadj, adj, ewt, vwt }
+}
+
+/// One coarsening step: heavy-edge matching, preferring the heaviest
+/// incident edge for each unmatched vertex (visited in random order).
+/// Returns (coarse graph, map fine→coarse).
+fn coarsen(g: &WGraph, rng: &mut Rng) -> (WGraph, Vec<u32>) {
+    let n = g.n;
+    let mut order: Vec<usize> = (0..n).collect();
+    rng.shuffle(&mut order);
+    let mut mate = vec![u32::MAX; n];
+    for &v in &order {
+        if mate[v] != u32::MAX {
+            continue;
+        }
+        let mut best = u32::MAX;
+        let mut best_w = 0u64;
+        for (u, w) in g.neighbors(v) {
+            if mate[u as usize] == u32::MAX && u as usize != v && w > best_w {
+                best = u;
+                best_w = w;
+            }
+        }
+        if best != u32::MAX {
+            mate[v] = best;
+            mate[best as usize] = v as u32;
+        } else {
+            mate[v] = v as u32; // self-matched
+        }
+    }
+    // Assign coarse ids.
+    let mut cmap = vec![u32::MAX; n];
+    let mut nc = 0u32;
+    for v in 0..n {
+        if cmap[v] == u32::MAX {
+            cmap[v] = nc;
+            let m = mate[v] as usize;
+            if m != v {
+                cmap[m] = nc;
+            }
+            nc += 1;
+        }
+    }
+    // Coarse vertex weights.
+    let mut cvwt = vec![0u64; nc as usize];
+    for v in 0..n {
+        cvwt[cmap[v] as usize] += g.vwt[v];
+    }
+    // Coarse edges: merge by (min,max) pair.
+    let mut emap: std::collections::HashMap<(u32, u32), u64> = std::collections::HashMap::new();
+    for v in 0..n {
+        let cv = cmap[v];
+        for (u, w) in g.neighbors(v) {
+            let cu = cmap[u as usize];
+            if cu != cv && v < u as usize {
+                let key = (cv.min(cu), cv.max(cu));
+                *emap.entry(key).or_insert(0) += w;
+            }
+        }
+    }
+    let mut pairs: Vec<(u32, u32)> = emap.keys().copied().collect();
+    pairs.sort_unstable();
+    let wts: Vec<u64> = pairs.iter().map(|p| emap[p]).collect();
+    (build_wgraph(nc as usize, &pairs, &wts, cvwt), cmap)
+}
+
+/// Greedy graph growing k-way initial partition on the coarsest graph.
+fn initial_partition(g: &WGraph, k: usize, rng: &mut Rng) -> Vec<u32> {
+    let n = g.n;
+    let total = g.total_vwt();
+    let target = total / k as u64 + 1;
+    let mut assign = vec![u32::MAX; n];
+    let mut order: Vec<usize> = (0..n).collect();
+    // Grow from high-weight seeds for stability.
+    order.sort_unstable_by_key(|&v| std::cmp::Reverse(g.vwt[v]));
+    let mut next_seed = 0usize;
+    for p in 0..k as u32 {
+        // pick an unassigned seed
+        while next_seed < n && assign[order[next_seed]] != u32::MAX {
+            next_seed += 1;
+        }
+        if next_seed >= n {
+            break;
+        }
+        let seed = order[next_seed];
+        let mut part_w = 0u64;
+        let mut frontier = std::collections::BinaryHeap::new(); // (gain, v)
+        frontier.push((0i64, seed as u32));
+        while part_w < target {
+            let Some((_, v)) = frontier.pop() else { break };
+            let v = v as usize;
+            if assign[v] != u32::MAX {
+                continue;
+            }
+            assign[v] = p;
+            part_w += g.vwt[v];
+            for (u, w) in g.neighbors(v) {
+                if assign[u as usize] == u32::MAX {
+                    frontier.push((w as i64, u));
+                }
+            }
+            // If frontier dried up but part underweight, jump to a random
+            // unassigned vertex (disconnected graphs).
+            if frontier.is_empty() && part_w < target {
+                if let Some(u) = pick_unassigned(&assign, rng) {
+                    frontier.push((0, u as u32));
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+    // Any stragglers go to the lightest part.
+    let mut wsum = vec![0u64; k];
+    for v in 0..n {
+        if assign[v] != u32::MAX {
+            wsum[assign[v] as usize] += g.vwt[v];
+        }
+    }
+    for v in 0..n {
+        if assign[v] == u32::MAX {
+            let p = (0..k).min_by_key(|&p| wsum[p]).unwrap();
+            assign[v] = p as u32;
+            wsum[p] += g.vwt[v];
+        }
+    }
+    assign
+}
+
+fn pick_unassigned(assign: &[u32], rng: &mut Rng) -> Option<usize> {
+    let unassigned: Vec<usize> = assign
+        .iter()
+        .enumerate()
+        .filter(|(_, &a)| a == u32::MAX)
+        .map(|(i, _)| i)
+        .collect();
+    if unassigned.is_empty() {
+        None
+    } else {
+        Some(unassigned[rng.index(unassigned.len())])
+    }
+}
+
+/// Bounded FM refinement: sweep boundary vertices, move a vertex to the
+/// neighbor part with the best cut gain if balance stays within `eps`.
+/// A few passes; strictly gain-positive or balance-improving moves only.
+fn refine(g: &WGraph, assign: &mut [u32], k: usize, eps: f64, passes: usize) {
+    let total = g.total_vwt();
+    let maxw = ((total as f64 / k as f64) * (1.0 + eps)) as u64 + 1;
+    let mut wsum = vec![0u64; k];
+    for v in 0..g.n {
+        wsum[assign[v] as usize] += g.vwt[v];
+    }
+    for _ in 0..passes {
+        let mut moved = 0usize;
+        for v in 0..g.n {
+            let pv = assign[v] as usize;
+            // Tally connection weight to each neighboring part (BTreeMap
+            // for deterministic tie-breaking).
+            let mut conn: std::collections::BTreeMap<usize, u64> = std::collections::BTreeMap::new();
+            for (u, w) in g.neighbors(v) {
+                *conn.entry(assign[u as usize] as usize).or_insert(0) += w;
+            }
+            let own = conn.get(&pv).copied().unwrap_or(0);
+            let mut best_part = pv;
+            let mut best_gain = 0i64;
+            for (&p, &w) in &conn {
+                if p == pv {
+                    continue;
+                }
+                let gain = w as i64 - own as i64;
+                let fits = wsum[p] + g.vwt[v] <= maxw;
+                let better_balance = wsum[p] + g.vwt[v] < wsum[pv];
+                if fits && (gain > best_gain || (gain == best_gain && gain > 0 && better_balance)) {
+                    best_gain = gain;
+                    best_part = p;
+                }
+            }
+            if best_part != pv && best_gain > 0 {
+                wsum[pv] -= g.vwt[v];
+                wsum[best_part] += g.vwt[v];
+                assign[v] = best_part as u32;
+                moved += 1;
+            }
+        }
+        if moved == 0 {
+            break;
+        }
+    }
+}
+
+/// Options for the multilevel partitioner.
+#[derive(Clone, Debug)]
+pub struct MultilevelOpts {
+    /// Stop coarsening below this many vertices (×k).
+    pub coarsen_until_per_part: usize,
+    /// Balance tolerance ε.
+    pub eps: f64,
+    /// FM passes per level.
+    pub refine_passes: usize,
+    pub seed: u64,
+}
+
+impl Default for MultilevelOpts {
+    fn default() -> Self {
+        Self {
+            coarsen_until_per_part: 30,
+            eps: 0.05,
+            refine_passes: 4,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Multilevel k-way partition with vertex weights (see
+/// `partition::vertex_weights`).
+pub fn multilevel(g: &CsrGraph, k: usize, vwt: &[u64], opts: &MultilevelOpts) -> Partition {
+    assert!(k >= 1);
+    assert_eq!(vwt.len(), g.n);
+    if k == 1 {
+        return Partition {
+            k,
+            assign: vec![0; g.n],
+        };
+    }
+    let mut rng = Rng::new(opts.seed);
+    let base = WGraph::from_csr(g, vwt.to_vec());
+
+    // Coarsening chain.
+    let mut levels: Vec<WGraph> = vec![base];
+    let mut maps: Vec<Vec<u32>> = Vec::new();
+    let stop_at = (opts.coarsen_until_per_part * k).max(2 * k);
+    loop {
+        let top = levels.last().unwrap();
+        if top.n <= stop_at {
+            break;
+        }
+        let (coarse, cmap) = coarsen(top, &mut rng);
+        // Bail out if matching stalls (e.g. star graphs).
+        if coarse.n as f64 > top.n as f64 * 0.95 {
+            break;
+        }
+        maps.push(cmap);
+        levels.push(coarse);
+    }
+
+    // Initial partition on coarsest.
+    let coarsest = levels.last().unwrap();
+    let mut assign = initial_partition(coarsest, k, &mut rng);
+    refine(coarsest, &mut assign, k, opts.eps, opts.refine_passes);
+
+    // Uncoarsen + refine.
+    for lvl in (0..maps.len()).rev() {
+        let fine = &levels[lvl];
+        let cmap = &maps[lvl];
+        let mut fine_assign = vec![0u32; fine.n];
+        for v in 0..fine.n {
+            fine_assign[v] = assign[cmap[v] as usize];
+        }
+        refine(fine, &mut fine_assign, k, opts.eps, opts.refine_passes);
+        assign = fine_assign;
+    }
+
+    Partition { k, assign }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{erdos_renyi, rmat, sbm};
+    use crate::partition::{quality, random, vertex_weights};
+    use crate::util::propcheck::{prop_assert, propcheck};
+
+    #[test]
+    fn beats_random_on_community_graph() {
+        let lg = sbm(2000, 8, 10.0, 0.9, 4, 0.5, 21);
+        let g = &lg.graph;
+        let w = vertex_weights(g, None, 0);
+        let p = multilevel(g, 8, &w, &MultilevelOpts::default());
+        p.validate(g.n).unwrap();
+        let q = quality(g, &p, &w);
+        let qr = quality(g, &random(g.n, 8, 1), &w);
+        assert!(
+            (q.edge_cut as f64) < 0.5 * qr.edge_cut as f64,
+            "multilevel cut {} vs random cut {}",
+            q.edge_cut,
+            qr.edge_cut
+        );
+        assert!(q.weight_imbalance < 1.35, "imbalance {}", q.weight_imbalance);
+    }
+
+    #[test]
+    fn handles_powerlaw() {
+        let g = rmat(11, 8.0, 0.57, 0.19, 0.19, true, 2);
+        let w = vertex_weights(&g, None, 0);
+        let p = multilevel(&g, 4, &w, &MultilevelOpts::default());
+        p.validate(g.n).unwrap();
+        let q = quality(&g, &p, &w);
+        let qr = quality(&g, &random(g.n, 4, 7), &w);
+        assert!(q.edge_cut < qr.edge_cut);
+    }
+
+    #[test]
+    fn k1_trivial() {
+        let g = erdos_renyi(50, 200, 1);
+        let w = vertex_weights(&g, None, 0);
+        let p = multilevel(&g, 1, &w, &MultilevelOpts::default());
+        assert!(p.assign.iter().all(|&x| x == 0));
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = erdos_renyi(500, 3000, 4);
+        let w = vertex_weights(&g, None, 0);
+        let a = multilevel(&g, 4, &w, &MultilevelOpts::default());
+        let b = multilevel(&g, 4, &w, &MultilevelOpts::default());
+        assert_eq!(a.assign, b.assign);
+    }
+
+    #[test]
+    fn prop_valid_partition_any_graph() {
+        propcheck(24, |gen| {
+            let n = gen.usize(2, 300);
+            let m = gen.usize(0, 900);
+            let edges = gen.edges(n, m, false);
+            let g = CsrGraph::from_edges(n, &edges);
+            let k = gen.usize(2, 6).min(n);
+            let w = vertex_weights(&g, None, 0);
+            let p = multilevel(&g, k, &w, &MultilevelOpts::default());
+            p.validate(n).map_err(|e| e.to_string())?;
+            // Every part id used at most k; all nodes assigned.
+            prop_assert(p.assign.len() == n, "assign length")?;
+            // Balance within a generous bound even for adversarial graphs.
+            let q = quality(&g, &p, &w);
+            prop_assert(
+                q.weight_imbalance <= k as f64,
+                format!("wild imbalance {}", q.weight_imbalance),
+            )
+        });
+    }
+
+    #[test]
+    fn disconnected_graph_ok() {
+        // Two cliques with no inter-edges: 2-way partition should cut 0.
+        let mut edges = Vec::new();
+        for u in 0..10u32 {
+            for v in 0..10u32 {
+                if u != v {
+                    edges.push((u, v));
+                }
+            }
+        }
+        for u in 10..20u32 {
+            for v in 10..20u32 {
+                if u != v {
+                    edges.push((u, v));
+                }
+            }
+        }
+        let g = CsrGraph::from_edges(20, &edges);
+        let w = vertex_weights(&g, None, 0);
+        let p = multilevel(&g, 2, &w, &MultilevelOpts::default());
+        let q = quality(&g, &p, &w);
+        assert_eq!(q.edge_cut, 0, "should separate the cliques");
+    }
+
+    #[test]
+    fn train_mask_balances_samples() {
+        // All train nodes in the first half by id; weighted partitioning
+        // should still spread them.
+        let lg = sbm(1200, 4, 8.0, 0.85, 4, 0.5, 33);
+        let g = &lg.graph;
+        let mask: Vec<bool> = (0..g.n).map(|v| v < 300).collect();
+        let w = vertex_weights(g, Some(&mask), 50);
+        let p = multilevel(g, 4, &w, &MultilevelOpts::default());
+        let mut train_per_part = vec![0usize; 4];
+        for v in 0..g.n {
+            if mask[v] {
+                train_per_part[p.assign[v] as usize] += 1;
+            }
+        }
+        let max = *train_per_part.iter().max().unwrap();
+        assert!(max < 300, "train samples concentrated: {train_per_part:?}");
+    }
+}

@@ -1,0 +1,361 @@
+//! Optimized quantization kernels (paper §7.3).
+//!
+//! Mirrors all four published optimizations:
+//! 1. **Decentralized**: no synchronization — each (group, seed) quantizes
+//!    independently; params travel with the payload.
+//! 2. **Fusion**: stats and quantization are fused over one cache-resident
+//!    4-row group (retrieve 4 rows once, compute min/max, quantize while
+//!    hot).
+//! 3. **Latency reduction**: the per-element division is replaced by a
+//!    precomputed reciprocal multiply, and the sequential RNG in the
+//!    rounding loop is replaced by *counter-based* noise (a stateless
+//!    integer mix of the flat element index), which removes the loop-
+//!    carried dependency chain entirely.
+//! 4. **Vectorization**: inner loops run over fixed-width chunks with no
+//!    branches so the compiler auto-vectorizes them; int2 packing happens
+//!    in-register, 4 codes → 1 byte.
+
+use super::packing::packed_len;
+use super::{Bits, Quantized, GROUP_ROWS};
+
+/// Counter-based noise in [0,1): one round of splitmix-style mixing of the
+/// element counter. Stateless ⇒ no dependency chain, vectorizable.
+#[inline(always)]
+fn counter_noise(seed: u64, idx: u64) -> f32 {
+    let mut z = seed ^ idx.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z ^= z >> 31;
+    ((z >> 40) as u32) as f32 * (1.0 / (1u32 << 24) as f32)
+}
+
+/// Four noise lanes from ONE mix (§Perf: the per-element hash dominated
+/// the kernel; one 64-bit mix yields 4×16-bit uniform lanes — 16 bits is
+/// plenty for stochastic rounding between ≤256 levels).
+#[inline(always)]
+fn noise4(seed: u64, counter: u64) -> [f32; 4] {
+    let mut z = seed ^ counter.wrapping_mul(0x9E3779B97F4A7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z ^= z >> 31;
+    const S: f32 = 1.0 / 65536.0;
+    [
+        (z & 0xFFFF) as f32 * S,
+        ((z >> 16) & 0xFFFF) as f32 * S,
+        ((z >> 32) & 0xFFFF) as f32 * S,
+        ((z >> 48) & 0xFFFF) as f32 * S,
+    ]
+}
+
+/// Quantize one value: `t = (v-zero)·inv + u`; `t ≥ 0` by construction so
+/// the f32→u32 cast truncates like `floor` and saturates at 0 (§Perf:
+/// replaces floor + clamp).
+#[inline(always)]
+fn code_of(v: f32, zero: f32, inv_scale: f32, noise: f32, max_code: u32) -> u8 {
+    let t = (v - zero) * inv_scale + noise;
+    (t as u32).min(max_code) as u8
+}
+
+/// Fused min/max over a slice, chunked for vectorization.
+#[inline]
+fn minmax(xs: &[f32]) -> (f32, f32) {
+    const W: usize = 8;
+    let mut mns = [f32::INFINITY; W];
+    let mut mxs = [f32::NEG_INFINITY; W];
+    let chunks = xs.chunks_exact(W);
+    let rem = chunks.remainder();
+    for c in chunks {
+        for i in 0..W {
+            mns[i] = mns[i].min(c[i]);
+            mxs[i] = mxs[i].max(c[i]);
+        }
+    }
+    let mut mn = rem.iter().copied().fold(f32::INFINITY, f32::min);
+    let mut mx = rem.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    for i in 0..W {
+        mn = mn.min(mns[i]);
+        mx = mx.max(mxs[i]);
+    }
+    (mn, mx)
+}
+
+/// Quantize into preallocated buffers (no allocation on the comm hot path).
+pub fn quantize_into(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    bits: Bits,
+    seed: u64,
+    params: &mut Vec<(f32, f32)>,
+    data: &mut Vec<u8>,
+) {
+    assert_eq!(x.len(), rows * cols);
+    params.clear();
+    data.clear();
+    params.reserve(rows.div_ceil(GROUP_ROWS));
+    data.reserve(rows.div_ceil(GROUP_ROWS) * super::packing::packed_len(GROUP_ROWS * cols, bits));
+    let max_code = bits.max_code() as f32;
+    for g in (0..rows).step_by(GROUP_ROWS) {
+        let g_rows = GROUP_ROWS.min(rows - g);
+        let slice = &x[g * cols..(g + g_rows) * cols];
+        let (mn, mx) = minmax(slice);
+        let (zero, scale) = if mn.is_finite() && mx > mn {
+            (mn, (mx - mn) / max_code)
+        } else {
+            (if mn.is_finite() { mn } else { 0.0 }, 0.0)
+        };
+        params.push((zero, scale));
+        // Reciprocal-multiply instead of division (§7.3(3)).
+        let inv_scale = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        let base = (g * cols) as u64;
+        let mc = max_code as u32;
+        match bits {
+            Bits::Int2 => {
+                let mut it = slice.chunks_exact(4);
+                let mut idx = 0u64;
+                for quad in &mut it {
+                    // One hash serves the 4 codes of this byte.
+                    let nz = noise4(seed, base + idx);
+                    let mut byte = 0u8;
+                    // branch-free: scale==0 ⇒ inv_scale==0 ⇒ code 0
+                    for i in 0..4 {
+                        byte |= code_of(quad[i], zero, inv_scale, nz[i], mc) << (2 * i);
+                    }
+                    data.push(byte);
+                    idx += 4;
+                }
+                let rem = it.remainder();
+                if !rem.is_empty() {
+                    let nz = noise4(seed, base + idx);
+                    let mut byte = 0u8;
+                    for (i, &v) in rem.iter().enumerate() {
+                        byte |= code_of(v, zero, inv_scale, nz[i], mc) << (2 * i);
+                    }
+                    data.push(byte);
+                }
+            }
+            Bits::Int4 => {
+                let mut it = slice.chunks_exact(4);
+                let mut idx = 0u64;
+                for quad in &mut it {
+                    let nz = noise4(seed, base + idx);
+                    let c0 = code_of(quad[0], zero, inv_scale, nz[0], mc);
+                    let c1 = code_of(quad[1], zero, inv_scale, nz[1], mc);
+                    let c2 = code_of(quad[2], zero, inv_scale, nz[2], mc);
+                    let c3 = code_of(quad[3], zero, inv_scale, nz[3], mc);
+                    data.push(c0 | (c1 << 4));
+                    data.push(c2 | (c3 << 4));
+                    idx += 4;
+                }
+                let rem = it.remainder();
+                if !rem.is_empty() {
+                    let nz = noise4(seed, base + idx);
+                    let mut byte = 0u8;
+                    for (i, &v) in rem.iter().enumerate() {
+                        let c = code_of(v, zero, inv_scale, nz[i], mc);
+                        if i % 2 == 0 {
+                            byte = c;
+                            if i + 1 == rem.len() {
+                                data.push(byte);
+                            }
+                        } else {
+                            data.push(byte | (c << 4));
+                        }
+                    }
+                }
+            }
+            Bits::Int8 => {
+                let mut it = slice.chunks_exact(4);
+                let mut idx = 0u64;
+                for quad in &mut it {
+                    let nz = noise4(seed, base + idx);
+                    for i in 0..4 {
+                        data.push(code_of(quad[i], zero, inv_scale, nz[i], mc));
+                    }
+                    idx += 4;
+                }
+                let rem = it.remainder();
+                if !rem.is_empty() {
+                    let nz = noise4(seed, base + idx);
+                    for (i, &v) in rem.iter().enumerate() {
+                        data.push(code_of(v, zero, inv_scale, nz[i], mc));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Allocating wrapper around [`quantize_into`].
+pub fn quantize(x: &[f32], rows: usize, cols: usize, bits: Bits, seed: u64) -> Quantized {
+    let mut params = Vec::new();
+    let mut data = Vec::new();
+    quantize_into(x, rows, cols, bits, seed, &mut params, &mut data);
+    Quantized {
+        bits,
+        rows,
+        cols,
+        params,
+        data,
+    }
+}
+
+/// Dequantize into a preallocated output (len = rows*cols).
+pub fn dequantize_into(q: &Quantized, out: &mut [f32]) {
+    assert_eq!(out.len(), q.rows * q.cols);
+    let mut data_off = 0usize;
+    for (gi, &(zero, scale)) in q.params.iter().enumerate() {
+        let g = gi * GROUP_ROWS;
+        let g_rows = GROUP_ROWS.min(q.rows - g);
+        let n = g_rows * q.cols;
+        let bytes = &q.data[data_off..data_off + packed_len(n, q.bits)];
+        data_off += bytes.len();
+        let dst = &mut out[g * q.cols..g * q.cols + n];
+        match q.bits {
+            Bits::Int2 => {
+                // 4 codes per byte, unpacked with shifts; multiply-add.
+                let full = n / 4;
+                for bi in 0..full {
+                    let b = bytes[bi];
+                    let o = bi * 4;
+                    dst[o] = (b & 0x3) as f32 * scale + zero;
+                    dst[o + 1] = ((b >> 2) & 0x3) as f32 * scale + zero;
+                    dst[o + 2] = ((b >> 4) & 0x3) as f32 * scale + zero;
+                    dst[o + 3] = ((b >> 6) & 0x3) as f32 * scale + zero;
+                }
+                for i in full * 4..n {
+                    let b = bytes[i / 4];
+                    dst[i] = ((b >> (2 * (i % 4))) & 0x3) as f32 * scale + zero;
+                }
+            }
+            Bits::Int4 => {
+                for i in 0..n {
+                    let b = bytes[i / 2];
+                    dst[i] = ((b >> (4 * (i % 2))) & 0xF) as f32 * scale + zero;
+                }
+            }
+            Bits::Int8 => {
+                for i in 0..n {
+                    dst[i] = bytes[i] as f32 * scale + zero;
+                }
+            }
+        }
+    }
+}
+
+/// Allocating wrapper around [`dequantize_into`].
+pub fn dequantize(q: &Quantized) -> Vec<f32> {
+    let mut out = vec![0f32; q.rows * q.cols];
+    dequantize_into(q, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{error_bound, naive};
+    use crate::util::propcheck::{prop_assert, propcheck};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_error_bound_like_naive() {
+        let mut rng = Rng::new(8);
+        let (rows, cols) = (17, 33);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.f32() * 8.0 - 4.0).collect();
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            let q = quantize(&x, rows, cols, bits, 1);
+            let y = dequantize(&q);
+            let bound = error_bound(&q.params) + 1e-5;
+            for (a, b) in x.iter().zip(y.iter()) {
+                assert!((a - b).abs() <= bound, "{}: {a} vs {b}", bits.name());
+            }
+        }
+    }
+
+    #[test]
+    fn params_match_naive_exactly() {
+        // Optimized and naive must derive identical (zero, scale) params —
+        // only the rounding noise differs.
+        let mut rng = Rng::new(4);
+        let (rows, cols) = (9, 16);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.f32()).collect();
+        for bits in [Bits::Int2, Bits::Int8] {
+            let a = quantize(&x, rows, cols, bits, 7);
+            let b = naive::quantize(&x, rows, cols, bits, 7);
+            for ((z1, s1), (z2, s2)) in a.params.iter().zip(b.params.iter()) {
+                assert!((z1 - z2).abs() < 1e-6 && (s1 - s2).abs() < 1e-6);
+            }
+            assert_eq!(a.data.len(), b.data.len());
+        }
+    }
+
+    #[test]
+    fn naive_dequant_reads_fused_output() {
+        // The two implementations share the wire format.
+        let mut rng = Rng::new(5);
+        let x: Vec<f32> = (0..8 * 24).map(|_| rng.f32() * 2.0 - 1.0).collect();
+        let q = quantize(&x, 8, 24, Bits::Int2, 3);
+        let y1 = dequantize(&q);
+        let y2 = naive::dequantize(&q);
+        assert_eq!(y1, y2);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let x: Vec<f32> = (0..256).map(|i| (i as f32).sin()).collect();
+        let a = quantize(&x, 8, 32, Bits::Int2, 9);
+        let b = quantize(&x, 8, 32, Bits::Int2, 9);
+        assert_eq!(a, b);
+        let c = quantize(&x, 8, 32, Bits::Int2, 10);
+        assert_ne!(a.data, c.data);
+    }
+
+    #[test]
+    fn unbiased_rounding() {
+        let cols = 2000;
+        let mut x = vec![0.5f32; 4 * cols]; // exactly between codes with scale 1/3... set range
+        x[0] = 0.0;
+        x[1] = 3.0;
+        let mut acc = 0.0f64;
+        let trials = 300;
+        for t in 0..trials {
+            let q = quantize(&x, 4, cols, Bits::Int2, t as u64);
+            let y = dequantize(&q);
+            acc += y[100] as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - 0.5).abs() < 0.05, "biased: {mean}");
+    }
+
+    #[test]
+    fn prop_fused_roundtrip() {
+        propcheck(32, |gen| {
+            let rows = gen.usize(1, 30);
+            let cols = gen.usize(1, 50);
+            let x = gen.vec_f32(rows * cols, -50.0, 50.0);
+            for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+                let q = quantize(&x, rows, cols, bits, gen.rng.next_u64());
+                let y = dequantize(&q);
+                let bound = error_bound(&q.params) * 1.0001 + 1e-4;
+                for (&a, &b) in x.iter().zip(y.iter()) {
+                    prop_assert(
+                        (a - b).abs() <= bound,
+                        format!("{}: {a} vs {b} (bound {bound})", bits.name()),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn counter_noise_is_uniform_ish() {
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|i| counter_noise(42, i) as f64).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+        // No obvious correlation between consecutive counters.
+        let corr: f64 = (0..n - 1)
+            .map(|i| (counter_noise(42, i) as f64 - 0.5) * (counter_noise(42, i + 1) as f64 - 0.5))
+            .sum::<f64>()
+            / (n - 1) as f64;
+        assert!(corr.abs() < 0.01, "corr {corr}");
+    }
+}

@@ -1,0 +1,148 @@
+//! Communication-aware stochastic integer quantization (paper §6, §7.3).
+//!
+//! FP32 feature rows are quantized to intX (X ∈ {2,4,8}) in groups of
+//! `GROUP_ROWS = 4` rows: each group stores a zero-point `Z = min` and a
+//! scale `S = (max − min)/(2^b − 1)` as FP32 "params" that travel with the
+//! payload (Eqn 5's `Params` term). Rounding is stochastic
+//! (`⌊x + u⌋`, `u ∼ U[0,1)`), which keeps the dequantized message an
+//! unbiased estimator — the property Lemma 1's convergence argument needs.
+//!
+//! Two implementations are provided:
+//! * [`naive`]  — two-pass, division in the inner loop, generator state
+//!   threaded through every element (the baseline the paper starts from),
+//! * [`fused`]  — the paper's §7.3 optimized kernel: fused stats+quant
+//!   over 4-row groups, reciprocal-multiply instead of division, counter-
+//!   based noise with no sequential RNG dependency, chunked inner loops
+//!   that auto-vectorize, and in-register int2 packing.
+
+pub mod fused;
+pub mod naive;
+pub mod packing;
+
+/// Bit width of the quantized payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Bits {
+    Int2,
+    Int4,
+    Int8,
+}
+
+impl Bits {
+    pub fn bits(&self) -> usize {
+        match self {
+            Bits::Int2 => 2,
+            Bits::Int4 => 4,
+            Bits::Int8 => 8,
+        }
+    }
+    /// Number of quantization levels − 1 (max code).
+    pub fn max_code(&self) -> u32 {
+        (1u32 << self.bits()) - 1
+    }
+    /// Values packed per byte.
+    pub fn per_byte(&self) -> usize {
+        8 / self.bits()
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Bits::Int2 => "int2",
+            Bits::Int4 => "int4",
+            Bits::Int8 => "int8",
+        }
+    }
+}
+
+/// Rows per parameter group (fixed to 4 per §7.3(2): four int2 values pack
+/// into one byte, and stats are fused over the same 4 rows).
+pub const GROUP_ROWS: usize = 4;
+
+/// A quantized message: packed codes + per-group (zero, scale) params.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Quantized {
+    pub bits: Bits,
+    pub rows: usize,
+    pub cols: usize,
+    /// ceil(rows/GROUP_ROWS) pairs of (zero_point, scale).
+    pub params: Vec<(f32, f32)>,
+    /// Packed codes, groups back to back; each group is
+    /// `ceil(group_rows*cols*bits/8)` bytes with row-major code order.
+    pub data: Vec<u8>,
+}
+
+impl Quantized {
+    pub fn n_groups(&self) -> usize {
+        self.rows.div_ceil(GROUP_ROWS)
+    }
+
+    /// Wire size in bytes: payload + params (Eqn 5's numerator).
+    pub fn payload_bytes(&self) -> usize {
+        self.data.len()
+    }
+    pub fn param_bytes(&self) -> usize {
+        self.params.len() * 8
+    }
+    pub fn wire_bytes(&self) -> usize {
+        self.payload_bytes() + self.param_bytes()
+    }
+}
+
+/// Compute (zero, scale) for a slice per §2.4.
+#[inline]
+pub fn group_params(vals: &[f32], bits: Bits) -> (f32, f32) {
+    let mut mn = f32::INFINITY;
+    let mut mx = f32::NEG_INFINITY;
+    for &v in vals {
+        mn = mn.min(v);
+        mx = mx.max(v);
+    }
+    if !mn.is_finite() || !mx.is_finite() {
+        return (0.0, 0.0);
+    }
+    let scale = (mx - mn) / bits.max_code() as f32;
+    (mn, scale)
+}
+
+/// Quantization error bound: |dequant(x) − x| ≤ scale (stochastic rounding
+/// can land on either neighbor). Used by tests.
+pub fn error_bound(params: &[(f32, f32)]) -> f32 {
+    params.iter().map(|&(_, s)| s).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bits_arithmetic() {
+        assert_eq!(Bits::Int2.max_code(), 3);
+        assert_eq!(Bits::Int4.max_code(), 15);
+        assert_eq!(Bits::Int8.max_code(), 255);
+        assert_eq!(Bits::Int2.per_byte(), 4);
+        assert_eq!(Bits::Int8.per_byte(), 1);
+    }
+
+    #[test]
+    fn group_params_range() {
+        let (z, s) = group_params(&[1.0, 5.0, 3.0], Bits::Int2);
+        assert_eq!(z, 1.0);
+        assert!((s - 4.0 / 3.0).abs() < 1e-6);
+        // Constant slice → scale 0.
+        let (z2, s2) = group_params(&[2.5, 2.5], Bits::Int8);
+        assert_eq!((z2, s2), (2.5, 0.0));
+    }
+
+    #[test]
+    fn wire_bytes_accounting() {
+        let q = Quantized {
+            bits: Bits::Int2,
+            rows: 8,
+            cols: 16,
+            params: vec![(0.0, 1.0); 2],
+            data: vec![0; 2 * (4 * 16 * 2) / 8],
+        };
+        assert_eq!(q.n_groups(), 2);
+        assert_eq!(q.payload_bytes(), 32);
+        assert_eq!(q.param_bytes(), 16);
+        assert_eq!(q.wire_bytes(), 48);
+    }
+}

@@ -1,0 +1,158 @@
+//! Baseline quantizer: the straightforward implementation the paper's
+//! §7.3 optimizations start from. Two passes per group (stats, then
+//! quantize), a division per element, and a sequential RNG dependency in
+//! the rounding loop. Kept as the ablation baseline for the
+//! `quant_ablation` bench and as the readable reference for tests.
+
+use super::packing::pack;
+use super::{group_params, Bits, Quantized, GROUP_ROWS};
+use crate::util::rng::Rng;
+
+/// Quantize a row-major `rows × cols` matrix.
+pub fn quantize(x: &[f32], rows: usize, cols: usize, bits: Bits, seed: u64) -> Quantized {
+    assert_eq!(x.len(), rows * cols);
+    let mut rng = Rng::new(seed);
+    let mut params = Vec::with_capacity(rows.div_ceil(GROUP_ROWS));
+    let mut data = Vec::new();
+    let max_code = bits.max_code() as f32;
+    let mut codes = Vec::new();
+    for g in (0..rows).step_by(GROUP_ROWS) {
+        let g_rows = GROUP_ROWS.min(rows - g);
+        let slice = &x[g * cols..(g + g_rows) * cols];
+        // Pass 1: stats.
+        let (zero, scale) = group_params(slice, bits);
+        params.push((zero, scale));
+        // Pass 2: quantize with stochastic rounding (division + RNG call
+        // per element — the slow path).
+        codes.clear();
+        for &v in slice {
+            let code = if scale == 0.0 {
+                0.0
+            } else {
+                let t = (v - zero) / scale; // long-latency division
+                let noise = rng.f32(); // sequential RNG dependency
+                (t + noise).floor().clamp(0.0, max_code)
+            };
+            codes.push(code as u32);
+        }
+        pack(&codes, bits, &mut data);
+    }
+    Quantized {
+        bits,
+        rows,
+        cols,
+        params,
+        data,
+    }
+}
+
+/// Dequantize back to f32 (element-wise `code*scale + zero`).
+pub fn dequantize(q: &Quantized) -> Vec<f32> {
+    let mut out = vec![0f32; q.rows * q.cols];
+    let mut codes = Vec::new();
+    let mut data_off = 0usize;
+    for (gi, &(zero, scale)) in q.params.iter().enumerate() {
+        let g = gi * GROUP_ROWS;
+        let g_rows = GROUP_ROWS.min(q.rows - g);
+        let n = g_rows * q.cols;
+        let nbytes = super::packing::packed_len(n, q.bits);
+        codes.clear();
+        super::packing::unpack(&q.data[data_off..data_off + nbytes], q.bits, n, &mut codes);
+        data_off += nbytes;
+        for (i, &c) in codes.iter().enumerate() {
+            out[g * q.cols + i] = c as f32 * scale + zero;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::error_bound;
+    use crate::util::propcheck::{prop_assert, propcheck};
+
+    #[test]
+    fn roundtrip_error_within_bound() {
+        let mut rng = Rng::new(3);
+        let (rows, cols) = (13, 7);
+        let x: Vec<f32> = (0..rows * cols).map(|_| rng.f32() * 10.0 - 5.0).collect();
+        for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+            let q = quantize(&x, rows, cols, bits, 42);
+            let y = dequantize(&q);
+            let bound = error_bound(&q.params) + 1e-5;
+            for (a, b) in x.iter().zip(y.iter()) {
+                assert!(
+                    (a - b).abs() <= bound,
+                    "{} err {} > bound {}",
+                    bits.name(),
+                    (a - b).abs(),
+                    bound
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn constant_input_is_exact() {
+        let x = vec![3.25f32; 4 * 8];
+        let q = quantize(&x, 4, 8, Bits::Int2, 1);
+        let y = dequantize(&q);
+        assert_eq!(x, y);
+    }
+
+    #[test]
+    fn stochastic_rounding_unbiased() {
+        // Quantize the same constant mid-point value many times; the mean
+        // dequantized value must converge to the input.
+        let cols = 1000;
+        // Group contains the range-setters 0 and 3 plus mid values 1.5.
+        let mut x = vec![1.5f32; 4 * cols];
+        x[0] = 0.0;
+        x[1] = 3.0;
+        let mut acc = vec![0f64; x.len()];
+        let trials = 200;
+        for t in 0..trials {
+            let q = quantize(&x, 4, cols, Bits::Int2, t as u64);
+            let y = dequantize(&q);
+            for (a, &b) in acc.iter_mut().zip(y.iter()) {
+                *a += b as f64;
+            }
+        }
+        // scale = 1.0, so 1.5 sits exactly between codes 1 and 2.
+        let mean = acc[2 + cols] / trials as f64; // an interior 1.5 element
+        assert!((mean - 1.5).abs() < 0.1, "biased rounding: mean {mean}");
+    }
+
+    #[test]
+    fn prop_roundtrip_all_shapes() {
+        propcheck(32, |gen| {
+            let rows = gen.usize(1, 22);
+            let cols = gen.usize(1, 40);
+            let x = gen.vec_f32(rows * cols, -100.0, 100.0);
+            for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+                let q = quantize(&x, rows, cols, bits, gen.rng.next_u64());
+                prop_assert(q.n_groups() == rows.div_ceil(GROUP_ROWS), "group count")?;
+                let y = dequantize(&q);
+                let bound = error_bound(&q.params) * 1.0001 + 1e-4;
+                for (i, (&a, &b)) in x.iter().zip(y.iter()).enumerate() {
+                    prop_assert(
+                        (a - b).abs() <= bound,
+                        format!("{}: err at {i}: {a} vs {b} bound {bound}", bits.name()),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wire_size_reduction_ratio() {
+        let x = vec![0.5f32; 64 * 128];
+        let q = quantize(&x, 64, 128, Bits::Int2, 0);
+        let fp32_bytes = 64 * 128 * 4;
+        // γ = 16 payload reduction; params add α⁻¹ overhead.
+        assert_eq!(q.payload_bytes() * 16, fp32_bytes);
+        assert!(q.param_bytes() < fp32_bytes / 100);
+    }
+}

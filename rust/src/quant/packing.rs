@@ -1,0 +1,114 @@
+//! Bit-packing of quantization codes: 4×int2 / 2×int4 / 1×int8 per byte.
+
+use super::Bits;
+
+/// Pack a slice of codes (each ≤ max_code) into bytes.
+pub fn pack(codes: &[u32], bits: Bits, out: &mut Vec<u8>) {
+    match bits {
+        Bits::Int8 => {
+            out.extend(codes.iter().map(|&c| c as u8));
+        }
+        Bits::Int4 => {
+            let mut it = codes.chunks_exact(2);
+            for pair in &mut it {
+                out.push((pair[0] as u8) | ((pair[1] as u8) << 4));
+            }
+            if let [last] = it.remainder() {
+                out.push(*last as u8);
+            }
+        }
+        Bits::Int2 => {
+            let mut it = codes.chunks_exact(4);
+            for quad in &mut it {
+                out.push(
+                    (quad[0] as u8)
+                        | ((quad[1] as u8) << 2)
+                        | ((quad[2] as u8) << 4)
+                        | ((quad[3] as u8) << 6),
+                );
+            }
+            let rem = it.remainder();
+            if !rem.is_empty() {
+                let mut b = 0u8;
+                for (i, &c) in rem.iter().enumerate() {
+                    b |= (c as u8) << (2 * i);
+                }
+                out.push(b);
+            }
+        }
+    }
+}
+
+/// Unpack `n` codes from bytes.
+pub fn unpack(bytes: &[u8], bits: Bits, n: usize, out: &mut Vec<u32>) {
+    out.reserve(n);
+    match bits {
+        Bits::Int8 => {
+            out.extend(bytes[..n].iter().map(|&b| b as u32));
+        }
+        Bits::Int4 => {
+            for i in 0..n {
+                let b = bytes[i / 2];
+                out.push(((b >> (4 * (i % 2))) & 0xF) as u32);
+            }
+        }
+        Bits::Int2 => {
+            for i in 0..n {
+                let b = bytes[i / 4];
+                out.push(((b >> (2 * (i % 4))) & 0x3) as u32);
+            }
+        }
+    }
+}
+
+/// Bytes needed for `n` codes.
+pub fn packed_len(n: usize, bits: Bits) -> usize {
+    n.div_ceil(bits.per_byte())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{prop_assert, propcheck};
+
+    #[test]
+    fn known_int2_packing() {
+        let mut out = Vec::new();
+        pack(&[0, 1, 2, 3], Bits::Int2, &mut out);
+        assert_eq!(out, vec![0b11_10_01_00]);
+    }
+
+    #[test]
+    fn known_int4_packing() {
+        let mut out = Vec::new();
+        pack(&[0xA, 0x5, 0xF], Bits::Int4, &mut out);
+        assert_eq!(out, vec![0x5A, 0x0F]);
+    }
+
+    #[test]
+    fn prop_roundtrip_all_widths() {
+        propcheck(48, |gen| {
+            let n = gen.usize(0, 200);
+            for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+                let codes: Vec<u32> =
+                    (0..n).map(|_| gen.rng.below(bits.max_code() as u64 + 1) as u32).collect();
+                let mut packed = Vec::new();
+                pack(&codes, bits, &mut packed);
+                prop_assert(
+                    packed.len() == packed_len(n, bits),
+                    format!("packed_len mismatch for {}", bits.name()),
+                )?;
+                let mut un = Vec::new();
+                unpack(&packed, bits, n, &mut un);
+                prop_assert(un == codes, format!("roundtrip failed for {}", bits.name()))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn int2_is_16x_smaller_than_f32() {
+        let n = 1024;
+        assert_eq!(packed_len(n, Bits::Int2) * 16, n * 4);
+    }
+}

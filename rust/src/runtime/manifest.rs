@@ -1,0 +1,160 @@
+//! Artifact manifest: the JSON contract between `python/compile/aot.py`
+//! and the Rust runtime/trainer. Shapes here are the static padded dims
+//! every worker's tensors must conform to.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Static shape configuration of one artifact set (mirrors aot.Config).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShapeConfig {
+    pub name: String,
+    /// Padded local nodes, incl. zero row (n_pad−2) and trash row (n_pad−1).
+    pub n_pad: usize,
+    pub f_in: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    pub e_local: usize,
+    pub e_pre: usize,
+    /// Pre segments incl. the trailing trash segment.
+    pub p_pre: usize,
+    pub r_pre: usize,
+    /// Received post rows incl. the trailing zero row.
+    pub r_post: usize,
+    pub e_post: usize,
+}
+
+impl ShapeConfig {
+    pub fn zero_row(&self) -> usize {
+        self.n_pad - 2
+    }
+    pub fn trash_row(&self) -> usize {
+        self.n_pad - 1
+    }
+    /// (fin, fout, relu) per layer — the 3-layer GraphSAGE of the paper.
+    pub fn layer_dims(&self) -> [(usize, usize, bool); 3] {
+        [
+            (self.f_in, self.hidden, true),
+            (self.hidden, self.hidden, true),
+            (self.hidden, self.classes, false),
+        ]
+    }
+    /// Number of usable local rows (excluding the two reserved).
+    pub fn usable_rows(&self) -> usize {
+        self.n_pad - 2
+    }
+}
+
+/// One config entry: shapes + role → artifact-file map.
+#[derive(Clone, Debug)]
+pub struct ConfigEntry {
+    pub shapes: ShapeConfig,
+    pub artifacts: HashMap<String, String>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub eb: usize,
+    pub configs: Vec<ConfigEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).context("manifest is not valid JSON")?;
+        let eb = v.req_usize("eb")?;
+        let mut configs = Vec::new();
+        for c in v
+            .get("configs")
+            .and_then(|c| c.as_arr())
+            .context("manifest missing configs[]")?
+        {
+            let shapes = ShapeConfig {
+                name: c.req_str("name")?.to_string(),
+                n_pad: c.req_usize("n_pad")?,
+                f_in: c.req_usize("f_in")?,
+                hidden: c.req_usize("hidden")?,
+                classes: c.req_usize("classes")?,
+                e_local: c.req_usize("e_local")?,
+                e_pre: c.req_usize("e_pre")?,
+                p_pre: c.req_usize("p_pre")?,
+                r_pre: c.req_usize("r_pre")?,
+                r_post: c.req_usize("r_post")?,
+                e_post: c.req_usize("e_post")?,
+            };
+            let mut artifacts = HashMap::new();
+            for (role, meta) in c
+                .get("artifacts")
+                .and_then(|a| a.as_obj())
+                .context("config missing artifacts{}")?
+            {
+                artifacts.insert(role.clone(), meta.req_str("file")?.to_string());
+            }
+            configs.push(ConfigEntry { shapes, artifacts });
+        }
+        Ok(Self { eb, configs })
+    }
+
+    pub fn config(&self, name: &str) -> Option<&ConfigEntry> {
+        self.configs.iter().find(|c| c.shapes.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "eb": 128,
+      "configs": [{
+        "name": "tiny", "n_pad": 256, "f_in": 16, "hidden": 16, "classes": 4,
+        "e_local": 1024, "e_pre": 256, "p_pre": 128, "r_pre": 128,
+        "r_post": 128, "e_post": 256,
+        "artifacts": {
+          "loss_head": {"file": "tiny_loss_head.hlo.txt", "inputs": [], "outputs": []}
+        }
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.eb, 128);
+        let c = m.config("tiny").unwrap();
+        assert_eq!(c.shapes.n_pad, 256);
+        assert_eq!(c.shapes.zero_row(), 254);
+        assert_eq!(c.shapes.trash_row(), 255);
+        assert_eq!(c.artifacts["loss_head"], "tiny_loss_head.hlo.txt");
+        let dims = c.shapes.layer_dims();
+        assert_eq!(dims[0], (16, 16, true));
+        assert_eq!(dims[2], (16, 4, false));
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"eb": 128, "configs": [{"name": "x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if p.exists() {
+            let m = Manifest::load(&p).unwrap();
+            assert!(m.config("tiny").is_some());
+            assert!(m.config("quickstart").is_some());
+            for c in &m.configs {
+                assert!(c.artifacts.contains_key("loss_head"));
+                assert!(c.artifacts.len() >= 9);
+            }
+        }
+    }
+}

@@ -1,0 +1,193 @@
+//! PJRT runtime: load AOT'd HLO-text artifacts and execute them from the
+//! training hot path (Python is never involved at runtime).
+//!
+//! Flow per artifact: `HloModuleProto::from_text_file` → `XlaComputation`
+//! → `PjRtClient::compile` (once, cached) → `execute` per call.
+//! Interchange is HLO *text*: jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects in proto form; the text parser reassigns
+//! ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+pub use manifest::{Manifest, ShapeConfig};
+
+/// A PJRT client + the executable cache for one artifact config.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    /// role → compiled executable (lazy).
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// role → artifact file (from the manifest).
+    files: HashMap<String, String>,
+    pub config: ShapeConfig,
+}
+
+impl Runtime {
+    /// Load `artifacts/manifest.json` and prepare the named config.
+    pub fn load(artifacts_dir: &Path, config_name: &str) -> Result<Self> {
+        let manifest = Manifest::load(&artifacts_dir.join("manifest.json"))
+            .context("loading artifact manifest (run `make artifacts` first)")?;
+        let cfg = manifest
+            .config(config_name)
+            .with_context(|| format!("config '{config_name}' not in manifest"))?;
+        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+        Ok(Self {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            exes: HashMap::new(),
+            files: cfg.artifacts.clone(),
+            config: cfg.shapes.clone(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) the executable for `role`.
+    fn exe(&mut self, role: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.exes.contains_key(role) {
+            let file = self
+                .files
+                .get(role)
+                .with_context(|| format!("artifact role '{role}' not in manifest"))?;
+            let path = self.dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )
+            .map_err(to_anyhow)
+            .with_context(|| format!("parsing {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp).map_err(to_anyhow)?;
+            self.exes.insert(role.to_string(), exe);
+        }
+        Ok(&self.exes[role])
+    }
+
+    /// Execute `role` with the given literals, returning the flattened
+    /// output tuple.
+    pub fn run(&mut self, role: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.exe(role)?;
+        let result = exe.execute::<xla::Literal>(inputs).map_err(to_anyhow)?;
+        let lit = result[0][0].to_literal_sync().map_err(to_anyhow)?;
+        lit.to_tuple().map_err(to_anyhow)
+    }
+
+    /// Pre-compile every artifact of the config (front-load compile cost).
+    pub fn warmup(&mut self) -> Result<Vec<String>> {
+        let roles: Vec<String> = self.files.keys().cloned().collect();
+        for r in &roles {
+            self.exe(r)?;
+        }
+        Ok(roles)
+    }
+}
+
+fn to_anyhow(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+/// f32 matrix literal, row-major.
+pub fn lit_f32(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(data.len() == rows * cols, "shape mismatch");
+    xla::Literal::vec1(data)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(to_anyhow)
+}
+
+/// f32 vector literal.
+pub fn lit_f32_vec(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// i32 vector literal.
+pub fn lit_i32_vec(data: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// Copy a literal back into an f32 buffer.
+pub fn lit_to_f32(lit: &xla::Literal, out: &mut [f32]) -> Result<()> {
+    let v = lit.to_vec::<f32>().map_err(to_anyhow)?;
+    anyhow::ensure!(v.len() == out.len(), "literal size {} != buffer {}", v.len(), out.len());
+    out.copy_from_slice(&v);
+    Ok(())
+}
+
+/// Scalar f32 from a literal.
+pub fn lit_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = lit.to_vec::<f32>().map_err(to_anyhow)?;
+    anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+    Ok(v[0])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let data = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let lit = lit_f32(&data, 2, 3).unwrap();
+        let mut out = vec![0f32; 6];
+        lit_to_f32(&lit, &mut out).unwrap();
+        assert_eq!(out, data);
+    }
+
+    #[test]
+    fn loads_tiny_config_and_runs_loss_head() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut rt = Runtime::load(&artifacts_dir(), "tiny").unwrap();
+        let n = rt.config.n_pad;
+        let c = rt.config.classes;
+        // logits favoring class = label for first 10 nodes; mask those.
+        let mut logits = vec![0f32; n * c];
+        let mut labels = vec![0i32; n];
+        let mut mask = vec![0f32; n];
+        for v in 0..10 {
+            let l = v % c;
+            labels[v] = l as i32;
+            logits[v * c + l] = 5.0;
+            mask[v] = 1.0;
+        }
+        let outs = rt
+            .run(
+                "loss_head",
+                &[
+                    lit_f32(&logits, n, c).unwrap(),
+                    lit_i32_vec(&labels),
+                    lit_f32_vec(&mask),
+                ],
+            )
+            .unwrap();
+        assert_eq!(outs.len(), 4);
+        let loss = lit_scalar_f32(&outs[0]).unwrap();
+        let correct = lit_scalar_f32(&outs[2]).unwrap();
+        let msum = lit_scalar_f32(&outs[3]).unwrap();
+        assert_eq!(msum, 10.0);
+        assert_eq!(correct, 10.0);
+        assert!(loss > 0.0 && loss < 10.0, "loss {loss}");
+    }
+
+    #[test]
+    fn unknown_config_errors() {
+        if !have_artifacts() {
+            return;
+        }
+        assert!(Runtime::load(&artifacts_dir(), "nonexistent").is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! auto-generated `--help`. Used by the `supergcn` binary, the examples,
+//! and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug)]
+struct Spec {
+    name: String,
+    help: String,
+    default: Option<String>,
+    is_flag: bool,
+}
+
+/// Declarative argument set: register options, then `parse`.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    program: String,
+    about: String,
+    specs: Vec<Spec>,
+    values: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &str) -> Self {
+        Self {
+            program: program.to_string(),
+            about: about.to_string(),
+            ..Default::default()
+        }
+    }
+
+    /// Register a `--key <value>` option with a default.
+    pub fn opt(mut self, name: &str, default: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a boolean `--flag`.
+    pub fn flag(mut self, name: &str, help: &str) -> Self {
+        self.specs.push(Spec {
+            name: name.to_string(),
+            help: help.to_string(),
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Parse from process args (skipping argv[0]). Exits on `--help`.
+    pub fn parse(self) -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        match self.parse_from(&argv) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("error: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+
+    /// Parse from an explicit list (testable).
+    pub fn parse_from(mut self, argv: &[String]) -> anyhow::Result<Self> {
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if a == "--help" || a == "-h" {
+                println!("{}", self.usage());
+                std::process::exit(0);
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow::anyhow!("unknown option --{key}\n{}", self.usage()))?
+                    .clone();
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        anyhow::bail!("flag --{key} takes no value");
+                    }
+                    self.values.insert(key, "true".to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .ok_or_else(|| anyhow::anyhow!("option --{key} needs a value"))?
+                                .clone()
+                        }
+                    };
+                    self.values.insert(key, val);
+                }
+            } else {
+                self.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(self)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.program, self.about);
+        for spec in &self.specs {
+            let default = spec
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let kind = if spec.is_flag { "" } else { " <value>" };
+            s.push_str(&format!("  --{}{}\n      {}{}\n", spec.name, kind, spec.help, default));
+        }
+        s.push_str("  --help\n      Show this help\n");
+        s
+    }
+
+    fn raw(&self, name: &str) -> Option<String> {
+        if let Some(v) = self.values.get(name) {
+            return Some(v.clone());
+        }
+        self.specs
+            .iter()
+            .find(|s| s.name == name)
+            .and_then(|s| s.default.clone())
+    }
+
+    pub fn get_str(&self, name: &str) -> String {
+        self.raw(name)
+            .unwrap_or_else(|| panic!("option --{name} was never registered"))
+    }
+
+    pub fn get_usize(&self, name: &str) -> usize {
+        let v = self.get_str(name);
+        v.parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+    }
+
+    pub fn get_u64(&self, name: &str) -> u64 {
+        let v = self.get_str(name);
+        v.parse()
+            .unwrap_or_else(|_| panic!("--{name} expects an integer, got '{v}'"))
+    }
+
+    pub fn get_f64(&self, name: &str) -> f64 {
+        let v = self.get_str(name);
+        v.parse()
+            .unwrap_or_else(|_| panic!("--{name} expects a float, got '{v}'"))
+    }
+
+    pub fn get_flag(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// Comma-separated list of usize (e.g. `--procs 2,4,8`).
+    pub fn get_usize_list(&self, name: &str) -> Vec<usize> {
+        let v = self.get_str(name);
+        v.split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("--{name} expects comma-separated ints, got '{v}'"))
+            })
+            .collect()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::new("t", "")
+            .opt("procs", "4", "")
+            .parse_from(&sv(&[]))
+            .unwrap();
+        assert_eq!(a.get_usize("procs"), 4);
+    }
+
+    #[test]
+    fn overrides_and_equals_syntax() {
+        let a = Args::new("t", "")
+            .opt("procs", "4", "")
+            .opt("dataset", "sbm", "")
+            .parse_from(&sv(&["--procs", "8", "--dataset=rmat"]))
+            .unwrap();
+        assert_eq!(a.get_usize("procs"), 8);
+        assert_eq!(a.get_str("dataset"), "rmat");
+    }
+
+    #[test]
+    fn flags_and_positional() {
+        let a = Args::new("t", "")
+            .flag("quant", "")
+            .parse_from(&sv(&["file.txt", "--quant", "other"]))
+            .unwrap();
+        assert!(a.get_flag("quant"));
+        assert_eq!(a.positional(), &["file.txt".to_string(), "other".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        let r = Args::new("t", "").parse_from(&sv(&["--nope"]));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::new("t", "")
+            .opt("procs", "1,2,4", "")
+            .parse_from(&sv(&["--procs", "2,4,8,16"]))
+            .unwrap();
+        assert_eq!(a.get_usize_list("procs"), vec![2, 4, 8, 16]);
+    }
+}

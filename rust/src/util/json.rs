@@ -1,0 +1,416 @@
+//! Minimal JSON value, parser, and pretty-printer.
+//!
+//! Serde is unavailable offline; this module covers the two JSON needs of
+//! the system: reading `artifacts/manifest.json` written by the AOT
+//! pipeline, and emitting structured experiment/metric dumps.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Numbers are kept as f64 (the manifest only holds ints
+/// small enough for exact f64 representation).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        self.as_f64().map(|n| n as i64)
+    }
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+    /// Object field access.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.as_obj().and_then(|o| o.get(key))
+    }
+    /// Convenience: required usize field.
+    pub fn req_usize(&self, key: &str) -> anyhow::Result<usize> {
+        self.get(key)
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid usize field '{key}'"))
+    }
+    /// Convenience: required str field.
+    pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow::anyhow!("missing/invalid string field '{key}'"))
+    }
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Json> {
+        let mut p = Parser {
+            bytes: s.as_bytes(),
+            pos: 0,
+        };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            anyhow::bail!("trailing garbage at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write_json(self, f, 0, false)
+    }
+}
+
+/// Pretty-print with 2-space indent.
+pub fn to_pretty(v: &Json) -> String {
+    struct P<'a>(&'a Json);
+    impl fmt::Display for P<'_> {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            write_json(self.0, f, 0, true)
+        }
+    }
+    format!("{}", P(v))
+}
+
+fn write_json(v: &Json, f: &mut fmt::Formatter<'_>, indent: usize, pretty: bool) -> fmt::Result {
+    let pad = |f: &mut fmt::Formatter<'_>, n: usize| -> fmt::Result {
+        if pretty {
+            writeln!(f)?;
+            for _ in 0..n {
+                write!(f, "  ")?;
+            }
+        }
+        Ok(())
+    };
+    match v {
+        Json::Null => write!(f, "null"),
+        Json::Bool(b) => write!(f, "{b}"),
+        Json::Num(n) => {
+            if n.fract() == 0.0 && n.abs() < 1e15 {
+                write!(f, "{}", *n as i64)
+            } else {
+                write!(f, "{n}")
+            }
+        }
+        Json::Str(s) => write_escaped(s, f),
+        Json::Arr(a) => {
+            write!(f, "[")?;
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ",")?;
+                }
+                pad(f, indent + 1)?;
+                write_json(x, f, indent + 1, pretty)?;
+            }
+            if !a.is_empty() {
+                pad(f, indent)?;
+            }
+            write!(f, "]")
+        }
+        Json::Obj(o) => {
+            write!(f, "{{")?;
+            for (i, (k, x)) in o.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ",")?;
+                }
+                pad(f, indent + 1)?;
+                write_escaped(k, f)?;
+                write!(f, ":")?;
+                if pretty {
+                    write!(f, " ")?;
+                }
+                write_json(x, f, indent + 1, pretty)?;
+            }
+            if !o.is_empty() {
+                pad(f, indent)?;
+            }
+            write!(f, "}}")
+        }
+    }
+}
+
+fn write_escaped(s: &str, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+    write!(f, "\"")?;
+    for c in s.chars() {
+        match c {
+            '"' => write!(f, "\\\"")?,
+            '\\' => write!(f, "\\\\")?,
+            '\n' => write!(f, "\\n")?,
+            '\r' => write!(f, "\\r")?,
+            '\t' => write!(f, "\\t")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    write!(f, "\"")
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+    fn bump(&mut self) -> Option<u8> {
+        let b = self.peek();
+        if b.is_some() {
+            self.pos += 1;
+        }
+        b
+    }
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+    fn expect(&mut self, b: u8) -> anyhow::Result<()> {
+        match self.bump() {
+            Some(x) if x == b => Ok(()),
+            other => anyhow::bail!(
+                "expected '{}' at byte {}, got {:?}",
+                b as char,
+                self.pos,
+                other.map(|c| c as char)
+            ),
+        }
+    }
+    fn lit(&mut self, s: &str, v: Json) -> anyhow::Result<Json> {
+        if self.bytes[self.pos..].starts_with(s.as_bytes()) {
+            self.pos += s.len();
+            Ok(v)
+        } else {
+            anyhow::bail!("invalid literal at byte {}", self.pos)
+        }
+    }
+
+    fn value(&mut self) -> anyhow::Result<Json> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'n') => self.lit("null", Json::Null),
+            Some(b't') => self.lit("true", Json::Bool(true)),
+            Some(b'f') => self.lit("false", Json::Bool(false)),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b'[') => self.array(),
+            Some(b'{') => self.object(),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            other => anyhow::bail!("unexpected {:?} at byte {}", other.map(|c| c as char), self.pos),
+        }
+    }
+
+    fn string(&mut self) -> anyhow::Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.bump() {
+                None => anyhow::bail!("unterminated string"),
+                Some(b'"') => return Ok(out),
+                Some(b'\\') => match self.bump() {
+                    Some(b'"') => out.push('"'),
+                    Some(b'\\') => out.push('\\'),
+                    Some(b'/') => out.push('/'),
+                    Some(b'n') => out.push('\n'),
+                    Some(b't') => out.push('\t'),
+                    Some(b'r') => out.push('\r'),
+                    Some(b'b') => out.push('\u{8}'),
+                    Some(b'f') => out.push('\u{c}'),
+                    Some(b'u') => {
+                        let mut code = 0u32;
+                        for _ in 0..4 {
+                            let d = self.bump().ok_or_else(|| anyhow::anyhow!("bad \\u"))?;
+                            code = code * 16
+                                + (d as char)
+                                    .to_digit(16)
+                                    .ok_or_else(|| anyhow::anyhow!("bad hex in \\u"))?;
+                        }
+                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                    }
+                    other => anyhow::bail!("bad escape {other:?}"),
+                },
+                Some(b) => {
+                    // Re-sync multi-byte UTF-8: collect continuation bytes.
+                    if b < 0x80 {
+                        out.push(b as char);
+                    } else {
+                        let start = self.pos - 1;
+                        let width = if b >= 0xF0 {
+                            4
+                        } else if b >= 0xE0 {
+                            3
+                        } else {
+                            2
+                        };
+                        self.pos = (start + width).min(self.bytes.len());
+                        out.push_str(
+                            std::str::from_utf8(&self.bytes[start..self.pos])
+                                .map_err(|_| anyhow::anyhow!("invalid utf8 in string"))?,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> anyhow::Result<Json> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
+        {
+            self.pos += 1;
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        Ok(Json::Num(s.parse::<f64>().map_err(|e| anyhow::anyhow!("bad number '{s}': {e}"))?))
+    }
+
+    fn array(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'[')?;
+        let mut out = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(out));
+        }
+        loop {
+            out.push(self.value()?);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b']') => return Ok(Json::Arr(out)),
+                other => anyhow::bail!("expected ',' or ']', got {other:?}"),
+            }
+        }
+    }
+
+    fn object(&mut self) -> anyhow::Result<Json> {
+        self.expect(b'{')?;
+        let mut out = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(out));
+        }
+        loop {
+            self.skip_ws();
+            let k = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let v = self.value()?;
+            out.insert(k, v);
+            self.skip_ws();
+            match self.bump() {
+                Some(b',') => continue,
+                Some(b'}') => return Ok(Json::Obj(out)),
+                other => anyhow::bail!("expected ',' or '}}', got {other:?}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalar() {
+        for s in ["null", "true", "false", "42", "-3.5", "\"hi\""] {
+            let v = Json::parse(s).unwrap();
+            let v2 = Json::parse(&v.to_string()).unwrap();
+            assert_eq!(v, v2);
+        }
+    }
+
+    #[test]
+    fn parse_nested() {
+        let s = r#"{"configs":[{"name":"quickstart","n_pad":4097,"dims":[64,64,16]}],"version":1}"#;
+        let v = Json::parse(s).unwrap();
+        assert_eq!(v.get("version").unwrap().as_usize(), Some(1));
+        let cfgs = v.get("configs").unwrap().as_arr().unwrap();
+        assert_eq!(cfgs[0].req_str("name").unwrap(), "quickstart");
+        assert_eq!(cfgs[0].req_usize("n_pad").unwrap(), 4097);
+        let dims = cfgs[0].get("dims").unwrap().as_arr().unwrap();
+        assert_eq!(dims.len(), 3);
+        assert_eq!(dims[1].as_usize(), Some(64));
+    }
+
+    #[test]
+    fn escapes_roundtrip() {
+        let v = Json::Str("a\"b\\c\nd\te\u{1}".to_string());
+        let parsed = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, parsed);
+    }
+
+    #[test]
+    fn unicode_string() {
+        let v = Json::parse("\"héllo ☃\"").unwrap();
+        assert_eq!(v.as_str(), Some("héllo ☃"));
+        let v2 = Json::parse("\"\\u2603\"").unwrap();
+        assert_eq!(v2.as_str(), Some("☃"));
+    }
+
+    #[test]
+    fn pretty_parses_back() {
+        let v = Json::obj(vec![
+            ("a", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])),
+            ("b", Json::obj(vec![("c", Json::Bool(true))])),
+        ]);
+        let pretty = to_pretty(&v);
+        assert!(pretty.contains('\n'));
+        assert_eq!(Json::parse(&pretty).unwrap(), v);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(Json::parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("{}").unwrap(), Json::Obj(Default::default()));
+        assert_eq!(Json::parse(" [ ] ").unwrap(), Json::Arr(vec![]));
+    }
+}

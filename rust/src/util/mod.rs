@@ -1,0 +1,58 @@
+//! Offline substrate utilities: PRNG, JSON, CLI args, timing/breakdowns,
+//! a scoped thread pool, and a mini property-testing harness.
+//!
+//! These exist because the build environment is fully offline (only the
+//! `xla` and `anyhow` crates are vendored); see DESIGN.md §1
+//! "Offline-dependency substitutions".
+
+pub mod args;
+pub mod json;
+pub mod pool;
+pub mod propcheck;
+pub mod rng;
+pub mod timer;
+
+/// Human-readable byte count.
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    format!("{v:.2} {}", UNITS[u])
+}
+
+/// Human-readable seconds.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512.00 B");
+        assert_eq!(fmt_bytes(2048.0), "2.00 KiB");
+        assert!(fmt_bytes(3.5 * 1024.0 * 1024.0 * 1024.0).contains("GiB"));
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert!(fmt_secs(2.5e-9).contains("ns"));
+        assert!(fmt_secs(2.5e-6).contains("µs"));
+        assert!(fmt_secs(2.5e-3).contains("ms"));
+        assert!(fmt_secs(2.5).contains("s"));
+    }
+}

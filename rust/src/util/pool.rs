@@ -1,0 +1,130 @@
+//! A small scoped work-sharing thread pool (rayon is unavailable offline).
+//!
+//! The aggregation operators (§4) use 2D dynamic parallelism: work items
+//! are (destination-block × feature-block) tiles pulled from a shared
+//! atomic counter, which gives the dynamic load balancing the paper gets
+//! from its FLOPS-based scheduler. On this single-core container the pool
+//! degrades gracefully to sequential execution (`threads = 1`).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use by default: respects
+/// `SUPERGCN_THREADS`, else available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("SUPERGCN_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(chunk_index)` for every index in `0..n_chunks` on `threads`
+/// scoped threads, pulling indices dynamically from a shared counter.
+///
+/// `f` must be `Sync` (called concurrently with distinct indices).
+pub fn parallel_for(threads: usize, n_chunks: usize, f: impl Fn(usize) + Sync) {
+    let threads = threads.max(1).min(n_chunks.max(1));
+    if threads <= 1 || n_chunks <= 1 {
+        for i in 0..n_chunks {
+            f(i);
+        }
+        return;
+    }
+    let counter = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = counter.fetch_add(1, Ordering::Relaxed);
+                if i >= n_chunks {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Split a mutable slice into `n` contiguous chunks and process each on the
+/// pool: the safe way to parallelize disjoint row-block writes.
+pub fn parallel_chunks_mut<T: Send>(
+    threads: usize,
+    data: &mut [T],
+    chunk_len: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(chunk_len > 0);
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_len).enumerate().collect();
+    let n = chunks.len();
+    let slots: Vec<std::sync::Mutex<Option<(usize, &mut [T])>>> =
+        chunks.into_iter().map(|c| std::sync::Mutex::new(Some(c))).collect();
+    parallel_for(threads, n, |i| {
+        let (idx, chunk) = slots[i].lock().unwrap().take().expect("chunk taken twice");
+        f(idx, chunk);
+    });
+}
+
+/// Map `0..n` in parallel, collecting results in order.
+pub fn parallel_map<T: Send>(threads: usize, n: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    {
+        let slots: Vec<std::sync::Mutex<&mut Option<T>>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for(threads, n, |i| {
+            let v = f(i);
+            **slots[i].lock().unwrap() = Some(v);
+        });
+    }
+    out.into_iter().map(|x| x.expect("slot unfilled")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all_indices_once() {
+        let n = 1000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(4, n, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_sequential_fallback() {
+        let sum = AtomicU64::new(0);
+        parallel_for(1, 100, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn chunks_mut_writes_disjointly() {
+        let mut v = vec![0u32; 103];
+        parallel_chunks_mut(4, &mut v, 10, |idx, chunk| {
+            for x in chunk.iter_mut() {
+                *x = idx as u32 + 1;
+            }
+        });
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, (i / 10) as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let out = parallel_map(3, 50, |i| i * i);
+        assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zero_chunks_ok() {
+        parallel_for(4, 0, |_| panic!("should not be called"));
+        let out: Vec<usize> = parallel_map(4, 0, |i| i);
+        assert!(out.is_empty());
+    }
+}

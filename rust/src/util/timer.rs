@@ -1,0 +1,183 @@
+//! Timing helpers and the category accumulator used for Fig-12-style
+//! training-time breakdowns.
+
+use std::time::{Duration, Instant};
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+    pub fn ms(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let r = f();
+    (r, t.secs())
+}
+
+/// The paper's Fig. 12 splits training time into five categories.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Category {
+    /// Aggregation operators inside GCN layers.
+    Aggr,
+    /// Communication in GCN layers (halo exchange + grad allreduce).
+    Comm,
+    /// Quantize/dequantize work.
+    Quant,
+    /// Synchronization (load-imbalance wait at barriers).
+    Sync,
+    /// Everything else (NN ops, optimizer, loss, bookkeeping).
+    Other,
+}
+
+pub const ALL_CATEGORIES: [Category; 5] = [
+    Category::Aggr,
+    Category::Comm,
+    Category::Quant,
+    Category::Sync,
+    Category::Other,
+];
+
+impl Category {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Category::Aggr => "aggr",
+            Category::Comm => "comm",
+            Category::Quant => "quant",
+            Category::Sync => "sync",
+            Category::Other => "other",
+        }
+    }
+}
+
+/// Accumulates wall-time (and optionally modeled time) per category.
+#[derive(Clone, Debug, Default)]
+pub struct Breakdown {
+    secs: [f64; 5],
+}
+
+fn idx(c: Category) -> usize {
+    match c {
+        Category::Aggr => 0,
+        Category::Comm => 1,
+        Category::Quant => 2,
+        Category::Sync => 3,
+        Category::Other => 4,
+    }
+}
+
+impl Breakdown {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, c: Category, secs: f64) {
+        self.secs[idx(c)] += secs;
+    }
+
+    /// Time a closure into a category.
+    pub fn time<T>(&mut self, c: Category, f: impl FnOnce() -> T) -> T {
+        let (r, s) = timed(f);
+        self.add(c, s);
+        r
+    }
+
+    pub fn get(&self, c: Category) -> f64 {
+        self.secs[idx(c)]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.secs.iter().sum()
+    }
+
+    pub fn merge(&mut self, other: &Breakdown) {
+        for i in 0..5 {
+            self.secs[i] += other.secs[i];
+        }
+    }
+
+    /// Element-wise max — used to combine per-worker breakdowns the way
+    /// Eqn 2 combines per-process comm time (slowest process dominates).
+    pub fn max_merge(&mut self, other: &Breakdown) {
+        for i in 0..5 {
+            self.secs[i] = self.secs[i].max(other.secs[i]);
+        }
+    }
+
+    pub fn scale(&mut self, k: f64) {
+        for s in &mut self.secs {
+            *s *= k;
+        }
+    }
+
+    /// One-line report, e.g. for per-epoch logs.
+    pub fn report(&self) -> String {
+        let t = self.total().max(1e-12);
+        ALL_CATEGORIES
+            .iter()
+            .map(|c| format!("{}={:.4}s({:.0}%)", c.name(), self.get(*c), 100.0 * self.get(*c) / t))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates() {
+        let mut b = Breakdown::new();
+        b.add(Category::Aggr, 1.0);
+        b.add(Category::Aggr, 0.5);
+        b.add(Category::Comm, 2.0);
+        assert!((b.get(Category::Aggr) - 1.5).abs() < 1e-12);
+        assert!((b.total() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_and_max_merge() {
+        let mut a = Breakdown::new();
+        a.add(Category::Comm, 1.0);
+        let mut b = Breakdown::new();
+        b.add(Category::Comm, 3.0);
+        b.add(Category::Sync, 1.0);
+        let mut m = a.clone();
+        m.merge(&b);
+        assert!((m.get(Category::Comm) - 4.0).abs() < 1e-12);
+        a.max_merge(&b);
+        assert!((a.get(Category::Comm) - 3.0).abs() < 1e-12);
+        assert!((a.get(Category::Sync) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn timed_measures_something() {
+        let (_, s) = timed(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        assert!(s >= 0.004);
+    }
+
+    #[test]
+    fn report_contains_all_categories() {
+        let mut b = Breakdown::new();
+        b.add(Category::Other, 1.0);
+        let r = b.report();
+        for c in ALL_CATEGORIES {
+            assert!(r.contains(c.name()));
+        }
+    }
+}

@@ -1,0 +1,149 @@
+//! Integration: the native engine and the AOT'd JAX/Pallas artifact engine
+//! must produce the same training run (same losses, same accuracies) on
+//! the same partitioned dataset — this is the proof that all three layers
+//! of the stack compose and agree.
+//!
+//! Requires `make artifacts` (the tests no-op politely otherwise).
+
+use std::path::{Path, PathBuf};
+use supergcn::backend::native::NativeBackend;
+use supergcn::backend::xla::XlaBackend;
+use supergcn::backend::Backend;
+use supergcn::coordinator::planner::{build_worker_ctxs, prepare};
+use supergcn::coordinator::trainer::{TrainConfig, Trainer};
+use supergcn::graph::generate::sbm;
+use supergcn::hier::volume::RemoteStrategy;
+use supergcn::model::optimizer::OptKind;
+use supergcn::runtime::{Manifest, Runtime};
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn tiny_available() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+fn tiny_dataset() -> supergcn::graph::generate::LabelledGraph {
+    // Must fit the "tiny" artifact config: n_pad 256 (2 workers × ~125
+    // nodes), f=16, classes=4.
+    sbm(240, 4, 5.0, 0.85, 16, 0.6, 77)
+}
+
+#[test]
+fn native_and_xla_training_runs_agree() {
+    if !tiny_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let lg = tiny_dataset();
+    let manifest = Manifest::load(&artifacts_dir().join("manifest.json")).unwrap();
+    let cfg = manifest.config("tiny").unwrap().shapes.clone();
+
+    let (ctxs, cfg, _plans) = prepare(&lg, 2, RemoteStrategy::Hybrid, Some(cfg), 5).unwrap();
+
+    let tc = TrainConfig {
+        epochs: 4,
+        lr: 0.01,
+        opt: OptKind::Adam,
+        ..Default::default()
+    };
+
+    let native = Box::new(NativeBackend::new(cfg.clone()));
+    let mut tr_n = Trainer::new(ctxs.clone(), native, tc.clone());
+    let stats_n = tr_n.run(false).unwrap();
+
+    let rt = Runtime::load(&artifacts_dir(), "tiny").unwrap();
+    let xla = Box::new(XlaBackend::new(rt));
+    let mut tr_x = Trainer::new(ctxs, xla, tc);
+    let stats_x = tr_x.run(false).unwrap();
+
+    for (a, b) in stats_n.iter().zip(stats_x.iter()) {
+        assert!(
+            (a.train_loss - b.train_loss).abs() < 5e-3,
+            "epoch {}: native loss {} vs xla loss {}",
+            a.epoch,
+            a.train_loss,
+            b.train_loss
+        );
+        assert!(
+            (a.train_acc - b.train_acc).abs() < 0.05,
+            "epoch {}: native acc {} vs xla acc {}",
+            a.epoch,
+            a.train_acc,
+            b.train_acc
+        );
+    }
+    // Final parameters agree closely (same optimizer trajectory).
+    let pn = tr_n.params.flatten();
+    let px = tr_x.params.flatten();
+    let max_diff = pn
+        .iter()
+        .zip(px.iter())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_diff < 2e-2, "parameter divergence {max_diff}");
+}
+
+#[test]
+fn xla_backend_single_forward_matches_native() {
+    if !tiny_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let lg = tiny_dataset();
+    let manifest = Manifest::load(&artifacts_dir().join("manifest.json")).unwrap();
+    let cfg = manifest.config("tiny").unwrap().shapes.clone();
+    let (ctxs, cfg, plans) = prepare(&lg, 2, RemoteStrategy::Hybrid, Some(cfg), 9).unwrap();
+    assert_eq!(plans.len(), 2);
+
+    let mut native = NativeBackend::new(cfg.clone());
+    let rt = Runtime::load(&artifacts_dir(), "tiny").unwrap();
+    let mut xla = XlaBackend::new(rt);
+
+    let ctx = &ctxs[0];
+    let n = cfg.n_pad;
+    let f = cfg.f_in;
+    let h = ctx.features.clone();
+
+    let mut hn_n = vec![0f32; n * f];
+    let mut pa_n = vec![0f32; cfg.p_pre * f];
+    native.pre_fwd(f, &h, &ctx.pre, &mut hn_n, &mut pa_n).unwrap();
+    let mut hn_x = vec![0f32; n * f];
+    let mut pa_x = vec![0f32; cfg.p_pre * f];
+    xla.pre_fwd(f, &h, &ctx.pre, &mut hn_x, &mut pa_x).unwrap();
+    assert_close(&hn_n, &hn_x, 2e-4, "h_norm");
+    assert_close(&pa_n, &pa_x, 2e-3, "partials");
+
+    // One full layer with empty recvs.
+    let params = supergcn::model::LayerParams::glorot(f, cfg.hidden, &mut supergcn::util::rng::Rng::new(3));
+    let recv_pre = vec![0f32; cfg.r_pre * f];
+    let recv_post = vec![0f32; cfg.r_post * f];
+    let mut out_n = vec![0f32; n * cfg.hidden];
+    let mut out_x = vec![0f32; n * cfg.hidden];
+    native
+        .layer_fwd(0, &hn_n, &recv_pre, &recv_post, &params, &ctx.spec, &mut out_n)
+        .unwrap();
+    xla.layer_fwd(0, &hn_n, &recv_pre, &recv_post, &params, &ctx.spec, &mut out_x)
+        .unwrap();
+    assert_close(&out_n, &out_x, 2e-3, "layer output");
+}
+
+fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    let mut worst = 0f32;
+    let mut worst_i = 0usize;
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let d = (x - y).abs();
+        if d > worst {
+            worst = d;
+            worst_i = i;
+        }
+    }
+    assert!(
+        worst <= tol,
+        "{what}: max diff {worst} at {worst_i} ({} vs {})",
+        a[worst_i],
+        b[worst_i]
+    );
+}

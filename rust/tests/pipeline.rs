@@ -1,0 +1,119 @@
+//! End-to-end pipeline integration over the native engine:
+//! dataset → weighted METIS-like partition → MVC pre/post plans →
+//! padded worker contexts → distributed training, across strategies,
+//! quantization settings and worker counts.
+
+use supergcn::backend::native::NativeBackend;
+use supergcn::coordinator::planner::prepare;
+use supergcn::coordinator::trainer::{TrainConfig, Trainer};
+use supergcn::graph::generate::sbm;
+use supergcn::hier::volume::RemoteStrategy;
+use supergcn::quant::Bits;
+
+fn run(k: usize, tc: TrainConfig) -> Vec<supergcn::coordinator::trainer::EpochStats> {
+    let lg = sbm(600, 4, 8.0, 0.85, 16, 0.6, 123);
+    let (ctxs, cfg, _) = prepare(&lg, k, tc.strategy, None, 17).unwrap();
+    let backend = Box::new(NativeBackend::new(cfg));
+    Trainer::new(ctxs, backend, tc).run(false).unwrap()
+}
+
+#[test]
+fn all_strategies_reach_same_loss() {
+    // Pre-only, post-only and the MVC hybrid are *algorithm-preserving*
+    // transformations (paper §5.2): identical numerics, different wire
+    // volume.
+    let mut losses = Vec::new();
+    let mut volumes = Vec::new();
+    for strategy in [
+        RemoteStrategy::PreOnly,
+        RemoteStrategy::PostOnly,
+        RemoteStrategy::Hybrid,
+    ] {
+        let tc = TrainConfig {
+            epochs: 5,
+            strategy,
+            ..Default::default()
+        };
+        let stats = run(4, tc);
+        losses.push(stats.last().unwrap().train_loss);
+        volumes.push(stats[1].comm_data_bytes);
+    }
+    for w in losses.windows(2) {
+        assert!(
+            (w[0] - w[1]).abs() < 2e-3,
+            "strategies diverged: {losses:?}"
+        );
+    }
+    // Hybrid strictly the cheapest on the wire.
+    assert!(volumes[2] <= volumes[0] && volumes[2] <= volumes[1], "{volumes:?}");
+}
+
+#[test]
+fn worker_counts_dont_change_the_math() {
+    let losses: Vec<f32> = [1usize, 2, 5]
+        .iter()
+        .map(|&k| {
+            let tc = TrainConfig {
+                epochs: 5,
+                ..Default::default()
+            };
+            run(k, tc).last().unwrap().train_loss
+        })
+        .collect();
+    for w in losses.windows(2) {
+        assert!((w[0] - w[1]).abs() < 2e-3, "k-divergence: {losses:?}");
+    }
+}
+
+#[test]
+fn int2_quant_close_to_fp32_after_training() {
+    let tc_fp = TrainConfig {
+        epochs: 40,
+        ..Default::default()
+    };
+    let tc_q2 = TrainConfig {
+        epochs: 40,
+        quant: Some(Bits::Int2),
+        label_prop: true,
+        ..Default::default()
+    };
+    let fp = run(4, tc_fp);
+    let q2 = run(4, tc_q2);
+    let acc_fp = fp.last().unwrap().test_acc;
+    let acc_q2 = q2.last().unwrap().test_acc;
+    assert!(
+        acc_q2 > acc_fp - 0.08,
+        "Int2+LP acc {acc_q2} too far below FP32 acc {acc_fp}"
+    );
+}
+
+#[test]
+fn int8_is_nearly_lossless() {
+    let tc = TrainConfig {
+        epochs: 10,
+        quant: Some(Bits::Int8),
+        ..Default::default()
+    };
+    let tc_fp = TrainConfig {
+        epochs: 10,
+        ..Default::default()
+    };
+    let q = run(3, tc);
+    let fp = run(3, tc_fp);
+    let dl = (q.last().unwrap().train_loss - fp.last().unwrap().train_loss).abs();
+    assert!(dl < 0.05, "int8 loss deviates by {dl}");
+}
+
+#[test]
+fn modeled_time_accounts_comm_and_compute() {
+    let tc = TrainConfig {
+        epochs: 3,
+        ..Default::default()
+    };
+    let stats = run(4, tc);
+    for s in &stats {
+        assert!(s.modeled_secs > 0.0);
+        assert!(s.breakdown.total() > 0.0);
+        assert!(s.breakdown.get(supergcn::util::timer::Category::Comm) > 0.0);
+    }
+}
