@@ -1,23 +1,33 @@
 //! Quickstart: partition a small citation-style graph across 4 simulated
-//! workers and train a 3-layer GraphSAGE with the paper's full pipeline
-//! (MVC hybrid pre/post-aggregation + Int2 quantized halos + masked label
-//! propagation), printing the loss/accuracy curve.
+//! workers and train a 3-layer GraphSAGE two ways with the same comm
+//! accounting:
+//!
+//! 1. the paper's **full-batch** pipeline (MVC hybrid pre/post-
+//!    aggregation + Int2 quantized halos + masked label propagation),
+//! 2. the **mini-batch** regime (`sample::`): neighbor fan-out batches
+//!    over the same SPMD partitions, remote feature rows fetched through
+//!    `comm::alltoallv` with Int2 quantization.
 //!
 //!     cargo run --release --example quickstart
 
+use std::sync::Arc;
 use supergcn::backend::native::NativeBackend;
+use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
 use supergcn::coordinator::planner::prepare;
 use supergcn::coordinator::trainer::{TrainConfig, Trainer};
 use supergcn::datasets;
 use supergcn::graph::stats::stats;
 use supergcn::hier::volume::RemoteStrategy;
 use supergcn::quant::Bits;
+use supergcn::sample::{SamplerConfig, SamplerKind};
+use supergcn::util::fmt_bytes;
 
 fn main() -> anyhow::Result<()> {
     let spec = datasets::by_name("arxiv-s")?;
     let lg = spec.build();
     println!("dataset {} — {}", spec.name, stats(&lg.graph));
 
+    // ---- regime 1: full-batch (the paper's loop) -----------------------
     let tc = TrainConfig {
         epochs: 60,
         lr: spec.lr,
@@ -35,12 +45,44 @@ fn main() -> anyhow::Result<()> {
 
     let backend = Box::new(NativeBackend::new(cfg));
     let mut tr = Trainer::new(ctxs, backend, tc);
-    let stats = tr.run(true)?;
-    let last = stats.last().unwrap();
+    let full_stats = tr.run(true)?;
+    let last = full_stats.last().unwrap();
     println!(
-        "\nfinal: loss {:.4}, train acc {:.3}, test acc {:.3}",
+        "\nfull-batch: loss {:.4}, train acc {:.3}, test acc {:.3}",
         last.train_loss, last.train_acc, last.test_acc
     );
     println!("breakdown: {}", last.breakdown.report());
+    let full_epoch_bytes = full_stats[1].comm_data_bytes;
+
+    // ---- regime 2: mini-batch neighbor sampling on the same substrate --
+    let scfg = SamplerConfig {
+        batch_size: 512,
+        fanouts: vec![15, 10, 5],
+        ..Default::default()
+    };
+    let mc = MiniBatchConfig {
+        epochs: 60,
+        lr: spec.lr,
+        quant: Some(Bits::Int2),
+        hidden: spec.hidden,
+        ..Default::default()
+    };
+    let mut mb = MiniBatchTrainer::new(Arc::new(lg), 4, SamplerKind::Neighbor, &scfg, mc)?;
+    println!(
+        "\nmini-batch: sampler={}, {} batches/epoch over the same 4-way partition",
+        mb.sampler_name(),
+        mb.batches_per_epoch()
+    );
+    let mb_stats = mb.run(true)?;
+    let last = mb_stats.last().unwrap();
+    println!(
+        "\nmini-batch: loss {:.4}, train acc {:.3}, test acc {:.3}",
+        last.train_loss, last.train_acc, last.test_acc
+    );
+    println!(
+        "per-epoch comm: full-batch {} vs mini-batch {}",
+        fmt_bytes(full_epoch_bytes),
+        fmt_bytes(mb_stats[1].comm_data_bytes),
+    );
     Ok(())
 }

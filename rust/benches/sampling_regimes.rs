@@ -1,0 +1,90 @@
+//! Sampling-regime comparison harness: full-batch training vs the
+//! mini-batch producers (neighbor fan-out, GraphSAINT rw/node/edge,
+//! Cluster-GCN) on the same dataset, worker count, and machine model —
+//! one row per regime with accuracy, per-epoch comm volume, and modeled
+//! epoch time (Eqn 2/5), FP32 and Int2 fetch variants.
+//!
+//! Expected shape: cluster/neighbor epochs move an order of magnitude
+//! fewer bytes than full-batch halos; SAINT trades coverage for the
+//! cheapest epochs; Int2 shrinks the fetched-row volume ~16x on top.
+//!
+//!     cargo bench --bench sampling_regimes
+
+use supergcn::coordinator::minibatch::MiniBatchConfig;
+use supergcn::coordinator::trainer::TrainConfig;
+use supergcn::datasets;
+use supergcn::exp::{best_test_acc, steady_epoch_secs, train_minibatch, train_native, Table};
+use supergcn::quant::Bits;
+use supergcn::sample::{SamplerConfig, SamplerKind};
+use supergcn::util::fmt_bytes;
+
+fn main() {
+    let spec = datasets::by_name("arxiv-s").unwrap();
+    let k = 8;
+    let epochs = 30;
+    let mut t = Table::new(
+        &format!(
+            "sampling regimes: {} on {k} workers, {epochs} epochs",
+            spec.name
+        ),
+        &[
+            "regime",
+            "quant",
+            "best test acc",
+            "epoch data",
+            "epoch params",
+            "modeled epoch (ms)",
+        ],
+    );
+
+    for quant in [None, Some(Bits::Int2)] {
+        let qname = quant.map(|b| b.name()).unwrap_or("fp32");
+
+        // Full-batch baseline (the paper's loop).
+        let tc = TrainConfig {
+            epochs,
+            quant,
+            ..Default::default()
+        };
+        let (stats, _tr) = train_native(&spec, k, tc, Some(epochs)).unwrap();
+        t.row(vec![
+            "full-batch".into(),
+            qname.into(),
+            format!("{:.3}", best_test_acc(&stats)),
+            fmt_bytes(stats[1].comm_data_bytes),
+            fmt_bytes(stats[1].comm_param_bytes),
+            format!("{:.3}", steady_epoch_secs(&stats, 10) * 1e3),
+        ]);
+
+        // Mini-batch regimes through the same comm accounting.
+        for kind in [
+            SamplerKind::Neighbor,
+            SamplerKind::SaintRw,
+            SamplerKind::SaintNode,
+            SamplerKind::SaintEdge,
+            SamplerKind::Cluster,
+        ] {
+            let scfg = SamplerConfig {
+                batch_size: 512,
+                fanouts: vec![15, 10, 5],
+                num_clusters: 4 * k,
+                ..Default::default()
+            };
+            let mc = MiniBatchConfig {
+                epochs,
+                quant,
+                ..Default::default()
+            };
+            let (stats, _tr) = train_minibatch(&spec, k, kind, &scfg, mc, Some(epochs)).unwrap();
+            t.row(vec![
+                kind.name().into(),
+                qname.into(),
+                format!("{:.3}", best_test_acc(&stats)),
+                fmt_bytes(stats[1].comm_data_bytes),
+                fmt_bytes(stats[1].comm_param_bytes),
+                format!("{:.3}", steady_epoch_secs(&stats, 10) * 1e3),
+            ]);
+        }
+    }
+    t.print();
+}

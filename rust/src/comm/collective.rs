@@ -42,8 +42,14 @@ pub fn ring_allreduce_secs(bytes: usize, ranks: usize, profile: &MachineProfile)
     steps as f64 * (chunk_bits / profile.bw_comm + profile.latency)
 }
 
-/// Max-allreduce of scalars (load-imbalance / sync accounting).
+/// Max-allreduce of scalars (load-imbalance / sync accounting). An empty
+/// participant set contributes no time: the reduction is 0.0, not -inf
+/// (which would poison every downstream accumulation). Non-empty input
+/// keeps the true max, including all-negative slices.
 pub fn allreduce_max(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
     values.iter().fold(f64::NEG_INFINITY, |a, &b| a.max(b))
 }
 
@@ -84,6 +90,17 @@ mod tests {
     #[test]
     fn max_reduce() {
         assert_eq!(allreduce_max(&[1.0, 5.0, 3.0]), 5.0);
+    }
+
+    #[test]
+    fn max_reduce_of_empty_is_zero() {
+        // Regression: used to return -inf, which poisoned any sum it was
+        // later folded into.
+        let t = allreduce_max(&[]);
+        assert_eq!(t, 0.0);
+        assert!(t.is_finite());
+        // Non-empty all-negative input still reduces to its true max.
+        assert_eq!(allreduce_max(&[-0.5, -3.0]), -0.5);
     }
 
     #[test]

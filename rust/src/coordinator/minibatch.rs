@@ -1,0 +1,772 @@
+//! The distributed mini-batch training loop (the sampling regime of
+//! DistGNN/GraphSAINT/Cluster-GCN practice, run on the same SPMD
+//! substrate and comm accounting as the full-batch trainer).
+//!
+//! Workers are the existing graph partitions (`partition::multilevel`
+//! with the §7.2 vertex weights). Every round, each worker takes one
+//! sampled [`MiniBatch`] (batches are matched to the worker owning the
+//! most batch nodes — MG-GCN's partition-aligned batching), then:
+//!
+//! 1. **fetch** — feature rows of batch nodes owned by other partitions
+//!    are requested (`u32` ids on the wire) and returned through
+//!    [`comm::alltoallv`], optionally Int2/4/8-quantized with
+//!    `quant::fused` — so `CommStats` and the Eqn-2/5 model report
+//!    mini-batch vs full-batch communication on equal footing;
+//! 2. **compute** — a 3-layer mean-aggregation GraphSAGE forward/backward
+//!    over the batch's induced CSR (weighted by the sampler's unbiased
+//!    `edge_weight`s, loss weighted by SAINT `node_weight`s);
+//! 3. **update** — gradients ring-allreduce across workers
+//!    (`collective::allreduce_sum`) and one optimizer step per round.
+//!
+//! The mini-batch model intentionally omits the full-batch path's
+//! LayerNorm and label propagation: it is the *sampling regime* analogue,
+//! not a numerical twin (see DESIGN.md §8). A finite-difference test
+//! below pins the backward pass to the forward semantics.
+
+use super::trainer::EpochStats;
+use crate::agg::spmm::{spmm_blocked, CsrMatrix};
+use crate::backend::linalg;
+use crate::comm::{alltoallv, collective, CommStats, Payload};
+use crate::graph::generate::{LabelledGraph, SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
+use crate::graph::CsrGraph;
+use crate::model::optimizer::{OptKind, Optimizer};
+use crate::model::{ModelGrads, ModelParams};
+use crate::partition::Partition;
+use crate::perfmodel::MachineProfile;
+use crate::quant::{fused, Bits};
+use crate::runtime::ShapeConfig;
+use crate::sample::{build_sampler, mix2, MiniBatch, Sampler, SamplerConfig, SamplerKind};
+use crate::util::timer::{Breakdown, Category};
+use anyhow::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Mini-batch training configuration.
+#[derive(Clone, Debug)]
+pub struct MiniBatchConfig {
+    pub epochs: usize,
+    pub lr: f32,
+    pub opt: OptKind,
+    /// Quantization of fetched remote feature rows (None = FP32).
+    pub quant: Option<Bits>,
+    pub hidden: usize,
+    pub machine: MachineProfile,
+    pub seed: u64,
+}
+
+impl Default for MiniBatchConfig {
+    fn default() -> Self {
+        Self {
+            epochs: 50,
+            lr: 0.01,
+            opt: OptKind::Adam,
+            quant: None,
+            hidden: 64,
+            machine: MachineProfile::abci(),
+            seed: 42,
+        }
+    }
+}
+
+/// Per-batch loss/metric sums.
+#[derive(Clone, Copy, Debug, Default)]
+struct BatchOut {
+    loss_sum: f64,
+    wsum: f64,
+    train_correct: f64,
+    train_cnt: f64,
+    val_correct: f64,
+    val_cnt: f64,
+    test_correct: f64,
+    test_cnt: f64,
+}
+
+impl BatchOut {
+    fn accumulate(&mut self, o: &BatchOut) {
+        self.loss_sum += o.loss_sum;
+        self.wsum += o.wsum;
+        self.train_correct += o.train_correct;
+        self.train_cnt += o.train_cnt;
+        self.val_correct += o.val_correct;
+        self.val_cnt += o.val_cnt;
+        self.test_correct += o.test_correct;
+        self.test_cnt += o.test_cnt;
+    }
+}
+
+pub struct MiniBatchTrainer {
+    pub lg: Arc<LabelledGraph>,
+    /// The SPMD worker partition (ownership of feature rows).
+    pub part: Partition,
+    sampler: Box<dyn Sampler>,
+    pub mc: MiniBatchConfig,
+    pub params: ModelParams,
+    opt: Optimizer,
+    dims: [(usize, usize, bool); 3],
+    pub comm_stats: CommStats,
+    epoch: usize,
+}
+
+impl MiniBatchTrainer {
+    /// Partition with the same weighted multilevel call the full-batch
+    /// `planner::prepare` uses (shared `planner::partition_for`), then
+    /// build the sampler and model.
+    pub fn new(
+        lg: Arc<LabelledGraph>,
+        k: usize,
+        kind: SamplerKind,
+        scfg: &SamplerConfig,
+        mc: MiniBatchConfig,
+    ) -> Result<Self> {
+        anyhow::ensure!(k >= 1, "need at least one worker");
+        let part = super::planner::partition_for(&lg, k, mc.seed);
+        Self::with_partition(lg, part, kind, scfg, mc)
+    }
+
+    /// Run over an externally built partition (tests compare against the
+    /// full-batch trainer on the *same* partitioning through this).
+    pub fn with_partition(
+        lg: Arc<LabelledGraph>,
+        part: Partition,
+        kind: SamplerKind,
+        scfg: &SamplerConfig,
+        mc: MiniBatchConfig,
+    ) -> Result<Self> {
+        part.validate(lg.n())?;
+        anyhow::ensure!(
+            lg.n() < (1 << 24),
+            "node ids must fit the f32 id wire encoding"
+        );
+        let sampler = build_sampler(kind, &lg, scfg);
+        let shapes = ShapeConfig {
+            name: format!("minibatch-{}", kind.name()),
+            n_pad: 0,
+            f_in: lg.feat_dim,
+            hidden: mc.hidden,
+            classes: lg.num_classes,
+            e_local: 0,
+            e_pre: 0,
+            p_pre: 0,
+            r_pre: 0,
+            r_post: 0,
+            e_post: 0,
+        };
+        let params = ModelParams::init(&shapes, mc.seed);
+        let opt = Optimizer::new(mc.opt, mc.lr, params.n_params());
+        let dims = shapes.layer_dims();
+        let k = part.k;
+        Ok(Self {
+            lg,
+            part,
+            sampler,
+            mc,
+            params,
+            opt,
+            dims,
+            comm_stats: CommStats::new(k),
+            epoch: 0,
+        })
+    }
+
+    pub fn k(&self) -> usize {
+        self.part.k
+    }
+
+    pub fn sampler_name(&self) -> &'static str {
+        self.sampler.name()
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.sampler.batches_per_epoch()
+    }
+
+    /// Run one epoch: `ceil(batches/k)` SPMD rounds of fetch → compute →
+    /// allreduce → update.
+    pub fn epoch(&mut self) -> Result<EpochStats> {
+        let wall = Instant::now();
+        let k = self.part.k;
+        let f = self.lg.feat_dim;
+        let nb = self.sampler.batches_per_epoch();
+        let rounds = nb.div_ceil(k);
+        let n_params = self.params.n_params();
+        let dims = self.dims;
+        let mut epoch_comm = CommStats::new(k);
+        let mut breakdown = Breakdown::new();
+        let mut modeled_compute = 0f64;
+        let mut sync = 0f64;
+        let mut totals = BatchOut::default();
+
+        for round in 0..rounds {
+            let lo = round * k;
+            let hi = ((round + 1) * k).min(nb);
+
+            // ---- sample (charged to the processing worker below) ------
+            let mut batches = Vec::with_capacity(hi - lo);
+            let mut sample_secs = Vec::with_capacity(hi - lo);
+            for b in lo..hi {
+                let t = Instant::now();
+                let mb = self.sampler.sample(self.epoch, b);
+                sample_secs.push(t.elapsed().as_secs_f64());
+                batches.push(mb);
+            }
+            let bcnt = batches.len();
+
+            // ---- assign batches to workers: greedy max-ownership ------
+            let mut counts = vec![vec![0usize; k]; bcnt];
+            for (bi, mb) in batches.iter().enumerate() {
+                for &v in &mb.n_id {
+                    counts[bi][self.part.assign[v as usize] as usize] += 1;
+                }
+            }
+            let mut batch_worker = vec![usize::MAX; bcnt];
+            let mut used = vec![false; k];
+            for _ in 0..bcnt {
+                let mut best: Option<(usize, usize, usize)> = None;
+                for (bi, c) in counts.iter().enumerate() {
+                    if batch_worker[bi] != usize::MAX {
+                        continue;
+                    }
+                    for (w, &score) in c.iter().enumerate() {
+                        if used[w] {
+                            continue;
+                        }
+                        if best.map_or(true, |(_, _, s)| score > s) {
+                            best = Some((bi, w, score));
+                        }
+                    }
+                }
+                let (bi, w, _) = best.expect("bcnt <= k keeps a worker free");
+                batch_worker[bi] = w;
+                used[w] = true;
+            }
+
+            // ---- fetch: id requests, then (quantized) feature rows ----
+            let mut req: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); k]; k];
+            for (bi, mb) in batches.iter().enumerate() {
+                let w = batch_worker[bi];
+                for &v in &mb.n_id {
+                    let o = self.part.assign[v as usize] as usize;
+                    if o != w {
+                        req[w][o].push(v);
+                    }
+                }
+            }
+            let req_sends: Vec<Vec<Payload>> = req
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .map(|ids| {
+                            if ids.is_empty() {
+                                Payload::Empty
+                            } else {
+                                Payload::F32(ids.iter().map(|&v| v as f32).collect())
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let req_recvs = alltoallv(req_sends, &self.mc.machine, &mut epoch_comm);
+
+            let mut quant_secs = vec![0f64; k];
+            let mut reply_sends: Vec<Vec<Payload>> = (0..k)
+                .map(|_| (0..k).map(|_| Payload::Empty).collect())
+                .collect();
+            for (o, row) in req_recvs.iter().enumerate() {
+                for (w, payload) in row.iter().enumerate() {
+                    let ids = match payload {
+                        Payload::F32(v) if !v.is_empty() => v,
+                        _ => continue,
+                    };
+                    let rows = ids.len();
+                    let mut buf = Vec::with_capacity(rows * f);
+                    for &idf in ids {
+                        buf.extend_from_slice(self.lg.feature_row(idf as usize));
+                    }
+                    reply_sends[o][w] = match self.mc.quant {
+                        Some(bits) => {
+                            let t = Instant::now();
+                            let qseed = mix2(
+                                mix2(self.mc.seed, ((self.epoch as u64) << 20) ^ round as u64),
+                                ((o as u64) << 8) ^ w as u64,
+                            );
+                            let q = fused::quantize(&buf, rows, f, bits, qseed);
+                            quant_secs[o] += t.elapsed().as_secs_f64();
+                            Payload::Quant(q)
+                        }
+                        None => Payload::F32(buf),
+                    };
+                }
+            }
+            let replies = alltoallv(reply_sends, &self.mc.machine, &mut epoch_comm);
+
+            // ---- compute: assemble X, forward/backward per batch ------
+            let mut stage = vec![0f64; k];
+            let mut round_grads: Vec<ModelGrads> = Vec::with_capacity(bcnt);
+            let mut with_loss = 0usize;
+            let mut replies = replies;
+            for (bi, mb) in batches.iter().enumerate() {
+                let w = batch_worker[bi];
+                // Each reply is consumed exactly once (one batch per worker
+                // per round) — move it out instead of cloning.
+                let mut decoded: Vec<Option<Vec<f32>>> = vec![None; k];
+                for (o, slot) in replies[w].iter_mut().enumerate() {
+                    match std::mem::replace(slot, Payload::Empty) {
+                        Payload::F32(v) if !v.is_empty() => decoded[o] = Some(v),
+                        Payload::Quant(q) => {
+                            let t = Instant::now();
+                            decoded[o] = Some(fused::dequantize(&q));
+                            quant_secs[w] += t.elapsed().as_secs_f64();
+                        }
+                        _ => {}
+                    }
+                }
+
+                let t = Instant::now();
+                let m = mb.n();
+                let mut x = vec![0f32; m * f];
+                let mut cursors = vec![0usize; k];
+                for (i, &v) in mb.n_id.iter().enumerate() {
+                    let o = self.part.assign[v as usize] as usize;
+                    if o == w {
+                        x[i * f..(i + 1) * f].copy_from_slice(self.lg.feature_row(v as usize));
+                    } else {
+                        let rows = decoded[o]
+                            .as_ref()
+                            .ok_or_else(|| anyhow::anyhow!("missing reply from {o} to {w}"))?;
+                        let c = cursors[o];
+                        anyhow::ensure!((c + 1) * f <= rows.len(), "reply row underflow");
+                        x[i * f..(i + 1) * f].copy_from_slice(&rows[c * f..(c + 1) * f]);
+                        cursors[o] += 1;
+                    }
+                }
+                let labels: Vec<u32> =
+                    mb.n_id.iter().map(|&v| self.lg.labels[v as usize]).collect();
+                let split: Vec<u8> = mb.n_id.iter().map(|&v| self.lg.split[v as usize]).collect();
+                let mut grads = ModelGrads::zeros(&self.params);
+                let out = run_batch(&self.params, &dims, mb, &x, &labels, &split, &mut grads);
+                if out.wsum > 0.0 {
+                    with_loss += 1;
+                }
+                totals.accumulate(&out);
+                round_grads.push(grads);
+                stage[w] += t.elapsed().as_secs_f64() + sample_secs[bi];
+            }
+
+            // ---- allreduce + optimizer step ---------------------------
+            let mut flats: Vec<Vec<f32>> = round_grads.iter().map(|g| g.flatten()).collect();
+            while flats.len() < k {
+                flats.push(vec![0f32; n_params]);
+            }
+            let ar = collective::allreduce_sum(&mut flats, &self.mc.machine);
+            epoch_comm.modeled_send_secs.iter_mut().for_each(|s| *s += ar);
+            let t = Instant::now();
+            let mut summed = flats.swap_remove(0);
+            let scale = 1.0 / with_loss.max(1) as f32;
+            summed.iter_mut().for_each(|g| *g *= scale);
+            let mut flat_params = self.params.flatten();
+            self.opt.step(&mut flat_params, &summed);
+            self.params.unflatten_into(&flat_params);
+            breakdown.add(Category::Other, t.elapsed().as_secs_f64());
+
+            // Eqn-2 bottleneck view per round.
+            let mx = collective::allreduce_max(&stage);
+            modeled_compute += mx;
+            for &s in &stage {
+                sync += mx - s;
+            }
+            breakdown.add(Category::Aggr, mx);
+            breakdown.add(Category::Quant, collective::allreduce_max(&quant_secs));
+        }
+
+        // ---- time accounting (same contract as the full-batch loop) ---
+        let cscale = self.mc.machine.cores_per_rank.max(1.0);
+        modeled_compute /= cscale;
+        for c in [Category::Aggr, Category::Quant, Category::Other] {
+            let v = breakdown.get(c);
+            breakdown.add(c, v / cscale - v);
+        }
+        breakdown.add(Category::Sync, sync / k as f64 / cscale);
+        let comm_secs = epoch_comm.modeled_comm_secs();
+        breakdown.add(Category::Comm, comm_secs);
+        for i in 0..k {
+            for j in 0..k {
+                self.comm_stats.data_bits[i][j] += epoch_comm.data_bits[i][j];
+                self.comm_stats.param_bits[i][j] += epoch_comm.param_bits[i][j];
+                self.comm_stats.messages[i][j] += epoch_comm.messages[i][j];
+            }
+            self.comm_stats.modeled_send_secs[i] += epoch_comm.modeled_send_secs[i];
+        }
+
+        let stats = EpochStats {
+            epoch: self.epoch,
+            train_loss: (totals.loss_sum / totals.wsum.max(1e-12)) as f32,
+            train_acc: (totals.train_correct / totals.train_cnt.max(1.0)) as f32,
+            val_acc: (totals.val_correct / totals.val_cnt.max(1.0)) as f32,
+            test_acc: (totals.test_correct / totals.test_cnt.max(1.0)) as f32,
+            modeled_secs: modeled_compute + comm_secs,
+            measured_secs: wall.elapsed().as_secs_f64(),
+            breakdown,
+            comm_data_bytes: epoch_comm.total_data_bytes(),
+            comm_param_bytes: epoch_comm.total_param_bytes(),
+        };
+        self.epoch += 1;
+        Ok(stats)
+    }
+
+    /// Train for the configured number of epochs.
+    pub fn run(&mut self, log: bool) -> Result<Vec<EpochStats>> {
+        let mut out = Vec::with_capacity(self.mc.epochs);
+        for e in 0..self.mc.epochs {
+            let s = self.epoch()?;
+            if log && (e % 10 == 0 || e + 1 == self.mc.epochs) {
+                eprintln!(
+                    "epoch {:4}  loss {:.4}  train {:.4}  val {:.4}  test {:.4}  \
+                     modeled {:.4}s  fetched {}",
+                    s.epoch,
+                    s.train_loss,
+                    s.train_acc,
+                    s.val_acc,
+                    s.test_acc,
+                    s.modeled_secs,
+                    crate::util::fmt_bytes(s.comm_data_bytes),
+                );
+            }
+            out.push(s);
+        }
+        Ok(out)
+    }
+}
+
+/// The batch adjacency as the weighted sparse matrix `agg::spmm` wants,
+/// so the forward aggregation runs the §4 register-blocked kernel
+/// instead of a private scalar loop.
+fn batch_matrix(adj: &CsrGraph, w: &[f32]) -> CsrMatrix {
+    CsrMatrix {
+        n_rows: adj.n,
+        n_cols: adj.n,
+        row_ptr: adj.row_ptr.clone(),
+        col_idx: adj.col_idx.clone(),
+        weights: w.to_vec(),
+    }
+}
+
+/// Transpose scatter of the forward aggregation: `out[src] += w_e · d[dst]`
+/// (the backward pass; kept as a scalar loop — reusing `spmm_blocked`
+/// here would require building a transposed CSR per batch).
+fn aggregate_t(adj: &CsrGraph, w: &[f32], d: &[f32], f: usize, out: &mut [f32]) {
+    for v in 0..adj.n {
+        let (lo, hi) = (adj.row_ptr[v], adj.row_ptr[v + 1]);
+        for e in lo..hi {
+            let we = w[e];
+            if we == 0.0 {
+                continue;
+            }
+            let s = adj.col_idx[e] as usize;
+            let src = &d[v * f..(v + 1) * f];
+            let dst = &mut out[s * f..(s + 1) * f];
+            for (o, &x) in dst.iter_mut().zip(src.iter()) {
+                *o += we * x;
+            }
+        }
+    }
+}
+
+/// Forward + weighted masked-softmax loss + backward over one batch.
+/// Gradients of the *mean* (weighted) batch loss accumulate into `grads`.
+fn run_batch(
+    params: &ModelParams,
+    dims: &[(usize, usize, bool); 3],
+    mb: &MiniBatch,
+    x: &[f32],
+    labels: &[u32],
+    split: &[u8],
+    grads: &mut ModelGrads,
+) -> BatchOut {
+    let m = mb.n();
+    let c = dims[2].1;
+    debug_assert_eq!(x.len(), m * dims[0].0);
+
+    // ---- forward ------------------------------------------------------
+    let a = batch_matrix(&mb.adj, &mb.edge_weight);
+    let mut saved: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(3);
+    let mut h = x.to_vec();
+    for (l, &(fin, fout, relu_on)) in dims.iter().enumerate() {
+        let mut z = vec![0f32; m * fin];
+        spmm_blocked(&a, &h, fin, &mut z);
+        let mut out = vec![0f32; m * fout];
+        linalg::matmul(&h, &params.layers[l].w_self, m, fin, fout, &mut out);
+        linalg::matmul_acc(&z, &params.layers[l].w_neigh, m, fin, fout, &mut out);
+        linalg::add_bias(&mut out, m, &params.layers[l].b);
+        if relu_on {
+            linalg::relu(&mut out);
+        }
+        saved.push((h, z));
+        h = out;
+    }
+    let logits = h;
+
+    // ---- loss head over the targets -----------------------------------
+    let mut d = vec![0f32; m * c];
+    let mut out = BatchOut::default();
+    for i in 0..mb.n_target {
+        let row = &logits[i * c..(i + 1) * c];
+        let label = labels[i] as usize;
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut denom = 0f32;
+        for &v in row {
+            denom += (v - mx).exp();
+        }
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        let correct = if best == label { 1.0 } else { 0.0 };
+        match split[i] {
+            SPLIT_TRAIN => {
+                let wt = mb.node_weight[i];
+                let p_label = ((row[label] - mx).exp() / denom).max(1e-30);
+                out.loss_sum += wt as f64 * (-(p_label.ln()) as f64);
+                out.wsum += wt as f64;
+                out.train_cnt += 1.0;
+                out.train_correct += correct;
+                for j in 0..c {
+                    let p = (row[j] - mx).exp() / denom;
+                    let y = if j == label { 1.0 } else { 0.0 };
+                    d[i * c + j] = wt * (p - y);
+                }
+            }
+            SPLIT_VAL => {
+                out.val_cnt += 1.0;
+                out.val_correct += correct;
+            }
+            SPLIT_TEST => {
+                out.test_cnt += 1.0;
+                out.test_correct += correct;
+            }
+            _ => {}
+        }
+    }
+    if out.wsum > 0.0 {
+        let inv = (1.0 / out.wsum) as f32;
+        for v in &mut d {
+            *v *= inv;
+        }
+    }
+
+    // ---- backward -----------------------------------------------------
+    let mut d_out = d;
+    for l in (0..3).rev() {
+        let (fin, fout, _) = dims[l];
+        let (h_in, z) = &saved[l];
+        linalg::matmul_tn_acc(h_in, &d_out, m, fin, fout, &mut grads.layers[l].w_self);
+        linalg::matmul_tn_acc(z, &d_out, m, fin, fout, &mut grads.layers[l].w_neigh);
+        linalg::col_sum_acc(&d_out, m, fout, &mut grads.layers[l].b);
+        if l == 0 {
+            break;
+        }
+        let mut d_h = vec![0f32; m * fin];
+        linalg::matmul_nt_acc(&d_out, &params.layers[l].w_self, m, fout, fin, &mut d_h);
+        let mut d_z = vec![0f32; m * fin];
+        linalg::matmul_nt_acc(&d_out, &params.layers[l].w_neigh, m, fout, fin, &mut d_z);
+        aggregate_t(&mb.adj, &mb.edge_weight, &d_z, fin, &mut d_h);
+        // h_in is the ReLU output of layer l-1: mask through it.
+        let mut d_prev = vec![0f32; m * fin];
+        linalg::relu_bwd(&d_h, h_in, &mut d_prev);
+        d_out = d_prev;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::sbm;
+    use crate::sample::FullSampler;
+
+    fn lg(n: usize, seed: u64) -> Arc<LabelledGraph> {
+        Arc::new(sbm(n, 4, 8.0, 0.85, 16, 0.6, seed))
+    }
+
+    fn mc(epochs: usize) -> MiniBatchConfig {
+        MiniBatchConfig {
+            epochs,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences() {
+        let lg = Arc::new(sbm(60, 3, 6.0, 0.9, 6, 0.3, 3));
+        let mut sampler = FullSampler::new(lg.clone());
+        let mb = sampler.sample(0, 0);
+        let shapes = ShapeConfig {
+            name: "fd".into(),
+            n_pad: 0,
+            f_in: 6,
+            hidden: 5,
+            classes: 3,
+            e_local: 0,
+            e_pre: 0,
+            p_pre: 0,
+            r_pre: 0,
+            r_post: 0,
+            e_post: 0,
+        };
+        let params = ModelParams::init(&shapes, 7);
+        let dims = shapes.layer_dims();
+        let x = lg.features.clone();
+        let labels = lg.labels.clone();
+        let split = lg.split.clone();
+
+        let loss_of = |p: &ModelParams| -> f64 {
+            let mut scratch = ModelGrads::zeros(p);
+            let o = run_batch(p, &dims, &mb, &x, &labels, &split, &mut scratch);
+            o.loss_sum / o.wsum
+        };
+        let mut grads = ModelGrads::zeros(&params);
+        run_batch(&params, &dims, &mb, &x, &labels, &split, &mut grads);
+        let flat_g = grads.flatten();
+        let flat_p = params.flatten();
+
+        // Probe a spread of parameter coordinates: w_self/w_neigh/b of
+        // each layer (layout: per layer w_self, w_neigh, b).
+        let l0 = 2 * 6 * 5 + 5;
+        let l1 = 2 * 5 * 5 + 5;
+        let probes = [
+            0usize,            // layer0 w_self
+            6 * 5 + 3,         // layer0 w_neigh
+            2 * 6 * 5 + 2,     // layer0 b
+            l0 + 1,            // layer1 w_self
+            l0 + 5 * 5 + 2,    // layer1 w_neigh
+            l0 + l1 + 4,       // layer2 w_self
+            l0 + l1 + 5 * 3 + 1, // layer2 w_neigh
+        ];
+        let eps = 1e-2f32;
+        for &idx in &probes {
+            let mut pp = flat_p.clone();
+            pp[idx] += eps;
+            let mut p_hi = ModelParams::init(&shapes, 7);
+            p_hi.unflatten_into(&pp);
+            pp[idx] -= 2.0 * eps;
+            let mut p_lo = ModelParams::init(&shapes, 7);
+            p_lo.unflatten_into(&pp);
+            let fd = (loss_of(&p_hi) - loss_of(&p_lo)) / (2.0 * eps as f64);
+            let an = flat_g[idx] as f64;
+            assert!(
+                (fd - an).abs() < 1e-2 + 0.1 * an.abs().max(fd.abs()),
+                "param {idx}: finite-diff {fd} vs analytic {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn cluster_training_learns() {
+        let scfg = SamplerConfig {
+            num_clusters: 6,
+            seed: 42,
+            ..Default::default()
+        };
+        let mut tr =
+            MiniBatchTrainer::new(lg(400, 11), 3, SamplerKind::Cluster, &scfg, mc(30)).unwrap();
+        let stats = tr.run(false).unwrap();
+        let first = &stats[0];
+        let last = stats.last().unwrap();
+        assert!(last.train_loss < first.train_loss, "loss must decrease");
+        assert!(last.test_acc > 0.45, "test acc {} too low", last.test_acc);
+        assert!(last.comm_data_bytes > 0.0);
+    }
+
+    #[test]
+    fn neighbor_training_learns() {
+        let scfg = SamplerConfig {
+            batch_size: 128,
+            fanouts: vec![10, 5, 5],
+            seed: 42,
+            ..Default::default()
+        };
+        let mut tr =
+            MiniBatchTrainer::new(lg(400, 11), 3, SamplerKind::Neighbor, &scfg, mc(30)).unwrap();
+        let stats = tr.run(false).unwrap();
+        let last = stats.last().unwrap();
+        assert!(last.test_acc > 0.45);
+        // Every epoch covers all nodes, so val/test predictions exist and
+        // beat zero once trained.
+        assert!(last.val_acc > 0.0 && last.test_acc > 0.0);
+    }
+
+    #[test]
+    fn quantized_fetch_still_learns_and_is_cheaper() {
+        let scfg = SamplerConfig {
+            num_clusters: 6,
+            seed: 42,
+            ..Default::default()
+        };
+        let mut fp =
+            MiniBatchTrainer::new(lg(400, 11), 3, SamplerKind::Cluster, &scfg, mc(25)).unwrap();
+        let fp_stats = fp.run(false).unwrap();
+        let mut q = MiniBatchTrainer::new(
+            lg(400, 11),
+            3,
+            SamplerKind::Cluster,
+            &scfg,
+            MiniBatchConfig {
+                quant: Some(Bits::Int2),
+                ..mc(25)
+            },
+        )
+        .unwrap();
+        let q_stats = q.run(false).unwrap();
+        assert!(q_stats.last().unwrap().test_acc > 0.4);
+        assert!(q_stats[0].comm_param_bytes > 0.0);
+        // Quantized fetch moves far fewer data bytes than FP32 fetch.
+        assert!(
+            q_stats[0].comm_data_bytes < fp_stats[0].comm_data_bytes / 2.0,
+            "quant {} vs fp {}",
+            q_stats[0].comm_data_bytes,
+            fp_stats[0].comm_data_bytes
+        );
+    }
+
+    #[test]
+    fn deterministic_loss_curves() {
+        let scfg = SamplerConfig {
+            batch_size: 100,
+            seed: 5,
+            ..Default::default()
+        };
+        let run = || {
+            let mut tr = MiniBatchTrainer::new(
+                lg(300, 9),
+                2,
+                SamplerKind::SaintRw,
+                &scfg,
+                MiniBatchConfig {
+                    seed: 5,
+                    ..mc(5)
+                },
+            )
+            .unwrap();
+            tr.run(false)
+                .unwrap()
+                .iter()
+                .map(|s| s.train_loss)
+                .collect::<Vec<f32>>()
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn single_worker_has_no_fetch_traffic() {
+        let scfg = SamplerConfig {
+            num_clusters: 4,
+            seed: 1,
+            ..Default::default()
+        };
+        let mut tr =
+            MiniBatchTrainer::new(lg(200, 2), 1, SamplerKind::Cluster, &scfg, mc(2)).unwrap();
+        let stats = tr.run(false).unwrap();
+        assert_eq!(stats[0].comm_data_bytes, 0.0);
+    }
+}

@@ -8,9 +8,15 @@
 //!   exchange, aggregation + update, loss, exact reverse-halo backward,
 //!   gradient allreduce, Adam — with the Fig. 12 time breakdown and
 //!   Eqn 2/5 modeled communication.
+//! * [`minibatch`] — the sampling regime (DESIGN.md §8): per-round
+//!   mini-batches from `sample::` run SPMD over the same partitions,
+//!   fetching remote feature rows through the same `comm::alltoallv`
+//!   (optionally quantized), so both regimes share one comm accounting.
 
+pub mod minibatch;
 pub mod planner;
 pub mod trainer;
 
+pub use minibatch::{MiniBatchConfig, MiniBatchTrainer};
 pub use planner::{fit_config, WorkerCtx};
 pub use trainer::{EpochStats, TrainConfig, Trainer};

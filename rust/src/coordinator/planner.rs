@@ -292,6 +292,21 @@ fn pad_to(v: &mut Vec<u32>, len: usize, fill: u32) {
     v.resize(len, fill);
 }
 
+/// The worker partition every trainer runs over: multilevel min-cut with
+/// the §7.2 in-degree + train-mask vertex weights. Shared by [`prepare`]
+/// (full-batch) and `MiniBatchTrainer::new` so both regimes — and the
+/// tests comparing them — agree on the partitioning by construction.
+pub fn partition_for(lg: &LabelledGraph, k: usize, seed: u64) -> crate::partition::Partition {
+    use crate::partition::multilevel::{multilevel, MultilevelOpts};
+    let mask: Vec<bool> = lg.split.iter().map(|&s| s == SPLIT_TRAIN).collect();
+    let weights = crate::partition::vertex_weights(&lg.graph, Some(&mask), 4);
+    let opts = MultilevelOpts {
+        seed,
+        ..Default::default()
+    };
+    multilevel(&lg.graph, k, &weights, &opts)
+}
+
 /// Full preprocessing pipeline: partition → plans → contexts, with the
 /// in-degree + train-mask vertex weights of §7.2.
 pub fn prepare(
@@ -301,14 +316,7 @@ pub fn prepare(
     cfg: Option<ShapeConfig>,
     seed: u64,
 ) -> Result<(Vec<WorkerCtx>, ShapeConfig, Vec<WorkerPlan>)> {
-    use crate::partition::multilevel::{multilevel, MultilevelOpts};
-    let mask: Vec<bool> = lg.split.iter().map(|&s| s == SPLIT_TRAIN).collect();
-    let weights = crate::partition::vertex_weights(&lg.graph, Some(&mask), 4);
-    let opts = MultilevelOpts {
-        seed,
-        ..Default::default()
-    };
-    let part = multilevel(&lg.graph, k, &weights, &opts);
+    let part = partition_for(lg, k, seed);
     let plans = crate::hier::plan::build_plans(&lg.graph, &part, strategy);
     crate::hier::plan::validate_plans(&lg.graph, &part, &plans).context("plan validation")?;
     let cfg = match cfg {

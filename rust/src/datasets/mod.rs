@@ -64,6 +64,19 @@ impl DatasetSpec {
 pub fn catalog() -> Vec<DatasetSpec> {
     vec![
         DatasetSpec {
+            name: "arxiv-xs",
+            paper_analog: "Ogbn-arxiv (CI-sized cut)",
+            family: Family::Sbm,
+            n: 800,
+            avg_deg: 7.0,
+            feat_dim: 32,
+            num_classes: 8,
+            hidden: 32,
+            epochs: 60,
+            lr: 0.01,
+            seed: 1000,
+        },
+        DatasetSpec {
             name: "arxiv-s",
             paper_analog: "Ogbn-arxiv (169K nodes, deg~6.9)",
             family: Family::Sbm,

@@ -2,10 +2,13 @@
 //! the bench harnesses (one per paper table/figure) and examples.
 
 use crate::backend::native::NativeBackend;
+use crate::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
 use crate::coordinator::planner::prepare;
 use crate::coordinator::trainer::{EpochStats, TrainConfig, Trainer};
 use crate::datasets::DatasetSpec;
+use crate::sample::{SamplerConfig, SamplerKind};
 use anyhow::Result;
+use std::sync::Arc;
 
 /// A fixed-width console table (benches print paper-style rows).
 pub struct Table {
@@ -88,6 +91,30 @@ pub fn train_native(
     // `prepare` fit used hidden=64 default; refit classes/hidden widths.
     let backend = Box::new(NativeBackend::new(cfg));
     let mut tr = Trainer::new(ctxs, backend, tc);
+    let stats = tr.run(false)?;
+    Ok((stats, tr))
+}
+
+/// Train `spec` with the mini-batch engine on `k` simulated workers
+/// (sampling-regime twin of [`train_native`], used by the
+/// `sampling_regimes` bench; the CLI wires its own config for per-epoch
+/// logging). Like `train_native`, the dataset spec wins: `mc.lr` and
+/// `mc.hidden` are overwritten with `spec.lr` / `spec.hidden`.
+pub fn train_minibatch(
+    spec: &DatasetSpec,
+    k: usize,
+    kind: SamplerKind,
+    scfg: &SamplerConfig,
+    mut mc: MiniBatchConfig,
+    epochs_override: Option<usize>,
+) -> Result<(Vec<EpochStats>, MiniBatchTrainer)> {
+    let lg = Arc::new(spec.build());
+    mc.lr = spec.lr;
+    mc.hidden = spec.hidden;
+    if let Some(e) = epochs_override {
+        mc.epochs = e;
+    }
+    let mut tr = MiniBatchTrainer::new(lg, k, kind, scfg, mc)?;
     let stats = tr.run(false)?;
     Ok((stats, tr))
 }

@@ -101,6 +101,31 @@ impl CsrGraph {
         CsrGraph::from_edges(self.n, &es)
     }
 
+    /// Induced subgraph over `nodes` (distinct global ids): a CSR over
+    /// local ids `0..nodes.len()` in the given order, keeping exactly the
+    /// arcs whose endpoints both lie in `nodes`. The workhorse of the
+    /// Cluster-GCN / GraphSAINT samplers (`sample::`).
+    pub fn induced(&self, nodes: &[u32]) -> CsrGraph {
+        // Localization scales with the node set, not the graph: an
+        // O(n_global) table here would dominate per-batch sampling cost
+        // for small batches on large graphs.
+        let mut loc: std::collections::HashMap<u32, u32> =
+            std::collections::HashMap::with_capacity(nodes.len());
+        for (i, &v) in nodes.iter().enumerate() {
+            let prev = loc.insert(v, i as u32);
+            debug_assert!(prev.is_none(), "duplicate node {v}");
+        }
+        let mut edges = Vec::new();
+        for (i, &v) in nodes.iter().enumerate() {
+            for &s in self.in_neighbors(v as usize) {
+                if let Some(&ls) = loc.get(&s) {
+                    edges.push((ls, i as u32));
+                }
+            }
+        }
+        CsrGraph::from_edges(nodes.len(), &edges)
+    }
+
     /// Validate structural invariants (used by property tests).
     pub fn validate(&self) -> anyhow::Result<()> {
         anyhow::ensure!(self.row_ptr.len() == self.n + 1, "row_ptr length");
@@ -162,6 +187,53 @@ mod tests {
                 "missing reverse of ({s},{d})"
             );
         }
+    }
+
+    #[test]
+    fn induced_subgraph_keeps_internal_arcs() {
+        let g = toy();
+        // Take nodes {0, 2}: internal arcs are 0->2 and the double 2->0.
+        let sub = g.induced(&[0, 2]);
+        assert_eq!(sub.n, 2);
+        sub.validate().unwrap();
+        assert_eq!(sub.in_neighbors(0), &[1, 1]); // two copies of 2->0
+        assert_eq!(sub.in_neighbors(1), &[0]); // 0->2
+        // Node order defines local ids.
+        let sub2 = g.induced(&[2, 0]);
+        assert_eq!(sub2.in_neighbors(0), &[1]);
+        assert_eq!(sub2.in_neighbors(1), &[0, 0]);
+        // Empty selection.
+        assert_eq!(g.induced(&[]).n, 0);
+    }
+
+    #[test]
+    fn prop_induced_matches_filter() {
+        propcheck(24, |gen| {
+            let n = gen.usize(2, 50);
+            let m = gen.usize(0, 200);
+            let edges = gen.edges(n, m, true);
+            let g = CsrGraph::from_edges(n, &edges);
+            let take = gen.usize(1, n);
+            let picked = gen.rng.sample_indices(n, take);
+            let nodes: Vec<u32> = picked.iter().map(|&v| v as u32).collect();
+            let sub = g.induced(&nodes);
+            let loc: std::collections::HashMap<u32, u32> = nodes
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (v, i as u32))
+                .collect();
+            let mut want: Vec<(u32, u32)> = edges
+                .iter()
+                .filter_map(|&(s, d)| match (loc.get(&s), loc.get(&d)) {
+                    (Some(&ls), Some(&ld)) => Some((ls, ld)),
+                    _ => None,
+                })
+                .collect();
+            want.sort_unstable();
+            let mut got = sub.edges();
+            got.sort_unstable();
+            prop_assert(got == want, "induced arc multiset mismatch")
+        });
     }
 
     #[test]

@@ -29,4 +29,5 @@ pub mod partition;
 pub mod perfmodel;
 pub mod quant;
 pub mod runtime;
+pub mod sample;
 pub mod util;

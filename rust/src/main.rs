@@ -1,9 +1,11 @@
-//! `supergcn` — the leader binary: distributed full-batch GCN training on
-//! a simulated CPU supercomputer (see DESIGN.md §1 for the simulation
-//! contract).
+//! `supergcn` — the leader binary: distributed full-batch *and*
+//! mini-batch GCN training on a simulated CPU supercomputer (see
+//! DESIGN.md §1 for the simulation contract, §8 for the sampling
+//! subsystem).
 //!
 //! Subcommands:
-//!   train       end-to-end training run (native or xla backend)
+//!   train       end-to-end training run (native or xla backend);
+//!               --sampler full|neighbor|saint-rw|saint-node|saint-edge|cluster
 //!   partition   partition a dataset, report quality vs baselines
 //!   volume      Table-5-style comm-volume report across strategies
 //!   perfmodel   Fig-7 analytic speedup sweep
@@ -13,8 +15,12 @@ use anyhow::Result;
 use supergcn::backend::native::NativeBackend;
 use supergcn::backend::xla::XlaBackend;
 use supergcn::backend::Backend;
+use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
 use supergcn::coordinator::planner::prepare;
 use supergcn::coordinator::trainer::{TrainConfig, Trainer};
+use supergcn::graph::generate::LabelledGraph;
+use supergcn::sample::{SamplerConfig, SamplerKind};
+use std::sync::Arc;
 use supergcn::datasets;
 use supergcn::exp::Table;
 use supergcn::graph::stats::stats;
@@ -39,7 +45,10 @@ fn main() {
         _ => {
             eprintln!(
                 "usage: supergcn <train|partition|volume|perfmodel|datasets> [--help]\n\
-                 SuperGCN: distributed full-batch GCN training for CPU supercomputers."
+                 SuperGCN: distributed full-batch and mini-batch GCN training for CPU\n\
+                 supercomputers. `train --sampler full` is the paper's full-batch loop;\n\
+                 `--sampler neighbor|saint-rw|saint-node|saint-edge|cluster` trains with\n\
+                 the sampling regime (see `train --help` for fan-out/batch flags)."
             );
             Ok(())
         }
@@ -91,6 +100,16 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("machine", "abci", "abci | fugaku network model")
         .opt("delay-comm", "1", "halo exchange every N epochs (DistGNN cd-N)")
         .opt("seed", "42", "random seed")
+        .opt(
+            "sampler",
+            "full",
+            "full | neighbor | saint-rw | saint-node | saint-edge | cluster",
+        )
+        .opt("batch-size", "512", "mini-batch target nodes / SAINT node budget")
+        .opt("fanouts", "15,10,5", "per-layer neighbor fan-outs (comma-separated)")
+        .opt("walk-length", "3", "SAINT random-walk length")
+        .opt("clusters", "0", "Cluster-GCN cluster count (0 = auto)")
+        .opt("cluster-batch", "1", "clusters unioned per batch")
         .flag("label-prop", "enable masked label propagation")
         .parse_from(argv)?;
 
@@ -114,6 +133,53 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     };
 
     let backend_name = a.get_str("backend");
+    let kind = SamplerKind::parse(&a.get_str("sampler"))?;
+    if kind != SamplerKind::Full {
+        anyhow::ensure!(
+            backend_name == "native",
+            "mini-batch samplers run on the native engine (got --backend {backend_name})"
+        );
+        // Full-batch-only options must not silently vanish.
+        anyhow::ensure!(
+            !tc.label_prop,
+            "--label-prop only applies to --sampler full (the full-batch loop)"
+        );
+        anyhow::ensure!(
+            tc.delay_comm <= 1,
+            "--delay-comm only applies to --sampler full (mini-batch rounds are synchronous)"
+        );
+        anyhow::ensure!(
+            tc.strategy == RemoteStrategy::Hybrid,
+            "--strategy only applies to --sampler full (mini-batch fetches whole rows; \
+             leave the default 'hybrid')"
+        );
+        let scfg = SamplerConfig {
+            batch_size: a.get_usize("batch-size"),
+            fanouts: a.get_usize_list("fanouts"),
+            walk_length: a.get_usize("walk-length"),
+            num_clusters: a.get_usize("clusters"),
+            clusters_per_batch: a.get_usize("cluster-batch"),
+            seed: tc.seed,
+            ..Default::default()
+        };
+        // Reject bad values here with the CLI error path; the sampler
+        // constructors enforce the same invariants with assert!.
+        anyhow::ensure!(scfg.batch_size >= 1, "--batch-size must be >= 1");
+        anyhow::ensure!(
+            !scfg.fanouts.is_empty() && scfg.fanouts.iter().all(|&f| f >= 1),
+            "--fanouts must be a non-empty comma-separated list of integers >= 1"
+        );
+        let mc = MiniBatchConfig {
+            epochs: tc.epochs,
+            lr: spec.lr,
+            opt: OptKind::Adam,
+            quant: tc.quant,
+            hidden: spec.hidden,
+            machine: tc.machine.clone(),
+            seed: tc.seed,
+        };
+        return run_minibatch_training(Arc::new(lg), k, kind, scfg, mc);
+    }
     let (ctxs, cfg) = match backend_name.as_str() {
         "xla" => {
             let rt = supergcn::runtime::Runtime::load(
@@ -155,8 +221,18 @@ fn run_training(
     let epochs = tc.epochs;
     let mut tr = Trainer::new(ctxs, backend, tc);
     let stats = tr.run(true)?;
+    report_summary(epochs, &stats, &tr.comm_stats);
+    Ok(())
+}
+
+/// Final console summary shared by the full-batch and mini-batch runs.
+fn report_summary(
+    epochs: usize,
+    stats: &[supergcn::coordinator::trainer::EpochStats],
+    comm: &supergcn::comm::CommStats,
+) {
     let last = stats.last().unwrap();
-    let steady = supergcn::exp::steady_epoch_secs(&stats, 10);
+    let steady = supergcn::exp::steady_epoch_secs(stats, 10);
     println!(
         "\ndone: {} epochs  loss {:.4}  train {:.4}  val {:.4}  test {:.4}",
         epochs, last.train_loss, last.train_acc, last.val_acc, last.test_acc
@@ -168,9 +244,34 @@ fn run_training(
     );
     println!(
         "total comm: data {}  params {}",
-        supergcn::util::fmt_bytes(tr.comm_stats.total_data_bytes()),
-        supergcn::util::fmt_bytes(tr.comm_stats.total_param_bytes()),
+        supergcn::util::fmt_bytes(comm.total_data_bytes()),
+        supergcn::util::fmt_bytes(comm.total_param_bytes()),
     );
+}
+
+fn run_minibatch_training(
+    lg: Arc<LabelledGraph>,
+    k: usize,
+    kind: SamplerKind,
+    scfg: SamplerConfig,
+    mc: MiniBatchConfig,
+) -> Result<()> {
+    println!(
+        "mini-batch training: {} workers, sampler={}, quant={}, machine={}",
+        k,
+        kind.name(),
+        mc.quant.map(|b| b.name()).unwrap_or("fp32"),
+        mc.machine.name,
+    );
+    let epochs = mc.epochs;
+    let mut tr = MiniBatchTrainer::new(lg, k, kind, &scfg, mc)?;
+    println!(
+        "  {} batches/epoch over the {}-way partition",
+        tr.batches_per_epoch(),
+        tr.k()
+    );
+    let stats = tr.run(true)?;
+    report_summary(epochs, &stats, &tr.comm_stats);
     Ok(())
 }
 

@@ -1,0 +1,172 @@
+//! Cluster-GCN batching: partition the graph once into many small
+//! METIS-like clusters (`partition::multilevel`, the same family the
+//! SPMD workers are partitioned with), then train on unions of randomly
+//! ordered clusters per batch.
+//!
+//! Each epoch shuffles the cluster order and visits every cluster exactly
+//! once, so an epoch covers all nodes; aggregation inside a batch is the
+//! exact mean over retained (intra-batch) neighbors — Cluster-GCN's
+//! approximation is dropping the cut arcs, which is precisely what makes
+//! its communication cheap in the distributed setting (MG-GCN's
+//! partition-aligned batching observation).
+
+use super::minibatch::{mean_edge_weights, MiniBatch};
+use super::{epoch_rng, mix2, Sampler};
+use crate::graph::generate::LabelledGraph;
+use crate::partition::multilevel::{multilevel, MultilevelOpts};
+use crate::partition::vertex_weights;
+use std::sync::Arc;
+
+pub struct ClusterSampler {
+    lg: Arc<LabelledGraph>,
+    /// Nodes of each cluster (ascending global ids).
+    clusters: Vec<Vec<u32>>,
+    clusters_per_batch: usize,
+    seed: u64,
+}
+
+impl ClusterSampler {
+    /// `num_clusters == 0` picks `~n/512` clusters, clamped to `[4, 64]`
+    /// (and to `n`).
+    pub fn new(
+        lg: Arc<LabelledGraph>,
+        num_clusters: usize,
+        clusters_per_batch: usize,
+        seed: u64,
+    ) -> Self {
+        let n = lg.n();
+        let nc = if num_clusters == 0 {
+            (n / 512).clamp(4, 64).min(n.max(1))
+        } else {
+            num_clusters.min(n.max(1))
+        };
+        let w = vertex_weights(&lg.graph, None, 0);
+        let part = multilevel(
+            &lg.graph,
+            nc,
+            &w,
+            &MultilevelOpts {
+                seed: mix2(seed, 0xC1_05_7E4),
+                ..Default::default()
+            },
+        );
+        let clusters: Vec<Vec<u32>> = part
+            .part_nodes()
+            .into_iter()
+            .filter(|c| !c.is_empty())
+            .collect();
+        assert!(!clusters.is_empty(), "partitioner returned no clusters");
+        Self {
+            lg,
+            clusters,
+            clusters_per_batch: clusters_per_batch.max(1),
+            seed,
+        }
+    }
+
+    pub fn num_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+}
+
+impl Sampler for ClusterSampler {
+    fn name(&self) -> &'static str {
+        "cluster"
+    }
+
+    fn batches_per_epoch(&self) -> usize {
+        self.clusters.len().div_ceil(self.clusters_per_batch)
+    }
+
+    fn sample(&mut self, epoch: usize, batch: usize) -> MiniBatch {
+        let nc = self.clusters.len();
+        let mut order: Vec<usize> = (0..nc).collect();
+        epoch_rng(self.seed ^ 0xC1u64, epoch).shuffle(&mut order);
+        let lo = (batch * self.clusters_per_batch).min(nc);
+        let hi = ((batch + 1) * self.clusters_per_batch).min(nc);
+        let mut n_id: Vec<u32> = Vec::new();
+        for &ci in &order[lo..hi] {
+            n_id.extend_from_slice(&self.clusters[ci]);
+        }
+        n_id.sort_unstable();
+        let adj = self.lg.graph.induced(&n_id);
+        let edge_weight = mean_edge_weights(&adj);
+        MiniBatch {
+            sampler: "cluster",
+            n_target: n_id.len(),
+            node_weight: vec![1.0; n_id.len()],
+            n_id,
+            adj,
+            edge_weight,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::sbm;
+
+    fn lg() -> Arc<LabelledGraph> {
+        Arc::new(sbm(600, 4, 8.0, 0.85, 8, 0.5, 31))
+    }
+
+    #[test]
+    fn epoch_covers_every_node_exactly_once() {
+        let mut s = ClusterSampler::new(lg(), 8, 1, 3);
+        let nb = s.batches_per_epoch();
+        assert_eq!(nb, s.num_clusters());
+        let mut seen: Vec<u32> = Vec::new();
+        for b in 0..nb {
+            let mb = s.sample(5, b);
+            mb.validate(600).unwrap();
+            assert_eq!(mb.n_target, mb.n());
+            seen.extend_from_slice(&mb.n_id);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..600u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn multi_cluster_batches_union() {
+        let mut s = ClusterSampler::new(lg(), 9, 4, 3);
+        let nb = s.batches_per_epoch();
+        assert!(nb >= 2 && nb <= 3, "unexpected batch count {nb}");
+        let sizes: usize = (0..nb).map(|b| s.sample(0, b).n()).sum();
+        assert_eq!(sizes, 600);
+    }
+
+    #[test]
+    fn batches_keep_only_intra_arcs() {
+        let lg = lg();
+        let mut s = ClusterSampler::new(lg.clone(), 8, 1, 3);
+        let mb = s.sample(0, 0);
+        // Every kept arc maps back to a global arc inside the batch set.
+        let set: std::collections::HashSet<u32> = mb.n_id.iter().copied().collect();
+        for (ls, ld) in mb.adj.edges() {
+            let gs = mb.n_id[ls as usize];
+            let gd = mb.n_id[ld as usize];
+            assert!(set.contains(&gs) && set.contains(&gd));
+            assert!(lg.graph.in_neighbors(gd as usize).contains(&gs));
+        }
+        // Cluster batches drop some cut arcs (otherwise clustering is moot).
+        let total_kept: usize = (0..s.batches_per_epoch())
+            .map(|b| s.sample(0, b).m())
+            .sum();
+        assert!(total_kept < lg.graph.m());
+    }
+
+    #[test]
+    fn deterministic_and_epoch_shuffled() {
+        let mut a = ClusterSampler::new(lg(), 8, 1, 7);
+        let mut b = ClusterSampler::new(lg(), 8, 1, 7);
+        let x = a.sample(0, 0);
+        let y = b.sample(0, 0);
+        assert_eq!(x.n_id, y.n_id);
+        assert_eq!(x.adj, y.adj);
+        // Some epoch reorders the cluster sequence.
+        let e0: Vec<u32> = a.sample(0, 0).n_id;
+        let reordered = (1..6).any(|e| a.sample(e, 0).n_id != e0);
+        assert!(reordered, "epoch shuffle never changed batch 0");
+    }
+}

@@ -1,0 +1,68 @@
+//! The degenerate sampler: one batch per epoch containing the whole
+//! graph with exact mean-aggregation weights. It exists so the
+//! mini-batch engine can run the full-batch regime through the *same*
+//! fetch/compute/accounting path — the apples-to-apples baseline the
+//! `sampling_regimes` bench and the comm-volume acceptance test compare
+//! against.
+
+use super::minibatch::{mean_edge_weights, MiniBatch};
+use super::Sampler;
+use crate::graph::generate::LabelledGraph;
+use std::sync::Arc;
+
+pub struct FullSampler {
+    /// Built once — the batch never changes across epochs.
+    batch: MiniBatch,
+}
+
+impl FullSampler {
+    pub fn new(lg: Arc<LabelledGraph>) -> Self {
+        let n = lg.n();
+        let adj = lg.graph.clone();
+        let edge_weight = mean_edge_weights(&adj);
+        Self {
+            batch: MiniBatch {
+                sampler: "full",
+                n_id: (0..n as u32).collect(),
+                n_target: n,
+                node_weight: vec![1.0; n],
+                adj,
+                edge_weight,
+            },
+        }
+    }
+}
+
+impl Sampler for FullSampler {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn batches_per_epoch(&self) -> usize {
+        1
+    }
+
+    fn sample(&mut self, _epoch: usize, _batch: usize) -> MiniBatch {
+        self.batch.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::sbm;
+
+    #[test]
+    fn full_batch_is_the_whole_graph() {
+        let lg = Arc::new(sbm(200, 3, 6.0, 0.8, 8, 0.5, 5));
+        let mut s = FullSampler::new(lg.clone());
+        assert_eq!(s.batches_per_epoch(), 1);
+        let mb = s.sample(7, 0);
+        mb.validate(200).unwrap();
+        assert_eq!(mb.n(), 200);
+        assert_eq!(mb.n_target, 200);
+        assert_eq!(mb.adj, lg.graph);
+        // Identical across epochs.
+        assert_eq!(s.sample(8, 0).adj, mb.adj);
+    }
+}

@@ -1,0 +1,162 @@
+//! The [`MiniBatch`] exchange format shared by every sampler and consumed
+//! by `coordinator::minibatch::MiniBatchTrainer`.
+//!
+//! A batch is a small self-contained training problem: global node ids
+//! (`n_id`), an induced CSR adjacency over the *local* ids `0..n_id.len()`,
+//! per-arc aggregation weights (so sampled aggregation stays an unbiased
+//! estimate of the full mean aggregation), and per-target loss weights
+//! (GraphSAINT coverage normalization; 1.0 elsewhere).
+
+use crate::graph::CsrGraph;
+
+/// One sampled mini-batch.
+#[derive(Clone, Debug)]
+pub struct MiniBatch {
+    /// Producing sampler (for logs / reports).
+    pub sampler: &'static str,
+    /// Global node ids; row `i` of every batch tensor is node `n_id[i]`.
+    /// Ids are distinct; the first `n_target` rows are the loss/metric
+    /// targets.
+    pub n_id: Vec<u32>,
+    /// Leading rows of `n_id` that carry loss and metrics.
+    pub n_target: usize,
+    /// Induced adjacency over local ids (CSR by destination, like the
+    /// global graph: `in_neighbors(v)` are aggregation sources).
+    pub adj: CsrGraph,
+    /// Per-arc aggregation weight, aligned with `adj.col_idx`. For exact
+    /// mean aggregation this is `1/deg`; fan-out sampling uses
+    /// `1/fanout` so the sampled sum estimates the full mean.
+    pub edge_weight: Vec<f32>,
+    /// Per-target loss weight (len `n_target`).
+    pub node_weight: Vec<f32>,
+}
+
+impl MiniBatch {
+    /// Nodes in the batch.
+    pub fn n(&self) -> usize {
+        self.n_id.len()
+    }
+
+    /// Arcs in the batch.
+    pub fn m(&self) -> usize {
+        self.adj.m()
+    }
+
+    /// Structural invariants (used by tests and debug builds).
+    pub fn validate(&self, n_global: usize) -> anyhow::Result<()> {
+        self.adj.validate()?;
+        anyhow::ensure!(self.adj.n == self.n_id.len(), "adj/n_id size mismatch");
+        anyhow::ensure!(self.n_target <= self.n_id.len(), "n_target out of range");
+        anyhow::ensure!(self.node_weight.len() == self.n_target, "node_weight length");
+        anyhow::ensure!(self.edge_weight.len() == self.adj.m(), "edge_weight length");
+        anyhow::ensure!(
+            self.n_id.iter().all(|&v| (v as usize) < n_global),
+            "n_id out of global range"
+        );
+        let mut ids = self.n_id.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        anyhow::ensure!(ids.len() == self.n_id.len(), "n_id contains duplicates");
+        anyhow::ensure!(
+            self.edge_weight.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "edge weights must be finite and non-negative"
+        );
+        Ok(())
+    }
+}
+
+/// Build a weighted CSR-by-destination from arcs `(src, dst, weight)` in
+/// local ids. Rows come out sorted by source (matching
+/// [`CsrGraph::from_edges`]) with weights aligned to `col_idx`.
+pub fn csr_with_weights(n: usize, arcs: &[(u32, u32, f32)]) -> (CsrGraph, Vec<f32>) {
+    let mut order: Vec<usize> = (0..arcs.len()).collect();
+    order.sort_unstable_by_key(|&i| (arcs[i].1, arcs[i].0));
+    let mut row_ptr = vec![0usize; n + 1];
+    for &(_, d, _) in arcs {
+        row_ptr[d as usize + 1] += 1;
+    }
+    for v in 0..n {
+        row_ptr[v + 1] += row_ptr[v];
+    }
+    let mut col_idx = Vec::with_capacity(arcs.len());
+    let mut weights = Vec::with_capacity(arcs.len());
+    for &i in &order {
+        col_idx.push(arcs[i].0);
+        weights.push(arcs[i].2);
+    }
+    (
+        CsrGraph {
+            n,
+            row_ptr,
+            col_idx,
+        },
+        weights,
+    )
+}
+
+/// Exact mean-aggregation weights for an induced adjacency: `1/deg(v)`
+/// for every in-arc of `v` (Cluster-GCN / SAINT aggregate over the
+/// retained neighbors).
+pub fn mean_edge_weights(adj: &CsrGraph) -> Vec<f32> {
+    let mut w = vec![0f32; adj.m()];
+    for v in 0..adj.n {
+        let d = adj.in_degree(v);
+        if d == 0 {
+            continue;
+        }
+        let inv = 1.0 / d as f32;
+        for x in &mut w[adj.row_ptr[v]..adj.row_ptr[v + 1]] {
+            *x = inv;
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_with_weights_matches_from_edges_layout() {
+        let arcs = [(2u32, 0u32, 0.5f32), (1, 0, 0.25), (0, 2, 1.0), (1, 2, 2.0)];
+        let (g, w) = csr_with_weights(3, &arcs);
+        let plain: Vec<(u32, u32)> = arcs.iter().map(|&(s, d, _)| (s, d)).collect();
+        let want = CsrGraph::from_edges(3, &plain);
+        assert_eq!(g, want);
+        // Weights follow the sorted-by-src row order.
+        assert_eq!(g.in_neighbors(0), &[1, 2]);
+        assert_eq!(&w[..2], &[0.25, 0.5]);
+        assert_eq!(g.in_neighbors(2), &[0, 1]);
+        assert_eq!(&w[2..], &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn mean_weights_sum_to_one_per_row() {
+        let g = CsrGraph::from_edges(4, &[(0, 1), (2, 1), (3, 1), (1, 2)]);
+        let w = mean_edge_weights(&g);
+        for v in 0..g.n {
+            let s: f32 = w[g.row_ptr[v]..g.row_ptr[v + 1]].iter().sum();
+            if g.in_degree(v) > 0 {
+                assert!((s - 1.0).abs() < 1e-6, "row {v} sums to {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn validate_catches_duplicates() {
+        let (adj, ew) = csr_with_weights(2, &[(0, 1, 1.0)]);
+        let mut mb = MiniBatch {
+            sampler: "test",
+            n_id: vec![3, 3],
+            n_target: 2,
+            adj,
+            edge_weight: ew,
+            node_weight: vec![1.0, 1.0],
+        };
+        assert!(mb.validate(10).is_err());
+        mb.n_id = vec![3, 4];
+        mb.validate(10).unwrap();
+        assert_eq!(mb.n(), 2);
+        assert_eq!(mb.m(), 1);
+    }
+}
