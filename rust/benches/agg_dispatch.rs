@@ -1,0 +1,98 @@
+//! Aggregation-dispatch crossover: segment-sum vs SpMM operator form by
+//! feature width and nnz, on the problems the `exec::AggDispatch` chooser
+//! actually routes (sorted segment runs from R-MAT graphs).
+//!
+//! The §4 ladder gives two operator forms for the same aggregation —
+//! edge-list segment sum (`agg::blocked`/`agg::parallel`) and CSR SpMM
+//! (`agg::spmm`) — plus a serial/parallel split controlled by the
+//! dispatcher's tunable work threshold (`--agg-threshold` on the CLI).
+//! This harness sweeps (nnz, f) and reports where each form wins, the
+//! data behind the `Auto` heuristic.
+
+use std::time::Instant;
+use supergcn::agg::spmm::CsrMatrix;
+use supergcn::exec::{AggDispatch, AggKernel};
+use supergcn::exp::Table;
+use supergcn::graph::generate::rmat;
+use supergcn::util::rng::Rng;
+
+fn bench_ms(reps: usize, mut f: impl FnMut()) -> f64 {
+    f();
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best * 1e3
+}
+
+fn main() {
+    let mut table = Table::new(
+        "agg dispatch crossover: segment-sum vs SpMM (ms, lower is better)",
+        &["scale", "nnz", "f", "seg-blocked", "seg-parallel", "spmm", "auto", "winner"],
+    );
+    let mut rng = Rng::new(42);
+    for scale in [8usize, 10, 12] {
+        let g = rmat(scale, 8.0, 0.57, 0.19, 0.19, false, 7);
+        let n = g.n;
+        // Sorted segment form (CSR is sorted by destination already).
+        let a = CsrMatrix::from_graph(&g);
+        let mut gather = Vec::with_capacity(g.m());
+        let mut seg = Vec::with_capacity(g.m());
+        for v in 0..n {
+            for &s in g.in_neighbors(v) {
+                gather.push(s);
+                seg.push(v as u32);
+            }
+        }
+        for f in [16usize, 64, 128] {
+            let h: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+            let mut out = vec![0f32; n * f];
+            let blocked = AggDispatch::default().with_kernel(AggKernel::Blocked);
+            let par = AggDispatch::default()
+                .with_kernel(AggKernel::Parallel)
+                .with_threads(4);
+            let spmm = AggDispatch::default().with_kernel(AggKernel::Spmm);
+            let auto = AggDispatch::default().with_threads(4);
+
+            let t_blk = bench_ms(3, || {
+                out.iter_mut().for_each(|x| *x = 0.0);
+                blocked.segment_sum(&h, f, &gather, &seg, n, &mut out);
+            });
+            let t_par = bench_ms(3, || {
+                out.iter_mut().for_each(|x| *x = 0.0);
+                par.segment_sum(&h, f, &gather, &seg, n, &mut out);
+            });
+            let t_spmm = bench_ms(3, || {
+                out.iter_mut().for_each(|x| *x = 0.0);
+                spmm.spmm(&a, &h, f, &mut out);
+            });
+            let t_auto = bench_ms(3, || {
+                out.iter_mut().for_each(|x| *x = 0.0);
+                auto.segment_sum(&h, f, &gather, &seg, n, &mut out);
+            });
+            let winner = [("seg-blocked", t_blk), ("seg-parallel", t_par), ("spmm", t_spmm)]
+                .iter()
+                .min_by(|x, y| x.1.partial_cmp(&y.1).unwrap())
+                .unwrap()
+                .0;
+            table.row(vec![
+                scale.to_string(),
+                g.m().to_string(),
+                f.to_string(),
+                format!("{t_blk:.3}"),
+                format!("{t_par:.3}"),
+                format!("{t_spmm:.3}"),
+                format!("{t_auto:.3}"),
+                winner.to_string(),
+            ]);
+        }
+    }
+    table.print();
+    println!(
+        "\nAuto routes serial below {} contributions, 2D-parallel above; override with \
+         `supergcn train --agg-kernel` / tune with `--agg-threshold`.",
+        supergcn::agg::spmm::SPMM_PARALLEL_MIN_NNZ
+    );
+}

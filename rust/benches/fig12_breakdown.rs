@@ -9,10 +9,10 @@
 //! operators shrink that slice; large scale is communication-bound and
 //! the §5/§6 optimizations shrink that slice.
 
-use supergcn::backend::native::NativeBackend;
 use supergcn::coordinator::planner::prepare;
 use supergcn::coordinator::trainer::{TrainConfig, Trainer};
 use supergcn::datasets;
+use supergcn::exec::{AggDispatch, AggKernel};
 use supergcn::exp::Table;
 use supergcn::hier::volume::RemoteStrategy;
 use supergcn::perfmodel::MachineProfile;
@@ -39,12 +39,13 @@ fn run(spec_name: &str, k: usize, opt: bool, epochs: usize) -> Breakdown {
             machine: MachineProfile::abci(),
             epochs,
             lr: spec.lr,
+            // The "Base" engine: vanilla scatter aggregation everywhere.
+            agg: AggDispatch::default().with_kernel(AggKernel::Vanilla),
             ..Default::default()
         }
     };
     let (ctxs, cfg, _) = prepare(&lg, k, tc.strategy, None, tc.seed).unwrap();
-    let backend = Box::new(NativeBackend::new(cfg).with_vanilla_agg(!opt));
-    let mut tr = Trainer::new(ctxs, backend, tc);
+    let mut tr = Trainer::new(ctxs, cfg, tc);
     let stats = tr.run(false).unwrap();
     let mut total = Breakdown::new();
     for s in stats.iter().skip(1) {

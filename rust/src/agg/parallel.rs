@@ -36,6 +36,11 @@ pub fn flops_balanced_cuts(offsets: &[usize], n_blocks: usize) -> Vec<usize> {
     cuts
 }
 
+/// Default contribution count below which [`segment_sum_n`] falls back to
+/// the serial blocked kernel (tile setup would dominate). Tunable per
+/// call via [`segment_sum_n_with_threshold`] / `exec::AggDispatch`.
+pub const SEGSUM_PARALLEL_MIN_ENTRIES: usize = 4096;
+
 /// Parallel segment sum: `out[seg[i]] += h[gather[i]]`, `seg` sorted.
 ///
 /// `threads` ≤ 1 degrades to the serial blocked kernel. `n_seg` is the
@@ -49,8 +54,33 @@ pub fn segment_sum_n(
     n_seg: usize,
     out: &mut [f32],
 ) {
+    segment_sum_n_with_threshold(
+        threads,
+        h,
+        f,
+        gather,
+        seg,
+        n_seg,
+        out,
+        SEGSUM_PARALLEL_MIN_ENTRIES,
+    )
+}
+
+/// [`segment_sum_n`] with an explicit serial-fallback entry threshold.
+#[allow(clippy::too_many_arguments)]
+pub fn segment_sum_n_with_threshold(
+    threads: usize,
+    h: &[f32],
+    f: usize,
+    gather: &[u32],
+    seg: &[u32],
+    n_seg: usize,
+    out: &mut [f32],
+    min_entries: usize,
+) {
     assert_eq!(out.len(), n_seg * f);
-    if threads <= 1 || gather.len() < 4096 {
+    debug_assert!(crate::agg::is_sorted_segs(seg));
+    if threads <= 1 || gather.len() < min_entries {
         blocked::segment_sum(h, f, gather, seg, out);
         return;
     }

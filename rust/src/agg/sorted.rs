@@ -42,6 +42,7 @@ impl SortedIndexAdd {
     pub fn apply(&self, src: &[f32], f: usize, dst: &mut [f32]) {
         assert_eq!(src.len(), self.perm.len() * f);
         assert_eq!(dst.len(), self.n_dst * f);
+        debug_assert!(crate::agg::is_sorted_segs(&self.seg));
         blocked::segment_sum(src, f, &self.perm, &self.seg, dst);
     }
 

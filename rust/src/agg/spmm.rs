@@ -117,9 +117,26 @@ fn spmm_rows(a: &CsrMatrix, h: &[f32], f: usize, lo: usize, hi: usize, out: &mut
     }
 }
 
+/// Default nnz count below which [`spmm_parallel`] falls back to the
+/// serial blocked kernel (tile setup would dominate). Tunable per call
+/// via [`spmm_parallel_with_threshold`] / `exec::AggDispatch`.
+pub const SPMM_PARALLEL_MIN_NNZ: usize = 4096;
+
 /// 2D-parallel SpMM: FLOPS-balanced row tiles pulled dynamically.
 pub fn spmm_parallel(threads: usize, a: &CsrMatrix, h: &[f32], f: usize, out: &mut [f32]) {
-    if threads <= 1 || a.nnz() < 4096 {
+    spmm_parallel_with_threshold(threads, a, h, f, out, SPMM_PARALLEL_MIN_NNZ)
+}
+
+/// [`spmm_parallel`] with an explicit serial-fallback nnz threshold.
+pub fn spmm_parallel_with_threshold(
+    threads: usize,
+    a: &CsrMatrix,
+    h: &[f32],
+    f: usize,
+    out: &mut [f32],
+    min_nnz: usize,
+) {
+    if threads <= 1 || a.nnz() < min_nnz {
         spmm_blocked(a, h, f, out);
         return;
     }
@@ -141,6 +158,28 @@ pub fn spmm_parallel(threads: usize, a: &CsrMatrix, h: &[f32], f: usize, out: &m
         };
         spmm_rows(a, h, f, lo, hi, slice);
     });
+}
+
+/// Transpose scatter `out[col] += w · d[row]` — the exact backward of
+/// SpMM against the same CSR (no transposed matrix built; the scalar
+/// scatter is the vanilla operator form).
+pub fn spmm_transpose(a: &CsrMatrix, d: &[f32], f: usize, out: &mut [f32]) {
+    assert_eq!(d.len(), a.n_rows * f);
+    assert_eq!(out.len(), a.n_cols * f);
+    for r in 0..a.n_rows {
+        let src = &d[r * f..(r + 1) * f];
+        for i in a.row_ptr[r]..a.row_ptr[r + 1] {
+            let w = a.weights[i];
+            if w == 0.0 {
+                continue;
+            }
+            let c = a.col_idx[i] as usize;
+            let dst = &mut out[c * f..(c + 1) * f];
+            for (o, &x) in dst.iter_mut().zip(src.iter()) {
+                *o += w * x;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -202,6 +241,42 @@ mod tests {
         let mut out = vec![0f32; g.n];
         spmm_vanilla(&a, &h, 1, &mut out);
         assert!(out.iter().all(|&x| x.is_finite() && x >= 0.0));
+    }
+
+    #[test]
+    fn transpose_is_adjoint_of_spmm() {
+        // <A·h, d> == <h, Aᵀ·d> for random A, h, d.
+        let mut rng = Rng::new(17);
+        let g = erdos_renyi(40, 200, 7);
+        let mut a = CsrMatrix::from_graph(&g);
+        for w in &mut a.weights {
+            *w = rng.f32() * 2.0 - 1.0;
+        }
+        let f = 9;
+        let h: Vec<f32> = (0..g.n * f).map(|_| rng.f32() - 0.5).collect();
+        let d: Vec<f32> = (0..g.n * f).map(|_| rng.f32() - 0.5).collect();
+        let mut ah = vec![0f32; g.n * f];
+        spmm_blocked(&a, &h, f, &mut ah);
+        let mut atd = vec![0f32; g.n * f];
+        spmm_transpose(&a, &d, f, &mut atd);
+        let lhs: f64 = ah.iter().zip(d.iter()).map(|(&x, &y)| (x * y) as f64).sum();
+        let rhs: f64 = h.iter().zip(atd.iter()).map(|(&x, &y)| (x * y) as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3, "adjoint mismatch: {lhs} vs {rhs}");
+    }
+
+    #[test]
+    fn parallel_threshold_is_tunable() {
+        let mut rng = Rng::new(23);
+        let g = rmat(9, 6.0, 0.57, 0.19, 0.19, false, 4);
+        let a = CsrMatrix::from_graph(&g);
+        let f = 8;
+        let h: Vec<f32> = (0..g.n * f).map(|_| rng.f32() - 0.5).collect();
+        let mut want = vec![0f32; g.n * f];
+        spmm_blocked(&a, &h, f, &mut want);
+        // Force the parallel path with a tiny threshold.
+        let mut got = vec![0f32; g.n * f];
+        spmm_parallel_with_threshold(4, &a, &h, f, &mut got, 1);
+        assert_eq!(want, got);
     }
 
     #[test]

@@ -1,15 +1,16 @@
-//! Compute backends: one trait, two engines.
+//! Padded per-op compute backends — the artifact-parity surface of the
+//! three-layer stack (DESIGN.md §9).
 //!
 //! * [`native`] — pure-Rust f32 kernels built on the §4 aggregation
-//!   operators (`agg::*`). This *is* the paper's CPU compute path and the
-//!   engine used for the large benches.
+//!   operators (`agg::*`).
 //! * [`xla`] — executes the AOT'd JAX/Pallas artifacts through PJRT
 //!   (`runtime::Runtime`): the three-layer architecture's L2/L1 engine.
 //!
 //! Both implement [`Backend`] over identical padded buffers and are
-//! cross-validated against each other in `rust/tests/backend_parity.rs` —
-//! that agreement is what lets the fast native engine stand in for the
-//! artifact path on big runs.
+//! cross-validated against each other — and against the unified
+//! execution engine (`exec::Engine`, which owns the training hot path) —
+//! in `rust/tests/backend_parity.rs`. That agreement is what certifies
+//! the engine's kernels against the Pallas artifact path.
 
 pub mod linalg;
 pub mod native;

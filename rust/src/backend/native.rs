@@ -432,6 +432,35 @@ mod tests {
     }
 
     #[test]
+    fn vanilla_agg_is_algorithm_preserving() {
+        // The Fig-8 "Base" scatter engine must produce the optimized
+        // engine's numbers exactly (same accumulation order on sorted
+        // specs) — the flag only changes speed, never results.
+        let cfg = test_config();
+        let mut rng = Rng::new(23);
+        let f = cfg.f_in;
+        let n = cfg.n_pad;
+        let h: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
+        let pre = SegSpec::new(
+            vec![cfg.zero_row() as u32; 128],
+            vec![(cfg.p_pre - 1) as u32; 128],
+            cfg.p_pre,
+            128,
+        );
+        let run = |vanilla: bool| {
+            let mut be = NativeBackend::new(cfg.clone()).with_vanilla_agg(vanilla);
+            let mut h_norm = vec![0f32; n * f];
+            let mut partials = vec![0f32; cfg.p_pre * f];
+            be.pre_fwd(f, &h, &pre, &mut h_norm, &mut partials).unwrap();
+            (h_norm, partials)
+        };
+        let (hn_o, pa_o) = run(false);
+        let (hn_v, pa_v) = run(true);
+        assert_eq!(hn_o, hn_v);
+        assert_eq!(pa_o, pa_v);
+    }
+
+    #[test]
     fn pre_fwd_layernorm_and_empty_partials() {
         let cfg = test_config();
         let mut be = NativeBackend::new(cfg.clone());

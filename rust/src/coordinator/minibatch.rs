@@ -1,41 +1,43 @@
-//! The distributed mini-batch training loop (the sampling regime of
-//! DistGNN/GraphSAINT/Cluster-GCN practice, run on the same SPMD
-//! substrate and comm accounting as the full-batch trainer).
+//! The distributed mini-batch training driver (the sampling regime of
+//! DistGNN/GraphSAINT/Cluster-GCN practice) — a thin round loop over the
+//! unified layer-execution engine (`exec::Engine`, DESIGN.md §9).
 //!
 //! Workers are the existing graph partitions (`partition::multilevel`
 //! with the §7.2 vertex weights). Every round, each worker takes one
-//! sampled [`MiniBatch`] (batches are matched to the worker owning the
+//! sampled [`crate::sample::MiniBatch`] (batches are matched to the worker owning the
 //! most batch nodes — MG-GCN's partition-aligned batching), then:
 //!
 //! 1. **fetch** — feature rows of batch nodes owned by other partitions
-//!    are requested (`u32` ids on the wire) and returned through
-//!    [`comm::alltoallv`], optionally Int2/4/8-quantized with
-//!    `quant::fused` — so `CommStats` and the Eqn-2/5 model report
+//!    arrive through [`exec::MiniBatchCtx`] (`u32` ids on the wire,
+//!    replies over `comm::alltoallv`, optionally Int2/4/8-quantized with
+//!    `quant::fused`) — so `CommStats` and the Eqn-2/5 model report
 //!    mini-batch vs full-batch communication on equal footing;
-//! 2. **compute** — a 3-layer mean-aggregation GraphSAGE forward/backward
-//!    over the batch's induced CSR (weighted by the sampler's unbiased
-//!    `edge_weight`s, loss weighted by SAINT `node_weight`s);
+//! 2. **compute** — the engine's 3-layer SAGE forward/backward over the
+//!    batch's induced CSR (weighted by the sampler's unbiased
+//!    `edge_weight`s, loss weighted by SAINT `node_weight`s), every
+//!    aggregate routed through the shared `AggDispatch`;
 //! 3. **update** — gradients ring-allreduce across workers
 //!    (`collective::allreduce_sum`) and one optimizer step per round.
 //!
-//! The mini-batch model intentionally omits the full-batch path's
-//! LayerNorm and label propagation: it is the *sampling regime* analogue,
-//! not a numerical twin (see DESIGN.md §8). A finite-difference test
-//! below pins the backward pass to the forward semantics.
+//! By default the mini-batch model omits the full-batch path's LayerNorm
+//! and label propagation — it is the *sampling regime* analogue, not a
+//! numerical twin (DESIGN.md §8). Setting
+//! [`MiniBatchConfig::layernorm`] runs the identical engine architecture
+//! in both regimes; with `--sampler full` the per-epoch losses then match
+//! the full-batch trainer to f32 round-off
+//! (`tests/trainer_equivalence.rs`).
 
 use super::trainer::EpochStats;
-use crate::agg::spmm::{spmm_blocked, CsrMatrix};
-use crate::backend::linalg;
-use crate::comm::{alltoallv, collective, CommStats, Payload};
-use crate::graph::generate::{LabelledGraph, SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
-use crate::graph::CsrGraph;
+use crate::comm::{collective, CommStats};
+use crate::exec::{AggDispatch, Engine, LossSpec, LossTotals, MiniBatchCtx, StageClock, Tapes};
+use crate::graph::generate::LabelledGraph;
 use crate::model::optimizer::{OptKind, Optimizer};
-use crate::model::{ModelGrads, ModelParams};
+use crate::model::ModelParams;
 use crate::partition::Partition;
 use crate::perfmodel::MachineProfile;
-use crate::quant::{fused, Bits};
+use crate::quant::Bits;
 use crate::runtime::ShapeConfig;
-use crate::sample::{build_sampler, mix2, MiniBatch, Sampler, SamplerConfig, SamplerKind};
+use crate::sample::{build_sampler, Sampler, SamplerConfig, SamplerKind};
 use crate::util::timer::{Breakdown, Category};
 use anyhow::Result;
 use std::sync::Arc;
@@ -50,6 +52,12 @@ pub struct MiniBatchConfig {
     /// Quantization of fetched remote feature rows (None = FP32).
     pub quant: Option<Bits>,
     pub hidden: usize,
+    /// Run the engine's LayerNorm (the full-batch architecture) — off by
+    /// default to preserve the classic sampling-regime model; turned on
+    /// for regime-equivalence comparisons.
+    pub layernorm: bool,
+    /// §4 aggregation-kernel dispatch (CLI: `--agg-kernel`).
+    pub agg: AggDispatch,
     pub machine: MachineProfile,
     pub seed: u64,
 }
@@ -62,35 +70,11 @@ impl Default for MiniBatchConfig {
             opt: OptKind::Adam,
             quant: None,
             hidden: 64,
+            layernorm: false,
+            agg: AggDispatch::default(),
             machine: MachineProfile::abci(),
             seed: 42,
         }
-    }
-}
-
-/// Per-batch loss/metric sums.
-#[derive(Clone, Copy, Debug, Default)]
-struct BatchOut {
-    loss_sum: f64,
-    wsum: f64,
-    train_correct: f64,
-    train_cnt: f64,
-    val_correct: f64,
-    val_cnt: f64,
-    test_correct: f64,
-    test_cnt: f64,
-}
-
-impl BatchOut {
-    fn accumulate(&mut self, o: &BatchOut) {
-        self.loss_sum += o.loss_sum;
-        self.wsum += o.wsum;
-        self.train_correct += o.train_correct;
-        self.train_cnt += o.train_cnt;
-        self.val_correct += o.val_correct;
-        self.val_cnt += o.val_cnt;
-        self.test_correct += o.test_correct;
-        self.test_cnt += o.test_cnt;
     }
 }
 
@@ -100,9 +84,9 @@ pub struct MiniBatchTrainer {
     pub part: Partition,
     sampler: Box<dyn Sampler>,
     pub mc: MiniBatchConfig,
+    pub engine: Engine,
     pub params: ModelParams,
     opt: Optimizer,
-    dims: [(usize, usize, bool); 3],
     pub comm_stats: CommStats,
     epoch: usize,
 }
@@ -153,16 +137,16 @@ impl MiniBatchTrainer {
         };
         let params = ModelParams::init(&shapes, mc.seed);
         let opt = Optimizer::new(mc.opt, mc.lr, params.n_params());
-        let dims = shapes.layer_dims();
+        let engine = Engine::new(&shapes, mc.layernorm, mc.agg.clone());
         let k = part.k;
         Ok(Self {
             lg,
             part,
             sampler,
             mc,
+            engine,
             params,
             opt,
-            dims,
             comm_stats: CommStats::new(k),
             epoch: 0,
         })
@@ -180,21 +164,18 @@ impl MiniBatchTrainer {
         self.sampler.batches_per_epoch()
     }
 
-    /// Run one epoch: `ceil(batches/k)` SPMD rounds of fetch → compute →
-    /// allreduce → update.
+    /// Run one epoch: `ceil(batches/k)` SPMD rounds of fetch → engine
+    /// forward/backward → allreduce → update.
     pub fn epoch(&mut self) -> Result<EpochStats> {
         let wall = Instant::now();
         let k = self.part.k;
-        let f = self.lg.feat_dim;
         let nb = self.sampler.batches_per_epoch();
         let rounds = nb.div_ceil(k);
-        let n_params = self.params.n_params();
-        let dims = self.dims;
         let mut epoch_comm = CommStats::new(k);
         let mut breakdown = Breakdown::new();
         let mut modeled_compute = 0f64;
         let mut sync = 0f64;
-        let mut totals = BatchOut::default();
+        let mut totals = LossTotals::default();
 
         for round in 0..rounds {
             let lo = round * k;
@@ -239,124 +220,82 @@ impl MiniBatchTrainer {
                 batch_worker[bi] = w;
                 used[w] = true;
             }
-
-            // ---- fetch: id requests, then (quantized) feature rows ----
-            let mut req: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); k]; k];
-            for (bi, mb) in batches.iter().enumerate() {
-                let w = batch_worker[bi];
-                for &v in &mb.n_id {
-                    let o = self.part.assign[v as usize] as usize;
-                    if o != w {
-                        req[w][o].push(v);
-                    }
-                }
+            let mut per_lane: Vec<Option<usize>> = vec![None; k];
+            for (bi, &w) in batch_worker.iter().enumerate() {
+                per_lane[w] = Some(bi);
             }
-            let req_sends: Vec<Vec<Payload>> = req
+            let rows: Vec<usize> = per_lane
                 .iter()
-                .map(|row| {
-                    row.iter()
-                        .map(|ids| {
-                            if ids.is_empty() {
-                                Payload::Empty
-                            } else {
-                                Payload::F32(ids.iter().map(|&v| v as f32).collect())
-                            }
-                        })
-                        .collect()
+                .map(|s| s.map(|bi| batches[bi].n()).unwrap_or(0))
+                .collect();
+
+            // ---- engine: fetch + forward + loss + backward ------------
+            let mut tapes = self.engine.tapes(&rows, &self.params);
+            let mut clock = StageClock::new(k);
+            let mut ctx = MiniBatchCtx::new(
+                &self.lg,
+                &self.part.assign,
+                &batches,
+                &per_lane,
+                &self.mc.machine,
+                self.mc.quant,
+                self.mc.seed,
+                self.epoch,
+                round,
+                &mut epoch_comm,
+            );
+            self.engine
+                .forward(&self.params, &mut ctx, &mut tapes, None, &mut clock)?;
+
+            let metas: Vec<(Vec<u32>, Vec<u8>)> = per_lane
+                .iter()
+                .map(|slot| match slot {
+                    Some(bi) => {
+                        let mb = &batches[*bi];
+                        let nt = mb.n_target;
+                        (
+                            mb.n_id[..nt]
+                                .iter()
+                                .map(|&v| self.lg.labels[v as usize])
+                                .collect(),
+                            mb.n_id[..nt]
+                                .iter()
+                                .map(|&v| self.lg.split[v as usize])
+                                .collect(),
+                        )
+                    }
+                    None => (Vec::new(), Vec::new()),
                 })
                 .collect();
-            let req_recvs = alltoallv(req_sends, &self.mc.machine, &mut epoch_comm);
-
-            let mut quant_secs = vec![0f64; k];
-            let mut reply_sends: Vec<Vec<Payload>> = (0..k)
-                .map(|_| (0..k).map(|_| Payload::Empty).collect())
+            let specs: Vec<LossSpec> = (0..k)
+                .map(|w| LossSpec {
+                    score_rows: per_lane[w].map(|bi| batches[bi].n_target).unwrap_or(0),
+                    labels: &metas[w].0,
+                    split: &metas[w].1,
+                    loss_w: per_lane[w]
+                        .map(|bi| batches[bi].node_weight.as_slice())
+                        .unwrap_or(&[]),
+                })
                 .collect();
-            for (o, row) in req_recvs.iter().enumerate() {
-                for (w, payload) in row.iter().enumerate() {
-                    let ids = match payload {
-                        Payload::F32(v) if !v.is_empty() => v,
-                        _ => continue,
-                    };
-                    let rows = ids.len();
-                    let mut buf = Vec::with_capacity(rows * f);
-                    for &idf in ids {
-                        buf.extend_from_slice(self.lg.feature_row(idf as usize));
-                    }
-                    reply_sends[o][w] = match self.mc.quant {
-                        Some(bits) => {
-                            let t = Instant::now();
-                            let qseed = mix2(
-                                mix2(self.mc.seed, ((self.epoch as u64) << 20) ^ round as u64),
-                                ((o as u64) << 8) ^ w as u64,
-                            );
-                            let q = fused::quantize(&buf, rows, f, bits, qseed);
-                            quant_secs[o] += t.elapsed().as_secs_f64();
-                            Payload::Quant(q)
-                        }
-                        None => Payload::F32(buf),
-                    };
-                }
-            }
-            let replies = alltoallv(reply_sends, &self.mc.machine, &mut epoch_comm);
-
-            // ---- compute: assemble X, forward/backward per batch ------
-            let mut stage = vec![0f64; k];
-            let mut round_grads: Vec<ModelGrads> = Vec::with_capacity(bcnt);
+            let lane_totals = self.engine.loss_all(&mut tapes, &specs, &mut clock);
             let mut with_loss = 0usize;
-            let mut replies = replies;
-            for (bi, mb) in batches.iter().enumerate() {
-                let w = batch_worker[bi];
-                // Each reply is consumed exactly once (one batch per worker
-                // per round) — move it out instead of cloning.
-                let mut decoded: Vec<Option<Vec<f32>>> = vec![None; k];
-                for (o, slot) in replies[w].iter_mut().enumerate() {
-                    match std::mem::replace(slot, Payload::Empty) {
-                        Payload::F32(v) if !v.is_empty() => decoded[o] = Some(v),
-                        Payload::Quant(q) => {
-                            let t = Instant::now();
-                            decoded[o] = Some(fused::dequantize(&q));
-                            quant_secs[w] += t.elapsed().as_secs_f64();
-                        }
-                        _ => {}
-                    }
-                }
-
-                let t = Instant::now();
-                let m = mb.n();
-                let mut x = vec![0f32; m * f];
-                let mut cursors = vec![0usize; k];
-                for (i, &v) in mb.n_id.iter().enumerate() {
-                    let o = self.part.assign[v as usize] as usize;
-                    if o == w {
-                        x[i * f..(i + 1) * f].copy_from_slice(self.lg.feature_row(v as usize));
-                    } else {
-                        let rows = decoded[o]
-                            .as_ref()
-                            .ok_or_else(|| anyhow::anyhow!("missing reply from {o} to {w}"))?;
-                        let c = cursors[o];
-                        anyhow::ensure!((c + 1) * f <= rows.len(), "reply row underflow");
-                        x[i * f..(i + 1) * f].copy_from_slice(&rows[c * f..(c + 1) * f]);
-                        cursors[o] += 1;
-                    }
-                }
-                let labels: Vec<u32> =
-                    mb.n_id.iter().map(|&v| self.lg.labels[v as usize]).collect();
-                let split: Vec<u8> = mb.n_id.iter().map(|&v| self.lg.split[v as usize]).collect();
-                let mut grads = ModelGrads::zeros(&self.params);
-                let out = run_batch(&self.params, &dims, mb, &x, &labels, &split, &mut grads);
-                if out.wsum > 0.0 {
+            let mut scales = vec![1.0f32; k];
+            for (w, t) in lane_totals.iter().enumerate() {
+                totals.accumulate(t);
+                if t.wsum > 0.0 {
                     with_loss += 1;
+                    scales[w] = (1.0 / t.wsum) as f32;
                 }
-                totals.accumulate(&out);
-                round_grads.push(grads);
-                stage[w] += t.elapsed().as_secs_f64() + sample_secs[bi];
             }
+            self.engine.scale_loss_grad(&mut tapes, &scales);
+            // No backward communication in this regime: the layer-0
+            // input cotangent is unused, so don't propagate it.
+            self.engine
+                .backward(&self.params, &mut ctx, &mut tapes, None, false, &mut clock)?;
+            drop(ctx);
 
             // ---- allreduce + optimizer step ---------------------------
-            let mut flats: Vec<Vec<f32>> = round_grads.iter().map(|g| g.flatten()).collect();
-            while flats.len() < k {
-                flats.push(vec![0f32; n_params]);
-            }
+            let mut flats: Vec<Vec<f32>> = tapes.grads.iter().map(|g| g.flatten()).collect();
             let ar = collective::allreduce_sum(&mut flats, &self.mc.machine);
             epoch_comm.modeled_send_secs.iter_mut().for_each(|s| *s += ar);
             let t = Instant::now();
@@ -369,13 +308,20 @@ impl MiniBatchTrainer {
             breakdown.add(Category::Other, t.elapsed().as_secs_f64());
 
             // Eqn-2 bottleneck view per round.
-            let mx = collective::allreduce_max(&stage);
+            let mut per_worker = clock.lane_totals();
+            for (bi, &w) in batch_worker.iter().enumerate() {
+                per_worker[w] += sample_secs[bi];
+            }
+            let mx = collective::allreduce_max(&per_worker);
             modeled_compute += mx;
-            for &s in &stage {
+            for &s in &per_worker {
                 sync += mx - s;
             }
             breakdown.add(Category::Aggr, mx);
-            breakdown.add(Category::Quant, collective::allreduce_max(&quant_secs));
+            breakdown.add(
+                Category::Quant,
+                collective::allreduce_max(&clock.quant_lane_totals()),
+            );
         }
 
         // ---- time accounting (same contract as the full-batch loop) ---
@@ -437,153 +383,10 @@ impl MiniBatchTrainer {
     }
 }
 
-/// The batch adjacency as the weighted sparse matrix `agg::spmm` wants,
-/// so the forward aggregation runs the §4 register-blocked kernel
-/// instead of a private scalar loop.
-fn batch_matrix(adj: &CsrGraph, w: &[f32]) -> CsrMatrix {
-    CsrMatrix {
-        n_rows: adj.n,
-        n_cols: adj.n,
-        row_ptr: adj.row_ptr.clone(),
-        col_idx: adj.col_idx.clone(),
-        weights: w.to_vec(),
-    }
-}
-
-/// Transpose scatter of the forward aggregation: `out[src] += w_e · d[dst]`
-/// (the backward pass; kept as a scalar loop — reusing `spmm_blocked`
-/// here would require building a transposed CSR per batch).
-fn aggregate_t(adj: &CsrGraph, w: &[f32], d: &[f32], f: usize, out: &mut [f32]) {
-    for v in 0..adj.n {
-        let (lo, hi) = (adj.row_ptr[v], adj.row_ptr[v + 1]);
-        for e in lo..hi {
-            let we = w[e];
-            if we == 0.0 {
-                continue;
-            }
-            let s = adj.col_idx[e] as usize;
-            let src = &d[v * f..(v + 1) * f];
-            let dst = &mut out[s * f..(s + 1) * f];
-            for (o, &x) in dst.iter_mut().zip(src.iter()) {
-                *o += we * x;
-            }
-        }
-    }
-}
-
-/// Forward + weighted masked-softmax loss + backward over one batch.
-/// Gradients of the *mean* (weighted) batch loss accumulate into `grads`.
-fn run_batch(
-    params: &ModelParams,
-    dims: &[(usize, usize, bool); 3],
-    mb: &MiniBatch,
-    x: &[f32],
-    labels: &[u32],
-    split: &[u8],
-    grads: &mut ModelGrads,
-) -> BatchOut {
-    let m = mb.n();
-    let c = dims[2].1;
-    debug_assert_eq!(x.len(), m * dims[0].0);
-
-    // ---- forward ------------------------------------------------------
-    let a = batch_matrix(&mb.adj, &mb.edge_weight);
-    let mut saved: Vec<(Vec<f32>, Vec<f32>)> = Vec::with_capacity(3);
-    let mut h = x.to_vec();
-    for (l, &(fin, fout, relu_on)) in dims.iter().enumerate() {
-        let mut z = vec![0f32; m * fin];
-        spmm_blocked(&a, &h, fin, &mut z);
-        let mut out = vec![0f32; m * fout];
-        linalg::matmul(&h, &params.layers[l].w_self, m, fin, fout, &mut out);
-        linalg::matmul_acc(&z, &params.layers[l].w_neigh, m, fin, fout, &mut out);
-        linalg::add_bias(&mut out, m, &params.layers[l].b);
-        if relu_on {
-            linalg::relu(&mut out);
-        }
-        saved.push((h, z));
-        h = out;
-    }
-    let logits = h;
-
-    // ---- loss head over the targets -----------------------------------
-    let mut d = vec![0f32; m * c];
-    let mut out = BatchOut::default();
-    for i in 0..mb.n_target {
-        let row = &logits[i * c..(i + 1) * c];
-        let label = labels[i] as usize;
-        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-        let mut denom = 0f32;
-        for &v in row {
-            denom += (v - mx).exp();
-        }
-        let mut best = 0usize;
-        for (j, &v) in row.iter().enumerate() {
-            if v > row[best] {
-                best = j;
-            }
-        }
-        let correct = if best == label { 1.0 } else { 0.0 };
-        match split[i] {
-            SPLIT_TRAIN => {
-                let wt = mb.node_weight[i];
-                let p_label = ((row[label] - mx).exp() / denom).max(1e-30);
-                out.loss_sum += wt as f64 * (-(p_label.ln()) as f64);
-                out.wsum += wt as f64;
-                out.train_cnt += 1.0;
-                out.train_correct += correct;
-                for j in 0..c {
-                    let p = (row[j] - mx).exp() / denom;
-                    let y = if j == label { 1.0 } else { 0.0 };
-                    d[i * c + j] = wt * (p - y);
-                }
-            }
-            SPLIT_VAL => {
-                out.val_cnt += 1.0;
-                out.val_correct += correct;
-            }
-            SPLIT_TEST => {
-                out.test_cnt += 1.0;
-                out.test_correct += correct;
-            }
-            _ => {}
-        }
-    }
-    if out.wsum > 0.0 {
-        let inv = (1.0 / out.wsum) as f32;
-        for v in &mut d {
-            *v *= inv;
-        }
-    }
-
-    // ---- backward -----------------------------------------------------
-    let mut d_out = d;
-    for l in (0..3).rev() {
-        let (fin, fout, _) = dims[l];
-        let (h_in, z) = &saved[l];
-        linalg::matmul_tn_acc(h_in, &d_out, m, fin, fout, &mut grads.layers[l].w_self);
-        linalg::matmul_tn_acc(z, &d_out, m, fin, fout, &mut grads.layers[l].w_neigh);
-        linalg::col_sum_acc(&d_out, m, fout, &mut grads.layers[l].b);
-        if l == 0 {
-            break;
-        }
-        let mut d_h = vec![0f32; m * fin];
-        linalg::matmul_nt_acc(&d_out, &params.layers[l].w_self, m, fout, fin, &mut d_h);
-        let mut d_z = vec![0f32; m * fin];
-        linalg::matmul_nt_acc(&d_out, &params.layers[l].w_neigh, m, fout, fin, &mut d_z);
-        aggregate_t(&mb.adj, &mb.edge_weight, &d_z, fin, &mut d_h);
-        // h_in is the ReLU output of layer l-1: mask through it.
-        let mut d_prev = vec![0f32; m * fin];
-        linalg::relu_bwd(&d_h, h_in, &mut d_prev);
-        d_out = d_prev;
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::generate::sbm;
-    use crate::sample::FullSampler;
 
     fn lg(n: usize, seed: u64) -> Arc<LabelledGraph> {
         Arc::new(sbm(n, 4, 8.0, 0.85, 16, 0.6, seed))
@@ -593,71 +396,6 @@ mod tests {
         MiniBatchConfig {
             epochs,
             ..Default::default()
-        }
-    }
-
-    #[test]
-    fn backward_matches_finite_differences() {
-        let lg = Arc::new(sbm(60, 3, 6.0, 0.9, 6, 0.3, 3));
-        let mut sampler = FullSampler::new(lg.clone());
-        let mb = sampler.sample(0, 0);
-        let shapes = ShapeConfig {
-            name: "fd".into(),
-            n_pad: 0,
-            f_in: 6,
-            hidden: 5,
-            classes: 3,
-            e_local: 0,
-            e_pre: 0,
-            p_pre: 0,
-            r_pre: 0,
-            r_post: 0,
-            e_post: 0,
-        };
-        let params = ModelParams::init(&shapes, 7);
-        let dims = shapes.layer_dims();
-        let x = lg.features.clone();
-        let labels = lg.labels.clone();
-        let split = lg.split.clone();
-
-        let loss_of = |p: &ModelParams| -> f64 {
-            let mut scratch = ModelGrads::zeros(p);
-            let o = run_batch(p, &dims, &mb, &x, &labels, &split, &mut scratch);
-            o.loss_sum / o.wsum
-        };
-        let mut grads = ModelGrads::zeros(&params);
-        run_batch(&params, &dims, &mb, &x, &labels, &split, &mut grads);
-        let flat_g = grads.flatten();
-        let flat_p = params.flatten();
-
-        // Probe a spread of parameter coordinates: w_self/w_neigh/b of
-        // each layer (layout: per layer w_self, w_neigh, b).
-        let l0 = 2 * 6 * 5 + 5;
-        let l1 = 2 * 5 * 5 + 5;
-        let probes = [
-            0usize,            // layer0 w_self
-            6 * 5 + 3,         // layer0 w_neigh
-            2 * 6 * 5 + 2,     // layer0 b
-            l0 + 1,            // layer1 w_self
-            l0 + 5 * 5 + 2,    // layer1 w_neigh
-            l0 + l1 + 4,       // layer2 w_self
-            l0 + l1 + 5 * 3 + 1, // layer2 w_neigh
-        ];
-        let eps = 1e-2f32;
-        for &idx in &probes {
-            let mut pp = flat_p.clone();
-            pp[idx] += eps;
-            let mut p_hi = ModelParams::init(&shapes, 7);
-            p_hi.unflatten_into(&pp);
-            pp[idx] -= 2.0 * eps;
-            let mut p_lo = ModelParams::init(&shapes, 7);
-            p_lo.unflatten_into(&pp);
-            let fd = (loss_of(&p_hi) - loss_of(&p_lo)) / (2.0 * eps as f64);
-            let an = flat_g[idx] as f64;
-            assert!(
-                (fd - an).abs() < 1e-2 + 0.1 * an.abs().max(fd.abs()),
-                "param {idx}: finite-diff {fd} vs analytic {an}"
-            );
         }
     }
 
@@ -694,6 +432,30 @@ mod tests {
         // Every epoch covers all nodes, so val/test predictions exist and
         // beat zero once trained.
         assert!(last.val_acc > 0.0 && last.test_acc > 0.0);
+    }
+
+    #[test]
+    fn layernorm_variant_learns() {
+        // The engine's full-batch architecture (LayerNorm on) over the
+        // sampling regime — the regime-equivalence configuration.
+        let scfg = SamplerConfig {
+            num_clusters: 6,
+            seed: 42,
+            ..Default::default()
+        };
+        let mut tr = MiniBatchTrainer::new(
+            lg(400, 11),
+            3,
+            SamplerKind::Cluster,
+            &scfg,
+            MiniBatchConfig {
+                layernorm: true,
+                ..mc(30)
+            },
+        )
+        .unwrap();
+        let stats = tr.run(false).unwrap();
+        assert!(stats.last().unwrap().train_loss < stats[0].train_loss);
     }
 
     #[test]

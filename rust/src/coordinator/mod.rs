@@ -3,15 +3,15 @@
 //! * [`planner`] — turns (dataset, partition, halo plans, shape config)
 //!   into per-worker padded contexts: the preprocessing of Fig. 2 steps
 //!   1–2 (partition, local/pre/post split, plan exchange).
-//! * [`trainer`] — the epoch loop of Fig. 2 steps 3–7: masked label
-//!   propagation, per-layer LayerNorm + pre-aggregation, (quantized) halo
-//!   exchange, aggregation + update, loss, exact reverse-halo backward,
-//!   gradient allreduce, Adam — with the Fig. 12 time breakdown and
-//!   Eqn 2/5 modeled communication.
+//! * [`trainer`] — the epoch driver of Fig. 2 steps 3–7: label-prop
+//!   selection, `delay_comm` staleness policy, gradient allreduce, Adam,
+//!   and the Fig. 12 / Eqn 2/5 accounting. All layer math runs in the
+//!   unified execution engine (`exec::Engine`, DESIGN.md §9) over the
+//!   full-batch halo context.
 //! * [`minibatch`] — the sampling regime (DESIGN.md §8): per-round
-//!   mini-batches from `sample::` run SPMD over the same partitions,
-//!   fetching remote feature rows through the same `comm::alltoallv`
-//!   (optionally quantized), so both regimes share one comm accounting.
+//!   mini-batches from `sample::` drive the *same* engine over the
+//!   remote-row-fetch context, so both regimes share one layer
+//!   implementation and one comm accounting.
 
 pub mod minibatch;
 pub mod planner;

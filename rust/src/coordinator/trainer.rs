@@ -1,10 +1,14 @@
-//! The distributed full-batch training loop (paper Fig. 2).
+//! The distributed full-batch training driver (paper Fig. 2) — a thin
+//! loop over the unified layer-execution engine (`exec::Engine`,
+//! DESIGN.md §9).
 //!
-//! Workers execute SPMD stages sequentially inside one process (hardware
-//! substitution, DESIGN.md §1): payload bytes move for real through
-//! `comm::alltoallv` (numerics are exactly those of a cluster run), wire
-//! *time* is charged by the Eqn 2/5 model, and per-worker compute is
-//! measured on the local CPU and combined as `Σ_stage max_w t(stage, w)`.
+//! All layer math (LayerNorm, aggregation, SAGE update, loss,
+//! label-propagation embedding, the exact backward) lives in the engine;
+//! this driver owns only *policy and state*: the per-epoch label-prop
+//! selection, the `delay_comm` staleness decision, the gradient
+//! allreduce + optimizer step, and the Eqn-2 / Fig-12 time accounting.
+//! Neighbor halos move through [`exec::FullBatchCtx`] (hierarchical
+//! pre/post exchange with optional `quant::fused` payloads).
 //!
 //! The backward pass is exact: cotangents of received halo tensors are
 //! shipped back to their producers every exchange epoch (the reverse of
@@ -13,14 +17,18 @@
 //! `rust/tests/trainer_equivalence.rs`.
 
 use super::planner::WorkerCtx;
-use crate::backend::Backend;
-use crate::comm::{alltoallv, collective, CommStats, Payload};
+use crate::comm::{collective, CommStats};
+use crate::exec::{
+    AggDispatch, Engine, FullBatchCtx, FullBatchState, LossSpec, LossTotals, LpInputs, StageClock,
+    Tapes, SPLIT_NONE,
+};
+use crate::graph::generate::{SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
 use crate::hier::volume::RemoteStrategy;
 use crate::model::labelprop::{self, LpSelection};
 use crate::model::optimizer::{OptKind, Optimizer};
-use crate::model::{ModelGrads, ModelParams};
+use crate::model::ModelParams;
 use crate::perfmodel::MachineProfile;
-use crate::quant::{fused, Bits};
+use crate::quant::Bits;
 use crate::runtime::ShapeConfig;
 use crate::util::rng::Rng;
 use crate::util::timer::{Breakdown, Category};
@@ -42,6 +50,8 @@ pub struct TrainConfig {
     /// 5 = the DistGNN cd-5 baseline's staleness).
     pub delay_comm: usize,
     pub machine: MachineProfile,
+    /// §4 aggregation-kernel dispatch (CLI: `--agg-kernel`).
+    pub agg: AggDispatch,
     pub seed: u64,
 }
 
@@ -57,6 +67,7 @@ impl Default for TrainConfig {
             strategy: RemoteStrategy::Hybrid,
             delay_comm: 1,
             machine: MachineProfile::abci(),
+            agg: AggDispatch::default(),
             seed: 42,
         }
     }
@@ -79,74 +90,34 @@ pub struct EpochStats {
     pub comm_param_bytes: f64,
 }
 
-/// Per-worker activation / gradient storage.
-struct WorkerBufs {
-    /// Activations entering each layer (widths f_in, h, h) + final logits.
-    h: Vec<Vec<f32>>,
-    /// LayerNorm outputs per layer (kept for backward).
-    h_norm: Vec<Vec<f32>>,
-    /// Received halo tensors per layer (kept for backward & staleness).
-    recv_pre: Vec<Vec<f32>>,
-    recv_post: Vec<Vec<f32>>,
-    /// Scratch.
-    partials: Vec<f32>,
-    d_cur: Vec<f32>,
-    d_next: Vec<f32>,
-    d_h_norm: Vec<f32>,
-    d_recv_pre: Vec<f32>,
-    d_recv_post: Vec<f32>,
-    d_partials: Vec<f32>,
-    lp_sel: LpSelection,
-    grads: ModelGrads,
-}
-
 pub struct Trainer {
     pub shapes: ShapeConfig,
     pub tc: TrainConfig,
     pub workers: Vec<WorkerCtx>,
-    backend: Box<dyn Backend>,
+    pub engine: Engine,
     pub params: ModelParams,
     opt: Optimizer,
-    bufs: Vec<WorkerBufs>,
+    tapes: Tapes,
+    fb: FullBatchState,
+    lp_sels: Vec<LpSelection>,
     pub comm_stats: CommStats,
     epoch: usize,
     rng: Rng,
-    /// Last epoch whose halos were exchanged (staleness bookkeeping).
-    last_exchange: Option<usize>,
 }
 
 impl Trainer {
-    pub fn new(workers: Vec<WorkerCtx>, backend: Box<dyn Backend>, tc: TrainConfig) -> Self {
-        let shapes = backend.config().clone();
+    pub fn new(workers: Vec<WorkerCtx>, shapes: ShapeConfig, tc: TrainConfig) -> Self {
         let params = ModelParams::init(&shapes, tc.seed);
         let opt = Optimizer::new(tc.opt, tc.lr, params.n_params());
         let k = workers.len();
-        let dims = shapes.layer_dims();
-        let maxf = shapes.f_in.max(shapes.hidden).max(shapes.classes);
-        let n = shapes.n_pad;
-        let bufs = (0..k)
-            .map(|_| WorkerBufs {
-                h: vec![
-                    vec![0f32; n * dims[0].0],
-                    vec![0f32; n * dims[1].0],
-                    vec![0f32; n * dims[2].0],
-                    vec![0f32; n * dims[2].1],
-                ],
-                h_norm: (0..3).map(|l| vec![0f32; n * dims[l].0]).collect(),
-                recv_pre: (0..3).map(|l| vec![0f32; shapes.r_pre * dims[l].0]).collect(),
-                recv_post: (0..3).map(|l| vec![0f32; shapes.r_post * dims[l].0]).collect(),
-                partials: vec![0f32; shapes.p_pre * maxf],
-                d_cur: vec![0f32; n * maxf],
-                d_next: vec![0f32; n * maxf],
-                d_h_norm: vec![0f32; n * maxf],
-                d_recv_pre: vec![0f32; shapes.r_pre * maxf],
-                d_recv_post: vec![0f32; shapes.r_post * maxf],
-                d_partials: vec![0f32; shapes.p_pre * maxf],
-                lp_sel: LpSelection {
-                    embedded: vec![],
-                    loss_mask: vec![0.0; n],
-                },
-                grads: ModelGrads::zeros(&params),
+        let engine = Engine::new(&shapes, true, tc.agg.clone());
+        let rows = vec![shapes.n_pad; k];
+        let tapes = engine.tapes(&rows, &params);
+        let fb = FullBatchState::new(&shapes, k);
+        let lp_sels = (0..k)
+            .map(|_| LpSelection {
+                embedded: vec![],
+                loss_mask: vec![0.0; shapes.n_pad],
             })
             .collect();
         let rng = Rng::new(tc.seed ^ 0x7A13);
@@ -155,13 +126,14 @@ impl Trainer {
             comm_stats: CommStats::new(k),
             tc,
             workers,
-            backend,
+            engine,
             params,
             opt,
-            bufs,
+            tapes,
+            fb,
+            lp_sels,
             epoch: 0,
             rng,
-            last_exchange: None,
         }
     }
 
@@ -177,257 +149,108 @@ impl Trainer {
     pub fn epoch(&mut self) -> Result<EpochStats> {
         let wall = std::time::Instant::now();
         let k = self.k();
-        let dims = self.shapes.layer_dims();
         let n = self.shapes.n_pad;
         let mut breakdown = Breakdown::new();
-        let mut stage_times: Vec<Vec<f64>> = Vec::new();
         let mut epoch_comm = CommStats::new(k);
         let exchange = self.is_exchange_epoch();
-        if exchange {
-            self.last_exchange = Some(self.epoch);
-        }
 
-        // ---- step 3: masked label propagation -----------------------------
-        let f_in = dims[0].0;
+        // ---- step 3: per-epoch label-prop selection (driver policy) ----
         for w in 0..k {
-            let ctx = &self.workers[w];
-            let b = &mut self.bufs[w];
-            b.h[0].copy_from_slice(&ctx.features);
-            if self.tc.label_prop {
-                b.lp_sel = labelprop::select(&ctx.train_mask, self.tc.lp_frac, &mut self.rng);
-                labelprop::embed_into(&mut b.h[0], f_in, &b.lp_sel, &ctx.labels, &self.params.w_embed);
-            } else {
-                b.lp_sel = labelprop::select(&ctx.train_mask, 0.0, &mut self.rng);
-            }
-            b.grads.clear();
+            let frac = if self.tc.label_prop { self.tc.lp_frac } else { 0.0 };
+            self.lp_sels[w] = labelprop::select(&self.workers[w].train_mask, frac, &mut self.rng);
         }
+        self.tapes.clear_grads();
 
-        // ---- forward ------------------------------------------------------
-        for l in 0..3 {
-            let fin = dims[l].0;
-            // Stage: pre_fwd.
-            let mut st = vec![0f64; k];
-            for w in 0..k {
-                let t = std::time::Instant::now();
-                let h = self.bufs[w].h[l].clone();
-                let b = &mut self.bufs[w];
-                // Disjoint-field borrows within one &mut b.
-                let (h_norm, partials) = (&mut b.h_norm[l], &mut b.partials);
-                self.backend.pre_fwd(
-                    fin,
-                    &h,
-                    &self.workers[w].pre,
-                    h_norm,
-                    &mut partials[..self.shapes.p_pre * fin],
-                )?;
-                st[w] = t.elapsed().as_secs_f64();
-            }
-            // Eqn-2 bottleneck view: the slowest worker defines the stage cost.
-            breakdown.add(Category::Aggr, st.iter().fold(0.0f64, |a, &b| a.max(b)));
-            stage_times.push(st);
+        // ---- engine: forward / loss / backward over the halo context ----
+        let mut clock = StageClock::new(k);
+        let mut ctx = FullBatchCtx::new(
+            &self.workers,
+            &self.shapes,
+            &mut self.fb,
+            &self.tc.machine,
+            self.tc.quant,
+            self.tc.seed,
+            self.epoch,
+            exchange,
+            &mut epoch_comm,
+        );
+        let lp = LpInputs {
+            sel: &self.lp_sels,
+            labels: self.workers.iter().map(|c| c.labels.as_slice()).collect(),
+        };
+        let lp_opt = if self.tc.label_prop { Some(&lp) } else { None };
+        self.engine
+            .forward(&self.params, &mut ctx, &mut self.tapes, lp_opt, &mut clock)?;
 
-            // Stage: halo exchange (quantize → wire → dequantize).
-            if exchange {
-                let mut quant_secs = vec![0f64; k];
-                let sends = self.build_sends(l, fin, &mut quant_secs);
-                let recvs = alltoallv(sends, &self.tc.machine, &mut epoch_comm);
-                self.apply_recvs(l, fin, recvs, &mut quant_secs)?;
-                // Bottleneck view, like the compute stages.
-                breakdown.add(Category::Quant, quant_secs.iter().fold(0.0f64, |a, &b| a.max(b)));
-            }
-
-            // Stage: layer_fwd.
-            let mut st = vec![0f64; k];
-            for w in 0..k {
-                let t = std::time::Instant::now();
-                let b = &mut self.bufs[w];
-                let (h_norm, recv_pre, recv_post, out) = (
-                    b.h_norm[l].clone(),
-                    b.recv_pre[l].clone(),
-                    b.recv_post[l].clone(),
-                    &mut b.h[l + 1],
-                );
-                self.backend.layer_fwd(
-                    l,
-                    &h_norm,
-                    &recv_pre,
-                    &recv_post,
-                    &self.params.layers[l],
-                    &self.workers[w].spec,
-                    out,
-                )?;
-                st[w] = t.elapsed().as_secs_f64();
-            }
-            // Eqn-2 bottleneck view: the slowest worker defines the stage cost.
-            breakdown.add(Category::Aggr, st.iter().fold(0.0f64, |a, &b| a.max(b)));
-            stage_times.push(st);
+        let tags: Vec<Vec<u8>> = (0..k)
+            .map(|w| {
+                let wc = &self.workers[w];
+                let lm = &self.lp_sels[w].loss_mask;
+                (0..n)
+                    .map(|i| {
+                        if lm[i] > 0.0 {
+                            SPLIT_TRAIN
+                        } else if wc.val_mask[i] > 0.0 {
+                            SPLIT_VAL
+                        } else if wc.test_mask[i] > 0.0 {
+                            SPLIT_TEST
+                        } else {
+                            SPLIT_NONE
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let specs: Vec<LossSpec> = (0..k)
+            .map(|w| LossSpec {
+                score_rows: n,
+                labels: &self.workers[w].labels,
+                split: &tags[w],
+                loss_w: &self.lp_sels[w].loss_mask,
+            })
+            .collect();
+        let lane_totals = self.engine.loss_all(&mut self.tapes, &specs, &mut clock);
+        let mut totals = LossTotals::default();
+        for t in &lane_totals {
+            totals.accumulate(t);
         }
-
-        // ---- loss + metrics ------------------------------------------------
-        let c = self.shapes.classes;
-        let mut train_loss_sum = 0f64;
-        let mut train_mask_sum = 0f64;
-        let mut train_correct = 0f64;
-        let mut val_correct = 0f64;
-        let mut val_mask = 0f64;
-        let mut test_correct = 0f64;
-        let mut test_mask = 0f64;
-        let mut st = vec![0f64; k];
-        for w in 0..k {
-            let t = std::time::Instant::now();
-            let logits = self.bufs[w].h[3].clone();
-            let labels = self.workers[w].labels_i32.clone();
-            let loss_mask = self.bufs[w].lp_sel.loss_mask.clone();
-            let out = self.backend.loss_head(&logits, &labels, &loss_mask)?;
-            train_loss_sum += out.loss_sum as f64;
-            train_mask_sum += out.mask_sum as f64;
-            train_correct += out.correct as f64;
-            self.bufs[w].d_cur[..n * c].copy_from_slice(&out.d_logits);
-            // Val / test metrics from the same full-batch logits.
-            let vo = self
-                .backend
-                .loss_head(&logits, &labels, &self.workers[w].val_mask)?;
-            val_correct += vo.correct as f64;
-            val_mask += vo.mask_sum as f64;
-            let to = self
-                .backend
-                .loss_head(&logits, &labels, &self.workers[w].test_mask)?;
-            test_correct += to.correct as f64;
-            test_mask += to.mask_sum as f64;
-            st[w] = t.elapsed().as_secs_f64();
-        }
-        // Eqn-2 bottleneck view: the slowest worker defines the stage cost.
-        breakdown.add(Category::Other, st.iter().fold(0.0f64, |a, &b| a.max(b)));
-        stage_times.push(st);
-
-        // Scale loss gradient to the global mean.
-        let inv_mask = if train_mask_sum > 0.0 {
-            1.0 / train_mask_sum as f32
+        // Scale the loss gradient to the global mean.
+        let inv_mask = if totals.wsum > 0.0 {
+            (1.0 / totals.wsum) as f32
         } else {
             0.0
         };
-        for b in &mut self.bufs {
-            for v in &mut b.d_cur[..n * c] {
-                *v *= inv_mask;
-            }
-        }
+        let scales = vec![inv_mask; k];
+        self.engine.scale_loss_grad(&mut self.tapes, &scales);
 
-        // ---- backward ------------------------------------------------------
-        for l in (0..3).rev() {
-            let (fin, fout, _) = dims[l];
-            // Stage: layer_bwd.
-            let mut st = vec![0f64; k];
-            for w in 0..k {
-                let t = std::time::Instant::now();
-                let (h_norm, recv_pre, recv_post, out, d_out) = {
-                    let b = &self.bufs[w];
-                    (
-                        b.h_norm[l].clone(),
-                        b.recv_pre[l].clone(),
-                        b.recv_post[l].clone(),
-                        b.h[l + 1].clone(),
-                        b.d_cur[..n * fout].to_vec(),
-                    )
-                };
-                let b = &mut self.bufs[w];
-                let (d_h_norm, d_recv_pre, d_recv_post) = (
-                    &mut b.d_h_norm[..n * fin],
-                    &mut b.d_recv_pre[..self.shapes.r_pre * fin],
-                    &mut b.d_recv_post[..self.shapes.r_post * fin],
-                );
-                self.backend.layer_bwd(
-                    l,
-                    &h_norm,
-                    &recv_pre,
-                    &recv_post,
-                    &self.params.layers[l],
-                    &self.workers[w].spec,
-                    &out,
-                    &d_out,
-                    d_h_norm,
-                    d_recv_pre,
-                    d_recv_post,
-                    &mut b.grads.layers[l],
-                )?;
-                st[w] = t.elapsed().as_secs_f64();
-            }
-            // Eqn-2 bottleneck view: the slowest worker defines the stage cost.
-            breakdown.add(Category::Aggr, st.iter().fold(0.0f64, |a, &b| a.max(b)));
-            stage_times.push(st);
+        self.engine
+            .backward(&self.params, &mut ctx, &mut self.tapes, lp_opt, true, &mut clock)?;
+        drop(ctx);
 
-            // Reverse halo exchange (cotangents back to producers, FP32).
-            for b in &mut self.bufs {
-                b.d_partials[..self.shapes.p_pre * fin]
-                    .iter_mut()
-                    .for_each(|x| *x = 0.0);
-            }
-            if exchange {
-                let sends = self.build_reverse_sends(fin);
-                let recvs = alltoallv(sends, &self.tc.machine, &mut epoch_comm);
-                self.apply_reverse_recvs(fin, recvs)?;
-            }
-
-            // Stage: pre_bwd.
-            let mut st = vec![0f64; k];
-            for w in 0..k {
-                let t = std::time::Instant::now();
-                let (h, d_h_norm, d_partials) = {
-                    let b = &self.bufs[w];
-                    (
-                        b.h[l].clone(),
-                        b.d_h_norm[..n * fin].to_vec(),
-                        b.d_partials[..self.shapes.p_pre * fin].to_vec(),
-                    )
-                };
-                let b = &mut self.bufs[w];
-                let d_h = &mut b.d_next[..n * fin];
-                self.backend
-                    .pre_bwd(fin, &h, &self.workers[w].pre, &d_h_norm, &d_partials, d_h)?;
-                st[w] = t.elapsed().as_secs_f64();
-                std::mem::swap(&mut b.d_cur, &mut b.d_next);
-            }
-            // Eqn-2 bottleneck view: the slowest worker defines the stage cost.
-            breakdown.add(Category::Aggr, st.iter().fold(0.0f64, |a, &b| a.max(b)));
-            stage_times.push(st);
-        }
-
-        // ---- label-embedding gradient + allreduce + update ------------------
-        if self.tc.label_prop {
-            for w in 0..k {
-                let b = &mut self.bufs[w];
-                labelprop::grad_embed(
-                    &mut b.grads.w_embed,
-                    f_in,
-                    &b.lp_sel,
-                    &self.workers[w].labels,
-                    &b.d_cur[..n * f_in],
-                );
-            }
-        }
+        // ---- gradient allreduce + optimizer step -----------------------
         let t = std::time::Instant::now();
-        let mut flats: Vec<Vec<f32>> = self.bufs.iter().map(|b| b.grads.flatten()).collect();
+        let mut flats: Vec<Vec<f32>> = self.tapes.grads.iter().map(|g| g.flatten()).collect();
         let ar_secs = collective::allreduce_sum(&mut flats, &self.tc.machine);
-        epoch_comm.modeled_send_secs.iter_mut().for_each(|s| *s += ar_secs);
+        epoch_comm
+            .modeled_send_secs
+            .iter_mut()
+            .for_each(|s| *s += ar_secs);
         let mut flat_params = self.params.flatten();
         self.opt.step(&mut flat_params, &flats[0]);
         self.params.unflatten_into(&flat_params);
         breakdown.add(Category::Other, t.elapsed().as_secs_f64());
 
-        // ---- time accounting -------------------------------------------------
+        // ---- time accounting -------------------------------------------
         // Compute was measured on this container's single core; a rank of
         // the modeled machine has `cores_per_rank` of them (DESIGN.md §1),
         // so the modeled epoch divides compute-side categories by that.
         let cscale = self.tc.machine.cores_per_rank.max(1.0);
-        let mut modeled_compute = 0f64;
-        let mut sync = 0f64;
-        for st in &stage_times {
-            let mx = st.iter().fold(0.0f64, |a, &b| a.max(b));
-            modeled_compute += mx;
-            for &t in st {
-                sync += mx - t;
-            }
+        let (compute, sync) = clock.bottleneck();
+        let modeled_compute = compute / cscale;
+        for (cat, mx) in clock.category_maxes() {
+            breakdown.add(cat, mx);
         }
-        modeled_compute /= cscale;
+        breakdown.add(Category::Quant, clock.quant_bottleneck());
         for c in [Category::Aggr, Category::Quant, Category::Other] {
             let v = breakdown.get(c);
             breakdown.add(c, v / cscale - v);
@@ -447,10 +270,10 @@ impl Trainer {
 
         let stats = EpochStats {
             epoch: self.epoch,
-            train_loss: (train_loss_sum / train_mask_sum.max(1.0)) as f32,
-            train_acc: (train_correct / train_mask_sum.max(1.0)) as f32,
-            val_acc: (val_correct / val_mask.max(1.0)) as f32,
-            test_acc: (test_correct / test_mask.max(1.0)) as f32,
+            train_loss: (totals.loss_sum / totals.wsum.max(1.0)) as f32,
+            train_acc: (totals.train_correct / totals.train_cnt.max(1.0)) as f32,
+            val_acc: (totals.val_correct / totals.val_cnt.max(1.0)) as f32,
+            test_acc: (totals.test_correct / totals.test_cnt.max(1.0)) as f32,
             modeled_secs: modeled_compute + comm_secs,
             measured_secs: wall.elapsed().as_secs_f64(),
             breakdown,
@@ -476,171 +299,19 @@ impl Trainer {
         }
         Ok(out)
     }
-
-    /// Assemble the forward halo payload matrix for layer `l`.
-    fn build_sends(&mut self, l: usize, fin: usize, quant_secs: &mut [f64]) -> Vec<Vec<Payload>> {
-        let k = self.k();
-        let mut sends: Vec<Vec<Payload>> = (0..k)
-            .map(|_| (0..k).map(|_| Payload::Empty).collect())
-            .collect();
-        for w in 0..k {
-            for peer in 0..k {
-                if peer == w {
-                    continue;
-                }
-                let ctx = &self.workers[w];
-                let b = &self.bufs[w];
-                let (plo, phi) = ctx.send_pre_range[peer];
-                let post = &ctx.send_post_rows[peer];
-                let rows = (phi - plo) + post.len();
-                if rows == 0 {
-                    continue;
-                }
-                let mut buf = Vec::with_capacity(rows * fin);
-                buf.extend_from_slice(&b.partials[plo * fin..phi * fin]);
-                for &r in post {
-                    buf.extend_from_slice(&b.h_norm[l][r as usize * fin..(r as usize + 1) * fin]);
-                }
-                sends[w][peer] = match self.tc.quant {
-                    Some(bits) => {
-                        let t = std::time::Instant::now();
-                        let seed = (self.epoch as u64) << 32
-                            | (w as u64) << 16
-                            | (peer as u64) << 8
-                            | l as u64;
-                        let q = fused::quantize(&buf, rows, fin, bits, seed ^ self.tc.seed);
-                        quant_secs[w] += t.elapsed().as_secs_f64();
-                        Payload::Quant(q)
-                    }
-                    None => Payload::F32(buf),
-                };
-            }
-        }
-        sends
-    }
-
-    /// Scatter received forward payloads into recv_pre / recv_post buffers.
-    fn apply_recvs(
-        &mut self,
-        l: usize,
-        fin: usize,
-        recvs: Vec<Vec<Payload>>,
-        quant_secs: &mut [f64],
-    ) -> Result<()> {
-        let k = self.k();
-        for w in 0..k {
-            // Reset to zeros so stale pads never leak.
-            self.bufs[w].recv_pre[l].iter_mut().for_each(|x| *x = 0.0);
-            self.bufs[w].recv_post[l].iter_mut().for_each(|x| *x = 0.0);
-            for peer in 0..k {
-                let payload = &recvs[w][peer];
-                if payload.is_empty() {
-                    continue;
-                }
-                let ctx = &self.workers[w];
-                let (plo, phi) = ctx.recv_pre_range[peer];
-                let (qlo, qhi) = ctx.recv_post_range[peer];
-                let rows = (phi - plo) + (qhi - qlo);
-                let data: Vec<f32> = match payload {
-                    Payload::F32(v) => v.clone(),
-                    Payload::Quant(q) => {
-                        let t = std::time::Instant::now();
-                        let d = fused::dequantize(q);
-                        quant_secs[w] += t.elapsed().as_secs_f64();
-                        d
-                    }
-                    Payload::Empty => continue,
-                };
-                anyhow::ensure!(
-                    data.len() == rows * fin,
-                    "halo payload from {peer} to {w}: {} values, expected {}",
-                    data.len(),
-                    rows * fin
-                );
-                let b = &mut self.bufs[w];
-                b.recv_pre[l][plo * fin..phi * fin]
-                    .copy_from_slice(&data[..(phi - plo) * fin]);
-                b.recv_post[l][qlo * fin..qhi * fin]
-                    .copy_from_slice(&data[(phi - plo) * fin..]);
-            }
-        }
-        Ok(())
-    }
-
-    /// Reverse exchange: consumers return halo cotangents to producers.
-    fn build_reverse_sends(&self, fin: usize) -> Vec<Vec<Payload>> {
-        let k = self.k();
-        let mut sends: Vec<Vec<Payload>> = (0..k)
-            .map(|_| (0..k).map(|_| Payload::Empty).collect())
-            .collect();
-        for w in 0..k {
-            let ctx = &self.workers[w];
-            let b = &self.bufs[w];
-            for peer in 0..k {
-                if peer == w {
-                    continue;
-                }
-                let (plo, phi) = ctx.recv_pre_range[peer];
-                let (qlo, qhi) = ctx.recv_post_range[peer];
-                let rows = (phi - plo) + (qhi - qlo);
-                if rows == 0 {
-                    continue;
-                }
-                let mut buf = Vec::with_capacity(rows * fin);
-                buf.extend_from_slice(&b.d_recv_pre[plo * fin..phi * fin]);
-                buf.extend_from_slice(&b.d_recv_post[qlo * fin..qhi * fin]);
-                sends[w][peer] = Payload::F32(buf);
-            }
-        }
-        sends
-    }
-
-    /// Producers fold returned cotangents into d_partials / d_h_norm.
-    fn apply_reverse_recvs(&mut self, fin: usize, recvs: Vec<Vec<Payload>>) -> Result<()> {
-        let k = self.k();
-        for w in 0..k {
-            for peer in 0..k {
-                let payload = match &recvs[w][peer] {
-                    Payload::F32(v) if !v.is_empty() => v.clone(),
-                    _ => continue,
-                };
-                let ctx = &self.workers[w];
-                let (plo, phi) = ctx.send_pre_range[peer];
-                let post = ctx.send_post_rows[peer].clone();
-                let pre_vals = (phi - plo) * fin;
-                anyhow::ensure!(
-                    payload.len() == pre_vals + post.len() * fin,
-                    "reverse payload size mismatch"
-                );
-                let b = &mut self.bufs[w];
-                b.d_partials[plo * fin..phi * fin].copy_from_slice(&payload[..pre_vals]);
-                // d_h_norm[post_row] += returned post cotangent.
-                for (i, &r) in post.iter().enumerate() {
-                    let src = &payload[pre_vals + i * fin..pre_vals + (i + 1) * fin];
-                    let dst =
-                        &mut b.d_h_norm[r as usize * fin..(r as usize + 1) * fin];
-                    for (a, &x) in dst.iter_mut().zip(src.iter()) {
-                        *a += x;
-                    }
-                }
-            }
-        }
-        Ok(())
-    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::backend::native::NativeBackend;
     use crate::coordinator::planner::prepare;
+    use crate::exec::AggKernel;
     use crate::graph::generate::sbm;
 
     fn train(k: usize, tc: TrainConfig, n: usize) -> Vec<EpochStats> {
         let lg = sbm(n, 4, 8.0, 0.85, 16, 0.6, 11);
         let (ctxs, cfg, _) = prepare(&lg, k, tc.strategy, None, 5).unwrap();
-        let backend = Box::new(NativeBackend::new(cfg));
-        let mut tr = Trainer::new(ctxs, backend, tc);
+        let mut tr = Trainer::new(ctxs, cfg, tc);
         tr.run(false).unwrap()
     }
 
@@ -676,6 +347,31 @@ mod tests {
                 a.train_loss,
                 b.train_loss
             );
+        }
+    }
+
+    #[test]
+    fn agg_kernel_override_preserves_numerics() {
+        // The dispatcher's kernel choice is an algorithm-preserving
+        // transformation: every §4 kernel trains the same trajectory.
+        let base = train(2, TrainConfig { epochs: 4, ..Default::default() }, 300);
+        for kernel in [AggKernel::Vanilla, AggKernel::Parallel, AggKernel::Spmm] {
+            let tc = TrainConfig {
+                epochs: 4,
+                agg: AggDispatch::default().with_kernel(kernel).with_threads(2),
+                ..Default::default()
+            };
+            let got = train(2, tc, 300);
+            for (a, b) in base.iter().zip(got.iter()) {
+                assert!(
+                    (a.train_loss - b.train_loss).abs() < 2e-3,
+                    "{}: epoch {}: {} vs {}",
+                    kernel.name(),
+                    a.epoch,
+                    a.train_loss,
+                    b.train_loss
+                );
+            }
         }
     }
 

@@ -1,0 +1,280 @@
+//! The single aggregation dispatch (paper §4): every aggregate call in the
+//! execution engine — local segment sums, pre-aggregation partials, their
+//! transposes, and the mini-batch weighted SpMM — routes through one
+//! chooser over the §4 kernel ladder:
+//!
+//! * `vanilla` — the unoptimized scatter baseline (Fig. 3(a)),
+//! * `sorted` / `blocked` — destination-clustered, register-blocked runs
+//!   (Fig. 3(b)+(c); inputs here are pre-sorted, so the two coincide),
+//! * `parallel` — the 2D FLOPS-balanced tiling (`agg::parallel`,
+//!   `agg::spmm::spmm_parallel`),
+//! * `spmm` — force the CSR/SpMM operator form: segment-sum problems are
+//!   converted to a unit-weight CSR and run through `agg::spmm` (the
+//!   crossover the `agg_dispatch` bench measures).
+//!
+//! `Auto` picks by shape: serial register-blocked kernels below
+//! [`AggDispatch::parallel_min_work`] contributions (the nnz fallback
+//! threshold that used to be hard-coded in `agg::spmm`), the 2D-parallel
+//! driver above it when the dispatcher owns more than one thread.
+
+use crate::agg::spmm::{
+    spmm_blocked, spmm_parallel_with_threshold, spmm_transpose, spmm_vanilla, CsrMatrix,
+};
+use crate::agg::{blocked, parallel, vanilla};
+
+/// Which §4 kernel family to use (CLI: `supergcn train --agg-kernel …`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggKernel {
+    /// Shape/nnz heuristic (default).
+    Auto,
+    /// Unoptimized scatter (the Fig. 8 "Base" engine).
+    Vanilla,
+    /// Clustering & sorting; on pre-sorted inputs identical to `Blocked`.
+    Sorted,
+    /// Register-blocked destination-major runs, serial.
+    Blocked,
+    /// 2D dynamic parallelism with FLOPS-balanced tiles.
+    Parallel,
+    /// The SpMM operator form (segment sums converted to unit-weight CSR).
+    Spmm,
+}
+
+impl AggKernel {
+    pub const ALL: [AggKernel; 6] = [
+        AggKernel::Auto,
+        AggKernel::Vanilla,
+        AggKernel::Sorted,
+        AggKernel::Blocked,
+        AggKernel::Parallel,
+        AggKernel::Spmm,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AggKernel::Auto => "auto",
+            AggKernel::Vanilla => "vanilla",
+            AggKernel::Sorted => "sorted",
+            AggKernel::Blocked => "blocked",
+            AggKernel::Parallel => "parallel",
+            AggKernel::Spmm => "spmm",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<AggKernel> {
+        AggKernel::ALL
+            .into_iter()
+            .find(|k| k.name() == s)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "agg kernel must be one of: {}",
+                    AggKernel::ALL.map(|k| k.name()).join("|")
+                )
+            })
+    }
+}
+
+/// The dispatcher every engine aggregation call goes through.
+#[derive(Clone, Debug)]
+pub struct AggDispatch {
+    pub kernel: AggKernel,
+    /// Threads available to the parallel kernels (1 = serial).
+    pub threads: usize,
+    /// Contribution/nnz count below which parallel kernels fall back to
+    /// the serial blocked kernel (previously hard-coded 4096 in
+    /// `agg::spmm::spmm_parallel`).
+    pub parallel_min_work: usize,
+}
+
+impl Default for AggDispatch {
+    fn default() -> Self {
+        Self {
+            kernel: AggKernel::Auto,
+            threads: 1,
+            parallel_min_work: crate::agg::spmm::SPMM_PARALLEL_MIN_NNZ,
+        }
+    }
+}
+
+impl AggDispatch {
+    pub fn with_kernel(mut self, kernel: AggKernel) -> Self {
+        self.kernel = kernel;
+        self
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn with_parallel_min_work(mut self, min_work: usize) -> Self {
+        self.parallel_min_work = min_work;
+        self
+    }
+
+    /// Segment sum `out[seg[i]] += h[gather[i]]` (`seg` non-decreasing,
+    /// `out` is `n_seg × f` and accumulated into).
+    pub fn segment_sum(
+        &self,
+        h: &[f32],
+        f: usize,
+        gather: &[u32],
+        seg: &[u32],
+        n_seg: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert!(crate::agg::is_sorted_segs(seg));
+        match self.kernel {
+            AggKernel::Vanilla => vanilla::segment_sum(h, f, gather, seg, out),
+            AggKernel::Sorted | AggKernel::Blocked => blocked::segment_sum(h, f, gather, seg, out),
+            AggKernel::Parallel => parallel::segment_sum_n_with_threshold(
+                self.threads,
+                h,
+                f,
+                gather,
+                seg,
+                n_seg,
+                out,
+                self.parallel_min_work,
+            ),
+            AggKernel::Spmm => {
+                // Operator-form crossover: run the same problem as SpMM
+                // over a unit-weight CSR built from the segment runs. The
+                // conversion is rebuilt per call — this kernel exists for
+                // crossover experiments (`benches/agg_dispatch.rs`), not
+                // as the production default.
+                let a = CsrMatrix {
+                    n_rows: n_seg,
+                    n_cols: h.len() / f.max(1),
+                    row_ptr: blocked::segment_offsets(seg, n_seg),
+                    col_idx: gather.to_vec(),
+                    weights: vec![1.0; gather.len()],
+                };
+                spmm_blocked(&a, h, f, out);
+            }
+            AggKernel::Auto => {
+                if self.threads <= 1 || gather.len() < self.parallel_min_work {
+                    blocked::segment_sum(h, f, gather, seg, out)
+                } else {
+                    parallel::segment_sum_n_with_threshold(
+                        self.threads,
+                        h,
+                        f,
+                        gather,
+                        seg,
+                        n_seg,
+                        out,
+                        self.parallel_min_work,
+                    )
+                }
+            }
+        }
+    }
+
+    /// Weighted SpMM `out += A · h` over a CSR matrix (mini-batch induced
+    /// adjacencies; CSR is already destination-clustered, so `sorted`
+    /// coincides with `blocked`).
+    pub fn spmm(&self, a: &CsrMatrix, h: &[f32], f: usize, out: &mut [f32]) {
+        match self.kernel {
+            AggKernel::Vanilla => spmm_vanilla(a, h, f, out),
+            AggKernel::Sorted | AggKernel::Blocked | AggKernel::Spmm => spmm_blocked(a, h, f, out),
+            AggKernel::Parallel => spmm_parallel_with_threshold(
+                self.threads,
+                a,
+                h,
+                f,
+                out,
+                self.parallel_min_work,
+            ),
+            AggKernel::Auto => {
+                if self.threads <= 1 || a.nnz() < self.parallel_min_work {
+                    spmm_blocked(a, h, f, out)
+                } else {
+                    spmm_parallel_with_threshold(self.threads, a, h, f, out, self.parallel_min_work)
+                }
+            }
+        }
+    }
+
+    /// Transpose scatter `out[col] += w · d[row]` — the backward of
+    /// [`AggDispatch::spmm`] (one implementation; kept behind the
+    /// dispatcher so the engine has a single aggregation surface).
+    pub fn spmm_t(&self, a: &CsrMatrix, d: &[f32], f: usize, out: &mut [f32]) {
+        spmm_transpose(a, d, f, out);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agg::testutil::random_problem;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kernel_parse_roundtrip() {
+        for k in AggKernel::ALL {
+            assert_eq!(AggKernel::parse(k.name()).unwrap(), k);
+        }
+        assert!(AggKernel::parse("nope").is_err());
+    }
+
+    #[test]
+    fn all_kernels_agree_on_segment_sum() {
+        let mut rng = Rng::new(7);
+        let (n_src, n_seg, m, f) = (60, 40, 600, 24);
+        let (h, gather, seg) = random_problem(&mut rng, n_src, n_seg, m, f);
+        let mut want = vec![0f32; n_seg * f];
+        vanilla::segment_sum(&h, f, &gather, &seg, &mut want);
+        for kernel in AggKernel::ALL {
+            let disp = AggDispatch::default().with_kernel(kernel).with_threads(3);
+            let mut got = vec![0f32; n_seg * f];
+            disp.segment_sum(&h, f, &gather, &seg, n_seg, &mut got);
+            for (i, (a, b)) in want.iter().zip(got.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-5,
+                    "{}: mismatch at {i}: {a} vs {b}",
+                    kernel.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_kernels_agree_on_spmm() {
+        let g = crate::graph::generate::erdos_renyi(50, 400, 3);
+        let mut a = CsrMatrix::from_graph(&g);
+        let mut rng = Rng::new(9);
+        for w in &mut a.weights {
+            *w = rng.f32() * 2.0 - 1.0;
+        }
+        let f = 12;
+        let h: Vec<f32> = (0..g.n * f).map(|_| rng.f32() - 0.5).collect();
+        let mut want = vec![0f32; g.n * f];
+        spmm_vanilla(&a, &h, f, &mut want);
+        for kernel in AggKernel::ALL {
+            let disp = AggDispatch::default().with_kernel(kernel).with_threads(2);
+            let mut got = vec![0f32; g.n * f];
+            disp.spmm(&a, &h, f, &mut got);
+            for (i, (x, y)) in want.iter().zip(got.iter()).enumerate() {
+                assert!(
+                    (x - y).abs() < 1e-5,
+                    "{}: mismatch at {i}: {x} vs {y}",
+                    kernel.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn auto_threshold_is_tunable() {
+        // With a tiny threshold and >1 threads Auto must still match the
+        // serial result (the parallel path is exercised).
+        let mut rng = Rng::new(11);
+        let (h, gather, seg) = random_problem(&mut rng, 30, 20, 300, 8);
+        let disp = AggDispatch::default().with_threads(4).with_parallel_min_work(8);
+        let mut a = vec![0f32; 20 * 8];
+        disp.segment_sum(&h, 8, &gather, &seg, 20, &mut a);
+        let mut b = vec![0f32; 20 * 8];
+        blocked::segment_sum(&h, 8, &gather, &seg, &mut b);
+        assert_eq!(a, b);
+    }
+}

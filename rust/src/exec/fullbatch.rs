@@ -1,0 +1,399 @@
+//! [`GraphContext`] for the full-batch regime (paper Fig. 2): neighbor
+//! features arrive through the hierarchical pre/post halo exchange over
+//! the partition plans (`hier::plan` via `coordinator::planner`), with
+//! optional `quant::fused` payloads and `delay_comm` staleness. The
+//! reverse pass ships halo cotangents back to their producers, so the
+//! distributed gradient equals the single-machine gradient to f32
+//! round-off (`tests/trainer_equivalence.rs`).
+
+use super::dispatch::AggDispatch;
+use super::GraphContext;
+use crate::comm::{alltoallv, CommStats, Payload};
+use crate::coordinator::planner::WorkerCtx;
+use crate::perfmodel::MachineProfile;
+use crate::quant::{fused, Bits};
+use crate::runtime::ShapeConfig;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Persistent halo state: received tensors survive across epochs so
+/// `delay_comm > 1` (the DistGNN cd-N baseline) trains on stale halos
+/// between exchange epochs, exactly like the paper's baseline.
+pub struct FullBatchState {
+    /// `recv_pre[layer][lane]`: received pre-aggregated partial rows.
+    recv_pre: Vec<Vec<Vec<f32>>>,
+    /// `recv_post[layer][lane]`: received raw post rows.
+    recv_post: Vec<Vec<Vec<f32>>>,
+    /// Send-side pre-aggregation partials (`p_pre × maxf` scratch).
+    partials: Vec<Vec<f32>>,
+    d_recv_pre: Vec<Vec<f32>>,
+    d_recv_post: Vec<Vec<f32>>,
+    d_partials: Vec<Vec<f32>>,
+}
+
+impl FullBatchState {
+    pub fn new(shapes: &ShapeConfig, lanes: usize) -> Self {
+        let dims = shapes.layer_dims();
+        let maxf = shapes.f_in.max(shapes.hidden).max(shapes.classes);
+        Self {
+            recv_pre: (0..3)
+                .map(|l| (0..lanes).map(|_| vec![0f32; shapes.r_pre * dims[l].0]).collect())
+                .collect(),
+            recv_post: (0..3)
+                .map(|l| (0..lanes).map(|_| vec![0f32; shapes.r_post * dims[l].0]).collect())
+                .collect(),
+            partials: (0..lanes).map(|_| vec![0f32; shapes.p_pre * maxf]).collect(),
+            d_recv_pre: (0..lanes).map(|_| vec![0f32; shapes.r_pre * maxf]).collect(),
+            d_recv_post: (0..lanes).map(|_| vec![0f32; shapes.r_post * maxf]).collect(),
+            d_partials: (0..lanes).map(|_| vec![0f32; shapes.p_pre * maxf]).collect(),
+        }
+    }
+}
+
+/// One epoch's view over the workers: borrows the static contexts and the
+/// persistent halo state, charges communication to the epoch's
+/// [`CommStats`].
+pub struct FullBatchCtx<'a> {
+    workers: &'a [WorkerCtx],
+    shapes: &'a ShapeConfig,
+    st: &'a mut FullBatchState,
+    machine: &'a MachineProfile,
+    quant: Option<Bits>,
+    seed: u64,
+    epoch: usize,
+    /// Exchange halos this epoch? (`delay_comm` staleness policy —
+    /// decided by the driver.)
+    exchange: bool,
+    comm: &'a mut CommStats,
+}
+
+impl<'a> FullBatchCtx<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        workers: &'a [WorkerCtx],
+        shapes: &'a ShapeConfig,
+        st: &'a mut FullBatchState,
+        machine: &'a MachineProfile,
+        quant: Option<Bits>,
+        seed: u64,
+        epoch: usize,
+        exchange: bool,
+        comm: &'a mut CommStats,
+    ) -> Self {
+        Self {
+            workers,
+            shapes,
+            st,
+            machine,
+            quant,
+            seed,
+            epoch,
+            exchange,
+            comm,
+        }
+    }
+
+    fn k(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn empty_matrix(k: usize) -> Vec<Vec<Payload>> {
+        (0..k).map(|_| (0..k).map(|_| Payload::Empty).collect()).collect()
+    }
+
+    /// Forward halo exchange for layer `l`: quantize → wire → dequantize,
+    /// scattering into the persistent recv buffers.
+    fn exchange_fwd(
+        &mut self,
+        l: usize,
+        fin: usize,
+        h: &[Vec<f32>],
+        quant_secs: &mut [f64],
+    ) -> Result<()> {
+        let k = self.k();
+        let mut sends = Self::empty_matrix(k);
+        for w in 0..k {
+            for peer in 0..k {
+                if peer == w {
+                    continue;
+                }
+                let ctx = &self.workers[w];
+                let (plo, phi) = ctx.send_pre_range[peer];
+                let post = &ctx.send_post_rows[peer];
+                let rows = (phi - plo) + post.len();
+                if rows == 0 {
+                    continue;
+                }
+                let mut buf = Vec::with_capacity(rows * fin);
+                buf.extend_from_slice(&self.st.partials[w][plo * fin..phi * fin]);
+                for &r in post {
+                    buf.extend_from_slice(&h[w][r as usize * fin..(r as usize + 1) * fin]);
+                }
+                sends[w][peer] = match self.quant {
+                    Some(bits) => {
+                        let t = Instant::now();
+                        let seed = (self.epoch as u64) << 32
+                            | (w as u64) << 16
+                            | (peer as u64) << 8
+                            | l as u64;
+                        let q = fused::quantize(&buf, rows, fin, bits, seed ^ self.seed);
+                        quant_secs[w] += t.elapsed().as_secs_f64();
+                        Payload::Quant(q)
+                    }
+                    None => Payload::F32(buf),
+                };
+            }
+        }
+        let recvs = alltoallv(sends, self.machine, &mut *self.comm);
+        for w in 0..k {
+            // Reset to zeros so stale pads never leak.
+            self.st.recv_pre[l][w].iter_mut().for_each(|x| *x = 0.0);
+            self.st.recv_post[l][w].iter_mut().for_each(|x| *x = 0.0);
+            for peer in 0..k {
+                let payload = &recvs[w][peer];
+                if payload.is_empty() {
+                    continue;
+                }
+                let ctx = &self.workers[w];
+                let (plo, phi) = ctx.recv_pre_range[peer];
+                let (qlo, qhi) = ctx.recv_post_range[peer];
+                let rows = (phi - plo) + (qhi - qlo);
+                let data: Vec<f32> = match payload {
+                    Payload::F32(v) => v.clone(),
+                    Payload::Quant(q) => {
+                        let t = Instant::now();
+                        let d = fused::dequantize(q);
+                        quant_secs[w] += t.elapsed().as_secs_f64();
+                        d
+                    }
+                    Payload::Empty => continue,
+                };
+                anyhow::ensure!(
+                    data.len() == rows * fin,
+                    "halo payload from {peer} to {w}: {} values, expected {}",
+                    data.len(),
+                    rows * fin
+                );
+                self.st.recv_pre[l][w][plo * fin..phi * fin]
+                    .copy_from_slice(&data[..(phi - plo) * fin]);
+                self.st.recv_post[l][w][qlo * fin..qhi * fin]
+                    .copy_from_slice(&data[(phi - plo) * fin..]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Reverse exchange: consumers return halo cotangents (FP32 — the
+    /// paper quantizes the forward feature communication only); producers
+    /// fold them into `d_partials` / `d_h`.
+    fn exchange_bwd(&mut self, fin: usize, d_h: &mut [Vec<f32>]) -> Result<()> {
+        let k = self.k();
+        let mut sends = Self::empty_matrix(k);
+        for w in 0..k {
+            let ctx = &self.workers[w];
+            for peer in 0..k {
+                if peer == w {
+                    continue;
+                }
+                let (plo, phi) = ctx.recv_pre_range[peer];
+                let (qlo, qhi) = ctx.recv_post_range[peer];
+                let rows = (phi - plo) + (qhi - qlo);
+                if rows == 0 {
+                    continue;
+                }
+                let mut buf = Vec::with_capacity(rows * fin);
+                buf.extend_from_slice(&self.st.d_recv_pre[w][plo * fin..phi * fin]);
+                buf.extend_from_slice(&self.st.d_recv_post[w][qlo * fin..qhi * fin]);
+                sends[w][peer] = Payload::F32(buf);
+            }
+        }
+        let recvs = alltoallv(sends, self.machine, &mut *self.comm);
+        for w in 0..k {
+            for peer in 0..k {
+                let payload = match &recvs[w][peer] {
+                    Payload::F32(v) if !v.is_empty() => v,
+                    _ => continue,
+                };
+                let ctx = &self.workers[w];
+                let (plo, phi) = ctx.send_pre_range[peer];
+                let post = &ctx.send_post_rows[peer];
+                let pre_vals = (phi - plo) * fin;
+                anyhow::ensure!(
+                    payload.len() == pre_vals + post.len() * fin,
+                    "reverse payload size mismatch"
+                );
+                self.st.d_partials[w][plo * fin..phi * fin].copy_from_slice(&payload[..pre_vals]);
+                // d_h[post_row] += returned post cotangent.
+                for (i, &r) in post.iter().enumerate() {
+                    let src = &payload[pre_vals + i * fin..pre_vals + (i + 1) * fin];
+                    let dst = &mut d_h[w][r as usize * fin..(r as usize + 1) * fin];
+                    for (a, &x) in dst.iter_mut().zip(src.iter()) {
+                        *a += x;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl GraphContext for FullBatchCtx<'_> {
+    fn lanes(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn load_inputs(
+        &mut self,
+        x: &mut [Vec<f32>],
+        secs: &mut [f64],
+        _quant_secs: &mut [f64],
+    ) -> Result<()> {
+        for (w, ctx) in self.workers.iter().enumerate() {
+            let t = Instant::now();
+            x[w].copy_from_slice(&ctx.features);
+            secs[w] += t.elapsed().as_secs_f64();
+        }
+        Ok(())
+    }
+
+    fn aggregate_fwd(
+        &mut self,
+        layer: usize,
+        fin: usize,
+        h: &[Vec<f32>],
+        z: &mut [Vec<f32>],
+        disp: &AggDispatch,
+        secs: &mut [f64],
+        quant_secs: &mut [f64],
+    ) -> Result<()> {
+        let k = self.k();
+        let p_pre = self.shapes.p_pre;
+        // Send-side pre-aggregation partials (§5: producer partially
+        // aggregates covered destinations before shipping).
+        for w in 0..k {
+            let t = Instant::now();
+            let ctx = &self.workers[w];
+            let p = &mut self.st.partials[w][..p_pre * fin];
+            p.iter_mut().for_each(|x| *x = 0.0);
+            disp.segment_sum(&h[w], fin, &ctx.pre.gather, &ctx.pre.seg, p_pre, p);
+            secs[w] += t.elapsed().as_secs_f64();
+        }
+        if self.exchange {
+            self.exchange_fwd(layer, fin, h, quant_secs)?;
+        }
+        // Local aggregation + received-halo scatter + mean scaling.
+        let n = self.shapes.n_pad;
+        for w in 0..k {
+            let t = Instant::now();
+            let ctx = &self.workers[w];
+            let zv = &mut z[w];
+            zv.iter_mut().for_each(|x| *x = 0.0);
+            disp.segment_sum(
+                &h[w],
+                fin,
+                &ctx.spec.local.gather,
+                &ctx.spec.local.seg,
+                n,
+                zv,
+            );
+            let rp = &self.st.recv_pre[layer][w];
+            for (i, &d) in ctx.spec.rpre_dst.iter().enumerate() {
+                let src = &rp[i * fin..(i + 1) * fin];
+                let dst = &mut zv[d as usize * fin..(d as usize + 1) * fin];
+                for (a, &b) in dst.iter_mut().zip(src.iter()) {
+                    *a += b;
+                }
+            }
+            let ro = &self.st.recv_post[layer][w];
+            for (&row, &d) in ctx.spec.post_row.iter().zip(ctx.spec.post_dst.iter()) {
+                let src = &ro[row as usize * fin..(row as usize + 1) * fin];
+                let dst = &mut zv[d as usize * fin..(d as usize + 1) * fin];
+                for (a, &b) in dst.iter_mut().zip(src.iter()) {
+                    *a += b;
+                }
+            }
+            for (i, &dv) in ctx.spec.deg_inv.iter().enumerate() {
+                for v in &mut zv[i * fin..(i + 1) * fin] {
+                    *v *= dv;
+                }
+            }
+            secs[w] += t.elapsed().as_secs_f64();
+        }
+        Ok(())
+    }
+
+    fn aggregate_bwd(
+        &mut self,
+        _layer: usize,
+        fin: usize,
+        dz: &mut [Vec<f32>],
+        d_h: &mut [Vec<f32>],
+        disp: &AggDispatch,
+        secs: &mut [f64],
+    ) -> Result<()> {
+        let k = self.k();
+        let n = self.shapes.n_pad;
+        for w in 0..k {
+            let t = Instant::now();
+            let ctx = &self.workers[w];
+            // Mean scaling folds into dZ.
+            for (i, &dv) in ctx.spec.deg_inv.iter().enumerate() {
+                for v in &mut dz[w][i * fin..(i + 1) * fin] {
+                    *v *= dv;
+                }
+            }
+            let dzv = &dz[w][..n * fin];
+            // (1) local edges, transposed: d_h[src] += dz[dst].
+            disp.segment_sum(
+                dzv,
+                fin,
+                &ctx.spec.local_t.gather,
+                &ctx.spec.local_t.seg,
+                n,
+                &mut d_h[w][..n * fin],
+            );
+            // (2) received partials: d_recv_pre[i] = dz[rpre_dst[i]].
+            for (i, &d) in ctx.spec.rpre_dst.iter().enumerate() {
+                self.st.d_recv_pre[w][i * fin..(i + 1) * fin]
+                    .copy_from_slice(&dzv[d as usize * fin..(d as usize + 1) * fin]);
+            }
+            // (3) post rows: d_recv_post[row] += dz[dst] (transposed spec).
+            let drp = &mut self.st.d_recv_post[w][..self.shapes.r_post * fin];
+            drp.iter_mut().for_each(|x| *x = 0.0);
+            disp.segment_sum(
+                dzv,
+                fin,
+                &ctx.spec.post_t.gather,
+                &ctx.spec.post_t.seg,
+                self.shapes.r_post,
+                drp,
+            );
+            secs[w] += t.elapsed().as_secs_f64();
+        }
+        for w in 0..k {
+            self.st.d_partials[w][..self.shapes.p_pre * fin]
+                .iter_mut()
+                .for_each(|x| *x = 0.0);
+        }
+        if self.exchange {
+            self.exchange_bwd(fin, d_h)?;
+        }
+        // Scatter returned partial cotangents back through the pre gather:
+        // d_h[gather[i]] += d_partials[seg[i]].
+        for w in 0..k {
+            let t = Instant::now();
+            let ctx = &self.workers[w];
+            let dp = &self.st.d_partials[w];
+            let dh = &mut d_h[w];
+            for (&g, &s) in ctx.pre.gather.iter().zip(ctx.pre.seg.iter()) {
+                let src = &dp[s as usize * fin..(s as usize + 1) * fin];
+                let dst = &mut dh[g as usize * fin..(g as usize + 1) * fin];
+                for (a, &b) in dst.iter_mut().zip(src.iter()) {
+                    *a += b;
+                }
+            }
+            secs[w] += t.elapsed().as_secs_f64();
+        }
+        Ok(())
+    }
+}

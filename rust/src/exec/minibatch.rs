@@ -1,0 +1,375 @@
+//! [`GraphContext`] for the mini-batch regime: each SPMD lane processes
+//! one sampled [`MiniBatch`] per round; neighbor features arrive by
+//! fetching remote feature rows from their owning partitions (`u32` ids
+//! on the wire, rows returned through `comm::alltoallv`, optionally
+//! `quant::fused`-quantized), and aggregation runs the batch's induced
+//! weighted CSR through the dispatcher's SpMM path.
+
+use super::dispatch::AggDispatch;
+use super::GraphContext;
+use crate::agg::spmm::CsrMatrix;
+use crate::comm::{alltoallv, CommStats, Payload};
+use crate::graph::generate::LabelledGraph;
+use crate::perfmodel::MachineProfile;
+use crate::quant::{fused, Bits};
+use crate::sample::{mix2, MiniBatch};
+use anyhow::Result;
+use std::time::Instant;
+
+/// One round's view: worker lane `w` processes `batches[per_lane[w]]`
+/// (idle lanes — `None` — run zero-row no-ops through the engine).
+pub struct MiniBatchCtx<'a> {
+    lg: &'a LabelledGraph,
+    /// Partition ownership of global feature rows.
+    assign: &'a [u32],
+    batches: &'a [MiniBatch],
+    per_lane: &'a [Option<usize>],
+    machine: &'a MachineProfile,
+    quant: Option<Bits>,
+    seed: u64,
+    epoch: usize,
+    round: usize,
+    comm: &'a mut CommStats,
+    /// The induced weighted adjacency per lane, in the form `agg::spmm`
+    /// wants (built once per round, shared by all three layers).
+    mats: Vec<Option<CsrMatrix>>,
+}
+
+impl<'a> MiniBatchCtx<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        lg: &'a LabelledGraph,
+        assign: &'a [u32],
+        batches: &'a [MiniBatch],
+        per_lane: &'a [Option<usize>],
+        machine: &'a MachineProfile,
+        quant: Option<Bits>,
+        seed: u64,
+        epoch: usize,
+        round: usize,
+        comm: &'a mut CommStats,
+    ) -> Self {
+        let mats = per_lane
+            .iter()
+            .map(|slot| {
+                slot.map(|bi| {
+                    let mb = &batches[bi];
+                    CsrMatrix {
+                        n_rows: mb.adj.n,
+                        n_cols: mb.adj.n,
+                        row_ptr: mb.adj.row_ptr.clone(),
+                        col_idx: mb.adj.col_idx.clone(),
+                        weights: mb.edge_weight.clone(),
+                    }
+                })
+            })
+            .collect();
+        Self {
+            lg,
+            assign,
+            batches,
+            per_lane,
+            machine,
+            quant,
+            seed,
+            epoch,
+            round,
+            comm,
+            mats,
+        }
+    }
+}
+
+impl GraphContext for MiniBatchCtx<'_> {
+    fn lanes(&self) -> usize {
+        self.per_lane.len()
+    }
+
+    /// The fetch: id requests to owners, then (quantized) feature-row
+    /// replies, then per-lane assembly of the batch input matrix.
+    fn load_inputs(
+        &mut self,
+        x: &mut [Vec<f32>],
+        secs: &mut [f64],
+        quant_secs: &mut [f64],
+    ) -> Result<()> {
+        let k = self.per_lane.len();
+        let f = self.lg.feat_dim;
+        // ---- id requests --------------------------------------------
+        let mut req: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); k]; k];
+        for w in 0..k {
+            if let Some(bi) = self.per_lane[w] {
+                for &v in &self.batches[bi].n_id {
+                    let o = self.assign[v as usize] as usize;
+                    if o != w {
+                        req[w][o].push(v);
+                    }
+                }
+            }
+        }
+        let req_sends: Vec<Vec<Payload>> = req
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .map(|ids| {
+                        if ids.is_empty() {
+                            Payload::Empty
+                        } else {
+                            Payload::F32(ids.iter().map(|&v| v as f32).collect())
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let req_recvs = alltoallv(req_sends, self.machine, &mut *self.comm);
+
+        // ---- replies (owner side) -----------------------------------
+        let mut reply_sends: Vec<Vec<Payload>> = (0..k)
+            .map(|_| (0..k).map(|_| Payload::Empty).collect())
+            .collect();
+        for (o, row) in req_recvs.iter().enumerate() {
+            for (w, payload) in row.iter().enumerate() {
+                let ids = match payload {
+                    Payload::F32(v) if !v.is_empty() => v,
+                    _ => continue,
+                };
+                let rows = ids.len();
+                let mut buf = Vec::with_capacity(rows * f);
+                for &idf in ids {
+                    buf.extend_from_slice(self.lg.feature_row(idf as usize));
+                }
+                reply_sends[o][w] = match self.quant {
+                    Some(bits) => {
+                        let t = Instant::now();
+                        let qseed = mix2(
+                            mix2(self.seed, ((self.epoch as u64) << 20) ^ self.round as u64),
+                            ((o as u64) << 8) ^ w as u64,
+                        );
+                        let q = fused::quantize(&buf, rows, f, bits, qseed);
+                        quant_secs[o] += t.elapsed().as_secs_f64();
+                        Payload::Quant(q)
+                    }
+                    None => Payload::F32(buf),
+                };
+            }
+        }
+        let mut replies = alltoallv(reply_sends, self.machine, &mut *self.comm);
+
+        // ---- assemble X per lane ------------------------------------
+        for w in 0..k {
+            let bi = match self.per_lane[w] {
+                Some(bi) => bi,
+                None => continue,
+            };
+            let mb = &self.batches[bi];
+            // Each reply is consumed exactly once — move it out.
+            let mut decoded: Vec<Option<Vec<f32>>> = vec![None; k];
+            for (o, slot) in replies[w].iter_mut().enumerate() {
+                match std::mem::replace(slot, Payload::Empty) {
+                    Payload::F32(v) if !v.is_empty() => decoded[o] = Some(v),
+                    Payload::Quant(q) => {
+                        let t = Instant::now();
+                        decoded[o] = Some(fused::dequantize(&q));
+                        quant_secs[w] += t.elapsed().as_secs_f64();
+                    }
+                    _ => {}
+                }
+            }
+            let t = Instant::now();
+            let xw = &mut x[w];
+            let mut cursors = vec![0usize; k];
+            for (i, &v) in mb.n_id.iter().enumerate() {
+                let o = self.assign[v as usize] as usize;
+                if o == w {
+                    xw[i * f..(i + 1) * f].copy_from_slice(self.lg.feature_row(v as usize));
+                } else {
+                    let rows = decoded[o]
+                        .as_ref()
+                        .ok_or_else(|| anyhow::anyhow!("missing reply from {o} to {w}"))?;
+                    let c = cursors[o];
+                    anyhow::ensure!((c + 1) * f <= rows.len(), "reply row underflow");
+                    xw[i * f..(i + 1) * f].copy_from_slice(&rows[c * f..(c + 1) * f]);
+                    cursors[o] += 1;
+                }
+            }
+            secs[w] += t.elapsed().as_secs_f64();
+        }
+        Ok(())
+    }
+
+    fn aggregate_fwd(
+        &mut self,
+        _layer: usize,
+        fin: usize,
+        h: &[Vec<f32>],
+        z: &mut [Vec<f32>],
+        disp: &AggDispatch,
+        secs: &mut [f64],
+        _quant_secs: &mut [f64],
+    ) -> Result<()> {
+        for (w, mat) in self.mats.iter().enumerate() {
+            if let Some(a) = mat {
+                let t = Instant::now();
+                let zv = &mut z[w][..a.n_rows * fin];
+                zv.iter_mut().for_each(|x| *x = 0.0);
+                disp.spmm(a, &h[w][..a.n_cols * fin], fin, zv);
+                secs[w] += t.elapsed().as_secs_f64();
+            }
+        }
+        Ok(())
+    }
+
+    fn aggregate_bwd(
+        &mut self,
+        _layer: usize,
+        fin: usize,
+        dz: &mut [Vec<f32>],
+        d_h: &mut [Vec<f32>],
+        disp: &AggDispatch,
+        secs: &mut [f64],
+    ) -> Result<()> {
+        for (w, mat) in self.mats.iter().enumerate() {
+            if let Some(a) = mat {
+                let t = Instant::now();
+                disp.spmm_t(a, &dz[w][..a.n_rows * fin], fin, &mut d_h[w][..a.n_cols * fin]);
+                secs[w] += t.elapsed().as_secs_f64();
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::{Engine, LossSpec, StageClock};
+    use crate::graph::generate::sbm;
+    use crate::model::ModelParams;
+    use crate::runtime::ShapeConfig;
+    use crate::sample::{FullSampler, Sampler};
+    use crate::util::propcheck::grad_check;
+    use std::sync::Arc;
+
+    fn fd_shapes() -> ShapeConfig {
+        ShapeConfig {
+            name: "fd".into(),
+            n_pad: 0,
+            f_in: 6,
+            hidden: 5,
+            classes: 3,
+            e_local: 0,
+            e_pre: 0,
+            p_pre: 0,
+            r_pre: 0,
+            r_post: 0,
+            e_post: 0,
+        }
+    }
+
+    /// The shared finite-difference gradient check
+    /// (`util::propcheck::grad_check`) run against the engine in the
+    /// mini-batch regime; `tests/trainer_equivalence.rs` runs the same
+    /// check in the full-batch regime.
+    #[test]
+    fn engine_backward_matches_finite_differences() {
+        let lg = Arc::new(sbm(60, 3, 6.0, 0.9, 6, 0.3, 3));
+        let mut sampler = FullSampler::new(lg.clone());
+        let batches = vec![sampler.sample(0, 0)];
+        let per_lane = vec![Some(0usize)];
+        let shapes = fd_shapes();
+        let engine = Engine::new(&shapes, false, AggDispatch::default());
+        let params = ModelParams::init(&shapes, 7);
+        let machine = MachineProfile::abci();
+        let assign = vec![0u32; lg.n()];
+        let rows = vec![batches[0].n()];
+        let nt = batches[0].n_target;
+        let labels: Vec<u32> = batches[0].n_id[..nt]
+            .iter()
+            .map(|&v| lg.labels[v as usize])
+            .collect();
+        let split: Vec<u8> = batches[0].n_id[..nt]
+            .iter()
+            .map(|&v| lg.split[v as usize])
+            .collect();
+
+        let run = |p: &ModelParams, want_grads: bool| -> (f64, Vec<f32>) {
+            let mut comm = CommStats::new(1);
+            let mut ctx = MiniBatchCtx::new(
+                &lg, &assign, &batches, &per_lane, &machine, None, 5, 0, 0, &mut comm,
+            );
+            let mut tapes = engine.tapes(&rows, p);
+            let mut clock = StageClock::new(1);
+            engine
+                .forward(p, &mut ctx, &mut tapes, None, &mut clock)
+                .unwrap();
+            let spec = LossSpec {
+                score_rows: nt,
+                labels: &labels,
+                split: &split,
+                loss_w: &batches[0].node_weight,
+            };
+            let tot = engine.loss_all(&mut tapes, &[spec], &mut clock)[0];
+            let loss = tot.loss_sum / tot.wsum;
+            if !want_grads {
+                return (loss, Vec::new());
+            }
+            engine.scale_loss_grad(&mut tapes, &[(1.0 / tot.wsum) as f32]);
+            engine
+                .backward(p, &mut ctx, &mut tapes, None, false, &mut clock)
+                .unwrap();
+            (loss, tapes.grads[0].flatten())
+        };
+
+        let (_, analytic) = run(&params, true);
+        let flat = params.flatten();
+        // Probe w_self/w_neigh/b coordinates of each layer (layout: per
+        // layer w_self, w_neigh, b).
+        let l0 = 2 * 6 * 5 + 5;
+        let l1 = 2 * 5 * 5 + 5;
+        let probes = [
+            0usize,              // layer0 w_self
+            6 * 5 + 3,           // layer0 w_neigh
+            2 * 6 * 5 + 2,       // layer0 b
+            l0 + 1,              // layer1 w_self
+            l0 + 5 * 5 + 2,      // layer1 w_neigh
+            l0 + l1 + 4,         // layer2 w_self
+            l0 + l1 + 5 * 3 + 1, // layer2 w_neigh
+        ];
+        grad_check(&flat, &analytic, &probes, 1e-2, |p| {
+            let mut pp = ModelParams::init(&fd_shapes(), 7);
+            pp.unflatten_into(p);
+            run(&pp, false).0
+        });
+    }
+
+    #[test]
+    fn idle_lanes_are_noops() {
+        let lg = Arc::new(sbm(80, 3, 5.0, 0.9, 6, 0.3, 9));
+        let mut sampler = FullSampler::new(lg.clone());
+        let batches = vec![sampler.sample(0, 0)];
+        // Lane 1 idle.
+        let per_lane = vec![Some(0usize), None];
+        let shapes = fd_shapes();
+        let engine = Engine::new(&shapes, false, AggDispatch::default());
+        let params = ModelParams::init(&shapes, 3);
+        let machine = MachineProfile::abci();
+        let assign = vec![0u32; lg.n()];
+        let rows = vec![batches[0].n(), 0];
+        let mut comm = CommStats::new(2);
+        let mut ctx = MiniBatchCtx::new(
+            &lg, &assign, &batches, &per_lane, &machine, None, 1, 0, 0, &mut comm,
+        );
+        let mut tapes = engine.tapes(&rows, &params);
+        let mut clock = StageClock::new(2);
+        engine
+            .forward(&params, &mut ctx, &mut tapes, None, &mut clock)
+            .unwrap();
+        assert!(tapes.h[3][0].iter().any(|&v| v != 0.0));
+        assert!(tapes.h[3][1].is_empty());
+        // Idle lane produced zero grads.
+        engine
+            .backward(&params, &mut ctx, &mut tapes, None, false, &mut clock)
+            .unwrap();
+        assert!(tapes.grads[1].flatten().iter().all(|&g| g == 0.0));
+    }
+}

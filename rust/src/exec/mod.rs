@@ -1,0 +1,666 @@
+//! The unified layer-execution engine (DESIGN.md §9).
+//!
+//! One tape-based forward/backward for the 3-layer GraphSAGE stack —
+//! dense matmuls via `backend::linalg`, optional LayerNorm, ReLU,
+//! softmax/NLL loss head, masked label-propagation embedding — shared by
+//! the full-batch trainer (`coordinator::trainer`) and the mini-batch
+//! trainer (`coordinator::minibatch`). The two regimes differ only in
+//!
+//! * **how neighbor features arrive** — the [`GraphContext`] trait:
+//!   [`fullbatch::FullBatchCtx`] exchanges pre-aggregated partials and
+//!   raw post rows between partitions (`RemoteStrategy` plans, optional
+//!   `delay_comm` staleness), [`minibatch::MiniBatchCtx`] fetches remote
+//!   feature rows for a sampled batch over its induced CSR — both on
+//!   `comm::alltoallv` with optional `quant::fused` payloads and shared
+//!   `CommStats` / Eqn-2/5 accounting; and
+//! * **which §4 kernel executes each aggregate** — every aggregation
+//!   call routes through one [`dispatch::AggDispatch`] chooser.
+//!
+//! Per-lane compute is clocked into [`StageClock`] stages so the drivers
+//! can keep the paper's Eqn-2 bottleneck accounting
+//! (`Σ_stage max_lane t(stage, lane)`).
+
+pub mod dispatch;
+pub mod fullbatch;
+pub mod minibatch;
+
+pub use dispatch::{AggDispatch, AggKernel};
+pub use fullbatch::{FullBatchCtx, FullBatchState};
+pub use minibatch::MiniBatchCtx;
+
+use crate::backend::linalg as la;
+use crate::graph::generate::{SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
+use crate::model::labelprop::{self, LpSelection};
+use crate::model::{ModelGrads, ModelParams};
+use crate::runtime::ShapeConfig;
+use crate::util::timer::Category;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Split tag for rows that carry neither loss nor metrics (pads,
+/// label-embedded train nodes).
+pub const SPLIT_NONE: u8 = u8::MAX;
+
+/// How neighbor features arrive: the one abstraction separating the
+/// full-batch and mini-batch regimes. A context executes over `lanes()`
+/// parallel SPMD lanes (one per worker); per-lane compute seconds are
+/// accumulated into the `secs`/`quant_secs` slices so drivers can apply
+/// the Eqn-2 bottleneck rule.
+pub trait GraphContext {
+    /// Parallel lanes this context executes (== worker count).
+    fn lanes(&self) -> usize;
+
+    /// Fill each lane's input feature matrix (`rows × f_in`), performing
+    /// any remote feature-row fetch.
+    fn load_inputs(
+        &mut self,
+        x: &mut [Vec<f32>],
+        secs: &mut [f64],
+        quant_secs: &mut [f64],
+    ) -> Result<()>;
+
+    /// `z[lane] = Agg(h[lane])`: the (mean/weighted) neighbor aggregation
+    /// for `layer`, including any halo communication. `z` buffers are
+    /// `rows × fin` and fully overwritten.
+    #[allow(clippy::too_many_arguments)]
+    fn aggregate_fwd(
+        &mut self,
+        layer: usize,
+        fin: usize,
+        h: &[Vec<f32>],
+        z: &mut [Vec<f32>],
+        disp: &AggDispatch,
+        secs: &mut [f64],
+        quant_secs: &mut [f64],
+    ) -> Result<()>;
+
+    /// Backward of [`GraphContext::aggregate_fwd`]: accumulate
+    /// `d_h[lane] += ∂Agg/∂h · dz[lane]`, shipping halo cotangents back to
+    /// their producers where the forward shipped activations. `dz` may be
+    /// scratched in place.
+    #[allow(clippy::too_many_arguments)]
+    fn aggregate_bwd(
+        &mut self,
+        layer: usize,
+        fin: usize,
+        dz: &mut [Vec<f32>],
+        d_h: &mut [Vec<f32>],
+        disp: &AggDispatch,
+        secs: &mut [f64],
+    ) -> Result<()>;
+}
+
+/// Per-lane stage timings for one epoch/round: the raw material of the
+/// paper's Eqn-2 accounting (`Σ_stage max_lane`) and the Fig-12 breakdown.
+#[derive(Clone, Debug)]
+pub struct StageClock {
+    pub lanes: usize,
+    /// (category, per-lane seconds) per barrier stage, in execution order.
+    pub stages: Vec<(Category, Vec<f64>)>,
+    /// Per-stage, per-lane quantize/dequantize seconds (Fig-12 "Quant"),
+    /// pushed in lockstep with `stages`.
+    pub quant: Vec<Vec<f64>>,
+}
+
+impl StageClock {
+    pub fn new(lanes: usize) -> Self {
+        Self {
+            lanes,
+            stages: Vec::new(),
+            quant: Vec::new(),
+        }
+    }
+
+    /// Open a new stage; returns (stage seconds, quant seconds).
+    pub fn push(&mut self, cat: Category) -> (&mut Vec<f64>, &mut Vec<f64>) {
+        self.stages.push((cat, vec![0.0; self.lanes]));
+        self.quant.push(vec![0.0; self.lanes]);
+        let StageClock { stages, quant, .. } = self;
+        (
+            &mut stages.last_mut().unwrap().1,
+            quant.last_mut().unwrap(),
+        )
+    }
+
+    /// Eqn-2 view of the quant work: `Σ_stage max_lane` (Fig-12 "Quant").
+    pub fn quant_bottleneck(&self) -> f64 {
+        self.quant
+            .iter()
+            .map(|q| q.iter().fold(0.0f64, |a, &b| a.max(b)))
+            .sum()
+    }
+
+    /// Per-lane quant total across all stages.
+    pub fn quant_lane_totals(&self) -> Vec<f64> {
+        let mut out = vec![0f64; self.lanes];
+        for q in &self.quant {
+            for (o, &t) in out.iter_mut().zip(q.iter()) {
+                *o += t;
+            }
+        }
+        out
+    }
+
+    /// Eqn-2 bottleneck compute and the implied sync waste:
+    /// `(Σ_stage max_lane, Σ_stage Σ_lane (max − t))`.
+    pub fn bottleneck(&self) -> (f64, f64) {
+        let mut compute = 0f64;
+        let mut sync = 0f64;
+        for (_, st) in &self.stages {
+            let mx = st.iter().fold(0.0f64, |a, &b| a.max(b));
+            compute += mx;
+            for &t in st {
+                sync += mx - t;
+            }
+        }
+        (compute, sync)
+    }
+
+    /// Per-lane total across all stages (the mini-batch round view).
+    pub fn lane_totals(&self) -> Vec<f64> {
+        let mut out = vec![0f64; self.lanes];
+        for (_, st) in &self.stages {
+            for (o, &t) in out.iter_mut().zip(st.iter()) {
+                *o += t;
+            }
+        }
+        out
+    }
+
+    /// Per-stage maxima summed per category (Fig-12 attribution).
+    pub fn category_maxes(&self) -> Vec<(Category, f64)> {
+        self.stages
+            .iter()
+            .map(|(c, st)| (*c, st.iter().fold(0.0f64, |a, &b| a.max(b))))
+            .collect()
+    }
+}
+
+/// The saved forward state ("tape") of one engine pass: activations,
+/// normalized activations, aggregated neighbor tensors, and the running
+/// cotangent — everything the exact backward replays.
+pub struct Tapes {
+    pub lanes: usize,
+    /// Rows per lane (padded `n_pad` in full-batch, batch size — possibly
+    /// 0 for an idle worker — in mini-batch rounds).
+    pub rows: Vec<usize>,
+    /// `h[l][lane]`: activations entering layer `l`; `h[3]` = logits.
+    pub h: Vec<Vec<Vec<f32>>>,
+    /// LayerNorm outputs per layer (empty when the engine runs without LN).
+    pub h_tilde: Vec<Vec<Vec<f32>>>,
+    /// Saved aggregation outputs per layer (backward reuses them for the
+    /// `w_neigh` gradient instead of re-aggregating).
+    pub z: Vec<Vec<Vec<f32>>>,
+    /// Running cotangent buffers (`rows × maxf`).
+    pub d_cur: Vec<Vec<f32>>,
+    pub d_next: Vec<Vec<f32>>,
+    pub dz: Vec<Vec<f32>>,
+    /// Pre-activation cotangent scratch (shared across lanes).
+    dpre: Vec<f32>,
+    /// Per-lane parameter gradients.
+    pub grads: Vec<ModelGrads>,
+}
+
+impl Tapes {
+    pub fn new(
+        dims: &[(usize, usize, bool); 3],
+        rows: &[usize],
+        layernorm: bool,
+        params: &ModelParams,
+    ) -> Self {
+        let lanes = rows.len();
+        let widths = [dims[0].0, dims[1].0, dims[2].0, dims[2].1];
+        let maxf = widths.iter().copied().max().unwrap_or(1);
+        let max_rows = rows.iter().copied().max().unwrap_or(0);
+        let h = (0..4)
+            .map(|l| rows.iter().map(|&m| vec![0f32; m * widths[l]]).collect())
+            .collect();
+        let h_tilde = (0..3)
+            .map(|l| {
+                rows.iter()
+                    .map(|&m| {
+                        if layernorm {
+                            vec![0f32; m * widths[l]]
+                        } else {
+                            Vec::new()
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let z = (0..3)
+            .map(|l| rows.iter().map(|&m| vec![0f32; m * widths[l]]).collect())
+            .collect();
+        let scratch = || rows.iter().map(|&m| vec![0f32; m * maxf]).collect::<Vec<_>>();
+        Self {
+            lanes,
+            rows: rows.to_vec(),
+            h,
+            h_tilde,
+            z,
+            d_cur: scratch(),
+            d_next: scratch(),
+            dz: scratch(),
+            dpre: vec![0f32; max_rows * maxf],
+            grads: (0..lanes).map(|_| ModelGrads::zeros(params)).collect(),
+        }
+    }
+
+    /// Zero the per-lane gradient accumulators (start of an epoch/round).
+    pub fn clear_grads(&mut self) {
+        for g in &mut self.grads {
+            g.clear();
+        }
+    }
+}
+
+/// Label-propagation inputs: the per-lane embedding selection and label
+/// arrays (the selection policy — which nodes, which fraction — stays
+/// with the driver; the engine applies the embedding and its gradient).
+pub struct LpInputs<'a> {
+    pub sel: &'a [LpSelection],
+    pub labels: Vec<&'a [u32]>,
+}
+
+/// Per-lane loss-head specification.
+pub struct LossSpec<'a> {
+    /// Leading rows of the lane that are scored (all padded rows in
+    /// full-batch — pads carry `SPLIT_NONE` — `n_target` in mini-batch).
+    pub score_rows: usize,
+    pub labels: &'a [u32],
+    /// `SPLIT_TRAIN`/`SPLIT_VAL`/`SPLIT_TEST` or [`SPLIT_NONE`] per row.
+    pub split: &'a [u8],
+    /// Train loss/gradient weight per row (loss mask, SAINT coverage
+    /// weight, …). Only read where `split == SPLIT_TRAIN`.
+    pub loss_w: &'a [f32],
+}
+
+/// Loss and metric sums for one lane (or accumulated across lanes).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LossTotals {
+    pub loss_sum: f64,
+    /// Total train loss weight (the mean-loss normalizer).
+    pub wsum: f64,
+    pub train_correct: f64,
+    pub train_cnt: f64,
+    pub val_correct: f64,
+    pub val_cnt: f64,
+    pub test_correct: f64,
+    pub test_cnt: f64,
+}
+
+impl LossTotals {
+    pub fn accumulate(&mut self, o: &LossTotals) {
+        self.loss_sum += o.loss_sum;
+        self.wsum += o.wsum;
+        self.train_correct += o.train_correct;
+        self.train_cnt += o.train_cnt;
+        self.val_correct += o.val_correct;
+        self.val_cnt += o.val_cnt;
+        self.test_correct += o.test_correct;
+        self.test_cnt += o.test_cnt;
+    }
+}
+
+/// The tape-based 3-layer SAGE executor.
+pub struct Engine {
+    pub dims: [(usize, usize, bool); 3],
+    /// Row-wise LayerNorm before every layer (the paper's full-batch
+    /// architecture; the mini-batch regime historically omits it).
+    pub layernorm: bool,
+    pub dispatch: AggDispatch,
+}
+
+impl Engine {
+    pub fn new(shapes: &ShapeConfig, layernorm: bool, dispatch: AggDispatch) -> Self {
+        Self {
+            dims: shapes.layer_dims(),
+            layernorm,
+            dispatch,
+        }
+    }
+
+    /// Allocate tapes matching this engine's widths.
+    pub fn tapes(&self, rows: &[usize], params: &ModelParams) -> Tapes {
+        Tapes::new(&self.dims, rows, self.layernorm, params)
+    }
+
+    /// Forward pass: inputs → logits, recording the tape.
+    pub fn forward(
+        &self,
+        params: &ModelParams,
+        ctx: &mut dyn GraphContext,
+        tapes: &mut Tapes,
+        lp: Option<&LpInputs>,
+        clock: &mut StageClock,
+    ) -> Result<()> {
+        let lanes = tapes.lanes;
+        anyhow::ensure!(ctx.lanes() == lanes, "context/tape lane mismatch");
+        {
+            let (secs, quant) = clock.push(Category::Aggr);
+            ctx.load_inputs(&mut tapes.h[0], secs, quant)?;
+        }
+        if let Some(lp) = lp {
+            let f_in = self.dims[0].0;
+            for w in 0..lanes {
+                labelprop::embed_into(
+                    &mut tapes.h[0][w],
+                    f_in,
+                    &lp.sel[w],
+                    lp.labels[w],
+                    &params.w_embed,
+                );
+            }
+        }
+        for l in 0..3 {
+            let (fin, fout, relu) = self.dims[l];
+            if self.layernorm {
+                let (secs, _) = clock.push(Category::Aggr);
+                for w in 0..lanes {
+                    let t = Instant::now();
+                    la::layernorm(&tapes.h[l][w], tapes.rows[w], fin, &mut tapes.h_tilde[l][w]);
+                    secs[w] += t.elapsed().as_secs_f64();
+                }
+            }
+            {
+                let (secs, quant) = clock.push(Category::Aggr);
+                let src = if self.layernorm {
+                    &tapes.h_tilde[l]
+                } else {
+                    &tapes.h[l]
+                };
+                ctx.aggregate_fwd(l, fin, src, &mut tapes.z[l], &self.dispatch, secs, quant)?;
+            }
+            {
+                let (secs, _) = clock.push(Category::Aggr);
+                let (h_in, h_out) = tapes.h.split_at_mut(l + 1);
+                let src = if self.layernorm {
+                    &tapes.h_tilde[l]
+                } else {
+                    &h_in[l]
+                };
+                for w in 0..lanes {
+                    let m = tapes.rows[w];
+                    let t = Instant::now();
+                    let out = &mut h_out[0][w];
+                    la::matmul(&src[w], &params.layers[l].w_self, m, fin, fout, out);
+                    la::matmul_acc(&tapes.z[l][w], &params.layers[l].w_neigh, m, fin, fout, out);
+                    la::add_bias(out, m, &params.layers[l].b);
+                    if relu {
+                        la::relu(out);
+                    }
+                    secs[w] += t.elapsed().as_secs_f64();
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Softmax/NLL loss head over every lane's logits. Writes the
+    /// *unscaled* loss gradient into `tapes.d_cur` (gradient of the sum
+    /// loss, each row weighted by its `loss_w`); drivers normalize with
+    /// [`Engine::scale_loss_grad`] after combining lane totals.
+    pub fn loss_all(
+        &self,
+        tapes: &mut Tapes,
+        specs: &[LossSpec],
+        clock: &mut StageClock,
+    ) -> Vec<LossTotals> {
+        let c = self.dims[2].1;
+        let lanes = tapes.lanes;
+        assert_eq!(specs.len(), lanes);
+        let mut out = Vec::with_capacity(lanes);
+        let (secs, _) = clock.push(Category::Other);
+        for w in 0..lanes {
+            let t = Instant::now();
+            let m = tapes.rows[w];
+            let spec = &specs[w];
+            debug_assert!(spec.score_rows <= m);
+            let logits = &tapes.h[3][w];
+            let d = &mut tapes.d_cur[w][..m * c];
+            d.iter_mut().for_each(|x| *x = 0.0);
+            let mut tot = LossTotals::default();
+            for i in 0..spec.score_rows {
+                let row = &logits[i * c..(i + 1) * c];
+                let label = spec.labels[i] as usize;
+                let mut best = 0usize;
+                for (j, &v) in row.iter().enumerate() {
+                    if v > row[best] {
+                        best = j;
+                    }
+                }
+                let correct = if best == label { 1.0 } else { 0.0 };
+                match spec.split[i] {
+                    SPLIT_TRAIN => {
+                        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                        let sum_exp: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+                        let log_z = mx + sum_exp.ln();
+                        let wt = spec.loss_w[i];
+                        tot.loss_sum += wt as f64 * (log_z - row[label]) as f64;
+                        tot.wsum += wt as f64;
+                        tot.train_cnt += 1.0;
+                        tot.train_correct += correct;
+                        for j in 0..c {
+                            let sm = (row[j] - log_z).exp();
+                            let y = if j == label { 1.0 } else { 0.0 };
+                            d[i * c + j] = wt * (sm - y);
+                        }
+                    }
+                    SPLIT_VAL => {
+                        tot.val_cnt += 1.0;
+                        tot.val_correct += correct;
+                    }
+                    SPLIT_TEST => {
+                        tot.test_cnt += 1.0;
+                        tot.test_correct += correct;
+                    }
+                    _ => {}
+                }
+            }
+            out.push(tot);
+            secs[w] += t.elapsed().as_secs_f64();
+        }
+        out
+    }
+
+    /// Scale each lane's loss gradient (e.g. by `1 / global mask sum` in
+    /// full-batch, `1 / lane wsum` in mini-batch).
+    pub fn scale_loss_grad(&self, tapes: &mut Tapes, scales: &[f32]) {
+        let c = self.dims[2].1;
+        for w in 0..tapes.lanes {
+            let s = scales[w];
+            for v in &mut tapes.d_cur[w][..tapes.rows[w] * c] {
+                *v *= s;
+            }
+        }
+    }
+
+    /// Exact backward pass: consumes `tapes.d_cur` (the loss gradient)
+    /// and accumulates parameter gradients into `tapes.grads`.
+    ///
+    /// `input_grad` controls whether the cotangent is propagated all the
+    /// way to the input features of layer 0 (left in `tapes.d_cur`). The
+    /// full-batch driver always passes `true` — its layer-0 reverse halo
+    /// exchange is part of the regime's communication contract — while
+    /// the mini-batch driver passes `false` to skip the unused layer-0
+    /// input cotangent (it has no backward communication). Label-prop
+    /// forces propagation regardless (the embedding gradient reads it).
+    #[allow(clippy::too_many_arguments)]
+    pub fn backward(
+        &self,
+        params: &ModelParams,
+        ctx: &mut dyn GraphContext,
+        tapes: &mut Tapes,
+        lp: Option<&LpInputs>,
+        input_grad: bool,
+        clock: &mut StageClock,
+    ) -> Result<()> {
+        let lanes = tapes.lanes;
+        let need_input = input_grad || lp.is_some();
+        for l in (0..3).rev() {
+            let (fin, fout, relu) = self.dims[l];
+            let propagate = l > 0 || need_input;
+            {
+                let (secs, _) = clock.push(Category::Aggr);
+                for w in 0..lanes {
+                    let m = tapes.rows[w];
+                    let t = Instant::now();
+                    {
+                        let dpre = &mut tapes.dpre[..m * fout];
+                        if relu {
+                            la::relu_bwd(&tapes.d_cur[w][..m * fout], &tapes.h[l + 1][w], dpre);
+                        } else {
+                            dpre.copy_from_slice(&tapes.d_cur[w][..m * fout]);
+                        }
+                    }
+                    let dpre = &tapes.dpre[..m * fout];
+                    let src = if self.layernorm {
+                        &tapes.h_tilde[l][w]
+                    } else {
+                        &tapes.h[l][w]
+                    };
+                    let g = &mut tapes.grads[w].layers[l];
+                    la::matmul_tn_acc(src, dpre, m, fin, fout, &mut g.w_self);
+                    la::matmul_tn_acc(&tapes.z[l][w], dpre, m, fin, fout, &mut g.w_neigh);
+                    la::col_sum_acc(dpre, m, fout, &mut g.b);
+                    if propagate {
+                        let dt = &mut tapes.d_next[w][..m * fin];
+                        dt.iter_mut().for_each(|x| *x = 0.0);
+                        la::matmul_nt_acc(dpre, &params.layers[l].w_self, m, fout, fin, dt);
+                        let dzv = &mut tapes.dz[w][..m * fin];
+                        dzv.iter_mut().for_each(|x| *x = 0.0);
+                        la::matmul_nt_acc(dpre, &params.layers[l].w_neigh, m, fout, fin, dzv);
+                    }
+                    secs[w] += t.elapsed().as_secs_f64();
+                }
+            }
+            if !propagate {
+                break;
+            }
+            {
+                let (secs, _) = clock.push(Category::Aggr);
+                ctx.aggregate_bwd(
+                    l,
+                    fin,
+                    &mut tapes.dz,
+                    &mut tapes.d_next,
+                    &self.dispatch,
+                    secs,
+                )?;
+            }
+            {
+                let (secs, _) = clock.push(Category::Aggr);
+                for w in 0..lanes {
+                    let m = tapes.rows[w];
+                    let t = Instant::now();
+                    if self.layernorm {
+                        // d_cur ← LN'(h) · d_tilde
+                        let h_in = &tapes.h[l][w];
+                        let dn = &tapes.d_next[w][..m * fin];
+                        la::layernorm_bwd(h_in, dn, m, fin, &mut tapes.d_cur[w][..m * fin]);
+                    } else {
+                        std::mem::swap(&mut tapes.d_cur[w], &mut tapes.d_next[w]);
+                    }
+                    secs[w] += t.elapsed().as_secs_f64();
+                }
+            }
+        }
+        if let Some(lp) = lp {
+            let f_in = self.dims[0].0;
+            for w in 0..lanes {
+                let m = tapes.rows[w];
+                labelprop::grad_embed(
+                    &mut tapes.grads[w].w_embed,
+                    f_in,
+                    &lp.sel[w],
+                    lp.labels[w],
+                    &tapes.d_cur[w][..m * f_in],
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::test_config;
+
+    #[test]
+    fn loss_head_known_values() {
+        let cfg = test_config();
+        let engine = Engine::new(&cfg, true, AggDispatch::default());
+        let params = ModelParams::init(&cfg, 1);
+        let n = 16usize;
+        let c = cfg.classes;
+        let mut tapes = engine.tapes(&[n], &params);
+        let mut labels = vec![0u32; n];
+        let mut split = vec![SPLIT_NONE; n];
+        let loss_w = vec![1.0f32; n];
+        for v in 0..8 {
+            labels[v] = (v % c) as u32;
+            tapes.h[3][0][v * c + v % c] = 10.0;
+            split[v] = SPLIT_TRAIN;
+        }
+        split[9] = SPLIT_VAL;
+        split[10] = SPLIT_TEST;
+        let mut clock = StageClock::new(1);
+        let spec = LossSpec {
+            score_rows: n,
+            labels: &labels,
+            split: &split,
+            loss_w: &loss_w,
+        };
+        let tot = engine.loss_all(&mut tapes, &[spec], &mut clock)[0];
+        assert_eq!(tot.train_cnt, 8.0);
+        assert_eq!(tot.train_correct, 8.0);
+        assert_eq!(tot.wsum, 8.0);
+        assert!(tot.loss_sum < 0.01);
+        // Uniform-zero logit rows: label 0 is the argmax by first-wins.
+        assert_eq!(tot.val_cnt, 1.0);
+        assert_eq!(tot.test_cnt, 1.0);
+        // Non-train rows get no gradient.
+        let d = &tapes.d_cur[0];
+        assert!(d[9 * c..].iter().all(|&x| x == 0.0));
+        assert!(d[..8 * c].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn stage_clock_bottleneck_math() {
+        let mut clock = StageClock::new(2);
+        {
+            let (s, _) = clock.push(Category::Aggr);
+            s[0] = 1.0;
+            s[1] = 3.0;
+        }
+        {
+            let (s, _) = clock.push(Category::Other);
+            s[0] = 2.0;
+            s[1] = 1.0;
+        }
+        let (compute, sync) = clock.bottleneck();
+        assert!((compute - 5.0).abs() < 1e-12);
+        assert!((sync - 3.0).abs() < 1e-12);
+        assert_eq!(clock.lane_totals(), vec![3.0, 4.0]);
+        let cats = clock.category_maxes();
+        assert_eq!(cats.len(), 2);
+        assert_eq!(cats[0].0, Category::Aggr);
+        assert!((cats[0].1 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tapes_shapes() {
+        let cfg = test_config();
+        let params = ModelParams::init(&cfg, 2);
+        let dims = cfg.layer_dims();
+        let tapes = Tapes::new(&dims, &[10, 0, 7], false, &params);
+        assert_eq!(tapes.lanes, 3);
+        assert_eq!(tapes.h[0][0].len(), 10 * cfg.f_in);
+        assert_eq!(tapes.h[3][2].len(), 7 * cfg.classes);
+        assert!(tapes.h[1][1].is_empty());
+        assert!(tapes.h_tilde[0][0].is_empty(), "no LN ⇒ no h_tilde storage");
+        let t2 = Tapes::new(&dims, &[4], true, &params);
+        assert_eq!(t2.h_tilde[2][0].len(), 4 * cfg.hidden);
+    }
+}

@@ -1,7 +1,6 @@
 //! Experiment support: table printers and the shared run helpers used by
 //! the bench harnesses (one per paper table/figure) and examples.
 
-use crate::backend::native::NativeBackend;
 use crate::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
 use crate::coordinator::planner::prepare;
 use crate::coordinator::trainer::{EpochStats, TrainConfig, Trainer};
@@ -87,10 +86,9 @@ pub fn train_native(
         tc.epochs = e;
     }
     let (ctxs, mut cfg, _) = prepare(&lg, k, tc.strategy, None, tc.seed)?;
-    cfg.hidden = spec.hidden;
     // `prepare` fit used hidden=64 default; refit classes/hidden widths.
-    let backend = Box::new(NativeBackend::new(cfg));
-    let mut tr = Trainer::new(ctxs, backend, tc);
+    cfg.hidden = spec.hidden;
+    let mut tr = Trainer::new(ctxs, cfg, tc);
     let stats = tr.run(false)?;
     Ok((stats, tr))
 }

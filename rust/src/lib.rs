@@ -21,6 +21,7 @@ pub mod backend;
 pub mod comm;
 pub mod coordinator;
 pub mod datasets;
+pub mod exec;
 pub mod exp;
 pub mod graph;
 pub mod hier;

@@ -12,10 +12,8 @@
 //!   datasets    list the Table-2-style catalog
 
 use anyhow::Result;
-use supergcn::backend::native::NativeBackend;
-use supergcn::backend::xla::XlaBackend;
-use supergcn::backend::Backend;
 use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
+use supergcn::exec::{AggDispatch, AggKernel};
 use supergcn::coordinator::planner::prepare;
 use supergcn::coordinator::trainer::{TrainConfig, Trainer};
 use supergcn::graph::generate::LabelledGraph;
@@ -99,6 +97,17 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt("strategy", "hybrid", "raw | pre | post | hybrid")
         .opt("machine", "abci", "abci | fugaku network model")
         .opt("delay-comm", "1", "halo exchange every N epochs (DistGNN cd-N)")
+        .opt(
+            "agg-kernel",
+            "auto",
+            "auto | vanilla | sorted | blocked | parallel | spmm (§4 dispatch)",
+        )
+        .opt(
+            "agg-threshold",
+            "4096",
+            "contribution/nnz count below which parallel aggregation falls back to serial",
+        )
+        .opt("agg-threads", "1", "threads for the parallel aggregation kernels")
         .opt("seed", "42", "random seed")
         .opt(
             "sampler",
@@ -119,6 +128,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let lg = spec.build();
     println!("dataset {} ({}): {}", spec.name, spec.paper_analog, stats(&lg.graph));
 
+    let agg = AggDispatch::default()
+        .with_kernel(AggKernel::parse(&a.get_str("agg-kernel"))?)
+        .with_threads(a.get_usize("agg-threads"))
+        .with_parallel_min_work(a.get_usize("agg-threshold"));
     let tc = TrainConfig {
         epochs: if epochs == 0 { spec.epochs } else { epochs },
         lr: spec.lr,
@@ -129,6 +142,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         strategy: parse_strategy(&a.get_str("strategy"))?,
         delay_comm: a.get_usize("delay-comm"),
         machine: parse_machine(&a.get_str("machine"))?,
+        agg: agg.clone(),
         seed: a.get_u64("seed"),
     };
 
@@ -175,6 +189,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             opt: OptKind::Adam,
             quant: tc.quant,
             hidden: spec.hidden,
+            layernorm: false,
+            agg,
             machine: tc.machine.clone(),
             seed: tc.seed,
         };
@@ -182,14 +198,24 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     }
     let (ctxs, cfg) = match backend_name.as_str() {
         "xla" => {
-            let rt = supergcn::runtime::Runtime::load(
+            // Load + warm the AOT artifact set so a broken artifact dir
+            // fails fast; per-op artifact execution is cross-validated in
+            // tests/backend_parity.rs, while the training hot loop always
+            // runs on the unified exec::Engine (DESIGN.md §9).
+            let mut rt = supergcn::runtime::Runtime::load(
                 std::path::Path::new(&a.get_str("artifacts")),
                 &a.get_str("config"),
             )?;
             let cfg = rt.config.clone();
+            let warmed = rt.warmup()?;
+            println!(
+                "artifacts '{}' on {}: {} modules warmed (training runs on exec::Engine)",
+                cfg.name,
+                rt.platform(),
+                warmed.len()
+            );
             let (ctxs, cfg, _) = prepare(&lg, k, tc.strategy, Some(cfg), tc.seed)?;
-            let backend: Box<dyn Backend> = Box::new(XlaBackend::new(rt));
-            return run_training(ctxs, backend, tc, cfg.name);
+            (ctxs, cfg)
         }
         "native" => {
             let (ctxs, mut cfg, _) = prepare(&lg, k, tc.strategy, None, tc.seed)?;
@@ -198,28 +224,26 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         }
         other => anyhow::bail!("unknown backend '{other}'"),
     };
-    let backend: Box<dyn Backend> = Box::new(NativeBackend::new(cfg.clone()));
-    run_training(ctxs, backend, tc, cfg.name)
+    run_training(ctxs, cfg, tc)
 }
 
 fn run_training(
     ctxs: Vec<supergcn::coordinator::planner::WorkerCtx>,
-    backend: Box<dyn Backend>,
+    cfg: supergcn::runtime::ShapeConfig,
     tc: TrainConfig,
-    cfg_name: String,
 ) -> Result<()> {
     println!(
-        "training: {} workers, backend={}, config={}, quant={:?}, lp={}, strategy={}, machine={}",
+        "training: {} workers, config={}, agg-kernel={}, quant={:?}, lp={}, strategy={}, machine={}",
         ctxs.len(),
-        backend.name(),
-        cfg_name,
+        cfg.name,
+        tc.agg.kernel.name(),
         tc.quant.map(|b| b.name()).unwrap_or("fp32"),
         tc.label_prop,
         tc.strategy.name(),
         tc.machine.name,
     );
     let epochs = tc.epochs;
-    let mut tr = Trainer::new(ctxs, backend, tc);
+    let mut tr = Trainer::new(ctxs, cfg, tc);
     let stats = tr.run(true)?;
     report_summary(epochs, &stats, &tr.comm_stats);
     Ok(())

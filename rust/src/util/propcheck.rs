@@ -104,6 +104,33 @@ pub fn prop_close(a: &[f32], b: &[f32], atol: f32, rtol: f32) -> PropResult {
     Ok(())
 }
 
+/// Finite-difference gradient check (shared by the engine gradient tests
+/// in both training regimes): for each probed coordinate, central
+/// differences of `loss` around `params[idx]` must match
+/// `analytic[idx]`. Panics with the offending coordinate on mismatch.
+pub fn grad_check(
+    params: &[f32],
+    analytic: &[f32],
+    probes: &[usize],
+    eps: f32,
+    mut loss: impl FnMut(&[f32]) -> f64,
+) {
+    assert_eq!(params.len(), analytic.len());
+    for &idx in probes {
+        let mut p = params.to_vec();
+        p[idx] = params[idx] + eps;
+        let hi = loss(&p);
+        p[idx] = params[idx] - eps;
+        let lo = loss(&p);
+        let fd = (hi - lo) / (2.0 * eps as f64);
+        let an = analytic[idx] as f64;
+        assert!(
+            (fd - an).abs() < 1e-2 + 0.1 * an.abs().max(fd.abs()),
+            "param {idx}: finite-diff {fd} vs analytic {an}"
+        );
+    }
+}
+
 /// Run `cases` property evaluations with deterministic seeds. Panics with
 /// the case index + seed on first failure so the case can be replayed.
 pub fn propcheck(cases: usize, mut prop: impl FnMut(&mut Gen) -> PropResult) {
@@ -169,6 +196,25 @@ mod tests {
         assert!(prop_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-6], 1e-5, 0.0).is_ok());
         assert!(prop_close(&[1.0], &[1.1], 1e-3, 1e-3).is_err());
         assert!(prop_close(&[1.0], &[1.0, 2.0], 1.0, 1.0).is_err());
+    }
+
+    #[test]
+    fn grad_check_quadratic() {
+        // loss(p) = Σ p², analytic gradient 2p.
+        let params = vec![0.5f32, -1.0, 2.0];
+        let analytic: Vec<f32> = params.iter().map(|&p| 2.0 * p).collect();
+        grad_check(&params, &analytic, &[0, 1, 2], 1e-3, |p| {
+            p.iter().map(|&x| (x as f64) * (x as f64)).sum()
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "finite-diff")]
+    fn grad_check_catches_wrong_gradient() {
+        let params = vec![1.0f32];
+        grad_check(&params, &[5.0], &[0], 1e-3, |p| {
+            p.iter().map(|&x| (x as f64) * (x as f64)).sum()
+        });
     }
 
     #[test]

@@ -1,19 +1,25 @@
-//! Integration: the native engine and the AOT'd JAX/Pallas artifact engine
-//! must produce the same training run (same losses, same accuracies) on
-//! the same partitioned dataset — this is the proof that all three layers
-//! of the stack compose and agree.
+//! Integration: the padded `Backend` op engines (native and the AOT'd
+//! JAX/Pallas artifact engine) and the unified `exec::Engine` must agree
+//! on the same layer computation — this is the proof that all three
+//! layers of the stack compose and agree, and that the engine refactor
+//! preserved the op semantics.
 //!
-//! Requires `make artifacts` (the tests no-op politely otherwise).
+//! The engine-vs-native check always runs; the xla checks require
+//! `make artifacts` (they no-op politely otherwise).
 
 use std::path::{Path, PathBuf};
 use supergcn::backend::native::NativeBackend;
 use supergcn::backend::xla::XlaBackend;
 use supergcn::backend::Backend;
-use supergcn::coordinator::planner::{build_worker_ctxs, prepare};
-use supergcn::coordinator::trainer::{TrainConfig, Trainer};
+use supergcn::comm::CommStats;
+use supergcn::coordinator::planner::prepare;
+use supergcn::exec::{
+    AggDispatch, Engine, FullBatchCtx, FullBatchState, LossSpec, StageClock, SPLIT_NONE,
+};
 use supergcn::graph::generate::sbm;
 use supergcn::hier::volume::RemoteStrategy;
-use supergcn::model::optimizer::OptKind;
+use supergcn::model::ModelParams;
+use supergcn::perfmodel::MachineProfile;
 use supergcn::runtime::{Manifest, Runtime};
 
 fn artifacts_dir() -> PathBuf {
@@ -30,59 +36,129 @@ fn tiny_dataset() -> supergcn::graph::generate::LabelledGraph {
     sbm(240, 4, 5.0, 0.85, 16, 0.6, 77)
 }
 
+/// The unified engine's whole epoch math — LayerNorm → aggregate → SAGE
+/// update per layer, softmax/NLL loss, and the exact backward — must
+/// reproduce the padded `Backend` op chain. Single worker, so no halo
+/// traffic: empty recvs and zero `d_partials` make the op chain the
+/// complete computation.
 #[test]
-fn native_and_xla_training_runs_agree() {
-    if !tiny_available() {
-        eprintln!("skipping: run `make artifacts` first");
-        return;
-    }
+fn engine_matches_backend_ops_full_epoch() {
     let lg = tiny_dataset();
-    let manifest = Manifest::load(&artifacts_dir().join("manifest.json")).unwrap();
-    let cfg = manifest.config("tiny").unwrap().shapes.clone();
+    let (ctxs, cfg, _) = prepare(&lg, 1, RemoteStrategy::Hybrid, None, 5).unwrap();
+    let params = ModelParams::init(&cfg, 5);
+    let n = cfg.n_pad;
+    let dims = cfg.layer_dims();
+    let wc = &ctxs[0];
+    let mask = &wc.train_mask_f;
 
-    let (ctxs, cfg, _plans) = prepare(&lg, 2, RemoteStrategy::Hybrid, Some(cfg), 5).unwrap();
-
-    let tc = TrainConfig {
-        epochs: 4,
-        lr: 0.01,
-        opt: OptKind::Adam,
-        ..Default::default()
-    };
-
-    let native = Box::new(NativeBackend::new(cfg.clone()));
-    let mut tr_n = Trainer::new(ctxs.clone(), native, tc.clone());
-    let stats_n = tr_n.run(false).unwrap();
-
-    let rt = Runtime::load(&artifacts_dir(), "tiny").unwrap();
-    let xla = Box::new(XlaBackend::new(rt));
-    let mut tr_x = Trainer::new(ctxs, xla, tc);
-    let stats_x = tr_x.run(false).unwrap();
-
-    for (a, b) in stats_n.iter().zip(stats_x.iter()) {
-        assert!(
-            (a.train_loss - b.train_loss).abs() < 5e-3,
-            "epoch {}: native loss {} vs xla loss {}",
-            a.epoch,
-            a.train_loss,
-            b.train_loss
-        );
-        assert!(
-            (a.train_acc - b.train_acc).abs() < 0.05,
-            "epoch {}: native acc {} vs xla acc {}",
-            a.epoch,
-            a.train_acc,
-            b.train_acc
-        );
+    // ---- backend op chain (the pre-refactor trainer's per-worker math).
+    let mut native = NativeBackend::new(cfg.clone());
+    let mut h = wc.features.clone();
+    let mut h_norms = Vec::new();
+    let mut outs = Vec::new();
+    for (l, &(fin, fout, _)) in dims.iter().enumerate() {
+        let mut h_norm = vec![0f32; n * fin];
+        let mut partials = vec![0f32; cfg.p_pre * fin];
+        native
+            .pre_fwd(fin, &h, &wc.pre, &mut h_norm, &mut partials)
+            .unwrap();
+        let recv_pre = vec![0f32; cfg.r_pre * fin];
+        let recv_post = vec![0f32; cfg.r_post * fin];
+        let mut out = vec![0f32; n * fout];
+        native
+            .layer_fwd(l, &h_norm, &recv_pre, &recv_post, &params.layers[l], &wc.spec, &mut out)
+            .unwrap();
+        h_norms.push(h_norm);
+        outs.push(out.clone());
+        h = out;
     }
-    // Final parameters agree closely (same optimizer trajectory).
-    let pn = tr_n.params.flatten();
-    let px = tr_x.params.flatten();
-    let max_diff = pn
+    let logits = h;
+    let lo = native.loss_head(&logits, &wc.labels_i32, mask).unwrap();
+    let inv = 1.0 / lo.mask_sum;
+    let mut grads_b = supergcn::model::ModelGrads::zeros(&params);
+    let mut d_cur: Vec<f32> = lo.d_logits.iter().map(|&d| d * inv).collect();
+    for l in (0..3).rev() {
+        let (fin, fout, _) = dims[l];
+        let recv_pre = vec![0f32; cfg.r_pre * fin];
+        let recv_post = vec![0f32; cfg.r_post * fin];
+        let mut d_h_norm = vec![0f32; n * fin];
+        let mut d_recv_pre = vec![0f32; cfg.r_pre * fin];
+        let mut d_recv_post = vec![0f32; cfg.r_post * fin];
+        native
+            .layer_bwd(
+                l,
+                &h_norms[l],
+                &recv_pre,
+                &recv_post,
+                &params.layers[l],
+                &wc.spec,
+                &outs[l],
+                &d_cur[..n * fout],
+                &mut d_h_norm,
+                &mut d_recv_pre,
+                &mut d_recv_post,
+                &mut grads_b.layers[l],
+            )
+            .unwrap();
+        let h_in = if l == 0 { &wc.features } else { &outs[l - 1] };
+        let d_partials = vec![0f32; cfg.p_pre * fin];
+        let mut d_h = vec![0f32; n * fin];
+        native
+            .pre_bwd(fin, h_in, &wc.pre, &d_h_norm, &d_partials, &mut d_h)
+            .unwrap();
+        d_cur = d_h;
+    }
+
+    // ---- unified engine, same worker context.
+    let engine = Engine::new(&cfg, true, AggDispatch::default());
+    let mut st = FullBatchState::new(&cfg, 1);
+    let mut comm = CommStats::new(1);
+    let machine = MachineProfile::abci();
+    let mut ctx = FullBatchCtx::new(
+        &ctxs, &cfg, &mut st, &machine, None, 5, 0, true, &mut comm,
+    );
+    let mut tapes = engine.tapes(&[n], &params);
+    let mut clock = StageClock::new(1);
+    engine
+        .forward(&params, &mut ctx, &mut tapes, None, &mut clock)
+        .unwrap();
+    assert_close(&tapes.h_tilde[0][0], &h_norms[0], 1e-6, "LayerNorm output");
+    assert_close(&tapes.h[3][0], &logits, 1e-5, "logits");
+
+    let tags: Vec<u8> = mask
         .iter()
-        .zip(px.iter())
-        .map(|(a, b)| (a - b).abs())
-        .fold(0f32, f32::max);
-    assert!(max_diff < 2e-2, "parameter divergence {max_diff}");
+        .map(|&m| if m > 0.0 { supergcn::graph::generate::SPLIT_TRAIN } else { SPLIT_NONE })
+        .collect();
+    let spec = LossSpec {
+        score_rows: n,
+        labels: &wc.labels,
+        split: &tags,
+        loss_w: mask,
+    };
+    let tot = engine.loss_all(&mut tapes, &[spec], &mut clock)[0];
+    assert!(
+        (tot.loss_sum - lo.loss_sum as f64).abs() < 1e-3 * (1.0 + lo.loss_sum.abs() as f64),
+        "loss {} vs backend {}",
+        tot.loss_sum,
+        lo.loss_sum
+    );
+    assert_eq!(tot.wsum as f32, lo.mask_sum, "mask sum");
+    let c = cfg.classes;
+    assert_close(&tapes.d_cur[0][..n * c], &lo.d_logits, 1e-5, "d_logits");
+
+    engine.scale_loss_grad(&mut tapes, &[inv]);
+    engine
+        .backward(&params, &mut ctx, &mut tapes, None, true, &mut clock)
+        .unwrap();
+    assert_close(
+        &tapes.grads[0].flatten(),
+        &grads_b.flatten(),
+        1e-5,
+        "parameter gradients",
+    );
+    assert_close(&tapes.d_cur[0][..n * cfg.f_in], &d_cur, 1e-5, "input cotangent");
+    // No halo traffic for a single worker.
+    assert_eq!(comm.total_data_bytes(), 0.0);
 }
 
 #[test]
@@ -127,6 +203,50 @@ fn xla_backend_single_forward_matches_native() {
     xla.layer_fwd(0, &hn_n, &recv_pre, &recv_post, &params, &ctx.spec, &mut out_x)
         .unwrap();
     assert_close(&out_n, &out_x, 2e-3, "layer output");
+
+    // Backward of the same layer: cotangents and parameter grads.
+    let mut rng = supergcn::util::rng::Rng::new(11);
+    let d_out: Vec<f32> = (0..n * cfg.hidden).map(|_| rng.f32() - 0.5).collect();
+    let mut run_bwd = |be: &mut dyn Backend| {
+        let mut d_hn = vec![0f32; n * f];
+        let mut d_rp = vec![0f32; cfg.r_pre * f];
+        let mut d_ro = vec![0f32; cfg.r_post * f];
+        let mut grads = params.zeros_like();
+        be.layer_bwd(
+            0, &hn_n, &recv_pre, &recv_post, &params, &ctx.spec, &out_n, &d_out, &mut d_hn,
+            &mut d_rp, &mut d_ro, &mut grads,
+        )
+        .unwrap();
+        let d_partials = vec![0f32; cfg.p_pre * f];
+        let mut d_h = vec![0f32; n * f];
+        be.pre_bwd(f, &h, &ctx.pre, &d_hn, &d_partials, &mut d_h)
+            .unwrap();
+        (d_hn, d_h, grads)
+    };
+    let (dhn_n, dh_n, g_n) = run_bwd(&mut native);
+    let (dhn_x, dh_x, g_x) = run_bwd(&mut xla);
+    assert_close(&dhn_n, &dhn_x, 2e-3, "d_h_norm");
+    assert_close(&dh_n, &dh_x, 2e-3, "d_h (pre_bwd)");
+    assert_close(&g_n.w_self, &g_x.w_self, 2e-2, "dW_self");
+    assert_close(&g_n.w_neigh, &g_x.w_neigh, 2e-2, "dW_neigh");
+    assert_close(&g_n.b, &g_x.b, 2e-2, "db");
+
+    // Loss head on shared random logits.
+    let logits: Vec<f32> = (0..n * cfg.classes).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let lo_n = native
+        .loss_head(&logits, &ctx.labels_i32, &ctx.train_mask_f)
+        .unwrap();
+    let lo_x = xla
+        .loss_head(&logits, &ctx.labels_i32, &ctx.train_mask_f)
+        .unwrap();
+    assert!(
+        (lo_n.loss_sum - lo_x.loss_sum).abs() < 2e-2 * (1.0 + lo_n.loss_sum.abs()),
+        "loss_sum {} vs {}",
+        lo_n.loss_sum,
+        lo_x.loss_sum
+    );
+    assert_eq!(lo_n.mask_sum, lo_x.mask_sum, "mask_sum");
+    assert_close(&lo_n.d_logits, &lo_x.d_logits, 2e-3, "d_logits");
 }
 
 fn assert_close(a: &[f32], b: &[f32], tol: f32, what: &str) {

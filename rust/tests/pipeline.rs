@@ -3,7 +3,6 @@
 //! padded worker contexts → distributed training, across strategies,
 //! quantization settings and worker counts.
 
-use supergcn::backend::native::NativeBackend;
 use supergcn::coordinator::planner::prepare;
 use supergcn::coordinator::trainer::{TrainConfig, Trainer};
 use supergcn::graph::generate::sbm;
@@ -13,8 +12,7 @@ use supergcn::quant::Bits;
 fn run(k: usize, tc: TrainConfig) -> Vec<supergcn::coordinator::trainer::EpochStats> {
     let lg = sbm(600, 4, 8.0, 0.85, 16, 0.6, 123);
     let (ctxs, cfg, _) = prepare(&lg, k, tc.strategy, None, 17).unwrap();
-    let backend = Box::new(NativeBackend::new(cfg));
-    Trainer::new(ctxs, backend, tc).run(false).unwrap()
+    Trainer::new(ctxs, cfg, tc).run(false).unwrap()
 }
 
 #[test]

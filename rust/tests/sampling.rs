@@ -5,7 +5,6 @@
 //! quantized-fetch round-trip unbiasedness on sampled halo rows.
 
 use std::sync::Arc;
-use supergcn::backend::native::NativeBackend;
 use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
 use supergcn::coordinator::planner::{partition_for, prepare};
 use supergcn::coordinator::trainer::{TrainConfig, Trainer};
@@ -105,8 +104,7 @@ fn cluster_epoch_comm_below_full_batch_on_same_partition() {
         ..Default::default()
     };
     let (ctxs, cfg, _) = prepare(&lg, k, tc.strategy, None, seed).unwrap();
-    let backend = Box::new(NativeBackend::new(cfg));
-    let mut full = Trainer::new(ctxs, backend, tc);
+    let mut full = Trainer::new(ctxs, cfg, tc);
     let full_stats = full.run(false).unwrap();
     let full_epoch_bytes = full_stats[1].comm_data_bytes;
     assert!(full_epoch_bytes > 0.0);

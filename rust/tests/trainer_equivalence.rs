@@ -1,0 +1,172 @@
+//! Regime-equivalence acceptance tests for the unified execution engine
+//! (DESIGN.md §9):
+//!
+//! 1. **distributed == single-machine** — the full-batch trainer's exact
+//!    reverse halos make the k-worker gradient equal the 1-worker
+//!    gradient, so loss curves match to f32 round-off;
+//! 2. **full-sampler mini-batch == full-batch** — running the mini-batch
+//!    trainer with the degenerate `full` sampler and the engine's
+//!    LayerNorm architecture reproduces the full-batch trainer's
+//!    per-epoch losses on `arxiv-xs`;
+//! 3. **exact backward** — the shared finite-difference helper
+//!    (`util::propcheck::grad_check`) pins the engine's backward in the
+//!    full-batch regime (the mini-batch twin lives in
+//!    `exec::minibatch`'s unit tests).
+
+use std::sync::Arc;
+use supergcn::comm::CommStats;
+use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
+use supergcn::coordinator::planner::prepare;
+use supergcn::coordinator::trainer::{TrainConfig, Trainer};
+use supergcn::datasets;
+use supergcn::exec::{
+    AggDispatch, Engine, FullBatchCtx, FullBatchState, LossSpec, StageClock, SPLIT_NONE,
+};
+use supergcn::graph::generate::{sbm, SPLIT_TRAIN};
+use supergcn::hier::volume::RemoteStrategy;
+use supergcn::model::ModelParams;
+use supergcn::perfmodel::MachineProfile;
+use supergcn::sample::{SamplerConfig, SamplerKind};
+use supergcn::util::propcheck::grad_check;
+
+#[test]
+fn distributed_grad_matches_single_machine() {
+    let train = |k: usize| -> Vec<f32> {
+        let lg = sbm(350, 4, 8.0, 0.85, 16, 0.6, 13);
+        let tc = TrainConfig {
+            epochs: 8,
+            ..Default::default()
+        };
+        let (ctxs, cfg, _) = prepare(&lg, k, tc.strategy, None, 7).unwrap();
+        Trainer::new(ctxs, cfg, tc)
+            .run(false)
+            .unwrap()
+            .iter()
+            .map(|s| s.train_loss)
+            .collect()
+    };
+    let s1 = train(1);
+    let s4 = train(4);
+    for (e, (a, b)) in s1.iter().zip(s4.iter()).enumerate() {
+        assert!((a - b).abs() < 2e-3, "epoch {e}: k=1 {a} vs k=4 {b}");
+    }
+}
+
+#[test]
+fn full_sampler_minibatch_matches_full_batch() {
+    let spec = datasets::by_name("arxiv-xs").unwrap();
+    let lg = Arc::new(spec.build());
+    let epochs = 6;
+    let seed = 42;
+
+    // Full-batch trainer.
+    let tc = TrainConfig {
+        epochs,
+        lr: spec.lr,
+        seed,
+        ..Default::default()
+    };
+    let (ctxs, mut cfg, _) = prepare(&lg, 2, tc.strategy, None, seed).unwrap();
+    cfg.hidden = spec.hidden;
+    let mut full = Trainer::new(ctxs, cfg, tc);
+    let full_stats = full.run(false).unwrap();
+
+    // Mini-batch trainer, degenerate full sampler, engine LayerNorm on —
+    // the identical architecture through the other GraphContext.
+    let mc = MiniBatchConfig {
+        epochs,
+        lr: spec.lr,
+        hidden: spec.hidden,
+        layernorm: true,
+        seed,
+        ..Default::default()
+    };
+    let scfg = SamplerConfig {
+        seed,
+        ..Default::default()
+    };
+    let mut mb = MiniBatchTrainer::new(lg, 2, SamplerKind::Full, &scfg, mc).unwrap();
+    let mb_stats = mb.run(false).unwrap();
+
+    for (a, b) in full_stats.iter().zip(mb_stats.iter()) {
+        assert!(
+            (a.train_loss - b.train_loss).abs() < 3e-3,
+            "epoch {}: full-batch {} vs full-sampler {}",
+            a.epoch,
+            a.train_loss,
+            b.train_loss
+        );
+    }
+    // Same accuracy trajectory too (identical predictions up to round-off).
+    let la = full_stats.last().unwrap();
+    let lb = mb_stats.last().unwrap();
+    assert!((la.test_acc - lb.test_acc).abs() < 0.02, "{} vs {}", la.test_acc, lb.test_acc);
+}
+
+#[test]
+fn full_batch_engine_gradient_matches_finite_differences() {
+    let lg = sbm(120, 3, 5.0, 0.85, 8, 0.4, 21);
+    let (ctxs, cfg, _) = prepare(&lg, 1, RemoteStrategy::Hybrid, None, 3).unwrap();
+    let engine = Engine::new(&cfg, true, AggDispatch::default());
+    let machine = MachineProfile::abci();
+    let n = cfg.n_pad;
+    let wc = &ctxs[0];
+    let tags: Vec<u8> = (0..n)
+        .map(|i| {
+            if wc.train_mask_f[i] > 0.0 {
+                SPLIT_TRAIN
+            } else {
+                SPLIT_NONE
+            }
+        })
+        .collect();
+
+    let run = |p: &ModelParams, want_grads: bool| -> (f64, Vec<f32>) {
+        let mut st = FullBatchState::new(&cfg, 1);
+        let mut comm = CommStats::new(1);
+        let mut ctx = FullBatchCtx::new(
+            &ctxs, &cfg, &mut st, &machine, None, 3, 0, true, &mut comm,
+        );
+        let mut tapes = engine.tapes(&[n], p);
+        let mut clock = StageClock::new(1);
+        engine
+            .forward(p, &mut ctx, &mut tapes, None, &mut clock)
+            .unwrap();
+        let spec = LossSpec {
+            score_rows: n,
+            labels: &wc.labels,
+            split: &tags,
+            loss_w: &wc.train_mask_f,
+        };
+        let tot = engine.loss_all(&mut tapes, &[spec], &mut clock)[0];
+        let loss = tot.loss_sum / tot.wsum;
+        if !want_grads {
+            return (loss, Vec::new());
+        }
+        engine.scale_loss_grad(&mut tapes, &[(1.0 / tot.wsum) as f32]);
+        engine
+            .backward(p, &mut ctx, &mut tapes, None, true, &mut clock)
+            .unwrap();
+        (loss, tapes.grads[0].flatten())
+    };
+
+    let params = ModelParams::init(&cfg, 9);
+    let (_, analytic) = run(&params, true);
+    let flat = params.flatten();
+    let dims = cfg.layer_dims();
+    let layer_off =
+        |l: usize| -> usize { dims[..l].iter().map(|&(a, b, _)| 2 * a * b + b).sum() };
+    let probes = [
+        layer_off(0),                                  // layer0 w_self
+        layer_off(0) + dims[0].0 * dims[0].1 + 1,      // layer0 w_neigh
+        layer_off(0) + 2 * dims[0].0 * dims[0].1 + 1,  // layer0 b
+        layer_off(1) + 2,                              // layer1 w_self
+        layer_off(2) + 3,                              // layer2 w_self
+        layer_off(2) + dims[2].0 * dims[2].1 + 1,      // layer2 w_neigh
+    ];
+    grad_check(&flat, &analytic, &probes, 1e-2, |p| {
+        let mut pp = ModelParams::init(&cfg, 9);
+        pp.unflatten_into(p);
+        run(&pp, false).0
+    });
+}
