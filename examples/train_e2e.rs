@@ -13,6 +13,7 @@
 
 use std::path::Path;
 use supergcn::backend::native::NativeBackend;
+use supergcn::comm::transport::TransportKind;
 use supergcn::backend::xla::XlaBackend;
 use supergcn::backend::Backend;
 use supergcn::coordinator::planner::prepare;
@@ -44,6 +45,11 @@ fn main() -> anyhow::Result<()> {
         quant: Some(Bits::Int2),
         label_prop: true,
         strategy: RemoteStrategy::Hybrid,
+        // Run the SPMD ranks on one OS thread each (real multi-core wall
+        // clock; bit-exact with the sequential transport — DESIGN.md §10).
+        // CLI equivalent: `supergcn train --transport threaded`
+        // (`--rank-threads 0` = one thread per worker).
+        transport: TransportKind::Threaded,
         ..Default::default()
     };
     let (ctxs, cfg, _) = prepare(&lg, 4, tc.strategy, Some(shape_cfg), tc.seed)?;

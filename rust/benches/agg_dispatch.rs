@@ -28,12 +28,19 @@ fn bench_ms(reps: usize, mut f: impl FnMut()) -> f64 {
 }
 
 fn main() {
+    // Smoke mode (CI `bench-smoke` job): smaller problems, fewer reps —
+    // exercises every kernel path without the full sweep's runtime.
+    let smoke = std::env::var("SUPERGCN_BENCH_SMOKE").ok().as_deref() == Some("1")
+        || std::env::args().any(|a| a == "--smoke");
+    let scales: &[usize] = if smoke { &[8, 10] } else { &[8, 10, 12] };
+    let feats: &[usize] = if smoke { &[16, 64] } else { &[16, 64, 128] };
+    let reps = if smoke { 2 } else { 3 };
     let mut table = Table::new(
         "agg dispatch crossover: segment-sum vs SpMM (ms, lower is better)",
         &["scale", "nnz", "f", "seg-blocked", "seg-parallel", "spmm", "auto", "winner"],
     );
     let mut rng = Rng::new(42);
-    for scale in [8usize, 10, 12] {
+    for &scale in scales {
         let g = rmat(scale, 8.0, 0.57, 0.19, 0.19, false, 7);
         let n = g.n;
         // Sorted segment form (CSR is sorted by destination already).
@@ -46,7 +53,7 @@ fn main() {
                 seg.push(v as u32);
             }
         }
-        for f in [16usize, 64, 128] {
+        for &f in feats {
             let h: Vec<f32> = (0..n * f).map(|_| rng.f32() - 0.5).collect();
             let mut out = vec![0f32; n * f];
             let blocked = AggDispatch::default().with_kernel(AggKernel::Blocked);
@@ -56,19 +63,19 @@ fn main() {
             let spmm = AggDispatch::default().with_kernel(AggKernel::Spmm);
             let auto = AggDispatch::default().with_threads(4);
 
-            let t_blk = bench_ms(3, || {
+            let t_blk = bench_ms(reps, || {
                 out.iter_mut().for_each(|x| *x = 0.0);
                 blocked.segment_sum(&h, f, &gather, &seg, n, &mut out);
             });
-            let t_par = bench_ms(3, || {
+            let t_par = bench_ms(reps, || {
                 out.iter_mut().for_each(|x| *x = 0.0);
                 par.segment_sum(&h, f, &gather, &seg, n, &mut out);
             });
-            let t_spmm = bench_ms(3, || {
+            let t_spmm = bench_ms(reps, || {
                 out.iter_mut().for_each(|x| *x = 0.0);
                 spmm.spmm(&a, &h, f, &mut out);
             });
-            let t_auto = bench_ms(3, || {
+            let t_auto = bench_ms(reps, || {
                 out.iter_mut().for_each(|x| *x = 0.0);
                 auto.segment_sum(&h, f, &gather, &seg, n, &mut out);
             });

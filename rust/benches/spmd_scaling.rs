@@ -1,0 +1,188 @@
+//! SPMD transport scaling: wall-clock of the threaded rank-per-OS-thread
+//! runtime vs the sequential harness, as a function of rank-thread count
+//! (DESIGN.md §10), in both training regimes on `arxiv-xs`.
+//!
+//! The two transports are bit-exact (`tests/spmd_parity.rs`); this
+//! harness measures the only thing that changes — real epoch wall-clock
+//! — plus the (identical) communication volume.
+//!
+//! Modes:
+//! * default — rank counts {1,2,4,8}, 12 epochs each;
+//! * smoke (`SUPERGCN_BENCH_SMOKE=1` or `--smoke`) — {1,2,4}, 4 epochs:
+//!   the CI `bench-smoke` job's configuration.
+//!
+//! Set `SUPERGCN_BENCH_JSON=path` to also write the rows as JSON (CI
+//! uploads it as the `BENCH_ci.json` workflow artifact).
+
+use supergcn::comm::transport::TransportKind;
+use supergcn::coordinator::minibatch::MiniBatchConfig;
+use supergcn::coordinator::planner::prepare;
+use supergcn::coordinator::trainer::{EpochStats, TrainConfig, Trainer};
+use supergcn::datasets;
+use supergcn::exp::{train_minibatch, Table};
+use supergcn::sample::{SamplerConfig, SamplerKind};
+use supergcn::util::json::{to_pretty, Json};
+
+/// Epoch wall seconds, skipping epoch 0 (allocation/lazy-init warmup).
+fn steady_wall_secs(stats: &[EpochStats]) -> f64 {
+    let tail = &stats[1.min(stats.len().saturating_sub(1))..];
+    tail.iter().map(|s| s.measured_secs).sum()
+}
+
+struct Row {
+    regime: &'static str,
+    k: usize,
+    seq_secs: f64,
+    thr_secs: f64,
+    comm_data_bytes: f64,
+    comm_param_bytes: f64,
+}
+
+impl Row {
+    fn speedup(&self) -> f64 {
+        self.seq_secs / self.thr_secs.max(1e-12)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("SUPERGCN_BENCH_SMOKE").ok().as_deref() == Some("1")
+        || std::env::args().any(|a| a == "--smoke");
+    let spec = datasets::by_name("arxiv-xs")?;
+    let epochs = if smoke { 4 } else { 12 };
+    let ks: Vec<usize> = if smoke { vec![1, 2, 4] } else { vec![1, 2, 4, 8] };
+    println!(
+        "spmd scaling on {} ({} epochs/run, {} mode)",
+        spec.name,
+        epochs,
+        if smoke { "smoke" } else { "full" }
+    );
+
+    let mut rows: Vec<Row> = Vec::new();
+
+    // ---- full-batch regime ------------------------------------------
+    for &k in &ks {
+        let run = |transport: TransportKind| -> anyhow::Result<(f64, f64, f64)> {
+            let lg = spec.build();
+            let tc = TrainConfig {
+                epochs,
+                lr: spec.lr,
+                transport,
+                seed: 42,
+                ..Default::default()
+            };
+            let (ctxs, mut cfg, _) = prepare(&lg, k, tc.strategy, None, tc.seed)?;
+            cfg.hidden = spec.hidden;
+            let mut tr = Trainer::new(ctxs, cfg, tc);
+            let stats = tr.run(false)?;
+            Ok((
+                steady_wall_secs(&stats),
+                tr.comm_stats.total_data_bytes(),
+                tr.comm_stats.total_param_bytes(),
+            ))
+        };
+        let (seq_secs, data, params) = run(TransportKind::Sequential)?;
+        let (thr_secs, ..) = run(TransportKind::Threaded)?;
+        rows.push(Row {
+            regime: "full-batch",
+            k,
+            seq_secs,
+            thr_secs,
+            comm_data_bytes: data,
+            comm_param_bytes: params,
+        });
+    }
+
+    // ---- mini-batch regime (neighbor sampler) -----------------------
+    for &k in &ks {
+        let run = |transport: TransportKind| -> anyhow::Result<(f64, f64, f64)> {
+            let mc = MiniBatchConfig {
+                epochs,
+                transport,
+                seed: 42,
+                ..Default::default()
+            };
+            let scfg = SamplerConfig {
+                batch_size: 128,
+                fanouts: vec![10, 5, 5],
+                seed: 42,
+                ..Default::default()
+            };
+            let (stats, tr) =
+                train_minibatch(&spec, k, SamplerKind::Neighbor, &scfg, mc, None)?;
+            Ok((
+                steady_wall_secs(&stats),
+                tr.comm_stats.total_data_bytes(),
+                tr.comm_stats.total_param_bytes(),
+            ))
+        };
+        let (seq_secs, data, params) = run(TransportKind::Sequential)?;
+        let (thr_secs, ..) = run(TransportKind::Threaded)?;
+        rows.push(Row {
+            regime: "mini-batch",
+            k,
+            seq_secs,
+            thr_secs,
+            comm_data_bytes: data,
+            comm_param_bytes: params,
+        });
+    }
+
+    // ---- report ------------------------------------------------------
+    let mut table = Table::new(
+        "SPMD transport scaling: wall secs, seq vs threaded (bit-exact runs)",
+        &["regime", "ranks", "seq s", "threaded s", "speedup", "comm data", "comm params"],
+    );
+    for r in &rows {
+        table.row(vec![
+            r.regime.to_string(),
+            r.k.to_string(),
+            format!("{:.4}", r.seq_secs),
+            format!("{:.4}", r.thr_secs),
+            format!("{:.2}x", r.speedup()),
+            supergcn::util::fmt_bytes(r.comm_data_bytes),
+            supergcn::util::fmt_bytes(r.comm_param_bytes),
+        ]);
+    }
+    table.print();
+    if let Some(r4) = rows.iter().find(|r| r.regime == "full-batch" && r.k == 4) {
+        println!(
+            "\nfull-batch @ 4 rank threads: {:.2}x (acceptance target > 1.5x on \
+             multi-core hosts; 1-core containers cannot exceed ~1x)",
+            r4.speedup()
+        );
+    }
+
+    // ---- optional JSON artifact (CI: BENCH_ci.json) ------------------
+    if let Ok(path) = std::env::var("SUPERGCN_BENCH_JSON") {
+        let arr: Vec<Json> = rows
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("regime", Json::Str(r.regime.to_string())),
+                    ("ranks", Json::Num(r.k as f64)),
+                    ("seq_wall_secs", Json::Num(r.seq_secs)),
+                    ("threaded_wall_secs", Json::Num(r.thr_secs)),
+                    ("speedup", Json::Num(r.speedup())),
+                    ("comm_data_bytes", Json::Num(r.comm_data_bytes)),
+                    ("comm_param_bytes", Json::Num(r.comm_param_bytes)),
+                ])
+            })
+            .collect();
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("spmd_scaling".to_string())),
+            ("dataset", Json::Str(spec.name.to_string())),
+            ("epochs_per_run", Json::Num(epochs as f64)),
+            ("smoke", Json::Bool(smoke)),
+            (
+                "host_parallelism",
+                Json::Num(
+                    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) as f64,
+                ),
+            ),
+            ("rows", Json::Arr(arr)),
+        ]);
+        std::fs::write(&path, to_pretty(&doc))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}

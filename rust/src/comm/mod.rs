@@ -3,13 +3,18 @@
 //! volume accounting and modeled wire time (paper Eqn 2/5 via
 //! `perfmodel`).
 //!
-//! Workers execute as SPMD steps inside one process (the hardware gate —
-//! see DESIGN.md §1): payloads move by memcpy (so numerics are bit-exact
-//! end to end), while *time* is charged analytically from the machine
-//! profile. `CommStats` keeps both the measured local cost (pack/unpack,
-//! quantize) and the modeled wire cost.
+//! Workers execute as SPMD ranks inside one process (the hardware gate —
+//! see DESIGN.md §1) under one of two transports ([`transport`],
+//! DESIGN.md §10): *sequential* (ranks step inside the driver thread —
+//! modeled parallel time only) or *threaded* (one OS thread per rank,
+//! payloads rendezvous through per-pair mailbox slots). In both,
+//! payloads move by memcpy (so numerics are bit-exact end to end), while
+//! *time* is charged analytically from the machine profile. `CommStats`
+//! keeps both the measured local cost (pack/unpack, quantize) and the
+//! modeled wire cost.
 
 pub mod collective;
+pub mod transport;
 
 use crate::perfmodel::MachineProfile;
 use crate::quant::Quantized;
@@ -87,7 +92,24 @@ impl CommStats {
         self.modeled_send_secs.iter().fold(0.0, |a, &b| a.max(b))
     }
 
-    fn charge(&mut self, from: usize, to: usize, p: &Payload, profile: &MachineProfile) {
+    /// Fold another accounting matrix into this one (sequential epoch
+    /// totals; merging per-rank shards of the threaded transport — each
+    /// shard only ever populates its own sender row, so the merge of all
+    /// k shards is bit-identical to the sequential accounting).
+    pub fn merge(&mut self, other: &CommStats) {
+        let k = self.k();
+        assert_eq!(other.k(), k, "CommStats rank-count mismatch");
+        for i in 0..k {
+            for j in 0..k {
+                self.data_bits[i][j] += other.data_bits[i][j];
+                self.param_bits[i][j] += other.param_bits[i][j];
+                self.messages[i][j] += other.messages[i][j];
+            }
+            self.modeled_send_secs[i] += other.modeled_send_secs[i];
+        }
+    }
+
+    pub(crate) fn charge(&mut self, from: usize, to: usize, p: &Payload, profile: &MachineProfile) {
         let (db, pb) = p.wire_bits();
         if db + pb <= 0.0 {
             return;

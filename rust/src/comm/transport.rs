@@ -1,0 +1,554 @@
+//! The SPMD transport: how the simulated ranks execute and exchange
+//! payloads.
+//!
+//! Two transports share one payload/accounting contract (DESIGN.md §10):
+//!
+//! * [`TransportKind::Sequential`] — the original harness: all ranks step
+//!   inside one driver thread, stage-synchronously; `comm::alltoallv`
+//!   moves the whole k×k send matrix at once.
+//! * [`TransportKind::Threaded`] — every rank runs on its own OS thread;
+//!   payloads rendezvous through the per-pair mailbox slots of a shared
+//!   [`Fabric`], and collectives are barrier-synchronized. Payload
+//!   movement is still memcpy (numerics stay bit-exact with the
+//!   sequential path — pinned by `tests/spmd_parity.rs`), while *wire
+//!   time* keeps being charged analytically from the machine profile.
+//!
+//! Bit-exactness is by construction: each rank performs the identical
+//! per-lane FP work on identical data in both transports, every
+//! cross-rank reduction fixes rank order (the ring allreduce folds
+//! buffers in rank order 0..k exactly like
+//! `collective::allreduce_sum`), and every rank charges only its own
+//! sender row of `CommStats` in the same per-peer order the sequential
+//! matrix exchange uses.
+
+use super::{CommStats, Payload};
+use crate::perfmodel::MachineProfile;
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Which SPMD executor drives the ranks (CLI: `supergcn train
+/// --transport {seq,threaded}`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// All ranks step sequentially inside the driver thread (modeled
+    /// parallel time only — the original simulation harness).
+    #[default]
+    Sequential,
+    /// One OS thread per rank; mailbox collectives; real multi-core
+    /// wall-clock scaling.
+    Threaded,
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::Sequential => "seq",
+            TransportKind::Threaded => "threaded",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<TransportKind> {
+        Ok(match s {
+            "seq" | "sequential" => TransportKind::Sequential,
+            "threaded" | "thread" => TransportKind::Threaded,
+            _ => anyhow::bail!("transport must be seq|threaded"),
+        })
+    }
+
+    pub fn is_threaded(&self) -> bool {
+        matches!(self, TransportKind::Threaded)
+    }
+
+    /// The one `--rank-threads` constraint, shared by the CLI pre-check
+    /// and both trainers: 0 (= one thread per rank) or exactly the
+    /// worker count — the blocking mailbox collectives need every rank
+    /// resident on its own thread.
+    pub fn validate_rank_threads(rank_threads: usize, workers: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            rank_threads == 0 || rank_threads == workers,
+            "rank-threads must be 0 (one thread per worker) or equal the worker count \
+             ({workers}): the threaded transport's blocking mailbox collectives need \
+             every rank resident on its own thread (DESIGN.md §10)"
+        );
+        Ok(())
+    }
+}
+
+/// Lock helper that shrugs off mutex poisoning: once the fabric itself is
+/// poisoned every rank unwinds anyway, so a poisoned guard's data is never
+/// trusted past that point.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    poisoned: bool,
+}
+
+/// A reusable rendezvous barrier that can be *poisoned*: when a rank
+/// thread fails (error or panic) it poisons the barrier instead of
+/// leaving its peers blocked forever — every waiter then panics, the
+/// whole scoped-thread epoch unwinds, and the driver reports the original
+/// error. (`std::sync::Barrier` has no such escape hatch, which would
+/// turn any rank failure into a CI hang.)
+pub struct PoisonBarrier {
+    n: usize,
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+}
+
+impl PoisonBarrier {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "barrier needs at least one party");
+        Self {
+            n,
+            state: Mutex::new(BarrierState {
+                arrived: 0,
+                generation: 0,
+                poisoned: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until all `n` parties arrive. Panics if the barrier is (or
+    /// becomes) poisoned.
+    pub fn wait(&self) {
+        let mut st = lock(&self.state);
+        assert!(!st.poisoned, "SPMD fabric poisoned: a rank thread failed");
+        st.arrived += 1;
+        if st.arrived == self.n {
+            st.arrived = 0;
+            st.generation = st.generation.wrapping_add(1);
+            self.cv.notify_all();
+            return;
+        }
+        let gen = st.generation;
+        while st.generation == gen && !st.poisoned {
+            st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        assert!(!st.poisoned, "SPMD fabric poisoned: a rank thread failed");
+    }
+
+    /// Mark the barrier failed and wake every waiter (they panic out).
+    pub fn poison(&self) {
+        let mut st = lock(&self.state);
+        st.poisoned = true;
+        self.cv.notify_all();
+    }
+}
+
+/// The mailbox fabric of one threaded SPMD epoch: k×k single-payload
+/// slots (slot `(from, to)` is written only by rank `from` and read only
+/// by rank `to`), a poisonable barrier, and a scalar allgather board.
+///
+/// Every collective is called by *all* k rank threads in lockstep — the
+/// per-rank trainer bodies take care to run the identical control flow on
+/// every rank, so the call sequences always line up.
+pub struct Fabric {
+    k: usize,
+    boxes: Vec<Mutex<Option<Payload>>>,
+    gather: Mutex<Vec<Option<Vec<f64>>>>,
+    barrier: PoisonBarrier,
+}
+
+impl Fabric {
+    pub fn new(k: usize) -> Self {
+        assert!(k >= 1, "fabric needs at least one rank");
+        Self {
+            k,
+            boxes: (0..k * k).map(|_| Mutex::new(None)).collect(),
+            gather: Mutex::new((0..k).map(|_| None).collect()),
+            barrier: PoisonBarrier::new(k),
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Poison the fabric so peers blocked in a collective unwind instead
+    /// of deadlocking. Called by a rank body that failed.
+    pub fn poison(&self) {
+        self.barrier.poison();
+    }
+
+    fn deposit(&self, from: usize, to: usize, p: Payload) {
+        let mut slot = lock(&self.boxes[from * self.k + to]);
+        debug_assert!(slot.is_none(), "mailbox ({from}->{to}) overwritten before pickup");
+        *slot = Some(p);
+    }
+
+    fn take(&self, from: usize, to: usize) -> Payload {
+        lock(&self.boxes[from * self.k + to])
+            .take()
+            .expect("mailbox empty: collective call sequences diverged across ranks")
+    }
+
+    /// SPMD all-to-all: rank `rank` contributes its row of personalized
+    /// payloads (`sends[peer]` = payload for `peer`, `sends.len() == k`)
+    /// and receives `recvs[peer]` = what `peer` addressed to it. Wire
+    /// time/volume for this rank's row is charged to `stats` (the rank's
+    /// own shard) in ascending-peer order — the same per-sender order the
+    /// sequential matrix `comm::alltoallv` charges, so merged shards are
+    /// bit-identical to the sequential accounting.
+    pub fn alltoallv(
+        &self,
+        rank: usize,
+        sends: Vec<Payload>,
+        profile: &MachineProfile,
+        stats: &mut CommStats,
+    ) -> Vec<Payload> {
+        assert_eq!(sends.len(), self.k, "send row must have one payload per rank");
+        for (to, p) in sends.into_iter().enumerate() {
+            stats.charge(rank, to, &p, profile);
+            self.deposit(rank, to, p);
+        }
+        // All deposits visible before any pickup...
+        self.barrier.wait();
+        let recvs: Vec<Payload> = (0..self.k).map(|from| self.take(from, rank)).collect();
+        // ...and all pickups done before anyone reuses the slots.
+        self.barrier.wait();
+        recvs
+    }
+
+    /// Ring-allreduce of one buffer per rank: every rank ends with the
+    /// element-wise sum, folded in rank order 0..k (the partial travels
+    /// 0→1→…→k−1 through the mailboxes, then broadcasts) — bit-identical
+    /// to `collective::allreduce_sum`'s sequential fold. Returns the
+    /// modeled ring seconds (the same `ring_allreduce_secs` charge the
+    /// sequential path uses).
+    ///
+    /// Deliberately a *serial* ring: one rank folds per step while peers
+    /// wait. Gradient buffers are tiny next to a layer pass (tens of KB),
+    /// so this costs microseconds per round; if a profile ever shows it,
+    /// a chunk-pipelined ring (chunk c folding at rank r while chunk c+1
+    /// folds at rank r−1, each chunk still folded in rank order 0..k)
+    /// stays bit-exact while overlapping the folds.
+    pub fn allreduce_sum(
+        &self,
+        rank: usize,
+        buf: &mut [f32],
+        profile: &MachineProfile,
+    ) -> f64 {
+        let k = self.k;
+        if k <= 1 {
+            return 0.0;
+        }
+        let n = buf.len();
+        // Reduce phase: k−1 mailbox hops, rank `step` → rank `step+1`.
+        let mut acc: Option<Vec<f32>> = None;
+        for step in 0..k - 1 {
+            if rank == step {
+                // Fold own buffer into the incoming partial; rank 0
+                // starts from zeros exactly like the sequential fold.
+                let mut partial = acc.take().unwrap_or_else(|| vec![0f32; n]);
+                assert_eq!(partial.len(), n, "allreduce length mismatch across ranks");
+                for (s, &x) in partial.iter_mut().zip(buf.iter()) {
+                    *s += x;
+                }
+                self.deposit(rank, rank + 1, Payload::F32(partial));
+            }
+            self.barrier.wait();
+            if rank == step + 1 {
+                match self.take(step, rank) {
+                    Payload::F32(v) => acc = Some(v),
+                    _ => unreachable!("ring partial is always an F32 payload"),
+                }
+            }
+            self.barrier.wait();
+        }
+        // Rank k−1 holds the fold of ranks 0..k−1; add its own buffer and
+        // broadcast the finished sum through the mailboxes.
+        if rank == k - 1 {
+            let mut sum = acc.take().unwrap_or_else(|| vec![0f32; n]);
+            assert_eq!(sum.len(), n, "allreduce length mismatch across ranks");
+            for (s, &x) in sum.iter_mut().zip(buf.iter()) {
+                *s += x;
+            }
+            for peer in 0..k - 1 {
+                self.deposit(rank, peer, Payload::F32(sum.clone()));
+            }
+            buf.copy_from_slice(&sum);
+        }
+        self.barrier.wait();
+        if rank != k - 1 {
+            match self.take(k - 1, rank) {
+                Payload::F32(v) => buf.copy_from_slice(&v),
+                _ => unreachable!("broadcast payload is always F32"),
+            }
+        }
+        self.barrier.wait();
+        super::collective::ring_allreduce_secs(n * 4, k, profile)
+    }
+
+    /// Allgather of a small f64 record per rank (loss/metric totals):
+    /// returns all k records indexed by rank. Every rank can then fold
+    /// them in rank order, reproducing the sequential driver's f64
+    /// accumulation bit-for-bit.
+    pub fn allgather_f64(&self, rank: usize, vals: Vec<f64>) -> Vec<Vec<f64>> {
+        {
+            let mut slots = lock(&self.gather);
+            debug_assert!(slots[rank].is_none(), "allgather slot not drained");
+            slots[rank] = Some(vals);
+        }
+        // All posts visible before any read...
+        self.barrier.wait();
+        let out: Vec<Vec<f64>> = {
+            let slots = lock(&self.gather);
+            slots
+                .iter()
+                .map(|s| s.clone().expect("allgather slot unfilled"))
+                .collect()
+        };
+        // ...and all reads done before anyone reposts.
+        self.barrier.wait();
+        // Drain own slot so a future divergence (a rank skipping its post)
+        // trips the `expect` above instead of silently replaying a stale
+        // record. Safe: peers cannot pass the next post's barrier until
+        // this rank arrives, and only this rank ever writes this slot.
+        lock(&self.gather)[rank] = None;
+        out
+    }
+}
+
+/// Run one SPMD step over `fabric`: spawn one OS thread per rank, run its
+/// boxed body, and join. A body that returns `Err` (or panics) poisons
+/// the fabric so peers blocked in a collective unwind instead of
+/// deadlocking; the lowest-rank error is returned (a bare panic that
+/// produced no error surfaces as one). This is the single orchestration
+/// point shared by the full-batch epoch and the mini-batch round drivers.
+pub type RankBody<'env> = Box<dyn FnOnce() -> anyhow::Result<()> + Send + 'env>;
+
+pub fn run_ranks(fabric: &Fabric, bodies: Vec<RankBody<'_>>) -> anyhow::Result<()> {
+    assert_eq!(bodies.len(), fabric.k(), "one body per rank");
+    let (first_err, panicked) = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(bodies.len());
+        for body in bodies {
+            handles.push(scope.spawn(move || {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body));
+                match r {
+                    Ok(Ok(())) => None,
+                    Ok(Err(e)) => {
+                        fabric.poison();
+                        Some(e)
+                    }
+                    Err(p) => {
+                        fabric.poison();
+                        std::panic::resume_unwind(p);
+                    }
+                }
+            }));
+        }
+        let mut first_err = None;
+        let mut panicked = false;
+        for h in handles {
+            match h.join() {
+                Ok(Some(e)) if first_err.is_none() => first_err = Some(e),
+                Ok(_) => {}
+                Err(_) => panicked = true,
+            }
+        }
+        (first_err, panicked)
+    });
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    if panicked {
+        anyhow::bail!("a rank thread panicked");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::collective;
+
+    #[test]
+    fn mailbox_alltoallv_routes_and_charges_like_sequential() {
+        let k = 4;
+        let p = MachineProfile::abci();
+        let fabric = Fabric::new(k);
+        // Sequential reference.
+        let sends: Vec<Vec<Payload>> = (0..k)
+            .map(|i| {
+                (0..k)
+                    .map(|j| {
+                        if i == j {
+                            Payload::Empty
+                        } else {
+                            Payload::F32(vec![(i * 10 + j) as f32; i + 1])
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let mut seq_stats = CommStats::new(k);
+        let seq_recvs = crate::comm::alltoallv(sends.clone(), &p, &mut seq_stats);
+
+        let mut shards: Vec<CommStats> = (0..k).map(|_| CommStats::new(k)).collect();
+        let mut recvs: Vec<Vec<Payload>> = (0..k).map(|_| Vec::new()).collect();
+        std::thread::scope(|scope| {
+            let fabric = &fabric;
+            let pr = &p;
+            for (rank, (shard, recv)) in
+                shards.iter_mut().zip(recvs.iter_mut()).enumerate()
+            {
+                let row = sends[rank].clone();
+                scope.spawn(move || {
+                    *recv = fabric.alltoallv(rank, row, pr, shard);
+                });
+            }
+        });
+        let mut merged = CommStats::new(k);
+        for s in &shards {
+            merged.merge(s);
+        }
+        assert_eq!(merged.data_bits, seq_stats.data_bits);
+        assert_eq!(merged.messages, seq_stats.messages);
+        assert_eq!(merged.modeled_send_secs, seq_stats.modeled_send_secs);
+        for rank in 0..k {
+            for from in 0..k {
+                match (&recvs[rank][from], &seq_recvs[rank][from]) {
+                    (Payload::F32(a), Payload::F32(b)) => assert_eq!(a, b),
+                    (Payload::Empty, Payload::Empty) => {}
+                    (a, b) => panic!("payload mismatch: {a:?} vs {b:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_matches_sequential_bitwise() {
+        let p = MachineProfile::fugaku();
+        for k in [2usize, 4, 8] {
+            let mut bufs: Vec<Vec<f32>> = (0..k)
+                .map(|r| (0..37).map(|i| ((r * 37 + i) as f32).sin() * 0.1).collect())
+                .collect();
+            let mut want = bufs.clone();
+            let want_secs = collective::allreduce_sum(&mut want, &p);
+
+            let fabric = Fabric::new(k);
+            let mut secs = vec![0f64; k];
+            std::thread::scope(|scope| {
+                let fabric = &fabric;
+                let pr = &p;
+                for (rank, (buf, s)) in bufs.iter_mut().zip(secs.iter_mut()).enumerate() {
+                    scope.spawn(move || {
+                        *s = fabric.allreduce_sum(rank, buf, pr);
+                    });
+                }
+            });
+            for (rank, b) in bufs.iter().enumerate() {
+                for (x, y) in b.iter().zip(want[rank].iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "k={k} rank={rank}");
+                }
+                assert_eq!(secs[rank], want_secs);
+            }
+        }
+    }
+
+    #[test]
+    fn allgather_returns_every_record_in_rank_order() {
+        let k = 3;
+        let fabric = Fabric::new(k);
+        let mut outs: Vec<Vec<Vec<f64>>> = (0..k).map(|_| Vec::new()).collect();
+        std::thread::scope(|scope| {
+            let fabric = &fabric;
+            for (rank, out) in outs.iter_mut().enumerate() {
+                scope.spawn(move || {
+                    *out = fabric.allgather_f64(rank, vec![rank as f64, 2.0 * rank as f64]);
+                });
+            }
+        });
+        for out in &outs {
+            for (r, v) in out.iter().enumerate() {
+                assert_eq!(v, &vec![r as f64, 2.0 * r as f64]);
+            }
+        }
+    }
+
+    #[test]
+    fn single_rank_fabric_is_trivial() {
+        let p = MachineProfile::abci();
+        let fabric = Fabric::new(1);
+        let mut stats = CommStats::new(1);
+        let recvs = fabric.alltoallv(0, vec![Payload::Empty], &p, &mut stats);
+        assert!(recvs[0].is_empty());
+        let mut buf = vec![1.0f32, 2.0];
+        assert_eq!(fabric.allreduce_sum(0, &mut buf, &p), 0.0);
+        assert_eq!(buf, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn poisoned_barrier_unblocks_waiters() {
+        let fabric = std::sync::Arc::new(Fabric::new(2));
+        let f2 = fabric.clone();
+        let waiter = std::thread::spawn(move || {
+            let r = std::panic::catch_unwind(|| f2.barrier.wait());
+            r.is_err()
+        });
+        // Give the waiter time to block, then poison.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        fabric.poison();
+        assert!(waiter.join().unwrap(), "waiter must panic out of a poisoned barrier");
+    }
+
+    #[test]
+    fn run_ranks_collects_work_and_routes_errors() {
+        // Success path: every rank exchanges through the fabric.
+        let k = 3;
+        let fabric = Fabric::new(k);
+        let mut sums = vec![0f64; k];
+        let bodies: Vec<RankBody<'_>> = sums
+            .iter_mut()
+            .enumerate()
+            .map(|(rank, slot)| {
+                let fabric = &fabric;
+                Box::new(move || {
+                    let all = fabric.allgather_f64(rank, vec![rank as f64 + 1.0]);
+                    *slot = all.iter().map(|v| v[0]).sum();
+                    Ok(())
+                }) as RankBody<'_>
+            })
+            .collect();
+        run_ranks(&fabric, bodies).unwrap();
+        assert_eq!(sums, vec![6.0; k]);
+
+        // Error path: rank 1 fails before its collective; the others are
+        // blocked in the barrier and must unwind via poisoning rather
+        // than deadlock, and the original error must surface.
+        let fabric = Fabric::new(k);
+        let bodies: Vec<RankBody<'_>> = (0..k)
+            .map(|rank| {
+                let fabric = &fabric;
+                Box::new(move || {
+                    if rank == 1 {
+                        anyhow::bail!("rank 1 exploded");
+                    }
+                    let _ = fabric.allgather_f64(rank, vec![0.0]);
+                    Ok(())
+                }) as RankBody<'_>
+            })
+            .collect();
+        let err = run_ranks(&fabric, bodies).unwrap_err();
+        assert!(err.to_string().contains("rank 1 exploded"), "{err}");
+    }
+
+    #[test]
+    fn transport_kind_parse() {
+        assert_eq!(TransportKind::parse("seq").unwrap(), TransportKind::Sequential);
+        assert_eq!(
+            TransportKind::parse("threaded").unwrap(),
+            TransportKind::Threaded
+        );
+        assert!(TransportKind::parse("mpi").is_err());
+        assert_eq!(TransportKind::default(), TransportKind::Sequential);
+        assert!(!TransportKind::Sequential.is_threaded());
+        assert!(TransportKind::validate_rank_threads(0, 4).is_ok());
+        assert!(TransportKind::validate_rank_threads(4, 4).is_ok());
+        assert!(TransportKind::validate_rank_threads(3, 4).is_err());
+    }
+}

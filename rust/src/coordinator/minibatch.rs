@@ -16,8 +16,16 @@
 //!    batch's induced CSR (weighted by the sampler's unbiased
 //!    `edge_weight`s, loss weighted by SAINT `node_weight`s), every
 //!    aggregate routed through the shared `AggDispatch`;
-//! 3. **update** — gradients ring-allreduce across workers
-//!    (`collective::allreduce_sum`) and one optimizer step per round.
+//! 3. **update** — gradients ring-allreduce across workers and one
+//!    optimizer step per round.
+//!
+//! Rounds run under either SPMD transport (DESIGN.md §10): `--transport
+//! seq` steps every lane inside the driver thread; `--transport
+//! threaded` runs one OS thread per rank over
+//! [`exec::MiniBatchRankCtx`], fetching and allreducing through the
+//! mailbox [`Fabric`]. Sampling and batch→worker matching stay on the
+//! driver (policy), so per-epoch losses and `CommStats` wire bits are
+//! bit-identical across transports (`tests/spmd_parity.rs`).
 //!
 //! By default the mini-batch model omits the full-batch path's LayerNorm
 //! and label propagation — it is the *sampling regime* analogue, not a
@@ -28,8 +36,11 @@
 //! (`tests/trainer_equivalence.rs`).
 
 use super::trainer::EpochStats;
+use crate::comm::transport::{self, Fabric, RankBody, TransportKind};
 use crate::comm::{collective, CommStats};
-use crate::exec::{AggDispatch, Engine, LossSpec, LossTotals, MiniBatchCtx, StageClock, Tapes};
+use crate::exec::{
+    AggDispatch, Engine, LossSpec, LossTotals, MiniBatchCtx, MiniBatchRankCtx, StageClock,
+};
 use crate::graph::generate::LabelledGraph;
 use crate::model::optimizer::{OptKind, Optimizer};
 use crate::model::ModelParams;
@@ -37,7 +48,7 @@ use crate::partition::Partition;
 use crate::perfmodel::MachineProfile;
 use crate::quant::Bits;
 use crate::runtime::ShapeConfig;
-use crate::sample::{build_sampler, Sampler, SamplerConfig, SamplerKind};
+use crate::sample::{build_sampler, MiniBatch, Sampler, SamplerConfig, SamplerKind};
 use crate::util::timer::{Breakdown, Category};
 use anyhow::Result;
 use std::sync::Arc;
@@ -58,6 +69,11 @@ pub struct MiniBatchConfig {
     pub layernorm: bool,
     /// §4 aggregation-kernel dispatch (CLI: `--agg-kernel`).
     pub agg: AggDispatch,
+    /// SPMD executor (CLI: `--transport {seq,threaded}`; DESIGN.md §10).
+    pub transport: TransportKind,
+    /// Rank threads for the threaded transport: 0 = one per rank (see
+    /// [`super::trainer::TrainConfig::rank_threads`]).
+    pub rank_threads: usize,
     pub machine: MachineProfile,
     pub seed: u64,
 }
@@ -72,6 +88,8 @@ impl Default for MiniBatchConfig {
             hidden: 64,
             layernorm: false,
             agg: AggDispatch::default(),
+            transport: TransportKind::Sequential,
+            rank_threads: 0,
             machine: MachineProfile::abci(),
             seed: 42,
         }
@@ -171,7 +189,21 @@ impl MiniBatchTrainer {
         let k = self.part.k;
         let nb = self.sampler.batches_per_epoch();
         let rounds = nb.div_ceil(k);
+        let threaded = self.mc.transport.is_threaded();
+        if threaded {
+            TransportKind::validate_rank_threads(self.mc.rank_threads, k)?;
+        }
         let mut epoch_comm = CommStats::new(k);
+        // Threaded transport: one fabric + per-rank CommStats shards for
+        // the whole epoch (each shard accumulates charge-by-charge in the
+        // same order the sequential path charges `epoch_comm`, so the
+        // end-of-epoch merge is bit-identical).
+        let fabric = if threaded { Some(Fabric::new(k)) } else { None };
+        let mut shards: Vec<CommStats> = if threaded {
+            (0..k).map(|_| CommStats::new(k)).collect()
+        } else {
+            Vec::new()
+        };
         let mut breakdown = Breakdown::new();
         let mut modeled_compute = 0f64;
         let mut sync = 0f64;
@@ -229,77 +261,30 @@ impl MiniBatchTrainer {
                 .map(|s| s.map(|bi| batches[bi].n()).unwrap_or(0))
                 .collect();
 
-            // ---- engine: fetch + forward + loss + backward ------------
-            let mut tapes = self.engine.tapes(&rows, &self.params);
-            let mut clock = StageClock::new(k);
-            let mut ctx = MiniBatchCtx::new(
-                &self.lg,
-                &self.part.assign,
-                &batches,
-                &per_lane,
-                &self.mc.machine,
-                self.mc.quant,
-                self.mc.seed,
-                self.epoch,
-                round,
-                &mut epoch_comm,
-            );
-            self.engine
-                .forward(&self.params, &mut ctx, &mut tapes, None, &mut clock)?;
+            // ---- execute the round under the configured transport -----
+            let (lane_totals, clock, summed) = if threaded {
+                self.round_threaded(
+                    &batches,
+                    &per_lane,
+                    &rows,
+                    round,
+                    fabric.as_ref().expect("fabric exists when threaded"),
+                    &mut shards,
+                )?
+            } else {
+                self.round_sequential(&batches, &per_lane, &rows, round, &mut epoch_comm)?
+            };
 
-            let metas: Vec<(Vec<u32>, Vec<u8>)> = per_lane
-                .iter()
-                .map(|slot| match slot {
-                    Some(bi) => {
-                        let mb = &batches[*bi];
-                        let nt = mb.n_target;
-                        (
-                            mb.n_id[..nt]
-                                .iter()
-                                .map(|&v| self.lg.labels[v as usize])
-                                .collect(),
-                            mb.n_id[..nt]
-                                .iter()
-                                .map(|&v| self.lg.split[v as usize])
-                                .collect(),
-                        )
-                    }
-                    None => (Vec::new(), Vec::new()),
-                })
-                .collect();
-            let specs: Vec<LossSpec> = (0..k)
-                .map(|w| LossSpec {
-                    score_rows: per_lane[w].map(|bi| batches[bi].n_target).unwrap_or(0),
-                    labels: &metas[w].0,
-                    split: &metas[w].1,
-                    loss_w: per_lane[w]
-                        .map(|bi| batches[bi].node_weight.as_slice())
-                        .unwrap_or(&[]),
-                })
-                .collect();
-            let lane_totals = self.engine.loss_all(&mut tapes, &specs, &mut clock);
+            // ---- optimizer step (shared tail) -------------------------
             let mut with_loss = 0usize;
-            let mut scales = vec![1.0f32; k];
-            for (w, t) in lane_totals.iter().enumerate() {
+            for t in &lane_totals {
                 totals.accumulate(t);
                 if t.wsum > 0.0 {
                     with_loss += 1;
-                    scales[w] = (1.0 / t.wsum) as f32;
                 }
             }
-            self.engine.scale_loss_grad(&mut tapes, &scales);
-            // No backward communication in this regime: the layer-0
-            // input cotangent is unused, so don't propagate it.
-            self.engine
-                .backward(&self.params, &mut ctx, &mut tapes, None, false, &mut clock)?;
-            drop(ctx);
-
-            // ---- allreduce + optimizer step ---------------------------
-            let mut flats: Vec<Vec<f32>> = tapes.grads.iter().map(|g| g.flatten()).collect();
-            let ar = collective::allreduce_sum(&mut flats, &self.mc.machine);
-            epoch_comm.modeled_send_secs.iter_mut().for_each(|s| *s += ar);
             let t = Instant::now();
-            let mut summed = flats.swap_remove(0);
+            let mut summed = summed;
             let scale = 1.0 / with_loss.max(1) as f32;
             summed.iter_mut().for_each(|g| *g *= scale);
             let mut flat_params = self.params.flatten();
@@ -323,6 +308,11 @@ impl MiniBatchTrainer {
                 collective::allreduce_max(&clock.quant_lane_totals()),
             );
         }
+        // Fold the threaded transport's per-rank shards (each populated
+        // only its own sender row) into the epoch accounting.
+        for s in &shards {
+            epoch_comm.merge(s);
+        }
 
         // ---- time accounting (same contract as the full-batch loop) ---
         let cscale = self.mc.machine.cores_per_rank.max(1.0);
@@ -334,14 +324,7 @@ impl MiniBatchTrainer {
         breakdown.add(Category::Sync, sync / k as f64 / cscale);
         let comm_secs = epoch_comm.modeled_comm_secs();
         breakdown.add(Category::Comm, comm_secs);
-        for i in 0..k {
-            for j in 0..k {
-                self.comm_stats.data_bits[i][j] += epoch_comm.data_bits[i][j];
-                self.comm_stats.param_bits[i][j] += epoch_comm.param_bits[i][j];
-                self.comm_stats.messages[i][j] += epoch_comm.messages[i][j];
-            }
-            self.comm_stats.modeled_send_secs[i] += epoch_comm.modeled_send_secs[i];
-        }
+        self.comm_stats.merge(&epoch_comm);
 
         let stats = EpochStats {
             epoch: self.epoch,
@@ -357,6 +340,118 @@ impl MiniBatchTrainer {
         };
         self.epoch += 1;
         Ok(stats)
+    }
+
+    /// One round, sequential transport: fetch + engine forward/backward
+    /// for every lane inside this thread, then the gradient allreduce.
+    fn round_sequential(
+        &self,
+        batches: &[MiniBatch],
+        per_lane: &[Option<usize>],
+        rows: &[usize],
+        round: usize,
+        epoch_comm: &mut CommStats,
+    ) -> Result<(Vec<LossTotals>, StageClock, Vec<f32>)> {
+        let k = self.part.k;
+        let mut tapes = self.engine.tapes(rows, &self.params);
+        let mut clock = StageClock::new(k);
+        let mut ctx = MiniBatchCtx::new(
+            &self.lg,
+            &self.part.assign,
+            batches,
+            per_lane,
+            &self.mc.machine,
+            self.mc.quant,
+            self.mc.seed,
+            self.epoch,
+            round,
+            epoch_comm,
+        );
+        self.engine
+            .forward(&self.params, &mut ctx, &mut tapes, None, &mut clock)?;
+
+        let metas: Vec<(Vec<u32>, Vec<u8>)> = per_lane
+            .iter()
+            .map(|slot| match slot {
+                Some(bi) => batch_meta(&self.lg, &batches[*bi]),
+                None => (Vec::new(), Vec::new()),
+            })
+            .collect();
+        let specs: Vec<LossSpec> = (0..k)
+            .map(|w| LossSpec {
+                score_rows: per_lane[w].map(|bi| batches[bi].n_target).unwrap_or(0),
+                labels: &metas[w].0,
+                split: &metas[w].1,
+                loss_w: per_lane[w]
+                    .map(|bi| batches[bi].node_weight.as_slice())
+                    .unwrap_or(&[]),
+            })
+            .collect();
+        let lane_totals = self.engine.loss_all(&mut tapes, &specs, &mut clock);
+        let scales: Vec<f32> = lane_totals.iter().map(lane_loss_scale).collect();
+        self.engine.scale_loss_grad(&mut tapes, &scales);
+        // No backward communication in this regime: the layer-0
+        // input cotangent is unused, so don't propagate it.
+        self.engine
+            .backward(&self.params, &mut ctx, &mut tapes, None, false, &mut clock)?;
+        drop(ctx);
+
+        let mut flats: Vec<Vec<f32>> = tapes.grads.iter().map(|g| g.flatten()).collect();
+        let ar = collective::allreduce_sum(&mut flats, &self.mc.machine);
+        epoch_comm.modeled_send_secs.iter_mut().for_each(|s| *s += ar);
+        Ok((lane_totals, clock, flats.swap_remove(0)))
+    }
+
+    /// One round, threaded transport: one OS thread per rank over
+    /// [`MiniBatchRankCtx`]; remote-row fetch and the ring gradient
+    /// allreduce rendezvous through the mailbox fabric.
+    ///
+    /// Threads are spawned per round (not kept resident across the
+    /// epoch): the rank bodies borrow the round's freshly sampled
+    /// batches and lane assignment, and the driver runs sampling and the
+    /// optimizer between rounds. Spawn cost is tens of µs against a
+    /// round's ms-scale engine pass; resident rank threads with a
+    /// round-start rendezvous are the upgrade path if profiles ever show
+    /// the spawns.
+    fn round_threaded(
+        &self,
+        batches: &[MiniBatch],
+        per_lane: &[Option<usize>],
+        rows: &[usize],
+        round: usize,
+        fabric: &Fabric,
+        shards: &mut [CommStats],
+    ) -> Result<(Vec<LossTotals>, StageClock, Vec<f32>)> {
+        let k = self.part.k;
+        let lg: &LabelledGraph = &self.lg;
+        let assign: &[u32] = &self.part.assign;
+        let engine = &self.engine;
+        let params = &self.params;
+        let machine = &self.mc.machine;
+        let quant = self.mc.quant;
+        let seed = self.mc.seed;
+        let epoch = self.epoch;
+        let mut outs: Vec<RoundOut> = (0..k).map(|_| RoundOut::new()).collect();
+        let bodies: Vec<RankBody<'_>> = outs
+            .iter_mut()
+            .zip(shards.iter_mut())
+            .enumerate()
+            .map(|(w, (out, shard))| {
+                let rows_w = rows[w];
+                Box::new(move || {
+                    run_rank_round(
+                        w, out, shard, fabric, lg, assign, batches, per_lane, rows_w, engine,
+                        params, machine, quant, seed, epoch, round,
+                    )
+                }) as RankBody<'_>
+            })
+            .collect();
+        transport::run_ranks(fabric, bodies)?;
+        let clocks: Vec<StageClock> = outs.iter_mut().map(|o| std::mem::take(&mut o.clock)).collect();
+        let clock = StageClock::merge_lanes(&clocks);
+        let lane_totals: Vec<LossTotals> = outs.iter().map(|o| o.totals).collect();
+        let summed = std::mem::take(&mut outs[0].summed);
+        Ok((lane_totals, clock, summed))
     }
 
     /// Train for the configured number of epochs.
@@ -381,6 +476,98 @@ impl MiniBatchTrainer {
         }
         Ok(out)
     }
+}
+
+/// Per-batch loss metadata: (labels, split tags) for the target rows.
+fn batch_meta(lg: &LabelledGraph, mb: &MiniBatch) -> (Vec<u32>, Vec<u8>) {
+    let nt = mb.n_target;
+    (
+        mb.n_id[..nt].iter().map(|&v| lg.labels[v as usize]).collect(),
+        mb.n_id[..nt].iter().map(|&v| lg.split[v as usize]).collect(),
+    )
+}
+
+/// Per-lane loss-gradient scale: `1 / lane wsum` for lanes that carry
+/// loss, identity for idle lanes.
+fn lane_loss_scale(t: &LossTotals) -> f32 {
+    if t.wsum > 0.0 {
+        (1.0 / t.wsum) as f32
+    } else {
+        1.0
+    }
+}
+
+/// What one rank thread hands back per round (threaded transport).
+struct RoundOut {
+    totals: LossTotals,
+    clock: StageClock,
+    /// The allreduced (summed, unscaled) flat gradient.
+    summed: Vec<f32>,
+}
+
+impl RoundOut {
+    fn new() -> Self {
+        Self {
+            totals: LossTotals::default(),
+            clock: StageClock::new(1),
+            summed: Vec::new(),
+        }
+    }
+}
+
+/// The SPMD body one rank thread executes for one mini-batch round:
+/// fetch + forward → loss → backward → ring gradient-allreduce. Mirrors
+/// `round_sequential` exactly, restricted to lane `w` (idle lanes run
+/// the zero-row engine pass but still serve feature rows they own and
+/// join every collective).
+#[allow(clippy::too_many_arguments)]
+fn run_rank_round(
+    w: usize,
+    out: &mut RoundOut,
+    shard: &mut CommStats,
+    fabric: &Fabric,
+    lg: &LabelledGraph,
+    assign: &[u32],
+    batches: &[MiniBatch],
+    per_lane: &[Option<usize>],
+    rows_w: usize,
+    engine: &Engine,
+    params: &ModelParams,
+    machine: &MachineProfile,
+    quant: Option<Bits>,
+    seed: u64,
+    epoch: usize,
+    round: usize,
+) -> Result<()> {
+    let mut clock = StageClock::new(1);
+    let mut tapes = engine.tapes(&[rows_w], params);
+    let batch = per_lane[w].map(|bi| &batches[bi]);
+    {
+        let mut ctx = MiniBatchRankCtx::new(
+            w, lg, assign, batch, machine, quant, seed, epoch, round, fabric, shard,
+        );
+        engine.forward(params, &mut ctx, &mut tapes, None, &mut clock)?;
+        let (labels, split) = match batch {
+            Some(mb) => batch_meta(lg, mb),
+            None => (Vec::new(), Vec::new()),
+        };
+        let spec = LossSpec {
+            score_rows: batch.map(|mb| mb.n_target).unwrap_or(0),
+            labels: &labels,
+            split: &split,
+            loss_w: batch.map(|mb| mb.node_weight.as_slice()).unwrap_or(&[]),
+        };
+        let tot = engine.loss_all(&mut tapes, &[spec], &mut clock)[0];
+        engine.scale_loss_grad(&mut tapes, &[lane_loss_scale(&tot)]);
+        engine.backward(params, &mut ctx, &mut tapes, None, false, &mut clock)?;
+        out.totals = tot;
+    }
+    let mut flat = tapes.grads[0].flatten();
+    let ar = fabric.allreduce_sum(w, &mut flat, machine);
+    shard.modeled_send_secs[w] += ar;
+    out.summed = flat;
+    out.clock = clock;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -456,6 +643,31 @@ mod tests {
         .unwrap();
         let stats = tr.run(false).unwrap();
         assert!(stats.last().unwrap().train_loss < stats[0].train_loss);
+    }
+
+    #[test]
+    fn threaded_transport_cluster_training_learns() {
+        // Transport parity bits are pinned in tests/spmd_parity.rs; this
+        // smoke-checks the rank-thread round loop end to end.
+        let scfg = SamplerConfig {
+            num_clusters: 6,
+            seed: 42,
+            ..Default::default()
+        };
+        let mut tr = MiniBatchTrainer::new(
+            lg(400, 11),
+            3,
+            SamplerKind::Cluster,
+            &scfg,
+            MiniBatchConfig {
+                transport: TransportKind::Threaded,
+                ..mc(20)
+            },
+        )
+        .unwrap();
+        let stats = tr.run(false).unwrap();
+        assert!(stats.last().unwrap().train_loss < stats[0].train_loss);
+        assert!(stats.last().unwrap().comm_data_bytes > 0.0);
     }
 
     #[test]

@@ -7,8 +7,18 @@
 //! this driver owns only *policy and state*: the per-epoch label-prop
 //! selection, the `delay_comm` staleness decision, the gradient
 //! allreduce + optimizer step, and the Eqn-2 / Fig-12 time accounting.
-//! Neighbor halos move through [`exec::FullBatchCtx`] (hierarchical
-//! pre/post exchange with optional `quant::fused` payloads).
+//!
+//! The driver runs the ranks under either transport (DESIGN.md §10):
+//!
+//! * `--transport seq` — every lane steps inside this thread through the
+//!   multi-lane [`exec::FullBatchCtx`] (the original simulation harness);
+//! * `--transport threaded` — one OS thread per rank, each executing the
+//!   identical engine control flow over its own
+//!   [`exec::FullBatchRankCtx`] + [`exec::LaneHalo`], with halo payloads,
+//!   the loss-total allgather, and the ring gradient-allreduce all
+//!   rendezvousing through the mailbox [`Fabric`]. Per-epoch losses and
+//!   `CommStats` wire bits are bit-identical across transports
+//!   (`tests/spmd_parity.rs`).
 //!
 //! The backward pass is exact: cotangents of received halo tensors are
 //! shipped back to their producers every exchange epoch (the reverse of
@@ -17,10 +27,11 @@
 //! `rust/tests/trainer_equivalence.rs`.
 
 use super::planner::WorkerCtx;
+use crate::comm::transport::{self, Fabric, RankBody, TransportKind};
 use crate::comm::{collective, CommStats};
 use crate::exec::{
-    AggDispatch, Engine, FullBatchCtx, FullBatchState, LossSpec, LossTotals, LpInputs, StageClock,
-    Tapes, SPLIT_NONE,
+    AggDispatch, Engine, FullBatchCtx, FullBatchRankCtx, FullBatchState, LaneHalo, LossSpec,
+    LossTotals, LpInputs, StageClock, Tapes, SPLIT_NONE,
 };
 use crate::graph::generate::{SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
 use crate::hier::volume::RemoteStrategy;
@@ -33,6 +44,7 @@ use crate::runtime::ShapeConfig;
 use crate::util::rng::Rng;
 use crate::util::timer::{Breakdown, Category};
 use anyhow::Result;
+use std::time::Instant;
 
 /// Training-run configuration (one Fig. 11 curve = one of these).
 #[derive(Clone, Debug)]
@@ -52,6 +64,13 @@ pub struct TrainConfig {
     pub machine: MachineProfile,
     /// §4 aggregation-kernel dispatch (CLI: `--agg-kernel`).
     pub agg: AggDispatch,
+    /// SPMD executor (CLI: `--transport {seq,threaded}`; DESIGN.md §10).
+    pub transport: TransportKind,
+    /// Rank threads for the threaded transport: 0 = one per rank (the
+    /// only supported concurrency — blocking mailbox collectives need
+    /// every rank resident). Any other value must equal the worker
+    /// count; the trainers enforce this (the CLI pre-validates too).
+    pub rank_threads: usize,
     pub seed: u64,
 }
 
@@ -68,6 +87,8 @@ impl Default for TrainConfig {
             delay_comm: 1,
             machine: MachineProfile::abci(),
             agg: AggDispatch::default(),
+            transport: TransportKind::Sequential,
+            rank_threads: 0,
             seed: 42,
         }
     }
@@ -83,7 +104,9 @@ pub struct EpochStats {
     pub test_acc: f32,
     /// Modeled epoch seconds: Σ_stage max_w compute + modeled comm.
     pub modeled_secs: f64,
-    /// Measured wall seconds (all workers run on this one core).
+    /// Measured wall seconds of the epoch (sequential transport: every
+    /// rank steps on the driver thread; threaded: ranks run concurrently,
+    /// so this is the real multi-core epoch time).
     pub measured_secs: f64,
     pub breakdown: Breakdown,
     pub comm_data_bytes: f64,
@@ -97,7 +120,10 @@ pub struct Trainer {
     pub engine: Engine,
     pub params: ModelParams,
     opt: Optimizer,
-    tapes: Tapes,
+    /// Multi-lane tape set (sequential transport; lazily allocated).
+    tapes: Option<Tapes>,
+    /// One single-lane tape set per rank (threaded transport; lazy).
+    rank_tapes: Vec<Tapes>,
     fb: FullBatchState,
     lp_sels: Vec<LpSelection>,
     pub comm_stats: CommStats,
@@ -111,8 +137,6 @@ impl Trainer {
         let opt = Optimizer::new(tc.opt, tc.lr, params.n_params());
         let k = workers.len();
         let engine = Engine::new(&shapes, true, tc.agg.clone());
-        let rows = vec![shapes.n_pad; k];
-        let tapes = engine.tapes(&rows, &params);
         let fb = FullBatchState::new(&shapes, k);
         let lp_sels = (0..k)
             .map(|_| LpSelection {
@@ -129,7 +153,8 @@ impl Trainer {
             engine,
             params,
             opt,
-            tapes,
+            tapes: None,
+            rank_tapes: Vec::new(),
             fb,
             lp_sels,
             epoch: 0,
@@ -145,9 +170,26 @@ impl Trainer {
         self.tc.delay_comm <= 1 || self.epoch % self.tc.delay_comm == 0
     }
 
+    /// Per-epoch label-prop selection (driver policy — runs on the driver
+    /// thread under both transports, consuming the same RNG stream).
+    fn select_labelprop(&mut self) {
+        let k = self.k();
+        for w in 0..k {
+            let frac = if self.tc.label_prop { self.tc.lp_frac } else { 0.0 };
+            self.lp_sels[w] = labelprop::select(&self.workers[w].train_mask, frac, &mut self.rng);
+        }
+    }
+
     /// Run one epoch; returns the stats.
     pub fn epoch(&mut self) -> Result<EpochStats> {
-        let wall = std::time::Instant::now();
+        match self.tc.transport {
+            TransportKind::Sequential => self.epoch_sequential(),
+            TransportKind::Threaded => self.epoch_threaded(),
+        }
+    }
+
+    fn epoch_sequential(&mut self) -> Result<EpochStats> {
+        let wall = Instant::now();
         let k = self.k();
         let n = self.shapes.n_pad;
         let mut breakdown = Breakdown::new();
@@ -155,14 +197,16 @@ impl Trainer {
         let exchange = self.is_exchange_epoch();
 
         // ---- step 3: per-epoch label-prop selection (driver policy) ----
-        for w in 0..k {
-            let frac = if self.tc.label_prop { self.tc.lp_frac } else { 0.0 };
-            self.lp_sels[w] = labelprop::select(&self.workers[w].train_mask, frac, &mut self.rng);
+        self.select_labelprop();
+        if self.tapes.is_none() {
+            let rows = vec![n; k];
+            self.tapes = Some(self.engine.tapes(&rows, &self.params));
         }
-        self.tapes.clear_grads();
+        self.tapes.as_mut().unwrap().clear_grads();
 
         // ---- engine: forward / loss / backward over the halo context ----
         let mut clock = StageClock::new(k);
+        let tapes = self.tapes.as_mut().unwrap();
         let mut ctx = FullBatchCtx::new(
             &self.workers,
             &self.shapes,
@@ -180,26 +224,10 @@ impl Trainer {
         };
         let lp_opt = if self.tc.label_prop { Some(&lp) } else { None };
         self.engine
-            .forward(&self.params, &mut ctx, &mut self.tapes, lp_opt, &mut clock)?;
+            .forward(&self.params, &mut ctx, tapes, lp_opt, &mut clock)?;
 
         let tags: Vec<Vec<u8>> = (0..k)
-            .map(|w| {
-                let wc = &self.workers[w];
-                let lm = &self.lp_sels[w].loss_mask;
-                (0..n)
-                    .map(|i| {
-                        if lm[i] > 0.0 {
-                            SPLIT_TRAIN
-                        } else if wc.val_mask[i] > 0.0 {
-                            SPLIT_VAL
-                        } else if wc.test_mask[i] > 0.0 {
-                            SPLIT_TEST
-                        } else {
-                            SPLIT_NONE
-                        }
-                    })
-                    .collect()
-            })
+            .map(|w| split_tags(&self.workers[w], &self.lp_sels[w], n))
             .collect();
         let specs: Vec<LossSpec> = (0..k)
             .map(|w| LossSpec {
@@ -209,27 +237,22 @@ impl Trainer {
                 loss_w: &self.lp_sels[w].loss_mask,
             })
             .collect();
-        let lane_totals = self.engine.loss_all(&mut self.tapes, &specs, &mut clock);
+        let lane_totals = self.engine.loss_all(tapes, &specs, &mut clock);
         let mut totals = LossTotals::default();
         for t in &lane_totals {
             totals.accumulate(t);
         }
         // Scale the loss gradient to the global mean.
-        let inv_mask = if totals.wsum > 0.0 {
-            (1.0 / totals.wsum) as f32
-        } else {
-            0.0
-        };
-        let scales = vec![inv_mask; k];
-        self.engine.scale_loss_grad(&mut self.tapes, &scales);
+        let scales = vec![loss_grad_scale(&totals); k];
+        self.engine.scale_loss_grad(tapes, &scales);
 
         self.engine
-            .backward(&self.params, &mut ctx, &mut self.tapes, lp_opt, true, &mut clock)?;
+            .backward(&self.params, &mut ctx, tapes, lp_opt, true, &mut clock)?;
         drop(ctx);
 
         // ---- gradient allreduce + optimizer step -----------------------
-        let t = std::time::Instant::now();
-        let mut flats: Vec<Vec<f32>> = self.tapes.grads.iter().map(|g| g.flatten()).collect();
+        let t = Instant::now();
+        let mut flats: Vec<Vec<f32>> = tapes.grads.iter().map(|g| g.flatten()).collect();
         let ar_secs = collective::allreduce_sum(&mut flats, &self.tc.machine);
         epoch_comm
             .modeled_send_secs
@@ -240,9 +263,93 @@ impl Trainer {
         self.params.unflatten_into(&flat_params);
         breakdown.add(Category::Other, t.elapsed().as_secs_f64());
 
-        // ---- time accounting -------------------------------------------
-        // Compute was measured on this container's single core; a rank of
-        // the modeled machine has `cores_per_rank` of them (DESIGN.md §1),
+        Ok(self.finish_epoch(wall, breakdown, &clock, &epoch_comm, &totals))
+    }
+
+    /// One epoch under the threaded transport: every rank on its own OS
+    /// thread, running the identical engine control flow over its own
+    /// lane state; collectives rendezvous through the mailbox fabric.
+    fn epoch_threaded(&mut self) -> Result<EpochStats> {
+        let wall = Instant::now();
+        let k = self.k();
+        TransportKind::validate_rank_threads(self.tc.rank_threads, k)?;
+        let exchange = self.is_exchange_epoch();
+        self.select_labelprop();
+        if self.rank_tapes.len() != k {
+            self.rank_tapes = (0..k)
+                .map(|_| self.engine.tapes(&[self.shapes.n_pad], &self.params))
+                .collect();
+        }
+        for t in &mut self.rank_tapes {
+            t.clear_grads();
+        }
+
+        let fabric = Fabric::new(k);
+        let mut outs: Vec<RankOut> = (0..k).map(|_| RankOut::new(k)).collect();
+        {
+            // Shared inputs are `&` (Sync); each rank thread exclusively
+            // owns its RankOut, LaneHalo, and Tapes — the Send/Sync
+            // boundary of DESIGN.md §10.
+            let workers: &[WorkerCtx] = &self.workers;
+            let shapes = &self.shapes;
+            let tc = &self.tc;
+            let params = &self.params;
+            let engine = &self.engine;
+            let lp_sels: &[LpSelection] = &self.lp_sels;
+            let epoch = self.epoch;
+            let halos = self.fb.lanes_mut();
+            let fabric = &fabric;
+            let bodies: Vec<RankBody<'_>> = outs
+                .iter_mut()
+                .zip(halos.iter_mut())
+                .zip(self.rank_tapes.iter_mut())
+                .enumerate()
+                .map(|(w, ((out, halo), tp))| {
+                    Box::new(move || {
+                        run_rank_epoch(
+                            w, out, halo, tp, fabric, workers, shapes, tc, params, engine,
+                            lp_sels, epoch, exchange,
+                        )
+                    }) as RankBody<'_>
+                })
+                .collect();
+            transport::run_ranks(fabric, bodies)?;
+        }
+
+        // Merge per-rank shards: each shard populated only its own sender
+        // row, so the merge reproduces the sequential accounting exactly.
+        let mut epoch_comm = CommStats::new(k);
+        for o in &outs {
+            epoch_comm.merge(&o.comm);
+        }
+        // Optimizer step once, with the allreduced gradient (identical on
+        // every rank — use rank 0's copy).
+        let mut breakdown = Breakdown::new();
+        let t = Instant::now();
+        let mut flat_params = self.params.flatten();
+        self.opt.step(&mut flat_params, &outs[0].summed);
+        self.params.unflatten_into(&flat_params);
+        breakdown.add(Category::Other, t.elapsed().as_secs_f64());
+
+        let clocks: Vec<StageClock> = outs.iter_mut().map(|o| std::mem::take(&mut o.clock)).collect();
+        let clock = StageClock::merge_lanes(&clocks);
+        let totals = outs[0].totals;
+        Ok(self.finish_epoch(wall, breakdown, &clock, &epoch_comm, &totals))
+    }
+
+    /// Transport-agnostic epoch accounting tail: Eqn-2 bottleneck math,
+    /// Fig-12 breakdown, run-total accumulation.
+    fn finish_epoch(
+        &mut self,
+        wall: Instant,
+        mut breakdown: Breakdown,
+        clock: &StageClock,
+        epoch_comm: &CommStats,
+        totals: &LossTotals,
+    ) -> EpochStats {
+        let k = self.k();
+        // Compute was measured on this container's cores; a rank of the
+        // modeled machine has `cores_per_rank` of them (DESIGN.md §1),
         // so the modeled epoch divides compute-side categories by that.
         let cscale = self.tc.machine.cores_per_rank.max(1.0);
         let (compute, sync) = clock.bottleneck();
@@ -259,14 +366,7 @@ impl Trainer {
         let comm_secs = epoch_comm.modeled_comm_secs();
         breakdown.add(Category::Comm, comm_secs);
         // Accumulate into run totals.
-        for i in 0..k {
-            for j in 0..k {
-                self.comm_stats.data_bits[i][j] += epoch_comm.data_bits[i][j];
-                self.comm_stats.param_bits[i][j] += epoch_comm.param_bits[i][j];
-                self.comm_stats.messages[i][j] += epoch_comm.messages[i][j];
-            }
-            self.comm_stats.modeled_send_secs[i] += epoch_comm.modeled_send_secs[i];
-        }
+        self.comm_stats.merge(epoch_comm);
 
         let stats = EpochStats {
             epoch: self.epoch,
@@ -281,7 +381,7 @@ impl Trainer {
             comm_param_bytes: epoch_comm.total_param_bytes(),
         };
         self.epoch += 1;
-        Ok(stats)
+        stats
     }
 
     /// Train for the configured number of epochs, returning per-epoch stats.
@@ -299,6 +399,129 @@ impl Trainer {
         }
         Ok(out)
     }
+}
+
+/// Per-row split tags for the loss head (train rows follow the label-prop
+/// loss mask so embedded nodes carry no loss).
+fn split_tags(wc: &WorkerCtx, sel: &LpSelection, n: usize) -> Vec<u8> {
+    let lm = &sel.loss_mask;
+    (0..n)
+        .map(|i| {
+            if lm[i] > 0.0 {
+                SPLIT_TRAIN
+            } else if wc.val_mask[i] > 0.0 {
+                SPLIT_VAL
+            } else if wc.test_mask[i] > 0.0 {
+                SPLIT_TEST
+            } else {
+                SPLIT_NONE
+            }
+        })
+        .collect()
+}
+
+/// Global mean-loss gradient scale (`1 / Σ loss weights`).
+fn loss_grad_scale(totals: &LossTotals) -> f32 {
+    if totals.wsum > 0.0 {
+        (1.0 / totals.wsum) as f32
+    } else {
+        0.0
+    }
+}
+
+/// What one rank thread hands back to the driver after an epoch.
+struct RankOut {
+    /// Global (all-lane) loss totals — every rank folds the same
+    /// allgathered records in rank order, so all copies agree bit-exactly.
+    totals: LossTotals,
+    clock: StageClock,
+    /// This rank's CommStats shard (its own sender row only).
+    comm: CommStats,
+    /// The allreduced (summed) flat gradient.
+    summed: Vec<f32>,
+}
+
+impl RankOut {
+    fn new(k: usize) -> Self {
+        Self {
+            totals: LossTotals::default(),
+            clock: StageClock::new(1),
+            comm: CommStats::new(k),
+            summed: Vec::new(),
+        }
+    }
+}
+
+/// The SPMD body one rank thread executes for one full-batch epoch:
+/// forward → loss (+ allgathered global totals) → backward → ring
+/// gradient-allreduce. Mirrors `epoch_sequential` exactly, restricted to
+/// lane `w`.
+#[allow(clippy::too_many_arguments)]
+fn run_rank_epoch(
+    w: usize,
+    out: &mut RankOut,
+    halo: &mut LaneHalo,
+    tapes: &mut Tapes,
+    fabric: &Fabric,
+    workers: &[WorkerCtx],
+    shapes: &ShapeConfig,
+    tc: &TrainConfig,
+    params: &ModelParams,
+    engine: &Engine,
+    lp_sels: &[LpSelection],
+    epoch: usize,
+    exchange: bool,
+) -> Result<()> {
+    let n = shapes.n_pad;
+    let mut clock = StageClock::new(1);
+    {
+        let mut ctx = FullBatchRankCtx::new(
+            w,
+            &workers[w],
+            shapes,
+            halo,
+            &tc.machine,
+            tc.quant,
+            tc.seed,
+            epoch,
+            exchange,
+            fabric,
+            &mut out.comm,
+        );
+        let lp = LpInputs {
+            sel: &lp_sels[w..w + 1],
+            labels: vec![workers[w].labels.as_slice()],
+        };
+        let lp_opt = if tc.label_prop { Some(&lp) } else { None };
+        engine.forward(params, &mut ctx, tapes, lp_opt, &mut clock)?;
+
+        let tags = split_tags(&workers[w], &lp_sels[w], n);
+        let spec = LossSpec {
+            score_rows: n,
+            labels: &workers[w].labels,
+            split: &tags,
+            loss_w: &lp_sels[w].loss_mask,
+        };
+        let tot = engine.loss_all(tapes, &[spec], &mut clock)[0];
+        // Combine lane totals in rank order — the identical f64 fold the
+        // sequential driver performs.
+        let gathered = fabric.allgather_f64(w, tot.to_vec());
+        let mut totals = LossTotals::default();
+        for g in &gathered {
+            totals.accumulate(&LossTotals::from_slice(g));
+        }
+        engine.scale_loss_grad(tapes, &[loss_grad_scale(&totals)]);
+        engine.backward(params, &mut ctx, tapes, lp_opt, true, &mut clock)?;
+        out.totals = totals;
+    }
+    // Ring allreduce of the flat gradient (rank-order fold — bit-exact
+    // with `collective::allreduce_sum`).
+    let mut flat = tapes.grads[0].flatten();
+    let ar_secs = fabric.allreduce_sum(w, &mut flat, &tc.machine);
+    out.comm.modeled_send_secs[w] += ar_secs;
+    out.summed = flat;
+    out.clock = clock;
+    Ok(())
 }
 
 #[cfg(test)]
@@ -407,6 +630,24 @@ mod tests {
             .map(|s| s.epoch)
             .collect();
         assert_eq!(active, vec![0, 5]);
+    }
+
+    #[test]
+    fn threaded_transport_trains_and_learns() {
+        // The sequential↔threaded bit-parity suite lives in
+        // tests/spmd_parity.rs; this is the in-crate smoke check that the
+        // rank-thread epoch converges end to end (with staleness, so the
+        // skip-exchange path also runs threaded).
+        let tc = TrainConfig {
+            epochs: 20,
+            delay_comm: 2,
+            transport: TransportKind::Threaded,
+            ..Default::default()
+        };
+        let stats = train(3, tc, 400);
+        let last = stats.last().unwrap();
+        assert!(last.train_loss < stats[0].train_loss, "loss must decrease");
+        assert!(last.comm_data_bytes >= 0.0);
     }
 
     #[test]

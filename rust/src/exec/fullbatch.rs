@@ -5,9 +5,22 @@
 //! reverse pass ships halo cotangents back to their producers, so the
 //! distributed gradient equals the single-machine gradient to f32
 //! round-off (`tests/trainer_equivalence.rs`).
+//!
+//! Two context flavors share the per-lane state ([`LaneHalo`]) and the
+//! exact same per-lane FP work (bit-exactness pinned by
+//! `tests/spmd_parity.rs`):
+//!
+//! * [`FullBatchCtx`] — the sequential transport: one driver thread
+//!   steps every lane stage-synchronously and exchanges the whole k×k
+//!   payload matrix through `comm::alltoallv`;
+//! * [`FullBatchRankCtx`] — the threaded transport: each rank thread
+//!   owns one lane (`&mut LaneHalo`, no shared mutable graph state) and
+//!   rendezvouses its send row through the mailbox
+//!   [`Fabric`](crate::comm::transport::Fabric).
 
 use super::dispatch::AggDispatch;
 use super::GraphContext;
+use crate::comm::transport::Fabric;
 use crate::comm::{alltoallv, CommStats, Payload};
 use crate::coordinator::planner::WorkerCtx;
 use crate::perfmodel::MachineProfile;
@@ -16,37 +29,54 @@ use crate::runtime::ShapeConfig;
 use anyhow::Result;
 use std::time::Instant;
 
-/// Persistent halo state: received tensors survive across epochs so
-/// `delay_comm > 1` (the DistGNN cd-N baseline) trains on stale halos
-/// between exchange epochs, exactly like the paper's baseline.
-pub struct FullBatchState {
-    /// `recv_pre[layer][lane]`: received pre-aggregated partial rows.
-    recv_pre: Vec<Vec<Vec<f32>>>,
-    /// `recv_post[layer][lane]`: received raw post rows.
-    recv_post: Vec<Vec<Vec<f32>>>,
+/// One lane's persistent halo state: received tensors survive across
+/// epochs so `delay_comm > 1` (the DistGNN cd-N baseline) trains on stale
+/// halos between exchange epochs, exactly like the paper's baseline.
+/// Owned exclusively by its lane — the Send/Sync boundary that lets each
+/// rank thread take `&mut` to its own halo with no cross-rank aliasing.
+pub struct LaneHalo {
+    /// `recv_pre[layer]`: received pre-aggregated partial rows.
+    recv_pre: Vec<Vec<f32>>,
+    /// `recv_post[layer]`: received raw post rows.
+    recv_post: Vec<Vec<f32>>,
     /// Send-side pre-aggregation partials (`p_pre × maxf` scratch).
-    partials: Vec<Vec<f32>>,
-    d_recv_pre: Vec<Vec<f32>>,
-    d_recv_post: Vec<Vec<f32>>,
-    d_partials: Vec<Vec<f32>>,
+    partials: Vec<f32>,
+    d_recv_pre: Vec<f32>,
+    d_recv_post: Vec<f32>,
+    d_partials: Vec<f32>,
+}
+
+impl LaneHalo {
+    fn new(shapes: &ShapeConfig) -> Self {
+        let dims = shapes.layer_dims();
+        let maxf = shapes.f_in.max(shapes.hidden).max(shapes.classes);
+        Self {
+            recv_pre: (0..3).map(|l| vec![0f32; shapes.r_pre * dims[l].0]).collect(),
+            recv_post: (0..3).map(|l| vec![0f32; shapes.r_post * dims[l].0]).collect(),
+            partials: vec![0f32; shapes.p_pre * maxf],
+            d_recv_pre: vec![0f32; shapes.r_pre * maxf],
+            d_recv_post: vec![0f32; shapes.r_post * maxf],
+            d_partials: vec![0f32; shapes.p_pre * maxf],
+        }
+    }
+}
+
+/// Persistent halo state for all lanes (one [`LaneHalo`] per worker).
+pub struct FullBatchState {
+    lanes: Vec<LaneHalo>,
 }
 
 impl FullBatchState {
     pub fn new(shapes: &ShapeConfig, lanes: usize) -> Self {
-        let dims = shapes.layer_dims();
-        let maxf = shapes.f_in.max(shapes.hidden).max(shapes.classes);
         Self {
-            recv_pre: (0..3)
-                .map(|l| (0..lanes).map(|_| vec![0f32; shapes.r_pre * dims[l].0]).collect())
-                .collect(),
-            recv_post: (0..3)
-                .map(|l| (0..lanes).map(|_| vec![0f32; shapes.r_post * dims[l].0]).collect())
-                .collect(),
-            partials: (0..lanes).map(|_| vec![0f32; shapes.p_pre * maxf]).collect(),
-            d_recv_pre: (0..lanes).map(|_| vec![0f32; shapes.r_pre * maxf]).collect(),
-            d_recv_post: (0..lanes).map(|_| vec![0f32; shapes.r_post * maxf]).collect(),
-            d_partials: (0..lanes).map(|_| vec![0f32; shapes.p_pre * maxf]).collect(),
+            lanes: (0..lanes).map(|_| LaneHalo::new(shapes)).collect(),
         }
+    }
+
+    /// Split into per-lane halves for the threaded transport (each rank
+    /// thread takes one `&mut LaneHalo`).
+    pub fn lanes_mut(&mut self) -> &mut [LaneHalo] {
+        &mut self.lanes
     }
 }
 
@@ -117,68 +147,33 @@ impl<'a> FullBatchCtx<'a> {
                 if peer == w {
                     continue;
                 }
-                let ctx = &self.workers[w];
-                let (plo, phi) = ctx.send_pre_range[peer];
-                let post = &ctx.send_post_rows[peer];
-                let rows = (phi - plo) + post.len();
-                if rows == 0 {
-                    continue;
+                if let Some(p) = pack_fwd(
+                    &self.workers[w],
+                    &self.st.lanes[w],
+                    w,
+                    peer,
+                    l,
+                    fin,
+                    &h[w],
+                    self.quant,
+                    self.seed,
+                    self.epoch,
+                    &mut quant_secs[w],
+                ) {
+                    sends[w][peer] = p;
                 }
-                let mut buf = Vec::with_capacity(rows * fin);
-                buf.extend_from_slice(&self.st.partials[w][plo * fin..phi * fin]);
-                for &r in post {
-                    buf.extend_from_slice(&h[w][r as usize * fin..(r as usize + 1) * fin]);
-                }
-                sends[w][peer] = match self.quant {
-                    Some(bits) => {
-                        let t = Instant::now();
-                        let seed = (self.epoch as u64) << 32
-                            | (w as u64) << 16
-                            | (peer as u64) << 8
-                            | l as u64;
-                        let q = fused::quantize(&buf, rows, fin, bits, seed ^ self.seed);
-                        quant_secs[w] += t.elapsed().as_secs_f64();
-                        Payload::Quant(q)
-                    }
-                    None => Payload::F32(buf),
-                };
             }
         }
         let recvs = alltoallv(sends, self.machine, &mut *self.comm);
         for w in 0..k {
-            // Reset to zeros so stale pads never leak.
-            self.st.recv_pre[l][w].iter_mut().for_each(|x| *x = 0.0);
-            self.st.recv_post[l][w].iter_mut().for_each(|x| *x = 0.0);
-            for peer in 0..k {
-                let payload = &recvs[w][peer];
-                if payload.is_empty() {
-                    continue;
-                }
-                let ctx = &self.workers[w];
-                let (plo, phi) = ctx.recv_pre_range[peer];
-                let (qlo, qhi) = ctx.recv_post_range[peer];
-                let rows = (phi - plo) + (qhi - qlo);
-                let data: Vec<f32> = match payload {
-                    Payload::F32(v) => v.clone(),
-                    Payload::Quant(q) => {
-                        let t = Instant::now();
-                        let d = fused::dequantize(q);
-                        quant_secs[w] += t.elapsed().as_secs_f64();
-                        d
-                    }
-                    Payload::Empty => continue,
-                };
-                anyhow::ensure!(
-                    data.len() == rows * fin,
-                    "halo payload from {peer} to {w}: {} values, expected {}",
-                    data.len(),
-                    rows * fin
-                );
-                self.st.recv_pre[l][w][plo * fin..phi * fin]
-                    .copy_from_slice(&data[..(phi - plo) * fin]);
-                self.st.recv_post[l][w][qlo * fin..qhi * fin]
-                    .copy_from_slice(&data[(phi - plo) * fin..]);
-            }
+            scatter_fwd(
+                &self.workers[w],
+                &mut self.st.lanes[w],
+                l,
+                fin,
+                &recvs[w],
+                &mut quant_secs[w],
+            )?;
         }
         Ok(())
     }
@@ -190,48 +185,24 @@ impl<'a> FullBatchCtx<'a> {
         let k = self.k();
         let mut sends = Self::empty_matrix(k);
         for w in 0..k {
-            let ctx = &self.workers[w];
             for peer in 0..k {
                 if peer == w {
                     continue;
                 }
-                let (plo, phi) = ctx.recv_pre_range[peer];
-                let (qlo, qhi) = ctx.recv_post_range[peer];
-                let rows = (phi - plo) + (qhi - qlo);
-                if rows == 0 {
-                    continue;
+                if let Some(p) = pack_bwd(&self.workers[w], &self.st.lanes[w], peer, fin) {
+                    sends[w][peer] = p;
                 }
-                let mut buf = Vec::with_capacity(rows * fin);
-                buf.extend_from_slice(&self.st.d_recv_pre[w][plo * fin..phi * fin]);
-                buf.extend_from_slice(&self.st.d_recv_post[w][qlo * fin..qhi * fin]);
-                sends[w][peer] = Payload::F32(buf);
             }
         }
         let recvs = alltoallv(sends, self.machine, &mut *self.comm);
         for w in 0..k {
-            for peer in 0..k {
-                let payload = match &recvs[w][peer] {
-                    Payload::F32(v) if !v.is_empty() => v,
-                    _ => continue,
-                };
-                let ctx = &self.workers[w];
-                let (plo, phi) = ctx.send_pre_range[peer];
-                let post = &ctx.send_post_rows[peer];
-                let pre_vals = (phi - plo) * fin;
-                anyhow::ensure!(
-                    payload.len() == pre_vals + post.len() * fin,
-                    "reverse payload size mismatch"
-                );
-                self.st.d_partials[w][plo * fin..phi * fin].copy_from_slice(&payload[..pre_vals]);
-                // d_h[post_row] += returned post cotangent.
-                for (i, &r) in post.iter().enumerate() {
-                    let src = &payload[pre_vals + i * fin..pre_vals + (i + 1) * fin];
-                    let dst = &mut d_h[w][r as usize * fin..(r as usize + 1) * fin];
-                    for (a, &x) in dst.iter_mut().zip(src.iter()) {
-                        *a += x;
-                    }
-                }
-            }
+            scatter_bwd(
+                &self.workers[w],
+                &mut self.st.lanes[w],
+                fin,
+                &recvs[w],
+                &mut d_h[w],
+            )?;
         }
         Ok(())
     }
@@ -267,56 +238,36 @@ impl GraphContext for FullBatchCtx<'_> {
         quant_secs: &mut [f64],
     ) -> Result<()> {
         let k = self.k();
-        let p_pre = self.shapes.p_pre;
         // Send-side pre-aggregation partials (§5: producer partially
         // aggregates covered destinations before shipping).
         for w in 0..k {
             let t = Instant::now();
-            let ctx = &self.workers[w];
-            let p = &mut self.st.partials[w][..p_pre * fin];
-            p.iter_mut().for_each(|x| *x = 0.0);
-            disp.segment_sum(&h[w], fin, &ctx.pre.gather, &ctx.pre.seg, p_pre, p);
+            pre_partials(
+                &self.workers[w],
+                &mut self.st.lanes[w],
+                self.shapes,
+                fin,
+                &h[w],
+                disp,
+            );
             secs[w] += t.elapsed().as_secs_f64();
         }
         if self.exchange {
             self.exchange_fwd(layer, fin, h, quant_secs)?;
         }
         // Local aggregation + received-halo scatter + mean scaling.
-        let n = self.shapes.n_pad;
         for w in 0..k {
             let t = Instant::now();
-            let ctx = &self.workers[w];
-            let zv = &mut z[w];
-            zv.iter_mut().for_each(|x| *x = 0.0);
-            disp.segment_sum(
-                &h[w],
+            local_agg(
+                &self.workers[w],
+                &self.st.lanes[w],
+                self.shapes,
+                layer,
                 fin,
-                &ctx.spec.local.gather,
-                &ctx.spec.local.seg,
-                n,
-                zv,
+                &h[w],
+                &mut z[w],
+                disp,
             );
-            let rp = &self.st.recv_pre[layer][w];
-            for (i, &d) in ctx.spec.rpre_dst.iter().enumerate() {
-                let src = &rp[i * fin..(i + 1) * fin];
-                let dst = &mut zv[d as usize * fin..(d as usize + 1) * fin];
-                for (a, &b) in dst.iter_mut().zip(src.iter()) {
-                    *a += b;
-                }
-            }
-            let ro = &self.st.recv_post[layer][w];
-            for (&row, &d) in ctx.spec.post_row.iter().zip(ctx.spec.post_dst.iter()) {
-                let src = &ro[row as usize * fin..(row as usize + 1) * fin];
-                let dst = &mut zv[d as usize * fin..(d as usize + 1) * fin];
-                for (a, &b) in dst.iter_mut().zip(src.iter()) {
-                    *a += b;
-                }
-            }
-            for (i, &dv) in ctx.spec.deg_inv.iter().enumerate() {
-                for v in &mut zv[i * fin..(i + 1) * fin] {
-                    *v *= dv;
-                }
-            }
             secs[w] += t.elapsed().as_secs_f64();
         }
         Ok(())
@@ -332,46 +283,21 @@ impl GraphContext for FullBatchCtx<'_> {
         secs: &mut [f64],
     ) -> Result<()> {
         let k = self.k();
-        let n = self.shapes.n_pad;
         for w in 0..k {
             let t = Instant::now();
-            let ctx = &self.workers[w];
-            // Mean scaling folds into dZ.
-            for (i, &dv) in ctx.spec.deg_inv.iter().enumerate() {
-                for v in &mut dz[w][i * fin..(i + 1) * fin] {
-                    *v *= dv;
-                }
-            }
-            let dzv = &dz[w][..n * fin];
-            // (1) local edges, transposed: d_h[src] += dz[dst].
-            disp.segment_sum(
-                dzv,
+            local_agg_bwd(
+                &self.workers[w],
+                &mut self.st.lanes[w],
+                self.shapes,
                 fin,
-                &ctx.spec.local_t.gather,
-                &ctx.spec.local_t.seg,
-                n,
-                &mut d_h[w][..n * fin],
-            );
-            // (2) received partials: d_recv_pre[i] = dz[rpre_dst[i]].
-            for (i, &d) in ctx.spec.rpre_dst.iter().enumerate() {
-                self.st.d_recv_pre[w][i * fin..(i + 1) * fin]
-                    .copy_from_slice(&dzv[d as usize * fin..(d as usize + 1) * fin]);
-            }
-            // (3) post rows: d_recv_post[row] += dz[dst] (transposed spec).
-            let drp = &mut self.st.d_recv_post[w][..self.shapes.r_post * fin];
-            drp.iter_mut().for_each(|x| *x = 0.0);
-            disp.segment_sum(
-                dzv,
-                fin,
-                &ctx.spec.post_t.gather,
-                &ctx.spec.post_t.seg,
-                self.shapes.r_post,
-                drp,
+                &mut dz[w],
+                &mut d_h[w],
+                disp,
             );
             secs[w] += t.elapsed().as_secs_f64();
         }
         for w in 0..k {
-            self.st.d_partials[w][..self.shapes.p_pre * fin]
+            self.st.lanes[w].d_partials[..self.shapes.p_pre * fin]
                 .iter_mut()
                 .for_each(|x| *x = 0.0);
         }
@@ -382,18 +308,437 @@ impl GraphContext for FullBatchCtx<'_> {
         // d_h[gather[i]] += d_partials[seg[i]].
         for w in 0..k {
             let t = Instant::now();
-            let ctx = &self.workers[w];
-            let dp = &self.st.d_partials[w];
-            let dh = &mut d_h[w];
-            for (&g, &s) in ctx.pre.gather.iter().zip(ctx.pre.seg.iter()) {
-                let src = &dp[s as usize * fin..(s as usize + 1) * fin];
-                let dst = &mut dh[g as usize * fin..(g as usize + 1) * fin];
-                for (a, &b) in dst.iter_mut().zip(src.iter()) {
-                    *a += b;
-                }
-            }
+            fold_returned_partials(&self.workers[w], &self.st.lanes[w], fin, &mut d_h[w]);
             secs[w] += t.elapsed().as_secs_f64();
         }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-lane building blocks, shared verbatim by the sequential multi-lane
+// context and the threaded per-rank context — one implementation is what
+// makes transport parity bit-exact by construction.
+// ---------------------------------------------------------------------
+
+/// Zero and fill one lane's send-side pre-aggregation partials.
+fn pre_partials(
+    ctx: &WorkerCtx,
+    lane: &mut LaneHalo,
+    shapes: &ShapeConfig,
+    fin: usize,
+    h: &[f32],
+    disp: &AggDispatch,
+) {
+    let p_pre = shapes.p_pre;
+    let p = &mut lane.partials[..p_pre * fin];
+    p.iter_mut().for_each(|x| *x = 0.0);
+    disp.segment_sum(h, fin, &ctx.pre.gather, &ctx.pre.seg, p_pre, p);
+}
+
+/// Build the forward payload lane `w` sends to `peer` for layer `l`
+/// (pre partials + raw post rows, optionally quantized). `None` when the
+/// pair exchanges nothing.
+#[allow(clippy::too_many_arguments)]
+fn pack_fwd(
+    ctx: &WorkerCtx,
+    lane: &LaneHalo,
+    w: usize,
+    peer: usize,
+    l: usize,
+    fin: usize,
+    h: &[f32],
+    quant: Option<Bits>,
+    seed: u64,
+    epoch: usize,
+    quant_secs: &mut f64,
+) -> Option<Payload> {
+    let (plo, phi) = ctx.send_pre_range[peer];
+    let post = &ctx.send_post_rows[peer];
+    let rows = (phi - plo) + post.len();
+    if rows == 0 {
+        return None;
+    }
+    let mut buf = Vec::with_capacity(rows * fin);
+    buf.extend_from_slice(&lane.partials[plo * fin..phi * fin]);
+    for &r in post {
+        buf.extend_from_slice(&h[r as usize * fin..(r as usize + 1) * fin]);
+    }
+    Some(match quant {
+        Some(bits) => {
+            let t = Instant::now();
+            let qseed =
+                (epoch as u64) << 32 | (w as u64) << 16 | (peer as u64) << 8 | l as u64;
+            let q = fused::quantize(&buf, rows, fin, bits, qseed ^ seed);
+            *quant_secs += t.elapsed().as_secs_f64();
+            Payload::Quant(q)
+        }
+        None => Payload::F32(buf),
+    })
+}
+
+/// Scatter one lane's received forward payloads (indexed by sender) into
+/// its persistent recv buffers for layer `l`, resetting them first so
+/// stale pads never leak.
+fn scatter_fwd(
+    ctx: &WorkerCtx,
+    lane: &mut LaneHalo,
+    l: usize,
+    fin: usize,
+    recvs: &[Payload],
+    quant_secs: &mut f64,
+) -> Result<()> {
+    lane.recv_pre[l].iter_mut().for_each(|x| *x = 0.0);
+    lane.recv_post[l].iter_mut().for_each(|x| *x = 0.0);
+    for (peer, payload) in recvs.iter().enumerate() {
+        if payload.is_empty() {
+            continue;
+        }
+        let (plo, phi) = ctx.recv_pre_range[peer];
+        let (qlo, qhi) = ctx.recv_post_range[peer];
+        let rows = (phi - plo) + (qhi - qlo);
+        let data: Vec<f32> = match payload {
+            Payload::F32(v) => v.clone(),
+            Payload::Quant(q) => {
+                let t = Instant::now();
+                let d = fused::dequantize(q);
+                *quant_secs += t.elapsed().as_secs_f64();
+                d
+            }
+            Payload::Empty => continue,
+        };
+        anyhow::ensure!(
+            data.len() == rows * fin,
+            "halo payload from {peer} to worker {}: {} values, expected {}",
+            ctx.worker,
+            data.len(),
+            rows * fin
+        );
+        lane.recv_pre[l][plo * fin..phi * fin].copy_from_slice(&data[..(phi - plo) * fin]);
+        lane.recv_post[l][qlo * fin..qhi * fin].copy_from_slice(&data[(phi - plo) * fin..]);
+    }
+    Ok(())
+}
+
+/// Local aggregation + received-halo scatter + mean scaling for one lane;
+/// fully overwrites `z`.
+#[allow(clippy::too_many_arguments)]
+fn local_agg(
+    ctx: &WorkerCtx,
+    lane: &LaneHalo,
+    shapes: &ShapeConfig,
+    layer: usize,
+    fin: usize,
+    h: &[f32],
+    z: &mut Vec<f32>,
+    disp: &AggDispatch,
+) {
+    let n = shapes.n_pad;
+    z.iter_mut().for_each(|x| *x = 0.0);
+    disp.segment_sum(h, fin, &ctx.spec.local.gather, &ctx.spec.local.seg, n, z);
+    let rp = &lane.recv_pre[layer];
+    for (i, &d) in ctx.spec.rpre_dst.iter().enumerate() {
+        let src = &rp[i * fin..(i + 1) * fin];
+        let dst = &mut z[d as usize * fin..(d as usize + 1) * fin];
+        for (a, &b) in dst.iter_mut().zip(src.iter()) {
+            *a += b;
+        }
+    }
+    let ro = &lane.recv_post[layer];
+    for (&row, &d) in ctx.spec.post_row.iter().zip(ctx.spec.post_dst.iter()) {
+        let src = &ro[row as usize * fin..(row as usize + 1) * fin];
+        let dst = &mut z[d as usize * fin..(d as usize + 1) * fin];
+        for (a, &b) in dst.iter_mut().zip(src.iter()) {
+            *a += b;
+        }
+    }
+    for (i, &dv) in ctx.spec.deg_inv.iter().enumerate() {
+        for v in &mut z[i * fin..(i + 1) * fin] {
+            *v *= dv;
+        }
+    }
+}
+
+/// Backward of [`local_agg`] for one lane: fold mean scaling into `dz`,
+/// scatter through the transposed local/post specs, and capture the halo
+/// cotangents (`d_recv_pre`/`d_recv_post`) for the reverse exchange.
+fn local_agg_bwd(
+    ctx: &WorkerCtx,
+    lane: &mut LaneHalo,
+    shapes: &ShapeConfig,
+    fin: usize,
+    dz: &mut [f32],
+    d_h: &mut [f32],
+    disp: &AggDispatch,
+) {
+    let n = shapes.n_pad;
+    // Mean scaling folds into dZ.
+    for (i, &dv) in ctx.spec.deg_inv.iter().enumerate() {
+        for v in &mut dz[i * fin..(i + 1) * fin] {
+            *v *= dv;
+        }
+    }
+    let dzv = &dz[..n * fin];
+    // (1) local edges, transposed: d_h[src] += dz[dst].
+    disp.segment_sum(
+        dzv,
+        fin,
+        &ctx.spec.local_t.gather,
+        &ctx.spec.local_t.seg,
+        n,
+        &mut d_h[..n * fin],
+    );
+    // (2) received partials: d_recv_pre[i] = dz[rpre_dst[i]].
+    for (i, &d) in ctx.spec.rpre_dst.iter().enumerate() {
+        lane.d_recv_pre[i * fin..(i + 1) * fin]
+            .copy_from_slice(&dzv[d as usize * fin..(d as usize + 1) * fin]);
+    }
+    // (3) post rows: d_recv_post[row] += dz[dst] (transposed spec).
+    let drp = &mut lane.d_recv_post[..shapes.r_post * fin];
+    drp.iter_mut().for_each(|x| *x = 0.0);
+    disp.segment_sum(
+        dzv,
+        fin,
+        &ctx.spec.post_t.gather,
+        &ctx.spec.post_t.seg,
+        shapes.r_post,
+        drp,
+    );
+}
+
+/// Build the reverse (cotangent) payload one lane returns to `peer`:
+/// the pre/post halo cotangents it received from that producer.
+fn pack_bwd(ctx: &WorkerCtx, lane: &LaneHalo, peer: usize, fin: usize) -> Option<Payload> {
+    let (plo, phi) = ctx.recv_pre_range[peer];
+    let (qlo, qhi) = ctx.recv_post_range[peer];
+    let rows = (phi - plo) + (qhi - qlo);
+    if rows == 0 {
+        return None;
+    }
+    let mut buf = Vec::with_capacity(rows * fin);
+    buf.extend_from_slice(&lane.d_recv_pre[plo * fin..phi * fin]);
+    buf.extend_from_slice(&lane.d_recv_post[qlo * fin..qhi * fin]);
+    Some(Payload::F32(buf))
+}
+
+/// Producer side of the reverse exchange: unpack returned cotangents into
+/// `d_partials` (pre) and accumulate post-row cotangents into `d_h`.
+fn scatter_bwd(
+    ctx: &WorkerCtx,
+    lane: &mut LaneHalo,
+    fin: usize,
+    recvs: &[Payload],
+    d_h: &mut [f32],
+) -> Result<()> {
+    for (peer, payload) in recvs.iter().enumerate() {
+        let payload = match payload {
+            Payload::F32(v) if !v.is_empty() => v,
+            _ => continue,
+        };
+        let (plo, phi) = ctx.send_pre_range[peer];
+        let post = &ctx.send_post_rows[peer];
+        let pre_vals = (phi - plo) * fin;
+        anyhow::ensure!(
+            payload.len() == pre_vals + post.len() * fin,
+            "reverse payload size mismatch"
+        );
+        lane.d_partials[plo * fin..phi * fin].copy_from_slice(&payload[..pre_vals]);
+        // d_h[post_row] += returned post cotangent.
+        for (i, &r) in post.iter().enumerate() {
+            let src = &payload[pre_vals + i * fin..pre_vals + (i + 1) * fin];
+            let dst = &mut d_h[r as usize * fin..(r as usize + 1) * fin];
+            for (a, &x) in dst.iter_mut().zip(src.iter()) {
+                *a += x;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Final backward step for one lane: scatter returned partial cotangents
+/// back through the pre gather (`d_h[gather[i]] += d_partials[seg[i]]`).
+fn fold_returned_partials(ctx: &WorkerCtx, lane: &LaneHalo, fin: usize, d_h: &mut [f32]) {
+    for (&g, &s) in ctx.pre.gather.iter().zip(ctx.pre.seg.iter()) {
+        let src = &lane.d_partials[s as usize * fin..(s as usize + 1) * fin];
+        let dst = &mut d_h[g as usize * fin..(g as usize + 1) * fin];
+        for (a, &b) in dst.iter_mut().zip(src.iter()) {
+            *a += b;
+        }
+    }
+}
+
+/// Single-rank full-batch context for the threaded transport: lane
+/// `rank`'s view only. All mutable state is the rank's own
+/// ([`LaneHalo`], its `CommStats` shard); everything shared is `&`
+/// (worker plan, shapes, machine profile) — the Send/Sync contract of
+/// DESIGN.md §10. Halo payloads rendezvous through the mailbox
+/// [`Fabric`]; the engine drives it exactly like the sequential context
+/// (it implements the same [`GraphContext`], with `lanes() == 1`).
+pub struct FullBatchRankCtx<'a> {
+    rank: usize,
+    ctx: &'a WorkerCtx,
+    shapes: &'a ShapeConfig,
+    st: &'a mut LaneHalo,
+    machine: &'a MachineProfile,
+    quant: Option<Bits>,
+    seed: u64,
+    epoch: usize,
+    exchange: bool,
+    fabric: &'a Fabric,
+    comm: &'a mut CommStats,
+}
+
+impl<'a> FullBatchRankCtx<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        rank: usize,
+        ctx: &'a WorkerCtx,
+        shapes: &'a ShapeConfig,
+        st: &'a mut LaneHalo,
+        machine: &'a MachineProfile,
+        quant: Option<Bits>,
+        seed: u64,
+        epoch: usize,
+        exchange: bool,
+        fabric: &'a Fabric,
+        comm: &'a mut CommStats,
+    ) -> Self {
+        Self {
+            rank,
+            ctx,
+            shapes,
+            st,
+            machine,
+            quant,
+            seed,
+            epoch,
+            exchange,
+            fabric,
+            comm,
+        }
+    }
+
+    fn exchange_fwd(
+        &mut self,
+        l: usize,
+        fin: usize,
+        h: &[f32],
+        quant_secs: &mut f64,
+    ) -> Result<()> {
+        let k = self.fabric.k();
+        let mut sends: Vec<Payload> = (0..k).map(|_| Payload::Empty).collect();
+        for (peer, slot) in sends.iter_mut().enumerate() {
+            if peer == self.rank {
+                continue;
+            }
+            if let Some(p) = pack_fwd(
+                self.ctx, self.st, self.rank, peer, l, fin, h, self.quant, self.seed,
+                self.epoch, quant_secs,
+            ) {
+                *slot = p;
+            }
+        }
+        let recvs = self.fabric.alltoallv(self.rank, sends, self.machine, self.comm);
+        scatter_fwd(self.ctx, self.st, l, fin, &recvs, quant_secs)
+    }
+
+    fn exchange_bwd(&mut self, fin: usize, d_h: &mut [f32]) -> Result<()> {
+        let k = self.fabric.k();
+        let mut sends: Vec<Payload> = (0..k).map(|_| Payload::Empty).collect();
+        for (peer, slot) in sends.iter_mut().enumerate() {
+            if peer == self.rank {
+                continue;
+            }
+            if let Some(p) = pack_bwd(self.ctx, self.st, peer, fin) {
+                *slot = p;
+            }
+        }
+        let recvs = self.fabric.alltoallv(self.rank, sends, self.machine, self.comm);
+        scatter_bwd(self.ctx, self.st, fin, &recvs, d_h)
+    }
+}
+
+impl GraphContext for FullBatchRankCtx<'_> {
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn load_inputs(
+        &mut self,
+        x: &mut [Vec<f32>],
+        secs: &mut [f64],
+        _quant_secs: &mut [f64],
+    ) -> Result<()> {
+        let t = Instant::now();
+        x[0].copy_from_slice(&self.ctx.features);
+        secs[0] += t.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    fn aggregate_fwd(
+        &mut self,
+        layer: usize,
+        fin: usize,
+        h: &[Vec<f32>],
+        z: &mut [Vec<f32>],
+        disp: &AggDispatch,
+        secs: &mut [f64],
+        quant_secs: &mut [f64],
+    ) -> Result<()> {
+        {
+            let t = Instant::now();
+            pre_partials(self.ctx, self.st, self.shapes, fin, &h[0], disp);
+            secs[0] += t.elapsed().as_secs_f64();
+        }
+        if self.exchange {
+            self.exchange_fwd(layer, fin, &h[0], &mut quant_secs[0])?;
+        }
+        let t = Instant::now();
+        local_agg(
+            self.ctx,
+            self.st,
+            self.shapes,
+            layer,
+            fin,
+            &h[0],
+            &mut z[0],
+            disp,
+        );
+        secs[0] += t.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    fn aggregate_bwd(
+        &mut self,
+        _layer: usize,
+        fin: usize,
+        dz: &mut [Vec<f32>],
+        d_h: &mut [Vec<f32>],
+        disp: &AggDispatch,
+        secs: &mut [f64],
+    ) -> Result<()> {
+        {
+            let t = Instant::now();
+            local_agg_bwd(
+                self.ctx,
+                self.st,
+                self.shapes,
+                fin,
+                &mut dz[0],
+                &mut d_h[0],
+                disp,
+            );
+            secs[0] += t.elapsed().as_secs_f64();
+        }
+        self.st.d_partials[..self.shapes.p_pre * fin]
+            .iter_mut()
+            .for_each(|x| *x = 0.0);
+        if self.exchange {
+            self.exchange_bwd(fin, &mut d_h[0])?;
+        }
+        let t = Instant::now();
+        fold_returned_partials(self.ctx, self.st, fin, &mut d_h[0]);
+        secs[0] += t.elapsed().as_secs_f64();
         Ok(())
     }
 }

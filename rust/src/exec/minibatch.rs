@@ -4,10 +4,18 @@
 //! on the wire, rows returned through `comm::alltoallv`, optionally
 //! `quant::fused`-quantized), and aggregation runs the batch's induced
 //! weighted CSR through the dispatcher's SpMM path.
+//!
+//! Like the full-batch module, two context flavors share the per-pair
+//! request/serve/assemble building blocks: [`MiniBatchCtx`] (sequential
+//! transport, all lanes in one driver thread) and [`MiniBatchRankCtx`]
+//! (threaded transport, one lane per rank thread over the mailbox
+//! [`Fabric`](crate::comm::transport::Fabric)) — bit-exactness across
+//! transports is pinned by `tests/spmd_parity.rs`.
 
 use super::dispatch::AggDispatch;
 use super::GraphContext;
 use crate::agg::spmm::CsrMatrix;
+use crate::comm::transport::Fabric;
 use crate::comm::{alltoallv, CommStats, Payload};
 use crate::graph::generate::LabelledGraph;
 use crate::perfmodel::MachineProfile;
@@ -51,18 +59,7 @@ impl<'a> MiniBatchCtx<'a> {
     ) -> Self {
         let mats = per_lane
             .iter()
-            .map(|slot| {
-                slot.map(|bi| {
-                    let mb = &batches[bi];
-                    CsrMatrix {
-                        n_rows: mb.adj.n,
-                        n_cols: mb.adj.n,
-                        row_ptr: mb.adj.row_ptr.clone(),
-                        col_idx: mb.adj.col_idx.clone(),
-                        weights: mb.edge_weight.clone(),
-                    }
-                })
-            })
+            .map(|slot| slot.map(|bi| induced_csr(&batches[bi])))
             .collect();
         Self {
             lg,
@@ -96,29 +93,13 @@ impl GraphContext for MiniBatchCtx<'_> {
         let k = self.per_lane.len();
         let f = self.lg.feat_dim;
         // ---- id requests --------------------------------------------
-        let mut req: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); k]; k];
-        for w in 0..k {
-            if let Some(bi) = self.per_lane[w] {
-                for &v in &self.batches[bi].n_id {
-                    let o = self.assign[v as usize] as usize;
-                    if o != w {
-                        req[w][o].push(v);
-                    }
-                }
-            }
-        }
-        let req_sends: Vec<Vec<Payload>> = req
-            .iter()
-            .map(|row| {
-                row.iter()
-                    .map(|ids| {
-                        if ids.is_empty() {
-                            Payload::Empty
-                        } else {
-                            Payload::F32(ids.iter().map(|&v| v as f32).collect())
-                        }
-                    })
-                    .collect()
+        let req_sends: Vec<Vec<Payload>> = (0..k)
+            .map(|w| match self.per_lane[w] {
+                Some(bi) => request_ids(&self.batches[bi], self.assign, w, k)
+                    .iter()
+                    .map(|ids| ids_payload(ids))
+                    .collect(),
+                None => (0..k).map(|_| Payload::Empty).collect(),
             })
             .collect();
         let req_recvs = alltoallv(req_sends, self.machine, &mut *self.comm);
@@ -133,24 +114,17 @@ impl GraphContext for MiniBatchCtx<'_> {
                     Payload::F32(v) if !v.is_empty() => v,
                     _ => continue,
                 };
-                let rows = ids.len();
-                let mut buf = Vec::with_capacity(rows * f);
-                for &idf in ids {
-                    buf.extend_from_slice(self.lg.feature_row(idf as usize));
-                }
-                reply_sends[o][w] = match self.quant {
-                    Some(bits) => {
-                        let t = Instant::now();
-                        let qseed = mix2(
-                            mix2(self.seed, ((self.epoch as u64) << 20) ^ self.round as u64),
-                            ((o as u64) << 8) ^ w as u64,
-                        );
-                        let q = fused::quantize(&buf, rows, f, bits, qseed);
-                        quant_secs[o] += t.elapsed().as_secs_f64();
-                        Payload::Quant(q)
-                    }
-                    None => Payload::F32(buf),
-                };
+                reply_sends[o][w] = reply_payload(
+                    self.lg,
+                    ids,
+                    self.quant,
+                    self.seed,
+                    self.epoch,
+                    self.round,
+                    o,
+                    w,
+                    &mut quant_secs[o],
+                );
             }
         }
         let mut replies = alltoallv(reply_sends, self.machine, &mut *self.comm);
@@ -162,36 +136,9 @@ impl GraphContext for MiniBatchCtx<'_> {
                 None => continue,
             };
             let mb = &self.batches[bi];
-            // Each reply is consumed exactly once — move it out.
-            let mut decoded: Vec<Option<Vec<f32>>> = vec![None; k];
-            for (o, slot) in replies[w].iter_mut().enumerate() {
-                match std::mem::replace(slot, Payload::Empty) {
-                    Payload::F32(v) if !v.is_empty() => decoded[o] = Some(v),
-                    Payload::Quant(q) => {
-                        let t = Instant::now();
-                        decoded[o] = Some(fused::dequantize(&q));
-                        quant_secs[w] += t.elapsed().as_secs_f64();
-                    }
-                    _ => {}
-                }
-            }
+            let decoded = decode_replies(&mut replies[w], &mut quant_secs[w]);
             let t = Instant::now();
-            let xw = &mut x[w];
-            let mut cursors = vec![0usize; k];
-            for (i, &v) in mb.n_id.iter().enumerate() {
-                let o = self.assign[v as usize] as usize;
-                if o == w {
-                    xw[i * f..(i + 1) * f].copy_from_slice(self.lg.feature_row(v as usize));
-                } else {
-                    let rows = decoded[o]
-                        .as_ref()
-                        .ok_or_else(|| anyhow::anyhow!("missing reply from {o} to {w}"))?;
-                    let c = cursors[o];
-                    anyhow::ensure!((c + 1) * f <= rows.len(), "reply row underflow");
-                    xw[i * f..(i + 1) * f].copy_from_slice(&rows[c * f..(c + 1) * f]);
-                    cursors[o] += 1;
-                }
-            }
+            assemble_x(self.lg, self.assign, mb, w, &decoded, f, &mut x[w])?;
             secs[w] += t.elapsed().as_secs_f64();
         }
         Ok(())
@@ -234,6 +181,272 @@ impl GraphContext for MiniBatchCtx<'_> {
                 disp.spmm_t(a, &dz[w][..a.n_rows * fin], fin, &mut d_h[w][..a.n_cols * fin]);
                 secs[w] += t.elapsed().as_secs_f64();
             }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Per-pair building blocks, shared by the sequential multi-lane context
+// and the threaded per-rank context (one implementation ⇒ transport
+// parity is bit-exact by construction).
+// ---------------------------------------------------------------------
+
+fn induced_csr(mb: &MiniBatch) -> CsrMatrix {
+    CsrMatrix {
+        n_rows: mb.adj.n,
+        n_cols: mb.adj.n,
+        row_ptr: mb.adj.row_ptr.clone(),
+        col_idx: mb.adj.col_idx.clone(),
+        weights: mb.edge_weight.clone(),
+    }
+}
+
+/// The remote feature-row ids lane `w` must fetch, grouped by owner.
+fn request_ids(mb: &MiniBatch, assign: &[u32], w: usize, k: usize) -> Vec<Vec<u32>> {
+    let mut req: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for &v in &mb.n_id {
+        let o = assign[v as usize] as usize;
+        if o != w {
+            req[o].push(v);
+        }
+    }
+    req
+}
+
+/// Ids travel as an F32 payload (`n < 2^24` keeps them exact — enforced
+/// at trainer construction).
+fn ids_payload(ids: &[u32]) -> Payload {
+    if ids.is_empty() {
+        Payload::Empty
+    } else {
+        Payload::F32(ids.iter().map(|&v| v as f32).collect())
+    }
+}
+
+/// Owner `o` serves requester `w`: gather the requested feature rows,
+/// optionally quantizing them (quantize time charged to the owner).
+#[allow(clippy::too_many_arguments)]
+fn reply_payload(
+    lg: &LabelledGraph,
+    ids: &[f32],
+    quant: Option<Bits>,
+    seed: u64,
+    epoch: usize,
+    round: usize,
+    o: usize,
+    w: usize,
+    quant_secs: &mut f64,
+) -> Payload {
+    let f = lg.feat_dim;
+    let rows = ids.len();
+    let mut buf = Vec::with_capacity(rows * f);
+    for &idf in ids {
+        buf.extend_from_slice(lg.feature_row(idf as usize));
+    }
+    match quant {
+        Some(bits) => {
+            let t = Instant::now();
+            let qseed = mix2(
+                mix2(seed, ((epoch as u64) << 20) ^ round as u64),
+                ((o as u64) << 8) ^ w as u64,
+            );
+            let q = fused::quantize(&buf, rows, f, bits, qseed);
+            *quant_secs += t.elapsed().as_secs_f64();
+            Payload::Quant(q)
+        }
+        None => Payload::F32(buf),
+    }
+}
+
+/// Move each reply out of its slot and dequantize (dequantize time
+/// charged to the requester). `decoded[o]` = rows from owner `o`.
+fn decode_replies(replies: &mut [Payload], quant_secs: &mut f64) -> Vec<Option<Vec<f32>>> {
+    let mut decoded: Vec<Option<Vec<f32>>> = vec![None; replies.len()];
+    for (o, slot) in replies.iter_mut().enumerate() {
+        match std::mem::replace(slot, Payload::Empty) {
+            Payload::F32(v) if !v.is_empty() => decoded[o] = Some(v),
+            Payload::Quant(q) => {
+                let t = Instant::now();
+                decoded[o] = Some(fused::dequantize(&q));
+                *quant_secs += t.elapsed().as_secs_f64();
+            }
+            _ => {}
+        }
+    }
+    decoded
+}
+
+/// Interleave local rows and decoded remote rows into the lane's batch
+/// input matrix (each reply consumed front to back, exactly once).
+fn assemble_x(
+    lg: &LabelledGraph,
+    assign: &[u32],
+    mb: &MiniBatch,
+    w: usize,
+    decoded: &[Option<Vec<f32>>],
+    f: usize,
+    x: &mut [f32],
+) -> Result<()> {
+    let mut cursors = vec![0usize; decoded.len()];
+    for (i, &v) in mb.n_id.iter().enumerate() {
+        let o = assign[v as usize] as usize;
+        if o == w {
+            x[i * f..(i + 1) * f].copy_from_slice(lg.feature_row(v as usize));
+        } else {
+            let rows = decoded[o]
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("missing reply from {o} to {w}"))?;
+            let c = cursors[o];
+            anyhow::ensure!((c + 1) * f <= rows.len(), "reply row underflow");
+            x[i * f..(i + 1) * f].copy_from_slice(&rows[c * f..(c + 1) * f]);
+            cursors[o] += 1;
+        }
+    }
+    Ok(())
+}
+
+/// Single-rank mini-batch context for the threaded transport: lane
+/// `rank`'s batch only (or `None` for an idle lane — it still serves
+/// feature rows it owns and participates in every collective). All
+/// mutable state is the rank's own; shared inputs (`LabelledGraph`,
+/// ownership assignment) are `&` — the Send/Sync contract of
+/// DESIGN.md §10.
+pub struct MiniBatchRankCtx<'a> {
+    rank: usize,
+    lg: &'a LabelledGraph,
+    assign: &'a [u32],
+    batch: Option<&'a MiniBatch>,
+    machine: &'a MachineProfile,
+    quant: Option<Bits>,
+    seed: u64,
+    epoch: usize,
+    round: usize,
+    fabric: &'a Fabric,
+    comm: &'a mut CommStats,
+    mat: Option<CsrMatrix>,
+}
+
+impl<'a> MiniBatchRankCtx<'a> {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        rank: usize,
+        lg: &'a LabelledGraph,
+        assign: &'a [u32],
+        batch: Option<&'a MiniBatch>,
+        machine: &'a MachineProfile,
+        quant: Option<Bits>,
+        seed: u64,
+        epoch: usize,
+        round: usize,
+        fabric: &'a Fabric,
+        comm: &'a mut CommStats,
+    ) -> Self {
+        let mat = batch.map(induced_csr);
+        Self {
+            rank,
+            lg,
+            assign,
+            batch,
+            machine,
+            quant,
+            seed,
+            epoch,
+            round,
+            fabric,
+            comm,
+            mat,
+        }
+    }
+}
+
+impl GraphContext for MiniBatchRankCtx<'_> {
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn load_inputs(
+        &mut self,
+        x: &mut [Vec<f32>],
+        secs: &mut [f64],
+        quant_secs: &mut [f64],
+    ) -> Result<()> {
+        let k = self.fabric.k();
+        let f = self.lg.feat_dim;
+        // ---- id requests (own row) ----------------------------------
+        let req_sends: Vec<Payload> = match self.batch {
+            Some(mb) => request_ids(mb, self.assign, self.rank, k)
+                .iter()
+                .map(|ids| ids_payload(ids))
+                .collect(),
+            None => (0..k).map(|_| Payload::Empty).collect(),
+        };
+        let req_recvs = self.fabric.alltoallv(self.rank, req_sends, self.machine, self.comm);
+
+        // ---- serve requests addressed to this owner -----------------
+        let mut reply_sends: Vec<Payload> = (0..k).map(|_| Payload::Empty).collect();
+        for (w, payload) in req_recvs.iter().enumerate() {
+            let ids = match payload {
+                Payload::F32(v) if !v.is_empty() => v,
+                _ => continue,
+            };
+            reply_sends[w] = reply_payload(
+                self.lg,
+                ids,
+                self.quant,
+                self.seed,
+                self.epoch,
+                self.round,
+                self.rank,
+                w,
+                &mut quant_secs[0],
+            );
+        }
+        let mut replies = self.fabric.alltoallv(self.rank, reply_sends, self.machine, self.comm);
+
+        // ---- assemble own X -----------------------------------------
+        if let Some(mb) = self.batch {
+            let decoded = decode_replies(&mut replies, &mut quant_secs[0]);
+            let t = Instant::now();
+            assemble_x(self.lg, self.assign, mb, self.rank, &decoded, f, &mut x[0])?;
+            secs[0] += t.elapsed().as_secs_f64();
+        }
+        Ok(())
+    }
+
+    fn aggregate_fwd(
+        &mut self,
+        _layer: usize,
+        fin: usize,
+        h: &[Vec<f32>],
+        z: &mut [Vec<f32>],
+        disp: &AggDispatch,
+        secs: &mut [f64],
+        _quant_secs: &mut [f64],
+    ) -> Result<()> {
+        if let Some(a) = &self.mat {
+            let t = Instant::now();
+            let zv = &mut z[0][..a.n_rows * fin];
+            zv.iter_mut().for_each(|x| *x = 0.0);
+            disp.spmm(a, &h[0][..a.n_cols * fin], fin, zv);
+            secs[0] += t.elapsed().as_secs_f64();
+        }
+        Ok(())
+    }
+
+    fn aggregate_bwd(
+        &mut self,
+        _layer: usize,
+        fin: usize,
+        dz: &mut [Vec<f32>],
+        d_h: &mut [Vec<f32>],
+        disp: &AggDispatch,
+        secs: &mut [f64],
+    ) -> Result<()> {
+        if let Some(a) = &self.mat {
+            let t = Instant::now();
+            disp.spmm_t(a, &dz[0][..a.n_rows * fin], fin, &mut d_h[0][..a.n_cols * fin]);
+            secs[0] += t.elapsed().as_secs_f64();
         }
         Ok(())
     }

@@ -25,8 +25,8 @@ pub mod fullbatch;
 pub mod minibatch;
 
 pub use dispatch::{AggDispatch, AggKernel};
-pub use fullbatch::{FullBatchCtx, FullBatchState};
-pub use minibatch::MiniBatchCtx;
+pub use fullbatch::{FullBatchCtx, FullBatchRankCtx, FullBatchState, LaneHalo};
+pub use minibatch::{MiniBatchCtx, MiniBatchRankCtx};
 
 use crate::backend::linalg as la;
 use crate::graph::generate::{SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
@@ -92,7 +92,7 @@ pub trait GraphContext {
 
 /// Per-lane stage timings for one epoch/round: the raw material of the
 /// paper's Eqn-2 accounting (`Σ_stage max_lane`) and the Fig-12 breakdown.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct StageClock {
     pub lanes: usize,
     /// (category, per-lane seconds) per barrier stage, in execution order.
@@ -173,6 +173,29 @@ impl StageClock {
             .iter()
             .map(|(c, st)| (*c, st.iter().fold(0.0f64, |a, &b| a.max(b))))
             .collect()
+    }
+
+    /// Zip single-lane rank clocks (threaded transport) into one k-lane
+    /// clock with the sequential layout, so the drivers' Eqn-2/Fig-12
+    /// accounting is transport-agnostic. Every rank runs the identical
+    /// engine control flow, so the stage sequences always line up — a
+    /// divergence is a bug, hence the asserts.
+    pub fn merge_lanes(clocks: &[StageClock]) -> StageClock {
+        assert!(!clocks.is_empty(), "no rank clocks to merge");
+        let n_stages = clocks[0].stages.len();
+        for c in clocks {
+            assert_eq!(c.lanes, 1, "merge_lanes takes single-lane rank clocks");
+            assert_eq!(c.stages.len(), n_stages, "rank stage sequences diverged");
+        }
+        let mut out = StageClock::new(clocks.len());
+        for s in 0..n_stages {
+            let cat = clocks[0].stages[s].0;
+            debug_assert!(clocks.iter().all(|c| c.stages[s].0 == cat));
+            out.stages
+                .push((cat, clocks.iter().map(|c| c.stages[s].1[0]).collect()));
+            out.quant.push(clocks.iter().map(|c| c.quant[s][0]).collect());
+        }
+        out
     }
 }
 
@@ -290,6 +313,35 @@ pub struct LossTotals {
 }
 
 impl LossTotals {
+    /// Flat f64 record for the fabric allgather (threaded transport);
+    /// inverse of [`LossTotals::from_slice`].
+    pub fn to_vec(&self) -> Vec<f64> {
+        vec![
+            self.loss_sum,
+            self.wsum,
+            self.train_correct,
+            self.train_cnt,
+            self.val_correct,
+            self.val_cnt,
+            self.test_correct,
+            self.test_cnt,
+        ]
+    }
+
+    pub fn from_slice(v: &[f64]) -> LossTotals {
+        assert_eq!(v.len(), 8, "LossTotals record has 8 fields");
+        LossTotals {
+            loss_sum: v[0],
+            wsum: v[1],
+            train_correct: v[2],
+            train_cnt: v[3],
+            val_correct: v[4],
+            val_cnt: v[5],
+            test_correct: v[6],
+            test_cnt: v[7],
+        }
+    }
+
     pub fn accumulate(&mut self, o: &LossTotals) {
         self.loss_sum += o.loss_sum;
         self.wsum += o.wsum;
@@ -647,6 +699,45 @@ mod tests {
         assert_eq!(cats.len(), 2);
         assert_eq!(cats[0].0, Category::Aggr);
         assert!((cats[0].1 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_lanes_reproduces_sequential_layout() {
+        // Two single-lane rank clocks zip into the 2-lane sequential shape.
+        let mut a = StageClock::new(1);
+        let mut b = StageClock::new(1);
+        for (clock, v) in [(&mut a, 1.0), (&mut b, 3.0)] {
+            let (s, q) = clock.push(Category::Aggr);
+            s[0] = v;
+            q[0] = v * 0.1;
+            let (s, _) = clock.push(Category::Other);
+            s[0] = v * 2.0;
+        }
+        let m = StageClock::merge_lanes(&[a, b]);
+        assert_eq!(m.lanes, 2);
+        let (compute, sync) = m.bottleneck();
+        assert!((compute - (3.0 + 6.0)).abs() < 1e-12);
+        assert!((sync - (2.0 + 4.0)).abs() < 1e-12);
+        assert!((m.quant_bottleneck() - 0.3).abs() < 1e-12);
+        assert_eq!(m.lane_totals(), vec![3.0, 9.0]);
+    }
+
+    #[test]
+    fn loss_totals_record_roundtrip() {
+        let t = LossTotals {
+            loss_sum: 1.5,
+            wsum: 2.0,
+            train_correct: 3.0,
+            train_cnt: 4.0,
+            val_correct: 5.0,
+            val_cnt: 6.0,
+            test_correct: 7.0,
+            test_cnt: 8.0,
+        };
+        let rt = LossTotals::from_slice(&t.to_vec());
+        assert_eq!(rt.loss_sum, t.loss_sum);
+        assert_eq!(rt.wsum, t.wsum);
+        assert_eq!(rt.test_cnt, t.test_cnt);
     }
 
     #[test]

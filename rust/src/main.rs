@@ -12,6 +12,7 @@
 //!   datasets    list the Table-2-style catalog
 
 use anyhow::Result;
+use supergcn::comm::transport::TransportKind;
 use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
 use supergcn::exec::{AggDispatch, AggKernel};
 use supergcn::coordinator::planner::prepare;
@@ -46,7 +47,10 @@ fn main() {
                  SuperGCN: distributed full-batch and mini-batch GCN training for CPU\n\
                  supercomputers. `train --sampler full` is the paper's full-batch loop;\n\
                  `--sampler neighbor|saint-rw|saint-node|saint-edge|cluster` trains with\n\
-                 the sampling regime (see `train --help` for fan-out/batch flags)."
+                 the sampling regime (see `train --help` for fan-out/batch flags).\n\
+                 `--transport threaded` runs one OS thread per SPMD rank (mailbox\n\
+                 collectives, real multi-core wall clock — bit-exact with `seq`);\n\
+                 `--rank-threads` asserts the thread count (0 = one per worker)."
             );
             Ok(())
         }
@@ -108,6 +112,20 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             "contribution/nnz count below which parallel aggregation falls back to serial",
         )
         .opt("agg-threads", "1", "threads for the parallel aggregation kernels")
+        .opt(
+            "transport",
+            "seq",
+            "seq | threaded — step SPMD ranks sequentially (modeled parallel time \
+             only) or run one OS thread per rank with mailbox collectives for real \
+             multi-core wall-clock scaling; bit-exact either way (DESIGN.md §10)",
+        )
+        .opt(
+            "rank-threads",
+            "0",
+            "OS threads for --transport threaded (0 = one per worker; any other \
+             value must equal --procs — blocking mailbox collectives need every \
+             rank resident)",
+        )
         .opt("seed", "42", "random seed")
         .opt(
             "sampler",
@@ -132,6 +150,9 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .with_kernel(AggKernel::parse(&a.get_str("agg-kernel"))?)
         .with_threads(a.get_usize("agg-threads"))
         .with_parallel_min_work(a.get_usize("agg-threshold"));
+    let transport = TransportKind::parse(&a.get_str("transport"))?;
+    let rank_threads = a.get_usize("rank-threads");
+    TransportKind::validate_rank_threads(rank_threads, k)?;
     let tc = TrainConfig {
         epochs: if epochs == 0 { spec.epochs } else { epochs },
         lr: spec.lr,
@@ -143,6 +164,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         delay_comm: a.get_usize("delay-comm"),
         machine: parse_machine(&a.get_str("machine"))?,
         agg: agg.clone(),
+        transport,
+        rank_threads,
         seed: a.get_u64("seed"),
     };
 
@@ -191,6 +214,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             hidden: spec.hidden,
             layernorm: false,
             agg,
+            transport: tc.transport,
+            rank_threads: tc.rank_threads,
             machine: tc.machine.clone(),
             seed: tc.seed,
         };
@@ -233,9 +258,11 @@ fn run_training(
     tc: TrainConfig,
 ) -> Result<()> {
     println!(
-        "training: {} workers, config={}, agg-kernel={}, quant={:?}, lp={}, strategy={}, machine={}",
+        "training: {} workers, config={}, transport={}, agg-kernel={}, quant={:?}, lp={}, \
+         strategy={}, machine={}",
         ctxs.len(),
         cfg.name,
+        tc.transport.name(),
         tc.agg.kernel.name(),
         tc.quant.map(|b| b.name()).unwrap_or("fp32"),
         tc.label_prop,
@@ -281,9 +308,10 @@ fn run_minibatch_training(
     mc: MiniBatchConfig,
 ) -> Result<()> {
     println!(
-        "mini-batch training: {} workers, sampler={}, quant={}, machine={}",
+        "mini-batch training: {} workers, sampler={}, transport={}, quant={}, machine={}",
         k,
         kind.name(),
+        mc.transport.name(),
         mc.quant.map(|b| b.name()).unwrap_or("fp32"),
         mc.machine.name,
     );

@@ -23,12 +23,31 @@ pub fn default_threads() -> usize {
 /// scoped threads, pulling indices dynamically from a shared counter.
 ///
 /// `f` must be `Sync` (called concurrently with distinct indices).
+///
+/// Scheduling audit (no hot busy-wait anywhere): when `n_chunks <=
+/// threads` every worker owns exactly one statically assigned index, so
+/// the shared work-stealing counter — and any contention on it — is
+/// skipped entirely (the caller thread runs chunk 0 itself instead of
+/// idling at the scope join). On the dynamic path, a worker whose
+/// `fetch_add` overshoots `n_chunks` exits its loop immediately: the
+/// counter is bounded by `n_chunks + threads` and is never spun on.
 pub fn parallel_for(threads: usize, n_chunks: usize, f: impl Fn(usize) + Sync) {
     let threads = threads.max(1).min(n_chunks.max(1));
     if threads <= 1 || n_chunks <= 1 {
         for i in 0..n_chunks {
             f(i);
         }
+        return;
+    }
+    if n_chunks <= threads {
+        // Static one-chunk-per-thread assignment: no shared counter.
+        let f = &f;
+        std::thread::scope(|scope| {
+            for i in 1..n_chunks {
+                scope.spawn(move || f(i));
+            }
+            f(0);
+        });
         return;
     }
     let counter = AtomicUsize::new(0);
@@ -119,6 +138,22 @@ mod tests {
     fn map_preserves_order() {
         let out = parallel_map(3, 50, |i| i * i);
         assert_eq!(out, (0..50).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn static_path_covers_all_indices_once() {
+        // n_chunks <= threads takes the counter-free static assignment;
+        // coverage must be identical to the dynamic path.
+        for n in [2usize, 3, 7, 8] {
+            let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+            parallel_for(8, n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(
+                hits.iter().all(|h| h.load(Ordering::Relaxed) == 1),
+                "n={n}: every index exactly once"
+            );
+        }
     }
 
     #[test]

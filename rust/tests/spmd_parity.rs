@@ -1,0 +1,193 @@
+//! Transport-parity acceptance tests (DESIGN.md §10): the threaded SPMD
+//! runtime must be a pure *executor* change — running every rank on its
+//! own OS thread with mailbox collectives must reproduce the sequential
+//! harness bit-for-bit:
+//!
+//! 1. **full-batch** — per-epoch train loss bit-identical and `CommStats`
+//!    wire bits identical on `arxiv-xs`, with quantization off and on
+//!    (and `delay_comm` staleness in the FP32 run, so the skip-exchange
+//!    path is covered);
+//! 2. **mini-batch** — same, with the neighbor sampler (id-request/reply
+//!    fetch over the mailboxes);
+//! 3. **ring allreduce** — the fabric's mailbox ring is deterministic
+//!    under 2/4/8 rank threads and bit-identical to
+//!    `collective::allreduce_sum`'s rank-order fold.
+
+use std::sync::Arc;
+use supergcn::comm::transport::{Fabric, TransportKind};
+use supergcn::comm::{collective, CommStats};
+use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
+use supergcn::coordinator::planner::prepare;
+use supergcn::coordinator::trainer::{TrainConfig, Trainer};
+use supergcn::datasets;
+use supergcn::perfmodel::MachineProfile;
+use supergcn::quant::Bits;
+use supergcn::sample::{SamplerConfig, SamplerKind};
+
+/// Losses must match to the bit, not to a tolerance: the transports run
+/// the identical FP work in the identical order.
+fn assert_loss_bits(seq: &[f32], thr: &[f32], what: &str) {
+    assert_eq!(seq.len(), thr.len());
+    for (e, (a, b)) in seq.iter().zip(thr.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{what}: epoch {e} loss diverged: {a} vs {b}"
+        );
+    }
+}
+
+/// Wire accounting must be identical entry-for-entry: bits per (src, dst)
+/// pair, message counts, and the modeled per-sender wire seconds.
+fn assert_comm_equal(seq: &CommStats, thr: &CommStats, what: &str) {
+    assert_eq!(seq.data_bits, thr.data_bits, "{what}: data bits diverged");
+    assert_eq!(seq.param_bits, thr.param_bits, "{what}: param bits diverged");
+    assert_eq!(seq.messages, thr.messages, "{what}: message counts diverged");
+    assert_eq!(
+        seq.modeled_send_secs, thr.modeled_send_secs,
+        "{what}: modeled wire seconds diverged"
+    );
+    assert!(seq.total_data_bytes() > 0.0, "{what}: no traffic — vacuous test");
+}
+
+fn full_batch_run(
+    transport: TransportKind,
+    quant: Option<Bits>,
+    label_prop: bool,
+    delay_comm: usize,
+) -> (Vec<f32>, CommStats) {
+    let spec = datasets::by_name("arxiv-xs").unwrap();
+    let lg = spec.build();
+    let tc = TrainConfig {
+        epochs: 5,
+        lr: spec.lr,
+        quant,
+        label_prop,
+        delay_comm,
+        transport,
+        seed: 42,
+        ..Default::default()
+    };
+    let (ctxs, mut cfg, _) = prepare(&lg, 4, tc.strategy, None, tc.seed).unwrap();
+    cfg.hidden = spec.hidden;
+    let mut tr = Trainer::new(ctxs, cfg, tc);
+    let losses = tr
+        .run(false)
+        .unwrap()
+        .iter()
+        .map(|s| s.train_loss)
+        .collect();
+    (losses, tr.comm_stats.clone())
+}
+
+#[test]
+fn full_batch_fp32_threaded_matches_sequential_bitwise() {
+    // delay_comm = 2 also exercises the stale-halo (no-exchange) epochs
+    // under both transports.
+    let (seq_loss, seq_comm) =
+        full_batch_run(TransportKind::Sequential, None, false, 2);
+    let (thr_loss, thr_comm) = full_batch_run(TransportKind::Threaded, None, false, 2);
+    assert_loss_bits(&seq_loss, &thr_loss, "full-batch fp32");
+    assert_comm_equal(&seq_comm, &thr_comm, "full-batch fp32");
+}
+
+#[test]
+fn full_batch_int2_labelprop_threaded_matches_sequential_bitwise() {
+    let (seq_loss, seq_comm) =
+        full_batch_run(TransportKind::Sequential, Some(Bits::Int2), true, 1);
+    let (thr_loss, thr_comm) =
+        full_batch_run(TransportKind::Threaded, Some(Bits::Int2), true, 1);
+    assert_loss_bits(&seq_loss, &thr_loss, "full-batch int2+lp");
+    assert_comm_equal(&seq_comm, &thr_comm, "full-batch int2+lp");
+}
+
+fn mini_batch_run(transport: TransportKind, quant: Option<Bits>) -> (Vec<f32>, CommStats) {
+    let spec = datasets::by_name("arxiv-xs").unwrap();
+    let lg = Arc::new(spec.build());
+    let mc = MiniBatchConfig {
+        epochs: 3,
+        lr: spec.lr,
+        hidden: spec.hidden,
+        quant,
+        transport,
+        seed: 42,
+        ..Default::default()
+    };
+    let scfg = SamplerConfig {
+        batch_size: 128,
+        fanouts: vec![10, 5, 5],
+        seed: 42,
+        ..Default::default()
+    };
+    let mut tr = MiniBatchTrainer::new(lg, 3, SamplerKind::Neighbor, &scfg, mc).unwrap();
+    let losses = tr
+        .run(false)
+        .unwrap()
+        .iter()
+        .map(|s| s.train_loss)
+        .collect();
+    (losses, tr.comm_stats.clone())
+}
+
+#[test]
+fn mini_batch_neighbor_threaded_matches_sequential_bitwise() {
+    let (seq_loss, seq_comm) = mini_batch_run(TransportKind::Sequential, None);
+    let (thr_loss, thr_comm) = mini_batch_run(TransportKind::Threaded, None);
+    assert_loss_bits(&seq_loss, &thr_loss, "mini-batch neighbor fp32");
+    assert_comm_equal(&seq_comm, &thr_comm, "mini-batch neighbor fp32");
+
+    let (seq_loss, seq_comm) = mini_batch_run(TransportKind::Sequential, Some(Bits::Int4));
+    let (thr_loss, thr_comm) = mini_batch_run(TransportKind::Threaded, Some(Bits::Int4));
+    assert_loss_bits(&seq_loss, &thr_loss, "mini-batch neighbor int4");
+    assert_comm_equal(&seq_comm, &thr_comm, "mini-batch neighbor int4");
+}
+
+#[test]
+fn ring_allreduce_deterministic_under_2_4_8_rank_threads() {
+    let profile = MachineProfile::abci();
+    for k in [2usize, 4, 8] {
+        let make = || -> Vec<Vec<f32>> {
+            (0..k)
+                .map(|r| {
+                    (0..257)
+                        .map(|i| (((r * 1013 + i * 7 + 1) as f32).sin() * 0.3).fract())
+                        .collect()
+                })
+                .collect()
+        };
+        // Sequential reference fold.
+        let mut want = make();
+        collective::allreduce_sum(&mut want, &profile);
+
+        let threaded = || -> Vec<Vec<f32>> {
+            let fabric = Fabric::new(k);
+            let mut bufs = make();
+            std::thread::scope(|scope| {
+                let fabric = &fabric;
+                let pr = &profile;
+                for (rank, buf) in bufs.iter_mut().enumerate() {
+                    scope.spawn(move || {
+                        fabric.allreduce_sum(rank, buf, pr);
+                    });
+                }
+            });
+            bufs
+        };
+        let a = threaded();
+        let b = threaded();
+        for rank in 0..k {
+            for i in 0..a[rank].len() {
+                assert_eq!(
+                    a[rank][i].to_bits(),
+                    b[rank][i].to_bits(),
+                    "k={k}: repeated threaded runs must agree"
+                );
+                assert_eq!(
+                    a[rank][i].to_bits(),
+                    want[rank][i].to_bits(),
+                    "k={k}: threaded ring must equal the sequential rank-order fold"
+                );
+            }
+        }
+    }
+}
