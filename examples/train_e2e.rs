@@ -50,6 +50,11 @@ fn main() -> anyhow::Result<()> {
         // CLI equivalent: `supergcn train --transport threaded`
         // (`--rank-threads 0` = one thread per worker).
         transport: TransportKind::Threaded,
+        // Post each layer's halo exchange before interior aggregation so
+        // wire time hides behind compute; boundary rows finish after
+        // receipt. Bit-exact with the blocking schedule — DESIGN.md §11.
+        // CLI equivalent: `supergcn train --overlap on`.
+        overlap: true,
         ..Default::default()
     };
     let (ctxs, cfg, _) = prepare(&lg, 4, tc.strategy, Some(shape_cfg), tc.seed)?;
@@ -92,5 +97,13 @@ fn main() -> anyhow::Result<()> {
         "converged: loss {:.4}, test acc {:.3} — three-layer stack validated",
         last.train_loss, last.test_acc
     );
+    if !last.overlap.is_empty() {
+        println!(
+            "overlap model (last epoch): {:.6}s overlapped vs {:.6}s phase-serial \
+             — same run, same bits (DESIGN.md §11)",
+            last.overlap.modeled_overlap_secs(),
+            last.overlap.modeled_serial_secs()
+        );
+    }
     Ok(())
 }

@@ -9,13 +9,14 @@
 //! operators shrink that slice; large scale is communication-bound and
 //! the §5/§6 optimizations shrink that slice.
 
+use supergcn::comm::transport::TransportKind;
 use supergcn::coordinator::planner::prepare;
 use supergcn::coordinator::trainer::{TrainConfig, Trainer};
 use supergcn::datasets;
 use supergcn::exec::{AggDispatch, AggKernel};
 use supergcn::exp::Table;
 use supergcn::hier::volume::RemoteStrategy;
-use supergcn::perfmodel::MachineProfile;
+use supergcn::perfmodel::{t_layer_overlap, t_layer_serial, MachineProfile};
 use supergcn::quant::Bits;
 use supergcn::util::timer::{Breakdown, ALL_CATEGORIES};
 
@@ -74,4 +75,46 @@ fn main() {
         }
     }
     t.print();
+
+    // ---- overlap view (DESIGN.md §11): the Opt configuration with the
+    // interior/boundary split schedule, per-exchange breakdown from the
+    // run's OverlapLedger, overlap vs phase-serial model on the same run.
+    let spec = datasets::by_name("products-s").unwrap();
+    let lg = spec.build();
+    let tc = TrainConfig {
+        strategy: RemoteStrategy::Hybrid,
+        quant: Some(Bits::Int2),
+        label_prop: true,
+        machine: MachineProfile::abci(),
+        epochs: 4,
+        lr: spec.lr,
+        transport: TransportKind::Threaded,
+        overlap: true,
+        ..Default::default()
+    };
+    let (ctxs, cfg, _) = prepare(&lg, 8, tc.strategy, None, tc.seed).unwrap();
+    let mut tr = Trainer::new(ctxs, cfg, tc);
+    let stats = tr.run(false).unwrap();
+    let ledger = &stats.last().unwrap().overlap;
+    let mut ot = Table::new(
+        "overlap breakdown: products-s @ 8 ranks, Opt + --overlap on (last epoch)",
+        &["stage", "interior s", "comm s", "boundary s", "overlap", "serial"],
+    );
+    for st in &ledger.stages {
+        let (i, c, b) = st.maxes();
+        ot.row(vec![
+            st.label.to_string(),
+            format!("{i:.6}"),
+            format!("{c:.6}"),
+            format!("{b:.6}"),
+            format!("{:.6}", t_layer_overlap(i, c, b)),
+            format!("{:.6}", t_layer_serial(i, c, b)),
+        ]);
+    }
+    ot.print();
+    println!(
+        "modeled epoch: overlap {:.6}s vs phase-serial {:.6}s (same run, same bits)",
+        ledger.modeled_overlap_secs(),
+        ledger.modeled_serial_secs()
+    );
 }

@@ -11,14 +11,24 @@
 //! * smoke (`SUPERGCN_BENCH_SMOKE=1` or `--smoke`) — {1,2,4}, 4 epochs:
 //!   the CI `bench-smoke` job's configuration.
 //!
+//! A second section runs the full-batch regime with `--overlap on`
+//! (DESIGN.md §11) and reports the per-layer interior/boundary/comm
+//! breakdown from the run's [`OverlapLedger`], with the modeled overlap
+//! time `max(interior, comm) + boundary` next to the phase-serial model
+//! of the *same* run (overlap ≤ serial always; the gap is the hidden
+//! wire time).
+//!
 //! Set `SUPERGCN_BENCH_JSON=path` to also write the rows as JSON (CI
-//! uploads it as the `BENCH_ci.json` workflow artifact).
+//! uploads it as the `BENCH_ci.json` workflow artifact, and
+//! `supergcn benchcmp` gates regressions against the committed
+//! `BENCH_seed.json`).
 
 use supergcn::comm::transport::TransportKind;
 use supergcn::coordinator::minibatch::MiniBatchConfig;
 use supergcn::coordinator::planner::prepare;
 use supergcn::coordinator::trainer::{EpochStats, TrainConfig, Trainer};
 use supergcn::datasets;
+use supergcn::exec::OverlapLedger;
 use supergcn::exp::{train_minibatch, Table};
 use supergcn::sample::{SamplerConfig, SamplerKind};
 use supergcn::util::json::{to_pretty, Json};
@@ -127,6 +137,61 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
+    // ---- overlap section (DESIGN.md §11) -----------------------------
+    // Full-batch @ 4 ranks, threaded, overlap on vs off: wall clock plus
+    // the per-exchange ledger of the overlap run.
+    let overlap_k = 4usize;
+    let run_fb = |overlap: bool| -> anyhow::Result<(f64, OverlapLedger)> {
+        let lg = spec.build();
+        let tc = TrainConfig {
+            epochs,
+            lr: spec.lr,
+            transport: TransportKind::Threaded,
+            overlap,
+            seed: 42,
+            ..Default::default()
+        };
+        let (ctxs, mut cfg, _) = prepare(&lg, overlap_k, tc.strategy, None, tc.seed)?;
+        cfg.hidden = spec.hidden;
+        let mut tr = Trainer::new(ctxs, cfg, tc);
+        let stats = tr.run(false)?;
+        let ledger = stats.last().unwrap().overlap.clone();
+        Ok((steady_wall_secs(&stats), ledger))
+    };
+    let (blocking_secs, _) = run_fb(false)?;
+    let (overlap_secs, ledger) = run_fb(true)?;
+    let mut ot = Table::new(
+        &format!(
+            "overlap ledger: full-batch @ {overlap_k} rank threads, last epoch \
+             (interior runs while the posted exchange is in flight)"
+        ),
+        &["stage", "interior s", "comm s", "boundary s", "overlap model", "serial model"],
+    );
+    for st in &ledger.stages {
+        let (i, c, b) = st.maxes();
+        ot.row(vec![
+            st.label.to_string(),
+            format!("{i:.6}"),
+            format!("{c:.6}"),
+            format!("{b:.6}"),
+            format!("{:.6}", supergcn::perfmodel::t_layer_overlap(i, c, b)),
+            format!("{:.6}", supergcn::perfmodel::t_layer_serial(i, c, b)),
+        ]);
+    }
+    ot.print();
+    let model_overlap = ledger.modeled_overlap_secs();
+    let model_serial = ledger.modeled_serial_secs();
+    println!(
+        "modeled epoch: overlap {model_overlap:.6}s vs phase-serial {model_serial:.6}s \
+         (hidden wire time {:.6}s); measured threaded wall: overlap {overlap_secs:.4}s \
+         vs blocking {blocking_secs:.4}s (bit-exact runs)",
+        model_serial - model_overlap,
+    );
+    assert!(
+        model_overlap <= model_serial,
+        "overlap model must never exceed the serial model of the same run"
+    );
+
     // ---- report ------------------------------------------------------
     let mut table = Table::new(
         "SPMD transport scaling: wall secs, seq vs threaded (bit-exact runs)",
@@ -168,11 +233,35 @@ fn main() -> anyhow::Result<()> {
                 ])
             })
             .collect();
+        let overlap_stages: Vec<Json> = ledger
+            .stages
+            .iter()
+            .map(|st| {
+                let (i, c, b) = st.maxes();
+                Json::obj(vec![
+                    ("stage", Json::Str(st.label.to_string())),
+                    ("interior_secs", Json::Num(i)),
+                    ("comm_secs", Json::Num(c)),
+                    ("boundary_secs", Json::Num(b)),
+                ])
+            })
+            .collect();
         let doc = Json::obj(vec![
             ("bench", Json::Str("spmd_scaling".to_string())),
             ("dataset", Json::Str(spec.name.to_string())),
             ("epochs_per_run", Json::Num(epochs as f64)),
             ("smoke", Json::Bool(smoke)),
+            (
+                "overlap",
+                Json::obj(vec![
+                    ("ranks", Json::Num(overlap_k as f64)),
+                    ("modeled_overlap_secs", Json::Num(model_overlap)),
+                    ("modeled_serial_secs", Json::Num(model_serial)),
+                    ("threaded_wall_secs_overlap", Json::Num(overlap_secs)),
+                    ("threaded_wall_secs_blocking", Json::Num(blocking_secs)),
+                    ("stages", Json::Arr(overlap_stages)),
+                ]),
+            ),
             (
                 "host_parallelism",
                 Json::Num(

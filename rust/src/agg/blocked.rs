@@ -32,8 +32,12 @@ pub fn segment_sum(h: &[f32], f: usize, gather: &[u32], seg: &[u32], out: &mut [
 }
 
 /// Accumulate `dst += Σ h[g]` for one destination run, feature-blocked.
+/// `pub(crate)` so the subset/tiled drivers (`segment_sum_rows`,
+/// `agg::parallel`) reuse the exact inner loop — per-destination bitwise
+/// identity across entry points is what the overlap schedule's
+/// bit-exactness rests on (DESIGN.md §11).
 #[inline]
-fn accumulate_run(h: &[f32], f: usize, gathers: &[u32], dst: &mut [f32]) {
+pub(crate) fn accumulate_run(h: &[f32], f: usize, gathers: &[u32], dst: &mut [f32]) {
     // §Perf: single-source runs are the common case on sparse graphs —
     // skip the register-block setup and stream one fused add.
     if let [g] = gathers {
@@ -93,6 +97,34 @@ pub fn segment_sum_range(
     }
 }
 
+/// Subset-restricted segment sum: accumulate only the destination rows
+/// listed in `rows` (strictly increasing), given the CSR-style run
+/// offsets of [`segment_offsets`]. Each selected destination is processed
+/// by the same `accumulate_run` inner loop as a full [`segment_sum`]
+/// pass, so — provided its `out` row starts untouched — its result is
+/// bitwise identical to the full pass. A partition of `0..n_seg` into
+/// disjoint row subsets therefore reproduces the full kernel exactly,
+/// which is the overlap schedule's interior/boundary contract
+/// (DESIGN.md §11). No sub-CSR is materialized.
+pub fn segment_sum_rows(
+    h: &[f32],
+    f: usize,
+    gather: &[u32],
+    seg_offsets: &[usize],
+    rows: &[u32],
+    out: &mut [f32],
+) {
+    debug_assert!(rows.windows(2).all(|w| w[0] < w[1]), "rows must be strictly increasing");
+    for &r in rows {
+        let s = r as usize;
+        let (a, b) = (seg_offsets[s], seg_offsets[s + 1]);
+        if a == b {
+            continue;
+        }
+        accumulate_run(h, f, &gather[a..b], &mut out[s * f..(s + 1) * f]);
+    }
+}
+
 /// Build CSR-style segment offsets from a sorted `seg` array:
 /// `offsets[s]..offsets[s+1]` is segment `s`'s run (possibly empty).
 pub fn segment_offsets(seg: &[u32], n_seg: usize) -> Vec<usize> {
@@ -142,6 +174,29 @@ mod tests {
         segment_sum_range(&h, 24, &gather, &off, 0, 10, &mut b);
         segment_sum_range(&h, 24, &gather, &off, 10, 20, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rows_subset_union_reproduces_full_kernel_bitwise() {
+        // Any 2-way partition of the destination rows must reproduce the
+        // full segment sum bit-for-bit (the interior/boundary contract).
+        let mut rng = Rng::new(29);
+        let (n_src, n_seg, m, f) = (50usize, 33usize, 400usize, 19usize);
+        let (h, gather, seg) = random_problem(&mut rng, n_src, n_seg, m, f);
+        let off = segment_offsets(&seg, n_seg);
+        let mut full = vec![0f32; n_seg * f];
+        segment_sum(&h, f, &gather, &seg, &mut full);
+        // Interleaved split (worst case for contiguity assumptions).
+        let a_rows: Vec<u32> = (0..n_seg as u32).filter(|r| r % 3 != 0).collect();
+        let b_rows: Vec<u32> = (0..n_seg as u32).filter(|r| r % 3 == 0).collect();
+        let mut split = vec![0f32; n_seg * f];
+        segment_sum_rows(&h, f, &gather, &off, &a_rows, &mut split);
+        segment_sum_rows(&h, f, &gather, &off, &b_rows, &mut split);
+        assert_eq!(full, split, "subset union must be bitwise exact");
+        // Empty subset is a no-op.
+        let before = split.clone();
+        segment_sum_rows(&h, f, &gather, &off, &[], &mut split);
+        assert_eq!(before, split);
     }
 
     #[test]

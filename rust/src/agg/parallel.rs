@@ -122,9 +122,66 @@ pub fn segment_sum_n_with_threshold(
 
 #[inline]
 fn run_add(h: &[f32], f: usize, gathers: &[u32], dst: &mut [f32]) {
-    // Delegate to the blocked kernel's run accumulation via a 1-run call.
-    let seg = vec![0u32; gathers.len()];
-    blocked::segment_sum(h, f, gathers, &seg, dst);
+    blocked::accumulate_run(h, f, gathers, dst);
+}
+
+/// Parallel subset-restricted segment sum over an explicit destination-row
+/// list (strictly increasing): the 2D-parallel counterpart of
+/// `blocked::segment_sum_rows`, tiled by cumulative contribution count so
+/// skewed rows balance. Rows are distinct, so tiles write disjoint `out`
+/// rows and the per-destination accumulation order is identical to the
+/// serial kernel — results are bitwise equal to it (DESIGN.md §11).
+#[allow(clippy::too_many_arguments)]
+pub fn segment_sum_rows_n(
+    threads: usize,
+    h: &[f32],
+    f: usize,
+    gather: &[u32],
+    seg_offsets: &[usize],
+    rows: &[u32],
+    out: &mut [f32],
+    min_entries: usize,
+) {
+    debug_assert!(rows.windows(2).all(|w| w[0] < w[1]), "rows must be strictly increasing");
+    if threads <= 1 {
+        blocked::segment_sum_rows(h, f, gather, seg_offsets, rows, out);
+        return;
+    }
+    // Cumulative work over the *selected* rows (the FLOPS proxy).
+    let mut cum = Vec::with_capacity(rows.len() + 1);
+    cum.push(0usize);
+    for &r in rows {
+        let s = r as usize;
+        let prev = *cum.last().unwrap();
+        cum.push(prev + (seg_offsets[s + 1] - seg_offsets[s]));
+    }
+    if *cum.last().unwrap() < min_entries {
+        blocked::segment_sum_rows(h, f, gather, seg_offsets, rows, out);
+        return;
+    }
+    let cuts = flops_balanced_cuts(&cum, threads * 4);
+    let n_tiles = cuts.len() - 1;
+    struct SendPtr(*mut f32);
+    unsafe impl Send for SendPtr {}
+    unsafe impl Sync for SendPtr {}
+    let base = SendPtr(out.as_mut_ptr());
+    let base_ref = &base;
+    pool::parallel_for(threads, n_tiles, |t| {
+        for &r in &rows[cuts[t]..cuts[t + 1]] {
+            let s = r as usize;
+            let (a, b) = (seg_offsets[s], seg_offsets[s + 1]);
+            if a == b {
+                continue;
+            }
+            // SAFETY: `rows` is strictly increasing and tiles cover
+            // disjoint index ranges of it, so every tile writes a
+            // disjoint set of `out` rows.
+            let dst = unsafe {
+                std::slice::from_raw_parts_mut(base_ref.0.add(s * f), f)
+            };
+            run_add(h, f, &gather[a..b], dst);
+        }
+    });
 }
 
 #[cfg(test)]
@@ -185,6 +242,30 @@ mod tests {
         let mut b = vec![0f32; 24];
         segment_sum_n(8, &h, 4, &gather, &seg, 6, &mut b);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parallel_rows_subset_union_is_bitwise_exact() {
+        // Parallel subset tiles + serial subset must both reproduce the
+        // full kernel bitwise when their row sets partition 0..n_seg.
+        let mut rng = Rng::new(41);
+        let (n_src, n_seg, m, f) = (300, 200, 12_000, 24);
+        let (h, gather, seg) = random_problem(&mut rng, n_src, n_seg, m, f);
+        let off = blocked::segment_offsets(&seg, n_seg);
+        let mut full = vec![0f32; n_seg * f];
+        blocked::segment_sum(&h, f, &gather, &seg, &mut full);
+        let a_rows: Vec<u32> = (0..n_seg as u32).filter(|r| r % 2 == 0).collect();
+        let b_rows: Vec<u32> = (0..n_seg as u32).filter(|r| r % 2 == 1).collect();
+        let mut split = vec![0f32; n_seg * f];
+        // Force the parallel path with a tiny threshold.
+        segment_sum_rows_n(4, &h, f, &gather, &off, &a_rows, &mut split, 1);
+        segment_sum_rows_n(4, &h, f, &gather, &off, &b_rows, &mut split, 1);
+        assert_eq!(full, split, "parallel subset tiling must preserve per-run order");
+        // Serial fallback path agrees too.
+        let mut serial = vec![0f32; n_seg * f];
+        segment_sum_rows_n(1, &h, f, &gather, &off, &a_rows, &mut serial, 1 << 30);
+        segment_sum_rows_n(1, &h, f, &gather, &off, &b_rows, &mut serial, 1 << 30);
+        assert_eq!(full, serial);
     }
 
     #[test]

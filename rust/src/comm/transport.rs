@@ -86,6 +86,17 @@ struct BarrierState {
     poisoned: bool,
 }
 
+/// Panic payload used by [`PoisonBarrier::wait`] when it unwinds because
+/// the fabric was poisoned — a *consequence* of another rank's failure.
+/// `run_ranks` downcasts to this type (structurally, not by message
+/// string) so poison-unwinds never masquerade as root causes.
+pub(crate) struct FabricPoisoned;
+
+/// Unwind out of a poisoned barrier with the structural marker payload.
+fn poison_unwind() -> ! {
+    std::panic::panic_any(FabricPoisoned)
+}
+
 /// A reusable rendezvous barrier that can be *poisoned*: when a rank
 /// thread fails (error or panic) it poisons the barrier instead of
 /// leaving its peers blocked forever — every waiter then panics, the
@@ -112,11 +123,14 @@ impl PoisonBarrier {
         }
     }
 
-    /// Block until all `n` parties arrive. Panics if the barrier is (or
-    /// becomes) poisoned.
+    /// Block until all `n` parties arrive. Panics (with the structural
+    /// [`FabricPoisoned`] payload) if the barrier is — or becomes —
+    /// poisoned.
     pub fn wait(&self) {
         let mut st = lock(&self.state);
-        assert!(!st.poisoned, "SPMD fabric poisoned: a rank thread failed");
+        if st.poisoned {
+            poison_unwind();
+        }
         st.arrived += 1;
         if st.arrived == self.n {
             st.arrived = 0;
@@ -128,7 +142,9 @@ impl PoisonBarrier {
         while st.generation == gen && !st.poisoned {
             st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
-        assert!(!st.poisoned, "SPMD fabric poisoned: a rank thread failed");
+        if st.poisoned {
+            poison_unwind();
+        }
     }
 
     /// Mark the barrier failed and wake every waiter (they panic out).
@@ -151,6 +167,10 @@ pub struct Fabric {
     boxes: Vec<Mutex<Option<Payload>>>,
     gather: Mutex<Vec<Option<Vec<f64>>>>,
     barrier: PoisonBarrier,
+    /// Free-list of f32 buffers recycled across [`Fabric::allreduce_sum`]
+    /// calls, so the ring's partial/broadcast copies stop allocating once
+    /// the pool is warm (the gradient shape is fixed for a whole run).
+    pool: Mutex<Vec<Vec<f32>>>,
 }
 
 impl Fabric {
@@ -161,7 +181,31 @@ impl Fabric {
             boxes: (0..k * k).map(|_| Mutex::new(None)).collect(),
             gather: Mutex::new((0..k).map(|_| None).collect()),
             barrier: PoisonBarrier::new(k),
+            pool: Mutex::new(Vec::new()),
         }
+    }
+
+    /// Take a zero-filled length-`n` buffer from the scratch pool (or
+    /// allocate the pool's first ones). Zero-filling keeps the ring fold
+    /// bit-identical to the fold-from-zeros of `collective::allreduce_sum`.
+    fn grab_zeroed(&self, n: usize) -> Vec<f32> {
+        let mut v = lock(&self.pool).pop().unwrap_or_default();
+        v.clear();
+        v.resize(n, 0.0);
+        v
+    }
+
+    /// Take a pool buffer holding a copy of `src` (no intermediate
+    /// zero-fill — the broadcast payload is fully overwritten anyway).
+    fn grab_copy(&self, src: &[f32]) -> Vec<f32> {
+        let mut v = lock(&self.pool).pop().unwrap_or_default();
+        v.clear();
+        v.extend_from_slice(src);
+        v
+    }
+
+    fn recycle(&self, v: Vec<f32>) {
+        lock(&self.pool).push(v);
     }
 
     pub fn k(&self) -> usize {
@@ -200,11 +244,35 @@ impl Fabric {
         profile: &MachineProfile,
         stats: &mut CommStats,
     ) -> Vec<Payload> {
+        self.post_alltoallv(rank, sends, profile, stats);
+        self.complete_alltoallv(rank)
+    }
+
+    /// Split-phase half 1 (DESIGN.md §11): deposit this rank's send row
+    /// and charge its wire time, *without* blocking. The rank is then free
+    /// to compute (interior aggregation) while peers deposit; only
+    /// [`Fabric::complete_alltoallv`] rendezvouses. Exactly one exchange
+    /// may be in flight per rank — the complete's trailing barrier is what
+    /// licenses the next post to reuse the mailbox slots.
+    pub fn post_alltoallv(
+        &self,
+        rank: usize,
+        sends: Vec<Payload>,
+        profile: &MachineProfile,
+        stats: &mut CommStats,
+    ) {
         assert_eq!(sends.len(), self.k, "send row must have one payload per rank");
         for (to, p) in sends.into_iter().enumerate() {
             stats.charge(rank, to, &p, profile);
             self.deposit(rank, to, p);
         }
+    }
+
+    /// Split-phase half 2: block until every rank's deposits are visible,
+    /// collect this rank's column, and barrier again so no rank reposts
+    /// before all pickups are done. `post` + `complete` back-to-back is
+    /// exactly the blocking [`Fabric::alltoallv`].
+    pub fn complete_alltoallv(&self, rank: usize) -> Vec<Payload> {
         // All deposits visible before any pickup...
         self.barrier.wait();
         let recvs: Vec<Payload> = (0..self.k).map(|from| self.take(from, rank)).collect();
@@ -238,12 +306,14 @@ impl Fabric {
         }
         let n = buf.len();
         // Reduce phase: k−1 mailbox hops, rank `step` → rank `step+1`.
+        // All traveling buffers come from (and return to) the fabric's
+        // scratch pool, so a warm pool allocates nothing per call.
         let mut acc: Option<Vec<f32>> = None;
         for step in 0..k - 1 {
             if rank == step {
                 // Fold own buffer into the incoming partial; rank 0
                 // starts from zeros exactly like the sequential fold.
-                let mut partial = acc.take().unwrap_or_else(|| vec![0f32; n]);
+                let mut partial = acc.take().unwrap_or_else(|| self.grab_zeroed(n));
                 assert_eq!(partial.len(), n, "allreduce length mismatch across ranks");
                 for (s, &x) in partial.iter_mut().zip(buf.iter()) {
                     *s += x;
@@ -262,20 +332,24 @@ impl Fabric {
         // Rank k−1 holds the fold of ranks 0..k−1; add its own buffer and
         // broadcast the finished sum through the mailboxes.
         if rank == k - 1 {
-            let mut sum = acc.take().unwrap_or_else(|| vec![0f32; n]);
+            let mut sum = acc.take().unwrap_or_else(|| self.grab_zeroed(n));
             assert_eq!(sum.len(), n, "allreduce length mismatch across ranks");
             for (s, &x) in sum.iter_mut().zip(buf.iter()) {
                 *s += x;
             }
             for peer in 0..k - 1 {
-                self.deposit(rank, peer, Payload::F32(sum.clone()));
+                self.deposit(rank, peer, Payload::F32(self.grab_copy(&sum)));
             }
             buf.copy_from_slice(&sum);
+            self.recycle(sum);
         }
         self.barrier.wait();
         if rank != k - 1 {
             match self.take(k - 1, rank) {
-                Payload::F32(v) => buf.copy_from_slice(&v),
+                Payload::F32(v) => {
+                    buf.copy_from_slice(&v);
+                    self.recycle(v);
+                }
                 _ => unreachable!("broadcast payload is always F32"),
             }
         }
@@ -316,47 +390,88 @@ impl Fabric {
 /// Run one SPMD step over `fabric`: spawn one OS thread per rank, run its
 /// boxed body, and join. A body that returns `Err` (or panics) poisons
 /// the fabric so peers blocked in a collective unwind instead of
-/// deadlocking; the lowest-rank error is returned (a bare panic that
-/// produced no error surfaces as one). This is the single orchestration
-/// point shared by the full-batch epoch and the mini-batch round drivers.
+/// deadlocking; the lowest-rank `Err` is returned, else the lowest-rank
+/// panic's payload is propagated in the error message. Peers that merely
+/// unwound *because* the fabric was poisoned never mask the original
+/// failure. This is the single orchestration point shared by the
+/// full-batch epoch and the mini-batch round drivers.
 pub type RankBody<'env> = Box<dyn FnOnce() -> anyhow::Result<()> + Send + 'env>;
+
+/// How one rank thread ended.
+enum RankOutcome {
+    Ok,
+    /// The body returned `Err`.
+    Error(anyhow::Error),
+    /// The body panicked with this (stringified) payload.
+    Panic(String),
+    /// The thread unwound out of a poisoned barrier — a *consequence* of
+    /// another rank's failure, never the root cause.
+    PoisonUnwind,
+}
+
+/// Stringify a panic payload (`&str` and `String` payloads — i.e.
+/// `panic!`/`assert!` messages — survive verbatim).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
 
 pub fn run_ranks(fabric: &Fabric, bodies: Vec<RankBody<'_>>) -> anyhow::Result<()> {
     assert_eq!(bodies.len(), fabric.k(), "one body per rank");
-    let (first_err, panicked) = std::thread::scope(|scope| {
-        let mut handles = Vec::with_capacity(bodies.len());
-        for body in bodies {
-            handles.push(scope.spawn(move || {
-                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body));
-                match r {
-                    Ok(Ok(())) => None,
-                    Ok(Err(e)) => {
-                        fabric.poison();
-                        Some(e)
+    let outcomes: Vec<RankOutcome> = std::thread::scope(|scope| {
+        let handles: Vec<_> = bodies
+            .into_iter()
+            .map(|body| {
+                scope.spawn(move || {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(body));
+                    match r {
+                        Ok(Ok(())) => RankOutcome::Ok,
+                        Ok(Err(e)) => {
+                            fabric.poison();
+                            RankOutcome::Error(e)
+                        }
+                        Err(p) => {
+                            fabric.poison();
+                            if p.downcast_ref::<FabricPoisoned>().is_some() {
+                                RankOutcome::PoisonUnwind
+                            } else {
+                                RankOutcome::Panic(panic_message(p.as_ref()))
+                            }
+                        }
                     }
-                    Err(p) => {
-                        fabric.poison();
-                        std::panic::resume_unwind(p);
-                    }
-                }
-            }));
-        }
-        let mut first_err = None;
-        let mut panicked = false;
-        for h in handles {
-            match h.join() {
-                Ok(Some(e)) if first_err.is_none() => first_err = Some(e),
-                Ok(_) => {}
-                Err(_) => panicked = true,
-            }
-        }
-        (first_err, panicked)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| RankOutcome::Panic("rank wrapper panicked".into()))
+            })
+            .collect()
     });
-    if let Some(e) = first_err {
-        return Err(e);
+    let mut first_panic: Option<(usize, String)> = None;
+    let mut poisoned_only = false;
+    for (rank, o) in outcomes.into_iter().enumerate() {
+        match o {
+            RankOutcome::Ok => {}
+            // Lowest-rank Err wins outright.
+            RankOutcome::Error(e) => return Err(e),
+            RankOutcome::Panic(msg) if first_panic.is_none() => first_panic = Some((rank, msg)),
+            RankOutcome::Panic(_) => {}
+            RankOutcome::PoisonUnwind => poisoned_only = true,
+        }
     }
-    if panicked {
-        anyhow::bail!("a rank thread panicked");
+    if let Some((rank, msg)) = first_panic {
+        anyhow::bail!("rank {rank} thread panicked: {msg}");
+    }
+    if poisoned_only {
+        anyhow::bail!("SPMD fabric poisoned with no surviving root-cause record");
     }
     Ok(())
 }
@@ -423,7 +538,9 @@ mod tests {
     #[test]
     fn ring_allreduce_matches_sequential_bitwise() {
         let p = MachineProfile::fugaku();
-        for k in [2usize, 4, 8] {
+        // 3 covers the non-power-of-two rank count (the ring fold has no
+        // power-of-two structure to hide behind).
+        for k in [2usize, 3, 4, 8] {
             let mut bufs: Vec<Vec<f32>> = (0..k)
                 .map(|r| (0..37).map(|i| ((r * 37 + i) as f32).sin() * 0.1).collect())
                 .collect();
@@ -535,6 +652,145 @@ mod tests {
             .collect();
         let err = run_ranks(&fabric, bodies).unwrap_err();
         assert!(err.to_string().contains("rank 1 exploded"), "{err}");
+    }
+
+    #[test]
+    fn allreduce_scratch_pool_reuse_is_deterministic_at_3_ranks() {
+        // Repeated allreduces over one fabric recycle the scratch pool;
+        // a warm pool must not perturb a single bit, including at the
+        // non-power-of-two rank count.
+        let p = MachineProfile::abci();
+        let k = 3;
+        let fabric = Fabric::new(k);
+        let make = |round: usize| -> Vec<Vec<f32>> {
+            (0..k)
+                .map(|r| {
+                    (0..129)
+                        .map(|i| ((r * 131 + i * 17 + round) as f32).sin() * 0.25)
+                        .collect()
+                })
+                .collect()
+        };
+        for round in 0..4 {
+            let mut bufs = make(round);
+            let mut want = make(round);
+            collective::allreduce_sum(&mut want, &p);
+            std::thread::scope(|scope| {
+                let fabric = &fabric;
+                let pr = &p;
+                for (rank, buf) in bufs.iter_mut().enumerate() {
+                    scope.spawn(move || {
+                        fabric.allreduce_sum(rank, buf, pr);
+                    });
+                }
+            });
+            for (rank, b) in bufs.iter().enumerate() {
+                for (x, y) in b.iter().zip(want[rank].iter()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "round {round} rank {rank}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn split_phase_alltoallv_equals_blocking() {
+        let k = 3;
+        let p = MachineProfile::abci();
+        let fabric = Fabric::new(k);
+        let sends: Vec<Vec<Payload>> = (0..k)
+            .map(|i| {
+                (0..k)
+                    .map(|j| Payload::F32(vec![(i * k + j) as f32; 2]))
+                    .collect()
+            })
+            .collect();
+        let mut shards: Vec<CommStats> = (0..k).map(|_| CommStats::new(k)).collect();
+        let mut recvs: Vec<Vec<Payload>> = (0..k).map(|_| Vec::new()).collect();
+        std::thread::scope(|scope| {
+            let fabric = &fabric;
+            let pr = &p;
+            for (rank, (shard, recv)) in shards.iter_mut().zip(recvs.iter_mut()).enumerate() {
+                let row = sends[rank].clone();
+                scope.spawn(move || {
+                    fabric.post_alltoallv(rank, row, pr, shard);
+                    // Overlap window: local work would run here.
+                    *recv = fabric.complete_alltoallv(rank);
+                });
+            }
+        });
+        let mut seq_stats = CommStats::new(k);
+        let seq_recvs = crate::comm::alltoallv(sends, &p, &mut seq_stats);
+        let mut merged = CommStats::new(k);
+        for s in &shards {
+            merged.merge(s);
+        }
+        assert_eq!(merged.data_bits, seq_stats.data_bits);
+        assert_eq!(merged.modeled_send_secs, seq_stats.modeled_send_secs);
+        for rank in 0..k {
+            for from in 0..k {
+                match (&recvs[rank][from], &seq_recvs[rank][from]) {
+                    (Payload::F32(a), Payload::F32(b)) => assert_eq!(a, b),
+                    (a, b) => panic!("payload mismatch: {a:?} vs {b:?}"),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rank_panic_mid_alltoallv_unblocks_peers_and_propagates_payload() {
+        // Rank 1 posts its row, then dies before completing. Peers are
+        // blocked in complete's first barrier; the poison must unwind
+        // them (no deadlock) and the panic payload must surface in the
+        // driver's error.
+        let k = 3;
+        let p = MachineProfile::abci();
+        let fabric = Fabric::new(k);
+        let mut shards: Vec<CommStats> = (0..k).map(|_| CommStats::new(k)).collect();
+        let bodies: Vec<RankBody<'_>> = shards
+            .iter_mut()
+            .enumerate()
+            .map(|(rank, shard)| {
+                let fabric = &fabric;
+                let pr = &p;
+                Box::new(move || {
+                    let sends: Vec<Payload> =
+                        (0..k).map(|_| Payload::F32(vec![rank as f32])).collect();
+                    fabric.post_alltoallv(rank, sends, pr, shard);
+                    if rank == 1 {
+                        panic!("rank 1 died mid-exchange");
+                    }
+                    let _ = fabric.complete_alltoallv(rank);
+                    Ok(())
+                }) as RankBody<'_>
+            })
+            .collect();
+        let err = run_ranks(&fabric, bodies).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("rank 1 died mid-exchange"), "payload lost: {msg}");
+        assert!(msg.contains("panicked"), "panic class lost: {msg}");
+    }
+
+    #[test]
+    fn poison_unwound_peers_never_mask_the_root_error() {
+        // Rank 2 returns an Err; ranks 0/1 unwind out of the poisoned
+        // barrier. The driver must report rank 2's error, not the
+        // poison-unwind panics of its peers.
+        let k = 3;
+        let fabric = Fabric::new(k);
+        let bodies: Vec<RankBody<'_>> = (0..k)
+            .map(|rank| {
+                let fabric = &fabric;
+                Box::new(move || {
+                    if rank == 2 {
+                        anyhow::bail!("rank 2 root cause");
+                    }
+                    let _ = fabric.allgather_f64(rank, vec![1.0]);
+                    Ok(())
+                }) as RankBody<'_>
+            })
+            .collect();
+        let err = run_ranks(&fabric, bodies).unwrap_err();
+        assert!(err.to_string().contains("rank 2 root cause"), "{err}");
     }
 
     #[test]

@@ -39,7 +39,8 @@ use super::trainer::EpochStats;
 use crate::comm::transport::{self, Fabric, RankBody, TransportKind};
 use crate::comm::{collective, CommStats};
 use crate::exec::{
-    AggDispatch, Engine, LossSpec, LossTotals, MiniBatchCtx, MiniBatchRankCtx, StageClock,
+    AggDispatch, Engine, LossSpec, LossTotals, MiniBatchCtx, MiniBatchRankCtx, OverlapLedger,
+    StageClock,
 };
 use crate::graph::generate::LabelledGraph;
 use crate::model::optimizer::{OptKind, Optimizer};
@@ -74,6 +75,11 @@ pub struct MiniBatchConfig {
     /// Rank threads for the threaded transport: 0 = one per rank (see
     /// [`super::trainer::TrainConfig::rank_threads`]).
     pub rank_threads: usize,
+    /// Communication–computation overlap for the remote-row fetch (CLI:
+    /// `--overlap {off,on}`; DESIGN.md §11): post the id requests, copy
+    /// locally owned batch rows while the wire is busy, fill remote rows
+    /// after the replies land. Bit-exact with the blocking schedule.
+    pub overlap: bool,
     pub machine: MachineProfile,
     pub seed: u64,
 }
@@ -90,6 +96,7 @@ impl Default for MiniBatchConfig {
             agg: AggDispatch::default(),
             transport: TransportKind::Sequential,
             rank_threads: 0,
+            overlap: false,
             machine: MachineProfile::abci(),
             seed: 42,
         }
@@ -208,6 +215,7 @@ impl MiniBatchTrainer {
         let mut modeled_compute = 0f64;
         let mut sync = 0f64;
         let mut totals = LossTotals::default();
+        let mut epoch_ledger = OverlapLedger::new(0);
 
         for round in 0..rounds {
             let lo = round * k;
@@ -262,7 +270,7 @@ impl MiniBatchTrainer {
                 .collect();
 
             // ---- execute the round under the configured transport -----
-            let (lane_totals, clock, summed) = if threaded {
+            let (lane_totals, clock, summed, round_ledger) = if threaded {
                 self.round_threaded(
                     &batches,
                     &per_lane,
@@ -274,6 +282,7 @@ impl MiniBatchTrainer {
             } else {
                 self.round_sequential(&batches, &per_lane, &rows, round, &mut epoch_comm)?
             };
+            epoch_ledger.absorb(&round_ledger);
 
             // ---- optimizer step (shared tail) -------------------------
             let mut with_loss = 0usize;
@@ -337,6 +346,7 @@ impl MiniBatchTrainer {
             breakdown,
             comm_data_bytes: epoch_comm.total_data_bytes(),
             comm_param_bytes: epoch_comm.total_param_bytes(),
+            overlap: epoch_ledger,
         };
         self.epoch += 1;
         Ok(stats)
@@ -351,7 +361,7 @@ impl MiniBatchTrainer {
         rows: &[usize],
         round: usize,
         epoch_comm: &mut CommStats,
-    ) -> Result<(Vec<LossTotals>, StageClock, Vec<f32>)> {
+    ) -> Result<(Vec<LossTotals>, StageClock, Vec<f32>, OverlapLedger)> {
         let k = self.part.k;
         let mut tapes = self.engine.tapes(rows, &self.params);
         let mut clock = StageClock::new(k);
@@ -365,6 +375,7 @@ impl MiniBatchTrainer {
             self.mc.seed,
             self.epoch,
             round,
+            self.mc.overlap,
             epoch_comm,
         );
         self.engine
@@ -394,12 +405,13 @@ impl MiniBatchTrainer {
         // input cotangent is unused, so don't propagate it.
         self.engine
             .backward(&self.params, &mut ctx, &mut tapes, None, false, &mut clock)?;
+        let ledger = ctx.take_ledger();
         drop(ctx);
 
         let mut flats: Vec<Vec<f32>> = tapes.grads.iter().map(|g| g.flatten()).collect();
         let ar = collective::allreduce_sum(&mut flats, &self.mc.machine);
         epoch_comm.modeled_send_secs.iter_mut().for_each(|s| *s += ar);
-        Ok((lane_totals, clock, flats.swap_remove(0)))
+        Ok((lane_totals, clock, flats.swap_remove(0), ledger))
     }
 
     /// One round, threaded transport: one OS thread per rank over
@@ -421,7 +433,7 @@ impl MiniBatchTrainer {
         round: usize,
         fabric: &Fabric,
         shards: &mut [CommStats],
-    ) -> Result<(Vec<LossTotals>, StageClock, Vec<f32>)> {
+    ) -> Result<(Vec<LossTotals>, StageClock, Vec<f32>, OverlapLedger)> {
         let k = self.part.k;
         let lg: &LabelledGraph = &self.lg;
         let assign: &[u32] = &self.part.assign;
@@ -431,6 +443,7 @@ impl MiniBatchTrainer {
         let quant = self.mc.quant;
         let seed = self.mc.seed;
         let epoch = self.epoch;
+        let overlap = self.mc.overlap;
         let mut outs: Vec<RoundOut> = (0..k).map(|_| RoundOut::new()).collect();
         let bodies: Vec<RankBody<'_>> = outs
             .iter_mut()
@@ -441,7 +454,7 @@ impl MiniBatchTrainer {
                 Box::new(move || {
                     run_rank_round(
                         w, out, shard, fabric, lg, assign, batches, per_lane, rows_w, engine,
-                        params, machine, quant, seed, epoch, round,
+                        params, machine, quant, seed, epoch, round, overlap,
                     )
                 }) as RankBody<'_>
             })
@@ -449,9 +462,16 @@ impl MiniBatchTrainer {
         transport::run_ranks(fabric, bodies)?;
         let clocks: Vec<StageClock> = outs.iter_mut().map(|o| std::mem::take(&mut o.clock)).collect();
         let clock = StageClock::merge_lanes(&clocks);
+        let ledger = if self.mc.overlap {
+            let ledgers: Vec<OverlapLedger> =
+                outs.iter_mut().map(|o| std::mem::take(&mut o.ledger)).collect();
+            OverlapLedger::merge_lanes(&ledgers)
+        } else {
+            OverlapLedger::default()
+        };
         let lane_totals: Vec<LossTotals> = outs.iter().map(|o| o.totals).collect();
         let summed = std::mem::take(&mut outs[0].summed);
-        Ok((lane_totals, clock, summed))
+        Ok((lane_totals, clock, summed, ledger))
     }
 
     /// Train for the configured number of epochs.
@@ -501,6 +521,8 @@ fn lane_loss_scale(t: &LossTotals) -> f32 {
 struct RoundOut {
     totals: LossTotals,
     clock: StageClock,
+    /// This rank's single-lane overlap accounting (`--overlap on`).
+    ledger: OverlapLedger,
     /// The allreduced (summed, unscaled) flat gradient.
     summed: Vec<f32>,
 }
@@ -510,6 +532,7 @@ impl RoundOut {
         Self {
             totals: LossTotals::default(),
             clock: StageClock::new(1),
+            ledger: OverlapLedger::new(1),
             summed: Vec::new(),
         }
     }
@@ -538,13 +561,14 @@ fn run_rank_round(
     seed: u64,
     epoch: usize,
     round: usize,
+    overlap: bool,
 ) -> Result<()> {
     let mut clock = StageClock::new(1);
     let mut tapes = engine.tapes(&[rows_w], params);
     let batch = per_lane[w].map(|bi| &batches[bi]);
     {
         let mut ctx = MiniBatchRankCtx::new(
-            w, lg, assign, batch, machine, quant, seed, epoch, round, fabric, shard,
+            w, lg, assign, batch, machine, quant, seed, epoch, round, overlap, fabric, shard,
         );
         engine.forward(params, &mut ctx, &mut tapes, None, &mut clock)?;
         let (labels, split) = match batch {
@@ -560,6 +584,7 @@ fn run_rank_round(
         let tot = engine.loss_all(&mut tapes, &[spec], &mut clock)[0];
         engine.scale_loss_grad(&mut tapes, &[lane_loss_scale(&tot)]);
         engine.backward(params, &mut ctx, &mut tapes, None, false, &mut clock)?;
+        out.ledger = ctx.take_ledger();
         out.totals = tot;
     }
     let mut flat = tapes.grads[0].flatten();

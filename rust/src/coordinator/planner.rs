@@ -40,6 +40,17 @@ pub struct WorkerCtx {
     pub recv_post_range: Vec<(usize, usize)>,
     /// Shared per-layer topology (identical for all three layers).
     pub spec: LayerSpec,
+    /// Interior rows (no remote in-edge contributions): the subset of
+    /// `0..n_pad` whose aggregation can run before the halo exchange
+    /// completes, strictly increasing. Identical for all three layers
+    /// (the remote topology is layer-invariant). DESIGN.md §11.
+    pub interior_rows: Vec<u32>,
+    /// Boundary rows (targets of `rpre_dst`/`post_dst` scatters, incl.
+    /// the trash-row pads): complement of `interior_rows` in `0..n_pad`.
+    pub boundary_rows: Vec<u32>,
+    /// CSR-style run offsets of `spec.local.seg` (len `n_pad + 1`), for
+    /// subset-restricted aggregation without materializing a sub-CSR.
+    pub local_offsets: Vec<usize>,
     /// Padded features (n_pad × f_in), labels and masks.
     pub features: Vec<f32>,
     pub labels: Vec<u32>,
@@ -267,6 +278,22 @@ fn build_one(lg: &LabelledGraph, plan: &WorkerPlan, cfg: &ShapeConfig) -> Result
         deg_inv,
     };
 
+    // ---- interior/boundary split (overlap schedule, DESIGN.md §11) ------
+    // Boundary = every destination the halo scatters touch, *including*
+    // the trash-row pads of rpre_dst/post_dst: the boundary phase then
+    // replays the full scatter loops verbatim, so blocking and overlap
+    // accumulate identically per destination. Derived from the plans
+    // (i.e. from `hier::remote_pairs`); identical across the 3 layers.
+    let mut is_boundary = vec![false; n_pad];
+    for &d in &spec.rpre_dst {
+        is_boundary[d as usize] = true;
+    }
+    for &d in &spec.post_dst {
+        is_boundary[d as usize] = true;
+    }
+    let (interior_rows, boundary_rows) = crate::partition::interior_split(&is_boundary);
+    let local_offsets = crate::agg::blocked::segment_offsets(&spec.local.seg, n_pad);
+
     Ok(WorkerCtx {
         worker: plan.worker,
         n_real,
@@ -277,6 +304,9 @@ fn build_one(lg: &LabelledGraph, plan: &WorkerPlan, cfg: &ShapeConfig) -> Result
         recv_pre_range,
         recv_post_range,
         spec,
+        interior_rows,
+        boundary_rows,
+        local_offsets,
         features,
         labels,
         labels_i32,
@@ -359,6 +389,49 @@ mod tests {
                 let (qlo, qhi) = ctxs[peer].recv_post_range[ctx.worker];
                 assert_eq!(qhi - qlo, ctx.send_post_rows[peer].len());
             }
+        }
+    }
+
+    #[test]
+    fn interior_boundary_split_covers_padded_rows_disjointly() {
+        let lg = sbm(500, 4, 8.0, 0.85, 16, 0.5, 5);
+        let (ctxs, cfg, _) = prepare(&lg, 3, RemoteStrategy::Hybrid, None, 7).unwrap();
+        for ctx in &ctxs {
+            // Disjoint, sorted, and jointly covering 0..n_pad.
+            assert_eq!(
+                ctx.interior_rows.len() + ctx.boundary_rows.len(),
+                cfg.n_pad,
+                "split must cover every padded row exactly once"
+            );
+            assert!(ctx.interior_rows.windows(2).all(|w| w[0] < w[1]));
+            assert!(ctx.boundary_rows.windows(2).all(|w| w[0] < w[1]));
+            let mut seen = vec![false; cfg.n_pad];
+            for &r in ctx.interior_rows.iter().chain(ctx.boundary_rows.iter()) {
+                assert!(!seen[r as usize], "row {r} in both subsets");
+                seen[r as usize] = true;
+            }
+            // Boundary is exactly the halo-scatter target set.
+            let mut want = vec![false; cfg.n_pad];
+            for &d in ctx.spec.rpre_dst.iter().chain(ctx.spec.post_dst.iter()) {
+                want[d as usize] = true;
+            }
+            for &r in &ctx.boundary_rows {
+                assert!(want[r as usize], "row {r} marked boundary without a scatter");
+            }
+            for (r, &w) in want.iter().enumerate() {
+                if w {
+                    assert!(
+                        ctx.boundary_rows.binary_search(&(r as u32)).is_ok(),
+                        "scatter target {r} missing from boundary set"
+                    );
+                }
+            }
+            // With >1 workers and pads targeting trash, both sides exist.
+            assert!(!ctx.boundary_rows.is_empty());
+            assert!(!ctx.interior_rows.is_empty());
+            // Offsets describe spec.local.seg runs.
+            assert_eq!(ctx.local_offsets.len(), cfg.n_pad + 1);
+            assert_eq!(*ctx.local_offsets.last().unwrap(), ctx.spec.local.seg.len());
         }
     }
 

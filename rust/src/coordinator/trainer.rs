@@ -31,7 +31,7 @@ use crate::comm::transport::{self, Fabric, RankBody, TransportKind};
 use crate::comm::{collective, CommStats};
 use crate::exec::{
     AggDispatch, Engine, FullBatchCtx, FullBatchRankCtx, FullBatchState, LaneHalo, LossSpec,
-    LossTotals, LpInputs, StageClock, Tapes, SPLIT_NONE,
+    LossTotals, LpInputs, OverlapLedger, StageClock, Tapes, SPLIT_NONE,
 };
 use crate::graph::generate::{SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
 use crate::hier::volume::RemoteStrategy;
@@ -71,6 +71,11 @@ pub struct TrainConfig {
     /// every rank resident). Any other value must equal the worker
     /// count; the trainers enforce this (the CLI pre-validates too).
     pub rank_threads: usize,
+    /// Communication–computation overlap (CLI: `--overlap {off,on}`;
+    /// DESIGN.md §11): post each layer's halo alltoallv before interior
+    /// aggregation so wire time hides behind compute. Bit-exact with the
+    /// blocking schedule (`tests/spmd_parity.rs`).
+    pub overlap: bool,
     pub seed: u64,
 }
 
@@ -89,6 +94,7 @@ impl Default for TrainConfig {
             agg: AggDispatch::default(),
             transport: TransportKind::Sequential,
             rank_threads: 0,
+            overlap: false,
             seed: 42,
         }
     }
@@ -111,6 +117,9 @@ pub struct EpochStats {
     pub breakdown: Breakdown,
     pub comm_data_bytes: f64,
     pub comm_param_bytes: f64,
+    /// Per-exchange interior/boundary/comm accounting (populated only
+    /// under `--overlap on`; see [`OverlapLedger`], DESIGN.md §11).
+    pub overlap: OverlapLedger,
 }
 
 pub struct Trainer {
@@ -216,6 +225,7 @@ impl Trainer {
             self.tc.seed,
             self.epoch,
             exchange,
+            self.tc.overlap,
             &mut epoch_comm,
         );
         let lp = LpInputs {
@@ -248,6 +258,7 @@ impl Trainer {
 
         self.engine
             .backward(&self.params, &mut ctx, tapes, lp_opt, true, &mut clock)?;
+        let ledger = ctx.take_ledger();
         drop(ctx);
 
         // ---- gradient allreduce + optimizer step -----------------------
@@ -263,7 +274,7 @@ impl Trainer {
         self.params.unflatten_into(&flat_params);
         breakdown.add(Category::Other, t.elapsed().as_secs_f64());
 
-        Ok(self.finish_epoch(wall, breakdown, &clock, &epoch_comm, &totals))
+        Ok(self.finish_epoch(wall, breakdown, &clock, &epoch_comm, &totals, ledger))
     }
 
     /// One epoch under the threaded transport: every rank on its own OS
@@ -333,12 +344,20 @@ impl Trainer {
 
         let clocks: Vec<StageClock> = outs.iter_mut().map(|o| std::mem::take(&mut o.clock)).collect();
         let clock = StageClock::merge_lanes(&clocks);
+        let ledger = if self.tc.overlap {
+            let ledgers: Vec<OverlapLedger> =
+                outs.iter_mut().map(|o| std::mem::take(&mut o.ledger)).collect();
+            OverlapLedger::merge_lanes(&ledgers)
+        } else {
+            OverlapLedger::default()
+        };
         let totals = outs[0].totals;
-        Ok(self.finish_epoch(wall, breakdown, &clock, &epoch_comm, &totals))
+        Ok(self.finish_epoch(wall, breakdown, &clock, &epoch_comm, &totals, ledger))
     }
 
     /// Transport-agnostic epoch accounting tail: Eqn-2 bottleneck math,
     /// Fig-12 breakdown, run-total accumulation.
+    #[allow(clippy::too_many_arguments)]
     fn finish_epoch(
         &mut self,
         wall: Instant,
@@ -346,6 +365,7 @@ impl Trainer {
         clock: &StageClock,
         epoch_comm: &CommStats,
         totals: &LossTotals,
+        overlap: OverlapLedger,
     ) -> EpochStats {
         let k = self.k();
         // Compute was measured on this container's cores; a rank of the
@@ -379,6 +399,7 @@ impl Trainer {
             breakdown,
             comm_data_bytes: epoch_comm.total_data_bytes(),
             comm_param_bytes: epoch_comm.total_param_bytes(),
+            overlap,
         };
         self.epoch += 1;
         stats
@@ -437,6 +458,8 @@ struct RankOut {
     clock: StageClock,
     /// This rank's CommStats shard (its own sender row only).
     comm: CommStats,
+    /// This rank's single-lane overlap accounting (`--overlap on`).
+    ledger: OverlapLedger,
     /// The allreduced (summed) flat gradient.
     summed: Vec<f32>,
 }
@@ -447,6 +470,7 @@ impl RankOut {
             totals: LossTotals::default(),
             clock: StageClock::new(1),
             comm: CommStats::new(k),
+            ledger: OverlapLedger::new(1),
             summed: Vec::new(),
         }
     }
@@ -485,6 +509,7 @@ fn run_rank_epoch(
             tc.seed,
             epoch,
             exchange,
+            tc.overlap,
             fabric,
             &mut out.comm,
         );
@@ -512,6 +537,7 @@ fn run_rank_epoch(
         }
         engine.scale_loss_grad(tapes, &[loss_grad_scale(&totals)]);
         engine.backward(params, &mut ctx, tapes, lp_opt, true, &mut clock)?;
+        out.ledger = ctx.take_ledger();
         out.totals = totals;
     }
     // Ring allreduce of the flat gradient (rank-order fold — bit-exact
@@ -648,6 +674,29 @@ mod tests {
         let last = stats.last().unwrap();
         assert!(last.train_loss < stats[0].train_loss, "loss must decrease");
         assert!(last.comm_data_bytes >= 0.0);
+    }
+
+    #[test]
+    fn overlap_schedule_learns_and_records_ledger() {
+        // Bit-parity with the blocking schedule is pinned in
+        // tests/spmd_parity.rs; this is the in-crate smoke check that the
+        // interior/boundary split trains end to end under both transports
+        // (with delay_comm so the stale-halo boundary path also runs).
+        for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+            let tc = TrainConfig {
+                epochs: 12,
+                delay_comm: 2,
+                overlap: true,
+                transport,
+                ..Default::default()
+            };
+            let stats = train(3, tc, 400);
+            let last = stats.last().unwrap();
+            assert!(last.train_loss < stats[0].train_loss, "loss must decrease");
+            let ledger = &last.overlap;
+            assert!(!ledger.is_empty(), "overlap epochs must record stages");
+            assert!(ledger.modeled_overlap_secs() <= ledger.modeled_serial_secs());
+        }
     }
 
     #[test]

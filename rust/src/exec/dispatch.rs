@@ -170,6 +170,46 @@ impl AggDispatch {
         }
     }
 
+    /// Subset-restricted segment sum (DESIGN.md §11): accumulate only the
+    /// destination rows in `rows` (strictly increasing), given the
+    /// CSR-style run offsets from `agg::blocked::segment_offsets`. No
+    /// sub-CSR is materialized.
+    ///
+    /// Bit-exactness contract: every §4 kernel family accumulates each
+    /// destination's contributions in ascending contribution order, so —
+    /// provided each selected `out` row starts at the same value the full
+    /// call would see (the engine zeroes `z` first) — a disjoint union of
+    /// `segment_sum_rows` calls over a partition of `0..n_seg` reproduces
+    /// [`AggDispatch::segment_sum`] with the *same* configured kernel
+    /// bit-for-bit. Serial kernels route to the blocked subset kernel
+    /// (identical inner loop everywhere); `Parallel`/`Auto` tile the row
+    /// list by cumulative contribution count.
+    pub fn segment_sum_rows(
+        &self,
+        h: &[f32],
+        f: usize,
+        gather: &[u32],
+        seg_offsets: &[usize],
+        rows: &[u32],
+        out: &mut [f32],
+    ) {
+        match self.kernel {
+            AggKernel::Vanilla | AggKernel::Sorted | AggKernel::Blocked | AggKernel::Spmm => {
+                blocked::segment_sum_rows(h, f, gather, seg_offsets, rows, out)
+            }
+            AggKernel::Parallel | AggKernel::Auto => parallel::segment_sum_rows_n(
+                self.threads,
+                h,
+                f,
+                gather,
+                seg_offsets,
+                rows,
+                out,
+                self.parallel_min_work,
+            ),
+        }
+    }
+
     /// Weighted SpMM `out += A · h` over a CSR matrix (mini-batch induced
     /// adjacencies; CSR is already destination-clustered, so `sorted`
     /// coincides with `blocked`).
@@ -258,6 +298,38 @@ mod tests {
                 assert!(
                     (x - y).abs() < 1e-5,
                     "{}: mismatch at {i}: {x} vs {y}",
+                    kernel.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rows_subset_union_matches_full_dispatch_bitwise_for_every_kernel() {
+        // The overlap schedule's foundation: for each kernel choice, a
+        // disjoint interior/boundary split of the destinations must equal
+        // the one-shot dispatch bit-for-bit.
+        let mut rng = Rng::new(23);
+        let (n_src, n_seg, m, f) = (80, 50, 900, 21);
+        let (h, gather, seg) = random_problem(&mut rng, n_src, n_seg, m, f);
+        let off = crate::agg::blocked::segment_offsets(&seg, n_seg);
+        let interior: Vec<u32> = (0..n_seg as u32).filter(|r| r % 4 != 1).collect();
+        let boundary: Vec<u32> = (0..n_seg as u32).filter(|r| r % 4 == 1).collect();
+        for kernel in AggKernel::ALL {
+            let disp = AggDispatch::default()
+                .with_kernel(kernel)
+                .with_threads(3)
+                .with_parallel_min_work(8);
+            let mut full = vec![0f32; n_seg * f];
+            disp.segment_sum(&h, f, &gather, &seg, n_seg, &mut full);
+            let mut split = vec![0f32; n_seg * f];
+            disp.segment_sum_rows(&h, f, &gather, &off, &interior, &mut split);
+            disp.segment_sum_rows(&h, f, &gather, &off, &boundary, &mut split);
+            for (i, (a, b)) in full.iter().zip(split.iter()).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{}: bit mismatch at {i}: {a} vs {b}",
                     kernel.name()
                 );
             }

@@ -17,9 +17,18 @@
 //!   owns one lane (`&mut LaneHalo`, no shared mutable graph state) and
 //!   rendezvouses its send row through the mailbox
 //!   [`Fabric`](crate::comm::transport::Fabric).
+//!
+//! Both flavors run either the **blocking** schedule (exchange at a
+//! barrier, then aggregate — the original phase-serial path) or the
+//! **overlap** schedule (`--overlap on`, DESIGN.md §11): the halo
+//! alltoallv is posted first, the interior rows (no remote in-edges,
+//! `WorkerCtx::interior_rows`) aggregate while the wire is busy, and the
+//! boundary rows finish after receipt. The two schedules are bit-exact
+//! by construction (`tests/spmd_parity.rs`): every destination row sees
+//! the identical per-row accumulation order either way.
 
 use super::dispatch::AggDispatch;
-use super::GraphContext;
+use super::{GraphContext, OverlapLedger};
 use crate::comm::transport::Fabric;
 use crate::comm::{alltoallv, CommStats, Payload};
 use crate::coordinator::planner::WorkerCtx;
@@ -28,6 +37,10 @@ use crate::quant::{fused, Bits};
 use crate::runtime::ShapeConfig;
 use anyhow::Result;
 use std::time::Instant;
+
+/// Overlap-ledger stage labels, forward/backward per layer (DESIGN.md §11).
+const FWD_STAGE: [&str; 3] = ["fwd L0", "fwd L1", "fwd L2"];
+const BWD_STAGE: [&str; 3] = ["bwd L0", "bwd L1", "bwd L2"];
 
 /// One lane's persistent halo state: received tensors survive across
 /// epochs so `delay_comm > 1` (the DistGNN cd-N baseline) trains on stale
@@ -94,6 +107,11 @@ pub struct FullBatchCtx<'a> {
     /// Exchange halos this epoch? (`delay_comm` staleness policy —
     /// decided by the driver.)
     exchange: bool,
+    /// Interior/boundary split schedule with the exchange posted before
+    /// interior aggregation (`--overlap on`, DESIGN.md §11); bit-exact
+    /// with the blocking schedule by construction.
+    overlap: bool,
+    ledger: OverlapLedger,
     comm: &'a mut CommStats,
 }
 
@@ -108,8 +126,10 @@ impl<'a> FullBatchCtx<'a> {
         seed: u64,
         epoch: usize,
         exchange: bool,
+        overlap: bool,
         comm: &'a mut CommStats,
     ) -> Self {
+        let lanes = workers.len();
         Self {
             workers,
             shapes,
@@ -119,8 +139,16 @@ impl<'a> FullBatchCtx<'a> {
             seed,
             epoch,
             exchange,
+            overlap,
+            ledger: OverlapLedger::new(lanes),
             comm,
         }
+    }
+
+    /// Hand the epoch's overlap accounting back to the driver (empty when
+    /// `--overlap off`).
+    pub fn take_ledger(&mut self) -> OverlapLedger {
+        std::mem::take(&mut self.ledger)
     }
 
     fn k(&self) -> usize {
@@ -131,15 +159,15 @@ impl<'a> FullBatchCtx<'a> {
         (0..k).map(|_| (0..k).map(|_| Payload::Empty).collect()).collect()
     }
 
-    /// Forward halo exchange for layer `l`: quantize → wire → dequantize,
-    /// scattering into the persistent recv buffers.
-    fn exchange_fwd(
+    /// Pack the full k×k forward send matrix for layer `l` — shared by
+    /// the blocking exchange and the overlap schedule's post step.
+    fn pack_fwd_matrix(
         &mut self,
         l: usize,
         fin: usize,
         h: &[Vec<f32>],
         quant_secs: &mut [f64],
-    ) -> Result<()> {
+    ) -> Vec<Vec<Payload>> {
         let k = self.k();
         let mut sends = Self::empty_matrix(k);
         for w in 0..k {
@@ -164,6 +192,38 @@ impl<'a> FullBatchCtx<'a> {
                 }
             }
         }
+        sends
+    }
+
+    /// Pack the full k×k reverse (cotangent) send matrix — shared by the
+    /// blocking exchange and the overlap schedule's post step.
+    fn pack_bwd_matrix(&self, fin: usize) -> Vec<Vec<Payload>> {
+        let k = self.k();
+        let mut sends = Self::empty_matrix(k);
+        for w in 0..k {
+            for peer in 0..k {
+                if peer == w {
+                    continue;
+                }
+                if let Some(p) = pack_bwd(&self.workers[w], &self.st.lanes[w], peer, fin) {
+                    sends[w][peer] = p;
+                }
+            }
+        }
+        sends
+    }
+
+    /// Forward halo exchange for layer `l`: quantize → wire → dequantize,
+    /// scattering into the persistent recv buffers.
+    fn exchange_fwd(
+        &mut self,
+        l: usize,
+        fin: usize,
+        h: &[Vec<f32>],
+        quant_secs: &mut [f64],
+    ) -> Result<()> {
+        let k = self.k();
+        let sends = self.pack_fwd_matrix(l, fin, h, quant_secs);
         let recvs = alltoallv(sends, self.machine, &mut *self.comm);
         for w in 0..k {
             scatter_fwd(
@@ -183,17 +243,7 @@ impl<'a> FullBatchCtx<'a> {
     /// fold them into `d_partials` / `d_h`.
     fn exchange_bwd(&mut self, fin: usize, d_h: &mut [Vec<f32>]) -> Result<()> {
         let k = self.k();
-        let mut sends = Self::empty_matrix(k);
-        for w in 0..k {
-            for peer in 0..k {
-                if peer == w {
-                    continue;
-                }
-                if let Some(p) = pack_bwd(&self.workers[w], &self.st.lanes[w], peer, fin) {
-                    sends[w][peer] = p;
-                }
-            }
-        }
+        let sends = self.pack_bwd_matrix(fin);
         let recvs = alltoallv(sends, self.machine, &mut *self.comm);
         for w in 0..k {
             scatter_bwd(
@@ -252,30 +302,89 @@ impl GraphContext for FullBatchCtx<'_> {
             );
             secs[w] += t.elapsed().as_secs_f64();
         }
-        if self.exchange {
-            self.exchange_fwd(layer, fin, h, quant_secs)?;
+        if !self.overlap {
+            // Blocking schedule: exchange at the barrier, then aggregate.
+            if self.exchange {
+                self.exchange_fwd(layer, fin, h, quant_secs)?;
+            }
+            for w in 0..k {
+                let t = Instant::now();
+                local_agg(
+                    &self.workers[w],
+                    &self.st.lanes[w],
+                    self.shapes,
+                    layer,
+                    fin,
+                    &h[w],
+                    &mut z[w],
+                    disp,
+                );
+                secs[w] += t.elapsed().as_secs_f64();
+            }
+            return Ok(());
         }
-        // Local aggregation + received-halo scatter + mean scaling.
+        // Overlap schedule (DESIGN.md §11): pack + post the exchange
+        // first, aggregate the interior rows while the wire is busy, then
+        // complete and finish the boundary rows. The sequential transport
+        // simulates the same schedule (the alltoallv routing simply runs
+        // at the `complete` point).
+        let sends = if self.exchange {
+            Some(self.pack_fwd_matrix(layer, fin, h, quant_secs))
+        } else {
+            None
+        };
+        let mut interior_secs = vec![0f64; k];
         for w in 0..k {
             let t = Instant::now();
-            local_agg(
+            interior_agg(&self.workers[w], fin, &h[w], &mut z[w], disp);
+            let dt = t.elapsed().as_secs_f64();
+            secs[w] += dt;
+            interior_secs[w] = dt;
+        }
+        let mut comm_secs = vec![0f64; k];
+        if let Some(m) = sends {
+            let before = self.comm.modeled_send_secs.clone();
+            let recvs = alltoallv(m, self.machine, &mut *self.comm);
+            for w in 0..k {
+                comm_secs[w] = self.comm.modeled_send_secs[w] - before[w];
+            }
+            for w in 0..k {
+                scatter_fwd(
+                    &self.workers[w],
+                    &mut self.st.lanes[w],
+                    layer,
+                    fin,
+                    &recvs[w],
+                    &mut quant_secs[w],
+                )?;
+            }
+        }
+        let mut boundary_secs = vec![0f64; k];
+        for w in 0..k {
+            let t = Instant::now();
+            boundary_agg(
                 &self.workers[w],
                 &self.st.lanes[w],
-                self.shapes,
                 layer,
                 fin,
                 &h[w],
                 &mut z[w],
                 disp,
             );
-            secs[w] += t.elapsed().as_secs_f64();
+            let dt = t.elapsed().as_secs_f64();
+            secs[w] += dt;
+            boundary_secs[w] = dt;
         }
+        let st = self.ledger.push(FWD_STAGE[layer]);
+        st.interior = interior_secs;
+        st.comm = comm_secs;
+        st.boundary = boundary_secs;
         Ok(())
     }
 
     fn aggregate_bwd(
         &mut self,
-        _layer: usize,
+        layer: usize,
         fin: usize,
         dz: &mut [Vec<f32>],
         d_h: &mut [Vec<f32>],
@@ -283,15 +392,51 @@ impl GraphContext for FullBatchCtx<'_> {
         secs: &mut [f64],
     ) -> Result<()> {
         let k = self.k();
+        if !self.overlap {
+            for w in 0..k {
+                let t = Instant::now();
+                local_agg_bwd(
+                    &self.workers[w],
+                    &mut self.st.lanes[w],
+                    self.shapes,
+                    fin,
+                    &mut dz[w],
+                    &mut d_h[w],
+                    disp,
+                );
+                secs[w] += t.elapsed().as_secs_f64();
+            }
+            for w in 0..k {
+                self.st.lanes[w].d_partials[..self.shapes.p_pre * fin]
+                    .iter_mut()
+                    .for_each(|x| *x = 0.0);
+            }
+            if self.exchange {
+                self.exchange_bwd(fin, d_h)?;
+            }
+            // Scatter returned partial cotangents back through the pre
+            // gather: d_h[gather[i]] += d_partials[seg[i]].
+            for w in 0..k {
+                let t = Instant::now();
+                fold_returned_partials(&self.workers[w], &self.st.lanes[w], fin, &mut d_h[w]);
+                secs[w] += t.elapsed().as_secs_f64();
+            }
+            return Ok(());
+        }
+        // Overlap schedule: capture the halo cotangents first (they are
+        // the payload), post the reverse exchange, run the big local
+        // transposed aggregation while it is in flight, then fold the
+        // returned cotangents. Per-destination accumulation order in
+        // `d_h` is identical to the blocking path (DESIGN.md §11).
         for w in 0..k {
             let t = Instant::now();
-            local_agg_bwd(
+            bwd_fold_degrees(&self.workers[w], fin, &mut dz[w]);
+            bwd_capture_halo(
                 &self.workers[w],
                 &mut self.st.lanes[w],
                 self.shapes,
                 fin,
-                &mut dz[w],
-                &mut d_h[w],
+                &dz[w],
                 disp,
             );
             secs[w] += t.elapsed().as_secs_f64();
@@ -301,16 +446,48 @@ impl GraphContext for FullBatchCtx<'_> {
                 .iter_mut()
                 .for_each(|x| *x = 0.0);
         }
-        if self.exchange {
-            self.exchange_bwd(fin, d_h)?;
+        let sends = if self.exchange {
+            Some(self.pack_bwd_matrix(fin))
+        } else {
+            None
+        };
+        let mut interior_secs = vec![0f64; k];
+        for w in 0..k {
+            let t = Instant::now();
+            bwd_local_transpose(&self.workers[w], self.shapes, fin, &dz[w], &mut d_h[w], disp);
+            let dt = t.elapsed().as_secs_f64();
+            secs[w] += dt;
+            interior_secs[w] = dt;
         }
-        // Scatter returned partial cotangents back through the pre gather:
-        // d_h[gather[i]] += d_partials[seg[i]].
+        let mut comm_secs = vec![0f64; k];
+        if let Some(m) = sends {
+            let before = self.comm.modeled_send_secs.clone();
+            let recvs = alltoallv(m, self.machine, &mut *self.comm);
+            for w in 0..k {
+                comm_secs[w] = self.comm.modeled_send_secs[w] - before[w];
+            }
+            for w in 0..k {
+                scatter_bwd(
+                    &self.workers[w],
+                    &mut self.st.lanes[w],
+                    fin,
+                    &recvs[w],
+                    &mut d_h[w],
+                )?;
+            }
+        }
+        let mut boundary_secs = vec![0f64; k];
         for w in 0..k {
             let t = Instant::now();
             fold_returned_partials(&self.workers[w], &self.st.lanes[w], fin, &mut d_h[w]);
-            secs[w] += t.elapsed().as_secs_f64();
+            let dt = t.elapsed().as_secs_f64();
+            secs[w] += dt;
+            boundary_secs[w] = dt;
         }
+        let st = self.ledger.push(BWD_STAGE[layer]);
+        st.interior = interior_secs;
+        st.comm = comm_secs;
+        st.boundary = boundary_secs;
         Ok(())
     }
 }
@@ -436,6 +613,20 @@ fn local_agg(
     let n = shapes.n_pad;
     z.iter_mut().for_each(|x| *x = 0.0);
     disp.segment_sum(h, fin, &ctx.spec.local.gather, &ctx.spec.local.seg, n, z);
+    scatter_recv_halos(ctx, lane, layer, fin, z);
+    for (i, &dv) in ctx.spec.deg_inv.iter().enumerate() {
+        for v in &mut z[i * fin..(i + 1) * fin] {
+            *v *= dv;
+        }
+    }
+}
+
+/// Accumulate the received pre/post halo tensors into `z` — the one
+/// scatter implementation both schedules run (blocking inside
+/// [`local_agg`], overlap inside [`boundary_agg`]), in the one order the
+/// bit-exactness contract fixes: all `rpre_dst` entries (ascending,
+/// trash-row pads included), then all post edges.
+fn scatter_recv_halos(ctx: &WorkerCtx, lane: &LaneHalo, layer: usize, fin: usize, z: &mut [f32]) {
     let rp = &lane.recv_pre[layer];
     for (i, &d) in ctx.spec.rpre_dst.iter().enumerate() {
         let src = &rp[i * fin..(i + 1) * fin];
@@ -452,48 +643,92 @@ fn local_agg(
             *a += b;
         }
     }
-    for (i, &dv) in ctx.spec.deg_inv.iter().enumerate() {
-        for v in &mut z[i * fin..(i + 1) * fin] {
+}
+
+/// Scale the listed rows of `z` by their `deg_inv` (the subset half of
+/// the blocking path's all-rows mean scaling).
+fn scale_rows(z: &mut [f32], fin: usize, deg_inv: &[f32], rows: &[u32]) {
+    for &r in rows {
+        let r = r as usize;
+        let dv = deg_inv[r];
+        for v in &mut z[r * fin..(r + 1) * fin] {
             *v *= dv;
         }
     }
 }
 
-/// Backward of [`local_agg`] for one lane: fold mean scaling into `dz`,
-/// scatter through the transposed local/post specs, and capture the halo
-/// cotangents (`d_recv_pre`/`d_recv_post`) for the reverse exchange.
-fn local_agg_bwd(
+/// Interior phase of the overlapped forward (DESIGN.md §11): zero `z`,
+/// aggregate the local edges of the interior rows, apply their mean
+/// scaling — all while the posted halo exchange is in flight. Each
+/// interior destination sees exactly the work [`local_agg`] gives it, in
+/// the same order, so the split is bit-exact per row.
+fn interior_agg(ctx: &WorkerCtx, fin: usize, h: &[f32], z: &mut [f32], disp: &AggDispatch) {
+    z.iter_mut().for_each(|x| *x = 0.0);
+    disp.segment_sum_rows(
+        h,
+        fin,
+        &ctx.spec.local.gather,
+        &ctx.local_offsets,
+        &ctx.interior_rows,
+        z,
+    );
+    scale_rows(z, fin, &ctx.spec.deg_inv, &ctx.interior_rows);
+}
+
+/// Boundary phase, after the exchange completed: local edges of the
+/// boundary rows, then the received pre/post halo scatters (the shared
+/// [`scatter_recv_halos`] — literally the loops the blocking
+/// [`local_agg`] runs, trash-row pads included), then the boundary rows'
+/// mean scaling.
+fn boundary_agg(
     ctx: &WorkerCtx,
-    lane: &mut LaneHalo,
-    shapes: &ShapeConfig,
+    lane: &LaneHalo,
+    layer: usize,
     fin: usize,
-    dz: &mut [f32],
-    d_h: &mut [f32],
+    h: &[f32],
+    z: &mut [f32],
     disp: &AggDispatch,
 ) {
-    let n = shapes.n_pad;
-    // Mean scaling folds into dZ.
+    disp.segment_sum_rows(
+        h,
+        fin,
+        &ctx.spec.local.gather,
+        &ctx.local_offsets,
+        &ctx.boundary_rows,
+        z,
+    );
+    scatter_recv_halos(ctx, lane, layer, fin, z);
+    scale_rows(z, fin, &ctx.spec.deg_inv, &ctx.boundary_rows);
+}
+
+/// Fold the mean scaling into `dZ` (all rows) — first step of the
+/// backward aggregation under either schedule.
+fn bwd_fold_degrees(ctx: &WorkerCtx, fin: usize, dz: &mut [f32]) {
     for (i, &dv) in ctx.spec.deg_inv.iter().enumerate() {
         for v in &mut dz[i * fin..(i + 1) * fin] {
             *v *= dv;
         }
     }
+}
+
+/// Capture the halo cotangents this lane owes its producers:
+/// `d_recv_pre[i] = dz[rpre_dst[i]]` and the transposed post scatter into
+/// `d_recv_post`. Reads `dz` only — independent of the local transpose,
+/// so the overlap schedule can run it first and post the payloads.
+fn bwd_capture_halo(
+    ctx: &WorkerCtx,
+    lane: &mut LaneHalo,
+    shapes: &ShapeConfig,
+    fin: usize,
+    dz: &[f32],
+    disp: &AggDispatch,
+) {
+    let n = shapes.n_pad;
     let dzv = &dz[..n * fin];
-    // (1) local edges, transposed: d_h[src] += dz[dst].
-    disp.segment_sum(
-        dzv,
-        fin,
-        &ctx.spec.local_t.gather,
-        &ctx.spec.local_t.seg,
-        n,
-        &mut d_h[..n * fin],
-    );
-    // (2) received partials: d_recv_pre[i] = dz[rpre_dst[i]].
     for (i, &d) in ctx.spec.rpre_dst.iter().enumerate() {
         lane.d_recv_pre[i * fin..(i + 1) * fin]
             .copy_from_slice(&dzv[d as usize * fin..(d as usize + 1) * fin]);
     }
-    // (3) post rows: d_recv_post[row] += dz[dst] (transposed spec).
     let drp = &mut lane.d_recv_post[..shapes.r_post * fin];
     drp.iter_mut().for_each(|x| *x = 0.0);
     disp.segment_sum(
@@ -504,6 +739,48 @@ fn local_agg_bwd(
         shapes.r_post,
         drp,
     );
+}
+
+/// Local edges, transposed: `d_h[src] += dz[dst]` — the bulk of the
+/// backward aggregation, overlappable with the reverse exchange (it
+/// neither reads nor writes anything the exchange touches).
+fn bwd_local_transpose(
+    ctx: &WorkerCtx,
+    shapes: &ShapeConfig,
+    fin: usize,
+    dz: &[f32],
+    d_h: &mut [f32],
+    disp: &AggDispatch,
+) {
+    let n = shapes.n_pad;
+    disp.segment_sum(
+        &dz[..n * fin],
+        fin,
+        &ctx.spec.local_t.gather,
+        &ctx.spec.local_t.seg,
+        n,
+        &mut d_h[..n * fin],
+    );
+}
+
+/// Backward of [`local_agg`] for one lane (blocking schedule): fold mean
+/// scaling into `dz`, scatter through the transposed local/post specs,
+/// and capture the halo cotangents (`d_recv_pre`/`d_recv_post`) for the
+/// reverse exchange. The three sub-steps write disjoint outputs from the
+/// same scaled `dz`, so the overlap schedule may reorder them freely
+/// without changing a bit.
+fn local_agg_bwd(
+    ctx: &WorkerCtx,
+    lane: &mut LaneHalo,
+    shapes: &ShapeConfig,
+    fin: usize,
+    dz: &mut [f32],
+    d_h: &mut [f32],
+    disp: &AggDispatch,
+) {
+    bwd_fold_degrees(ctx, fin, dz);
+    bwd_local_transpose(ctx, shapes, fin, dz, d_h, disp);
+    bwd_capture_halo(ctx, lane, shapes, fin, dz, disp);
 }
 
 /// Build the reverse (cotangent) payload one lane returns to `peer`:
@@ -584,6 +861,11 @@ pub struct FullBatchRankCtx<'a> {
     seed: u64,
     epoch: usize,
     exchange: bool,
+    /// Split-phase schedule: `fabric.post_alltoallv` before interior
+    /// aggregation, `complete_alltoallv` before the boundary rows
+    /// (`--overlap on`, DESIGN.md §11).
+    overlap: bool,
+    ledger: OverlapLedger,
     fabric: &'a Fabric,
     comm: &'a mut CommStats,
 }
@@ -600,6 +882,7 @@ impl<'a> FullBatchRankCtx<'a> {
         seed: u64,
         epoch: usize,
         exchange: bool,
+        overlap: bool,
         fabric: &'a Fabric,
         comm: &'a mut CommStats,
     ) -> Self {
@@ -613,18 +896,27 @@ impl<'a> FullBatchRankCtx<'a> {
             seed,
             epoch,
             exchange,
+            overlap,
+            ledger: OverlapLedger::new(1),
             fabric,
             comm,
         }
     }
 
-    fn exchange_fwd(
+    /// Hand this rank's single-lane overlap accounting back to the driver
+    /// (empty when `--overlap off`).
+    pub fn take_ledger(&mut self) -> OverlapLedger {
+        std::mem::take(&mut self.ledger)
+    }
+
+    /// Build this rank's forward send row for layer `l`.
+    fn pack_fwd_row(
         &mut self,
         l: usize,
         fin: usize,
         h: &[f32],
         quant_secs: &mut f64,
-    ) -> Result<()> {
+    ) -> Vec<Payload> {
         let k = self.fabric.k();
         let mut sends: Vec<Payload> = (0..k).map(|_| Payload::Empty).collect();
         for (peer, slot) in sends.iter_mut().enumerate() {
@@ -638,11 +930,11 @@ impl<'a> FullBatchRankCtx<'a> {
                 *slot = p;
             }
         }
-        let recvs = self.fabric.alltoallv(self.rank, sends, self.machine, self.comm);
-        scatter_fwd(self.ctx, self.st, l, fin, &recvs, quant_secs)
+        sends
     }
 
-    fn exchange_bwd(&mut self, fin: usize, d_h: &mut [f32]) -> Result<()> {
+    /// Build this rank's reverse (cotangent) send row.
+    fn pack_bwd_row(&mut self, fin: usize) -> Vec<Payload> {
         let k = self.fabric.k();
         let mut sends: Vec<Payload> = (0..k).map(|_| Payload::Empty).collect();
         for (peer, slot) in sends.iter_mut().enumerate() {
@@ -653,6 +945,23 @@ impl<'a> FullBatchRankCtx<'a> {
                 *slot = p;
             }
         }
+        sends
+    }
+
+    fn exchange_fwd(
+        &mut self,
+        l: usize,
+        fin: usize,
+        h: &[f32],
+        quant_secs: &mut f64,
+    ) -> Result<()> {
+        let sends = self.pack_fwd_row(l, fin, h, quant_secs);
+        let recvs = self.fabric.alltoallv(self.rank, sends, self.machine, self.comm);
+        scatter_fwd(self.ctx, self.st, l, fin, &recvs, quant_secs)
+    }
+
+    fn exchange_bwd(&mut self, fin: usize, d_h: &mut [f32]) -> Result<()> {
+        let sends = self.pack_bwd_row(fin);
         let recvs = self.fabric.alltoallv(self.rank, sends, self.machine, self.comm);
         scatter_bwd(self.ctx, self.st, fin, &recvs, d_h)
     }
@@ -690,55 +999,121 @@ impl GraphContext for FullBatchRankCtx<'_> {
             pre_partials(self.ctx, self.st, self.shapes, fin, &h[0], disp);
             secs[0] += t.elapsed().as_secs_f64();
         }
+        if !self.overlap {
+            if self.exchange {
+                self.exchange_fwd(layer, fin, &h[0], &mut quant_secs[0])?;
+            }
+            let t = Instant::now();
+            local_agg(
+                self.ctx,
+                self.st,
+                self.shapes,
+                layer,
+                fin,
+                &h[0],
+                &mut z[0],
+                disp,
+            );
+            secs[0] += t.elapsed().as_secs_f64();
+            return Ok(());
+        }
+        // Overlap schedule: deposit the halo payloads into the fabric
+        // *before* interior aggregation — while this rank computes its
+        // interior rows, peers deposit theirs; only `complete` blocks.
+        let comm_before = self.comm.modeled_send_secs[self.rank];
         if self.exchange {
-            self.exchange_fwd(layer, fin, &h[0], &mut quant_secs[0])?;
+            let sends = self.pack_fwd_row(layer, fin, &h[0], &mut quant_secs[0]);
+            self.fabric
+                .post_alltoallv(self.rank, sends, self.machine, self.comm);
         }
         let t = Instant::now();
-        local_agg(
-            self.ctx,
-            self.st,
-            self.shapes,
-            layer,
-            fin,
-            &h[0],
-            &mut z[0],
-            disp,
-        );
-        secs[0] += t.elapsed().as_secs_f64();
+        interior_agg(self.ctx, fin, &h[0], &mut z[0], disp);
+        let interior = t.elapsed().as_secs_f64();
+        secs[0] += interior;
+        if self.exchange {
+            let recvs = self.fabric.complete_alltoallv(self.rank);
+            scatter_fwd(self.ctx, self.st, layer, fin, &recvs, &mut quant_secs[0])?;
+        }
+        let t = Instant::now();
+        boundary_agg(self.ctx, self.st, layer, fin, &h[0], &mut z[0], disp);
+        let boundary = t.elapsed().as_secs_f64();
+        secs[0] += boundary;
+        let st = self.ledger.push(FWD_STAGE[layer]);
+        st.interior[0] = interior;
+        st.boundary[0] = boundary;
+        st.comm[0] = self.comm.modeled_send_secs[self.rank] - comm_before;
         Ok(())
     }
 
     fn aggregate_bwd(
         &mut self,
-        _layer: usize,
+        layer: usize,
         fin: usize,
         dz: &mut [Vec<f32>],
         d_h: &mut [Vec<f32>],
         disp: &AggDispatch,
         secs: &mut [f64],
     ) -> Result<()> {
+        if !self.overlap {
+            {
+                let t = Instant::now();
+                local_agg_bwd(
+                    self.ctx,
+                    self.st,
+                    self.shapes,
+                    fin,
+                    &mut dz[0],
+                    &mut d_h[0],
+                    disp,
+                );
+                secs[0] += t.elapsed().as_secs_f64();
+            }
+            self.st.d_partials[..self.shapes.p_pre * fin]
+                .iter_mut()
+                .for_each(|x| *x = 0.0);
+            if self.exchange {
+                self.exchange_bwd(fin, &mut d_h[0])?;
+            }
+            let t = Instant::now();
+            fold_returned_partials(self.ctx, self.st, fin, &mut d_h[0]);
+            secs[0] += t.elapsed().as_secs_f64();
+            return Ok(());
+        }
+        // Overlap schedule: capture + post the reverse payloads, run the
+        // local transposed aggregation while the exchange is in flight,
+        // then complete and fold the returned cotangents — identical
+        // per-destination accumulation order to the blocking path.
         {
             let t = Instant::now();
-            local_agg_bwd(
-                self.ctx,
-                self.st,
-                self.shapes,
-                fin,
-                &mut dz[0],
-                &mut d_h[0],
-                disp,
-            );
+            bwd_fold_degrees(self.ctx, fin, &mut dz[0]);
+            bwd_capture_halo(self.ctx, self.st, self.shapes, fin, &dz[0], disp);
             secs[0] += t.elapsed().as_secs_f64();
         }
         self.st.d_partials[..self.shapes.p_pre * fin]
             .iter_mut()
             .for_each(|x| *x = 0.0);
+        let comm_before = self.comm.modeled_send_secs[self.rank];
         if self.exchange {
-            self.exchange_bwd(fin, &mut d_h[0])?;
+            let sends = self.pack_bwd_row(fin);
+            self.fabric
+                .post_alltoallv(self.rank, sends, self.machine, self.comm);
+        }
+        let t = Instant::now();
+        bwd_local_transpose(self.ctx, self.shapes, fin, &dz[0], &mut d_h[0], disp);
+        let interior = t.elapsed().as_secs_f64();
+        secs[0] += interior;
+        if self.exchange {
+            let recvs = self.fabric.complete_alltoallv(self.rank);
+            scatter_bwd(self.ctx, self.st, fin, &recvs, &mut d_h[0])?;
         }
         let t = Instant::now();
         fold_returned_partials(self.ctx, self.st, fin, &mut d_h[0]);
-        secs[0] += t.elapsed().as_secs_f64();
+        let boundary = t.elapsed().as_secs_f64();
+        secs[0] += boundary;
+        let st = self.ledger.push(BWD_STAGE[layer]);
+        st.interior[0] = interior;
+        st.boundary[0] = boundary;
+        st.comm[0] = self.comm.modeled_send_secs[self.rank] - comm_before;
         Ok(())
     }
 }

@@ -13,7 +13,7 @@
 //! transports is pinned by `tests/spmd_parity.rs`.
 
 use super::dispatch::AggDispatch;
-use super::GraphContext;
+use super::{GraphContext, OverlapLedger};
 use crate::agg::spmm::CsrMatrix;
 use crate::comm::transport::Fabric;
 use crate::comm::{alltoallv, CommStats, Payload};
@@ -23,6 +23,17 @@ use crate::quant::{fused, Bits};
 use crate::sample::{mix2, MiniBatch};
 use anyhow::Result;
 use std::time::Instant;
+
+/// Overlap-ledger labels for the remote feature-row fetch (DESIGN.md
+/// §11). The fetch is *two* exchanges with different overlap structure,
+/// so it records two stages: the id-request leg overlaps the copy of
+/// locally owned batch rows (interior), while the reply leg is serial —
+/// its wire time plus the remote-row fill (boundary) cannot start before
+/// the requests complete. Lumping both wires into one stage would let
+/// `max(interior, comm)` hide reply wire behind interior compute the
+/// implemented schedule cannot actually hide.
+const FETCH_REQ_STAGE: &str = "fetch req";
+const FETCH_REPLY_STAGE: &str = "fetch reply";
 
 /// One round's view: worker lane `w` processes `batches[per_lane[w]]`
 /// (idle lanes — `None` — run zero-row no-ops through the engine).
@@ -37,6 +48,9 @@ pub struct MiniBatchCtx<'a> {
     seed: u64,
     epoch: usize,
     round: usize,
+    /// Overlapped fetch schedule (`--overlap on`, DESIGN.md §11).
+    overlap: bool,
+    ledger: OverlapLedger,
     comm: &'a mut CommStats,
     /// The induced weighted adjacency per lane, in the form `agg::spmm`
     /// wants (built once per round, shared by all three layers).
@@ -55,12 +69,14 @@ impl<'a> MiniBatchCtx<'a> {
         seed: u64,
         epoch: usize,
         round: usize,
+        overlap: bool,
         comm: &'a mut CommStats,
     ) -> Self {
         let mats = per_lane
             .iter()
             .map(|slot| slot.map(|bi| induced_csr(&batches[bi])))
             .collect();
+        let lanes = per_lane.len();
         Self {
             lg,
             assign,
@@ -71,40 +87,26 @@ impl<'a> MiniBatchCtx<'a> {
             seed,
             epoch,
             round,
+            overlap,
+            ledger: OverlapLedger::new(lanes),
             comm,
             mats,
         }
     }
-}
 
-impl GraphContext for MiniBatchCtx<'_> {
-    fn lanes(&self) -> usize {
-        self.per_lane.len()
+    /// Hand the round's overlap accounting back to the driver (empty when
+    /// `--overlap off`).
+    pub fn take_ledger(&mut self) -> OverlapLedger {
+        std::mem::take(&mut self.ledger)
     }
 
-    /// The fetch: id requests to owners, then (quantized) feature-row
-    /// replies, then per-lane assembly of the batch input matrix.
-    fn load_inputs(
-        &mut self,
-        x: &mut [Vec<f32>],
-        secs: &mut [f64],
+    /// Owner side of the fetch: serve every id request addressed to `o`.
+    fn serve_requests(
+        &self,
+        req_recvs: &[Vec<Payload>],
         quant_secs: &mut [f64],
-    ) -> Result<()> {
+    ) -> Vec<Vec<Payload>> {
         let k = self.per_lane.len();
-        let f = self.lg.feat_dim;
-        // ---- id requests --------------------------------------------
-        let req_sends: Vec<Vec<Payload>> = (0..k)
-            .map(|w| match self.per_lane[w] {
-                Some(bi) => request_ids(&self.batches[bi], self.assign, w, k)
-                    .iter()
-                    .map(|ids| ids_payload(ids))
-                    .collect(),
-                None => (0..k).map(|_| Payload::Empty).collect(),
-            })
-            .collect();
-        let req_recvs = alltoallv(req_sends, self.machine, &mut *self.comm);
-
-        // ---- replies (owner side) -----------------------------------
         let mut reply_sends: Vec<Vec<Payload>> = (0..k)
             .map(|_| (0..k).map(|_| Payload::Empty).collect())
             .collect();
@@ -127,9 +129,81 @@ impl GraphContext for MiniBatchCtx<'_> {
                 );
             }
         }
-        let mut replies = alltoallv(reply_sends, self.machine, &mut *self.comm);
+        reply_sends
+    }
+}
 
-        // ---- assemble X per lane ------------------------------------
+impl GraphContext for MiniBatchCtx<'_> {
+    fn lanes(&self) -> usize {
+        self.per_lane.len()
+    }
+
+    /// The fetch: id requests to owners, then (quantized) feature-row
+    /// replies, then per-lane assembly of the batch input matrix. Under
+    /// `--overlap on` the locally owned rows are copied while the id
+    /// exchange is outstanding (bit-exact either way: every batch row is
+    /// written exactly once, from the same source).
+    fn load_inputs(
+        &mut self,
+        x: &mut [Vec<f32>],
+        secs: &mut [f64],
+        quant_secs: &mut [f64],
+    ) -> Result<()> {
+        let k = self.per_lane.len();
+        let f = self.lg.feat_dim;
+        // ---- id requests --------------------------------------------
+        let req_sends: Vec<Vec<Payload>> = (0..k)
+            .map(|w| match self.per_lane[w] {
+                Some(bi) => request_ids(&self.batches[bi], self.assign, w, k)
+                    .iter()
+                    .map(|ids| ids_payload(ids))
+                    .collect(),
+                None => (0..k).map(|_| Payload::Empty).collect(),
+            })
+            .collect();
+        if !self.overlap {
+            let req_recvs = alltoallv(req_sends, self.machine, &mut *self.comm);
+            let reply_sends = self.serve_requests(&req_recvs, quant_secs);
+            let mut replies = alltoallv(reply_sends, self.machine, &mut *self.comm);
+            for w in 0..k {
+                let bi = match self.per_lane[w] {
+                    Some(bi) => bi,
+                    None => continue,
+                };
+                let mb = &self.batches[bi];
+                let decoded = decode_replies(&mut replies[w], &mut quant_secs[w]);
+                let t = Instant::now();
+                assemble_x(self.lg, self.assign, mb, w, &decoded, f, &mut x[w])?;
+                secs[w] += t.elapsed().as_secs_f64();
+            }
+            return Ok(());
+        }
+        // Overlap schedule: the request exchange is posted, the locally
+        // owned batch rows copy while it is in flight, and only the
+        // remotely owned rows wait for the replies.
+        let before_req = self.comm.modeled_send_secs.clone();
+        let mut interior_secs = vec![0f64; k];
+        for w in 0..k {
+            if let Some(bi) = self.per_lane[w] {
+                let t = Instant::now();
+                assemble_local(self.lg, self.assign, &self.batches[bi], w, f, &mut x[w]);
+                interior_secs[w] = t.elapsed().as_secs_f64();
+                secs[w] += interior_secs[w];
+            }
+        }
+        let req_recvs = alltoallv(req_sends, self.machine, &mut *self.comm);
+        let mut req_comm_secs = vec![0f64; k];
+        for w in 0..k {
+            req_comm_secs[w] = self.comm.modeled_send_secs[w] - before_req[w];
+        }
+        let reply_sends = self.serve_requests(&req_recvs, quant_secs);
+        let before_reply = self.comm.modeled_send_secs.clone();
+        let mut replies = alltoallv(reply_sends, self.machine, &mut *self.comm);
+        let mut reply_comm_secs = vec![0f64; k];
+        for w in 0..k {
+            reply_comm_secs[w] = self.comm.modeled_send_secs[w] - before_reply[w];
+        }
+        let mut boundary_secs = vec![0f64; k];
         for w in 0..k {
             let bi = match self.per_lane[w] {
                 Some(bi) => bi,
@@ -138,9 +212,19 @@ impl GraphContext for MiniBatchCtx<'_> {
             let mb = &self.batches[bi];
             let decoded = decode_replies(&mut replies[w], &mut quant_secs[w]);
             let t = Instant::now();
-            assemble_x(self.lg, self.assign, mb, w, &decoded, f, &mut x[w])?;
-            secs[w] += t.elapsed().as_secs_f64();
+            assemble_remote(self.assign, mb, w, &decoded, f, &mut x[w])?;
+            boundary_secs[w] = t.elapsed().as_secs_f64();
+            secs[w] += boundary_secs[w];
         }
+        // Only the request leg overlaps the local-row copy; the reply
+        // wire is serial and goes in its own stage so the model never
+        // claims to hide it behind interior compute.
+        let st = self.ledger.push(FETCH_REQ_STAGE);
+        st.interior = interior_secs;
+        st.comm = req_comm_secs;
+        let st = self.ledger.push(FETCH_REPLY_STAGE);
+        st.comm = reply_comm_secs;
+        st.boundary = boundary_secs;
         Ok(())
     }
 
@@ -277,10 +361,28 @@ fn decode_replies(replies: &mut [Payload], quant_secs: &mut f64) -> Vec<Option<V
     decoded
 }
 
-/// Interleave local rows and decoded remote rows into the lane's batch
-/// input matrix (each reply consumed front to back, exactly once).
-fn assemble_x(
+/// Copy the locally owned batch rows into `x` (the fetch's *interior*
+/// half — needs no remote data, so the overlap schedule runs it while the
+/// id exchange is outstanding).
+fn assemble_local(
     lg: &LabelledGraph,
+    assign: &[u32],
+    mb: &MiniBatch,
+    w: usize,
+    f: usize,
+    x: &mut [f32],
+) {
+    for (i, &v) in mb.n_id.iter().enumerate() {
+        if assign[v as usize] as usize == w {
+            x[i * f..(i + 1) * f].copy_from_slice(lg.feature_row(v as usize));
+        }
+    }
+}
+
+/// Fill the remotely owned batch rows from the decoded replies (the
+/// *boundary* half — each reply consumed front to back, exactly once, in
+/// `n_id` order, matching the owner's packing order).
+fn assemble_remote(
     assign: &[u32],
     mb: &MiniBatch,
     w: usize,
@@ -292,18 +394,34 @@ fn assemble_x(
     for (i, &v) in mb.n_id.iter().enumerate() {
         let o = assign[v as usize] as usize;
         if o == w {
-            x[i * f..(i + 1) * f].copy_from_slice(lg.feature_row(v as usize));
-        } else {
-            let rows = decoded[o]
-                .as_ref()
-                .ok_or_else(|| anyhow::anyhow!("missing reply from {o} to {w}"))?;
-            let c = cursors[o];
-            anyhow::ensure!((c + 1) * f <= rows.len(), "reply row underflow");
-            x[i * f..(i + 1) * f].copy_from_slice(&rows[c * f..(c + 1) * f]);
-            cursors[o] += 1;
+            continue;
         }
+        let rows = decoded[o]
+            .as_ref()
+            .ok_or_else(|| anyhow::anyhow!("missing reply from {o} to {w}"))?;
+        let c = cursors[o];
+        anyhow::ensure!((c + 1) * f <= rows.len(), "reply row underflow");
+        x[i * f..(i + 1) * f].copy_from_slice(&rows[c * f..(c + 1) * f]);
+        cursors[o] += 1;
     }
     Ok(())
+}
+
+/// Interleave local rows and decoded remote rows into the lane's batch
+/// input matrix — the blocking-schedule assembly; every row is written by
+/// exactly one of the two halves, so local-then-remote produces the
+/// identical matrix.
+fn assemble_x(
+    lg: &LabelledGraph,
+    assign: &[u32],
+    mb: &MiniBatch,
+    w: usize,
+    decoded: &[Option<Vec<f32>>],
+    f: usize,
+    x: &mut [f32],
+) -> Result<()> {
+    assemble_local(lg, assign, mb, w, f, x);
+    assemble_remote(assign, mb, w, decoded, f, x)
 }
 
 /// Single-rank mini-batch context for the threaded transport: lane
@@ -322,6 +440,10 @@ pub struct MiniBatchRankCtx<'a> {
     seed: u64,
     epoch: usize,
     round: usize,
+    /// Overlapped fetch schedule over the split-phase fabric exchange
+    /// (`--overlap on`, DESIGN.md §11).
+    overlap: bool,
+    ledger: OverlapLedger,
     fabric: &'a Fabric,
     comm: &'a mut CommStats,
     mat: Option<CsrMatrix>,
@@ -339,6 +461,7 @@ impl<'a> MiniBatchRankCtx<'a> {
         seed: u64,
         epoch: usize,
         round: usize,
+        overlap: bool,
         fabric: &'a Fabric,
         comm: &'a mut CommStats,
     ) -> Self {
@@ -353,37 +476,35 @@ impl<'a> MiniBatchRankCtx<'a> {
             seed,
             epoch,
             round,
+            overlap,
+            ledger: OverlapLedger::new(1),
             fabric,
             comm,
             mat,
         }
     }
-}
 
-impl GraphContext for MiniBatchRankCtx<'_> {
-    fn lanes(&self) -> usize {
-        1
+    /// Hand this rank's single-lane overlap accounting back to the driver
+    /// (empty when `--overlap off`).
+    pub fn take_ledger(&mut self) -> OverlapLedger {
+        std::mem::take(&mut self.ledger)
     }
 
-    fn load_inputs(
-        &mut self,
-        x: &mut [Vec<f32>],
-        secs: &mut [f64],
-        quant_secs: &mut [f64],
-    ) -> Result<()> {
+    /// This rank's id-request send row.
+    fn request_row(&self) -> Vec<Payload> {
         let k = self.fabric.k();
-        let f = self.lg.feat_dim;
-        // ---- id requests (own row) ----------------------------------
-        let req_sends: Vec<Payload> = match self.batch {
+        match self.batch {
             Some(mb) => request_ids(mb, self.assign, self.rank, k)
                 .iter()
                 .map(|ids| ids_payload(ids))
                 .collect(),
             None => (0..k).map(|_| Payload::Empty).collect(),
-        };
-        let req_recvs = self.fabric.alltoallv(self.rank, req_sends, self.machine, self.comm);
+        }
+    }
 
-        // ---- serve requests addressed to this owner -----------------
+    /// Serve the id requests addressed to this owner.
+    fn serve_row(&self, req_recvs: &[Payload], quant_secs: &mut f64) -> Vec<Payload> {
+        let k = self.fabric.k();
         let mut reply_sends: Vec<Payload> = (0..k).map(|_| Payload::Empty).collect();
         for (w, payload) in req_recvs.iter().enumerate() {
             let ids = match payload {
@@ -399,18 +520,79 @@ impl GraphContext for MiniBatchRankCtx<'_> {
                 self.round,
                 self.rank,
                 w,
-                &mut quant_secs[0],
+                quant_secs,
             );
         }
-        let mut replies = self.fabric.alltoallv(self.rank, reply_sends, self.machine, self.comm);
+        reply_sends
+    }
+}
 
-        // ---- assemble own X -----------------------------------------
+impl GraphContext for MiniBatchRankCtx<'_> {
+    fn lanes(&self) -> usize {
+        1
+    }
+
+    fn load_inputs(
+        &mut self,
+        x: &mut [Vec<f32>],
+        secs: &mut [f64],
+        quant_secs: &mut [f64],
+    ) -> Result<()> {
+        let f = self.lg.feat_dim;
+        if !self.overlap {
+            // Blocking schedule: request → serve → reply → assemble.
+            let req_sends = self.request_row();
+            let req_recvs =
+                self.fabric.alltoallv(self.rank, req_sends, self.machine, self.comm);
+            let reply_sends = self.serve_row(&req_recvs, &mut quant_secs[0]);
+            let mut replies =
+                self.fabric.alltoallv(self.rank, reply_sends, self.machine, self.comm);
+            if let Some(mb) = self.batch {
+                let decoded = decode_replies(&mut replies, &mut quant_secs[0]);
+                let t = Instant::now();
+                assemble_x(self.lg, self.assign, mb, self.rank, &decoded, f, &mut x[0])?;
+                secs[0] += t.elapsed().as_secs_f64();
+            }
+            return Ok(());
+        }
+        // Overlap schedule: post the id requests, copy the locally owned
+        // batch rows while peers deposit, then complete, serve, and fill
+        // the remotely owned rows from the replies.
+        let before_req = self.comm.modeled_send_secs[self.rank];
+        let req_sends = self.request_row();
+        self.fabric
+            .post_alltoallv(self.rank, req_sends, self.machine, self.comm);
+        let mut interior = 0f64;
+        if let Some(mb) = self.batch {
+            let t = Instant::now();
+            assemble_local(self.lg, self.assign, mb, self.rank, f, &mut x[0]);
+            interior = t.elapsed().as_secs_f64();
+            secs[0] += interior;
+        }
+        let req_recvs = self.fabric.complete_alltoallv(self.rank);
+        let req_comm = self.comm.modeled_send_secs[self.rank] - before_req;
+        let reply_sends = self.serve_row(&req_recvs, &mut quant_secs[0]);
+        let before_reply = self.comm.modeled_send_secs[self.rank];
+        self.fabric
+            .post_alltoallv(self.rank, reply_sends, self.machine, self.comm);
+        let mut replies = self.fabric.complete_alltoallv(self.rank);
+        let reply_comm = self.comm.modeled_send_secs[self.rank] - before_reply;
+        let mut boundary = 0f64;
         if let Some(mb) = self.batch {
             let decoded = decode_replies(&mut replies, &mut quant_secs[0]);
             let t = Instant::now();
-            assemble_x(self.lg, self.assign, mb, self.rank, &decoded, f, &mut x[0])?;
-            secs[0] += t.elapsed().as_secs_f64();
+            assemble_remote(self.assign, mb, self.rank, &decoded, f, &mut x[0])?;
+            boundary = t.elapsed().as_secs_f64();
+            secs[0] += boundary;
         }
+        // Two stages — only the request leg overlaps the local-row copy
+        // (see FETCH_REQ_STAGE docs).
+        let st = self.ledger.push(FETCH_REQ_STAGE);
+        st.interior[0] = interior;
+        st.comm[0] = req_comm;
+        let st = self.ledger.push(FETCH_REPLY_STAGE);
+        st.comm[0] = reply_comm;
+        st.boundary[0] = boundary;
         Ok(())
     }
 
@@ -508,7 +690,7 @@ mod tests {
         let run = |p: &ModelParams, want_grads: bool| -> (f64, Vec<f32>) {
             let mut comm = CommStats::new(1);
             let mut ctx = MiniBatchCtx::new(
-                &lg, &assign, &batches, &per_lane, &machine, None, 5, 0, 0, &mut comm,
+                &lg, &assign, &batches, &per_lane, &machine, None, 5, 0, 0, false, &mut comm,
             );
             let mut tapes = engine.tapes(&rows, p);
             let mut clock = StageClock::new(1);
@@ -570,7 +752,7 @@ mod tests {
         let rows = vec![batches[0].n(), 0];
         let mut comm = CommStats::new(2);
         let mut ctx = MiniBatchCtx::new(
-            &lg, &assign, &batches, &per_lane, &machine, None, 1, 0, 0, &mut comm,
+            &lg, &assign, &batches, &per_lane, &machine, None, 1, 0, 0, false, &mut comm,
         );
         let mut tapes = engine.tapes(&rows, &params);
         let mut clock = StageClock::new(2);

@@ -199,6 +199,126 @@ impl StageClock {
     }
 }
 
+/// One overlapped exchange's per-lane accounting (DESIGN.md §11): the
+/// interior compute that ran while the wire was busy, the boundary
+/// compute that waited for receipt, and the modeled wire seconds of the
+/// exchange itself (per sending lane, from `CommStats`).
+#[derive(Clone, Debug, Default)]
+pub struct OverlapStage {
+    /// e.g. "fwd L0", "bwd L2", "fetch".
+    pub label: &'static str,
+    pub interior: Vec<f64>,
+    pub boundary: Vec<f64>,
+    pub comm: Vec<f64>,
+}
+
+impl OverlapStage {
+    fn max(v: &[f64]) -> f64 {
+        v.iter().fold(0.0f64, |a, &b| a.max(b))
+    }
+
+    /// Eqn-2-style lane maxima: `(interior, comm, boundary)`.
+    pub fn maxes(&self) -> (f64, f64, f64) {
+        (Self::max(&self.interior), Self::max(&self.comm), Self::max(&self.boundary))
+    }
+}
+
+/// Overlap-aware time accounting for one epoch (or one run): one
+/// [`OverlapStage`] per overlapped exchange, recorded by the graph
+/// contexts when `--overlap on`. Alongside the *measured* wall time the
+/// drivers already report, this yields two *modeled* views of the same
+/// run — `Σ max(interior, comm) + boundary` (overlapped) vs
+/// `Σ interior + comm + boundary` (phase-serial) — surfaced by
+/// `benches/spmd_scaling.rs` and `benches/fig12_breakdown.rs`.
+#[derive(Clone, Debug, Default)]
+pub struct OverlapLedger {
+    pub lanes: usize,
+    pub stages: Vec<OverlapStage>,
+}
+
+impl OverlapLedger {
+    pub fn new(lanes: usize) -> Self {
+        Self {
+            lanes,
+            stages: Vec::new(),
+        }
+    }
+
+    /// Open a new stage with zeroed per-lane columns.
+    pub fn push(&mut self, label: &'static str) -> &mut OverlapStage {
+        self.stages.push(OverlapStage {
+            label,
+            interior: vec![0.0; self.lanes],
+            boundary: vec![0.0; self.lanes],
+            comm: vec![0.0; self.lanes],
+        });
+        self.stages.last_mut().unwrap()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stages.is_empty()
+    }
+
+    /// Modeled epoch seconds under the overlap schedule
+    /// ([`crate::perfmodel::t_layer_overlap`] per stage).
+    pub fn modeled_overlap_secs(&self) -> f64 {
+        self.stages
+            .iter()
+            .map(|s| {
+                let (i, c, b) = s.maxes();
+                crate::perfmodel::t_layer_overlap(i, c, b)
+            })
+            .sum()
+    }
+
+    /// Modeled epoch seconds of the same run under the phase-serial
+    /// schedule ([`crate::perfmodel::t_layer_serial`] per stage) — the
+    /// comparison baseline for the overlap win.
+    pub fn modeled_serial_secs(&self) -> f64 {
+        self.stages
+            .iter()
+            .map(|s| {
+                let (i, c, b) = s.maxes();
+                crate::perfmodel::t_layer_serial(i, c, b)
+            })
+            .sum()
+    }
+
+    /// Append another ledger's stages (mini-batch rounds accumulate into
+    /// one epoch ledger).
+    pub fn absorb(&mut self, other: &OverlapLedger) {
+        if self.lanes == 0 {
+            self.lanes = other.lanes;
+        }
+        debug_assert!(other.is_empty() || other.lanes == self.lanes);
+        self.stages.extend(other.stages.iter().cloned());
+    }
+
+    /// Zip single-lane rank ledgers (threaded transport) into one k-lane
+    /// ledger with the sequential layout — the [`StageClock::merge_lanes`]
+    /// counterpart. Every rank records the identical stage sequence.
+    pub fn merge_lanes(ledgers: &[OverlapLedger]) -> OverlapLedger {
+        assert!(!ledgers.is_empty(), "no rank ledgers to merge");
+        let n_stages = ledgers[0].stages.len();
+        for l in ledgers {
+            assert_eq!(l.lanes, 1, "merge_lanes takes single-lane rank ledgers");
+            assert_eq!(l.stages.len(), n_stages, "rank overlap stages diverged");
+        }
+        let mut out = OverlapLedger::new(ledgers.len());
+        for s in 0..n_stages {
+            let label = ledgers[0].stages[s].label;
+            debug_assert!(ledgers.iter().all(|l| l.stages[s].label == label));
+            out.stages.push(OverlapStage {
+                label,
+                interior: ledgers.iter().map(|l| l.stages[s].interior[0]).collect(),
+                boundary: ledgers.iter().map(|l| l.stages[s].boundary[0]).collect(),
+                comm: ledgers.iter().map(|l| l.stages[s].comm[0]).collect(),
+            });
+        }
+        out
+    }
+}
+
 /// The saved forward state ("tape") of one engine pass: activations,
 /// normalized activations, aggregated neighbor tensors, and the running
 /// cotangent — everything the exact backward replays.
@@ -720,6 +840,38 @@ mod tests {
         assert!((sync - (2.0 + 4.0)).abs() < 1e-12);
         assert!((m.quant_bottleneck() - 0.3).abs() < 1e-12);
         assert_eq!(m.lane_totals(), vec![3.0, 9.0]);
+    }
+
+    #[test]
+    fn overlap_ledger_models_and_merge() {
+        let mut a = OverlapLedger::new(1);
+        let mut b = OverlapLedger::new(1);
+        for (ledger, scale) in [(&mut a, 1.0f64), (&mut b, 2.0)] {
+            let s = ledger.push("fwd L0");
+            s.interior[0] = 1.0 * scale;
+            s.comm[0] = 0.5 * scale;
+            s.boundary[0] = 0.25 * scale;
+            let s = ledger.push("bwd L0");
+            s.interior[0] = 0.1 * scale;
+            s.comm[0] = 0.4 * scale;
+            s.boundary[0] = 0.0;
+        }
+        let m = OverlapLedger::merge_lanes(&[a, b]);
+        assert_eq!(m.lanes, 2);
+        assert_eq!(m.stages.len(), 2);
+        // Lane maxima come from lane 1 (scale 2): stage 0 → max(2.0, 1.0)
+        // + 0.5 = 2.5; stage 1 → max(0.2, 0.8) + 0 = 0.8.
+        assert!((m.modeled_overlap_secs() - (2.5 + 0.8)).abs() < 1e-12);
+        // Serial: (2.0 + 1.0 + 0.5) + (0.2 + 0.8) = 4.5.
+        assert!((m.modeled_serial_secs() - 4.5).abs() < 1e-12);
+        assert!(m.modeled_overlap_secs() <= m.modeled_serial_secs());
+        // absorb appends stages.
+        let mut epoch = OverlapLedger::new(0);
+        epoch.absorb(&m);
+        epoch.absorb(&m);
+        assert_eq!(epoch.lanes, 2);
+        assert_eq!(epoch.stages.len(), 4);
+        assert!((epoch.modeled_serial_secs() - 9.0).abs() < 1e-12);
     }
 
     #[test]

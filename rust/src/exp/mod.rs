@@ -155,6 +155,7 @@ mod tests {
             breakdown: Default::default(),
             comm_data_bytes: 0.0,
             comm_param_bytes: 0.0,
+            overlap: Default::default(),
         };
         let stats = vec![mk(10.0, 0.1), mk(2.0, 0.5), mk(4.0, 0.4)];
         assert!((steady_epoch_secs(&stats, 2) - 3.0).abs() < 1e-12);

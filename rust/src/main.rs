@@ -40,17 +40,21 @@ fn main() {
         "partition" => cmd_partition(&rest),
         "volume" => cmd_volume(&rest),
         "perfmodel" => cmd_perfmodel(&rest),
+        "benchcmp" => cmd_benchcmp(&rest),
         "datasets" => cmd_datasets(),
         _ => {
             eprintln!(
-                "usage: supergcn <train|partition|volume|perfmodel|datasets> [--help]\n\
+                "usage: supergcn <train|partition|volume|perfmodel|benchcmp|datasets> [--help]\n\
                  SuperGCN: distributed full-batch and mini-batch GCN training for CPU\n\
                  supercomputers. `train --sampler full` is the paper's full-batch loop;\n\
                  `--sampler neighbor|saint-rw|saint-node|saint-edge|cluster` trains with\n\
                  the sampling regime (see `train --help` for fan-out/batch flags).\n\
                  `--transport threaded` runs one OS thread per SPMD rank (mailbox\n\
                  collectives, real multi-core wall clock — bit-exact with `seq`);\n\
-                 `--rank-threads` asserts the thread count (0 = one per worker)."
+                 `--rank-threads` asserts the thread count (0 = one per worker).\n\
+                 `--overlap on` posts each halo exchange before interior aggregation\n\
+                 so wire time hides behind compute — bit-exact with `--overlap off`\n\
+                 (DESIGN.md §11). `benchcmp` gates CI on the committed BENCH_seed.json."
             );
             Ok(())
         }
@@ -76,6 +80,14 @@ fn parse_machine(s: &str) -> Result<MachineProfile> {
         "abci" => MachineProfile::abci(),
         "fugaku" => MachineProfile::fugaku(),
         _ => anyhow::bail!("machine must be abci|fugaku"),
+    })
+}
+
+fn parse_overlap(s: &str) -> Result<bool> {
+    Ok(match s {
+        "on" | "true" | "1" => true,
+        "off" | "false" | "0" => false,
+        _ => anyhow::bail!("overlap must be off|on"),
     })
 }
 
@@ -126,6 +138,13 @@ fn cmd_train(argv: &[String]) -> Result<()> {
              value must equal --procs — blocking mailbox collectives need every \
              rank resident)",
         )
+        .opt(
+            "overlap",
+            "off",
+            "off | on — post each layer's halo exchange before interior \
+             aggregation so wire time overlaps compute (boundary rows finish \
+             after receipt); bit-exact with 'off' (DESIGN.md §11)",
+        )
         .opt("seed", "42", "random seed")
         .opt(
             "sampler",
@@ -153,6 +172,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let transport = TransportKind::parse(&a.get_str("transport"))?;
     let rank_threads = a.get_usize("rank-threads");
     TransportKind::validate_rank_threads(rank_threads, k)?;
+    let overlap = parse_overlap(&a.get_str("overlap"))?;
     let tc = TrainConfig {
         epochs: if epochs == 0 { spec.epochs } else { epochs },
         lr: spec.lr,
@@ -166,6 +186,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         agg: agg.clone(),
         transport,
         rank_threads,
+        overlap,
         seed: a.get_u64("seed"),
     };
 
@@ -216,6 +237,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             agg,
             transport: tc.transport,
             rank_threads: tc.rank_threads,
+            overlap: tc.overlap,
             machine: tc.machine.clone(),
             seed: tc.seed,
         };
@@ -258,11 +280,12 @@ fn run_training(
     tc: TrainConfig,
 ) -> Result<()> {
     println!(
-        "training: {} workers, config={}, transport={}, agg-kernel={}, quant={:?}, lp={}, \
-         strategy={}, machine={}",
+        "training: {} workers, config={}, transport={}, overlap={}, agg-kernel={}, \
+         quant={:?}, lp={}, strategy={}, machine={}",
         ctxs.len(),
         cfg.name,
         tc.transport.name(),
+        if tc.overlap { "on" } else { "off" },
         tc.agg.kernel.name(),
         tc.quant.map(|b| b.name()).unwrap_or("fp32"),
         tc.label_prop,
@@ -434,6 +457,110 @@ fn cmd_perfmodel(argv: &[String]) -> Result<()> {
     if let Some(px) = crossover_procs(&pts) {
         println!("latency-bound crossover at P' = {px}");
     }
+    Ok(())
+}
+
+/// CI perf gate: compare a fresh `benches/spmd_scaling.rs` JSON record
+/// against the committed baseline and fail on threaded wall-clock
+/// regressions beyond the threshold. Rows are keyed by (regime, ranks);
+/// rows missing from either side are reported but never fail the gate
+/// (the bench matrix may grow). Baselines are refreshed by copying a
+/// healthy CI run's `BENCH_ci.json` artifact over `BENCH_seed.json`.
+fn cmd_benchcmp(argv: &[String]) -> Result<()> {
+    let a = Args::new("supergcn benchcmp", "bench-record regression gate")
+        .opt("baseline", "BENCH_seed.json", "committed baseline record")
+        .opt("current", "BENCH_ci.json", "freshly produced record")
+        .opt(
+            "threshold-pct",
+            "25",
+            "fail when current threaded wall secs exceed baseline by more than this",
+        )
+        .opt(
+            "min-secs",
+            "0.005",
+            "ignore rows whose baseline threaded wall secs are below this (timer noise)",
+        )
+        .parse_from(argv)?;
+    let load_rows = |path: &str| -> Result<Vec<(String, f64)>> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+        let doc = supergcn::util::json::Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        let rows = doc
+            .get("rows")
+            .and_then(|r| r.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("{path}: missing rows[]"))?;
+        rows.iter()
+            .map(|r| {
+                let regime = r.req_str("regime")?.to_string();
+                let ranks = r.req_usize("ranks")?;
+                let secs = r
+                    .get("threaded_wall_secs")
+                    .and_then(|v| v.as_f64())
+                    .ok_or_else(|| anyhow::anyhow!("{path}: missing threaded_wall_secs"))?;
+                Ok((format!("{regime}@{ranks}"), secs))
+            })
+            .collect()
+    };
+    let baseline = load_rows(&a.get_str("baseline"))?;
+    let current = load_rows(&a.get_str("current"))?;
+    let threshold = 1.0 + a.get_f64("threshold-pct") / 100.0;
+    let floor = a.get_f64("min-secs");
+
+    let mut t = Table::new(
+        "bench gate: threaded wall secs, current vs committed baseline",
+        &["row", "baseline s", "current s", "ratio", "verdict"],
+    );
+    let mut failures = Vec::new();
+    // Rows only in the current record (a grown bench matrix): visible in
+    // the table, never a failure — they gate once the baseline refreshes.
+    for (key, cur_secs) in &current {
+        if !baseline.iter().any(|(k, _)| k == key) {
+            t.row(vec![
+                key.clone(),
+                "-".into(),
+                format!("{cur_secs:.4}"),
+                "-".into(),
+                "new (no baseline)".into(),
+            ]);
+        }
+    }
+    for (key, base_secs) in &baseline {
+        let Some((_, cur_secs)) = current.iter().find(|(k, _)| k == key) else {
+            t.row(vec![
+                key.clone(),
+                format!("{base_secs:.4}"),
+                "-".into(),
+                "-".into(),
+                "missing".into(),
+            ]);
+            continue;
+        };
+        let ratio = cur_secs / base_secs.max(1e-12);
+        let verdict = if *base_secs < floor {
+            "skip (noise floor)"
+        } else if ratio > threshold {
+            failures.push(format!("{key}: {cur_secs:.4}s vs {base_secs:.4}s ({ratio:.2}x)"));
+            "REGRESSION"
+        } else {
+            "ok"
+        };
+        t.row(vec![
+            key.clone(),
+            format!("{base_secs:.4}"),
+            format!("{cur_secs:.4}"),
+            format!("{ratio:.2}x"),
+            verdict.into(),
+        ]);
+    }
+    t.print();
+    anyhow::ensure!(
+        failures.is_empty(),
+        "threaded wall-clock regressed >{:.0}% vs committed baseline:\n  {}",
+        a.get_f64("threshold-pct"),
+        failures.join("\n  ")
+    );
+    println!("bench gate passed ({} rows compared)", baseline.len());
     Ok(())
 }
 

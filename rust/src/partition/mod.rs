@@ -103,6 +103,27 @@ pub fn quality(g: &CsrGraph, part: &Partition, weights: &[u64]) -> PartitionQual
     }
 }
 
+/// Split a partition's local row space into **interior** rows (no remote
+/// in-edge contributions — aggregatable before any halo data arrives) and
+/// **boundary** rows (targets of received pre-partials or post rows — they
+/// wait for the exchange). `is_boundary[r]` marks the boundary rows, which
+/// the planner derives from the halo plans (themselves built from
+/// `hier::remote_pairs`). Both lists come back strictly increasing, and
+/// together they partition `0..is_boundary.len()` — the invariant the
+/// overlap schedule's bit-exactness rests on (DESIGN.md §11).
+pub fn interior_split(is_boundary: &[bool]) -> (Vec<u32>, Vec<u32>) {
+    let mut interior = Vec::with_capacity(is_boundary.len());
+    let mut boundary = Vec::new();
+    for (r, &b) in is_boundary.iter().enumerate() {
+        if b {
+            boundary.push(r as u32);
+        } else {
+            interior.push(r as u32);
+        }
+    }
+    (interior, boundary)
+}
+
 /// Uniform random assignment (worst-case comm baseline).
 pub fn random(n: usize, k: usize, seed: u64) -> Partition {
     let mut rng = Rng::new(seed);
@@ -173,6 +194,21 @@ mod tests {
         let q = quality(&g, &p, &[1, 1, 1, 1]);
         assert_eq!(q.edge_cut, 2);
         assert!((q.cut_fraction - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn interior_split_partitions_the_row_space() {
+        let is_boundary = vec![false, true, true, false, true, false];
+        let (interior, boundary) = interior_split(&is_boundary);
+        assert_eq!(interior, vec![0, 3, 5]);
+        assert_eq!(boundary, vec![1, 2, 4]);
+        assert_eq!(interior.len() + boundary.len(), is_boundary.len());
+        // Degenerate cases.
+        let (i, b) = interior_split(&[]);
+        assert!(i.is_empty() && b.is_empty());
+        let (i, b) = interior_split(&[true, true]);
+        assert!(i.is_empty());
+        assert_eq!(b, vec![0, 1]);
     }
 
     #[test]

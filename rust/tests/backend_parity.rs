@@ -115,7 +115,7 @@ fn engine_matches_backend_ops_full_epoch() {
     let mut comm = CommStats::new(1);
     let machine = MachineProfile::abci();
     let mut ctx = FullBatchCtx::new(
-        &ctxs, &cfg, &mut st, &machine, None, 5, 0, true, &mut comm,
+        &ctxs, &cfg, &mut st, &machine, None, 5, 0, true, false, &mut comm,
     );
     let mut tapes = engine.tapes(&[n], &params);
     let mut clock = StageClock::new(1);

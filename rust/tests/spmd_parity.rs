@@ -10,8 +10,14 @@
 //! 2. **mini-batch** — same, with the neighbor sampler (id-request/reply
 //!    fetch over the mailboxes);
 //! 3. **ring allreduce** — the fabric's mailbox ring is deterministic
-//!    under 2/4/8 rank threads and bit-identical to
-//!    `collective::allreduce_sum`'s rank-order fold.
+//!    under 2/3/4/8 rank threads and bit-identical to
+//!    `collective::allreduce_sum`'s rank-order fold;
+//! 4. **overlap schedule** (DESIGN.md §11) — `--overlap on` (post the
+//!    halo exchange, aggregate interior rows while the wire is busy,
+//!    finish boundary rows after receipt) is bit-exact with
+//!    `--overlap off` on per-epoch losses and `CommStats` wire bits, for
+//!    full-batch fp32 (with `delay_comm` staleness), full-batch int4,
+//!    and the neighbor mini-batch fetch, on both transports.
 
 use std::sync::Arc;
 use supergcn::comm::transport::{Fabric, TransportKind};
@@ -55,6 +61,7 @@ fn full_batch_run(
     quant: Option<Bits>,
     label_prop: bool,
     delay_comm: usize,
+    overlap: bool,
 ) -> (Vec<f32>, CommStats) {
     let spec = datasets::by_name("arxiv-xs").unwrap();
     let lg = spec.build();
@@ -65,6 +72,7 @@ fn full_batch_run(
         label_prop,
         delay_comm,
         transport,
+        overlap,
         seed: 42,
         ..Default::default()
     };
@@ -85,8 +93,9 @@ fn full_batch_fp32_threaded_matches_sequential_bitwise() {
     // delay_comm = 2 also exercises the stale-halo (no-exchange) epochs
     // under both transports.
     let (seq_loss, seq_comm) =
-        full_batch_run(TransportKind::Sequential, None, false, 2);
-    let (thr_loss, thr_comm) = full_batch_run(TransportKind::Threaded, None, false, 2);
+        full_batch_run(TransportKind::Sequential, None, false, 2, false);
+    let (thr_loss, thr_comm) =
+        full_batch_run(TransportKind::Threaded, None, false, 2, false);
     assert_loss_bits(&seq_loss, &thr_loss, "full-batch fp32");
     assert_comm_equal(&seq_comm, &thr_comm, "full-batch fp32");
 }
@@ -94,14 +103,43 @@ fn full_batch_fp32_threaded_matches_sequential_bitwise() {
 #[test]
 fn full_batch_int2_labelprop_threaded_matches_sequential_bitwise() {
     let (seq_loss, seq_comm) =
-        full_batch_run(TransportKind::Sequential, Some(Bits::Int2), true, 1);
+        full_batch_run(TransportKind::Sequential, Some(Bits::Int2), true, 1, false);
     let (thr_loss, thr_comm) =
-        full_batch_run(TransportKind::Threaded, Some(Bits::Int2), true, 1);
+        full_batch_run(TransportKind::Threaded, Some(Bits::Int2), true, 1, false);
     assert_loss_bits(&seq_loss, &thr_loss, "full-batch int2+lp");
     assert_comm_equal(&seq_comm, &thr_comm, "full-batch int2+lp");
 }
 
-fn mini_batch_run(transport: TransportKind, quant: Option<Bits>) -> (Vec<f32>, CommStats) {
+#[test]
+fn overlap_full_batch_fp32_matches_blocking_bitwise_on_both_transports() {
+    // delay_comm = 2 covers the stale-halo epochs (no post/complete, but
+    // the boundary phase still scatters the stale recv buffers).
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        let (off_loss, off_comm) = full_batch_run(transport, None, false, 2, false);
+        let (on_loss, on_comm) = full_batch_run(transport, None, false, 2, true);
+        let what = format!("overlap fp32 {}", transport.name());
+        assert_loss_bits(&off_loss, &on_loss, &what);
+        assert_comm_equal(&off_comm, &on_comm, &what);
+    }
+}
+
+#[test]
+fn overlap_full_batch_int4_matches_blocking_bitwise_on_both_transports() {
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        let (off_loss, off_comm) =
+            full_batch_run(transport, Some(Bits::Int4), false, 1, false);
+        let (on_loss, on_comm) = full_batch_run(transport, Some(Bits::Int4), false, 1, true);
+        let what = format!("overlap int4 {}", transport.name());
+        assert_loss_bits(&off_loss, &on_loss, &what);
+        assert_comm_equal(&off_comm, &on_comm, &what);
+    }
+}
+
+fn mini_batch_run(
+    transport: TransportKind,
+    quant: Option<Bits>,
+    overlap: bool,
+) -> (Vec<f32>, CommStats) {
     let spec = datasets::by_name("arxiv-xs").unwrap();
     let lg = Arc::new(spec.build());
     let mc = MiniBatchConfig {
@@ -110,6 +148,7 @@ fn mini_batch_run(transport: TransportKind, quant: Option<Bits>) -> (Vec<f32>, C
         hidden: spec.hidden,
         quant,
         transport,
+        overlap,
         seed: 42,
         ..Default::default()
     };
@@ -131,21 +170,66 @@ fn mini_batch_run(transport: TransportKind, quant: Option<Bits>) -> (Vec<f32>, C
 
 #[test]
 fn mini_batch_neighbor_threaded_matches_sequential_bitwise() {
-    let (seq_loss, seq_comm) = mini_batch_run(TransportKind::Sequential, None);
-    let (thr_loss, thr_comm) = mini_batch_run(TransportKind::Threaded, None);
+    let (seq_loss, seq_comm) = mini_batch_run(TransportKind::Sequential, None, false);
+    let (thr_loss, thr_comm) = mini_batch_run(TransportKind::Threaded, None, false);
     assert_loss_bits(&seq_loss, &thr_loss, "mini-batch neighbor fp32");
     assert_comm_equal(&seq_comm, &thr_comm, "mini-batch neighbor fp32");
 
-    let (seq_loss, seq_comm) = mini_batch_run(TransportKind::Sequential, Some(Bits::Int4));
-    let (thr_loss, thr_comm) = mini_batch_run(TransportKind::Threaded, Some(Bits::Int4));
+    let (seq_loss, seq_comm) =
+        mini_batch_run(TransportKind::Sequential, Some(Bits::Int4), false);
+    let (thr_loss, thr_comm) = mini_batch_run(TransportKind::Threaded, Some(Bits::Int4), false);
     assert_loss_bits(&seq_loss, &thr_loss, "mini-batch neighbor int4");
     assert_comm_equal(&seq_comm, &thr_comm, "mini-batch neighbor int4");
 }
 
 #[test]
-fn ring_allreduce_deterministic_under_2_4_8_rank_threads() {
+fn overlap_mini_batch_neighbor_matches_blocking_bitwise_on_both_transports() {
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        let (off_loss, off_comm) = mini_batch_run(transport, None, false);
+        let (on_loss, on_comm) = mini_batch_run(transport, None, true);
+        let what = format!("overlap mini-batch {}", transport.name());
+        assert_loss_bits(&off_loss, &on_loss, &what);
+        assert_comm_equal(&off_comm, &on_comm, &what);
+    }
+}
+
+#[test]
+fn overlap_ledger_model_is_populated_and_bounded_by_serial() {
+    // One overlap-on run: the ledger must be non-empty, carry real comm,
+    // and its modeled overlap time must never exceed the phase-serial
+    // model of the same run (`max(i,c)+b ≤ i+c+b` per stage).
+    let spec = datasets::by_name("arxiv-xs").unwrap();
+    let lg = spec.build();
+    let tc = TrainConfig {
+        epochs: 2,
+        lr: spec.lr,
+        overlap: true,
+        transport: TransportKind::Threaded,
+        seed: 42,
+        ..Default::default()
+    };
+    let (ctxs, mut cfg, _) = prepare(&lg, 4, tc.strategy, None, tc.seed).unwrap();
+    cfg.hidden = spec.hidden;
+    let mut tr = Trainer::new(ctxs, cfg, tc);
+    let stats = tr.run(false).unwrap();
+    for s in &stats {
+        let ledger = &s.overlap;
+        assert!(!ledger.is_empty(), "overlap run must record ledger stages");
+        // 3 forward + ≥2 backward overlapped exchanges per epoch.
+        assert!(ledger.stages.len() >= 5, "stages: {}", ledger.stages.len());
+        let comm_total: f64 = ledger.stages.iter().flat_map(|st| st.comm.iter()).sum();
+        assert!(comm_total > 0.0, "ledger must carry modeled wire time");
+        let ov = ledger.modeled_overlap_secs();
+        let se = ledger.modeled_serial_secs();
+        assert!(ov > 0.0 && se > 0.0);
+        assert!(ov <= se, "overlap model {ov} exceeds serial model {se}");
+    }
+}
+
+#[test]
+fn ring_allreduce_deterministic_under_2_3_4_8_rank_threads() {
     let profile = MachineProfile::abci();
-    for k in [2usize, 4, 8] {
+    for k in [2usize, 3, 4, 8] {
         let make = || -> Vec<Vec<f32>> {
             (0..k)
                 .map(|r| {

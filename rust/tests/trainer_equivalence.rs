@@ -125,7 +125,7 @@ fn full_batch_engine_gradient_matches_finite_differences() {
         let mut st = FullBatchState::new(&cfg, 1);
         let mut comm = CommStats::new(1);
         let mut ctx = FullBatchCtx::new(
-            &ctxs, &cfg, &mut st, &machine, None, 3, 0, true, &mut comm,
+            &ctxs, &cfg, &mut st, &machine, None, 3, 0, true, false, &mut comm,
         );
         let mut tapes = engine.tapes(&[n], p);
         let mut clock = StageClock::new(1);
