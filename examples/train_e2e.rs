@@ -55,6 +55,13 @@ fn main() -> anyhow::Result<()> {
         // receipt. Bit-exact with the blocking schedule — DESIGN.md §11.
         // CLI equivalent: `supergcn train --overlap on`.
         overlap: true,
+        // Group the 4 ranks onto 2 simulated nodes: cross-node payloads
+        // stage through per-node leaders, cutting inter-node messages
+        // from O(P²) to O((P/g)²) while the staging hops ride the cheap
+        // intra-node tier (CommStats::tiers). Bit-exact with the flat
+        // exchange — DESIGN.md §12.
+        // CLI equivalent: `supergcn train --group-size 2`.
+        group_size: 2,
         ..Default::default()
     };
     let (ctxs, cfg, _) = prepare(&lg, 4, tc.strategy, Some(shape_cfg), tc.seed)?;

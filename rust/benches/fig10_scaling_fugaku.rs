@@ -18,7 +18,10 @@ use supergcn::exp::{steady_epoch_secs, train_native, Table};
 use supergcn::hier::remote_pairs;
 use supergcn::hier::volume::{volume, RemoteStrategy};
 use supergcn::partition::{multilevel, vertex_weights};
-use supergcn::perfmodel::{t_comm, t_quant_comm_total, MachineProfile};
+use supergcn::perfmodel::{
+    flat_pair_messages, inter_group_messages, t_comm, t_comm_two_tier, t_quant_comm_total,
+    MachineProfile,
+};
 use supergcn::quant::Bits;
 
 fn main() {
@@ -69,6 +72,9 @@ fn main() {
         // compute ∝ 1/P from the P=64 measurement.
         let (k_ref, comp_ref) = compute_ref.unwrap();
         let w = vertex_weights(&lg.graph, None, 4);
+        // Two-level transport view of the same exact volumes (DESIGN.md
+        // §12): g = ranks per A64FX, leader-staged inter-node exchange.
+        let mut hier_lines: Vec<String> = Vec::new();
         for k in [256usize, 1024, 2048] {
             if lg.n() / k < 16 {
                 break;
@@ -105,8 +111,24 @@ fn main() {
                 format!("{:.2}x", t0 / t1),
                 "volume-modeled".into(),
             ]);
+            let g = machine.ranks_per_node;
+            let vv = vals(&hyb);
+            hier_lines.push(format!(
+                "  P={k} (g={g}): inter-node msgs {} vs flat {}; per-layer halo wire \
+                 {:.4}s two-level vs {:.4}s flat",
+                inter_group_messages(k, g),
+                flat_pair_messages(k),
+                t_comm_two_tier(&vv, g, &machine),
+                t_comm(&vv, &machine),
+            ));
         }
         t.print();
+        if !hier_lines.is_empty() {
+            println!("two-level transport model (hybrid volumes, DESIGN.md §12):");
+            for l in &hier_lines {
+                println!("{l}");
+            }
+        }
     }
     println!(
         "\n(executed = simulated workers with measured compute; volume-modeled = \

@@ -8,11 +8,15 @@
 //! Expected shape (paper): SuperGCN speedup 0.9–6.0×, growing with P as
 //! communication becomes the bottleneck.
 
+use supergcn::coordinator::planner::partition_for;
 use supergcn::coordinator::trainer::TrainConfig;
 use supergcn::datasets;
 use supergcn::exp::{steady_epoch_secs, train_native, Table};
-use supergcn::hier::volume::RemoteStrategy;
-use supergcn::perfmodel::MachineProfile;
+use supergcn::hier::remote_pairs;
+use supergcn::hier::volume::{volume, RemoteStrategy, ALL_STRATEGIES};
+use supergcn::perfmodel::{
+    flat_pair_messages, inter_group_messages, t_comm, t_comm_two_tier, MachineProfile,
+};
 use supergcn::quant::Bits;
 
 fn main() {
@@ -56,9 +60,44 @@ fn main() {
         }
         t.print();
         let _ = prev_speedup;
+
+        // Two-level transport view (DESIGN.md §12) at the largest
+        // executed scale: exact per-pair volumes per strategy, modeled
+        // flat vs leader-staged (g = ranks per ABCI node) inter-node
+        // wire time and message counts.
+        let machine = MachineProfile::abci();
+        let g = machine.ranks_per_node;
+        let k = 32usize;
+        let lg = spec.build();
+        let part = partition_for(&lg, k, 42);
+        let pairs = remote_pairs(&lg.graph, &part);
+        let mut ht = Table::new(
+            &format!(
+                "{name} @ P={k}: inter-node model per strategy (g={g}; \
+                 msgs {} flat vs {} two-level per exchange)",
+                flat_pair_messages(k),
+                inter_group_messages(k, g)
+            ),
+            &["strategy", "rows", "flat wire s", "two-level wire s"],
+        );
+        for s in ALL_STRATEGIES {
+            let v = volume(k, &pairs, s);
+            let vals: Vec<Vec<usize>> = v
+                .rows
+                .iter()
+                .map(|r| r.iter().map(|&x| x * spec.feat_dim).collect())
+                .collect();
+            ht.row(vec![
+                s.name().into(),
+                v.total_rows().to_string(),
+                format!("{:.6}", t_comm(&vals, &machine)),
+                format!("{:.6}", t_comm_two_tier(&vals, g, &machine)),
+            ]);
+        }
+        ht.print();
     }
     println!(
         "\n(per-worker compute measured on this core; wire time from the Eqn-2/5 \
-         ABCI model — see DESIGN.md §1)"
+         ABCI model — see DESIGN.md §1; two-level = leader-staged node groups, §12)"
     );
 }

@@ -18,14 +18,22 @@
 //! of the *same* run (overlap ≤ serial always; the gap is the hidden
 //! wire time).
 //!
+//! A third section compares the flat transport against the two-level
+//! topology (`--group-size`, DESIGN.md §12): bit-exact losses asserted,
+//! and the grouped run's O((P/g)²) inter-node message count asserted
+//! strictly below the flat O(P²) pair count (group size overridable via
+//! `SUPERGCN_BENCH_GROUP_SIZE`; CI pins it to 2 and re-checks the
+//! emitted JSON's `hier` block).
+//!
 //! Set `SUPERGCN_BENCH_JSON=path` to also write the rows as JSON (CI
 //! uploads it as the `BENCH_ci.json` workflow artifact, and
 //! `supergcn benchcmp` gates regressions against the committed
 //! `BENCH_seed.json`).
 
-use supergcn::comm::transport::TransportKind;
+use supergcn::comm::transport::{Topology, TransportKind};
+use supergcn::comm::CommStats;
 use supergcn::coordinator::minibatch::MiniBatchConfig;
-use supergcn::coordinator::planner::prepare;
+use supergcn::coordinator::planner::{group_send_rows, prepare};
 use supergcn::coordinator::trainer::{EpochStats, TrainConfig, Trainer};
 use supergcn::datasets;
 use supergcn::exec::OverlapLedger;
@@ -192,6 +200,102 @@ fn main() -> anyhow::Result<()> {
         "overlap model must never exceed the serial model of the same run"
     );
 
+    // ---- two-level topology section (DESIGN.md §12) -------------------
+    // Flat vs `--group-size g` on the threaded transport: runs are
+    // bit-exact (asserted), the *physical* accounting differs — the
+    // grouped run's inter-node message count is O((P/g)²) vs the flat
+    // exchange's O(P²). CI sets SUPERGCN_BENCH_GROUP_SIZE=2 explicitly.
+    let hier_k = 4usize;
+    let hier_g: usize = std::env::var("SUPERGCN_BENCH_GROUP_SIZE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2);
+    let run_grouped = |group_size: usize| -> anyhow::Result<(Vec<f32>, CommStats)> {
+        let lg = spec.build();
+        let tc = TrainConfig {
+            epochs,
+            lr: spec.lr,
+            transport: TransportKind::Threaded,
+            group_size,
+            seed: 42,
+            ..Default::default()
+        };
+        let (ctxs, mut cfg, _) = prepare(&lg, hier_k, tc.strategy, None, tc.seed)?;
+        cfg.hidden = spec.hidden;
+        let mut tr = Trainer::new(ctxs, cfg, tc);
+        let losses = tr.run(false)?.iter().map(|s| s.train_loss).collect();
+        Ok((losses, tr.comm_stats.clone()))
+    };
+    let (flat_loss, flat_comm) = run_grouped(1)?;
+    let (hier_loss, hier_comm) = run_grouped(hier_g)?;
+    for (e, (a, b)) in flat_loss.iter().zip(hier_loss.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "epoch {e}: hierarchical transport must be bit-exact with flat"
+        );
+    }
+    let flat_msgs: usize = flat_comm.messages.iter().flatten().sum();
+    let tiers = &hier_comm.tiers;
+    assert!(
+        tiers.total_inter_msgs() < flat_msgs,
+        "inter-group messages {} must undercut flat {flat_msgs}",
+        tiers.total_inter_msgs()
+    );
+    // The planner's per-group coalescing map, restricted to *cross-group*
+    // destinations: the rows each worker stages for its leader to ship
+    // inter-node per layer (same-group rows ride the intra tier and are
+    // excluded here so the number lines up with inter_bits above).
+    let topo = Topology::new(hier_k, hier_g);
+    let staged_rows: usize = {
+        let lg = spec.build();
+        let (ctxs, ..) = prepare(&lg, hier_k, supergcn::hier::volume::RemoteStrategy::Hybrid,
+            None, 42)?;
+        ctxs.iter()
+            .map(|c| {
+                group_send_rows(c, topo)
+                    .iter()
+                    .enumerate()
+                    .filter(|&(g, _)| g != topo.group_of(c.worker))
+                    .map(|(_, &rows)| rows)
+                    .sum::<usize>()
+            })
+            .sum()
+    };
+    let mut ht = Table::new(
+        &format!(
+            "two-level transport: full-batch @ {hier_k} ranks, group-size {hier_g} \
+             (bit-exact with flat; physical path accounting)"
+        ),
+        &["tier", "messages", "bytes", "modeled secs"],
+    );
+    ht.row(vec![
+        "flat (g=1), all pairs".to_string(),
+        flat_msgs.to_string(),
+        supergcn::util::fmt_bytes(flat_comm.total_data_bytes() + flat_comm.total_param_bytes()),
+        format!("{:.6}", flat_comm.modeled_comm_secs()),
+    ]);
+    ht.row(vec![
+        format!("g={hier_g} inter-node (leader exchange)"),
+        tiers.total_inter_msgs().to_string(),
+        supergcn::util::fmt_bytes(tiers.total_inter_bits() / 8.0),
+        format!("{:.6}", tiers.modeled_two_tier_secs()),
+    ]);
+    ht.row(vec![
+        format!("g={hier_g} intra-node (staging + delivery)"),
+        tiers.total_intra_msgs().to_string(),
+        supergcn::util::fmt_bytes(tiers.total_intra_bits() / 8.0),
+        "-".into(),
+    ]);
+    ht.print();
+    println!(
+        "per-exchange message model: flat {} vs inter-group {} \
+         (perfmodel::inter_group_messages); cross-group rows staged for the \
+         leaders per layer: {staged_rows}",
+        supergcn::perfmodel::flat_pair_messages(hier_k),
+        supergcn::perfmodel::inter_group_messages(hier_k, hier_g),
+    );
+
     // ---- report ------------------------------------------------------
     let mut table = Table::new(
         "SPMD transport scaling: wall secs, seq vs threaded (bit-exact runs)",
@@ -260,6 +364,30 @@ fn main() -> anyhow::Result<()> {
                     ("threaded_wall_secs_overlap", Json::Num(overlap_secs)),
                     ("threaded_wall_secs_blocking", Json::Num(blocking_secs)),
                     ("stages", Json::Arr(overlap_stages)),
+                ]),
+            ),
+            (
+                "hier",
+                Json::obj(vec![
+                    ("ranks", Json::Num(hier_k as f64)),
+                    ("group_size", Json::Num(hier_g as f64)),
+                    ("flat_msgs", Json::Num(flat_msgs as f64)),
+                    (
+                        "inter_group_msgs",
+                        Json::Num(tiers.total_inter_msgs() as f64),
+                    ),
+                    ("intra_msgs", Json::Num(tiers.total_intra_msgs() as f64)),
+                    ("inter_bytes", Json::Num(tiers.total_inter_bits() / 8.0)),
+                    ("intra_bytes", Json::Num(tiers.total_intra_bits() / 8.0)),
+                    (
+                        "modeled_two_tier_secs",
+                        Json::Num(tiers.modeled_two_tier_secs()),
+                    ),
+                    (
+                        "modeled_flat_secs",
+                        Json::Num(flat_comm.modeled_comm_secs()),
+                    ),
+                    ("losses_bit_exact", Json::Bool(true)),
                 ]),
             ),
             (

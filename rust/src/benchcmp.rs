@@ -1,0 +1,280 @@
+//! The `supergcn benchcmp` comparator: parse `benches/spmd_scaling.rs`
+//! JSON records and gate threaded wall-clock regressions against the
+//! committed `BENCH_seed.json` baseline.
+//!
+//! Library module (not inlined in `main.rs`) so the parse and compare
+//! paths are unit-testable: a missing or corrupt record, and an **empty
+//! run set**, must surface as clear errors — never a panic, and never a
+//! silent "0 rows compared" pass.
+
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// One comparable bench row: `"regime@ranks"` → threaded wall seconds.
+pub type BenchRow = (String, f64);
+
+/// Load the comparable rows of one bench record. Errors (with the path in
+/// the message) on: unreadable file, invalid JSON, a missing `rows[]`
+/// array, an **empty** `rows[]` (an empty run set must fail the gate
+/// loudly, not pass it vacuously), or a row missing its key fields.
+pub fn load_rows(path: &str) -> Result<Vec<BenchRow>> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+    let rows = doc
+        .get("rows")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("{path}: missing rows[]"))?;
+    anyhow::ensure!(
+        !rows.is_empty(),
+        "{path}: empty run set (rows[] has no entries) — refusing to compare; \
+         regenerate the record with benches/spmd_scaling.rs"
+    );
+    rows.iter()
+        .map(|r| {
+            let regime = r.req_str("regime")?.to_string();
+            let ranks = r.req_usize("ranks")?;
+            let secs = r
+                .get("threaded_wall_secs")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("{path}: missing threaded_wall_secs"))?;
+            Ok((format!("{regime}@{ranks}"), secs))
+        })
+        .collect()
+}
+
+/// How one row fared against the baseline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Ok,
+    Regression,
+    /// Baseline below the noise floor — compared but never failed.
+    NoiseFloor,
+    /// Present only in the current record (a grown bench matrix) — gates
+    /// once the baseline refreshes, never a failure now.
+    NewRow,
+    /// Present only in the baseline — reported, never a failure.
+    MissingRow,
+}
+
+impl Verdict {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Verdict::Ok => "ok",
+            Verdict::Regression => "REGRESSION",
+            Verdict::NoiseFloor => "skip (noise floor)",
+            Verdict::NewRow => "new (no baseline)",
+            Verdict::MissingRow => "missing",
+        }
+    }
+}
+
+/// One line of the gate report.
+#[derive(Clone, Debug)]
+pub struct GateRow {
+    pub key: String,
+    pub baseline_secs: Option<f64>,
+    pub current_secs: Option<f64>,
+    pub verdict: Verdict,
+}
+
+impl GateRow {
+    pub fn ratio(&self) -> Option<f64> {
+        match (self.baseline_secs, self.current_secs) {
+            (Some(b), Some(c)) => Some(c / b.max(1e-12)),
+            _ => None,
+        }
+    }
+}
+
+/// Full comparison outcome: per-row verdicts (new rows first, then the
+/// baseline's order, like the CLI table) plus the failure summaries.
+#[derive(Clone, Debug, Default)]
+pub struct GateReport {
+    pub rows: Vec<GateRow>,
+    pub failures: Vec<String>,
+    /// Rows present on both sides (the "N rows compared" count).
+    pub compared: usize,
+}
+
+/// Compare a current record against the committed baseline: fail rows
+/// whose threaded wall seconds exceed the baseline by more than
+/// `threshold_pct` percent, skip rows whose baseline is under `min_secs`
+/// (timer noise), and report — without failing — rows present on only one
+/// side (the bench matrix may grow or shrink between refreshes).
+pub fn compare(
+    baseline: &[BenchRow],
+    current: &[BenchRow],
+    threshold_pct: f64,
+    min_secs: f64,
+) -> GateReport {
+    let threshold = 1.0 + threshold_pct / 100.0;
+    let mut report = GateReport::default();
+    for (key, cur_secs) in current {
+        if !baseline.iter().any(|(k, _)| k == key) {
+            report.rows.push(GateRow {
+                key: key.clone(),
+                baseline_secs: None,
+                current_secs: Some(*cur_secs),
+                verdict: Verdict::NewRow,
+            });
+        }
+    }
+    for (key, base_secs) in baseline {
+        let Some((_, cur_secs)) = current.iter().find(|(k, _)| k == key) else {
+            report.rows.push(GateRow {
+                key: key.clone(),
+                baseline_secs: Some(*base_secs),
+                current_secs: None,
+                verdict: Verdict::MissingRow,
+            });
+            continue;
+        };
+        report.compared += 1;
+        let ratio = cur_secs / base_secs.max(1e-12);
+        let verdict = if *base_secs < min_secs {
+            Verdict::NoiseFloor
+        } else if ratio > threshold {
+            report.failures.push(format!(
+                "{key}: {cur_secs:.4}s vs {base_secs:.4}s ({ratio:.2}x)"
+            ));
+            Verdict::Regression
+        } else {
+            Verdict::Ok
+        };
+        report.rows.push(GateRow {
+            key: key.clone(),
+            baseline_secs: Some(*base_secs),
+            current_secs: Some(*cur_secs),
+            verdict,
+        });
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    /// Unique temp path per test (no tempfile crate offline).
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("supergcn-benchcmp-{}-{name}.json", std::process::id()));
+        p
+    }
+
+    fn write(name: &str, content: &str) -> String {
+        let p = tmp(name);
+        std::fs::write(&p, content).unwrap();
+        p.to_string_lossy().into_owned()
+    }
+
+    fn record(rows: &str) -> String {
+        format!("{{\"bench\": \"spmd_scaling\", \"rows\": [{rows}]}}")
+    }
+
+    fn row_json(regime: &str, ranks: usize, secs: f64) -> String {
+        format!(
+            "{{\"regime\": \"{regime}\", \"ranks\": {ranks}, \"threaded_wall_secs\": {secs}}}"
+        )
+    }
+
+    #[test]
+    fn missing_file_is_a_clear_error() {
+        let err = load_rows("/nonexistent/BENCH_nope.json").unwrap_err();
+        assert!(err.to_string().contains("cannot read"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_json_is_a_clear_error() {
+        let p = write("corrupt", "{\"rows\": [");
+        let err = load_rows(&p).unwrap_err();
+        assert!(err.to_string().contains(&p), "path lost: {err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn record_without_rows_is_a_clear_error() {
+        let p = write("norows", "{\"bench\": \"spmd_scaling\"}");
+        let err = load_rows(&p).unwrap_err();
+        assert!(err.to_string().contains("missing rows[]"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn empty_run_set_errors_instead_of_silently_passing() {
+        let p = write("empty", &record(""));
+        let err = load_rows(&p).unwrap_err();
+        assert!(err.to_string().contains("empty run set"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn row_missing_wall_secs_is_a_clear_error() {
+        let p = write("nosecs", &record("{\"regime\": \"full-batch\", \"ranks\": 2}"));
+        let err = load_rows(&p).unwrap_err();
+        assert!(err.to_string().contains("threaded_wall_secs"), "{err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn well_formed_record_roundtrips() {
+        let p = write(
+            "ok",
+            &record(&format!(
+                "{}, {}",
+                row_json("full-batch", 2, 0.5),
+                row_json("mini-batch", 4, 1.25)
+            )),
+        );
+        let rows = load_rows(&p).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].0, "full-batch@2");
+        assert_eq!(rows[0].1, 0.5);
+        assert_eq!(rows[1].0, "mini-batch@4");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn compare_flags_regressions_and_skips_noise() {
+        let baseline = vec![
+            ("full-batch@2".to_string(), 1.0),
+            ("full-batch@4".to_string(), 1.0),
+            ("tiny@1".to_string(), 0.001),
+        ];
+        let current = vec![
+            ("full-batch@2".to_string(), 1.1),
+            ("full-batch@4".to_string(), 1.5),
+            ("tiny@1".to_string(), 1.0),
+        ];
+        let r = compare(&baseline, &current, 25.0, 0.005);
+        assert_eq!(r.compared, 3);
+        assert_eq!(r.failures.len(), 1, "{:?}", r.failures);
+        assert!(r.failures[0].contains("full-batch@4"));
+        let verdict_of = |key: &str| {
+            r.rows
+                .iter()
+                .find(|row| row.key == key)
+                .map(|row| row.verdict)
+                .unwrap()
+        };
+        assert_eq!(verdict_of("full-batch@2"), Verdict::Ok);
+        assert_eq!(verdict_of("full-batch@4"), Verdict::Regression);
+        // Below the noise floor: a 1000x blowup still never fails.
+        assert_eq!(verdict_of("tiny@1"), Verdict::NoiseFloor);
+    }
+
+    #[test]
+    fn new_and_missing_rows_report_without_failing() {
+        let baseline = vec![("old@2".to_string(), 1.0)];
+        let current = vec![("new@2".to_string(), 9.0)];
+        let r = compare(&baseline, &current, 25.0, 0.005);
+        assert!(r.failures.is_empty());
+        assert_eq!(r.compared, 0);
+        assert_eq!(r.rows.len(), 2);
+        assert_eq!(r.rows[0].verdict, Verdict::NewRow);
+        assert_eq!(r.rows[0].ratio(), None);
+        assert_eq!(r.rows[1].verdict, Verdict::MissingRow);
+    }
+}

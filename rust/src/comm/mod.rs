@@ -16,6 +16,8 @@
 pub mod collective;
 pub mod transport;
 
+pub use transport::Topology;
+
 use crate::perfmodel::MachineProfile;
 use crate::quant::Quantized;
 
@@ -52,6 +54,98 @@ impl Payload {
     }
 }
 
+/// Two-level (intra-node vs inter-node) accounting of the physical path
+/// payloads take under a hierarchical [`Topology`] (DESIGN.md §12). All
+/// vectors are indexed by the payload's *original sender* rank, so the
+/// threaded transport's per-rank shards each populate only their own
+/// entry and [`CommStats::merge`] reproduces the sequential totals
+/// bit-for-bit (the same trick `modeled_send_secs` uses).
+///
+/// Conventions (mirrored by `perfmodel::t_comm_two_tier`):
+/// * a same-group payload is one intra message;
+/// * a cross-group payload crosses the inter link once (bandwidth term),
+///   plus one intra delivery hop at the destination unless the
+///   destination *is* its group leader;
+/// * a non-leader sender with any cross-group bytes pays one coalesced
+///   intra staging hop to its leader per exchange;
+/// * each leader posts the dense inter-group exchange — `n_groups − 1`
+///   inter messages (and latencies) per exchange, payload or not — the
+///   O((P/g)²) headline count.
+///
+/// All entries stay zero on the flat topology.
+#[derive(Clone, Debug, Default)]
+pub struct TierStats {
+    /// Intra-node wire bits (direct local deliveries + staging hops).
+    pub intra_bits: Vec<f64>,
+    /// Inter-node wire bits (the coalesced leader exchange's payload).
+    pub inter_bits: Vec<f64>,
+    /// Intra-node message count.
+    pub intra_msgs: Vec<usize>,
+    /// Inter-node (group-pair) message count.
+    pub inter_msgs: Vec<usize>,
+    /// Modeled intra-tier seconds (`bw_local` / `latency_local`).
+    pub modeled_intra_secs: Vec<f64>,
+    /// Modeled inter-tier seconds (`bw_comm` / `latency`).
+    pub modeled_inter_secs: Vec<f64>,
+}
+
+impl TierStats {
+    pub fn new(k: usize) -> Self {
+        Self {
+            intra_bits: vec![0.0; k],
+            inter_bits: vec![0.0; k],
+            intra_msgs: vec![0; k],
+            inter_msgs: vec![0; k],
+            modeled_intra_secs: vec![0.0; k],
+            modeled_inter_secs: vec![0.0; k],
+        }
+    }
+
+    pub fn total_intra_bits(&self) -> f64 {
+        self.intra_bits.iter().sum()
+    }
+
+    pub fn total_inter_bits(&self) -> f64 {
+        self.inter_bits.iter().sum()
+    }
+
+    pub fn total_intra_msgs(&self) -> usize {
+        self.intra_msgs.iter().sum()
+    }
+
+    pub fn total_inter_msgs(&self) -> usize {
+        self.inter_msgs.iter().sum()
+    }
+
+    /// Eqn-2-style bottleneck over the two-tier physical path: slowest
+    /// sender's intra + inter wire seconds.
+    pub fn modeled_two_tier_secs(&self) -> f64 {
+        self.modeled_intra_secs
+            .iter()
+            .zip(self.modeled_inter_secs.iter())
+            .map(|(a, b)| a + b)
+            .fold(0.0, f64::max)
+    }
+
+    /// Any hierarchical traffic recorded? (Always `false` under `g = 1`.)
+    pub fn is_active(&self) -> bool {
+        self.total_intra_msgs() + self.total_inter_msgs() > 0
+    }
+
+    fn merge(&mut self, other: &TierStats) {
+        let k = self.intra_bits.len();
+        assert_eq!(other.intra_bits.len(), k, "TierStats rank-count mismatch");
+        for i in 0..k {
+            self.intra_bits[i] += other.intra_bits[i];
+            self.inter_bits[i] += other.inter_bits[i];
+            self.intra_msgs[i] += other.intra_msgs[i];
+            self.inter_msgs[i] += other.inter_msgs[i];
+            self.modeled_intra_secs[i] += other.modeled_intra_secs[i];
+            self.modeled_inter_secs[i] += other.modeled_inter_secs[i];
+        }
+    }
+}
+
 /// Accumulated communication accounting for one training run.
 #[derive(Clone, Debug, Default)]
 pub struct CommStats {
@@ -63,6 +157,11 @@ pub struct CommStats {
     pub messages: Vec<Vec<usize>>,
     /// Modeled wire seconds (Eqn 2/5), accumulated per *sender*.
     pub modeled_send_secs: Vec<f64>,
+    /// Two-level physical-path accounting (populated only when the
+    /// exchanges run over a hierarchical [`Topology`]; the *logical*
+    /// fields above are charged identically either way — the bit-exactness
+    /// contract of DESIGN.md §12).
+    pub tiers: TierStats,
 }
 
 impl CommStats {
@@ -72,6 +171,7 @@ impl CommStats {
             param_bits: vec![vec![0.0; k]; k],
             messages: vec![vec![0; k]; k],
             modeled_send_secs: vec![0.0; k],
+            tiers: TierStats::new(k),
         }
     }
 
@@ -107,6 +207,7 @@ impl CommStats {
             }
             self.modeled_send_secs[i] += other.modeled_send_secs[i];
         }
+        self.tiers.merge(&other.tiers);
     }
 
     pub(crate) fn charge(&mut self, from: usize, to: usize, p: &Payload, profile: &MachineProfile) {
@@ -119,6 +220,69 @@ impl CommStats {
         self.messages[from][to] += 1;
         self.modeled_send_secs[from] += (db + pb) / profile.bw_comm + profile.latency;
     }
+
+    /// Charge one rank's send row against the two-level physical path of
+    /// `topo` (no-op on the flat topology — the grouped accounting is
+    /// *additional*; logical charges stay with [`CommStats::charge`]).
+    /// Every entry lands in the sender's own index of [`TierStats`], so
+    /// the charge is deterministic per (row, topology) and the threaded
+    /// shards merge to exactly the sequential totals. See [`TierStats`]
+    /// for the hop conventions.
+    pub(crate) fn charge_row_tiers(
+        &mut self,
+        topo: &Topology,
+        from: usize,
+        sends: &[Payload],
+        profile: &MachineProfile,
+    ) {
+        if !topo.is_hierarchical() {
+            return;
+        }
+        let t = &mut self.tiers;
+        let mut out_bits = 0.0f64;
+        for (to, p) in sends.iter().enumerate() {
+            let (db, pb) = p.wire_bits();
+            let bits = db + pb;
+            if bits <= 0.0 {
+                continue;
+            }
+            if topo.same_group(from, to) {
+                // Direct local delivery over the mailbox tier.
+                t.intra_msgs[from] += 1;
+                t.intra_bits[from] += bits;
+                t.modeled_intra_secs[from] += bits / profile.bw_local + profile.latency_local;
+            } else {
+                // Rides the coalesced leader exchange across the inter
+                // link (bandwidth term here; the per-group-pair latency is
+                // the leader's, below)...
+                t.inter_bits[from] += bits;
+                t.modeled_inter_secs[from] += bits / profile.bw_comm;
+                out_bits += bits;
+                // ...then one intra delivery hop from the destination
+                // group's leader, unless the destination is that leader.
+                if to != topo.leader_of(topo.group_of(to)) {
+                    t.intra_msgs[from] += 1;
+                    t.intra_bits[from] += bits;
+                    t.modeled_intra_secs[from] +=
+                        bits / profile.bw_local + profile.latency_local;
+                }
+            }
+        }
+        // Coalesced member→leader staging hop for all cross-group bytes.
+        if out_bits > 0.0 && !topo.is_leader(from) {
+            t.intra_msgs[from] += 1;
+            t.intra_bits[from] += out_bits;
+            t.modeled_intra_secs[from] += out_bits / profile.bw_local + profile.latency_local;
+        }
+        // The leader posts the dense inter-group alltoallv for its whole
+        // group every exchange: n_groups − 1 messages/latencies, payload
+        // or not — summed over leaders, O((P/g)²) per exchange.
+        if topo.is_leader(from) {
+            let ng = topo.n_groups();
+            t.inter_msgs[from] += ng - 1;
+            t.modeled_inter_secs[from] += (ng - 1) as f64 * profile.latency;
+        }
+    }
 }
 
 /// All-to-all personalized exchange: `sends[i][j]` is i's payload for j.
@@ -129,12 +293,30 @@ pub fn alltoallv(
     profile: &MachineProfile,
     stats: &mut CommStats,
 ) -> Vec<Vec<Payload>> {
+    alltoallv_routed(sends, Topology::flat(stats.k()), profile, stats)
+}
+
+/// [`alltoallv`] over an explicit rank [`Topology`] (DESIGN.md §12):
+/// payload routing and the logical `CommStats` charges are identical to
+/// the flat exchange — bit-exact by construction — while a hierarchical
+/// topology additionally charges [`TierStats`] with the two-level
+/// physical path (leader staging, coalesced inter-group messages). The
+/// sequential-transport counterpart of the grouped
+/// [`transport::Fabric::post_alltoallv`].
+pub fn alltoallv_routed(
+    sends: Vec<Vec<Payload>>,
+    topo: Topology,
+    profile: &MachineProfile,
+    stats: &mut CommStats,
+) -> Vec<Vec<Payload>> {
     let k = sends.len();
     assert!(sends.iter().all(|row| row.len() == k), "square send matrix required");
+    assert_eq!(topo.k(), k, "topology rank count must match the send matrix");
     let mut recvs: Vec<Vec<Payload>> = (0..k)
         .map(|_| (0..k).map(|_| Payload::Empty).collect())
         .collect();
     for (i, row) in sends.into_iter().enumerate() {
+        stats.charge_row_tiers(&topo, i, &row, profile);
         for (j, p) in row.into_iter().enumerate() {
             stats.charge(i, j, &p, profile);
             recvs[j][i] = p;
@@ -233,6 +415,136 @@ mod tests {
         let ratio = s_fp.total_data_bytes() / (s_q.total_data_bytes() + s_q.total_param_bytes());
         assert!(ratio > 14.0 && ratio <= 16.0, "ratio {ratio}");
         assert!(s_q.modeled_comm_secs() < s_fp.modeled_comm_secs());
+    }
+
+    #[test]
+    fn hierarchical_routing_is_bit_exact_and_charges_tiers() {
+        // k=4, g=2: groups {0,1} / {2,3}, leaders 0 and 2. Every ordered
+        // pair ships one f32 (32 bits); diagonal empty.
+        let p = MachineProfile::abci();
+        let k = 4;
+        let mk_sends = || -> Vec<Vec<Payload>> {
+            (0..k)
+                .map(|i| {
+                    (0..k)
+                        .map(|j| {
+                            if i == j {
+                                Payload::Empty
+                            } else {
+                                Payload::F32(vec![(i * 10 + j) as f32])
+                            }
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let mut s_flat = CommStats::new(k);
+        let flat_recvs = alltoallv(mk_sends(), &p, &mut s_flat);
+        let mut s_hier = CommStats::new(k);
+        let hier_recvs = alltoallv_routed(mk_sends(), Topology::new(k, 2), &p, &mut s_hier);
+
+        // Routing and the logical accounting are topology-invariant.
+        for i in 0..k {
+            for j in 0..k {
+                match (&flat_recvs[i][j], &hier_recvs[i][j]) {
+                    (Payload::F32(a), Payload::F32(b)) => assert_eq!(a, b),
+                    (Payload::Empty, Payload::Empty) => {}
+                    (a, b) => panic!("payload mismatch: {a:?} vs {b:?}"),
+                }
+            }
+        }
+        assert_eq!(s_flat.data_bits, s_hier.data_bits);
+        assert_eq!(s_flat.messages, s_hier.messages);
+        assert_eq!(s_flat.modeled_send_secs, s_hier.modeled_send_secs);
+
+        // Flat records no tier traffic; the grouped run records exactly
+        // the leader-staged path (see TierStats conventions).
+        assert!(!s_flat.tiers.is_active());
+        let t = &s_hier.tiers;
+        // One coalesced inter message per ordered group pair: 2·1 = 2 —
+        // the O((P/g)²) count, < the 12 flat pair messages.
+        assert_eq!(t.total_inter_msgs(), 2);
+        assert!(t.total_inter_msgs() < s_flat.messages.iter().flatten().sum::<usize>());
+        // Inter payload = the 8 cross-group payloads (32 bits each).
+        assert_eq!(t.total_inter_bits(), 8.0 * 32.0);
+        // Per leader (0, 2): 1 same-group delivery + 1 delivery hop to the
+        // non-leader dst = 2 intra msgs, 64 bits. Per non-leader (1, 3):
+        // those two plus the coalesced 64-bit staging hop = 3 msgs, 128
+        // bits.
+        assert_eq!(t.intra_msgs, vec![2, 3, 2, 3]);
+        assert_eq!(t.intra_bits, vec![64.0, 128.0, 64.0, 128.0]);
+        assert_eq!(t.total_intra_msgs(), 10);
+        assert_eq!(t.total_intra_bits(), 384.0);
+        assert!(t.modeled_two_tier_secs() > 0.0);
+    }
+
+    #[test]
+    fn tier_charges_match_the_perfmodel_closed_form() {
+        // `charge_row_tiers` (per-exchange accounting) and
+        // `perfmodel::t_comm_two_tier` (the Eqn-2-style closed form over a
+        // volume matrix) implement the same four hop conventions — pin
+        // them against each other on grouped exchanges, ragged groups
+        // included, so the two implementations cannot silently drift.
+        let p = MachineProfile::fugaku();
+        for (k, g) in [(4usize, 2usize), (5, 2), (6, 3)] {
+            let volume: Vec<Vec<usize>> = (0..k)
+                .map(|i| {
+                    (0..k)
+                        .map(|j| if i == j { 0 } else { (i * k + j) % 7 * 5 })
+                        .collect()
+                })
+                .collect();
+            let sends: Vec<Vec<Payload>> = volume
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .map(|&v| {
+                            if v == 0 {
+                                Payload::Empty
+                            } else {
+                                Payload::F32(vec![0.25; v])
+                            }
+                        })
+                        .collect()
+                })
+                .collect();
+            let mut stats = CommStats::new(k);
+            alltoallv_routed(sends, Topology::new(k, g), &p, &mut stats);
+            let want = crate::perfmodel::t_comm_two_tier(&volume, g, &p);
+            let got = stats.tiers.modeled_two_tier_secs();
+            assert!(want > 0.0, "k={k} g={g}: vacuous volume matrix");
+            assert!(
+                (got - want).abs() <= want * 1e-9,
+                "k={k} g={g}: TierStats {got} vs closed form {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_group_topology_keeps_everything_intra() {
+        let p = MachineProfile::fugaku();
+        let k = 3;
+        let sends: Vec<Vec<Payload>> = (0..k)
+            .map(|i| {
+                (0..k)
+                    .map(|j| {
+                        if i == j {
+                            Payload::Empty
+                        } else {
+                            Payload::F32(vec![1.0; 2])
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        // g = k ⇒ one group: hierarchical but with no inter tier at all.
+        let mut stats = CommStats::new(k);
+        alltoallv_routed(sends, Topology::new(k, k), &p, &mut stats);
+        let t = &stats.tiers;
+        assert_eq!(t.total_inter_msgs(), 0);
+        assert_eq!(t.total_inter_bits(), 0.0);
+        assert_eq!(t.total_intra_msgs(), 6);
+        assert_eq!(t.total_intra_bits(), 6.0 * 64.0);
     }
 
     #[test]

@@ -73,6 +73,89 @@ impl TransportKind {
     }
 }
 
+/// Physical placement of the SPMD ranks on simulated nodes (CLI:
+/// `supergcn train --group-size g`; DESIGN.md §12). Ranks are grouped
+/// contiguously — rank `r` lives in group `r / g` — mirroring how MPI
+/// ranks are laid out node-by-node on ABCI/Fugaku. `g = 1` (the default)
+/// is the flat topology; `g ≥ 2` stages every cross-group payload through
+/// the two group *leaders* (the first rank of each group), so the
+/// inter-node tier carries one coalesced message per ordered group pair —
+/// O((P/g)²) instead of the flat exchange's O(P²) — while the
+/// member↔leader staging hops ride the cheap intra-node tier.
+///
+/// The mapping is pure arithmetic (`Copy`, no tables), so the
+/// per-exchange tier accounting on the hot path allocates nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    k: usize,
+    group_size: usize,
+}
+
+impl Topology {
+    /// `k` ranks in groups of `group_size` (clamped into `1..=k`; the
+    /// last group may be ragged when `g ∤ k`).
+    pub fn new(k: usize, group_size: usize) -> Self {
+        assert!(k >= 1, "topology needs at least one rank");
+        Self {
+            k,
+            group_size: group_size.clamp(1, k),
+        }
+    }
+
+    /// The flat (ungrouped) topology — every rank is its own leader.
+    pub fn flat(k: usize) -> Self {
+        Self::new(k, 1)
+    }
+
+    /// CLI-facing check for `--group-size` against `--procs`.
+    pub fn validate_group_size(group_size: usize, workers: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            group_size >= 1 && group_size <= workers,
+            "group-size must be in 1..={workers} (ranks per simulated node; \
+             1 = flat alltoallv, ≥2 = two-level leader-staged exchange — DESIGN.md §12)"
+        );
+        Ok(())
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn group_size(&self) -> usize {
+        self.group_size
+    }
+
+    pub fn n_groups(&self) -> usize {
+        self.k.div_ceil(self.group_size)
+    }
+
+    /// Group (simulated node) hosting rank `r`.
+    pub fn group_of(&self, r: usize) -> usize {
+        r / self.group_size
+    }
+
+    /// The leader rank of group `g` (its first member).
+    pub fn leader_of(&self, g: usize) -> usize {
+        g * self.group_size
+    }
+
+    /// Is `r` its group's leader (the rank that posts the coalesced
+    /// inter-group messages)?
+    pub fn is_leader(&self, r: usize) -> bool {
+        r % self.group_size == 0
+    }
+
+    pub fn same_group(&self, a: usize, b: usize) -> bool {
+        self.group_of(a) == self.group_of(b)
+    }
+
+    /// Does this topology route through leaders at all? (`g = 1` or a
+    /// single rank degenerate to the flat path: no tier accounting.)
+    pub fn is_hierarchical(&self) -> bool {
+        self.group_size > 1 && self.k > 1
+    }
+}
+
 /// Lock helper that shrugs off mutex poisoning: once the fabric itself is
 /// poisoned every rank unwinds anyway, so a poisoned guard's data is never
 /// trusted past that point.
@@ -164,6 +247,11 @@ impl PoisonBarrier {
 /// every rank, so the call sequences always line up.
 pub struct Fabric {
     k: usize,
+    /// Physical rank placement: drives the tier accounting of every
+    /// `alltoallv` posted through this fabric (DESIGN.md §12). Payload
+    /// routing and the logical `CommStats` charges are topology-invariant
+    /// — hierarchical is bit-exact with flat by construction.
+    topo: Topology,
     boxes: Vec<Mutex<Option<Payload>>>,
     gather: Mutex<Vec<Option<Vec<f64>>>>,
     barrier: PoisonBarrier,
@@ -175,14 +263,26 @@ pub struct Fabric {
 
 impl Fabric {
     pub fn new(k: usize) -> Self {
+        Self::with_topology(Topology::flat(k))
+    }
+
+    /// A fabric whose exchanges charge the two-level tier accounting of
+    /// `topo` (flat topology ⇒ identical to [`Fabric::new`]).
+    pub fn with_topology(topo: Topology) -> Self {
+        let k = topo.k();
         assert!(k >= 1, "fabric needs at least one rank");
         Self {
             k,
+            topo,
             boxes: (0..k * k).map(|_| Mutex::new(None)).collect(),
             gather: Mutex::new((0..k).map(|_| None).collect()),
             barrier: PoisonBarrier::new(k),
             pool: Mutex::new(Vec::new()),
         }
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topo
     }
 
     /// Take a zero-filled length-`n` buffer from the scratch pool (or
@@ -262,6 +362,10 @@ impl Fabric {
         stats: &mut CommStats,
     ) {
         assert_eq!(sends.len(), self.k, "send row must have one payload per rank");
+        // Tier accounting first (a no-op on the flat topology), then the
+        // logical per-payload charges in the same ascending-peer order the
+        // flat path uses — logical accounting is topology-invariant.
+        stats.charge_row_tiers(&self.topo, rank, &sends, profile);
         for (to, p) in sends.into_iter().enumerate() {
             stats.charge(rank, to, &p, profile);
             self.deposit(rank, to, p);
@@ -791,6 +895,110 @@ mod tests {
             .collect();
         let err = run_ranks(&fabric, bodies).unwrap_err();
         assert!(err.to_string().contains("rank 2 root cause"), "{err}");
+    }
+
+    #[test]
+    fn topology_arithmetic_including_ragged_groups() {
+        let t = Topology::new(5, 2);
+        assert_eq!(t.n_groups(), 3);
+        assert_eq!(
+            (0..5).map(|r| t.group_of(r)).collect::<Vec<_>>(),
+            vec![0, 0, 1, 1, 2]
+        );
+        assert_eq!(t.leader_of(0), 0);
+        assert_eq!(t.leader_of(1), 2);
+        assert_eq!(t.leader_of(2), 4);
+        assert!(t.is_leader(4) && !t.is_leader(3));
+        assert!(t.same_group(2, 3) && !t.same_group(1, 2));
+        assert!(t.is_hierarchical());
+
+        let flat = Topology::flat(4);
+        assert_eq!(flat.n_groups(), 4);
+        assert!(!flat.is_hierarchical());
+        assert!((0..4).all(|r| flat.is_leader(r)));
+
+        // Oversized group size clamps to one group.
+        let one = Topology::new(3, 8);
+        assert_eq!(one.n_groups(), 1);
+        assert!(one.is_hierarchical());
+        assert!(!Topology::new(1, 1).is_hierarchical());
+
+        assert!(Topology::validate_group_size(2, 4).is_ok());
+        assert!(Topology::validate_group_size(0, 4).is_err());
+        assert!(Topology::validate_group_size(5, 4).is_err());
+    }
+
+    #[test]
+    fn grouped_fabric_merges_tier_shards_like_sequential() {
+        // The same exchange over a grouped fabric (threaded, per-rank
+        // shards) and the sequential routed alltoallv must agree on every
+        // tier entry exactly — each shard only touches its own sender
+        // index, so the merge reproduces the sequential fold bit-for-bit.
+        let k = 4;
+        let topo = Topology::new(k, 2);
+        let p = MachineProfile::abci();
+        let mk_sends = || -> Vec<Vec<Payload>> {
+            (0..k)
+                .map(|i| {
+                    (0..k)
+                        .map(|j| {
+                            if i == j || (i + j) % 3 == 0 {
+                                Payload::Empty
+                            } else {
+                                Payload::F32(vec![0.5; i + 1])
+                            }
+                        })
+                        .collect()
+                })
+                .collect()
+        };
+        let mut seq_stats = CommStats::new(k);
+        let seq_recvs = crate::comm::alltoallv_routed(mk_sends(), topo, &p, &mut seq_stats);
+
+        let fabric = Fabric::with_topology(topo);
+        assert_eq!(fabric.topology(), topo);
+        let sends = mk_sends();
+        let mut shards: Vec<CommStats> = (0..k).map(|_| CommStats::new(k)).collect();
+        let mut recvs: Vec<Vec<Payload>> = (0..k).map(|_| Vec::new()).collect();
+        std::thread::scope(|scope| {
+            let fabric = &fabric;
+            let pr = &p;
+            for (rank, (shard, recv)) in shards.iter_mut().zip(recvs.iter_mut()).enumerate() {
+                let row = sends[rank].clone();
+                scope.spawn(move || {
+                    *recv = fabric.alltoallv(rank, row, pr, shard);
+                });
+            }
+        });
+        let mut merged = CommStats::new(k);
+        for s in &shards {
+            merged.merge(s);
+        }
+        assert_eq!(merged.data_bits, seq_stats.data_bits);
+        assert_eq!(merged.messages, seq_stats.messages);
+        assert_eq!(merged.modeled_send_secs, seq_stats.modeled_send_secs);
+        assert_eq!(merged.tiers.intra_bits, seq_stats.tiers.intra_bits);
+        assert_eq!(merged.tiers.inter_bits, seq_stats.tiers.inter_bits);
+        assert_eq!(merged.tiers.intra_msgs, seq_stats.tiers.intra_msgs);
+        assert_eq!(merged.tiers.inter_msgs, seq_stats.tiers.inter_msgs);
+        assert_eq!(
+            merged.tiers.modeled_intra_secs,
+            seq_stats.tiers.modeled_intra_secs
+        );
+        assert_eq!(
+            merged.tiers.modeled_inter_secs,
+            seq_stats.tiers.modeled_inter_secs
+        );
+        assert!(merged.tiers.is_active());
+        for rank in 0..k {
+            for from in 0..k {
+                match (&recvs[rank][from], &seq_recvs[rank][from]) {
+                    (Payload::F32(a), Payload::F32(b)) => assert_eq!(a, b),
+                    (Payload::Empty, Payload::Empty) => {}
+                    (a, b) => panic!("payload mismatch: {a:?} vs {b:?}"),
+                }
+            }
+        }
     }
 
     #[test]

@@ -36,7 +36,7 @@
 //! (`tests/trainer_equivalence.rs`).
 
 use super::trainer::EpochStats;
-use crate::comm::transport::{self, Fabric, RankBody, TransportKind};
+use crate::comm::transport::{self, Fabric, RankBody, Topology, TransportKind};
 use crate::comm::{collective, CommStats};
 use crate::exec::{
     AggDispatch, Engine, LossSpec, LossTotals, MiniBatchCtx, MiniBatchRankCtx, OverlapLedger,
@@ -80,6 +80,9 @@ pub struct MiniBatchConfig {
     /// locally owned batch rows while the wire is busy, fill remote rows
     /// after the replies land. Bit-exact with the blocking schedule.
     pub overlap: bool,
+    /// Ranks per simulated node (CLI: `--group-size`; DESIGN.md §12) —
+    /// see [`super::trainer::TrainConfig::group_size`].
+    pub group_size: usize,
     pub machine: MachineProfile,
     pub seed: u64,
 }
@@ -97,6 +100,7 @@ impl Default for MiniBatchConfig {
             transport: TransportKind::Sequential,
             rank_threads: 0,
             overlap: false,
+            group_size: 1,
             machine: MachineProfile::abci(),
             seed: 42,
         }
@@ -113,6 +117,8 @@ pub struct MiniBatchTrainer {
     pub params: ModelParams,
     opt: Optimizer,
     pub comm_stats: CommStats,
+    /// Rank placement (`--group-size`, DESIGN.md §12), built once per run.
+    topo: Topology,
     epoch: usize,
 }
 
@@ -164,6 +170,7 @@ impl MiniBatchTrainer {
         let opt = Optimizer::new(mc.opt, mc.lr, params.n_params());
         let engine = Engine::new(&shapes, mc.layernorm, mc.agg.clone());
         let k = part.k;
+        let topo = Topology::new(k, mc.group_size);
         Ok(Self {
             lg,
             part,
@@ -173,6 +180,7 @@ impl MiniBatchTrainer {
             params,
             opt,
             comm_stats: CommStats::new(k),
+            topo,
             epoch: 0,
         })
     }
@@ -205,7 +213,11 @@ impl MiniBatchTrainer {
         // the whole epoch (each shard accumulates charge-by-charge in the
         // same order the sequential path charges `epoch_comm`, so the
         // end-of-epoch merge is bit-identical).
-        let fabric = if threaded { Some(Fabric::new(k)) } else { None };
+        let fabric = if threaded {
+            Some(Fabric::with_topology(self.topo))
+        } else {
+            None
+        };
         let mut shards: Vec<CommStats> = if threaded {
             (0..k).map(|_| CommStats::new(k)).collect()
         } else {
@@ -377,7 +389,8 @@ impl MiniBatchTrainer {
             round,
             self.mc.overlap,
             epoch_comm,
-        );
+        )
+        .with_topology(self.topo);
         self.engine
             .forward(&self.params, &mut ctx, &mut tapes, None, &mut clock)?;
 
@@ -693,6 +706,39 @@ mod tests {
         let stats = tr.run(false).unwrap();
         assert!(stats.last().unwrap().train_loss < stats[0].train_loss);
         assert!(stats.last().unwrap().comm_data_bytes > 0.0);
+    }
+
+    #[test]
+    fn hierarchical_fetch_charges_tiers_and_learns() {
+        // Bit-parity with the flat topology is pinned in
+        // tests/spmd_parity.rs; this smoke-checks the grouped fetch on
+        // both transports (k=4, two groups of 2).
+        let scfg = SamplerConfig {
+            batch_size: 128,
+            fanouts: vec![10, 5, 5],
+            seed: 42,
+            ..Default::default()
+        };
+        for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+            let mut tr = MiniBatchTrainer::new(
+                lg(400, 11),
+                4,
+                SamplerKind::Neighbor,
+                &scfg,
+                MiniBatchConfig {
+                    group_size: 2,
+                    transport,
+                    ..mc(10)
+                },
+            )
+            .unwrap();
+            let stats = tr.run(false).unwrap();
+            assert!(stats.last().unwrap().train_loss < stats[0].train_loss);
+            let flat_msgs: usize = tr.comm_stats.messages.iter().flatten().sum();
+            let t = &tr.comm_stats.tiers;
+            assert!(t.is_active());
+            assert!(t.total_inter_msgs() < flat_msgs);
+        }
     }
 
     #[test]

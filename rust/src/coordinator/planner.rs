@@ -7,6 +7,7 @@
 //! buffers, and the degree vector for mean aggregation.
 
 use crate::backend::{LayerSpec, SegSpec};
+use crate::comm::transport::Topology;
 use crate::graph::generate::{LabelledGraph, SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
 use crate::hier::plan::WorkerPlan;
 use crate::runtime::ShapeConfig;
@@ -67,6 +68,28 @@ impl WorkerCtx {
         (self.send_pre_range[peer].1 - self.send_pre_range[peer].0)
             + self.send_post_rows[peer].len()
     }
+}
+
+/// Per-destination-group coalescing map of the two-level transport
+/// (DESIGN.md §12): `out[g]` = feature rows this worker ships into group
+/// `g` per layer — the buffer its group leader stages into one inter-node
+/// message. A *reporting/modeling* view derived once from the static halo
+/// plans (like `interior_split` they are layer-invariant): the
+/// per-exchange tier accounting itself (`CommStats::charge_row_tiers`)
+/// is pure arithmetic over the payloads and never consults this map —
+/// that is what keeps the hot path allocation-free. Used by
+/// `benches/spmd_scaling.rs` to report the leader-staged row volume. The
+/// worker's own traffic to same-group peers is included (it rides the
+/// intra tier); self-rows are zero by construction.
+pub fn group_send_rows(ctx: &WorkerCtx, topo: Topology) -> Vec<usize> {
+    let mut out = vec![0usize; topo.n_groups()];
+    for peer in 0..ctx.send_pre_range.len() {
+        if peer == ctx.worker {
+            continue;
+        }
+        out[topo.group_of(peer)] += ctx.send_rows(peer);
+    }
+    out
 }
 
 /// Compute the smallest [`ShapeConfig`] that fits `plans` (used by the
@@ -432,6 +455,38 @@ mod tests {
             // Offsets describe spec.local.seg runs.
             assert_eq!(ctx.local_offsets.len(), cfg.n_pad + 1);
             assert_eq!(*ctx.local_offsets.last().unwrap(), ctx.spec.local.seg.len());
+        }
+    }
+
+    #[test]
+    fn group_send_rows_coalesces_per_peer_rows() {
+        let lg = sbm(500, 4, 8.0, 0.85, 16, 0.5, 5);
+        let (ctxs, _, _) = prepare(&lg, 4, RemoteStrategy::Hybrid, None, 7).unwrap();
+        for ctx in &ctxs {
+            let total: usize = (0..ctxs.len())
+                .filter(|&p| p != ctx.worker)
+                .map(|p| ctx.send_rows(p))
+                .sum();
+            // Flat topology: one singleton group per peer.
+            let flat = group_send_rows(ctx, Topology::flat(4));
+            assert_eq!(flat.len(), 4);
+            assert_eq!(flat[ctx.worker], 0, "no rows to self");
+            for (peer, &rows) in flat.iter().enumerate() {
+                if peer != ctx.worker {
+                    assert_eq!(rows, ctx.send_rows(peer));
+                }
+            }
+            // Two groups of two: per-group sums, conserving the total.
+            let grouped = group_send_rows(ctx, Topology::new(4, 2));
+            assert_eq!(grouped.len(), 2);
+            assert_eq!(grouped.iter().sum::<usize>(), total);
+            for (g, &rows) in grouped.iter().enumerate() {
+                let want: usize = (g * 2..(g + 1) * 2)
+                    .filter(|&p| p != ctx.worker)
+                    .map(|p| ctx.send_rows(p))
+                    .sum();
+                assert_eq!(rows, want);
+            }
         }
     }
 

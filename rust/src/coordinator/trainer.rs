@@ -27,7 +27,7 @@
 //! `rust/tests/trainer_equivalence.rs`.
 
 use super::planner::WorkerCtx;
-use crate::comm::transport::{self, Fabric, RankBody, TransportKind};
+use crate::comm::transport::{self, Fabric, RankBody, Topology, TransportKind};
 use crate::comm::{collective, CommStats};
 use crate::exec::{
     AggDispatch, Engine, FullBatchCtx, FullBatchRankCtx, FullBatchState, LaneHalo, LossSpec,
@@ -76,6 +76,11 @@ pub struct TrainConfig {
     /// aggregation so wire time hides behind compute. Bit-exact with the
     /// blocking schedule (`tests/spmd_parity.rs`).
     pub overlap: bool,
+    /// Ranks per simulated node (CLI: `--group-size`; DESIGN.md §12):
+    /// 1 = flat P×P alltoallv, ≥2 = two-level leader-staged exchange —
+    /// identical numerics and logical wire accounting, with the physical
+    /// path's intra/inter tiers charged to `CommStats::tiers`.
+    pub group_size: usize,
     pub seed: u64,
 }
 
@@ -95,6 +100,7 @@ impl Default for TrainConfig {
             transport: TransportKind::Sequential,
             rank_threads: 0,
             overlap: false,
+            group_size: 1,
             seed: 42,
         }
     }
@@ -136,6 +142,8 @@ pub struct Trainer {
     fb: FullBatchState,
     lp_sels: Vec<LpSelection>,
     pub comm_stats: CommStats,
+    /// Rank placement (`--group-size`, DESIGN.md §12), built once per run.
+    topo: Topology,
     epoch: usize,
     rng: Rng,
 }
@@ -145,6 +153,7 @@ impl Trainer {
         let params = ModelParams::init(&shapes, tc.seed);
         let opt = Optimizer::new(tc.opt, tc.lr, params.n_params());
         let k = workers.len();
+        let topo = Topology::new(k, tc.group_size);
         let engine = Engine::new(&shapes, true, tc.agg.clone());
         let fb = FullBatchState::new(&shapes, k);
         let lp_sels = (0..k)
@@ -166,6 +175,7 @@ impl Trainer {
             rank_tapes: Vec::new(),
             fb,
             lp_sels,
+            topo,
             epoch: 0,
             rng,
         }
@@ -227,7 +237,8 @@ impl Trainer {
             exchange,
             self.tc.overlap,
             &mut epoch_comm,
-        );
+        )
+        .with_topology(self.topo);
         let lp = LpInputs {
             sel: &self.lp_sels,
             labels: self.workers.iter().map(|c| c.labels.as_slice()).collect(),
@@ -295,7 +306,7 @@ impl Trainer {
             t.clear_grads();
         }
 
-        let fabric = Fabric::new(k);
+        let fabric = Fabric::with_topology(self.topo);
         let mut outs: Vec<RankOut> = (0..k).map(|_| RankOut::new(k)).collect();
         {
             // Shared inputs are `&` (Sync); each rank thread exclusively
@@ -674,6 +685,37 @@ mod tests {
         let last = stats.last().unwrap();
         assert!(last.train_loss < stats[0].train_loss, "loss must decrease");
         assert!(last.comm_data_bytes >= 0.0);
+    }
+
+    #[test]
+    fn hierarchical_transport_trains_and_charges_tiers() {
+        // Bit-parity with the flat topology is pinned in
+        // tests/spmd_parity.rs; this smoke-checks that grouped runs learn
+        // end to end and record the two-level accounting on both
+        // transports.
+        let lg = sbm(400, 4, 8.0, 0.85, 16, 0.6, 11);
+        for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+            let tc = TrainConfig {
+                epochs: 4,
+                group_size: 2,
+                transport,
+                ..Default::default()
+            };
+            let (ctxs, cfg, _) = prepare(&lg, 4, tc.strategy, None, 5).unwrap();
+            let mut tr = Trainer::new(ctxs, cfg, tc);
+            let stats = tr.run(false).unwrap();
+            assert!(stats.last().unwrap().train_loss < stats[0].train_loss);
+            let flat_msgs: usize = tr.comm_stats.messages.iter().flatten().sum();
+            let t = &tr.comm_stats.tiers;
+            assert!(t.is_active(), "grouped run must charge tier stats");
+            assert!(t.total_intra_msgs() > 0 && t.total_inter_msgs() > 0);
+            assert!(
+                t.total_inter_msgs() < flat_msgs,
+                "inter-group {} must undercut flat {flat_msgs}",
+                t.total_inter_msgs()
+            );
+            assert!(t.modeled_two_tier_secs() > 0.0);
+        }
     }
 
     #[test]

@@ -30,7 +30,7 @@
 use super::dispatch::AggDispatch;
 use super::{GraphContext, OverlapLedger};
 use crate::comm::transport::Fabric;
-use crate::comm::{alltoallv, CommStats, Payload};
+use crate::comm::{alltoallv_routed, CommStats, Payload, Topology};
 use crate::coordinator::planner::WorkerCtx;
 use crate::perfmodel::MachineProfile;
 use crate::quant::{fused, Bits};
@@ -111,6 +111,9 @@ pub struct FullBatchCtx<'a> {
     /// interior aggregation (`--overlap on`, DESIGN.md §11); bit-exact
     /// with the blocking schedule by construction.
     overlap: bool,
+    /// Rank placement driving the two-level tier accounting of every
+    /// exchange (`--group-size`, DESIGN.md §12); flat by default.
+    topo: Topology,
     ledger: OverlapLedger,
     comm: &'a mut CommStats,
 }
@@ -140,9 +143,18 @@ impl<'a> FullBatchCtx<'a> {
             epoch,
             exchange,
             overlap,
+            topo: Topology::flat(lanes),
             ledger: OverlapLedger::new(lanes),
             comm,
         }
+    }
+
+    /// Route this epoch's exchanges over a two-level rank topology
+    /// (DESIGN.md §12): identical payloads and logical accounting — the
+    /// grouped path only adds `CommStats::tiers` charges.
+    pub fn with_topology(mut self, topo: Topology) -> Self {
+        self.topo = topo;
+        self
     }
 
     /// Hand the epoch's overlap accounting back to the driver (empty when
@@ -224,7 +236,7 @@ impl<'a> FullBatchCtx<'a> {
     ) -> Result<()> {
         let k = self.k();
         let sends = self.pack_fwd_matrix(l, fin, h, quant_secs);
-        let recvs = alltoallv(sends, self.machine, &mut *self.comm);
+        let recvs = alltoallv_routed(sends, self.topo, self.machine, &mut *self.comm);
         for w in 0..k {
             scatter_fwd(
                 &self.workers[w],
@@ -244,7 +256,7 @@ impl<'a> FullBatchCtx<'a> {
     fn exchange_bwd(&mut self, fin: usize, d_h: &mut [Vec<f32>]) -> Result<()> {
         let k = self.k();
         let sends = self.pack_bwd_matrix(fin);
-        let recvs = alltoallv(sends, self.machine, &mut *self.comm);
+        let recvs = alltoallv_routed(sends, self.topo, self.machine, &mut *self.comm);
         for w in 0..k {
             scatter_bwd(
                 &self.workers[w],
@@ -344,7 +356,7 @@ impl GraphContext for FullBatchCtx<'_> {
         let mut comm_secs = vec![0f64; k];
         if let Some(m) = sends {
             let before = self.comm.modeled_send_secs.clone();
-            let recvs = alltoallv(m, self.machine, &mut *self.comm);
+            let recvs = alltoallv_routed(m, self.topo, self.machine, &mut *self.comm);
             for w in 0..k {
                 comm_secs[w] = self.comm.modeled_send_secs[w] - before[w];
             }
@@ -462,7 +474,7 @@ impl GraphContext for FullBatchCtx<'_> {
         let mut comm_secs = vec![0f64; k];
         if let Some(m) = sends {
             let before = self.comm.modeled_send_secs.clone();
-            let recvs = alltoallv(m, self.machine, &mut *self.comm);
+            let recvs = alltoallv_routed(m, self.topo, self.machine, &mut *self.comm);
             for w in 0..k {
                 comm_secs[w] = self.comm.modeled_send_secs[w] - before[w];
             }

@@ -16,7 +16,7 @@ use super::dispatch::AggDispatch;
 use super::{GraphContext, OverlapLedger};
 use crate::agg::spmm::CsrMatrix;
 use crate::comm::transport::Fabric;
-use crate::comm::{alltoallv, CommStats, Payload};
+use crate::comm::{alltoallv_routed, CommStats, Payload, Topology};
 use crate::graph::generate::LabelledGraph;
 use crate::perfmodel::MachineProfile;
 use crate::quant::{fused, Bits};
@@ -50,6 +50,9 @@ pub struct MiniBatchCtx<'a> {
     round: usize,
     /// Overlapped fetch schedule (`--overlap on`, DESIGN.md §11).
     overlap: bool,
+    /// Rank placement driving the two-level tier accounting of the fetch
+    /// exchanges (`--group-size`, DESIGN.md §12); flat by default.
+    topo: Topology,
     ledger: OverlapLedger,
     comm: &'a mut CommStats,
     /// The induced weighted adjacency per lane, in the form `agg::spmm`
@@ -88,10 +91,19 @@ impl<'a> MiniBatchCtx<'a> {
             epoch,
             round,
             overlap,
+            topo: Topology::flat(lanes),
             ledger: OverlapLedger::new(lanes),
             comm,
             mats,
         }
+    }
+
+    /// Route this round's fetch exchanges over a two-level rank topology
+    /// (DESIGN.md §12): identical payloads and logical accounting — the
+    /// grouped path only adds `CommStats::tiers` charges.
+    pub fn with_topology(mut self, topo: Topology) -> Self {
+        self.topo = topo;
+        self
     }
 
     /// Hand the round's overlap accounting back to the driver (empty when
@@ -162,9 +174,10 @@ impl GraphContext for MiniBatchCtx<'_> {
             })
             .collect();
         if !self.overlap {
-            let req_recvs = alltoallv(req_sends, self.machine, &mut *self.comm);
+            let req_recvs = alltoallv_routed(req_sends, self.topo, self.machine, &mut *self.comm);
             let reply_sends = self.serve_requests(&req_recvs, quant_secs);
-            let mut replies = alltoallv(reply_sends, self.machine, &mut *self.comm);
+            let mut replies =
+                alltoallv_routed(reply_sends, self.topo, self.machine, &mut *self.comm);
             for w in 0..k {
                 let bi = match self.per_lane[w] {
                     Some(bi) => bi,
@@ -191,14 +204,15 @@ impl GraphContext for MiniBatchCtx<'_> {
                 secs[w] += interior_secs[w];
             }
         }
-        let req_recvs = alltoallv(req_sends, self.machine, &mut *self.comm);
+        let req_recvs = alltoallv_routed(req_sends, self.topo, self.machine, &mut *self.comm);
         let mut req_comm_secs = vec![0f64; k];
         for w in 0..k {
             req_comm_secs[w] = self.comm.modeled_send_secs[w] - before_req[w];
         }
         let reply_sends = self.serve_requests(&req_recvs, quant_secs);
         let before_reply = self.comm.modeled_send_secs.clone();
-        let mut replies = alltoallv(reply_sends, self.machine, &mut *self.comm);
+        let mut replies =
+            alltoallv_routed(reply_sends, self.topo, self.machine, &mut *self.comm);
         let mut reply_comm_secs = vec![0f64; k];
         for w in 0..k {
             reply_comm_secs[w] = self.comm.modeled_send_secs[w] - before_reply[w];

@@ -31,22 +31,55 @@ use crate::partition::Partition;
 pub struct RemotePair {
     pub producer: usize,
     pub consumer: usize,
-    /// (global src on producer, global dst on consumer)
-    pub edges: Vec<(u32, u32)>,
+    /// (global src on producer, global dst on consumer), sorted + dedup'd
+    /// by [`RemotePair::new`]. Private (module-scoped) so the cached
+    /// distinct counts below can never silently desync from a mutated
+    /// edge list — read through [`RemotePair::edges`].
+    edges: Vec<(u32, u32)>,
+    /// Distinct endpoint counts, cached at construction: `hier::volume`
+    /// reads them once per pair per strategy (Table-5 accounting), which
+    /// used to clone + sort the edge list on *every* call — O(E log E ×
+    /// strategies). Regression-pinned in `volume::tests`.
+    n_srcs: usize,
+    n_dsts: usize,
 }
 
 impl RemotePair {
-    pub fn distinct_srcs(&self) -> usize {
-        let mut s: Vec<u32> = self.edges.iter().map(|e| e.0).collect();
+    /// Build a pair from its cut arcs: sorts + dedups the edge list
+    /// (multi-arcs collapse — one transfer suffices) and caches the
+    /// distinct src/dst counts so volume accounting never re-sorts.
+    pub fn new(producer: usize, consumer: usize, mut edges: Vec<(u32, u32)>) -> Self {
+        edges.sort_unstable();
+        edges.dedup();
+        let mut s: Vec<u32> = edges.iter().map(|e| e.0).collect();
         s.sort_unstable();
         s.dedup();
-        s.len()
-    }
-    pub fn distinct_dsts(&self) -> usize {
-        let mut d: Vec<u32> = self.edges.iter().map(|e| e.1).collect();
+        let mut d: Vec<u32> = edges.iter().map(|e| e.1).collect();
         d.sort_unstable();
         d.dedup();
-        d.len()
+        Self {
+            producer,
+            consumer,
+            edges,
+            n_srcs: s.len(),
+            n_dsts: d.len(),
+        }
+    }
+
+    /// The cut arcs, sorted + dedup'd (read-only: the distinct counts are
+    /// cached against exactly this list).
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+
+    /// Distinct producer-side endpoints (cached; O(1)).
+    pub fn distinct_srcs(&self) -> usize {
+        self.n_srcs
+    }
+
+    /// Distinct consumer-side endpoints (cached; O(1)).
+    pub fn distinct_dsts(&self) -> usize {
+        self.n_dsts
     }
 }
 
@@ -68,16 +101,11 @@ pub fn remote_pairs(g: &CsrGraph, part: &Partition) -> Vec<RemotePair> {
     for p in 0..k {
         for c in 0..k {
             if !map[p][c].is_empty() {
-                let mut edges = std::mem::take(&mut map[p][c]);
-                edges.sort_unstable();
-                edges.dedup(); // multi-arcs collapse: one transfer suffices;
-                               // multiplicity is re-applied locally via edge
-                               // weights (none in our datasets).
-                out.push(RemotePair {
-                    producer: p,
-                    consumer: c,
-                    edges,
-                });
+                // `new` sorts + dedups (multi-arcs collapse: one transfer
+                // suffices; multiplicity is re-applied locally via edge
+                // weights — none in our datasets) and caches the distinct
+                // endpoint counts.
+                out.push(RemotePair::new(p, c, std::mem::take(&mut map[p][c])));
             }
         }
     }

@@ -113,11 +113,7 @@ mod tests {
     use crate::util::propcheck::{prop_assert, propcheck};
 
     fn fig4_pair() -> RemotePair {
-        RemotePair {
-            producer: 1,
-            consumer: 0,
-            edges: vec![(4, 1), (4, 2), (4, 3), (5, 2), (6, 2)],
-        }
+        RemotePair::new(1, 0, vec![(4, 1), (4, 2), (4, 3), (5, 2), (6, 2)])
     }
 
     #[test]
@@ -153,14 +149,7 @@ mod tests {
             let edges: Vec<(u32, u32)> = (0..ne)
                 .map(|_| (1000 + gen.rng.index(ns) as u32, gen.rng.index(nd) as u32))
                 .collect();
-            let mut dedup = edges.clone();
-            dedup.sort_unstable();
-            dedup.dedup();
-            let pair = RemotePair {
-                producer: 0,
-                consumer: 1,
-                edges: dedup,
-            };
+            let pair = RemotePair::new(0, 1, edges);
             let split = split_pair(&pair);
             validate_split(&pair, &split).map_err(|e| e.to_string())?;
             let v = split.transfer_rows();
@@ -178,11 +167,7 @@ mod tests {
 
     #[test]
     fn single_edge_costs_one() {
-        let pair = RemotePair {
-            producer: 0,
-            consumer: 1,
-            edges: vec![(7, 3)],
-        };
+        let pair = RemotePair::new(0, 1, vec![(7, 3)]);
         let split = split_pair(&pair);
         validate_split(&pair, &split).unwrap();
         assert_eq!(split.transfer_rows(), 1);
@@ -191,11 +176,7 @@ mod tests {
     #[test]
     fn star_src_goes_post() {
         // One src feeding many dsts: shipping the src once is optimal.
-        let pair = RemotePair {
-            producer: 0,
-            consumer: 1,
-            edges: (0..10).map(|d| (99, d)).collect(),
-        };
+        let pair = RemotePair::new(0, 1, (0..10).map(|d| (99, d)).collect());
         let split = split_pair(&pair);
         assert_eq!(split.transfer_rows(), 1);
         assert_eq!(split.post_srcs, vec![99]);
@@ -205,11 +186,7 @@ mod tests {
     #[test]
     fn star_dst_goes_pre() {
         // Many srcs feeding one dst: one partial is optimal.
-        let pair = RemotePair {
-            producer: 0,
-            consumer: 1,
-            edges: (0..10).map(|s| (s + 100, 5)).collect(),
-        };
+        let pair = RemotePair::new(0, 1, (0..10).map(|s| (s + 100, 5)).collect());
         let split = split_pair(&pair);
         assert_eq!(split.transfer_rows(), 1);
         assert!(split.post_srcs.is_empty());

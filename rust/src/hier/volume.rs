@@ -104,11 +104,7 @@ mod tests {
 
     #[test]
     fn figure4_all_strategies() {
-        let pair = RemotePair {
-            producer: 1,
-            consumer: 0,
-            edges: vec![(4, 1), (4, 2), (4, 3), (5, 2), (6, 2)],
-        };
+        let pair = RemotePair::new(1, 0, vec![(4, 1), (4, 2), (4, 3), (5, 2), (6, 2)]);
         assert_eq!(pair_rows(&pair, RemoteStrategy::Raw), 5);
         assert_eq!(pair_rows(&pair, RemoteStrategy::PreOnly), 3);
         assert_eq!(pair_rows(&pair, RemoteStrategy::PostOnly), 3);
@@ -122,16 +118,10 @@ mod tests {
             let ns = gen.usize(1, 25);
             let nd = gen.usize(1, 25);
             let ne = gen.usize(1, 100);
-            let mut edges: Vec<(u32, u32)> = (0..ne)
+            let edges: Vec<(u32, u32)> = (0..ne)
                 .map(|_| (500 + gen.rng.index(ns) as u32, gen.rng.index(nd) as u32))
                 .collect();
-            edges.sort_unstable();
-            edges.dedup();
-            let pair = RemotePair {
-                producer: 0,
-                consumer: 1,
-                edges,
-            };
+            let pair = RemotePair::new(0, 1, edges);
             let raw = pair_rows(&pair, RemoteStrategy::Raw);
             let pre = pair_rows(&pair, RemoteStrategy::PreOnly);
             let post = pair_rows(&pair, RemoteStrategy::PostOnly);
@@ -139,6 +129,69 @@ mod tests {
             prop_assert(hyb <= pre.min(post), format!("hyb {hyb} > min({pre},{post})"))?;
             prop_assert(pre <= raw && post <= raw, "pre/post worse than raw")
         });
+    }
+
+    #[test]
+    fn distinct_counts_are_precomputed_not_recomputed_per_call() {
+        // The distinct endpoint counts are cached at construction —
+        // `volume` over ALL_STRATEGIES must not clone + sort the edge
+        // list per call. Pinned by mutating the edge list after
+        // construction (possible only here inside `hier` — the field is
+        // module-private precisely so external code can never desync the
+        // cache): a per-call recount would see the new edge, the cache
+        // must not.
+        let mut pair = RemotePair::new(0, 1, vec![(9, 1), (8, 2), (9, 2)]);
+        assert_eq!(pair.distinct_srcs(), 2);
+        assert_eq!(pair.distinct_dsts(), 2);
+        pair.edges.push((7, 3));
+        assert_eq!(pair.distinct_srcs(), 2, "count must come from the cache");
+        assert_eq!(pair.distinct_dsts(), 2, "count must come from the cache");
+        assert_eq!(pair_rows(&pair, RemoteStrategy::PreOnly), 2);
+        assert_eq!(pair_rows(&pair, RemoteStrategy::PostOnly), 2);
+    }
+
+    #[test]
+    fn cached_counts_leave_all_strategy_volumes_unchanged() {
+        // Results parity vs a from-scratch recount on a real partition,
+        // across every strategy.
+        let g = rmat(10, 6.0, 0.57, 0.19, 0.19, true, 9);
+        let w = vertex_weights(&g, None, 0);
+        let part = multilevel(&g, 3, &w, &MultilevelOpts::default());
+        let pairs = remote_pairs(&g, &part);
+        assert!(!pairs.is_empty());
+        for pair in &pairs {
+            let recount = |side: fn(&(u32, u32)) -> u32| {
+                let mut v: Vec<u32> = pair.edges.iter().map(side).collect();
+                v.sort_unstable();
+                v.dedup();
+                v.len()
+            };
+            assert_eq!(pair.distinct_srcs(), recount(|e| e.0));
+            assert_eq!(pair.distinct_dsts(), recount(|e| e.1));
+        }
+        for s in ALL_STRATEGIES {
+            let v = volume(3, &pairs, s);
+            let want: usize = pairs
+                .iter()
+                .map(|p| match s {
+                    RemoteStrategy::Raw => p.edges.len(),
+                    RemoteStrategy::PreOnly => {
+                        let mut d: Vec<u32> = p.edges.iter().map(|e| e.1).collect();
+                        d.sort_unstable();
+                        d.dedup();
+                        d.len()
+                    }
+                    RemoteStrategy::PostOnly => {
+                        let mut srcs: Vec<u32> = p.edges.iter().map(|e| e.0).collect();
+                        srcs.sort_unstable();
+                        srcs.dedup();
+                        srcs.len()
+                    }
+                    RemoteStrategy::Hybrid => split_pair(p).transfer_rows(),
+                })
+                .sum();
+            assert_eq!(v.total_rows(), want, "{}", s.name());
+        }
     }
 
     #[test]

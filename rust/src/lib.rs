@@ -18,6 +18,7 @@
 
 pub mod agg;
 pub mod backend;
+pub mod benchcmp;
 pub mod comm;
 pub mod coordinator;
 pub mod datasets;

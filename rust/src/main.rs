@@ -12,7 +12,7 @@
 //!   datasets    list the Table-2-style catalog
 
 use anyhow::Result;
-use supergcn::comm::transport::TransportKind;
+use supergcn::comm::transport::{Topology, TransportKind};
 use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
 use supergcn::exec::{AggDispatch, AggKernel};
 use supergcn::coordinator::planner::prepare;
@@ -54,7 +54,11 @@ fn main() {
                  `--rank-threads` asserts the thread count (0 = one per worker).\n\
                  `--overlap on` posts each halo exchange before interior aggregation\n\
                  so wire time hides behind compute — bit-exact with `--overlap off`\n\
-                 (DESIGN.md §11). `benchcmp` gates CI on the committed BENCH_seed.json."
+                 (DESIGN.md §11). `--group-size g` groups ranks onto simulated nodes\n\
+                 and stages cross-node payloads through per-node leaders, cutting\n\
+                 inter-node messages from O(P²) to O((P/g)²) — bit-exact with the\n\
+                 flat exchange (DESIGN.md §12). `benchcmp` gates CI on the committed\n\
+                 BENCH_seed.json."
             );
             Ok(())
         }
@@ -145,6 +149,14 @@ fn cmd_train(argv: &[String]) -> Result<()> {
              aggregation so wire time overlaps compute (boundary rows finish \
              after receipt); bit-exact with 'off' (DESIGN.md §11)",
         )
+        .opt(
+            "group-size",
+            "1",
+            "ranks per simulated node: 1 = flat P×P alltoallv; ≥2 = two-level \
+             exchange staging cross-node payloads through per-node leaders \
+             (O((P/g)²) inter-node messages, intra-node tier accounted \
+             separately); bit-exact with the flat exchange (DESIGN.md §12)",
+        )
         .opt("seed", "42", "random seed")
         .opt(
             "sampler",
@@ -173,6 +185,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let rank_threads = a.get_usize("rank-threads");
     TransportKind::validate_rank_threads(rank_threads, k)?;
     let overlap = parse_overlap(&a.get_str("overlap"))?;
+    let group_size = a.get_usize("group-size");
+    Topology::validate_group_size(group_size, k)?;
     let tc = TrainConfig {
         epochs: if epochs == 0 { spec.epochs } else { epochs },
         lr: spec.lr,
@@ -187,6 +201,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         transport,
         rank_threads,
         overlap,
+        group_size,
         seed: a.get_u64("seed"),
     };
 
@@ -238,6 +253,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             transport: tc.transport,
             rank_threads: tc.rank_threads,
             overlap: tc.overlap,
+            group_size: tc.group_size,
             machine: tc.machine.clone(),
             seed: tc.seed,
         };
@@ -280,12 +296,13 @@ fn run_training(
     tc: TrainConfig,
 ) -> Result<()> {
     println!(
-        "training: {} workers, config={}, transport={}, overlap={}, agg-kernel={}, \
-         quant={:?}, lp={}, strategy={}, machine={}",
+        "training: {} workers, config={}, transport={}, overlap={}, group-size={}, \
+         agg-kernel={}, quant={:?}, lp={}, strategy={}, machine={}",
         ctxs.len(),
         cfg.name,
         tc.transport.name(),
         if tc.overlap { "on" } else { "off" },
+        tc.group_size,
         tc.agg.kernel.name(),
         tc.quant.map(|b| b.name()).unwrap_or("fp32"),
         tc.label_prop,
@@ -321,6 +338,17 @@ fn report_summary(
         supergcn::util::fmt_bytes(comm.total_data_bytes()),
         supergcn::util::fmt_bytes(comm.total_param_bytes()),
     );
+    if comm.tiers.is_active() {
+        println!(
+            "two-level transport: inter-node {} in {} msgs, intra-node {} in {} msgs \
+             (modeled two-tier wire {:.4}s — DESIGN.md §12)",
+            supergcn::util::fmt_bytes(comm.tiers.total_inter_bits() / 8.0),
+            comm.tiers.total_inter_msgs(),
+            supergcn::util::fmt_bytes(comm.tiers.total_intra_bits() / 8.0),
+            comm.tiers.total_intra_msgs(),
+            comm.tiers.modeled_two_tier_secs(),
+        );
+    }
 }
 
 fn run_minibatch_training(
@@ -331,10 +359,12 @@ fn run_minibatch_training(
     mc: MiniBatchConfig,
 ) -> Result<()> {
     println!(
-        "mini-batch training: {} workers, sampler={}, transport={}, quant={}, machine={}",
+        "mini-batch training: {} workers, sampler={}, transport={}, group-size={}, \
+         quant={}, machine={}",
         k,
         kind.name(),
         mc.transport.name(),
+        mc.group_size,
         mc.quant.map(|b| b.name()).unwrap_or("fp32"),
         mc.machine.name,
     );
@@ -481,86 +511,39 @@ fn cmd_benchcmp(argv: &[String]) -> Result<()> {
             "ignore rows whose baseline threaded wall secs are below this (timer noise)",
         )
         .parse_from(argv)?;
-    let load_rows = |path: &str| -> Result<Vec<(String, f64)>> {
-        let text = std::fs::read_to_string(path)
-            .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
-        let doc = supergcn::util::json::Json::parse(&text)
-            .map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
-        let rows = doc
-            .get("rows")
-            .and_then(|r| r.as_arr())
-            .ok_or_else(|| anyhow::anyhow!("{path}: missing rows[]"))?;
-        rows.iter()
-            .map(|r| {
-                let regime = r.req_str("regime")?.to_string();
-                let ranks = r.req_usize("ranks")?;
-                let secs = r
-                    .get("threaded_wall_secs")
-                    .and_then(|v| v.as_f64())
-                    .ok_or_else(|| anyhow::anyhow!("{path}: missing threaded_wall_secs"))?;
-                Ok((format!("{regime}@{ranks}"), secs))
-            })
-            .collect()
-    };
-    let baseline = load_rows(&a.get_str("baseline"))?;
-    let current = load_rows(&a.get_str("current"))?;
-    let threshold = 1.0 + a.get_f64("threshold-pct") / 100.0;
-    let floor = a.get_f64("min-secs");
+    // Parse/compare logic lives in `supergcn::benchcmp` (unit-tested:
+    // missing/corrupt records and empty run sets error out loudly).
+    let baseline = supergcn::benchcmp::load_rows(&a.get_str("baseline"))?;
+    let current = supergcn::benchcmp::load_rows(&a.get_str("current"))?;
+    let report = supergcn::benchcmp::compare(
+        &baseline,
+        &current,
+        a.get_f64("threshold-pct"),
+        a.get_f64("min-secs"),
+    );
 
     let mut t = Table::new(
         "bench gate: threaded wall secs, current vs committed baseline",
         &["row", "baseline s", "current s", "ratio", "verdict"],
     );
-    let mut failures = Vec::new();
-    // Rows only in the current record (a grown bench matrix): visible in
-    // the table, never a failure — they gate once the baseline refreshes.
-    for (key, cur_secs) in &current {
-        if !baseline.iter().any(|(k, _)| k == key) {
-            t.row(vec![
-                key.clone(),
-                "-".into(),
-                format!("{cur_secs:.4}"),
-                "-".into(),
-                "new (no baseline)".into(),
-            ]);
-        }
-    }
-    for (key, base_secs) in &baseline {
-        let Some((_, cur_secs)) = current.iter().find(|(k, _)| k == key) else {
-            t.row(vec![
-                key.clone(),
-                format!("{base_secs:.4}"),
-                "-".into(),
-                "-".into(),
-                "missing".into(),
-            ]);
-            continue;
-        };
-        let ratio = cur_secs / base_secs.max(1e-12);
-        let verdict = if *base_secs < floor {
-            "skip (noise floor)"
-        } else if ratio > threshold {
-            failures.push(format!("{key}: {cur_secs:.4}s vs {base_secs:.4}s ({ratio:.2}x)"));
-            "REGRESSION"
-        } else {
-            "ok"
-        };
+    let fmt_opt = |v: Option<f64>| v.map(|s| format!("{s:.4}")).unwrap_or_else(|| "-".into());
+    for row in &report.rows {
         t.row(vec![
-            key.clone(),
-            format!("{base_secs:.4}"),
-            format!("{cur_secs:.4}"),
-            format!("{ratio:.2}x"),
-            verdict.into(),
+            row.key.clone(),
+            fmt_opt(row.baseline_secs),
+            fmt_opt(row.current_secs),
+            row.ratio().map(|r| format!("{r:.2}x")).unwrap_or_else(|| "-".into()),
+            row.verdict.label().into(),
         ]);
     }
     t.print();
     anyhow::ensure!(
-        failures.is_empty(),
+        report.failures.is_empty(),
         "threaded wall-clock regressed >{:.0}% vs committed baseline:\n  {}",
         a.get_f64("threshold-pct"),
-        failures.join("\n  ")
+        report.failures.join("\n  ")
     );
-    println!("bench gate passed ({} rows compared)", baseline.len());
+    println!("bench gate passed ({} rows compared)", report.compared);
     Ok(())
 }
 

@@ -18,6 +18,13 @@ pub struct MachineProfile {
     pub bw_comm: f64,
     /// Per-message latency (s) — `L_comm`.
     pub latency: f64,
+    /// Intra-node tier bandwidth (bits/s) — the shared-memory / on-package
+    /// link ranks of one node exchange over (two-level transport,
+    /// DESIGN.md §12). Orders of magnitude above `bw_comm` on both
+    /// machines, which is what makes leader staging nearly free.
+    pub bw_local: f64,
+    /// Intra-node per-message latency (s) — a mailbox/shared-memory hop.
+    pub latency_local: f64,
     /// Local compute throughput for streaming kernels (bits/s) — `TH_cal`.
     pub th_cal: f64,
     /// Ranks per physical node (Fugaku runs 4 ranks per A64FX).
@@ -31,6 +38,8 @@ pub struct MachineProfile {
 impl MachineProfile {
     /// ABCI compute node: Intel Xeon Gold 6148 ×2, InfiniBand EDR.
     /// EDR ≈ 100 Gb/s per node shared by 2 ranks; MPI pt2pt latency ≈ 2 µs.
+    /// Intra-node: the two socket-ranks exchange over UPI/shared memory
+    /// (≈40 GB/s per direction, ≈0.3 µs shm hop).
     /// `TH_cal` models the quant/LN kernels' cache-resident streaming rate
     /// (≈0.9 TB/s aggregated over 20 cores), giving β = TH/BW ≈ 150 —
     /// the O(10²) regime §6.2.2 assumes.
@@ -39,6 +48,8 @@ impl MachineProfile {
             name: "ABCI(Xeon+IB-EDR)",
             bw_comm: 100e9 / 2.0, // two ranks (sockets) share the HCA
             latency: 2e-6,
+            bw_local: 40e9 * 8.0, // UPI / shared-memory between the sockets
+            latency_local: 0.3e-6,
             th_cal: 7.5e12,
             ranks_per_node: 2,
             cores_per_rank: 20.0,
@@ -48,12 +59,15 @@ impl MachineProfile {
     /// Fugaku node: A64FX (4 CMGs = 4 ranks), Tofu-D.
     /// One Tofu-D link (6.8 GB/s) effectively serves the 4 ranks of a node
     /// for the unstructured alltoallv pattern; latency ≈ 1 µs; per-CMG
-    /// HBM2 throughput ≈ 256 GB/s ⇒ β ≈ 150.
+    /// HBM2 throughput ≈ 256 GB/s ⇒ β ≈ 150. Intra-node: the on-chip CMG
+    /// ring network (>100 GB/s, ≈0.2 µs).
     pub fn fugaku() -> Self {
         Self {
             name: "Fugaku(A64FX+Tofu-D)",
             bw_comm: 6.8e9 * 8.0 / 4.0,
             latency: 1e-6,
+            bw_local: 100e9 * 8.0, // on-chip CMG ring
+            latency_local: 0.2e-6,
             th_cal: 256e9 * 8.0,
             ranks_per_node: 4,
             cores_per_rank: 12.0,
@@ -83,6 +97,65 @@ pub fn t_comm(volume: &[Vec<usize>], p: &MachineProfile) -> f64 {
         .iter()
         .map(|row| row.iter().map(|&v| t_comm_pair(v as f64, p)).sum::<f64>())
         .fold(0.0, f64::max)
+}
+
+/// Ordered pair messages of the flat P×P `alltoallv`: `P(P−1)` — the
+/// per-exchange message count the two-level transport is measured against.
+pub fn flat_pair_messages(k: usize) -> usize {
+    k * k.saturating_sub(1)
+}
+
+/// Ordered group-pair messages of the two-level exchange with `k` ranks in
+/// groups of `g`: `(⌈k/g⌉)(⌈k/g⌉−1)` — the O((P/g)²) headline count
+/// (DESIGN.md §12). Equals [`flat_pair_messages`] at `g = 1`.
+pub fn inter_group_messages(k: usize, g: usize) -> usize {
+    let ng = k.div_ceil(g.clamp(1, k.max(1)));
+    ng * ng.saturating_sub(1)
+}
+
+/// Eqn-2-style bottleneck time of a volume matrix over the **two-level**
+/// physical path (ranks grouped contiguously in groups of `g`, leader
+/// staging — the same hop conventions `comm::TierStats` charges): per
+/// sender, same-group values ride the intra tier, cross-group values pay
+/// the inter bandwidth plus the staging/delivery intra hops, and each
+/// leader pays `n_groups − 1` inter latencies for its group's dense
+/// leader exchange. `volume[i][j]` = f32 values sent i→j. Reduces to
+/// [`t_comm`]'s model at `g = 1` (identical on all-nonzero off-diagonal
+/// matrices, where the flat per-pair latencies match the dense count).
+pub fn t_comm_two_tier(volume: &[Vec<usize>], g: usize, p: &MachineProfile) -> f64 {
+    let k = volume.len();
+    let g = g.clamp(1, k.max(1));
+    let ng = k.div_ceil(g);
+    let mut worst = 0.0f64;
+    for (i, row) in volume.iter().enumerate() {
+        let mut t = 0.0f64;
+        let mut out_bits = 0.0f64;
+        for (j, &v) in row.iter().enumerate() {
+            let bits = v as f64 * BIT_FP32;
+            if bits <= 0.0 {
+                continue;
+            }
+            if i / g == j / g {
+                t += bits / p.bw_local + p.latency_local;
+            } else {
+                t += bits / p.bw_comm;
+                out_bits += bits;
+                if j % g != 0 {
+                    // Delivery hop: destination-group leader → dst.
+                    t += bits / p.bw_local + p.latency_local;
+                }
+            }
+        }
+        if out_bits > 0.0 && i % g != 0 {
+            // Coalesced member→leader staging hop.
+            t += out_bits / p.bw_local + p.latency_local;
+        }
+        if i % g == 0 {
+            t += (ng - 1) as f64 * p.latency;
+        }
+        worst = worst.max(t);
+    }
+    worst
 }
 
 /// Eqn 3: masked label propagation + LayerNorm time over the local
@@ -251,6 +324,56 @@ mod tests {
         let vol = vec![vec![0, 1000], vec![1_000_000, 0]];
         let t = t_comm(&vol, &p);
         assert!(near(t, t_comm_pair(1_000_000.0, &p), 1e-9));
+    }
+
+    #[test]
+    fn two_tier_message_counts_scale_quadratically_in_groups() {
+        assert_eq!(flat_pair_messages(4), 12);
+        assert_eq!(inter_group_messages(4, 1), 12);
+        assert_eq!(inter_group_messages(4, 2), 2);
+        assert_eq!(inter_group_messages(4, 4), 0);
+        assert_eq!(inter_group_messages(1024, 4), 256 * 255);
+        // Ragged last group still counts as a group.
+        assert_eq!(inter_group_messages(5, 2), 3 * 2);
+        for k in [4usize, 8, 64] {
+            for g in [2usize, 4] {
+                assert!(
+                    inter_group_messages(k, g) < flat_pair_messages(k),
+                    "k={k} g={g}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn two_tier_time_reduces_to_flat_at_g1_and_wins_when_latency_bound() {
+        let p = MachineProfile::abci();
+        // Dense off-diagonal volume: the g=1 two-tier model charges the
+        // same k−1 latencies + bandwidth terms as Eqn 2's flat model.
+        let k = 6;
+        let vol: Vec<Vec<usize>> = (0..k)
+            .map(|i| (0..k).map(|j| if i == j { 0 } else { 1000 }).collect())
+            .collect();
+        let flat = t_comm(&vol, &p);
+        let g1 = t_comm_two_tier(&vol, 1, &p);
+        assert!(near(flat, g1, 1e-12), "{flat} vs {g1}");
+        // Tiny (latency-bound) payloads: staging through leaders trades
+        // k−1 inter latencies for ⌈k/g⌉−1 plus cheap intra hops — a win
+        // because latency_local ≪ latency.
+        let tiny: Vec<Vec<usize>> = (0..k)
+            .map(|i| (0..k).map(|j| usize::from(i != j)).collect())
+            .collect();
+        let two = t_comm_two_tier(&tiny, 3, &p);
+        let one = t_comm_two_tier(&tiny, 1, &p);
+        assert!(two < one, "two-level {two} should beat flat {one} when latency-bound");
+    }
+
+    #[test]
+    fn profiles_have_fast_intra_tier() {
+        for p in [MachineProfile::abci(), MachineProfile::fugaku()] {
+            assert!(p.bw_local > p.bw_comm, "{}: intra tier must be faster", p.name);
+            assert!(p.latency_local < p.latency, "{}: intra hop must be cheaper", p.name);
+        }
     }
 
     #[test]

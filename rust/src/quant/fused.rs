@@ -14,6 +14,12 @@
 //! 4. **Vectorization**: inner loops run over fixed-width chunks with no
 //!    branches so the compiler auto-vectorizes them; int2 packing happens
 //!    in-register, 4 codes → 1 byte.
+//!
+//! Inputs are hardened against non-finite values: NaN/±inf (and
+//! magnitudes beyond [`QUANT_CLAMP`]) are clamped by `sanitize` before the
+//! group stats and the rounding kernel see them, so one poisoned feature
+//! value can never turn its 4-row group's packed payload into NaN/±inf on
+//! the wire (property-tested below).
 
 use super::packing::packed_len;
 use super::{Bits, Quantized, GROUP_ROWS};
@@ -45,16 +51,45 @@ fn noise4(seed: u64, counter: u64) -> [f32; 4] {
     ]
 }
 
+/// Largest magnitude a value may carry into quantization (= `f32::MAX/4`).
+/// Inputs are clamped here by the private `sanitize` helper so a group's
+/// range (`mx − mn ≤ 2·QUANT_CLAMP`) and the dequant multiply-add
+/// (`code·scale + zero`) stay strictly inside finite f32 — one poisoned
+/// feature value must not turn its whole 4-row group into NaN/±inf on the
+/// wire.
+pub const QUANT_CLAMP: f32 = 8.507059e37;
+
+/// Map non-finite and over-range inputs to a finite stand-in before the
+/// group stats and the rounding kernel see them: NaN → 0, ±inf → ±clamp,
+/// finite values clamp into `[-QUANT_CLAMP, QUANT_CLAMP]` (a no-op for
+/// every sane feature scale). Branch shape keeps the loops vectorizable.
+#[inline(always)]
+fn sanitize(v: f32) -> f32 {
+    if v.is_finite() {
+        v.clamp(-QUANT_CLAMP, QUANT_CLAMP)
+    } else if v > 0.0 {
+        QUANT_CLAMP
+    } else if v < 0.0 {
+        -QUANT_CLAMP
+    } else {
+        0.0 // NaN compares false both ways
+    }
+}
+
 /// Quantize one value: `t = (v-zero)·inv + u`; `t ≥ 0` by construction so
 /// the f32→u32 cast truncates like `floor` and saturates at 0 (§Perf:
-/// replaces floor + clamp).
+/// replaces floor + clamp). Non-finite `v` is sanitized first — the cast
+/// saturates at `max_code` for over-range results, so the code is always
+/// in range.
 #[inline(always)]
 fn code_of(v: f32, zero: f32, inv_scale: f32, noise: f32, max_code: u32) -> u8 {
-    let t = (v - zero) * inv_scale + noise;
+    let t = (sanitize(v) - zero) * inv_scale + noise;
     (t as u32).min(max_code) as u8
 }
 
-/// Fused min/max over a slice, chunked for vectorization.
+/// Fused min/max over a slice, chunked for vectorization. Values pass
+/// through [`sanitize`], so the result is always a finite pair with
+/// `mx − mn ≤ 2·QUANT_CLAMP` (non-empty input).
 #[inline]
 fn minmax(xs: &[f32]) -> (f32, f32) {
     const W: usize = 8;
@@ -64,12 +99,13 @@ fn minmax(xs: &[f32]) -> (f32, f32) {
     let rem = chunks.remainder();
     for c in chunks {
         for i in 0..W {
-            mns[i] = mns[i].min(c[i]);
-            mxs[i] = mxs[i].max(c[i]);
+            let v = sanitize(c[i]);
+            mns[i] = mns[i].min(v);
+            mxs[i] = mxs[i].max(v);
         }
     }
-    let mut mn = rem.iter().copied().fold(f32::INFINITY, f32::min);
-    let mut mx = rem.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut mn = rem.iter().map(|&v| sanitize(v)).fold(f32::INFINITY, f32::min);
+    let mut mx = rem.iter().map(|&v| sanitize(v)).fold(f32::NEG_INFINITY, f32::max);
     for i in 0..W {
         mn = mn.min(mns[i]);
         mx = mx.max(mxs[i]);
@@ -96,12 +132,20 @@ pub fn quantize_into(
     for g in (0..rows).step_by(GROUP_ROWS) {
         let g_rows = GROUP_ROWS.min(rows - g);
         let slice = &x[g * cols..(g + g_rows) * cols];
+        // Sanitized stats: mn/mx are always finite (NaN ignored as 0,
+        // ±inf clamped), so the params can never poison dequantization.
         let (mn, mx) = minmax(slice);
-        let (zero, scale) = if mn.is_finite() && mx > mn {
+        let (zero, scale) = if mx > mn {
+            // mx − mn ≤ 2·QUANT_CLAMP = f32::MAX/2, so the subtraction and
+            // the scale stay finite in f32 — the clamp in `sanitize` is
+            // what makes a full-range group safe here.
             (mn, (mx - mn) / max_code)
         } else {
+            // Degenerate groups: constant input keeps its zero point; an
+            // empty slice (cols == 0 ⇒ mn stays +inf) stores (0, 0).
             (if mn.is_finite() { mn } else { 0.0 }, 0.0)
         };
+        debug_assert!(zero.is_finite() && scale.is_finite());
         params.push((zero, scale));
         // Reciprocal-multiply instead of division (§7.3(3)).
         let inv_scale = if scale > 0.0 { 1.0 / scale } else { 0.0 };
@@ -344,6 +388,71 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn prop_non_finite_rows_quantize_finite_and_in_range() {
+        // A NaN/±inf feature value used to poison its whole 4-row group's
+        // scale and ship NaN/inf to every consumer; sanitize() pins the
+        // params finite and every dequantized value inside the group's
+        // clamped range — for NaN, ±inf, and max-magnitude f32 inputs.
+        propcheck(24, |gen| {
+            let rows = gen.usize(1, 12);
+            let cols = gen.usize(1, 40);
+            let mut x = gen.vec_f32(rows * cols, -10.0, 10.0);
+            // At least one NaN every run, plus the full poison set at
+            // random positions when the matrix has room.
+            x[0] = f32::NAN;
+            for p in [f32::INFINITY, f32::NEG_INFINITY, f32::MAX, f32::MIN, f32::NAN] {
+                let i = gen.usize(0, x.len() - 1);
+                x[i] = p;
+            }
+            for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+                let q = quantize(&x, rows, cols, bits, gen.rng.next_u64());
+                for &(zero, scale) in &q.params {
+                    prop_assert(
+                        zero.is_finite() && scale.is_finite(),
+                        format!("{}: non-finite params ({zero}, {scale})", bits.name()),
+                    )?;
+                }
+                let y = dequantize(&q);
+                for (gi, chunk) in y.chunks(GROUP_ROWS * cols).enumerate() {
+                    let (zero, scale) = q.params[gi];
+                    let lo = zero as f64;
+                    let hi = lo + scale as f64 * bits.max_code() as f64;
+                    let tol = lo.abs().max(hi.abs()).max(1.0) * 1e-5;
+                    for &v in chunk {
+                        prop_assert(
+                            v.is_finite(),
+                            format!("{}: dequant produced {v}", bits.name()),
+                        )?;
+                        prop_assert(
+                            v.abs() <= QUANT_CLAMP * 1.0001,
+                            format!("{}: {v} escapes the clamp", bits.name()),
+                        )?;
+                        let vv = v as f64;
+                        prop_assert(
+                            vv >= lo - tol && vv <= hi + tol,
+                            format!("{}: {v} outside group range [{lo}, {hi}]", bits.name()),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sanitize_pins_poison_values() {
+        assert_eq!(sanitize(f32::NAN), 0.0);
+        assert_eq!(sanitize(f32::INFINITY), QUANT_CLAMP);
+        assert_eq!(sanitize(f32::NEG_INFINITY), -QUANT_CLAMP);
+        assert_eq!(sanitize(f32::MAX), QUANT_CLAMP);
+        assert_eq!(sanitize(f32::MIN), -QUANT_CLAMP);
+        // Sane values pass through untouched.
+        for v in [-3.25f32, 0.0, 1e-20, 7.5, -1e30] {
+            assert_eq!(sanitize(v), v);
+        }
     }
 
     #[test]

@@ -1,0 +1,149 @@
+//! Empty-rank regression tests: with `--procs k` larger than the number
+//! of non-empty partitions (tiny graphs at high k), a rank owning zero
+//! rows must train cleanly — no panic in `partition::interior_split`,
+//! `hier::plan::build_plans`, the planner, or the threaded `Fabric`
+//! barriers (an empty rank still joins every collective with empty
+//! payloads). Pinned here by hand-building a partition with an
+//! intentionally empty part and training 2 epochs in both regimes, on
+//! both transports, flat and grouped, blocking and overlapped.
+
+use std::sync::Arc;
+use supergcn::comm::transport::TransportKind;
+use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
+use supergcn::coordinator::planner::{build_worker_ctxs, fit_config};
+use supergcn::coordinator::trainer::{TrainConfig, Trainer};
+use supergcn::graph::generate::{sbm, LabelledGraph};
+use supergcn::hier::plan::{build_plans, validate_plans};
+use supergcn::hier::volume::RemoteStrategy;
+use supergcn::partition::{interior_split, Partition};
+use supergcn::sample::{SamplerConfig, SamplerKind};
+
+fn graph() -> LabelledGraph {
+    sbm(300, 4, 8.0, 0.85, 16, 0.6, 11)
+}
+
+/// 3 parts over the node set, part 2 intentionally empty.
+fn partition_with_empty_part(n: usize) -> Partition {
+    Partition {
+        k: 3,
+        assign: (0..n).map(|v| (v % 2) as u32).collect(),
+    }
+}
+
+#[test]
+fn planning_survives_an_empty_partition() {
+    let lg = graph();
+    let part = partition_with_empty_part(lg.graph.n);
+    for strategy in [
+        RemoteStrategy::Raw,
+        RemoteStrategy::PreOnly,
+        RemoteStrategy::PostOnly,
+        RemoteStrategy::Hybrid,
+    ] {
+        let plans = build_plans(&lg.graph, &part, strategy);
+        validate_plans(&lg.graph, &part, &plans)
+            .unwrap_or_else(|e| panic!("{}: {e}", strategy.name()));
+        assert_eq!(plans[2].n_local(), 0, "part 2 must be empty");
+        assert_eq!(plans[2].send_rows(), 0);
+        assert_eq!(plans[2].recv_rows(), 0);
+    }
+    // The empty worker's context still carries a well-formed
+    // interior/boundary split over its padded row space.
+    let plans = build_plans(&lg.graph, &part, RemoteStrategy::Hybrid);
+    let cfg = fit_config("empty-rank", lg.feat_dim, 16, lg.num_classes, &plans);
+    let ctxs = build_worker_ctxs(&lg, &plans, &cfg).unwrap();
+    for ctx in &ctxs {
+        assert_eq!(
+            ctx.interior_rows.len() + ctx.boundary_rows.len(),
+            cfg.n_pad,
+            "worker {}: split must cover every padded row",
+            ctx.worker
+        );
+    }
+    assert_eq!(ctxs[2].n_real, 0);
+}
+
+#[test]
+fn interior_split_handles_degenerate_masks() {
+    // All-interior, all-boundary, and empty masks are all legal.
+    let (i, b) = interior_split(&[false; 5]);
+    assert_eq!(i.len(), 5);
+    assert!(b.is_empty());
+    let (i, b) = interior_split(&[true; 5]);
+    assert!(i.is_empty());
+    assert_eq!(b.len(), 5);
+    let (i, b) = interior_split(&[]);
+    assert!(i.is_empty() && b.is_empty());
+}
+
+#[test]
+fn full_batch_trains_with_an_empty_rank_seq_and_threaded() {
+    let lg = graph();
+    let part = partition_with_empty_part(lg.graph.n);
+    let plans = build_plans(&lg.graph, &part, RemoteStrategy::Hybrid);
+    let cfg = fit_config("empty-rank", lg.feat_dim, 16, lg.num_classes, &plans);
+    let ctxs = build_worker_ctxs(&lg, &plans, &cfg).unwrap();
+    // Flat and grouped, blocking and overlapped, on both transports: the
+    // empty rank must join every barrier/collective without panicking.
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        for (group_size, overlap) in [(1usize, false), (2, true)] {
+            let tc = TrainConfig {
+                epochs: 2,
+                transport,
+                group_size,
+                overlap,
+                ..Default::default()
+            };
+            let mut tr = Trainer::new(ctxs.clone(), cfg.clone(), tc);
+            let stats = tr.run(false).unwrap_or_else(|e| {
+                panic!(
+                    "empty-rank run failed ({} g={group_size} overlap={overlap}): {e}",
+                    transport.name()
+                )
+            });
+            assert_eq!(stats.len(), 2);
+            for s in &stats {
+                assert!(s.train_loss.is_finite(), "loss must stay finite");
+            }
+        }
+    }
+}
+
+#[test]
+fn mini_batch_trains_with_an_empty_rank_seq_and_threaded() {
+    let lg = Arc::new(graph());
+    let part = partition_with_empty_part(lg.n());
+    let scfg = SamplerConfig {
+        batch_size: 64,
+        fanouts: vec![5, 5, 5],
+        seed: 7,
+        ..Default::default()
+    };
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        for (group_size, overlap) in [(1usize, false), (2, true)] {
+            let mc = MiniBatchConfig {
+                epochs: 2,
+                transport,
+                group_size,
+                overlap,
+                ..Default::default()
+            };
+            let mut tr = MiniBatchTrainer::with_partition(
+                lg.clone(),
+                part.clone(),
+                SamplerKind::Neighbor,
+                &scfg,
+                mc,
+            )
+            .unwrap();
+            let stats = tr.run(false).unwrap_or_else(|e| {
+                panic!(
+                    "empty-rank mini-batch failed ({} g={group_size} overlap={overlap}): {e}",
+                    transport.name()
+                )
+            });
+            assert_eq!(stats.len(), 2);
+            assert!(stats.iter().all(|s| s.train_loss.is_finite()));
+        }
+    }
+}

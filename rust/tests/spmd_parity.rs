@@ -17,7 +17,14 @@
 //!    finish boundary rows after receipt) is bit-exact with
 //!    `--overlap off` on per-epoch losses and `CommStats` wire bits, for
 //!    full-batch fp32 (with `delay_comm` staleness), full-batch int4,
-//!    and the neighbor mini-batch fetch, on both transports.
+//!    and the neighbor mini-batch fetch, on both transports;
+//! 5. **two-level topology** (DESIGN.md §12) — `--group-size 2` (leader-
+//!    staged hierarchical alltoallv) is bit-exact with the flat exchange
+//!    on per-epoch loss bits and the logical `CommStats` wire bits, for
+//!    full-batch fp32, full-batch int4, and the neighbor mini-batch
+//!    fetch, seq + threaded, overlap on and off — while its `TierStats`
+//!    record O((P/g)²) inter-group messages, fewer than the flat pair
+//!    count.
 
 use std::sync::Arc;
 use supergcn::comm::transport::{Fabric, TransportKind};
@@ -62,6 +69,7 @@ fn full_batch_run(
     label_prop: bool,
     delay_comm: usize,
     overlap: bool,
+    group_size: usize,
 ) -> (Vec<f32>, CommStats) {
     let spec = datasets::by_name("arxiv-xs").unwrap();
     let lg = spec.build();
@@ -73,6 +81,7 @@ fn full_batch_run(
         delay_comm,
         transport,
         overlap,
+        group_size,
         seed: 42,
         ..Default::default()
     };
@@ -93,9 +102,9 @@ fn full_batch_fp32_threaded_matches_sequential_bitwise() {
     // delay_comm = 2 also exercises the stale-halo (no-exchange) epochs
     // under both transports.
     let (seq_loss, seq_comm) =
-        full_batch_run(TransportKind::Sequential, None, false, 2, false);
+        full_batch_run(TransportKind::Sequential, None, false, 2, false, 1);
     let (thr_loss, thr_comm) =
-        full_batch_run(TransportKind::Threaded, None, false, 2, false);
+        full_batch_run(TransportKind::Threaded, None, false, 2, false, 1);
     assert_loss_bits(&seq_loss, &thr_loss, "full-batch fp32");
     assert_comm_equal(&seq_comm, &thr_comm, "full-batch fp32");
 }
@@ -103,9 +112,9 @@ fn full_batch_fp32_threaded_matches_sequential_bitwise() {
 #[test]
 fn full_batch_int2_labelprop_threaded_matches_sequential_bitwise() {
     let (seq_loss, seq_comm) =
-        full_batch_run(TransportKind::Sequential, Some(Bits::Int2), true, 1, false);
+        full_batch_run(TransportKind::Sequential, Some(Bits::Int2), true, 1, false, 1);
     let (thr_loss, thr_comm) =
-        full_batch_run(TransportKind::Threaded, Some(Bits::Int2), true, 1, false);
+        full_batch_run(TransportKind::Threaded, Some(Bits::Int2), true, 1, false, 1);
     assert_loss_bits(&seq_loss, &thr_loss, "full-batch int2+lp");
     assert_comm_equal(&seq_comm, &thr_comm, "full-batch int2+lp");
 }
@@ -115,8 +124,8 @@ fn overlap_full_batch_fp32_matches_blocking_bitwise_on_both_transports() {
     // delay_comm = 2 covers the stale-halo epochs (no post/complete, but
     // the boundary phase still scatters the stale recv buffers).
     for transport in [TransportKind::Sequential, TransportKind::Threaded] {
-        let (off_loss, off_comm) = full_batch_run(transport, None, false, 2, false);
-        let (on_loss, on_comm) = full_batch_run(transport, None, false, 2, true);
+        let (off_loss, off_comm) = full_batch_run(transport, None, false, 2, false, 1);
+        let (on_loss, on_comm) = full_batch_run(transport, None, false, 2, true, 1);
         let what = format!("overlap fp32 {}", transport.name());
         assert_loss_bits(&off_loss, &on_loss, &what);
         assert_comm_equal(&off_comm, &on_comm, &what);
@@ -127,8 +136,8 @@ fn overlap_full_batch_fp32_matches_blocking_bitwise_on_both_transports() {
 fn overlap_full_batch_int4_matches_blocking_bitwise_on_both_transports() {
     for transport in [TransportKind::Sequential, TransportKind::Threaded] {
         let (off_loss, off_comm) =
-            full_batch_run(transport, Some(Bits::Int4), false, 1, false);
-        let (on_loss, on_comm) = full_batch_run(transport, Some(Bits::Int4), false, 1, true);
+            full_batch_run(transport, Some(Bits::Int4), false, 1, false, 1);
+        let (on_loss, on_comm) = full_batch_run(transport, Some(Bits::Int4), false, 1, true, 1);
         let what = format!("overlap int4 {}", transport.name());
         assert_loss_bits(&off_loss, &on_loss, &what);
         assert_comm_equal(&off_comm, &on_comm, &what);
@@ -139,6 +148,7 @@ fn mini_batch_run(
     transport: TransportKind,
     quant: Option<Bits>,
     overlap: bool,
+    group_size: usize,
 ) -> (Vec<f32>, CommStats) {
     let spec = datasets::by_name("arxiv-xs").unwrap();
     let lg = Arc::new(spec.build());
@@ -149,6 +159,7 @@ fn mini_batch_run(
         quant,
         transport,
         overlap,
+        group_size,
         seed: 42,
         ..Default::default()
     };
@@ -170,14 +181,14 @@ fn mini_batch_run(
 
 #[test]
 fn mini_batch_neighbor_threaded_matches_sequential_bitwise() {
-    let (seq_loss, seq_comm) = mini_batch_run(TransportKind::Sequential, None, false);
-    let (thr_loss, thr_comm) = mini_batch_run(TransportKind::Threaded, None, false);
+    let (seq_loss, seq_comm) = mini_batch_run(TransportKind::Sequential, None, false, 1);
+    let (thr_loss, thr_comm) = mini_batch_run(TransportKind::Threaded, None, false, 1);
     assert_loss_bits(&seq_loss, &thr_loss, "mini-batch neighbor fp32");
     assert_comm_equal(&seq_comm, &thr_comm, "mini-batch neighbor fp32");
 
     let (seq_loss, seq_comm) =
-        mini_batch_run(TransportKind::Sequential, Some(Bits::Int4), false);
-    let (thr_loss, thr_comm) = mini_batch_run(TransportKind::Threaded, Some(Bits::Int4), false);
+        mini_batch_run(TransportKind::Sequential, Some(Bits::Int4), false, 1);
+    let (thr_loss, thr_comm) = mini_batch_run(TransportKind::Threaded, Some(Bits::Int4), false, 1);
     assert_loss_bits(&seq_loss, &thr_loss, "mini-batch neighbor int4");
     assert_comm_equal(&seq_comm, &thr_comm, "mini-batch neighbor int4");
 }
@@ -185,11 +196,82 @@ fn mini_batch_neighbor_threaded_matches_sequential_bitwise() {
 #[test]
 fn overlap_mini_batch_neighbor_matches_blocking_bitwise_on_both_transports() {
     for transport in [TransportKind::Sequential, TransportKind::Threaded] {
-        let (off_loss, off_comm) = mini_batch_run(transport, None, false);
-        let (on_loss, on_comm) = mini_batch_run(transport, None, true);
+        let (off_loss, off_comm) = mini_batch_run(transport, None, false, 1);
+        let (on_loss, on_comm) = mini_batch_run(transport, None, true, 1);
         let what = format!("overlap mini-batch {}", transport.name());
         assert_loss_bits(&off_loss, &on_loss, &what);
         assert_comm_equal(&off_comm, &on_comm, &what);
+    }
+}
+
+/// The tier-side acceptance for a grouped run vs its flat twin: the flat
+/// run records no tiers; the grouped run records intra + inter traffic
+/// and an O((P/g)²) inter-group message count strictly below the flat
+/// pair-message count.
+fn assert_hier_tiers(flat: &CommStats, hier: &CommStats, what: &str) {
+    assert!(
+        !flat.tiers.is_active(),
+        "{what}: flat run must not record tier traffic"
+    );
+    let t = &hier.tiers;
+    assert!(t.is_active(), "{what}: grouped run must record tier traffic");
+    assert!(t.total_intra_msgs() > 0, "{what}: no intra traffic");
+    assert!(t.total_inter_msgs() > 0, "{what}: no inter traffic");
+    let flat_msgs: usize = flat.messages.iter().flatten().sum();
+    assert!(
+        t.total_inter_msgs() < flat_msgs,
+        "{what}: inter-group {} must undercut flat {flat_msgs}",
+        t.total_inter_msgs()
+    );
+    assert!(t.total_inter_bits() > 0.0 && t.total_intra_bits() > 0.0, "{what}: tier bits");
+    assert!(t.modeled_two_tier_secs() > 0.0, "{what}: two-tier model empty");
+}
+
+#[test]
+fn hierarchical_full_batch_fp32_matches_flat_bitwise_on_both_transports() {
+    // delay_comm = 2 covers the skip-exchange epochs under grouping too.
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        let (flat_loss, flat_comm) = full_batch_run(transport, None, false, 2, false, 1);
+        let (hier_loss, hier_comm) = full_batch_run(transport, None, false, 2, false, 2);
+        let what = format!("hier fp32 {}", transport.name());
+        assert_loss_bits(&flat_loss, &hier_loss, &what);
+        assert_comm_equal(&flat_comm, &hier_comm, &what);
+        assert_hier_tiers(&flat_comm, &hier_comm, &what);
+    }
+}
+
+#[test]
+fn hierarchical_group2_overlap_on_matches_flat_bitwise() {
+    // The CI matrix leg: --group-size 2 --overlap on, fp32 and int4,
+    // both transports — grouping composes with the split-phase schedule.
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        for quant in [None, Some(Bits::Int4)] {
+            let (flat_loss, flat_comm) = full_batch_run(transport, quant, false, 1, true, 1);
+            let (hier_loss, hier_comm) = full_batch_run(transport, quant, false, 1, true, 2);
+            let what = format!(
+                "hier overlap {} {}",
+                transport.name(),
+                quant.map(|b| b.name()).unwrap_or("fp32")
+            );
+            assert_loss_bits(&flat_loss, &hier_loss, &what);
+            assert_comm_equal(&flat_comm, &hier_comm, &what);
+            assert_hier_tiers(&flat_comm, &hier_comm, &what);
+        }
+    }
+}
+
+#[test]
+fn hierarchical_mini_batch_neighbor_matches_flat_bitwise() {
+    // k = 3 with g = 2 also covers ragged groups ({0,1} and {2}).
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        for overlap in [false, true] {
+            let (flat_loss, flat_comm) = mini_batch_run(transport, None, overlap, 1);
+            let (hier_loss, hier_comm) = mini_batch_run(transport, None, overlap, 2);
+            let what = format!("hier mini-batch {} overlap={overlap}", transport.name());
+            assert_loss_bits(&flat_loss, &hier_loss, &what);
+            assert_comm_equal(&flat_comm, &hier_comm, &what);
+            assert_hier_tiers(&flat_comm, &hier_comm, &what);
+        }
     }
 }
 
