@@ -22,6 +22,7 @@ use supergcn::graph::generate::sbm;
 use supergcn::graph::stats::stats;
 use supergcn::hier::volume::RemoteStrategy;
 use supergcn::model::ModelParams;
+use supergcn::obs::{Telemetry, Tracer};
 use supergcn::quant::Bits;
 use supergcn::runtime::Runtime;
 
@@ -98,6 +99,15 @@ fn main() -> anyhow::Result<()> {
     // Phase 2: the unified engine to convergence on the same contexts.
     println!("\n-- phase 2: exec::Engine training to convergence --");
     let mut tr = Trainer::new(ctxs, cfg, tc);
+    // Record per-rank spans for the whole run (DESIGN.md §13): pid =
+    // rank, tid = lane; load the file at https://ui.perfetto.dev.
+    // CLI equivalents: `supergcn train --trace trace_e2e.json
+    // --metrics-json metrics_e2e.json`.
+    let tracer = Tracer::new();
+    tr.telemetry = Telemetry {
+        tracer: Some(tracer.clone()),
+        metrics: None,
+    };
     let stats = tr.run(true)?;
     let last = stats.last().unwrap();
     println!(
@@ -112,5 +122,10 @@ fn main() -> anyhow::Result<()> {
             last.overlap.modeled_serial_secs()
         );
     }
+    tracer.write("trace_e2e.json")?;
+    println!(
+        "trace: {} spans -> trace_e2e.json (perfetto/chrome trace_event; DESIGN.md §13)",
+        tracer.span_count()
+    );
     Ok(())
 }

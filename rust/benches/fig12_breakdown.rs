@@ -16,6 +16,7 @@ use supergcn::datasets;
 use supergcn::exec::{AggDispatch, AggKernel};
 use supergcn::exp::Table;
 use supergcn::hier::volume::RemoteStrategy;
+use supergcn::obs::{Telemetry, Tracer};
 use supergcn::perfmodel::{t_layer_overlap, t_layer_serial, MachineProfile};
 use supergcn::quant::Bits;
 use supergcn::util::timer::{Breakdown, ALL_CATEGORIES};
@@ -94,6 +95,13 @@ fn main() {
     };
     let (ctxs, cfg, _) = prepare(&lg, 8, tc.strategy, None, tc.seed).unwrap();
     let mut tr = Trainer::new(ctxs, cfg, tc);
+    // Trace the overlap view (DESIGN.md §13): spans from all 8 rank lanes
+    // plus the driver lane land in one tracer; count reported below.
+    let tracer = Tracer::new();
+    tr.telemetry = Telemetry {
+        tracer: Some(tracer.clone()),
+        metrics: None,
+    };
     let stats = tr.run(false).unwrap();
     let ledger = &stats.last().unwrap().overlap;
     let mut ot = Table::new(
@@ -116,5 +124,11 @@ fn main() {
         "modeled epoch: overlap {:.6}s vs phase-serial {:.6}s (same run, same bits)",
         ledger.modeled_overlap_secs(),
         ledger.modeled_serial_secs()
+    );
+    assert!(tracer.span_count() > 0, "traced overlap view must record spans");
+    println!(
+        "overlap view traced {} spans ({} dropped to ring capacity)",
+        tracer.span_count(),
+        tracer.dropped_count()
     );
 }

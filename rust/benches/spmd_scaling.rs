@@ -38,6 +38,7 @@ use supergcn::coordinator::trainer::{EpochStats, TrainConfig, Trainer};
 use supergcn::datasets;
 use supergcn::exec::OverlapLedger;
 use supergcn::exp::{train_minibatch, Table};
+use supergcn::obs::{Telemetry, Tracer};
 use supergcn::sample::{SamplerConfig, SamplerKind};
 use supergcn::util::json::{to_pretty, Json};
 
@@ -149,7 +150,7 @@ fn main() -> anyhow::Result<()> {
     // Full-batch @ 4 ranks, threaded, overlap on vs off: wall clock plus
     // the per-exchange ledger of the overlap run.
     let overlap_k = 4usize;
-    let run_fb = |overlap: bool| -> anyhow::Result<(f64, OverlapLedger)> {
+    let run_fb = |overlap: bool, tracer: Option<Tracer>| -> anyhow::Result<(f64, OverlapLedger)> {
         let lg = spec.build();
         let tc = TrainConfig {
             epochs,
@@ -162,12 +163,26 @@ fn main() -> anyhow::Result<()> {
         let (ctxs, mut cfg, _) = prepare(&lg, overlap_k, tc.strategy, None, tc.seed)?;
         cfg.hidden = spec.hidden;
         let mut tr = Trainer::new(ctxs, cfg, tc);
+        tr.telemetry = Telemetry { tracer, metrics: None };
         let stats = tr.run(false)?;
         let ledger = stats.last().unwrap().overlap.clone();
         Ok((steady_wall_secs(&stats), ledger))
     };
-    let (blocking_secs, _) = run_fb(false)?;
-    let (overlap_secs, ledger) = run_fb(true)?;
+    let (blocking_secs, _) = run_fb(false, None)?;
+    // Trace the overlap run (DESIGN.md §13) — span accounting lands in the
+    // JSON artifact's `obs` block (which benchcmp must ignore).
+    let overlap_tracer = Tracer::new();
+    let (overlap_secs, ledger) = run_fb(true, Some(overlap_tracer.clone()))?;
+    assert!(
+        overlap_tracer.span_count() > 0,
+        "traced overlap run must record spans"
+    );
+    println!(
+        "overlap run traced {} spans across {overlap_k} rank threads \
+         ({} dropped to ring capacity)",
+        overlap_tracer.span_count(),
+        overlap_tracer.dropped_count()
+    );
     let mut ot = Table::new(
         &format!(
             "overlap ledger: full-batch @ {overlap_k} rank threads, last epoch \
@@ -388,6 +403,19 @@ fn main() -> anyhow::Result<()> {
                         Json::Num(flat_comm.modeled_comm_secs()),
                     ),
                     ("losses_bit_exact", Json::Bool(true)),
+                ]),
+            ),
+            (
+                "obs",
+                Json::obj(vec![
+                    (
+                        "overlap_span_count",
+                        Json::Num(overlap_tracer.span_count() as f64),
+                    ),
+                    (
+                        "overlap_spans_dropped",
+                        Json::Num(overlap_tracer.dropped_count() as f64),
+                    ),
                 ]),
             ),
             (

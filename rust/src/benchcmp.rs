@@ -17,6 +17,11 @@ pub type BenchRow = (String, f64);
 /// the message) on: unreadable file, invalid JSON, a missing `rows[]`
 /// array, an **empty** `rows[]` (an empty run set must fail the gate
 /// loudly, not pass it vacuously), or a row missing its key fields.
+///
+/// Forward-compatibility contract: only the fields named here are read —
+/// unknown top-level keys (e.g. the `obs` telemetry block newer bench
+/// records carry) and unknown per-row keys are ignored, so a grown record
+/// schema never fails the gate against an older committed baseline.
 pub fn load_rows(path: &str) -> Result<Vec<BenchRow>> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
@@ -233,6 +238,24 @@ mod tests {
         assert_eq!(rows[0].0, "full-batch@2");
         assert_eq!(rows[0].1, 0.5);
         assert_eq!(rows[1].0, "mini-batch@4");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn unknown_keys_are_ignored_not_errors() {
+        // A newer record carrying a top-level `obs` telemetry block and
+        // extra per-row keys must still load against the documented
+        // schema — the comparator reads only the fields it names.
+        let p = write(
+            "forward-compat",
+            "{\"bench\": \"spmd_scaling\", \
+              \"obs\": {\"span_count\": 1234, \"trace\": \"trace_ci.json\"}, \
+              \"rows\": [{\"regime\": \"full-batch\", \"ranks\": 2, \
+                          \"threaded_wall_secs\": 0.5, \
+                          \"span_count\": 99, \"future_field\": [1, 2]}]}",
+        );
+        let rows = load_rows(&p).unwrap();
+        assert_eq!(rows, vec![("full-batch@2".to_string(), 0.5)]);
         let _ = std::fs::remove_file(&p);
     }
 

@@ -195,19 +195,12 @@ impl CommStats {
     /// Fold another accounting matrix into this one (sequential epoch
     /// totals; merging per-rank shards of the threaded transport — each
     /// shard only ever populates its own sender row, so the merge of all
-    /// k shards is bit-identical to the sequential accounting).
+    /// k shards is bit-identical to the sequential accounting). Thin
+    /// wrapper over the shared [`crate::obs::Mergeable`] contract
+    /// (DESIGN.md §13).
     pub fn merge(&mut self, other: &CommStats) {
-        let k = self.k();
-        assert_eq!(other.k(), k, "CommStats rank-count mismatch");
-        for i in 0..k {
-            for j in 0..k {
-                self.data_bits[i][j] += other.data_bits[i][j];
-                self.param_bits[i][j] += other.param_bits[i][j];
-                self.messages[i][j] += other.messages[i][j];
-            }
-            self.modeled_send_secs[i] += other.modeled_send_secs[i];
-        }
-        self.tiers.merge(&other.tiers);
+        use crate::obs::Mergeable;
+        self.merge_from(other);
     }
 
     pub(crate) fn charge(&mut self, from: usize, to: usize, p: &Payload, profile: &MachineProfile) {
@@ -282,6 +275,25 @@ impl CommStats {
             t.inter_msgs[from] += ng - 1;
             t.modeled_inter_secs[from] += (ng - 1) as f64 * profile.latency;
         }
+    }
+}
+
+impl crate::obs::Mergeable for CommStats {
+    /// Element-wise additive fold (pair matrices, sender rows, tier
+    /// entries) — the shard-merge semantics [`CommStats::merge`] always
+    /// had, now under the shared DESIGN.md §13 contract.
+    fn merge_from(&mut self, other: &Self) {
+        let k = self.k();
+        assert_eq!(other.k(), k, "CommStats rank-count mismatch");
+        for i in 0..k {
+            for j in 0..k {
+                self.data_bits[i][j] += other.data_bits[i][j];
+                self.param_bits[i][j] += other.param_bits[i][j];
+                self.messages[i][j] += other.messages[i][j];
+            }
+            self.modeled_send_secs[i] += other.modeled_send_secs[i];
+        }
+        self.tiers.merge(&other.tiers);
     }
 }
 

@@ -22,6 +22,7 @@
 //! matrix exchange uses.
 
 use super::{CommStats, Payload};
+use crate::obs::{self, TraceCategory};
 use crate::perfmodel::MachineProfile;
 use std::sync::{Condvar, Mutex, MutexGuard};
 
@@ -210,8 +211,10 @@ impl PoisonBarrier {
     /// [`FabricPoisoned`] payload) if the barrier is — or becomes —
     /// poisoned.
     pub fn wait(&self) {
+        let _sp = obs::span(TraceCategory::Barrier, "barrier wait");
         let mut st = lock(&self.state);
         if st.poisoned {
+            obs::instant(TraceCategory::Barrier, "poisoned");
             poison_unwind();
         }
         st.arrived += 1;
@@ -226,12 +229,14 @@ impl PoisonBarrier {
             st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
         }
         if st.poisoned {
+            obs::instant(TraceCategory::Barrier, "poisoned");
             poison_unwind();
         }
     }
 
     /// Mark the barrier failed and wake every waiter (they panic out).
     pub fn poison(&self) {
+        obs::instant(TraceCategory::Barrier, "poison");
         let mut st = lock(&self.state);
         st.poisoned = true;
         self.cv.notify_all();
@@ -361,6 +366,7 @@ impl Fabric {
         profile: &MachineProfile,
         stats: &mut CommStats,
     ) {
+        let _sp = obs::span(TraceCategory::HaloPost, "post alltoallv");
         assert_eq!(sends.len(), self.k, "send row must have one payload per rank");
         // Tier accounting first (a no-op on the flat topology), then the
         // logical per-payload charges in the same ascending-peer order the
@@ -377,6 +383,7 @@ impl Fabric {
     /// before all pickups are done. `post` + `complete` back-to-back is
     /// exactly the blocking [`Fabric::alltoallv`].
     pub fn complete_alltoallv(&self, rank: usize) -> Vec<Payload> {
+        let _sp = obs::span(TraceCategory::HaloComplete, "complete alltoallv");
         // All deposits visible before any pickup...
         self.barrier.wait();
         let recvs: Vec<Payload> = (0..self.k).map(|from| self.take(from, rank)).collect();
@@ -404,6 +411,7 @@ impl Fabric {
         buf: &mut [f32],
         profile: &MachineProfile,
     ) -> f64 {
+        let _sp = obs::span(TraceCategory::Collective, "ring allreduce");
         let k = self.k;
         if k <= 1 {
             return 0.0;
@@ -466,6 +474,7 @@ impl Fabric {
     /// them in rank order, reproducing the sequential driver's f64
     /// accumulation bit-for-bit.
     pub fn allgather_f64(&self, rank: usize, vals: Vec<f64>) -> Vec<Vec<f64>> {
+        let _sp = obs::span(TraceCategory::Collective, "allgather f64");
         {
             let mut slots = lock(&self.gather);
             debug_assert!(slots[rank].is_none(), "allgather slot not drained");

@@ -45,12 +45,13 @@ use crate::exec::{
 use crate::graph::generate::LabelledGraph;
 use crate::model::optimizer::{OptKind, Optimizer};
 use crate::model::ModelParams;
+use crate::obs::{self, ExchangeRow, Telemetry, TraceCategory};
 use crate::partition::Partition;
-use crate::perfmodel::MachineProfile;
+use crate::perfmodel::{self, MachineProfile};
 use crate::quant::Bits;
 use crate::runtime::ShapeConfig;
 use crate::sample::{build_sampler, MiniBatch, Sampler, SamplerConfig, SamplerKind};
-use crate::util::timer::{Breakdown, Category};
+use crate::util::timer::{Breakdown, Category, ALL_CATEGORIES};
 use anyhow::Result;
 use std::sync::Arc;
 use std::time::Instant;
@@ -117,6 +118,10 @@ pub struct MiniBatchTrainer {
     pub params: ModelParams,
     opt: Optimizer,
     pub comm_stats: CommStats,
+    /// Optional span tracer + metrics registry (`--trace` /
+    /// `--metrics-json`, DESIGN.md §13). Default-off: disabled telemetry
+    /// records nothing and changes no behavior.
+    pub telemetry: Telemetry,
     /// Rank placement (`--group-size`, DESIGN.md §12), built once per run.
     topo: Topology,
     epoch: usize,
@@ -180,6 +185,7 @@ impl MiniBatchTrainer {
             params,
             opt,
             comm_stats: CommStats::new(k),
+            telemetry: Telemetry::default(),
             topo,
             epoch: 0,
         })
@@ -208,6 +214,15 @@ impl MiniBatchTrainer {
         if threaded {
             TransportKind::validate_rank_threads(self.mc.rank_threads, k)?;
         }
+        // Sequential: every lane steps here, so the whole epoch records as
+        // rank 0 / lane 0. Threaded: driver-side work (sampling, optimizer
+        // steps) records on pid 0's driver lane (tid 1); the rank bodies
+        // install their own (w, 0) scopes. DESIGN.md §13 lane conventions.
+        let _scope = self
+            .telemetry
+            .tracer
+            .as_ref()
+            .map(|t| t.lane_scope(0, usize::from(threaded)));
         let mut epoch_comm = CommStats::new(k);
         // Threaded transport: one fabric + per-rank CommStats shards for
         // the whole epoch (each shard accumulates charge-by-charge in the
@@ -309,7 +324,10 @@ impl MiniBatchTrainer {
             let scale = 1.0 / with_loss.max(1) as f32;
             summed.iter_mut().for_each(|g| *g *= scale);
             let mut flat_params = self.params.flatten();
-            self.opt.step(&mut flat_params, &summed);
+            {
+                let _sp = obs::span(TraceCategory::OptStep, "optimizer step");
+                self.opt.step(&mut flat_params, &summed);
+            }
             self.params.unflatten_into(&flat_params);
             breakdown.add(Category::Other, t.elapsed().as_secs_f64());
 
@@ -346,6 +364,41 @@ impl MiniBatchTrainer {
         let comm_secs = epoch_comm.modeled_comm_secs();
         breakdown.add(Category::Comm, comm_secs);
         self.comm_stats.merge(&epoch_comm);
+
+        // Publish the epoch into the metrics registry (DESIGN.md §13) —
+        // the same numbers EpochStats carries, named `subsystem.metric.unit`.
+        if let Some(m) = &self.telemetry.metrics {
+            m.begin_epoch(self.epoch);
+            m.counter_add("comm.data.bytes", epoch_comm.total_data_bytes());
+            m.counter_add("comm.param.bytes", epoch_comm.total_param_bytes());
+            m.counter_add("comm.modeled.secs", comm_secs);
+            m.counter_add("epoch.wall.secs", wall.elapsed().as_secs_f64());
+            m.counter_add("epoch.modeled.secs", modeled_compute + comm_secs);
+            m.gauge_set("train.loss.nats", totals.loss_sum / totals.wsum.max(1e-12));
+            for c in ALL_CATEGORIES {
+                m.counter_add(&format!("breakdown.{}.secs", c.name()), breakdown.get(c));
+            }
+            if epoch_comm.tiers.is_active() {
+                m.counter_add("comm.tier_intra.msgs", epoch_comm.tiers.total_intra_msgs() as f64);
+                m.counter_add("comm.tier_inter.msgs", epoch_comm.tiers.total_inter_msgs() as f64);
+                m.counter_add("comm.two_tier.secs", epoch_comm.tiers.modeled_two_tier_secs());
+            }
+            // Measured interior/comm/boundary per fetch exchange, next to
+            // the §11 model of both schedules on the same inputs.
+            for st in &epoch_ledger.stages {
+                let (i, c, b) = st.maxes();
+                let e = perfmodel::estimate_exchange(i, c, b);
+                m.push_exchange(ExchangeRow {
+                    label: st.label.to_string(),
+                    interior_secs: i,
+                    boundary_secs: b,
+                    comm_secs: c,
+                    modeled_overlap_secs: e.overlap_secs,
+                    modeled_serial_secs: e.serial_secs,
+                });
+            }
+            m.end_epoch();
+        }
 
         let stats = EpochStats {
             epoch: self.epoch,
@@ -458,13 +511,18 @@ impl MiniBatchTrainer {
         let epoch = self.epoch;
         let overlap = self.mc.overlap;
         let mut outs: Vec<RoundOut> = (0..k).map(|_| RoundOut::new()).collect();
+        let tracer = self.telemetry.tracer.clone();
         let bodies: Vec<RankBody<'_>> = outs
             .iter_mut()
             .zip(shards.iter_mut())
             .enumerate()
             .map(|(w, (out, shard))| {
                 let rows_w = rows[w];
+                let tr = tracer.clone();
                 Box::new(move || {
+                    // Rank thread = pid `w`, lane 0 (DESIGN.md §13); the
+                    // scope flushes even on panic unwind.
+                    let _scope = tr.as_ref().map(|t| t.lane_scope(w, 0));
                     run_rank_round(
                         w, out, shard, fabric, lg, assign, batches, per_lane, rows_w, engine,
                         params, machine, quant, seed, epoch, round, overlap,

@@ -38,11 +38,12 @@ use crate::hier::volume::RemoteStrategy;
 use crate::model::labelprop::{self, LpSelection};
 use crate::model::optimizer::{OptKind, Optimizer};
 use crate::model::ModelParams;
-use crate::perfmodel::MachineProfile;
+use crate::obs::{self, ExchangeRow, Telemetry, TraceCategory};
+use crate::perfmodel::{self, MachineProfile};
 use crate::quant::Bits;
 use crate::runtime::ShapeConfig;
 use crate::util::rng::Rng;
-use crate::util::timer::{Breakdown, Category};
+use crate::util::timer::{Breakdown, Category, ALL_CATEGORIES};
 use anyhow::Result;
 use std::time::Instant;
 
@@ -142,6 +143,10 @@ pub struct Trainer {
     fb: FullBatchState,
     lp_sels: Vec<LpSelection>,
     pub comm_stats: CommStats,
+    /// Optional span tracer + metrics registry (`--trace` /
+    /// `--metrics-json`, DESIGN.md §13). Default-off: disabled telemetry
+    /// records nothing and changes no behavior.
+    pub telemetry: Telemetry,
     /// Rank placement (`--group-size`, DESIGN.md §12), built once per run.
     topo: Topology,
     epoch: usize,
@@ -175,6 +180,7 @@ impl Trainer {
             rank_tapes: Vec::new(),
             fb,
             lp_sels,
+            telemetry: Telemetry::default(),
             topo,
             epoch: 0,
             rng,
@@ -208,6 +214,9 @@ impl Trainer {
     }
 
     fn epoch_sequential(&mut self) -> Result<EpochStats> {
+        // All lanes step on this thread — the whole epoch records as
+        // rank 0 / lane 0 (DESIGN.md §13 lane conventions).
+        let _scope = self.telemetry.tracer.as_ref().map(|t| t.lane_scope(0, 0));
         let wall = Instant::now();
         let k = self.k();
         let n = self.shapes.n_pad;
@@ -281,7 +290,10 @@ impl Trainer {
             .iter_mut()
             .for_each(|s| *s += ar_secs);
         let mut flat_params = self.params.flatten();
-        self.opt.step(&mut flat_params, &flats[0]);
+        {
+            let _sp = obs::span(TraceCategory::OptStep, "optimizer step");
+            self.opt.step(&mut flat_params, &flats[0]);
+        }
         self.params.unflatten_into(&flat_params);
         breakdown.add(Category::Other, t.elapsed().as_secs_f64());
 
@@ -321,13 +333,18 @@ impl Trainer {
             let epoch = self.epoch;
             let halos = self.fb.lanes_mut();
             let fabric = &fabric;
+            let tracer = self.telemetry.tracer.clone();
             let bodies: Vec<RankBody<'_>> = outs
                 .iter_mut()
                 .zip(halos.iter_mut())
                 .zip(self.rank_tapes.iter_mut())
                 .enumerate()
                 .map(|(w, ((out, halo), tp))| {
+                    let tr = tracer.clone();
                     Box::new(move || {
+                        // Rank thread = pid `w`, lane 0 (DESIGN.md §13);
+                        // the scope flushes even on panic unwind.
+                        let _scope = tr.as_ref().map(|t| t.lane_scope(w, 0));
                         run_rank_epoch(
                             w, out, halo, tp, fabric, workers, shapes, tc, params, engine,
                             lp_sels, epoch, exchange,
@@ -337,6 +354,8 @@ impl Trainer {
                 .collect();
             transport::run_ranks(fabric, bodies)?;
         }
+        // Driver-side tail work records on pid 0's driver lane (tid 1).
+        let _scope = self.telemetry.tracer.as_ref().map(|t| t.lane_scope(0, 1));
 
         // Merge per-rank shards: each shard populated only its own sender
         // row, so the merge reproduces the sequential accounting exactly.
@@ -349,7 +368,10 @@ impl Trainer {
         let mut breakdown = Breakdown::new();
         let t = Instant::now();
         let mut flat_params = self.params.flatten();
-        self.opt.step(&mut flat_params, &outs[0].summed);
+        {
+            let _sp = obs::span(TraceCategory::OptStep, "optimizer step");
+            self.opt.step(&mut flat_params, &outs[0].summed);
+        }
         self.params.unflatten_into(&flat_params);
         breakdown.add(Category::Other, t.elapsed().as_secs_f64());
 
@@ -398,6 +420,41 @@ impl Trainer {
         breakdown.add(Category::Comm, comm_secs);
         // Accumulate into run totals.
         self.comm_stats.merge(epoch_comm);
+
+        // Publish the epoch into the metrics registry (DESIGN.md §13) —
+        // the same numbers EpochStats carries, named `subsystem.metric.unit`.
+        if let Some(m) = &self.telemetry.metrics {
+            m.begin_epoch(self.epoch);
+            m.counter_add("comm.data.bytes", epoch_comm.total_data_bytes());
+            m.counter_add("comm.param.bytes", epoch_comm.total_param_bytes());
+            m.counter_add("comm.modeled.secs", comm_secs);
+            m.counter_add("epoch.wall.secs", wall.elapsed().as_secs_f64());
+            m.counter_add("epoch.modeled.secs", modeled_compute + comm_secs);
+            m.gauge_set("train.loss.nats", totals.loss_sum / totals.wsum.max(1.0));
+            for c in ALL_CATEGORIES {
+                m.counter_add(&format!("breakdown.{}.secs", c.name()), breakdown.get(c));
+            }
+            if epoch_comm.tiers.is_active() {
+                m.counter_add("comm.tier_intra.msgs", epoch_comm.tiers.total_intra_msgs() as f64);
+                m.counter_add("comm.tier_inter.msgs", epoch_comm.tiers.total_inter_msgs() as f64);
+                m.counter_add("comm.two_tier.secs", epoch_comm.tiers.modeled_two_tier_secs());
+            }
+            // Measured interior/comm/boundary per exchange, next to the
+            // §11 model of both schedules on the same inputs.
+            for st in &overlap.stages {
+                let (i, c, b) = st.maxes();
+                let e = perfmodel::estimate_exchange(i, c, b);
+                m.push_exchange(ExchangeRow {
+                    label: st.label.to_string(),
+                    interior_secs: i,
+                    boundary_secs: b,
+                    comm_secs: c,
+                    modeled_overlap_secs: e.overlap_secs,
+                    modeled_serial_secs: e.serial_secs,
+                });
+            }
+            m.end_epoch();
+        }
 
         let stats = EpochStats {
             epoch: self.epoch,

@@ -30,6 +30,7 @@
 use super::dispatch::AggDispatch;
 use super::{GraphContext, OverlapLedger};
 use crate::comm::transport::Fabric;
+use crate::obs::{self, TraceCategory};
 use crate::comm::{alltoallv_routed, CommStats, Payload, Topology};
 use crate::coordinator::planner::WorkerCtx;
 use crate::perfmodel::MachineProfile;
@@ -555,6 +556,7 @@ fn pack_fwd(
     }
     Some(match quant {
         Some(bits) => {
+            let _sp = obs::span(TraceCategory::QuantPack, "quantize fwd payload");
             let t = Instant::now();
             let qseed =
                 (epoch as u64) << 32 | (w as u64) << 16 | (peer as u64) << 8 | l as u64;
@@ -589,6 +591,7 @@ fn scatter_fwd(
         let data: Vec<f32> = match payload {
             Payload::F32(v) => v.clone(),
             Payload::Quant(q) => {
+                let _sp = obs::span(TraceCategory::QuantUnpack, "dequantize fwd payload");
                 let t = Instant::now();
                 let d = fused::dequantize(q);
                 *quant_secs += t.elapsed().as_secs_f64();
@@ -622,6 +625,7 @@ fn local_agg(
     z: &mut Vec<f32>,
     disp: &AggDispatch,
 ) {
+    let _sp = obs::span(TraceCategory::Agg, "local agg");
     let n = shapes.n_pad;
     z.iter_mut().for_each(|x| *x = 0.0);
     disp.segment_sum(h, fin, &ctx.spec.local.gather, &ctx.spec.local.seg, n, z);
@@ -675,6 +679,7 @@ fn scale_rows(z: &mut [f32], fin: usize, deg_inv: &[f32], rows: &[u32]) {
 /// interior destination sees exactly the work [`local_agg`] gives it, in
 /// the same order, so the split is bit-exact per row.
 fn interior_agg(ctx: &WorkerCtx, fin: usize, h: &[f32], z: &mut [f32], disp: &AggDispatch) {
+    let _sp = obs::span(TraceCategory::Agg, "interior agg");
     z.iter_mut().for_each(|x| *x = 0.0);
     disp.segment_sum_rows(
         h,
@@ -701,6 +706,7 @@ fn boundary_agg(
     z: &mut [f32],
     disp: &AggDispatch,
 ) {
+    let _sp = obs::span(TraceCategory::Agg, "boundary agg");
     disp.segment_sum_rows(
         h,
         fin,
@@ -764,6 +770,7 @@ fn bwd_local_transpose(
     d_h: &mut [f32],
     disp: &AggDispatch,
 ) {
+    let _sp = obs::span(TraceCategory::Agg, "bwd local transpose");
     let n = shapes.n_pad;
     disp.segment_sum(
         &dz[..n * fin],

@@ -18,6 +18,7 @@ use crate::agg::spmm::CsrMatrix;
 use crate::comm::transport::Fabric;
 use crate::comm::{alltoallv_routed, CommStats, Payload, Topology};
 use crate::graph::generate::LabelledGraph;
+use crate::obs::{self, TraceCategory};
 use crate::perfmodel::MachineProfile;
 use crate::quant::{fused, Bits};
 use crate::sample::{mix2, MiniBatch};
@@ -161,6 +162,7 @@ impl GraphContext for MiniBatchCtx<'_> {
         secs: &mut [f64],
         quant_secs: &mut [f64],
     ) -> Result<()> {
+        let _sp = obs::span(TraceCategory::Fetch, "fetch batch rows");
         let k = self.per_lane.len();
         let f = self.lg.feat_dim;
         // ---- id requests --------------------------------------------
@@ -252,6 +254,7 @@ impl GraphContext for MiniBatchCtx<'_> {
         secs: &mut [f64],
         _quant_secs: &mut [f64],
     ) -> Result<()> {
+        let _sp = obs::span(TraceCategory::Agg, "batch spmm");
         for (w, mat) in self.mats.iter().enumerate() {
             if let Some(a) = mat {
                 let t = Instant::now();
@@ -273,6 +276,7 @@ impl GraphContext for MiniBatchCtx<'_> {
         disp: &AggDispatch,
         secs: &mut [f64],
     ) -> Result<()> {
+        let _sp = obs::span(TraceCategory::Agg, "batch spmm transpose");
         for (w, mat) in self.mats.iter().enumerate() {
             if let Some(a) = mat {
                 let t = Instant::now();
@@ -344,6 +348,7 @@ fn reply_payload(
     }
     match quant {
         Some(bits) => {
+            let _sp = obs::span(TraceCategory::QuantPack, "quantize reply rows");
             let t = Instant::now();
             let qseed = mix2(
                 mix2(seed, ((epoch as u64) << 20) ^ round as u64),
@@ -365,6 +370,7 @@ fn decode_replies(replies: &mut [Payload], quant_secs: &mut f64) -> Vec<Option<V
         match std::mem::replace(slot, Payload::Empty) {
             Payload::F32(v) if !v.is_empty() => decoded[o] = Some(v),
             Payload::Quant(q) => {
+                let _sp = obs::span(TraceCategory::QuantUnpack, "dequantize reply rows");
                 let t = Instant::now();
                 decoded[o] = Some(fused::dequantize(&q));
                 *quant_secs += t.elapsed().as_secs_f64();
@@ -552,6 +558,7 @@ impl GraphContext for MiniBatchRankCtx<'_> {
         secs: &mut [f64],
         quant_secs: &mut [f64],
     ) -> Result<()> {
+        let _sp = obs::span(TraceCategory::Fetch, "fetch batch rows");
         let f = self.lg.feat_dim;
         if !self.overlap {
             // Blocking schedule: request → serve → reply → assemble.
@@ -620,6 +627,7 @@ impl GraphContext for MiniBatchRankCtx<'_> {
         secs: &mut [f64],
         _quant_secs: &mut [f64],
     ) -> Result<()> {
+        let _sp = obs::span(TraceCategory::Agg, "batch spmm");
         if let Some(a) = &self.mat {
             let t = Instant::now();
             let zv = &mut z[0][..a.n_rows * fin];
@@ -639,6 +647,7 @@ impl GraphContext for MiniBatchRankCtx<'_> {
         disp: &AggDispatch,
         secs: &mut [f64],
     ) -> Result<()> {
+        let _sp = obs::span(TraceCategory::Agg, "batch spmm transpose");
         if let Some(a) = &self.mat {
             let t = Instant::now();
             disp.spmm_t(a, &dz[0][..a.n_rows * fin], fin, &mut d_h[0][..a.n_cols * fin]);

@@ -32,6 +32,7 @@ use crate::backend::linalg as la;
 use crate::graph::generate::{SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
 use crate::model::labelprop::{self, LpSelection};
 use crate::model::{ModelGrads, ModelParams};
+use crate::obs::{self, Mergeable, TraceCategory};
 use crate::runtime::ShapeConfig;
 use crate::util::timer::Category;
 use anyhow::Result;
@@ -179,23 +180,38 @@ impl StageClock {
     /// clock with the sequential layout, so the drivers' Eqn-2/Fig-12
     /// accounting is transport-agnostic. Every rank runs the identical
     /// engine control flow, so the stage sequences always line up — a
-    /// divergence is a bug, hence the asserts.
+    /// divergence is a bug, hence the asserts. Thin wrapper over the
+    /// shared [`obs::merge_lanes`] fold (DESIGN.md §13).
     pub fn merge_lanes(clocks: &[StageClock]) -> StageClock {
         assert!(!clocks.is_empty(), "no rank clocks to merge");
-        let n_stages = clocks[0].stages.len();
         for c in clocks {
             assert_eq!(c.lanes, 1, "merge_lanes takes single-lane rank clocks");
-            assert_eq!(c.stages.len(), n_stages, "rank stage sequences diverged");
         }
-        let mut out = StageClock::new(clocks.len());
-        for s in 0..n_stages {
-            let cat = clocks[0].stages[s].0;
-            debug_assert!(clocks.iter().all(|c| c.stages[s].0 == cat));
-            out.stages
-                .push((cat, clocks.iter().map(|c| c.stages[s].1[0]).collect()));
-            out.quant.push(clocks.iter().map(|c| c.quant[s][0]).collect());
+        obs::merge_lanes(clocks)
+    }
+}
+
+impl Mergeable for StageClock {
+    /// Lane-append: concatenate `other`'s lane columns stage by stage —
+    /// folding k single-lane rank clocks in rank order reproduces the
+    /// sequential k-lane layout exactly.
+    fn merge_from(&mut self, other: &Self) {
+        assert_eq!(
+            self.stages.len(),
+            other.stages.len(),
+            "rank stage sequences diverged"
+        );
+        for ((dst, src), (dq, sq)) in self
+            .stages
+            .iter_mut()
+            .zip(&other.stages)
+            .zip(self.quant.iter_mut().zip(&other.quant))
+        {
+            debug_assert!(dst.0 == src.0, "stage categories diverged");
+            dst.1.extend_from_slice(&src.1);
+            dq.extend_from_slice(sq);
         }
-        out
+        self.lanes += other.lanes;
     }
 }
 
@@ -297,25 +313,31 @@ impl OverlapLedger {
     /// Zip single-lane rank ledgers (threaded transport) into one k-lane
     /// ledger with the sequential layout — the [`StageClock::merge_lanes`]
     /// counterpart. Every rank records the identical stage sequence.
+    /// Thin wrapper over the shared [`obs::merge_lanes`] fold.
     pub fn merge_lanes(ledgers: &[OverlapLedger]) -> OverlapLedger {
         assert!(!ledgers.is_empty(), "no rank ledgers to merge");
-        let n_stages = ledgers[0].stages.len();
         for l in ledgers {
             assert_eq!(l.lanes, 1, "merge_lanes takes single-lane rank ledgers");
-            assert_eq!(l.stages.len(), n_stages, "rank overlap stages diverged");
         }
-        let mut out = OverlapLedger::new(ledgers.len());
-        for s in 0..n_stages {
-            let label = ledgers[0].stages[s].label;
-            debug_assert!(ledgers.iter().all(|l| l.stages[s].label == label));
-            out.stages.push(OverlapStage {
-                label,
-                interior: ledgers.iter().map(|l| l.stages[s].interior[0]).collect(),
-                boundary: ledgers.iter().map(|l| l.stages[s].boundary[0]).collect(),
-                comm: ledgers.iter().map(|l| l.stages[s].comm[0]).collect(),
-            });
+        obs::merge_lanes(ledgers)
+    }
+}
+
+impl Mergeable for OverlapLedger {
+    /// Lane-append per overlap stage — the [`StageClock`] counterpart.
+    fn merge_from(&mut self, other: &Self) {
+        assert_eq!(
+            self.stages.len(),
+            other.stages.len(),
+            "rank overlap stages diverged"
+        );
+        for (dst, src) in self.stages.iter_mut().zip(&other.stages) {
+            debug_assert!(dst.label == src.label, "overlap stage labels diverged");
+            dst.interior.extend_from_slice(&src.interior);
+            dst.boundary.extend_from_slice(&src.boundary);
+            dst.comm.extend_from_slice(&src.comm);
         }
-        out
+        self.lanes += other.lanes;
     }
 }
 
@@ -506,6 +528,7 @@ impl Engine {
         lp: Option<&LpInputs>,
         clock: &mut StageClock,
     ) -> Result<()> {
+        let _sp = obs::span(TraceCategory::Phase, "forward");
         let lanes = tapes.lanes;
         anyhow::ensure!(ctx.lanes() == lanes, "context/tape lane mismatch");
         {
@@ -578,6 +601,7 @@ impl Engine {
         specs: &[LossSpec],
         clock: &mut StageClock,
     ) -> Vec<LossTotals> {
+        let _sp = obs::span(TraceCategory::Phase, "loss");
         let c = self.dims[2].1;
         let lanes = tapes.lanes;
         assert_eq!(specs.len(), lanes);
@@ -667,6 +691,7 @@ impl Engine {
         input_grad: bool,
         clock: &mut StageClock,
     ) -> Result<()> {
+        let _sp = obs::span(TraceCategory::Phase, "backward");
         let lanes = tapes.lanes;
         let need_input = input_grad || lp.is_some();
         for l in (0..3).rev() {
@@ -872,6 +897,47 @@ mod tests {
         assert_eq!(epoch.lanes, 2);
         assert_eq!(epoch.stages.len(), 4);
         assert!((epoch.modeled_serial_secs() - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mergeable_fold_equals_legacy_lane_zip() {
+        // The obs::Mergeable fold must reproduce the pinned lane-zip
+        // semantics of the legacy merge entry points exactly.
+        let mk_clock = |v: f64| {
+            let mut c = StageClock::new(1);
+            let (s, q) = c.push(Category::Aggr);
+            s[0] = v;
+            q[0] = v / 10.0;
+            let (s, _) = c.push(Category::Other);
+            s[0] = 2.0 * v;
+            c
+        };
+        let clocks = vec![mk_clock(1.0), mk_clock(2.0), mk_clock(3.0)];
+        let legacy = StageClock::merge_lanes(&clocks);
+        let folded = crate::obs::merge_lanes(&clocks);
+        assert_eq!(folded.lanes, legacy.lanes);
+        assert_eq!(folded.stages, legacy.stages);
+        assert_eq!(folded.quant, legacy.quant);
+
+        let mk_ledger = |v: f64| {
+            let mut l = OverlapLedger::new(1);
+            let s = l.push("fwd L0");
+            s.interior[0] = v;
+            s.comm[0] = v / 2.0;
+            s.boundary[0] = v / 4.0;
+            l
+        };
+        let ledgers = vec![mk_ledger(1.0), mk_ledger(4.0)];
+        let legacy = OverlapLedger::merge_lanes(&ledgers);
+        let folded = crate::obs::merge_lanes(&ledgers);
+        assert_eq!(folded.lanes, legacy.lanes);
+        assert_eq!(folded.stages.len(), legacy.stages.len());
+        for (a, b) in folded.stages.iter().zip(&legacy.stages) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.interior, b.interior);
+            assert_eq!(a.boundary, b.boundary);
+            assert_eq!(a.comm, b.comm);
+        }
     }
 
     #[test]

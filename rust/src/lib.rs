@@ -27,6 +27,7 @@ pub mod exp;
 pub mod graph;
 pub mod hier;
 pub mod model;
+pub mod obs;
 pub mod partition;
 pub mod perfmodel;
 pub mod quant;

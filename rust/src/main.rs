@@ -26,6 +26,7 @@ use supergcn::graph::stats::stats;
 use supergcn::hier::volume::{volume, RemoteStrategy, ALL_STRATEGIES};
 use supergcn::hier::remote_pairs;
 use supergcn::model::optimizer::OptKind;
+use supergcn::obs::{MetricsRegistry, Telemetry, Tracer};
 use supergcn::partition::{self, multilevel};
 use supergcn::perfmodel::{crossover_procs, fig7_sweep, MachineProfile};
 use supergcn::quant::Bits;
@@ -57,8 +58,10 @@ fn main() {
                  (DESIGN.md §11). `--group-size g` groups ranks onto simulated nodes\n\
                  and stages cross-node payloads through per-node leaders, cutting\n\
                  inter-node messages from O(P²) to O((P/g)²) — bit-exact with the\n\
-                 flat exchange (DESIGN.md §12). `benchcmp` gates CI on the committed\n\
-                 BENCH_seed.json."
+                 flat exchange (DESIGN.md §12). `--trace out.json` records per-rank\n\
+                 spans to a Perfetto/chrome trace; `--metrics-json out.json` writes\n\
+                 the epoch-structured metrics report (DESIGN.md §13). `benchcmp`\n\
+                 gates CI on the committed BENCH_seed.json."
             );
             Ok(())
         }
@@ -159,6 +162,19 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         )
         .opt("seed", "42", "random seed")
         .opt(
+            "trace",
+            "",
+            "write a Perfetto/chrome trace_event JSON of per-rank spans here \
+             (pid = rank, tid = lane; empty = tracing off, zero overhead — \
+             DESIGN.md §13)",
+        )
+        .opt(
+            "metrics-json",
+            "",
+            "write the epoch-structured metrics report here (replaces the \
+             console summary; empty = off — DESIGN.md §13)",
+        )
+        .opt(
             "sampler",
             "full",
             "full | neighbor | saint-rw | saint-node | saint-edge | cluster",
@@ -187,6 +203,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     let overlap = parse_overlap(&a.get_str("overlap"))?;
     let group_size = a.get_usize("group-size");
     Topology::validate_group_size(group_size, k)?;
+    let trace_path = Some(a.get_str("trace")).filter(|s| !s.is_empty());
+    let metrics_path = Some(a.get_str("metrics-json")).filter(|s| !s.is_empty());
     let tc = TrainConfig {
         epochs: if epochs == 0 { spec.epochs } else { epochs },
         lr: spec.lr,
@@ -257,7 +275,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             machine: tc.machine.clone(),
             seed: tc.seed,
         };
-        return run_minibatch_training(Arc::new(lg), k, kind, scfg, mc);
+        return run_minibatch_training(Arc::new(lg), k, kind, scfg, mc, trace_path, metrics_path);
     }
     let (ctxs, cfg) = match backend_name.as_str() {
         "xla" => {
@@ -287,13 +305,54 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         }
         other => anyhow::bail!("unknown backend '{other}'"),
     };
-    run_training(ctxs, cfg, tc)
+    run_training(ctxs, cfg, tc, trace_path, metrics_path)
+}
+
+/// Construct the run's telemetry sinks from the CLI paths: a sink exists
+/// iff its flag was given, so flag-off runs carry `Telemetry::default()`
+/// (the §13 zero-cost disabled mode).
+fn build_telemetry(trace_path: &Option<String>, metrics_path: &Option<String>) -> Telemetry {
+    Telemetry {
+        tracer: trace_path.as_ref().map(|_| Tracer::new()),
+        metrics: metrics_path.as_ref().map(|_| MetricsRegistry::new()),
+    }
+}
+
+/// Flush the trace to disk — called before propagating a run error, so a
+/// failed (even poisoned) run still leaves a valid, truncated trace.
+fn write_trace(tracer: &Option<Tracer>, path: &Option<String>) -> Result<()> {
+    if let (Some(t), Some(p)) = (tracer, path) {
+        t.write(p)?;
+        println!("trace: {} spans -> {p}", t.span_count());
+    }
+    Ok(())
+}
+
+/// Write the metrics report, folding in run-level totals the per-epoch
+/// publishes don't carry (tracer span accounting).
+fn write_metrics(
+    metrics: &Option<MetricsRegistry>,
+    path: &Option<String>,
+    tracer: &Option<Tracer>,
+) -> Result<bool> {
+    if let (Some(m), Some(p)) = (metrics, path) {
+        if let Some(t) = tracer {
+            m.counter_add("trace.spans.count", t.span_count() as f64);
+            m.counter_add("trace.spans.dropped", t.dropped_count() as f64);
+        }
+        m.write(p)?;
+        println!("metrics: {} epochs -> {p}", m.epoch_count());
+        return Ok(true);
+    }
+    Ok(false)
 }
 
 fn run_training(
     ctxs: Vec<supergcn::coordinator::planner::WorkerCtx>,
     cfg: supergcn::runtime::ShapeConfig,
     tc: TrainConfig,
+    trace_path: Option<String>,
+    metrics_path: Option<String>,
 ) -> Result<()> {
     println!(
         "training: {} workers, config={}, transport={}, overlap={}, group-size={}, \
@@ -311,8 +370,13 @@ fn run_training(
     );
     let epochs = tc.epochs;
     let mut tr = Trainer::new(ctxs, cfg, tc);
-    let stats = tr.run(true)?;
-    report_summary(epochs, &stats, &tr.comm_stats);
+    tr.telemetry = build_telemetry(&trace_path, &metrics_path);
+    let run = tr.run(true);
+    write_trace(&tr.telemetry.tracer, &trace_path)?;
+    let stats = run?;
+    if !write_metrics(&tr.telemetry.metrics, &metrics_path, &tr.telemetry.tracer)? {
+        report_summary(epochs, &stats, &tr.comm_stats);
+    }
     Ok(())
 }
 
@@ -351,12 +415,15 @@ fn report_summary(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_minibatch_training(
     lg: Arc<LabelledGraph>,
     k: usize,
     kind: SamplerKind,
     scfg: SamplerConfig,
     mc: MiniBatchConfig,
+    trace_path: Option<String>,
+    metrics_path: Option<String>,
 ) -> Result<()> {
     println!(
         "mini-batch training: {} workers, sampler={}, transport={}, group-size={}, \
@@ -370,13 +437,18 @@ fn run_minibatch_training(
     );
     let epochs = mc.epochs;
     let mut tr = MiniBatchTrainer::new(lg, k, kind, &scfg, mc)?;
+    tr.telemetry = build_telemetry(&trace_path, &metrics_path);
     println!(
         "  {} batches/epoch over the {}-way partition",
         tr.batches_per_epoch(),
         tr.k()
     );
-    let stats = tr.run(true)?;
-    report_summary(epochs, &stats, &tr.comm_stats);
+    let run = tr.run(true);
+    write_trace(&tr.telemetry.tracer, &trace_path)?;
+    let stats = run?;
+    if !write_metrics(&tr.telemetry.metrics, &metrics_path, &tr.telemetry.tracer)? {
+        report_summary(epochs, &stats, &tr.comm_stats);
+    }
     Ok(())
 }
 

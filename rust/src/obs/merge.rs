@@ -1,0 +1,61 @@
+//! The one lane/shard merge contract (DESIGN.md §13).
+//!
+//! Three per-rank accumulators used to carry hand-rolled merge loops —
+//! `StageClock::merge_lanes`, `CommStats::merge`, and the
+//! `OverlapLedger` lane merge. They now all implement [`Mergeable`] and
+//! the drivers fold shards through [`merge_lanes`]; the legacy methods
+//! remain as thin wrappers so every pinned call site and test keeps its
+//! exact semantics (single-lane asserts included).
+//!
+//! `merge_from` is a *fold step*: absorb `other` into `self`. For the
+//! clock/ledger that means appending `other`'s lanes; for `CommStats`
+//! it is the element-wise additive merge of sender shards. Folding in
+//! rank order 0..k reproduces the sequential driver's accounting
+//! bit-for-bit — the same rank-order discipline the ring allreduce
+//! uses.
+
+/// Absorb another shard of the same shape into `self`.
+pub trait Mergeable {
+    fn merge_from(&mut self, other: &Self);
+}
+
+/// Fold a non-empty slice of per-rank shards in rank order: clone shard
+/// 0, then `merge_from` shards 1..k.
+pub fn merge_lanes<T: Mergeable + Clone>(shards: &[T]) -> T {
+    assert!(!shards.is_empty(), "merge_lanes needs at least one shard");
+    let mut acc = shards[0].clone();
+    for s in &shards[1..] {
+        acc.merge_from(s);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone, Debug, PartialEq)]
+    struct Sum(Vec<f64>);
+
+    impl Mergeable for Sum {
+        fn merge_from(&mut self, other: &Self) {
+            assert_eq!(self.0.len(), other.0.len());
+            for (a, b) in self.0.iter_mut().zip(&other.0) {
+                *a += b;
+            }
+        }
+    }
+
+    #[test]
+    fn fold_runs_in_rank_order_from_shard_zero() {
+        let shards = vec![Sum(vec![1.0, 2.0]), Sum(vec![10.0, 20.0]), Sum(vec![100.0, 200.0])];
+        assert_eq!(merge_lanes(&shards), Sum(vec![111.0, 222.0]));
+        assert_eq!(merge_lanes(&shards[..1]), shards[0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn empty_fold_is_rejected() {
+        merge_lanes::<Sum>(&[]);
+    }
+}

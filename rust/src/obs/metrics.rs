@@ -1,0 +1,378 @@
+//! One typed metrics registry for the whole runtime (DESIGN.md §13).
+//!
+//! Counters, gauges, and histograms keyed by dotted
+//! `subsystem.metric.unit` names (at least three segments — the last is
+//! always the unit, e.g. `comm.data.bytes`, `exec.stage_aggr.secs`).
+//! The registry is epoch-structured: [`MetricsRegistry::begin_epoch`]
+//! opens a record, writes land there, [`MetricsRegistry::end_epoch`]
+//! seals it and folds counters/histograms into the run totals. Writes
+//! outside an open epoch go straight to the totals.
+//!
+//! The scattered accounting structs (`StageClock`, `CommStats` +
+//! `TierStats`, `OverlapLedger`) stay the authoritative per-epoch
+//! accumulators — the trainers *publish* their merged views into this
+//! registry at epoch end, so `--metrics-json` replaces the ad-hoc
+//! summary printing with one machine-readable report.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Running histogram summary (count/sum/min/max — enough for the
+/// modeled-vs-measured report without bucket bookkeeping).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Hist {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Hist {
+    fn observe(&mut self, v: f64) {
+        if self.count == 0 {
+            self.min = v;
+            self.max = v;
+        } else {
+            self.min = self.min.min(v);
+            self.max = self.max.max(v);
+        }
+        self.count += 1;
+        self.sum += v;
+    }
+
+    fn absorb(&mut self, other: &Hist) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            *self = *other;
+            return;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// One registered metric value.
+#[derive(Clone, Copy, Debug)]
+pub enum Metric {
+    /// Monotone accumulator (`counter_add`).
+    Counter(f64),
+    /// Last-write-wins level (`gauge_set`).
+    Gauge(f64),
+    /// Distribution summary (`observe`).
+    Hist(Hist),
+}
+
+impl Metric {
+    fn to_json(self) -> Json {
+        match self {
+            Metric::Counter(v) => Json::obj(vec![
+                ("type", Json::Str("counter".into())),
+                ("value", Json::Num(v)),
+            ]),
+            Metric::Gauge(v) => Json::obj(vec![
+                ("type", Json::Str("gauge".into())),
+                ("value", Json::Num(v)),
+            ]),
+            Metric::Hist(h) => Json::obj(vec![
+                ("type", Json::Str("hist".into())),
+                ("count", Json::Num(h.count as f64)),
+                ("sum", Json::Num(h.sum)),
+                ("min", Json::Num(h.min)),
+                ("max", Json::Num(h.max)),
+            ]),
+        }
+    }
+}
+
+/// Per-exchange modeled-vs-measured row (`perfmodel::estimate_exchange`
+/// beside the `OverlapLedger`'s measured lane maxes).
+#[derive(Clone, Debug)]
+pub struct ExchangeRow {
+    /// Exchange label (`fwd halo L0`, `fetch req`, ...).
+    pub label: String,
+    /// Measured interior-compute seconds (max over lanes).
+    pub interior_secs: f64,
+    /// Measured boundary-compute seconds (max over lanes).
+    pub boundary_secs: f64,
+    /// Modeled wire seconds for the exchange (max over lanes).
+    pub comm_secs: f64,
+    /// `perfmodel::t_layer_overlap` over the three columns.
+    pub modeled_overlap_secs: f64,
+    /// `perfmodel::t_layer_serial` over the three columns.
+    pub modeled_serial_secs: f64,
+}
+
+impl ExchangeRow {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::Str(self.label.clone())),
+            ("interior_secs", Json::Num(self.interior_secs)),
+            ("boundary_secs", Json::Num(self.boundary_secs)),
+            ("comm_secs", Json::Num(self.comm_secs)),
+            ("modeled_overlap_secs", Json::Num(self.modeled_overlap_secs)),
+            ("modeled_serial_secs", Json::Num(self.modeled_serial_secs)),
+        ])
+    }
+}
+
+/// One sealed epoch of metrics.
+#[derive(Clone, Debug, Default)]
+struct EpochRecord {
+    epoch: usize,
+    metrics: BTreeMap<String, Metric>,
+    exchanges: Vec<ExchangeRow>,
+}
+
+#[derive(Default)]
+struct RegInner {
+    current: Option<EpochRecord>,
+    epochs: Vec<EpochRecord>,
+    totals: BTreeMap<String, Metric>,
+}
+
+/// The shared, clonable registry handle (one `Arc`; hand clones to the
+/// trainers and the CLI writer).
+#[derive(Clone, Default)]
+pub struct MetricsRegistry {
+    inner: Arc<Mutex<RegInner>>,
+}
+
+/// Enforce the §13 naming contract: `subsystem.metric.unit`, at least
+/// three dot-separated non-empty segments.
+fn check_name(name: &str) {
+    let ok = name.split('.').filter(|s| !s.is_empty()).count() >= 3
+        && !name.split('.').any(|s| s.is_empty());
+    assert!(ok, "metric name '{name}' must be dotted subsystem.metric.unit");
+}
+
+fn apply(map: &mut BTreeMap<String, Metric>, name: &str, m: Metric) {
+    match (map.get_mut(name), m) {
+        (Some(Metric::Counter(acc)), Metric::Counter(v)) => *acc += v,
+        (Some(Metric::Gauge(g)), Metric::Gauge(v)) => *g = v,
+        (Some(Metric::Hist(h)), Metric::Hist(o)) => h.absorb(&o),
+        (Some(_), _) => panic!("metric '{name}' re-registered with a different type"),
+        (None, m) => {
+            map.insert(name.to_string(), m);
+        }
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn lock(&self) -> MutexGuard<'_, RegInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Open epoch `epoch` (seals any epoch left open).
+    pub fn begin_epoch(&self, epoch: usize) {
+        let mut g = self.lock();
+        if g.current.is_some() {
+            seal(&mut g);
+        }
+        g.current = Some(EpochRecord {
+            epoch,
+            ..Default::default()
+        });
+    }
+
+    /// Seal the open epoch, folding its counters/hists into the totals.
+    pub fn end_epoch(&self) {
+        seal(&mut self.lock());
+    }
+
+    /// Add `v` to counter `name` (current epoch if open, else totals).
+    pub fn counter_add(&self, name: &str, v: f64) {
+        check_name(name);
+        let mut g = self.lock();
+        let map = g.current.as_mut().map(|c| &mut c.metrics);
+        match map {
+            Some(m) => apply(m, name, Metric::Counter(v)),
+            None => apply(&mut g.totals, name, Metric::Counter(v)),
+        }
+    }
+
+    /// Set gauge `name` to `v`.
+    pub fn gauge_set(&self, name: &str, v: f64) {
+        check_name(name);
+        let mut g = self.lock();
+        let map = g.current.as_mut().map(|c| &mut c.metrics);
+        match map {
+            Some(m) => apply(m, name, Metric::Gauge(v)),
+            None => apply(&mut g.totals, name, Metric::Gauge(v)),
+        }
+    }
+
+    /// Record one observation into histogram `name`.
+    pub fn observe(&self, name: &str, v: f64) {
+        check_name(name);
+        let mut h = Hist::default();
+        h.observe(v);
+        let mut g = self.lock();
+        let map = g.current.as_mut().map(|c| &mut c.metrics);
+        match map {
+            Some(m) => apply(m, name, Metric::Hist(h)),
+            None => apply(&mut g.totals, name, Metric::Hist(h)),
+        }
+    }
+
+    /// Attach one modeled-vs-measured exchange row to the open epoch
+    /// (dropped when no epoch is open — exchanges are per-epoch data).
+    pub fn push_exchange(&self, row: ExchangeRow) {
+        if let Some(c) = self.lock().current.as_mut() {
+            c.exchanges.push(row);
+        }
+    }
+
+    /// Sealed epochs so far.
+    pub fn epoch_count(&self) -> usize {
+        self.lock().epochs.len()
+    }
+
+    /// Snapshot a metric from the run totals.
+    pub fn total(&self, name: &str) -> Option<Metric> {
+        self.lock().totals.get(name).copied()
+    }
+
+    /// The `--metrics-json` report: every sealed epoch plus run totals.
+    pub fn to_json(&self) -> Json {
+        let mut g = self.lock();
+        if g.current.is_some() {
+            seal(&mut g);
+        }
+        let epochs: Vec<Json> = g
+            .epochs
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("epoch", Json::Num(e.epoch as f64)),
+                    (
+                        "metrics",
+                        Json::Obj(
+                            e.metrics
+                                .iter()
+                                .map(|(k, v)| (k.clone(), v.to_json()))
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "exchanges",
+                        Json::Arr(e.exchanges.iter().map(|x| x.to_json()).collect()),
+                    ),
+                ])
+            })
+            .collect();
+        let totals = Json::Obj(
+            g.totals
+                .iter()
+                .map(|(k, v)| (k.clone(), v.to_json()))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::Str("supergcn.metrics.v1".into())),
+            ("epochs", Json::Arr(epochs)),
+            ("totals", totals),
+        ])
+    }
+
+    /// Write the report to `path`.
+    pub fn write(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, crate::util::json::to_pretty(&self.to_json()))
+            .map_err(|e| anyhow::anyhow!("cannot write metrics {path}: {e}"))
+    }
+}
+
+fn seal(g: &mut RegInner) {
+    if let Some(cur) = g.current.take() {
+        for (k, v) in &cur.metrics {
+            // Counters and hists fold; gauges keep the last epoch's level.
+            apply(&mut g.totals, k, *v);
+        }
+        g.epochs.push(cur);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn epochs_accumulate_and_fold_into_totals() {
+        let m = MetricsRegistry::new();
+        m.begin_epoch(0);
+        m.counter_add("comm.data.bytes", 10.0);
+        m.counter_add("comm.data.bytes", 5.0);
+        m.gauge_set("train.loss.nats", 1.5);
+        m.observe("exec.stage.secs", 2.0);
+        m.end_epoch();
+        m.begin_epoch(1);
+        m.counter_add("comm.data.bytes", 1.0);
+        m.gauge_set("train.loss.nats", 0.5);
+        m.observe("exec.stage.secs", 4.0);
+        m.end_epoch();
+
+        assert_eq!(m.epoch_count(), 2);
+        match m.total("comm.data.bytes") {
+            Some(Metric::Counter(v)) => assert!((v - 16.0).abs() < 1e-12),
+            other => panic!("unexpected {other:?}"),
+        }
+        match m.total("train.loss.nats") {
+            Some(Metric::Gauge(v)) => assert!((v - 0.5).abs() < 1e-12),
+            other => panic!("unexpected {other:?}"),
+        }
+        match m.total("exec.stage.secs") {
+            Some(Metric::Hist(h)) => {
+                assert_eq!(h.count, 2);
+                assert!((h.sum - 6.0).abs() < 1e-12);
+                assert!((h.min - 2.0).abs() < 1e-12);
+                assert!((h.max - 4.0).abs() < 1e-12);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn report_shape_is_epoch_structured() {
+        let m = MetricsRegistry::new();
+        m.begin_epoch(0);
+        m.counter_add("comm.msgs.count", 3.0);
+        m.push_exchange(ExchangeRow {
+            label: "fwd halo L0".into(),
+            interior_secs: 1.0,
+            boundary_secs: 0.25,
+            comm_secs: 2.0,
+            modeled_overlap_secs: 2.25,
+            modeled_serial_secs: 3.25,
+        });
+        m.end_epoch();
+        let j = m.to_json();
+        let epochs = j.get("epochs").unwrap().as_arr().unwrap();
+        assert_eq!(epochs.len(), 1);
+        let ex = epochs[0].get("exchanges").unwrap().as_arr().unwrap();
+        assert_eq!(ex[0].get("label").unwrap().as_str().unwrap(), "fwd halo L0");
+        assert!(j.get("totals").unwrap().get("comm.msgs.count").is_some());
+        // The report itself must round-trip through the parser.
+        assert!(Json::parse(&crate::util::json::to_pretty(&j)).is_ok());
+    }
+
+    #[test]
+    #[should_panic(expected = "subsystem.metric.unit")]
+    fn short_names_are_rejected() {
+        MetricsRegistry::new().counter_add("comm.bytes", 1.0);
+    }
+
+    #[test]
+    fn writes_outside_epochs_land_in_totals() {
+        let m = MetricsRegistry::new();
+        m.counter_add("run.span.count", 7.0);
+        assert!(matches!(m.total("run.span.count"), Some(Metric::Counter(v)) if v == 7.0));
+        assert_eq!(m.epoch_count(), 0);
+    }
+}

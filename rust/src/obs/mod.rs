@@ -1,0 +1,41 @@
+//! Unified observability: span tracing, the metrics registry, and the
+//! shared shard-merge contract (DESIGN.md §13).
+//!
+//! * [`trace`] — per-rank, thread-local ring-buffered span tracing with
+//!   Chrome/Perfetto `trace_event` export (`--trace <path>`; pid =
+//!   rank, tid = lane).
+//! * [`metrics`] — one typed registry of counters/gauges/histograms
+//!   named `subsystem.metric.unit`, epoch-structured, exported via
+//!   `--metrics-json <path>`.
+//! * [`merge`] — the [`Mergeable`] trait behind every per-rank shard
+//!   merge (`StageClock`, `CommStats`, `OverlapLedger`).
+//!
+//! The contract when both are off (no CLI flags): zero allocations on
+//! instrumented paths and no behavior change — per-epoch loss bits and
+//! `CommStats` wire bits stay identical to an uninstrumented build
+//! (pinned by `tests/spmd_parity.rs` and `tests/obs_telemetry.rs`).
+
+pub mod merge;
+pub mod metrics;
+pub mod trace;
+
+pub use merge::{merge_lanes, Mergeable};
+pub use metrics::{ExchangeRow, Metric, MetricsRegistry};
+pub use trace::{instant, span, LaneScope, SpanGuard, TraceCategory, Tracer};
+
+/// The optional telemetry pair a trainer carries: both `None` (the
+/// default) means observability is fully off — the hard zero-cost path.
+#[derive(Clone, Default)]
+pub struct Telemetry {
+    /// Span sink for `--trace` (None = tracing off).
+    pub tracer: Option<Tracer>,
+    /// Metrics sink for `--metrics-json` (None = registry off).
+    pub metrics: Option<MetricsRegistry>,
+}
+
+impl Telemetry {
+    /// Is either sink attached?
+    pub fn enabled(&self) -> bool {
+        self.tracer.is_some() || self.metrics.is_some()
+    }
+}

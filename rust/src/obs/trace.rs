@@ -1,0 +1,452 @@
+//! Low-overhead per-rank span tracing with Chrome/Perfetto
+//! `trace_event` export (DESIGN.md §13).
+//!
+//! The tracer is strictly opt-in: spans are emitted through the free
+//! functions [`span`]/[`instant`], which consult a thread-local slot
+//! installed by [`Tracer::lane_scope`]. When no scope is installed (the
+//! default — no `--trace` flag), both functions return immediately
+//! without allocating, so instrumented hot paths cost one thread-local
+//! read when tracing is off. Numerics are never touched either way —
+//! the disabled-mode bit-exactness is pinned by
+//! `tests/obs_telemetry.rs` and `tests/spmd_parity.rs`.
+//!
+//! Each `(rank, lane)` scope buffers its spans in a fixed-capacity ring
+//! (oldest spans are dropped on overflow, never the newest) and flushes
+//! into the shared [`Tracer`] sink when the scope drops — including
+//! drops during a panic unwind, which is how poison/panic paths still
+//! produce a valid (truncated) trace.
+
+use crate::util::json::Json;
+use std::cell::RefCell;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Static span taxonomy — one variant per instrumented subsystem phase
+/// (DESIGN.md §13). Categories are `&'static str`-backed so emitting a
+/// span never allocates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TraceCategory {
+    /// Aggregation kernels (local/interior/boundary sweeps).
+    Agg,
+    /// Quantization pack (encode before the wire).
+    QuantPack,
+    /// Dequantization unpack (decode after the wire).
+    QuantUnpack,
+    /// Split-phase halo exchange: the non-blocking post half.
+    HaloPost,
+    /// Split-phase halo exchange: the blocking complete half.
+    HaloComplete,
+    /// Barrier waits inside the mailbox fabric (load-imbalance time).
+    Barrier,
+    /// Whole-fabric collectives (ring allreduce, allgather).
+    Collective,
+    /// Optimizer steps.
+    OptStep,
+    /// Mini-batch remote-row fetch legs (request/reply).
+    Fetch,
+    /// Coarse engine phases (forward/backward/loss stages).
+    Phase,
+}
+
+pub const ALL_TRACE_CATEGORIES: [TraceCategory; 10] = [
+    TraceCategory::Agg,
+    TraceCategory::QuantPack,
+    TraceCategory::QuantUnpack,
+    TraceCategory::HaloPost,
+    TraceCategory::HaloComplete,
+    TraceCategory::Barrier,
+    TraceCategory::Collective,
+    TraceCategory::OptStep,
+    TraceCategory::Fetch,
+    TraceCategory::Phase,
+];
+
+impl TraceCategory {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceCategory::Agg => "agg",
+            TraceCategory::QuantPack => "quant_pack",
+            TraceCategory::QuantUnpack => "quant_unpack",
+            TraceCategory::HaloPost => "halo_post",
+            TraceCategory::HaloComplete => "halo_complete",
+            TraceCategory::Barrier => "barrier",
+            TraceCategory::Collective => "collective",
+            TraceCategory::OptStep => "opt_step",
+            TraceCategory::Fetch => "fetch",
+            TraceCategory::Phase => "phase",
+        }
+    }
+}
+
+/// One recorded event: a complete span (`dur_us = Some`) or an instant
+/// (`dur_us = None`). Timestamps are µs since the tracer's creation.
+#[derive(Clone, Copy, Debug)]
+struct SpanRec {
+    cat: TraceCategory,
+    name: &'static str,
+    ts_us: f64,
+    dur_us: Option<f64>,
+}
+
+/// The flushed span log of one `(rank, lane)` scope.
+struct LaneLog {
+    rank: usize,
+    lane: usize,
+    spans: Vec<SpanRec>,
+    /// Ring-overflow count (oldest spans evicted).
+    dropped: usize,
+}
+
+struct TraceInner {
+    epoch: Instant,
+    /// Per-scope ring capacity.
+    cap: usize,
+    lanes: Mutex<Vec<LaneLog>>,
+}
+
+/// Poison-tolerant lock: a scope flushing during a panic unwind must
+/// never double-panic, and flushed span data is append-only anyway.
+fn lock_lanes(inner: &TraceInner) -> std::sync::MutexGuard<'_, Vec<LaneLog>> {
+    inner.lanes.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// The per-run span sink. Cheap to clone (one `Arc`); hand clones to
+/// every rank thread and call [`Tracer::lane_scope`] there.
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Arc<TraceInner>,
+}
+
+/// Default per-scope ring capacity: enough for every span of a bench
+/// epoch at 8 ranks while bounding a runaway loop's memory.
+const DEFAULT_CAP: usize = 1 << 16;
+
+struct Active {
+    inner: Arc<TraceInner>,
+    rank: usize,
+    lane: usize,
+    epoch: Instant,
+    buf: Vec<SpanRec>,
+    /// Ring write index once `buf` is full.
+    next: usize,
+    dropped: usize,
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<Active>> = const { RefCell::new(None) };
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Self {
+        Self::with_capacity(DEFAULT_CAP)
+    }
+
+    /// A tracer whose scopes keep at most `cap` spans each (ring
+    /// semantics: newest always survive).
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            inner: Arc::new(TraceInner {
+                epoch: Instant::now(),
+                cap: cap.max(1),
+                lanes: Mutex::new(Vec::new()),
+            }),
+        }
+    }
+
+    /// Install this thread's span destination as `(rank, lane)` until
+    /// the returned scope drops (which flushes the buffered spans into
+    /// the tracer — also on panic unwind). Scopes nest: an inner scope
+    /// stashes and restores the outer one.
+    pub fn lane_scope(&self, rank: usize, lane: usize) -> LaneScope {
+        let prev = ACTIVE.with(|a| {
+            a.borrow_mut().replace(Active {
+                inner: self.inner.clone(),
+                rank,
+                lane,
+                epoch: self.inner.epoch,
+                buf: Vec::new(),
+                next: 0,
+                dropped: 0,
+            })
+        });
+        LaneScope { prev: Some(prev) }
+    }
+
+    /// Total spans + instants flushed so far.
+    pub fn span_count(&self) -> usize {
+        lock_lanes(&self.inner).iter().map(|l| l.spans.len()).sum()
+    }
+
+    /// Spans evicted by ring overflow across all flushed scopes.
+    pub fn dropped_count(&self) -> usize {
+        lock_lanes(&self.inner).iter().map(|l| l.dropped).sum()
+    }
+
+    /// Render every flushed scope as Chrome/Perfetto `trace_event` JSON:
+    /// `pid` = rank, `tid` = lane, complete (`ph:"X"`) spans plus
+    /// thread-scoped (`ph:"i"`) instants, sorted so `ts` is monotone per
+    /// tid (parents sort before equal-timestamp children via the longer
+    /// duration).
+    pub fn to_chrome_json(&self) -> Json {
+        let lanes = lock_lanes(&self.inner);
+        let mut recs: Vec<(usize, usize, SpanRec)> = Vec::new();
+        for l in lanes.iter() {
+            for r in &l.spans {
+                recs.push((l.rank, l.lane, *r));
+            }
+        }
+        drop(lanes);
+        recs.sort_by(|a, b| {
+            (a.0, a.1)
+                .cmp(&(b.0, b.1))
+                .then(a.2.ts_us.total_cmp(&b.2.ts_us))
+                .then(b.2.dur_us.unwrap_or(0.0).total_cmp(&a.2.dur_us.unwrap_or(0.0)))
+        });
+        let events: Vec<Json> = recs
+            .into_iter()
+            .map(|(rank, lane, r)| {
+                let mut pairs = vec![
+                    ("name", Json::Str(r.name.to_string())),
+                    ("cat", Json::Str(r.cat.name().to_string())),
+                    ("ts", Json::Num(r.ts_us)),
+                    ("pid", Json::Num(rank as f64)),
+                    ("tid", Json::Num(lane as f64)),
+                ];
+                match r.dur_us {
+                    Some(d) => {
+                        pairs.push(("ph", Json::Str("X".to_string())));
+                        pairs.push(("dur", Json::Num(d)));
+                    }
+                    None => {
+                        pairs.push(("ph", Json::Str("i".to_string())));
+                        pairs.push(("s", Json::Str("t".to_string())));
+                    }
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+        ])
+    }
+
+    /// Write the Chrome JSON to `path` (load via `chrome://tracing` or
+    /// <https://ui.perfetto.dev>).
+    pub fn write(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, crate::util::json::to_pretty(&self.to_chrome_json()))
+            .map_err(|e| anyhow::anyhow!("cannot write trace {path}: {e}"))
+    }
+}
+
+/// RAII guard installing a thread's `(rank, lane)` span destination;
+/// flushes on drop (see [`Tracer::lane_scope`]).
+pub struct LaneScope {
+    prev: Option<Option<Active>>,
+}
+
+impl Drop for LaneScope {
+    fn drop(&mut self) {
+        let prev = self.prev.take().unwrap_or(None);
+        let cur = ACTIVE.with(|a| a.borrow_mut().take());
+        if let Some(mut act) = cur {
+            // Restore ring order: the write index points at the oldest
+            // surviving span once the ring has wrapped.
+            if act.dropped > 0 {
+                act.buf.rotate_left(act.next);
+            }
+            lock_lanes(&act.inner).push(LaneLog {
+                rank: act.rank,
+                lane: act.lane,
+                spans: act.buf,
+                dropped: act.dropped,
+            });
+        }
+        ACTIVE.with(|a| *a.borrow_mut() = prev);
+    }
+}
+
+/// Append to the active scope's ring (oldest evicted on overflow).
+fn ring_push(act: &mut Active, rec: SpanRec) {
+    if act.buf.len() < act.inner.cap {
+        act.buf.push(rec);
+    } else {
+        act.buf[act.next] = rec;
+        act.next = (act.next + 1) % act.buf.len();
+        act.dropped += 1;
+    }
+}
+
+/// Open a span; the returned guard records a complete event on drop
+/// (including drops during panic unwind). Returns `None` — without
+/// allocating or reading the clock — when the thread has no installed
+/// lane scope, i.e. tracing is off.
+#[must_use = "the span measures until the guard drops"]
+pub fn span(cat: TraceCategory, name: &'static str) -> Option<SpanGuard> {
+    let enabled = ACTIVE.with(|a| a.borrow().is_some());
+    if !enabled {
+        return None;
+    }
+    Some(SpanGuard {
+        cat,
+        name,
+        start: Instant::now(),
+    })
+}
+
+/// Record a zero-duration instant event (poison notices, one-shot
+/// markers). No-op without an installed lane scope.
+pub fn instant(cat: TraceCategory, name: &'static str) {
+    ACTIVE.with(|a| {
+        let mut b = a.borrow_mut();
+        if let Some(act) = b.as_mut() {
+            let ts_us = act.epoch.elapsed().as_secs_f64() * 1e6;
+            ring_push(act, SpanRec { cat, name, ts_us, dur_us: None });
+        }
+    });
+}
+
+/// Open-span RAII guard returned by [`span`].
+pub struct SpanGuard {
+    cat: TraceCategory,
+    name: &'static str,
+    start: Instant,
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let dur = self.start.elapsed().as_secs_f64() * 1e6;
+        ACTIVE.with(|a| {
+            let mut b = a.borrow_mut();
+            if let Some(act) = b.as_mut() {
+                let ts_us = self.start.duration_since(act.epoch).as_secs_f64() * 1e6;
+                let rec = SpanRec {
+                    cat: self.cat,
+                    name: self.name,
+                    ts_us,
+                    dur_us: Some(dur),
+                };
+                ring_push(act, rec);
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::to_pretty;
+
+    #[test]
+    fn disabled_thread_records_nothing() {
+        assert!(span(TraceCategory::Agg, "noop").is_none());
+        instant(TraceCategory::Barrier, "noop");
+        // No tracer exists, so nothing observable happened; the calls
+        // above must simply not panic.
+    }
+
+    #[test]
+    fn spans_flush_on_scope_drop_with_rank_lane_identity() {
+        let t = Tracer::new();
+        {
+            let _scope = t.lane_scope(3, 1);
+            {
+                let _outer = span(TraceCategory::Phase, "outer");
+                let _inner = span(TraceCategory::Agg, "inner");
+            }
+            instant(TraceCategory::Barrier, "mark");
+            assert_eq!(t.span_count(), 0, "spans buffer until the scope drops");
+        }
+        assert_eq!(t.span_count(), 3);
+        let j = t.to_chrome_json();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        for e in events {
+            assert_eq!(e.get("pid").unwrap().as_usize().unwrap(), 3);
+            assert_eq!(e.get("tid").unwrap().as_usize().unwrap(), 1);
+            assert!(e.get("ph").is_some() && e.get("ts").is_some() && e.get("cat").is_some());
+        }
+    }
+
+    #[test]
+    fn ring_keeps_newest_spans_in_order() {
+        let t = Tracer::with_capacity(4);
+        {
+            let _scope = t.lane_scope(0, 0);
+            for _ in 0..10 {
+                let _s = span(TraceCategory::Agg, "tick");
+            }
+        }
+        assert_eq!(t.span_count(), 4);
+        assert_eq!(t.dropped_count(), 6);
+        let j = t.to_chrome_json();
+        let events = j.get("traceEvents").unwrap().as_arr().unwrap();
+        let ts: Vec<f64> = events.iter().map(|e| e.get("ts").unwrap().as_f64().unwrap()).collect();
+        for w in ts.windows(2) {
+            assert!(w[0] <= w[1], "ring flush must stay time-ordered");
+        }
+    }
+
+    #[test]
+    fn nested_scopes_restore_the_outer_destination() {
+        let t = Tracer::new();
+        let u = Tracer::new();
+        {
+            let _outer = t.lane_scope(0, 0);
+            {
+                let _inner = u.lane_scope(1, 0);
+                let _s = span(TraceCategory::Agg, "inner");
+            }
+            let _s = span(TraceCategory::Agg, "outer");
+        }
+        assert_eq!(t.span_count(), 1);
+        assert_eq!(u.span_count(), 1);
+    }
+
+    #[test]
+    fn export_parses_and_ts_is_monotone_per_tid() {
+        let t = Tracer::new();
+        for rank in 0..2 {
+            let _scope = t.lane_scope(rank, 0);
+            for _ in 0..5 {
+                let _s = span(TraceCategory::Collective, "step");
+            }
+        }
+        let text = to_pretty(&t.to_chrome_json());
+        let parsed = Json::parse(&text).expect("trace must be valid JSON");
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 10);
+        let mut last: std::collections::BTreeMap<(usize, usize), f64> = Default::default();
+        for e in events {
+            let key = (
+                e.get("pid").unwrap().as_usize().unwrap(),
+                e.get("tid").unwrap().as_usize().unwrap(),
+            );
+            let ts = e.get("ts").unwrap().as_f64().unwrap();
+            if let Some(prev) = last.get(&key) {
+                assert!(ts >= *prev, "ts must be monotone per (pid, tid)");
+            }
+            last.insert(key, ts);
+        }
+    }
+
+    #[test]
+    fn unwinding_scope_still_flushes() {
+        let t = Tracer::new();
+        let t2 = t.clone();
+        let r = std::panic::catch_unwind(move || {
+            let _scope = t2.lane_scope(0, 0);
+            let _s = span(TraceCategory::Barrier, "doomed");
+            panic!("die mid-span");
+        });
+        assert!(r.is_err());
+        assert_eq!(t.span_count(), 1, "unwind must flush the truncated log");
+        assert!(Json::parse(&to_pretty(&t.to_chrome_json())).is_ok());
+    }
+}

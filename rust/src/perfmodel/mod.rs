@@ -220,6 +220,27 @@ pub fn t_layer_serial(interior: f64, comm: f64, boundary: f64) -> f64 {
     interior + comm + boundary
 }
 
+/// Both schedule models of one halo exchange, side by side — the shape
+/// the telemetry report wants (DESIGN.md §13): each measured
+/// `OverlapLedger` stage is published next to its modeled overlap/serial
+/// times so modeled-vs-measured drift is visible per exchange.
+#[derive(Clone, Copy, Debug)]
+pub struct ExchangeEstimate {
+    /// `t_layer_overlap(interior, comm, boundary)`.
+    pub overlap_secs: f64,
+    /// `t_layer_serial(interior, comm, boundary)`.
+    pub serial_secs: f64,
+}
+
+/// Model one exchange under both schedules from its measured
+/// interior/comm/boundary bottleneck times.
+pub fn estimate_exchange(interior: f64, comm: f64, boundary: f64) -> ExchangeEstimate {
+    ExchangeEstimate {
+        overlap_secs: t_layer_overlap(interior, comm, boundary),
+        serial_secs: t_layer_serial(interior, comm, boundary),
+    }
+}
+
 /// The four ratios of Eqn 7.
 #[derive(Clone, Copy, Debug)]
 pub struct Ratios {
@@ -439,6 +460,14 @@ mod tests {
             // The hidden term is exactly min(interior, comm).
             assert!((se - ov - i.min(c)).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn exchange_estimate_matches_layer_models() {
+        let e = estimate_exchange(1.0, 0.5, 0.2);
+        assert!((e.overlap_secs - t_layer_overlap(1.0, 0.5, 0.2)).abs() < 1e-15);
+        assert!((e.serial_secs - t_layer_serial(1.0, 0.5, 0.2)).abs() < 1e-15);
+        assert!(e.overlap_secs <= e.serial_secs);
     }
 
     #[test]

@@ -1,0 +1,318 @@
+//! Telemetry acceptance tests (DESIGN.md §13): the observability
+//! subsystem must be strictly read-only and strictly opt-in.
+//!
+//! 1. **Overhead guard** — with telemetry off (the no-`--trace` path),
+//!    a 2-epoch `arxiv-xs` run is bit-identical — per-epoch loss bits
+//!    and `CommStats` wire bits — to a run where the tracer was never
+//!    constructed; and attaching the tracer + registry must *still* be
+//!    bit-identical, because spans and metrics only read state.
+//! 2. **Trace export** — the emitted Chrome/Perfetto JSON parses, every
+//!    event carries `ph`/`ts`/`pid`/`tid`/`cat`, `ts` is monotone per
+//!    `(pid, tid)`, complete spans nest properly per lane, every rank
+//!    thread contributes spans, and a panicking rank still flushes a
+//!    valid (truncated) trace.
+//! 3. **Metrics report** — one sealed epoch record per training epoch,
+//!    run totals consistent with the trainer's own `CommStats`, and a
+//!    parseable `supergcn.metrics.v1` document.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+use supergcn::comm::transport::TransportKind;
+use supergcn::comm::CommStats;
+use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
+use supergcn::coordinator::planner::prepare;
+use supergcn::coordinator::trainer::{TrainConfig, Trainer};
+use supergcn::datasets;
+use supergcn::obs::{span, Metric, MetricsRegistry, Telemetry, TraceCategory, Tracer};
+use supergcn::quant::Bits;
+use supergcn::sample::{SamplerConfig, SamplerKind};
+use supergcn::util::json::{to_pretty, Json};
+
+fn assert_loss_bits(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: epoch counts diverged");
+    for (e, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(
+            x.to_bits(),
+            y.to_bits(),
+            "{what}: epoch {e} loss diverged: {x} vs {y}"
+        );
+    }
+}
+
+fn assert_comm_equal(a: &CommStats, b: &CommStats, what: &str) {
+    assert_eq!(a.data_bits, b.data_bits, "{what}: data bits diverged");
+    assert_eq!(a.param_bits, b.param_bits, "{what}: param bits diverged");
+    assert_eq!(a.messages, b.messages, "{what}: message counts diverged");
+    assert_eq!(
+        a.modeled_send_secs, b.modeled_send_secs,
+        "{what}: modeled wire seconds diverged"
+    );
+    assert!(a.total_data_bytes() > 0.0, "{what}: no traffic — vacuous test");
+}
+
+/// A 2-epoch `arxiv-xs` full-batch run (int4 + overlap, so the quant
+/// pack/unpack and split-phase spans are all on the path), with the
+/// given telemetry attached.
+fn full_batch(transport: TransportKind, telemetry: Telemetry) -> (Vec<f32>, CommStats) {
+    let spec = datasets::by_name("arxiv-xs").unwrap();
+    let lg = spec.build();
+    let tc = TrainConfig {
+        epochs: 2,
+        lr: spec.lr,
+        quant: Some(Bits::Int4),
+        transport,
+        overlap: true,
+        seed: 42,
+        ..Default::default()
+    };
+    let (ctxs, mut cfg, _) = prepare(&lg, 4, tc.strategy, None, tc.seed).unwrap();
+    cfg.hidden = spec.hidden;
+    let mut tr = Trainer::new(ctxs, cfg, tc);
+    tr.telemetry = telemetry;
+    let losses = tr
+        .run(false)
+        .unwrap()
+        .iter()
+        .map(|s| s.train_loss)
+        .collect();
+    (losses, tr.comm_stats.clone())
+}
+
+/// A 2-epoch `arxiv-xs` neighbor-sampled mini-batch run with the given
+/// telemetry attached (covers the fetch request/reply spans).
+fn mini_batch(transport: TransportKind, telemetry: Telemetry) -> (Vec<f32>, CommStats) {
+    let spec = datasets::by_name("arxiv-xs").unwrap();
+    let lg = Arc::new(spec.build());
+    let mc = MiniBatchConfig {
+        epochs: 2,
+        lr: spec.lr,
+        hidden: spec.hidden,
+        quant: Some(Bits::Int4),
+        transport,
+        seed: 42,
+        ..Default::default()
+    };
+    let scfg = SamplerConfig {
+        batch_size: 128,
+        fanouts: vec![10, 5, 5],
+        seed: 42,
+        ..Default::default()
+    };
+    let mut tr = MiniBatchTrainer::new(lg, 3, SamplerKind::Neighbor, &scfg, mc).unwrap();
+    tr.telemetry = telemetry;
+    let losses = tr
+        .run(false)
+        .unwrap()
+        .iter()
+        .map(|s| s.train_loss)
+        .collect();
+    (losses, tr.comm_stats.clone())
+}
+
+#[test]
+fn full_batch_telemetry_off_and_on_are_bit_identical() {
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        // (a) Tracer never constructed: the trainer keeps its default
+        //     (both sinks None) — the exact no-CLI-flags build.
+        let (base_loss, base_comm) = full_batch(transport, Telemetry::default());
+        // (b) Both sinks attached: spans + metrics are read-only, so the
+        //     numerics must not move by a single bit.
+        let tracer = Tracer::new();
+        let metrics = MetricsRegistry::new();
+        let on = Telemetry {
+            tracer: Some(tracer.clone()),
+            metrics: Some(metrics.clone()),
+        };
+        let (on_loss, on_comm) = full_batch(transport, on);
+        let what = format!("full-batch telemetry {}", transport.name());
+        assert_loss_bits(&base_loss, &on_loss, &what);
+        assert_comm_equal(&base_comm, &on_comm, &what);
+        assert!(tracer.span_count() > 0, "{what}: enabled run recorded no spans");
+        assert_eq!(metrics.epoch_count(), 2, "{what}: epoch records");
+    }
+}
+
+#[test]
+fn mini_batch_telemetry_off_and_on_are_bit_identical() {
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        let (base_loss, base_comm) = mini_batch(transport, Telemetry::default());
+        let tracer = Tracer::new();
+        let on = Telemetry {
+            tracer: Some(tracer.clone()),
+            metrics: None,
+        };
+        let (on_loss, on_comm) = mini_batch(transport, on);
+        let what = format!("mini-batch telemetry {}", transport.name());
+        assert_loss_bits(&base_loss, &on_loss, &what);
+        assert_comm_equal(&base_comm, &on_comm, &what);
+        assert!(tracer.span_count() > 0, "{what}: enabled run recorded no spans");
+    }
+}
+
+#[test]
+fn threaded_trace_covers_every_rank_with_properly_nested_spans() {
+    let tracer = Tracer::new();
+    let telemetry = Telemetry {
+        tracer: Some(tracer.clone()),
+        metrics: None,
+    };
+    let _ = full_batch(TransportKind::Threaded, telemetry);
+    assert!(tracer.span_count() > 0);
+    assert_eq!(tracer.dropped_count(), 0, "a 2-epoch run must fit the ring");
+
+    let doc = tracer.to_chrome_json();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+
+    // Interval containment slack for f64 µs round-off; real spans are
+    // strictly RAII-nested per thread.
+    const EPS_US: f64 = 1e-3;
+    let mut pids: BTreeSet<usize> = BTreeSet::new();
+    let mut last_ts: BTreeMap<(usize, usize), f64> = BTreeMap::new();
+    // Per-lane stack of enclosing span end times.
+    let mut stacks: BTreeMap<(usize, usize), Vec<f64>> = BTreeMap::new();
+    for e in events {
+        for key in ["ph", "ts", "pid", "tid", "cat", "name"] {
+            assert!(e.get(key).is_some(), "event missing `{key}`: {e:?}");
+        }
+        let pid = e.get("pid").unwrap().as_usize().unwrap();
+        let tid = e.get("tid").unwrap().as_usize().unwrap();
+        let ts = e.get("ts").unwrap().as_f64().unwrap();
+        pids.insert(pid);
+        let lane = (pid, tid);
+        if let Some(prev) = last_ts.get(&lane) {
+            assert!(ts >= *prev, "ts not monotone on lane {lane:?}");
+        }
+        last_ts.insert(lane, ts);
+        if e.get("ph").unwrap().as_str() == Some("X") {
+            let dur = e.get("dur").unwrap().as_f64().unwrap();
+            assert!(dur >= 0.0);
+            let stack = stacks.entry(lane).or_default();
+            // Pop parents that ended before this span started...
+            while let Some(&end) = stack.last() {
+                if ts >= end - EPS_US {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            // ...then this span must fit inside the surviving parent.
+            if let Some(&end) = stack.last() {
+                assert!(
+                    ts + dur <= end + EPS_US,
+                    "span [{ts}, {}] on lane {lane:?} escapes its parent (ends {end})",
+                    ts + dur
+                );
+            }
+            stack.push(ts + dur);
+        }
+    }
+    for rank in 0..4 {
+        assert!(pids.contains(&rank), "no spans flushed from rank {rank}");
+    }
+}
+
+#[test]
+fn trace_write_roundtrips_as_valid_chrome_json() {
+    let tracer = Tracer::new();
+    {
+        let _scope = tracer.lane_scope(0, 0);
+        let _sp = span(TraceCategory::Phase, "roundtrip");
+    }
+    let mut p = std::env::temp_dir();
+    p.push(format!("supergcn-obs-roundtrip-{}.json", std::process::id()));
+    let path = p.to_string_lossy().into_owned();
+    tracer.write(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let parsed = Json::parse(&text).expect("trace file must be valid JSON");
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert_eq!(events.len(), 1);
+    assert_eq!(parsed.get("displayTimeUnit").unwrap().as_str(), Some("ms"));
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn panicking_rank_thread_still_flushes_a_valid_truncated_trace() {
+    let tracer = Tracer::new();
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        std::thread::scope(|scope| {
+            for rank in 0..2 {
+                let t = tracer.clone();
+                scope.spawn(move || {
+                    let _scope = t.lane_scope(rank, 0);
+                    let _sp = span(TraceCategory::Agg, "work");
+                    if rank == 1 {
+                        panic!("injected rank failure");
+                    }
+                });
+            }
+        });
+    }));
+    assert!(result.is_err(), "rank 1 must have panicked");
+    // Both lanes flush — the healthy one on normal drop, the unwound one
+    // via LaneScope's Drop during the panic.
+    assert!(
+        tracer.span_count() >= 2,
+        "unwound lane lost its spans: {}",
+        tracer.span_count()
+    );
+    let text = to_pretty(&tracer.to_chrome_json());
+    let parsed = Json::parse(&text).expect("post-panic trace must still parse");
+    for e in parsed.get("traceEvents").unwrap().as_arr().unwrap() {
+        for key in ["ph", "ts", "pid", "tid", "cat"] {
+            assert!(e.get(key).is_some(), "event missing `{key}`");
+        }
+    }
+}
+
+#[test]
+fn metrics_registry_reports_epochs_totals_and_exchanges() {
+    let metrics = MetricsRegistry::new();
+    let telemetry = Telemetry {
+        tracer: None,
+        metrics: Some(metrics.clone()),
+    };
+    let (losses, comm) = full_batch(TransportKind::Threaded, telemetry);
+    assert_eq!(metrics.epoch_count(), losses.len());
+
+    // Run-total counter vs the trainer's own accounting: same data, two
+    // summation orders, so compare with a relative tolerance.
+    let total = comm.total_data_bytes();
+    match metrics.total("comm.data.bytes") {
+        Some(Metric::Counter(v)) => {
+            assert!(v > 0.0);
+            assert!(
+                (v - total).abs() <= 1e-6 * total.max(1.0),
+                "registry {v} vs CommStats {total}"
+            );
+        }
+        other => panic!("comm.data.bytes missing or mistyped: {other:?}"),
+    }
+    match metrics.total("train.loss.nats") {
+        Some(Metric::Gauge(v)) => assert!(v.is_finite()),
+        other => panic!("train.loss.nats missing or mistyped: {other:?}"),
+    }
+
+    let text = to_pretty(&metrics.to_json());
+    let doc = Json::parse(&text).expect("metrics report must be valid JSON");
+    assert_eq!(doc.get("schema").unwrap().as_str(), Some("supergcn.metrics.v1"));
+    let epochs = doc.get("epochs").unwrap().as_arr().unwrap();
+    assert_eq!(epochs.len(), losses.len());
+    for e in epochs {
+        assert!(e.get("metrics").unwrap().as_obj().is_some());
+        // Overlap was on, so every epoch carries modeled-vs-measured
+        // exchange rows.
+        let ex = e.get("exchanges").unwrap().as_arr().unwrap();
+        assert!(!ex.is_empty(), "epoch without exchange rows");
+        for row in ex {
+            let i = row.get("interior_secs").unwrap().as_f64().unwrap();
+            let c = row.get("comm_secs").unwrap().as_f64().unwrap();
+            let b = row.get("boundary_secs").unwrap().as_f64().unwrap();
+            let ov = row.get("modeled_overlap_secs").unwrap().as_f64().unwrap();
+            let se = row.get("modeled_serial_secs").unwrap().as_f64().unwrap();
+            assert!(ov <= se + 1e-12, "overlap model exceeds serial model");
+            assert!(se <= i + c + b + 1e-9, "serial model inconsistent");
+        }
+    }
+    assert!(doc.get("totals").unwrap().as_obj().is_some());
+}
