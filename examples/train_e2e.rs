@@ -18,6 +18,7 @@ use supergcn::backend::xla::XlaBackend;
 use supergcn::backend::Backend;
 use supergcn::coordinator::planner::prepare;
 use supergcn::coordinator::trainer::{TrainConfig, Trainer};
+use supergcn::exec::{AggDispatch, AggKernel};
 use supergcn::graph::generate::sbm;
 use supergcn::graph::stats::stats;
 use supergcn::hier::volume::RemoteStrategy;
@@ -63,6 +64,13 @@ fn main() -> anyhow::Result<()> {
         // exchange — DESIGN.md §12.
         // CLI equivalent: `supergcn train --group-size 2`.
         group_size: 2,
+        // Aggregation + quant kernels route through the runtime-dispatched
+        // SIMD rung (AVX2 when detected, scalar fallback otherwise) —
+        // bit-exact with every other rung of the §4 ladder, so this is a
+        // pure performance knob (DESIGN.md §14).
+        // CLI equivalent: `supergcn train --agg-kernel simd`
+        // (the default `auto` already prefers it when the ISA is there).
+        agg: AggDispatch::default().with_kernel(AggKernel::Simd),
         ..Default::default()
     };
     let (ctxs, cfg, _) = prepare(&lg, 4, tc.strategy, Some(shape_cfg), tc.seed)?;

@@ -8,12 +8,22 @@
 //! dispatcher's tunable work threshold (`--agg-threshold` on the CLI).
 //! This harness sweeps (nnz, f) and reports where each form wins, the
 //! data behind the `Auto` heuristic.
+//!
+//! A second section sweeps the scalar-vs-SIMD crossover (DESIGN.md §14):
+//! fixed-run-length segment sums (run length 1 drives the single-source
+//! fast path) and quant pack/unpack, asserting bitwise parity with the
+//! scalar rungs on every problem and reporting — never gating — the
+//! measured speedup. Set `SUPERGCN_AGG_BENCH_JSON=<path>` to export the
+//! `simd` block (detected ISA, per-problem timings) as JSON.
 
 use std::time::Instant;
+use supergcn::agg::simd;
 use supergcn::agg::spmm::CsrMatrix;
 use supergcn::exec::{AggDispatch, AggKernel};
 use supergcn::exp::Table;
 use supergcn::graph::generate::rmat;
+use supergcn::quant::{self, fused, Bits};
+use supergcn::util::json::{to_pretty, Json};
 use supergcn::util::rng::Rng;
 
 fn bench_ms(reps: usize, mut f: impl FnMut()) -> f64 {
@@ -102,4 +112,163 @@ fn main() {
          `supergcn train --agg-kernel` / tune with `--agg-threshold`.",
         supergcn::agg::spmm::SPMM_PARALLEL_MIN_NNZ
     );
+
+    // ---- scalar vs SIMD crossover (DESIGN.md §14) --------------------
+    // Fixed-run-length problems isolate the accumulate inner loop the
+    // AVX2 rung vectorizes: run length 1 drives the single-source fast
+    // path, longer runs the accumulator zones. Bitwise parity with the
+    // scalar blocked kernel is asserted on every problem; the speedup is
+    // reported (and exported as the JSON `simd` block) but never gated.
+    let simd_feats: &[usize] = &[15, 16, 64, 256];
+    let run_lens: &[usize] = if smoke { &[1, 8] } else { &[1, 4, 32] };
+    let n_seg: usize = if smoke { 2_000 } else { 16_000 };
+    let blocked = AggDispatch::default().with_kernel(AggKernel::Blocked);
+    let simd_disp = AggDispatch::default().with_kernel(AggKernel::Simd);
+    let mut simd_table = Table::new(
+        &format!(
+            "scalar vs SIMD segment-sum (ms, lower is better; detected isa = {})",
+            simd::isa().name()
+        ),
+        &["f", "run-len", "nnz", "seg-blocked", "seg-simd", "speedup", "parity"],
+    );
+    let mut simd_rows: Vec<Json> = Vec::new();
+    for &run in run_lens {
+        let m = n_seg * run;
+        let mut sgather = Vec::with_capacity(m);
+        let mut sseg = Vec::with_capacity(m);
+        for s in 0..n_seg {
+            for _ in 0..run {
+                sgather.push(rng.index(n_seg) as u32);
+                sseg.push(s as u32);
+            }
+        }
+        for &f in simd_feats {
+            let h: Vec<f32> = (0..n_seg * f).map(|_| rng.f32() - 0.5).collect();
+            let mut out_blk = vec![0f32; n_seg * f];
+            let mut out_simd = vec![0f32; n_seg * f];
+            blocked.segment_sum(&h, f, &sgather, &sseg, n_seg, &mut out_blk);
+            simd_disp.segment_sum(&h, f, &sgather, &sseg, n_seg, &mut out_simd);
+            let parity = out_blk
+                .iter()
+                .zip(out_simd.iter())
+                .all(|(a, b)| a.to_bits() == b.to_bits());
+            assert!(parity, "SIMD rung diverged from blocked at f={f} run={run}");
+            let t_blk = bench_ms(reps, || {
+                out_blk.iter_mut().for_each(|x| *x = 0.0);
+                blocked.segment_sum(&h, f, &sgather, &sseg, n_seg, &mut out_blk);
+            });
+            let t_simd = bench_ms(reps, || {
+                out_simd.iter_mut().for_each(|x| *x = 0.0);
+                simd_disp.segment_sum(&h, f, &sgather, &sseg, n_seg, &mut out_simd);
+            });
+            let speedup = t_blk / t_simd;
+            simd_table.row(vec![
+                f.to_string(),
+                run.to_string(),
+                m.to_string(),
+                format!("{t_blk:.3}"),
+                format!("{t_simd:.3}"),
+                format!("{speedup:.2}x"),
+                "bitwise".to_string(),
+            ]);
+            simd_rows.push(Json::obj(vec![
+                ("f", Json::Num(f as f64)),
+                ("run_len", Json::Num(run as f64)),
+                ("nnz", Json::Num(m as f64)),
+                ("blocked_ms", Json::Num(t_blk)),
+                ("simd_ms", Json::Num(t_simd)),
+                ("speedup", Json::Num(speedup)),
+                ("parity", Json::Bool(parity)),
+            ]));
+        }
+    }
+    simd_table.print();
+
+    // Vectorized quant pack/unpack vs the scalar fused path. Same
+    // contract: wire bytes and group params are asserted bit-identical,
+    // timing is reported only.
+    let q_rows: usize = if smoke { 1_024 } else { 8_192 };
+    let q_cols = 64usize;
+    let qx: Vec<f32> = (0..q_rows * q_cols).map(|_| rng.f32() * 2.0 - 1.0).collect();
+    let mut quant_table = Table::new(
+        "scalar vs SIMD quant pack/unpack (ms, lower is better)",
+        &["bits", "fused-pack", "simd-pack", "pack-speedup", "fused-unpack", "simd-unpack"],
+    );
+    let mut quant_rows: Vec<Json> = Vec::new();
+    for bits in [Bits::Int2, Bits::Int4, Bits::Int8] {
+        let qa = fused::quantize(&qx, q_rows, q_cols, bits, 9);
+        let qb = quant::simd::quantize(&qx, q_rows, q_cols, bits, 9);
+        assert_eq!(qa.data, qb.data, "quant wire bytes diverged ({})", bits.name());
+        assert!(
+            qa.params
+                .iter()
+                .zip(qb.params.iter())
+                .all(|(a, b)| a.0.to_bits() == b.0.to_bits() && a.1.to_bits() == b.1.to_bits()),
+            "quant params diverged ({})",
+            bits.name()
+        );
+        let mut deq_a = vec![0f32; q_rows * q_cols];
+        let mut deq_b = vec![0f32; q_rows * q_cols];
+        fused::dequantize_into(&qa, &mut deq_a);
+        quant::simd::dequantize_into(&qb, &mut deq_b);
+        assert!(
+            deq_a.iter().zip(deq_b.iter()).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "dequant diverged ({})",
+            bits.name()
+        );
+        let (mut params, mut data) = (Vec::new(), Vec::new());
+        let t_pack_f = bench_ms(reps, || {
+            fused::quantize_into(&qx, q_rows, q_cols, bits, 9, &mut params, &mut data);
+        });
+        let t_pack_s = bench_ms(reps, || {
+            quant::simd::quantize_into(&qx, q_rows, q_cols, bits, 9, &mut params, &mut data);
+        });
+        let t_unpack_f = bench_ms(reps, || fused::dequantize_into(&qa, &mut deq_a));
+        let t_unpack_s = bench_ms(reps, || quant::simd::dequantize_into(&qb, &mut deq_b));
+        quant_table.row(vec![
+            bits.name().to_string(),
+            format!("{t_pack_f:.3}"),
+            format!("{t_pack_s:.3}"),
+            format!("{:.2}x", t_pack_f / t_pack_s),
+            format!("{t_unpack_f:.3}"),
+            format!("{t_unpack_s:.3}"),
+        ]);
+        quant_rows.push(Json::obj(vec![
+            ("bits", Json::Str(bits.name().to_string())),
+            ("fused_pack_ms", Json::Num(t_pack_f)),
+            ("simd_pack_ms", Json::Num(t_pack_s)),
+            ("pack_speedup", Json::Num(t_pack_f / t_pack_s)),
+            ("fused_unpack_ms", Json::Num(t_unpack_f)),
+            ("simd_unpack_ms", Json::Num(t_unpack_s)),
+            ("parity", Json::Bool(true)),
+        ]));
+    }
+    quant_table.print();
+    println!(
+        "\nSIMD rung: isa = {} ({}); parity asserted bitwise on every problem above.",
+        simd::isa().name(),
+        if simd::simd_active() { "vector path" } else { "scalar fallback" }
+    );
+
+    // ---- optional JSON artifact (CI: AGG_ci.json) --------------------
+    // Deliberately a separate env var / file from SUPERGCN_BENCH_JSON:
+    // `benchcmp` gates on BENCH_ci.json and must not see this schema.
+    if let Ok(path) = std::env::var("SUPERGCN_AGG_BENCH_JSON") {
+        let doc = Json::obj(vec![
+            ("bench", Json::Str("agg_dispatch".to_string())),
+            ("smoke", Json::Bool(smoke)),
+            (
+                "simd",
+                Json::obj(vec![
+                    ("isa", Json::Str(simd::isa().name().to_string())),
+                    ("active", Json::Bool(simd::simd_active())),
+                    ("parity", Json::Bool(true)),
+                    ("segment_sum", Json::Arr(simd_rows)),
+                    ("quant", Json::Arr(quant_rows)),
+                ]),
+            ),
+        ]);
+        std::fs::write(&path, to_pretty(&doc)).expect("write agg bench json");
+        println!("wrote {path}");
+    }
 }

@@ -22,9 +22,14 @@
 //! of contribution `i`) and non-decreasing `seg[i]` (destination segment),
 //! `out[seg[i]] += h[gather[i]]`. Local-edge aggregation, pre-aggregation
 //! partials, and index_add all reduce to it.
+//!
+//! On top of the ladder, [`simd`] is the explicitly vectorized rung:
+//! runtime-dispatched AVX2 intrinsics (scalar fallback elsewhere) that are
+//! **bitwise identical** to the scalar kernels — DESIGN.md §14.
 
 pub mod blocked;
 pub mod parallel;
+pub mod simd;
 pub mod spmm;
 pub mod sorted;
 pub mod vanilla;

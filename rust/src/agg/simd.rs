@@ -1,0 +1,526 @@
+//! Explicitly vectorized aggregation kernels with runtime ISA dispatch —
+//! the hand-tuned rung of the §4 ladder (DESIGN.md §14).
+//!
+//! The scalar ladder (`blocked`/`parallel`/`spmm`) *hopes* for
+//! auto-vectorization; this module writes the vectors out by hand. On
+//! `x86_64` hosts where `is_x86_feature_detected!("avx2")` reports AVX2,
+//! every entry point routes to `core::arch` intrinsics behind
+//! `#[target_feature(enable = "avx2")]`; everywhere else it falls back to
+//! the portable scalar kernels (`blocked::segment_sum`,
+//! `spmm::spmm_blocked`, …) — no new dependencies, offline build
+//! preserved.
+//!
+//! **Bit-exactness contract.** Every kernel here is bitwise identical
+//! (`to_bits()`) to its scalar twin, because vectorization happens only
+//! across *feature lanes*: each output element is still the same chain of
+//! IEEE-754 single adds, in the same order, as the scalar kernel
+//! produces. Three rules keep that true (DESIGN.md §14):
+//!
+//! 1. the per-destination accumulation mirrors
+//!    [`blocked::accumulate_run`]'s three zones exactly — the
+//!    single-source fast path (direct `dst += src`), zero-initialized
+//!    accumulators over columns `0..f/LANE*LANE`, and the
+//!    direct-accumulation scalar tail;
+//! 2. **no FMA**: the weighted kernels round the product before the add
+//!    (`_mm256_mul_ps` + `_mm256_add_ps`), exactly like the scalar
+//!    `acc[j] += w * src[j]`;
+//! 3. accumulator *width* is free (a wider chunk only regroups which
+//!    column lives in which register, never the per-element add order) —
+//!    which is what lets the AVX2 path run cache-blocked 64-column macro
+//!    tiles (8 `ymm` accumulators, each gathered source row traversed
+//!    `f/64` times instead of `f/16`).
+//!
+//! The irregular gathers get software prefetch: while streaming the first
+//! column chunk of a run, the row [`PREFETCH_DIST`] gathers ahead is
+//! prefetched (`_mm_prefetch`, T0), hiding the DRAM latency of the next
+//! random source row behind the current row's arithmetic.
+
+use super::blocked;
+use super::spmm::{self, CsrMatrix};
+
+/// Which instruction set the runtime dispatcher selected for this process.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdIsa {
+    /// 256-bit AVX2 intrinsics path.
+    Avx2,
+    /// Portable scalar fallback (delegates to the `blocked`/`spmm`
+    /// kernels).
+    Scalar,
+}
+
+impl SimdIsa {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdIsa::Avx2 => "avx2",
+            SimdIsa::Scalar => "scalar",
+        }
+    }
+}
+
+fn detect() -> SimdIsa {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdIsa::Avx2;
+        }
+    }
+    SimdIsa::Scalar
+}
+
+/// The ISA the dispatcher uses, detected once per process (the CPUID
+/// probe is not free; the result cannot change while we run).
+pub fn isa() -> SimdIsa {
+    static ISA: std::sync::OnceLock<SimdIsa> = std::sync::OnceLock::new();
+    *ISA.get_or_init(detect)
+}
+
+/// True when an explicit vector path (not the scalar fallback) is active.
+pub fn simd_active() -> bool {
+    isa() != SimdIsa::Scalar
+}
+
+/// `out[seg[i]] += h[gather[i]]`, `seg` non-decreasing — bitwise
+/// identical to [`blocked::segment_sum`].
+pub fn segment_sum(h: &[f32], f: usize, gather: &[u32], seg: &[u32], out: &mut [f32]) {
+    assert_eq!(gather.len(), seg.len());
+    debug_assert!(super::is_sorted_segs(seg));
+    #[cfg(target_arch = "x86_64")]
+    {
+        if isa() == SimdIsa::Avx2 {
+            // SAFETY: AVX2 presence was verified at runtime by `isa()`.
+            unsafe { avx2::segment_sum(h, f, gather, seg, out) };
+            return;
+        }
+    }
+    blocked::segment_sum(h, f, gather, seg, out)
+}
+
+/// Subset-restricted segment sum over the destination rows in `rows`
+/// (strictly increasing; CSR-style `seg_offsets` from
+/// [`blocked::segment_offsets`]) — bitwise identical to
+/// [`blocked::segment_sum_rows`].
+pub fn segment_sum_rows(
+    h: &[f32],
+    f: usize,
+    gather: &[u32],
+    seg_offsets: &[usize],
+    rows: &[u32],
+    out: &mut [f32],
+) {
+    debug_assert!(rows.windows(2).all(|w| w[0] < w[1]), "rows must be strictly increasing");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if isa() == SimdIsa::Avx2 {
+            // SAFETY: AVX2 presence was verified at runtime by `isa()`.
+            unsafe { avx2::segment_sum_rows(h, f, gather, seg_offsets, rows, out) };
+            return;
+        }
+    }
+    blocked::segment_sum_rows(h, f, gather, seg_offsets, rows, out)
+}
+
+/// Weighted SpMM `out += A · h` — bitwise identical to
+/// [`spmm::spmm_blocked`].
+pub fn spmm(a: &CsrMatrix, h: &[f32], f: usize, out: &mut [f32]) {
+    assert_eq!(h.len(), a.n_cols * f);
+    assert_eq!(out.len(), a.n_rows * f);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if isa() == SimdIsa::Avx2 {
+            // SAFETY: AVX2 presence was verified at runtime by `isa()`.
+            unsafe { avx2::spmm(a, h, f, out) };
+            return;
+        }
+    }
+    spmm::spmm_blocked(a, h, f, out)
+}
+
+/// Transpose scatter `out[col] += w · d[row]` — bitwise identical to
+/// [`spmm::spmm_transpose`].
+pub fn spmm_t(a: &CsrMatrix, d: &[f32], f: usize, out: &mut [f32]) {
+    assert_eq!(d.len(), a.n_rows * f);
+    assert_eq!(out.len(), a.n_cols * f);
+    #[cfg(target_arch = "x86_64")]
+    {
+        if isa() == SimdIsa::Avx2 {
+            // SAFETY: AVX2 presence was verified at runtime by `isa()`.
+            unsafe { avx2::spmm_t(a, d, f, out) };
+            return;
+        }
+    }
+    spmm::spmm_transpose(a, d, f, out)
+}
+
+/// Gather rows prefetched ahead of the one being accumulated (measured
+/// sweet spot for ~64–256-float rows: far enough to cover a DRAM fetch
+/// behind one row's adds, near enough not to thrash L1 on short runs —
+/// DESIGN.md §14).
+pub const PREFETCH_DIST: usize = 4;
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::super::spmm::CsrMatrix;
+    use super::PREFETCH_DIST;
+    use core::arch::x86_64::*;
+
+    /// Must match `blocked::LANE`: the accumulator region of the scalar
+    /// kernel covers columns `0..f/LANE*LANE` and the SIMD kernel must
+    /// cover exactly the same region with accumulators (the tail uses a
+    /// different — direct — rounding association).
+    const LANE: usize = 16;
+    /// Cache-blocked macro tile: 64 floats (4 cache lines) of the
+    /// destination live in 8 `ymm` accumulators across a whole run.
+    const WIDE: usize = 64;
+
+    #[inline]
+    unsafe fn prefetch_row(h: &[f32], row: usize, f: usize) {
+        // SAFETY: prefetch has no architectural effect; the address is
+        // in-bounds for any valid gather row anyway.
+        unsafe { _mm_prefetch::<_MM_HINT_T0>(h.as_ptr().add(row * f) as *const i8) };
+    }
+
+    /// `dst += src`, 8-wide — the single-source fast path (per element
+    /// one add, same as the scalar fused add).
+    #[target_feature(enable = "avx2")]
+    unsafe fn add_row(src: &[f32], dst: &mut [f32]) {
+        let n = dst.len();
+        let full = n / 8 * 8;
+        let mut i = 0usize;
+        while i < full {
+            let d = dst.as_mut_ptr().add(i);
+            let v = _mm256_add_ps(_mm256_loadu_ps(d), _mm256_loadu_ps(src.as_ptr().add(i)));
+            _mm256_storeu_ps(d, v);
+            i += 8;
+        }
+        for i in full..n {
+            dst[i] += src[i];
+        }
+    }
+
+    /// AVX2 twin of `blocked::accumulate_run` — three zones, identical
+    /// per-element accumulation order (see module docs).
+    #[target_feature(enable = "avx2")]
+    unsafe fn accumulate_run(h: &[f32], f: usize, gathers: &[u32], dst: &mut [f32]) {
+        if let [g] = gathers {
+            let src = &h[*g as usize * f..(*g as usize + 1) * f];
+            add_row(src, dst);
+            return;
+        }
+        let full = f / LANE * LANE;
+        let mut col = 0usize;
+        // Cache-blocked macro chunks: fewer re-traversals of the gathered
+        // source rows than the scalar kernel's 16-wide chunks, same
+        // per-element add order (accumulator width is free).
+        while col + WIDE <= full {
+            let mut acc = [_mm256_setzero_ps(); WIDE / 8];
+            for (k, &g) in gathers.iter().enumerate() {
+                let base = g as usize * f + col;
+                let src = &h[base..base + WIDE];
+                if col == 0 && k + PREFETCH_DIST < gathers.len() {
+                    prefetch_row(h, gathers[k + PREFETCH_DIST] as usize, f);
+                }
+                for (j, a) in acc.iter_mut().enumerate() {
+                    *a = _mm256_add_ps(*a, _mm256_loadu_ps(src.as_ptr().add(8 * j)));
+                }
+            }
+            let d = &mut dst[col..col + WIDE];
+            for (j, a) in acc.iter().enumerate() {
+                let p = d.as_mut_ptr().add(8 * j);
+                _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), *a));
+            }
+            col += WIDE;
+        }
+        // LANE-wide chunks — the remainder of the scalar accumulator
+        // region when f mod 64 ∈ {16, 32, 48}.
+        while col < full {
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            for (k, &g) in gathers.iter().enumerate() {
+                let base = g as usize * f + col;
+                let src = &h[base..base + LANE];
+                if col == 0 && k + PREFETCH_DIST < gathers.len() {
+                    prefetch_row(h, gathers[k + PREFETCH_DIST] as usize, f);
+                }
+                a0 = _mm256_add_ps(a0, _mm256_loadu_ps(src.as_ptr()));
+                a1 = _mm256_add_ps(a1, _mm256_loadu_ps(src.as_ptr().add(8)));
+            }
+            let d = dst[col..col + LANE].as_mut_ptr();
+            _mm256_storeu_ps(d, _mm256_add_ps(_mm256_loadu_ps(d), a0));
+            let d1 = d.add(8);
+            _mm256_storeu_ps(d1, _mm256_add_ps(_mm256_loadu_ps(d1), a1));
+            col += LANE;
+        }
+        // Scalar tail: direct accumulation, exactly the scalar kernel's
+        // tail association (mixed acc/direct zones must match the twin).
+        if col < f {
+            for &g in gathers {
+                let src = &h[g as usize * f..(g as usize + 1) * f];
+                for i in col..f {
+                    dst[i] += src[i];
+                }
+            }
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn segment_sum(h: &[f32], f: usize, gather: &[u32], seg: &[u32], out: &mut [f32]) {
+        let m = gather.len();
+        let mut run_start = 0usize;
+        while run_start < m {
+            let s = seg[run_start];
+            let mut run_end = run_start + 1;
+            while run_end < m && seg[run_end] == s {
+                run_end += 1;
+            }
+            let dst = &mut out[s as usize * f..(s as usize + 1) * f];
+            accumulate_run(h, f, &gather[run_start..run_end], dst);
+            run_start = run_end;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn segment_sum_rows(
+        h: &[f32],
+        f: usize,
+        gather: &[u32],
+        seg_offsets: &[usize],
+        rows: &[u32],
+        out: &mut [f32],
+    ) {
+        for &r in rows {
+            let s = r as usize;
+            let (a, b) = (seg_offsets[s], seg_offsets[s + 1]);
+            if a == b {
+                continue;
+            }
+            accumulate_run(h, f, &gather[a..b], &mut out[s * f..(s + 1) * f]);
+        }
+    }
+
+    /// AVX2 twin of `spmm::spmm_rows` over all rows: accumulators cover
+    /// `0..f/LANE*LANE`, product rounded before the add (no FMA), direct
+    /// scalar tail.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn spmm(a: &CsrMatrix, h: &[f32], f: usize, out: &mut [f32]) {
+        let full = f / LANE * LANE;
+        for r in 0..a.n_rows {
+            let (s, e) = (a.row_ptr[r], a.row_ptr[r + 1]);
+            if s == e {
+                continue;
+            }
+            let o = &mut out[r * f..(r + 1) * f];
+            let mut col = 0usize;
+            while col + WIDE <= full {
+                let mut acc = [_mm256_setzero_ps(); WIDE / 8];
+                for i in s..e {
+                    let c = a.col_idx[i] as usize;
+                    let w = _mm256_set1_ps(a.weights[i]);
+                    if col == 0 && i + PREFETCH_DIST < e {
+                        prefetch_row(h, a.col_idx[i + PREFETCH_DIST] as usize, f);
+                    }
+                    let src = &h[c * f + col..c * f + col + WIDE];
+                    for (j, aj) in acc.iter_mut().enumerate() {
+                        let v = _mm256_loadu_ps(src.as_ptr().add(8 * j));
+                        *aj = _mm256_add_ps(*aj, _mm256_mul_ps(w, v));
+                    }
+                }
+                let d = &mut o[col..col + WIDE];
+                for (j, aj) in acc.iter().enumerate() {
+                    let p = d.as_mut_ptr().add(8 * j);
+                    _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), *aj));
+                }
+                col += WIDE;
+            }
+            while col < full {
+                let mut a0 = _mm256_setzero_ps();
+                let mut a1 = _mm256_setzero_ps();
+                for i in s..e {
+                    let c = a.col_idx[i] as usize;
+                    let w = _mm256_set1_ps(a.weights[i]);
+                    if col == 0 && i + PREFETCH_DIST < e {
+                        prefetch_row(h, a.col_idx[i + PREFETCH_DIST] as usize, f);
+                    }
+                    let src = &h[c * f + col..c * f + col + LANE];
+                    a0 = _mm256_add_ps(a0, _mm256_mul_ps(w, _mm256_loadu_ps(src.as_ptr())));
+                    a1 = _mm256_add_ps(a1, _mm256_mul_ps(w, _mm256_loadu_ps(src.as_ptr().add(8))));
+                }
+                let d = o[col..col + LANE].as_mut_ptr();
+                _mm256_storeu_ps(d, _mm256_add_ps(_mm256_loadu_ps(d), a0));
+                let d1 = d.add(8);
+                _mm256_storeu_ps(d1, _mm256_add_ps(_mm256_loadu_ps(d1), a1));
+                col += LANE;
+            }
+            if col < f {
+                for i in s..e {
+                    let c = a.col_idx[i] as usize;
+                    let w = a.weights[i];
+                    for j in col..f {
+                        o[j] += w * h[c * f + j];
+                    }
+                }
+            }
+        }
+    }
+
+    /// AVX2 twin of `spmm::spmm_transpose`: per edge one fused
+    /// `dst += w·src` row sweep (each element: round product, then add),
+    /// keeping the scalar kernel's `w == 0` skip.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn spmm_t(a: &CsrMatrix, d: &[f32], f: usize, out: &mut [f32]) {
+        let full = f / 8 * 8;
+        for r in 0..a.n_rows {
+            let src = &d[r * f..(r + 1) * f];
+            for i in a.row_ptr[r]..a.row_ptr[r + 1] {
+                let w = a.weights[i];
+                if w == 0.0 {
+                    continue;
+                }
+                let c = a.col_idx[i] as usize;
+                if i + PREFETCH_DIST < a.row_ptr[r + 1] {
+                    prefetch_row(out, a.col_idx[i + PREFETCH_DIST] as usize, f);
+                }
+                let dst = &mut out[c * f..(c + 1) * f];
+                let wv = _mm256_set1_ps(w);
+                let mut j = 0usize;
+                while j < full {
+                    let p = dst.as_mut_ptr().add(j);
+                    let v = _mm256_mul_ps(wv, _mm256_loadu_ps(src.as_ptr().add(j)));
+                    _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), v));
+                    j += 8;
+                }
+                for j in full..f {
+                    dst[j] += w * src[j];
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agg::testutil::random_problem;
+    use crate::agg::vanilla;
+    use crate::graph::generate::rmat;
+    use crate::util::rng::Rng;
+
+    fn assert_bits(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit mismatch at {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn isa_detection_is_stable() {
+        assert_eq!(isa(), isa());
+        assert!(!isa().name().is_empty());
+        #[cfg(target_arch = "x86_64")]
+        assert_eq!(simd_active(), is_x86_feature_detected!("avx2"));
+    }
+
+    #[test]
+    fn segment_sum_matches_blocked_bitwise_across_widths() {
+        // f sweeps every zone mix: tail-only (<16), LANE-exact, LANE+tail,
+        // WIDE-exact, WIDE+LANE+tail.
+        let mut rng = Rng::new(41);
+        for &f in &[1usize, 7, 15, 16, 24, 33, 64, 80, 100, 256] {
+            let (h, gather, seg) = random_problem(&mut rng, 60, 40, 500, f);
+            let mut want = vec![0f32; 40 * f];
+            blocked::segment_sum(&h, f, &gather, &seg, &mut want);
+            let mut got = vec![0f32; 40 * f];
+            segment_sum(&h, f, &gather, &seg, &mut got);
+            assert_bits(&want, &got, &format!("segment_sum f={f}"));
+        }
+    }
+
+    #[test]
+    fn single_source_fast_path_matches_bitwise() {
+        // One contribution per destination exercises the fast path; a
+        // pre-filled out buffer checks the `+=` contract.
+        let mut rng = Rng::new(5);
+        let f = 37;
+        let h: Vec<f32> = (0..20 * f).map(|_| rng.f32() - 0.5).collect();
+        let gather: Vec<u32> = (0..12).map(|_| rng.index(20) as u32).collect();
+        let seg: Vec<u32> = (0..12u32).collect();
+        let init: Vec<f32> = (0..12 * f).map(|_| rng.f32()).collect();
+        let mut want = init.clone();
+        blocked::segment_sum(&h, f, &gather, &seg, &mut want);
+        let mut got = init;
+        segment_sum(&h, f, &gather, &seg, &mut got);
+        assert_bits(&want, &got, "single-source");
+    }
+
+    #[test]
+    fn empty_problem_is_noop() {
+        let mut out = vec![1.5f32; 8];
+        segment_sum(&[], 2, &[], &[], &mut out);
+        assert_eq!(out, vec![1.5f32; 8]);
+    }
+
+    #[test]
+    fn rows_subset_matches_blocked_bitwise() {
+        let mut rng = Rng::new(13);
+        let (n_seg, f) = (33, 19);
+        let (h, gather, seg) = random_problem(&mut rng, 50, n_seg, 400, f);
+        let off = blocked::segment_offsets(&seg, n_seg);
+        let rows: Vec<u32> = (0..n_seg as u32).filter(|r| r % 3 != 1).collect();
+        let mut want = vec![0f32; n_seg * f];
+        blocked::segment_sum_rows(&h, f, &gather, &off, &rows, &mut want);
+        let mut got = vec![0f32; n_seg * f];
+        segment_sum_rows(&h, f, &gather, &off, &rows, &mut got);
+        assert_bits(&want, &got, "segment_sum_rows");
+    }
+
+    #[test]
+    fn spmm_matches_blocked_bitwise_across_widths() {
+        let mut rng = Rng::new(3);
+        let g = rmat(8, 6.0, 0.57, 0.19, 0.19, false, 9);
+        let mut a = CsrMatrix::from_graph(&g);
+        for w in &mut a.weights {
+            *w = rng.f32() * 2.0 - 1.0;
+        }
+        for &f in &[1usize, 8, 16, 31, 64, 96, 130] {
+            let h: Vec<f32> = (0..g.n * f).map(|_| rng.f32() - 0.5).collect();
+            let mut want = vec![0f32; g.n * f];
+            spmm::spmm_blocked(&a, &h, f, &mut want);
+            let mut got = vec![0f32; g.n * f];
+            spmm(&a, &h, f, &mut got);
+            assert_bits(&want, &got, &format!("spmm f={f}"));
+        }
+    }
+
+    #[test]
+    fn spmm_t_matches_transpose_bitwise_including_zero_weights() {
+        let mut rng = Rng::new(7);
+        let g = rmat(7, 5.0, 0.57, 0.19, 0.19, false, 2);
+        let mut a = CsrMatrix::from_graph(&g);
+        for (i, w) in a.weights.iter_mut().enumerate() {
+            // Sprinkle exact zeros: the skip must match the scalar twin.
+            *w = if i % 5 == 0 { 0.0 } else { rng.f32() - 0.5 };
+        }
+        for &f in &[3usize, 16, 40, 72] {
+            let d: Vec<f32> = (0..g.n * f).map(|_| rng.f32() - 0.5).collect();
+            let mut want = vec![0f32; g.n * f];
+            spmm::spmm_transpose(&a, &d, f, &mut want);
+            let mut got = vec![0f32; g.n * f];
+            spmm_t(&a, &d, f, &mut got);
+            assert_bits(&want, &got, &format!("spmm_t f={f}"));
+        }
+    }
+
+    #[test]
+    fn agrees_with_vanilla_closely() {
+        // Sanity beyond the bitwise twin: the simd rung is still the same
+        // mathematical operator as the unoptimized scatter.
+        let mut rng = Rng::new(19);
+        let (h, gather, seg) = random_problem(&mut rng, 40, 25, 300, 21);
+        let mut want = vec![0f32; 25 * 21];
+        vanilla::segment_sum(&h, 21, &gather, &seg, &mut want);
+        let mut got = vec![0f32; 25 * 21];
+        segment_sum(&h, 21, &gather, &seg, &mut got);
+        for (a, b) in want.iter().zip(got.iter()) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+}

@@ -672,7 +672,7 @@ mod tests {
         // The dispatcher's kernel choice is an algorithm-preserving
         // transformation: every §4 kernel trains the same trajectory.
         let base = train(2, TrainConfig { epochs: 4, ..Default::default() }, 300);
-        for kernel in [AggKernel::Vanilla, AggKernel::Parallel, AggKernel::Spmm] {
+        for kernel in [AggKernel::Vanilla, AggKernel::Parallel, AggKernel::Spmm, AggKernel::Simd] {
             let tc = TrainConfig {
                 epochs: 4,
                 agg: AggDispatch::default().with_kernel(kernel).with_threads(2),

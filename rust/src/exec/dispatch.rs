@@ -10,17 +10,28 @@
 //!   `agg::spmm::spmm_parallel`),
 //! * `spmm` — force the CSR/SpMM operator form: segment-sum problems are
 //!   converted to a unit-weight CSR and run through `agg::spmm` (the
-//!   crossover the `agg_dispatch` bench measures).
+//!   crossover the `agg_dispatch` bench measures),
+//! * `simd` — explicit AVX2 intrinsics behind runtime ISA dispatch
+//!   (`agg::simd`, DESIGN.md §14); bitwise identical to the scalar rungs,
+//!   scalar fallback on hosts without the ISA.
 //!
-//! `Auto` picks by shape: serial register-blocked kernels below
+//! `Auto` picks by shape: serial kernels below
 //! [`AggDispatch::parallel_min_work`] contributions (the nnz fallback
-//! threshold that used to be hard-coded in `agg::spmm`), the 2D-parallel
-//! driver above it when the dispatcher owns more than one thread.
+//! threshold that used to be hard-coded in `agg::spmm`) — preferring the
+//! SIMD rung, which self-falls-back to `blocked` when no vector ISA is
+//! detected — and the 2D-parallel driver above the threshold when the
+//! dispatcher owns more than one thread.
+//!
+//! Quantization on the comm hot path routes through the dispatcher too
+//! ([`AggDispatch::quantize`]/[`AggDispatch::dequantize`]): `Simd` forces
+//! the vectorized `quant::simd` kernels, `Auto` prefers them when
+//! detected, everything else keeps `quant::fused` — all wire-bit-identical.
 
 use crate::agg::spmm::{
     spmm_blocked, spmm_parallel_with_threshold, spmm_transpose, spmm_vanilla, CsrMatrix,
 };
-use crate::agg::{blocked, parallel, vanilla};
+use crate::agg::{blocked, parallel, simd, vanilla};
+use crate::quant::{self, Bits, Quantized};
 
 /// Which §4 kernel family to use (CLI: `supergcn train --agg-kernel …`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -37,16 +48,20 @@ pub enum AggKernel {
     Parallel,
     /// The SpMM operator form (segment sums converted to unit-weight CSR).
     Spmm,
+    /// Explicit AVX2 intrinsics (runtime-dispatched, scalar fallback);
+    /// bitwise identical to the scalar rungs — DESIGN.md §14.
+    Simd,
 }
 
 impl AggKernel {
-    pub const ALL: [AggKernel; 6] = [
+    pub const ALL: [AggKernel; 7] = [
         AggKernel::Auto,
         AggKernel::Vanilla,
         AggKernel::Sorted,
         AggKernel::Blocked,
         AggKernel::Parallel,
         AggKernel::Spmm,
+        AggKernel::Simd,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -57,6 +72,7 @@ impl AggKernel {
             AggKernel::Blocked => "blocked",
             AggKernel::Parallel => "parallel",
             AggKernel::Spmm => "spmm",
+            AggKernel::Simd => "simd",
         }
     }
 
@@ -151,9 +167,12 @@ impl AggDispatch {
                 };
                 spmm_blocked(&a, h, f, out);
             }
+            AggKernel::Simd => simd::segment_sum(h, f, gather, seg, out),
             AggKernel::Auto => {
                 if self.threads <= 1 || gather.len() < self.parallel_min_work {
-                    blocked::segment_sum(h, f, gather, seg, out)
+                    // Prefer the SIMD rung when detected; it self-falls-
+                    // back to `blocked` (bitwise identical either way).
+                    simd::segment_sum(h, f, gather, seg, out)
                 } else {
                     parallel::segment_sum_n_with_threshold(
                         self.threads,
@@ -197,6 +216,10 @@ impl AggDispatch {
             AggKernel::Vanilla | AggKernel::Sorted | AggKernel::Blocked | AggKernel::Spmm => {
                 blocked::segment_sum_rows(h, f, gather, seg_offsets, rows, out)
             }
+            AggKernel::Simd => simd::segment_sum_rows(h, f, gather, seg_offsets, rows, out),
+            AggKernel::Auto if self.threads <= 1 => {
+                simd::segment_sum_rows(h, f, gather, seg_offsets, rows, out)
+            }
             AggKernel::Parallel | AggKernel::Auto => parallel::segment_sum_rows_n(
                 self.threads,
                 h,
@@ -225,9 +248,10 @@ impl AggDispatch {
                 out,
                 self.parallel_min_work,
             ),
+            AggKernel::Simd => simd::spmm(a, h, f, out),
             AggKernel::Auto => {
                 if self.threads <= 1 || a.nnz() < self.parallel_min_work {
-                    spmm_blocked(a, h, f, out)
+                    simd::spmm(a, h, f, out)
                 } else {
                     spmm_parallel_with_threshold(self.threads, a, h, f, out, self.parallel_min_work)
                 }
@@ -236,10 +260,51 @@ impl AggDispatch {
     }
 
     /// Transpose scatter `out[col] += w · d[row]` — the backward of
-    /// [`AggDispatch::spmm`] (one implementation; kept behind the
-    /// dispatcher so the engine has a single aggregation surface).
+    /// [`AggDispatch::spmm`] (one scalar implementation plus its bitwise
+    /// SIMD twin; kept behind the dispatcher so the engine has a single
+    /// aggregation surface).
     pub fn spmm_t(&self, a: &CsrMatrix, d: &[f32], f: usize, out: &mut [f32]) {
-        spmm_transpose(a, d, f, out);
+        match self.kernel {
+            AggKernel::Simd | AggKernel::Auto => simd::spmm_t(a, d, f, out),
+            _ => spmm_transpose(a, d, f, out),
+        }
+    }
+
+    /// True when the comm-path quantizers should run through the SIMD
+    /// kernels: `Simd` forces them, `Auto` prefers them when a vector ISA
+    /// was detected, the scalar rungs keep `quant::fused`. Either way the
+    /// wire output is bit-identical (DESIGN.md §14).
+    pub fn use_simd_quant(&self) -> bool {
+        match self.kernel {
+            AggKernel::Simd => true,
+            AggKernel::Auto => simd::simd_active(),
+            _ => false,
+        }
+    }
+
+    /// Quantize a payload through the configured kernel family.
+    pub fn quantize(
+        &self,
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        bits: Bits,
+        seed: u64,
+    ) -> Quantized {
+        if self.use_simd_quant() {
+            quant::simd::quantize(x, rows, cols, bits, seed)
+        } else {
+            quant::fused::quantize(x, rows, cols, bits, seed)
+        }
+    }
+
+    /// Dequantize a payload through the configured kernel family.
+    pub fn dequantize(&self, q: &Quantized) -> Vec<f32> {
+        if self.use_simd_quant() {
+            quant::simd::dequantize(q)
+        } else {
+            quant::fused::dequantize(q)
+        }
     }
 }
 
@@ -332,6 +397,51 @@ mod tests {
                     "{}: bit mismatch at {i}: {a} vs {b}",
                     kernel.name()
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn simd_kernel_is_bitwise_identical_to_blocked() {
+        let mut rng = Rng::new(29);
+        let (n_src, n_seg, m, f) = (70, 45, 800, 37);
+        let (h, gather, seg) = random_problem(&mut rng, n_src, n_seg, m, f);
+        let mut want = vec![0f32; n_seg * f];
+        AggDispatch::default()
+            .with_kernel(AggKernel::Blocked)
+            .segment_sum(&h, f, &gather, &seg, n_seg, &mut want);
+        let mut got = vec![0f32; n_seg * f];
+        AggDispatch::default()
+            .with_kernel(AggKernel::Simd)
+            .segment_sum(&h, f, &gather, &seg, n_seg, &mut got);
+        for (a, b) in want.iter().zip(got.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn quant_routes_are_wire_identical() {
+        // Whatever kernel is configured, the quantized payload on the
+        // wire must be byte-for-byte the same (DESIGN.md §14).
+        let mut rng = Rng::new(37);
+        let x: Vec<f32> = (0..9 * 31).map(|_| rng.f32() * 6.0 - 3.0).collect();
+        let base = AggDispatch::default()
+            .with_kernel(AggKernel::Blocked)
+            .quantize(&x, 9, 31, crate::quant::Bits::Int4, 77);
+        assert!(!AggDispatch::default().with_kernel(AggKernel::Blocked).use_simd_quant());
+        assert!(AggDispatch::default().with_kernel(AggKernel::Simd).use_simd_quant());
+        for kernel in AggKernel::ALL {
+            let disp = AggDispatch::default().with_kernel(kernel);
+            let q = disp.quantize(&x, 9, 31, crate::quant::Bits::Int4, 77);
+            assert_eq!(q.data, base.data, "{}: payload bytes differ", kernel.name());
+            for ((z1, s1), (z2, s2)) in q.params.iter().zip(base.params.iter()) {
+                assert_eq!(z1.to_bits(), z2.to_bits(), "{}", kernel.name());
+                assert_eq!(s1.to_bits(), s2.to_bits(), "{}", kernel.name());
+            }
+            let d = disp.dequantize(&q);
+            let want = crate::quant::fused::dequantize(&base);
+            for (a, b) in d.iter().zip(want.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}: dequant differs", kernel.name());
             }
         }
     }

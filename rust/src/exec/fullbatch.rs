@@ -34,7 +34,7 @@ use crate::obs::{self, TraceCategory};
 use crate::comm::{alltoallv_routed, CommStats, Payload, Topology};
 use crate::coordinator::planner::WorkerCtx;
 use crate::perfmodel::MachineProfile;
-use crate::quant::{fused, Bits};
+use crate::quant::Bits;
 use crate::runtime::ShapeConfig;
 use anyhow::Result;
 use std::time::Instant;
@@ -179,6 +179,7 @@ impl<'a> FullBatchCtx<'a> {
         l: usize,
         fin: usize,
         h: &[Vec<f32>],
+        disp: &AggDispatch,
         quant_secs: &mut [f64],
     ) -> Vec<Vec<Payload>> {
         let k = self.k();
@@ -199,6 +200,7 @@ impl<'a> FullBatchCtx<'a> {
                     self.quant,
                     self.seed,
                     self.epoch,
+                    disp,
                     &mut quant_secs[w],
                 ) {
                     sends[w][peer] = p;
@@ -233,10 +235,11 @@ impl<'a> FullBatchCtx<'a> {
         l: usize,
         fin: usize,
         h: &[Vec<f32>],
+        disp: &AggDispatch,
         quant_secs: &mut [f64],
     ) -> Result<()> {
         let k = self.k();
-        let sends = self.pack_fwd_matrix(l, fin, h, quant_secs);
+        let sends = self.pack_fwd_matrix(l, fin, h, disp, quant_secs);
         let recvs = alltoallv_routed(sends, self.topo, self.machine, &mut *self.comm);
         for w in 0..k {
             scatter_fwd(
@@ -245,6 +248,7 @@ impl<'a> FullBatchCtx<'a> {
                 l,
                 fin,
                 &recvs[w],
+                disp,
                 &mut quant_secs[w],
             )?;
         }
@@ -279,6 +283,7 @@ impl GraphContext for FullBatchCtx<'_> {
     fn load_inputs(
         &mut self,
         x: &mut [Vec<f32>],
+        _disp: &AggDispatch,
         secs: &mut [f64],
         _quant_secs: &mut [f64],
     ) -> Result<()> {
@@ -318,7 +323,7 @@ impl GraphContext for FullBatchCtx<'_> {
         if !self.overlap {
             // Blocking schedule: exchange at the barrier, then aggregate.
             if self.exchange {
-                self.exchange_fwd(layer, fin, h, quant_secs)?;
+                self.exchange_fwd(layer, fin, h, disp, quant_secs)?;
             }
             for w in 0..k {
                 let t = Instant::now();
@@ -342,7 +347,7 @@ impl GraphContext for FullBatchCtx<'_> {
         // simulates the same schedule (the alltoallv routing simply runs
         // at the `complete` point).
         let sends = if self.exchange {
-            Some(self.pack_fwd_matrix(layer, fin, h, quant_secs))
+            Some(self.pack_fwd_matrix(layer, fin, h, disp, quant_secs))
         } else {
             None
         };
@@ -368,6 +373,7 @@ impl GraphContext for FullBatchCtx<'_> {
                     layer,
                     fin,
                     &recvs[w],
+                    disp,
                     &mut quant_secs[w],
                 )?;
             }
@@ -541,6 +547,7 @@ fn pack_fwd(
     quant: Option<Bits>,
     seed: u64,
     epoch: usize,
+    disp: &AggDispatch,
     quant_secs: &mut f64,
 ) -> Option<Payload> {
     let (plo, phi) = ctx.send_pre_range[peer];
@@ -560,7 +567,7 @@ fn pack_fwd(
             let t = Instant::now();
             let qseed =
                 (epoch as u64) << 32 | (w as u64) << 16 | (peer as u64) << 8 | l as u64;
-            let q = fused::quantize(&buf, rows, fin, bits, qseed ^ seed);
+            let q = disp.quantize(&buf, rows, fin, bits, qseed ^ seed);
             *quant_secs += t.elapsed().as_secs_f64();
             Payload::Quant(q)
         }
@@ -571,12 +578,14 @@ fn pack_fwd(
 /// Scatter one lane's received forward payloads (indexed by sender) into
 /// its persistent recv buffers for layer `l`, resetting them first so
 /// stale pads never leak.
+#[allow(clippy::too_many_arguments)]
 fn scatter_fwd(
     ctx: &WorkerCtx,
     lane: &mut LaneHalo,
     l: usize,
     fin: usize,
     recvs: &[Payload],
+    disp: &AggDispatch,
     quant_secs: &mut f64,
 ) -> Result<()> {
     lane.recv_pre[l].iter_mut().for_each(|x| *x = 0.0);
@@ -593,7 +602,7 @@ fn scatter_fwd(
             Payload::Quant(q) => {
                 let _sp = obs::span(TraceCategory::QuantUnpack, "dequantize fwd payload");
                 let t = Instant::now();
-                let d = fused::dequantize(q);
+                let d = disp.dequantize(q);
                 *quant_secs += t.elapsed().as_secs_f64();
                 d
             }
@@ -934,6 +943,7 @@ impl<'a> FullBatchRankCtx<'a> {
         l: usize,
         fin: usize,
         h: &[f32],
+        disp: &AggDispatch,
         quant_secs: &mut f64,
     ) -> Vec<Payload> {
         let k = self.fabric.k();
@@ -944,7 +954,7 @@ impl<'a> FullBatchRankCtx<'a> {
             }
             if let Some(p) = pack_fwd(
                 self.ctx, self.st, self.rank, peer, l, fin, h, self.quant, self.seed,
-                self.epoch, quant_secs,
+                self.epoch, disp, quant_secs,
             ) {
                 *slot = p;
             }
@@ -972,11 +982,12 @@ impl<'a> FullBatchRankCtx<'a> {
         l: usize,
         fin: usize,
         h: &[f32],
+        disp: &AggDispatch,
         quant_secs: &mut f64,
     ) -> Result<()> {
-        let sends = self.pack_fwd_row(l, fin, h, quant_secs);
+        let sends = self.pack_fwd_row(l, fin, h, disp, quant_secs);
         let recvs = self.fabric.alltoallv(self.rank, sends, self.machine, self.comm);
-        scatter_fwd(self.ctx, self.st, l, fin, &recvs, quant_secs)
+        scatter_fwd(self.ctx, self.st, l, fin, &recvs, disp, quant_secs)
     }
 
     fn exchange_bwd(&mut self, fin: usize, d_h: &mut [f32]) -> Result<()> {
@@ -994,6 +1005,7 @@ impl GraphContext for FullBatchRankCtx<'_> {
     fn load_inputs(
         &mut self,
         x: &mut [Vec<f32>],
+        _disp: &AggDispatch,
         secs: &mut [f64],
         _quant_secs: &mut [f64],
     ) -> Result<()> {
@@ -1020,7 +1032,7 @@ impl GraphContext for FullBatchRankCtx<'_> {
         }
         if !self.overlap {
             if self.exchange {
-                self.exchange_fwd(layer, fin, &h[0], &mut quant_secs[0])?;
+                self.exchange_fwd(layer, fin, &h[0], disp, &mut quant_secs[0])?;
             }
             let t = Instant::now();
             local_agg(
@@ -1041,7 +1053,7 @@ impl GraphContext for FullBatchRankCtx<'_> {
         // interior rows, peers deposit theirs; only `complete` blocks.
         let comm_before = self.comm.modeled_send_secs[self.rank];
         if self.exchange {
-            let sends = self.pack_fwd_row(layer, fin, &h[0], &mut quant_secs[0]);
+            let sends = self.pack_fwd_row(layer, fin, &h[0], disp, &mut quant_secs[0]);
             self.fabric
                 .post_alltoallv(self.rank, sends, self.machine, self.comm);
         }
@@ -1051,7 +1063,7 @@ impl GraphContext for FullBatchRankCtx<'_> {
         secs[0] += interior;
         if self.exchange {
             let recvs = self.fabric.complete_alltoallv(self.rank);
-            scatter_fwd(self.ctx, self.st, layer, fin, &recvs, &mut quant_secs[0])?;
+            scatter_fwd(self.ctx, self.st, layer, fin, &recvs, disp, &mut quant_secs[0])?;
         }
         let t = Instant::now();
         boundary_agg(self.ctx, self.st, layer, fin, &h[0], &mut z[0], disp);

@@ -20,7 +20,7 @@ use crate::comm::{alltoallv_routed, CommStats, Payload, Topology};
 use crate::graph::generate::LabelledGraph;
 use crate::obs::{self, TraceCategory};
 use crate::perfmodel::MachineProfile;
-use crate::quant::{fused, Bits};
+use crate::quant::Bits;
 use crate::sample::{mix2, MiniBatch};
 use anyhow::Result;
 use std::time::Instant;
@@ -117,6 +117,7 @@ impl<'a> MiniBatchCtx<'a> {
     fn serve_requests(
         &self,
         req_recvs: &[Vec<Payload>],
+        disp: &AggDispatch,
         quant_secs: &mut [f64],
     ) -> Vec<Vec<Payload>> {
         let k = self.per_lane.len();
@@ -138,6 +139,7 @@ impl<'a> MiniBatchCtx<'a> {
                     self.round,
                     o,
                     w,
+                    disp,
                     &mut quant_secs[o],
                 );
             }
@@ -159,6 +161,7 @@ impl GraphContext for MiniBatchCtx<'_> {
     fn load_inputs(
         &mut self,
         x: &mut [Vec<f32>],
+        disp: &AggDispatch,
         secs: &mut [f64],
         quant_secs: &mut [f64],
     ) -> Result<()> {
@@ -177,7 +180,7 @@ impl GraphContext for MiniBatchCtx<'_> {
             .collect();
         if !self.overlap {
             let req_recvs = alltoallv_routed(req_sends, self.topo, self.machine, &mut *self.comm);
-            let reply_sends = self.serve_requests(&req_recvs, quant_secs);
+            let reply_sends = self.serve_requests(&req_recvs, disp, quant_secs);
             let mut replies =
                 alltoallv_routed(reply_sends, self.topo, self.machine, &mut *self.comm);
             for w in 0..k {
@@ -186,7 +189,7 @@ impl GraphContext for MiniBatchCtx<'_> {
                     None => continue,
                 };
                 let mb = &self.batches[bi];
-                let decoded = decode_replies(&mut replies[w], &mut quant_secs[w]);
+                let decoded = decode_replies(&mut replies[w], disp, &mut quant_secs[w]);
                 let t = Instant::now();
                 assemble_x(self.lg, self.assign, mb, w, &decoded, f, &mut x[w])?;
                 secs[w] += t.elapsed().as_secs_f64();
@@ -211,7 +214,7 @@ impl GraphContext for MiniBatchCtx<'_> {
         for w in 0..k {
             req_comm_secs[w] = self.comm.modeled_send_secs[w] - before_req[w];
         }
-        let reply_sends = self.serve_requests(&req_recvs, quant_secs);
+        let reply_sends = self.serve_requests(&req_recvs, disp, quant_secs);
         let before_reply = self.comm.modeled_send_secs.clone();
         let mut replies =
             alltoallv_routed(reply_sends, self.topo, self.machine, &mut *self.comm);
@@ -226,7 +229,7 @@ impl GraphContext for MiniBatchCtx<'_> {
                 None => continue,
             };
             let mb = &self.batches[bi];
-            let decoded = decode_replies(&mut replies[w], &mut quant_secs[w]);
+            let decoded = decode_replies(&mut replies[w], disp, &mut quant_secs[w]);
             let t = Instant::now();
             assemble_remote(self.assign, mb, w, &decoded, f, &mut x[w])?;
             boundary_secs[w] = t.elapsed().as_secs_f64();
@@ -338,6 +341,7 @@ fn reply_payload(
     round: usize,
     o: usize,
     w: usize,
+    disp: &AggDispatch,
     quant_secs: &mut f64,
 ) -> Payload {
     let f = lg.feat_dim;
@@ -354,7 +358,7 @@ fn reply_payload(
                 mix2(seed, ((epoch as u64) << 20) ^ round as u64),
                 ((o as u64) << 8) ^ w as u64,
             );
-            let q = fused::quantize(&buf, rows, f, bits, qseed);
+            let q = disp.quantize(&buf, rows, f, bits, qseed);
             *quant_secs += t.elapsed().as_secs_f64();
             Payload::Quant(q)
         }
@@ -364,7 +368,11 @@ fn reply_payload(
 
 /// Move each reply out of its slot and dequantize (dequantize time
 /// charged to the requester). `decoded[o]` = rows from owner `o`.
-fn decode_replies(replies: &mut [Payload], quant_secs: &mut f64) -> Vec<Option<Vec<f32>>> {
+fn decode_replies(
+    replies: &mut [Payload],
+    disp: &AggDispatch,
+    quant_secs: &mut f64,
+) -> Vec<Option<Vec<f32>>> {
     let mut decoded: Vec<Option<Vec<f32>>> = vec![None; replies.len()];
     for (o, slot) in replies.iter_mut().enumerate() {
         match std::mem::replace(slot, Payload::Empty) {
@@ -372,7 +380,7 @@ fn decode_replies(replies: &mut [Payload], quant_secs: &mut f64) -> Vec<Option<V
             Payload::Quant(q) => {
                 let _sp = obs::span(TraceCategory::QuantUnpack, "dequantize reply rows");
                 let t = Instant::now();
-                decoded[o] = Some(fused::dequantize(&q));
+                decoded[o] = Some(disp.dequantize(&q));
                 *quant_secs += t.elapsed().as_secs_f64();
             }
             _ => {}
@@ -523,7 +531,12 @@ impl<'a> MiniBatchRankCtx<'a> {
     }
 
     /// Serve the id requests addressed to this owner.
-    fn serve_row(&self, req_recvs: &[Payload], quant_secs: &mut f64) -> Vec<Payload> {
+    fn serve_row(
+        &self,
+        req_recvs: &[Payload],
+        disp: &AggDispatch,
+        quant_secs: &mut f64,
+    ) -> Vec<Payload> {
         let k = self.fabric.k();
         let mut reply_sends: Vec<Payload> = (0..k).map(|_| Payload::Empty).collect();
         for (w, payload) in req_recvs.iter().enumerate() {
@@ -540,6 +553,7 @@ impl<'a> MiniBatchRankCtx<'a> {
                 self.round,
                 self.rank,
                 w,
+                disp,
                 quant_secs,
             );
         }
@@ -555,6 +569,7 @@ impl GraphContext for MiniBatchRankCtx<'_> {
     fn load_inputs(
         &mut self,
         x: &mut [Vec<f32>],
+        disp: &AggDispatch,
         secs: &mut [f64],
         quant_secs: &mut [f64],
     ) -> Result<()> {
@@ -565,11 +580,11 @@ impl GraphContext for MiniBatchRankCtx<'_> {
             let req_sends = self.request_row();
             let req_recvs =
                 self.fabric.alltoallv(self.rank, req_sends, self.machine, self.comm);
-            let reply_sends = self.serve_row(&req_recvs, &mut quant_secs[0]);
+            let reply_sends = self.serve_row(&req_recvs, disp, &mut quant_secs[0]);
             let mut replies =
                 self.fabric.alltoallv(self.rank, reply_sends, self.machine, self.comm);
             if let Some(mb) = self.batch {
-                let decoded = decode_replies(&mut replies, &mut quant_secs[0]);
+                let decoded = decode_replies(&mut replies, disp, &mut quant_secs[0]);
                 let t = Instant::now();
                 assemble_x(self.lg, self.assign, mb, self.rank, &decoded, f, &mut x[0])?;
                 secs[0] += t.elapsed().as_secs_f64();
@@ -592,7 +607,7 @@ impl GraphContext for MiniBatchRankCtx<'_> {
         }
         let req_recvs = self.fabric.complete_alltoallv(self.rank);
         let req_comm = self.comm.modeled_send_secs[self.rank] - before_req;
-        let reply_sends = self.serve_row(&req_recvs, &mut quant_secs[0]);
+        let reply_sends = self.serve_row(&req_recvs, disp, &mut quant_secs[0]);
         let before_reply = self.comm.modeled_send_secs[self.rank];
         self.fabric
             .post_alltoallv(self.rank, reply_sends, self.machine, self.comm);
@@ -600,7 +615,7 @@ impl GraphContext for MiniBatchRankCtx<'_> {
         let reply_comm = self.comm.modeled_send_secs[self.rank] - before_reply;
         let mut boundary = 0f64;
         if let Some(mb) = self.batch {
-            let decoded = decode_replies(&mut replies, &mut quant_secs[0]);
+            let decoded = decode_replies(&mut replies, disp, &mut quant_secs[0]);
             let t = Instant::now();
             assemble_remote(self.assign, mb, self.rank, &decoded, f, &mut x[0])?;
             boundary = t.elapsed().as_secs_f64();

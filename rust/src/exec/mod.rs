@@ -52,10 +52,13 @@ pub trait GraphContext {
     fn lanes(&self) -> usize;
 
     /// Fill each lane's input feature matrix (`rows × f_in`), performing
-    /// any remote feature-row fetch.
+    /// any remote feature-row fetch. `disp` selects the kernel family for
+    /// any payload quantization the fetch performs
+    /// ([`AggDispatch::quantize`]/[`AggDispatch::dequantize`]).
     fn load_inputs(
         &mut self,
         x: &mut [Vec<f32>],
+        disp: &AggDispatch,
         secs: &mut [f64],
         quant_secs: &mut [f64],
     ) -> Result<()>;
@@ -533,7 +536,7 @@ impl Engine {
         anyhow::ensure!(ctx.lanes() == lanes, "context/tape lane mismatch");
         {
             let (secs, quant) = clock.push(Category::Aggr);
-            ctx.load_inputs(&mut tapes.h[0], secs, quant)?;
+            ctx.load_inputs(&mut tapes.h[0], &self.dispatch, secs, quant)?;
         }
         if let Some(lp) = lp {
             let f_in = self.dims[0].0;

@@ -58,7 +58,11 @@ fn main() {
                  (DESIGN.md §11). `--group-size g` groups ranks onto simulated nodes\n\
                  and stages cross-node payloads through per-node leaders, cutting\n\
                  inter-node messages from O(P²) to O((P/g)²) — bit-exact with the\n\
-                 flat exchange (DESIGN.md §12). `--trace out.json` records per-rank\n\
+                 flat exchange (DESIGN.md §12). `--agg-kernel simd` selects the\n\
+                 runtime-dispatched AVX2 aggregation + quantization rung (scalar\n\
+                 fallback off x86_64) — bit-exact with every other rung, and the\n\
+                 default `auto` prefers it when the ISA is detected (DESIGN.md\n\
+                 §14). `--trace out.json` records per-rank\n\
                  spans to a Perfetto/chrome trace; `--metrics-json out.json` writes\n\
                  the epoch-structured metrics report (DESIGN.md §13). `benchcmp`\n\
                  gates CI on the committed BENCH_seed.json."
@@ -123,7 +127,7 @@ fn cmd_train(argv: &[String]) -> Result<()> {
         .opt(
             "agg-kernel",
             "auto",
-            "auto | vanilla | sorted | blocked | parallel | spmm (§4 dispatch)",
+            "auto | vanilla | sorted | blocked | parallel | spmm | simd (§4 dispatch)",
         )
         .opt(
             "agg-threshold",

@@ -19,7 +19,16 @@
 //! magnitudes beyond [`QUANT_CLAMP`]) are clamped by `sanitize` before the
 //! group stats and the rounding kernel see them, so one poisoned feature
 //! value can never turn its 4-row group's packed payload into NaN/±inf on
-//! the wire (property-tested below).
+//! the wire (property-tested below). Sanitization runs **once** per
+//! element, into a cache-resident group-sized scratch buffer; `minmax`
+//! and `code_of` consume pre-sanitized values (`sanitize` is idempotent,
+//! so this is bit-identical to sanitizing at each consumer — it used to
+//! run twice per element on the hot path).
+//!
+//! The explicitly vectorized twin of this module is [`super::simd`]
+//! (runtime AVX2 dispatch, bit-identical wire output — DESIGN.md §14); it
+//! reuses the `pub(crate)` helpers below so params, noise, and packing
+//! come from one definition.
 
 use super::packing::packed_len;
 use super::{Bits, Quantized, GROUP_ROWS};
@@ -38,7 +47,7 @@ fn counter_noise(seed: u64, idx: u64) -> f32 {
 /// the kernel; one 64-bit mix yields 4×16-bit uniform lanes — 16 bits is
 /// plenty for stochastic rounding between ≤256 levels).
 #[inline(always)]
-fn noise4(seed: u64, counter: u64) -> [f32; 4] {
+pub(crate) fn noise4(seed: u64, counter: u64) -> [f32; 4] {
     let mut z = seed ^ counter.wrapping_mul(0x9E3779B97F4A7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
     z ^= z >> 31;
@@ -63,8 +72,10 @@ pub const QUANT_CLAMP: f32 = 8.507059e37;
 /// group stats and the rounding kernel see them: NaN → 0, ±inf → ±clamp,
 /// finite values clamp into `[-QUANT_CLAMP, QUANT_CLAMP]` (a no-op for
 /// every sane feature scale). Branch shape keeps the loops vectorizable.
+/// Idempotent: `sanitize(sanitize(v)) == sanitize(v)` bitwise, which is
+/// what lets the hot path sanitize once up front.
 #[inline(always)]
-fn sanitize(v: f32) -> f32 {
+pub(crate) fn sanitize(v: f32) -> f32 {
     if v.is_finite() {
         v.clamp(-QUANT_CLAMP, QUANT_CLAMP)
     } else if v > 0.0 {
@@ -76,22 +87,24 @@ fn sanitize(v: f32) -> f32 {
     }
 }
 
-/// Quantize one value: `t = (v-zero)·inv + u`; `t ≥ 0` by construction so
-/// the f32→u32 cast truncates like `floor` and saturates at 0 (§Perf:
-/// replaces floor + clamp). Non-finite `v` is sanitized first — the cast
-/// saturates at `max_code` for over-range results, so the code is always
-/// in range.
+/// Quantize one **pre-sanitized** value: `t = (v-zero)·inv + u`; `t ≥ 0`
+/// by construction so the f32→u32 cast truncates like `floor` and
+/// saturates at 0 (§Perf: replaces floor + clamp). The cast saturates at
+/// `max_code` for over-range results, so the code is always in range.
+/// Callers own sanitization (done once per group buffer, see
+/// [`quantize_into`]).
 #[inline(always)]
-fn code_of(v: f32, zero: f32, inv_scale: f32, noise: f32, max_code: u32) -> u8 {
-    let t = (sanitize(v) - zero) * inv_scale + noise;
+pub(crate) fn code_of(v: f32, zero: f32, inv_scale: f32, noise: f32, max_code: u32) -> u8 {
+    let t = (v - zero) * inv_scale + noise;
     (t as u32).min(max_code) as u8
 }
 
-/// Fused min/max over a slice, chunked for vectorization. Values pass
-/// through [`sanitize`], so the result is always a finite pair with
-/// `mx − mn ≤ 2·QUANT_CLAMP` (non-empty input).
+/// Fused min/max over a **pre-sanitized** slice, chunked for
+/// vectorization. Since every value already passed [`sanitize`], the
+/// result is a finite pair with `mx − mn ≤ 2·QUANT_CLAMP` (non-empty
+/// input).
 #[inline]
-fn minmax(xs: &[f32]) -> (f32, f32) {
+pub(crate) fn minmax(xs: &[f32]) -> (f32, f32) {
     const W: usize = 8;
     let mut mns = [f32::INFINITY; W];
     let mut mxs = [f32::NEG_INFINITY; W];
@@ -99,13 +112,12 @@ fn minmax(xs: &[f32]) -> (f32, f32) {
     let rem = chunks.remainder();
     for c in chunks {
         for i in 0..W {
-            let v = sanitize(c[i]);
-            mns[i] = mns[i].min(v);
-            mxs[i] = mxs[i].max(v);
+            mns[i] = mns[i].min(c[i]);
+            mxs[i] = mxs[i].max(c[i]);
         }
     }
-    let mut mn = rem.iter().map(|&v| sanitize(v)).fold(f32::INFINITY, f32::min);
-    let mut mx = rem.iter().map(|&v| sanitize(v)).fold(f32::NEG_INFINITY, f32::max);
+    let mut mn = rem.iter().copied().fold(f32::INFINITY, f32::min);
+    let mut mx = rem.iter().copied().fold(f32::NEG_INFINITY, f32::max);
     for i in 0..W {
         mn = mn.min(mns[i]);
         mx = mx.max(mxs[i]);
@@ -113,7 +125,121 @@ fn minmax(xs: &[f32]) -> (f32, f32) {
     (mn, mx)
 }
 
-/// Quantize into preallocated buffers (no allocation on the comm hot path).
+/// Derive a group's `(zero, scale)` from its sanitized min/max. Shared by
+/// the scalar and SIMD quantizers so the params are one definition (and
+/// therefore trivially bit-identical between them).
+#[inline]
+pub(crate) fn group_zero_scale(mn: f32, mx: f32, max_code: f32) -> (f32, f32) {
+    if mx > mn {
+        // mx − mn ≤ 2·QUANT_CLAMP = f32::MAX/2, so the subtraction and
+        // the scale stay finite in f32 — the clamp in `sanitize` is what
+        // makes a full-range group safe here.
+        (mn, (mx - mn) / max_code)
+    } else {
+        // Degenerate groups: constant input keeps its zero point; an
+        // empty slice (cols == 0 ⇒ mn stays +inf) stores (0, 0).
+        (if mn.is_finite() { mn } else { 0.0 }, 0.0)
+    }
+}
+
+/// Pack one group's **pre-sanitized** values into `data`. `base` is the
+/// flat element index of `slice[0]` in the full matrix and must be a
+/// multiple of 4 (noise quads are addressed by flat index, one
+/// [`noise4`] hash per quad — the wire format pins that alignment).
+/// Shared by the scalar quantizer below and the SIMD quantizer's
+/// remainder path ([`super::simd`]), so both pack through one definition.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub(crate) fn pack_group(
+    slice: &[f32],
+    bits: Bits,
+    seed: u64,
+    base: u64,
+    zero: f32,
+    inv_scale: f32,
+    mc: u32,
+    data: &mut Vec<u8>,
+) {
+    debug_assert_eq!(base % 4, 0, "noise quads are flat-index aligned");
+    match bits {
+        Bits::Int2 => {
+            let mut it = slice.chunks_exact(4);
+            let mut idx = 0u64;
+            for quad in &mut it {
+                // One hash serves the 4 codes of this byte.
+                let nz = noise4(seed, base + idx);
+                let mut byte = 0u8;
+                // branch-free: scale==0 ⇒ inv_scale==0 ⇒ code 0
+                for i in 0..4 {
+                    byte |= code_of(quad[i], zero, inv_scale, nz[i], mc) << (2 * i);
+                }
+                data.push(byte);
+                idx += 4;
+            }
+            let rem = it.remainder();
+            if !rem.is_empty() {
+                let nz = noise4(seed, base + idx);
+                let mut byte = 0u8;
+                for (i, &v) in rem.iter().enumerate() {
+                    byte |= code_of(v, zero, inv_scale, nz[i], mc) << (2 * i);
+                }
+                data.push(byte);
+            }
+        }
+        Bits::Int4 => {
+            let mut it = slice.chunks_exact(4);
+            let mut idx = 0u64;
+            for quad in &mut it {
+                let nz = noise4(seed, base + idx);
+                let c0 = code_of(quad[0], zero, inv_scale, nz[0], mc);
+                let c1 = code_of(quad[1], zero, inv_scale, nz[1], mc);
+                let c2 = code_of(quad[2], zero, inv_scale, nz[2], mc);
+                let c3 = code_of(quad[3], zero, inv_scale, nz[3], mc);
+                data.push(c0 | (c1 << 4));
+                data.push(c2 | (c3 << 4));
+                idx += 4;
+            }
+            let rem = it.remainder();
+            if !rem.is_empty() {
+                let nz = noise4(seed, base + idx);
+                let mut byte = 0u8;
+                for (i, &v) in rem.iter().enumerate() {
+                    let c = code_of(v, zero, inv_scale, nz[i], mc);
+                    if i % 2 == 0 {
+                        byte = c;
+                        if i + 1 == rem.len() {
+                            data.push(byte);
+                        }
+                    } else {
+                        data.push(byte | (c << 4));
+                    }
+                }
+            }
+        }
+        Bits::Int8 => {
+            let mut it = slice.chunks_exact(4);
+            let mut idx = 0u64;
+            for quad in &mut it {
+                let nz = noise4(seed, base + idx);
+                for i in 0..4 {
+                    data.push(code_of(quad[i], zero, inv_scale, nz[i], mc));
+                }
+                idx += 4;
+            }
+            let rem = it.remainder();
+            if !rem.is_empty() {
+                let nz = noise4(seed, base + idx);
+                for (i, &v) in rem.iter().enumerate() {
+                    data.push(code_of(v, zero, inv_scale, nz[i], mc));
+                }
+            }
+        }
+    }
+}
+
+/// Quantize into preallocated buffers (the comm hot path reuses `params`
+/// and `data` across calls; the only allocation here is one group-sized
+/// sanitize scratch buffer per call).
 pub fn quantize_into(
     x: &[f32],
     rows: usize,
@@ -129,102 +255,26 @@ pub fn quantize_into(
     params.reserve(rows.div_ceil(GROUP_ROWS));
     data.reserve(rows.div_ceil(GROUP_ROWS) * super::packing::packed_len(GROUP_ROWS * cols, bits));
     let max_code = bits.max_code() as f32;
+    // Sanitize ONCE into a cache-resident group buffer; `minmax` and
+    // `code_of` consume pre-sanitized values. Bit-identical to sanitizing
+    // at each consumer because `sanitize` is idempotent.
+    let mut sbuf = vec![0f32; GROUP_ROWS * cols];
     for g in (0..rows).step_by(GROUP_ROWS) {
         let g_rows = GROUP_ROWS.min(rows - g);
-        let slice = &x[g * cols..(g + g_rows) * cols];
+        let raw = &x[g * cols..(g + g_rows) * cols];
+        let sane = &mut sbuf[..raw.len()];
+        for (d, &v) in sane.iter_mut().zip(raw.iter()) {
+            *d = sanitize(v);
+        }
         // Sanitized stats: mn/mx are always finite (NaN ignored as 0,
         // ±inf clamped), so the params can never poison dequantization.
-        let (mn, mx) = minmax(slice);
-        let (zero, scale) = if mx > mn {
-            // mx − mn ≤ 2·QUANT_CLAMP = f32::MAX/2, so the subtraction and
-            // the scale stay finite in f32 — the clamp in `sanitize` is
-            // what makes a full-range group safe here.
-            (mn, (mx - mn) / max_code)
-        } else {
-            // Degenerate groups: constant input keeps its zero point; an
-            // empty slice (cols == 0 ⇒ mn stays +inf) stores (0, 0).
-            (if mn.is_finite() { mn } else { 0.0 }, 0.0)
-        };
+        let (mn, mx) = minmax(sane);
+        let (zero, scale) = group_zero_scale(mn, mx, max_code);
         debug_assert!(zero.is_finite() && scale.is_finite());
         params.push((zero, scale));
         // Reciprocal-multiply instead of division (§7.3(3)).
         let inv_scale = if scale > 0.0 { 1.0 / scale } else { 0.0 };
-        let base = (g * cols) as u64;
-        let mc = max_code as u32;
-        match bits {
-            Bits::Int2 => {
-                let mut it = slice.chunks_exact(4);
-                let mut idx = 0u64;
-                for quad in &mut it {
-                    // One hash serves the 4 codes of this byte.
-                    let nz = noise4(seed, base + idx);
-                    let mut byte = 0u8;
-                    // branch-free: scale==0 ⇒ inv_scale==0 ⇒ code 0
-                    for i in 0..4 {
-                        byte |= code_of(quad[i], zero, inv_scale, nz[i], mc) << (2 * i);
-                    }
-                    data.push(byte);
-                    idx += 4;
-                }
-                let rem = it.remainder();
-                if !rem.is_empty() {
-                    let nz = noise4(seed, base + idx);
-                    let mut byte = 0u8;
-                    for (i, &v) in rem.iter().enumerate() {
-                        byte |= code_of(v, zero, inv_scale, nz[i], mc) << (2 * i);
-                    }
-                    data.push(byte);
-                }
-            }
-            Bits::Int4 => {
-                let mut it = slice.chunks_exact(4);
-                let mut idx = 0u64;
-                for quad in &mut it {
-                    let nz = noise4(seed, base + idx);
-                    let c0 = code_of(quad[0], zero, inv_scale, nz[0], mc);
-                    let c1 = code_of(quad[1], zero, inv_scale, nz[1], mc);
-                    let c2 = code_of(quad[2], zero, inv_scale, nz[2], mc);
-                    let c3 = code_of(quad[3], zero, inv_scale, nz[3], mc);
-                    data.push(c0 | (c1 << 4));
-                    data.push(c2 | (c3 << 4));
-                    idx += 4;
-                }
-                let rem = it.remainder();
-                if !rem.is_empty() {
-                    let nz = noise4(seed, base + idx);
-                    let mut byte = 0u8;
-                    for (i, &v) in rem.iter().enumerate() {
-                        let c = code_of(v, zero, inv_scale, nz[i], mc);
-                        if i % 2 == 0 {
-                            byte = c;
-                            if i + 1 == rem.len() {
-                                data.push(byte);
-                            }
-                        } else {
-                            data.push(byte | (c << 4));
-                        }
-                    }
-                }
-            }
-            Bits::Int8 => {
-                let mut it = slice.chunks_exact(4);
-                let mut idx = 0u64;
-                for quad in &mut it {
-                    let nz = noise4(seed, base + idx);
-                    for i in 0..4 {
-                        data.push(code_of(quad[i], zero, inv_scale, nz[i], mc));
-                    }
-                    idx += 4;
-                }
-                let rem = it.remainder();
-                if !rem.is_empty() {
-                    let nz = noise4(seed, base + idx);
-                    for (i, &v) in rem.iter().enumerate() {
-                        data.push(code_of(v, zero, inv_scale, nz[i], mc));
-                    }
-                }
-            }
-        }
+        pack_group(sane, bits, seed, (g * cols) as u64, zero, inv_scale, max_code as u32, data);
     }
 }
 

@@ -7,17 +7,21 @@
 //! (`⌊x + u⌋`, `u ∼ U[0,1)`), which keeps the dequantized message an
 //! unbiased estimator — the property Lemma 1's convergence argument needs.
 //!
-//! Two implementations are provided:
+//! Three implementations are provided:
 //! * [`naive`]  — two-pass, division in the inner loop, generator state
 //!   threaded through every element (the baseline the paper starts from),
 //! * [`fused`]  — the paper's §7.3 optimized kernel: fused stats+quant
 //!   over 4-row groups, reciprocal-multiply instead of division, counter-
 //!   based noise with no sequential RNG dependency, chunked inner loops
-//!   that auto-vectorize, and in-register int2 packing.
+//!   that auto-vectorize, and in-register int2 packing,
+//! * [`simd`]   — explicit AVX2 intrinsics behind runtime ISA dispatch
+//!   (scalar fallback = `fused`), wire-bit-identical to `fused`
+//!   (DESIGN.md §14).
 
 pub mod fused;
 pub mod naive;
 pub mod packing;
+pub mod simd;
 
 /// Bit width of the quantized payload.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]

@@ -1,0 +1,406 @@
+//! Explicitly vectorized quantization with runtime ISA dispatch — the
+//! SIMD twin of [`super::fused`] (DESIGN.md §14).
+//!
+//! On AVX2 hosts the pack path sanitizes 8 lanes at a time, computes
+//! `code = min(trunc((v − zero)·inv + noise), max_code)` in-register
+//! (`_mm256_cvttps_epi32` + `_mm256_min_epi32`), and packs int2/4/8 bytes
+//! from the spilled code lanes; the unpack path widens codes 8 at a time
+//! and applies the `code·scale + zero` multiply-add in-register.
+//! Elsewhere every entry point delegates to `fused` — no new
+//! dependencies, offline build preserved.
+//!
+//! **Wire bit-identity.** The output `Quantized` is byte-for-byte (and
+//! param-bit-for-bit) identical to `fused::quantize`:
+//! - group stats go through the *same scalar* [`fused::minmax`] +
+//!   [`fused::group_zero_scale`] (one definition ⇒ identical params; this
+//!   also sidesteps the `min(a,b)` vs `min(b,a)` ±0 operand-order
+//!   ambiguity a vectorized min/max reduction would introduce);
+//! - the 8-lane sanitize `and(max(min(v, C), −C), cmp_ord(v, v))` maps
+//!   every input class (finite, over-range, ±inf, NaN → +0.0, −0.0
+//!   preserved) to exactly [`fused::sanitize`]'s output bits;
+//! - each code is one `sub`, one `mul`, one `add` per lane — the same
+//!   three IEEE ops as [`fused::code_of`] — and `t ≥ 0 < 2³¹` makes the
+//!   vector truncation agree with the scalar `t as u32` cast exactly;
+//! - noise lanes come from the same [`fused::noise4`] counter hash at the
+//!   same flat indices (the vector loop strides 8 = two noise quads);
+//! - the sub-8 remainder is packed by the *same* [`fused::pack_group`]
+//!   the scalar path uses.
+//!
+//! Dequantization is likewise bitwise: integer widening is exact and the
+//! per-element multiply-add matches the scalar association.
+
+use super::fused;
+use super::packing::packed_len;
+use super::{Bits, Quantized, GROUP_ROWS};
+use crate::agg::simd::{isa, SimdIsa};
+
+/// SIMD [`fused::quantize_into`]: identical signature, bit-identical
+/// output, vectorized on AVX2 hosts.
+pub fn quantize_into(
+    x: &[f32],
+    rows: usize,
+    cols: usize,
+    bits: Bits,
+    seed: u64,
+    params: &mut Vec<(f32, f32)>,
+    data: &mut Vec<u8>,
+) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if isa() == SimdIsa::Avx2 {
+            // SAFETY: AVX2 presence was verified at runtime by `isa()`.
+            unsafe { avx2::quantize_into(x, rows, cols, bits, seed, params, data) };
+            return;
+        }
+    }
+    fused::quantize_into(x, rows, cols, bits, seed, params, data)
+}
+
+/// Allocating wrapper around [`quantize_into`].
+pub fn quantize(x: &[f32], rows: usize, cols: usize, bits: Bits, seed: u64) -> Quantized {
+    let mut params = Vec::new();
+    let mut data = Vec::new();
+    quantize_into(x, rows, cols, bits, seed, &mut params, &mut data);
+    Quantized {
+        bits,
+        rows,
+        cols,
+        params,
+        data,
+    }
+}
+
+/// SIMD [`fused::dequantize_into`]: bit-identical output, vectorized
+/// unpack + multiply-add on AVX2 hosts.
+pub fn dequantize_into(q: &Quantized, out: &mut [f32]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if isa() == SimdIsa::Avx2 {
+            // SAFETY: AVX2 presence was verified at runtime by `isa()`.
+            unsafe { avx2::dequantize_into(q, out) };
+            return;
+        }
+    }
+    fused::dequantize_into(q, out)
+}
+
+/// Allocating wrapper around [`dequantize_into`].
+pub fn dequantize(q: &Quantized) -> Vec<f32> {
+    let mut out = vec![0f32; q.rows * q.cols];
+    dequantize_into(q, &mut out);
+    out
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::super::{fused, packing::packed_len, Bits, Quantized, GROUP_ROWS};
+    use core::arch::x86_64::*;
+
+    /// 8-lane [`fused::sanitize`]: `and(max(min(v, C), −C), cmp_ord(v, v))`.
+    /// Finite in-range values pass through bitwise (±0.0 included);
+    /// over-range and ±inf pin to ±C (MINPS/MAXPS return the second
+    /// operand on unordered, so NaN survives the clamps as C); the
+    /// ordered-compare mask then zeroes NaN lanes to +0.0 — exactly the
+    /// scalar helper's `0.0`.
+    #[target_feature(enable = "avx2")]
+    unsafe fn sanitize_slice(raw: &[f32], sane: &mut [f32]) {
+        let n = raw.len();
+        let full = n / 8 * 8;
+        let clamp = _mm256_set1_ps(fused::QUANT_CLAMP);
+        let nclamp = _mm256_set1_ps(-fused::QUANT_CLAMP);
+        let mut i = 0usize;
+        while i < full {
+            let v = _mm256_loadu_ps(raw.as_ptr().add(i));
+            let c = _mm256_max_ps(_mm256_min_ps(v, clamp), nclamp);
+            let ord = _mm256_cmp_ps::<_CMP_ORD_Q>(v, v);
+            _mm256_storeu_ps(sane.as_mut_ptr().add(i), _mm256_and_ps(c, ord));
+            i += 8;
+        }
+        for i in full..n {
+            sane[i] = fused::sanitize(raw[i]);
+        }
+    }
+
+    /// Vectorized twin of [`fused::pack_group`] over a pre-sanitized
+    /// group slice: 8 codes per iteration (two noise quads), scalar
+    /// packing from the spilled lanes, shared-scalar remainder.
+    #[allow(clippy::too_many_arguments)]
+    #[target_feature(enable = "avx2")]
+    unsafe fn pack_codes(
+        sane: &[f32],
+        bits: Bits,
+        seed: u64,
+        base: u64,
+        zero: f32,
+        inv_scale: f32,
+        mc: u32,
+        data: &mut Vec<u8>,
+    ) {
+        let n = sane.len();
+        let full = n / 8 * 8;
+        let zv = _mm256_set1_ps(zero);
+        let iv = _mm256_set1_ps(inv_scale);
+        let mcv = _mm256_set1_epi32(mc as i32);
+        let mut codes = [0u32; 8];
+        let mut p = 0usize;
+        while p < full {
+            let n0 = fused::noise4(seed, base + p as u64);
+            let n1 = fused::noise4(seed, base + p as u64 + 4);
+            let nz = _mm256_setr_ps(n0[0], n0[1], n0[2], n0[3], n1[0], n1[1], n1[2], n1[3]);
+            let v = _mm256_loadu_ps(sane.as_ptr().add(p));
+            // Same three IEEE ops per lane as `code_of`: sub, mul, add.
+            let t = _mm256_add_ps(_mm256_mul_ps(_mm256_sub_ps(v, zv), iv), nz);
+            // t ≥ 0 and < 2³¹ ⇒ cvttps == the scalar `t as u32` cast.
+            let c = _mm256_min_epi32(_mm256_cvttps_epi32(t), mcv);
+            _mm256_storeu_si256(codes.as_mut_ptr() as *mut __m256i, c);
+            match bits {
+                Bits::Int2 => {
+                    let lo = codes[0] | (codes[1] << 2) | (codes[2] << 4) | (codes[3] << 6);
+                    let hi = codes[4] | (codes[5] << 2) | (codes[6] << 4) | (codes[7] << 6);
+                    data.push(lo as u8);
+                    data.push(hi as u8);
+                }
+                Bits::Int4 => {
+                    data.push((codes[0] | (codes[1] << 4)) as u8);
+                    data.push((codes[2] | (codes[3] << 4)) as u8);
+                    data.push((codes[4] | (codes[5] << 4)) as u8);
+                    data.push((codes[6] | (codes[7] << 4)) as u8);
+                }
+                Bits::Int8 => {
+                    for &c in &codes {
+                        data.push(c as u8);
+                    }
+                }
+            }
+            p += 8;
+        }
+        if full < n {
+            // Sub-8 remainder: the scalar packer (same noise indices —
+            // base + full stays quad-aligned since full % 8 == 0, and the
+            // byte boundary is clean for every width since 8 codes fill
+            // whole bytes at int2/4/8).
+            let rem_base = base + full as u64;
+            fused::pack_group(&sane[full..], bits, seed, rem_base, zero, inv_scale, mc, data);
+        }
+    }
+
+    /// AVX2 [`fused::quantize_into`] — same group walk, shared scalar
+    /// stats, vectorized sanitize + code/pack loops.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn quantize_into(
+        x: &[f32],
+        rows: usize,
+        cols: usize,
+        bits: Bits,
+        seed: u64,
+        params: &mut Vec<(f32, f32)>,
+        data: &mut Vec<u8>,
+    ) {
+        assert_eq!(x.len(), rows * cols);
+        params.clear();
+        data.clear();
+        params.reserve(rows.div_ceil(GROUP_ROWS));
+        data.reserve(rows.div_ceil(GROUP_ROWS) * packed_len(GROUP_ROWS * cols, bits));
+        let max_code = bits.max_code() as f32;
+        let mut sbuf = vec![0f32; GROUP_ROWS * cols];
+        for g in (0..rows).step_by(GROUP_ROWS) {
+            let g_rows = GROUP_ROWS.min(rows - g);
+            let raw = &x[g * cols..(g + g_rows) * cols];
+            let sane = &mut sbuf[..raw.len()];
+            sanitize_slice(raw, sane);
+            // Scalar shared stats: params bit-identical to `fused` by
+            // construction (one definition, same input bits).
+            let (mn, mx) = fused::minmax(sane);
+            let (zero, scale) = fused::group_zero_scale(mn, mx, max_code);
+            debug_assert!(zero.is_finite() && scale.is_finite());
+            params.push((zero, scale));
+            let inv_scale = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+            pack_codes(sane, bits, seed, (g * cols) as u64, zero, inv_scale, max_code as u32, data);
+        }
+    }
+
+    /// AVX2 [`fused::dequantize_into`] — 8 codes widened per iteration,
+    /// `code·scale + zero` in-register (mul then add, the scalar
+    /// association), scalar tails identical to the fused kernel.
+    ///
+    /// # Safety
+    /// Caller must have verified AVX2 support at runtime.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequantize_into(q: &Quantized, out: &mut [f32]) {
+        assert_eq!(out.len(), q.rows * q.cols);
+        let mut data_off = 0usize;
+        for (gi, &(zero, scale)) in q.params.iter().enumerate() {
+            let g = gi * GROUP_ROWS;
+            let g_rows = GROUP_ROWS.min(q.rows - g);
+            let n = g_rows * q.cols;
+            let bytes = &q.data[data_off..data_off + packed_len(n, q.bits)];
+            data_off += bytes.len();
+            let dst = &mut out[g * q.cols..g * q.cols + n];
+            let zv = _mm256_set1_ps(zero);
+            let sv = _mm256_set1_ps(scale);
+            let full = n / 8 * 8;
+            match q.bits {
+                Bits::Int2 => {
+                    let mut i = 0usize;
+                    while i < full {
+                        let b0 = bytes[i / 4];
+                        let b1 = bytes[i / 4 + 1];
+                        let lanes = [
+                            (b0 & 0x3) as f32,
+                            ((b0 >> 2) & 0x3) as f32,
+                            ((b0 >> 4) & 0x3) as f32,
+                            ((b0 >> 6) & 0x3) as f32,
+                            (b1 & 0x3) as f32,
+                            ((b1 >> 2) & 0x3) as f32,
+                            ((b1 >> 4) & 0x3) as f32,
+                            ((b1 >> 6) & 0x3) as f32,
+                        ];
+                        let v = _mm256_loadu_ps(lanes.as_ptr());
+                        let r = _mm256_add_ps(_mm256_mul_ps(v, sv), zv);
+                        _mm256_storeu_ps(dst.as_mut_ptr().add(i), r);
+                        i += 8;
+                    }
+                    for i in full..n {
+                        let b = bytes[i / 4];
+                        dst[i] = ((b >> (2 * (i % 4))) & 0x3) as f32 * scale + zero;
+                    }
+                }
+                Bits::Int4 => {
+                    let mut i = 0usize;
+                    while i < full {
+                        let bb = &bytes[i / 2..i / 2 + 4];
+                        let lanes = [
+                            (bb[0] & 0xF) as f32,
+                            (bb[0] >> 4) as f32,
+                            (bb[1] & 0xF) as f32,
+                            (bb[1] >> 4) as f32,
+                            (bb[2] & 0xF) as f32,
+                            (bb[2] >> 4) as f32,
+                            (bb[3] & 0xF) as f32,
+                            (bb[3] >> 4) as f32,
+                        ];
+                        let v = _mm256_loadu_ps(lanes.as_ptr());
+                        let r = _mm256_add_ps(_mm256_mul_ps(v, sv), zv);
+                        _mm256_storeu_ps(dst.as_mut_ptr().add(i), r);
+                        i += 8;
+                    }
+                    for i in full..n {
+                        let b = bytes[i / 2];
+                        dst[i] = ((b >> (4 * (i % 2))) & 0xF) as f32 * scale + zero;
+                    }
+                }
+                Bits::Int8 => {
+                    let mut i = 0usize;
+                    while i < full {
+                        let b = _mm_loadl_epi64(bytes.as_ptr().add(i) as *const __m128i);
+                        let v = _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(b));
+                        let r = _mm256_add_ps(_mm256_mul_ps(v, sv), zv);
+                        _mm256_storeu_ps(dst.as_mut_ptr().add(i), r);
+                        i += 8;
+                    }
+                    for i in full..n {
+                        dst[i] = bytes[i] as f32 * scale + zero;
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    const ALL_BITS: [Bits; 3] = [Bits::Int2, Bits::Int4, Bits::Int8];
+
+    fn assert_wire_identical(a: &Quantized, b: &Quantized, what: &str) {
+        assert_eq!(a.bits.name(), b.bits.name(), "{what}: bits");
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+        assert_eq!(a.params.len(), b.params.len(), "{what}: params len");
+        for (i, ((z1, s1), (z2, s2))) in a.params.iter().zip(b.params.iter()).enumerate() {
+            assert_eq!(z1.to_bits(), z2.to_bits(), "{what}: zero bits at group {i}");
+            assert_eq!(s1.to_bits(), s2.to_bits(), "{what}: scale bits at group {i}");
+        }
+        assert_eq!(a.data, b.data, "{what}: payload bytes");
+    }
+
+    #[test]
+    fn wire_bit_identical_to_fused_across_shapes() {
+        let mut rng = Rng::new(11);
+        // rows not a multiple of GROUP_ROWS, odd cols, cols not a
+        // multiple of 8 — every remainder path.
+        for &(rows, cols) in &[(1usize, 1usize), (3, 7), (4, 8), (9, 33), (16, 50), (5, 64)] {
+            let x: Vec<f32> = (0..rows * cols).map(|_| rng.f32() * 20.0 - 10.0).collect();
+            for bits in ALL_BITS {
+                let seed = rng.next_u64();
+                let a = quantize(&x, rows, cols, bits, seed);
+                let b = fused::quantize(&x, rows, cols, bits, seed);
+                assert_wire_identical(&a, &b, &format!("{}x{} {}", rows, cols, bits.name()));
+            }
+        }
+    }
+
+    #[test]
+    fn wire_bit_identical_with_poison_inputs() {
+        let mut rng = Rng::new(23);
+        let (rows, cols) = (7, 21);
+        let mut x: Vec<f32> = (0..rows * cols).map(|_| rng.f32() - 0.5).collect();
+        for (i, p) in [
+            f32::NAN,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::MAX,
+            f32::MIN,
+            -0.0,
+        ]
+        .iter()
+        .enumerate()
+        {
+            x[i * 19] = *p;
+        }
+        for bits in ALL_BITS {
+            let a = quantize(&x, rows, cols, bits, 99);
+            let b = fused::quantize(&x, rows, cols, bits, 99);
+            assert_wire_identical(&a, &b, &format!("poison {}", bits.name()));
+        }
+    }
+
+    #[test]
+    fn dequantize_bit_identical_to_fused() {
+        let mut rng = Rng::new(31);
+        for &(rows, cols) in &[(2usize, 5usize), (8, 32), (11, 17)] {
+            let x: Vec<f32> = (0..rows * cols).map(|_| rng.f32() * 4.0 - 2.0).collect();
+            for bits in ALL_BITS {
+                let q = fused::quantize(&x, rows, cols, bits, 7);
+                let a = dequantize(&q);
+                let b = fused::dequantize(&q);
+                for (i, (u, v)) in a.iter().zip(b.iter()).enumerate() {
+                    assert_eq!(
+                        u.to_bits(),
+                        v.to_bits(),
+                        "dequant {} at {i}: {u} vs {v}",
+                        bits.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_reuse_buffers() {
+        let x: Vec<f32> = (0..4 * 24).map(|i| (i as f32).cos()).collect();
+        let mut params = vec![(1.0f32, 1.0f32); 9];
+        let mut data = vec![7u8; 999];
+        quantize_into(&x, 4, 24, Bits::Int4, 5, &mut params, &mut data);
+        let q = quantize(&x, 4, 24, Bits::Int4, 5);
+        assert_eq!(params, q.params);
+        assert_eq!(data, q.data);
+        let mut out = vec![0f32; 4 * 24];
+        dequantize_into(&q, &mut out);
+        assert_eq!(out, dequantize(&q));
+    }
+}

@@ -24,7 +24,12 @@
 //!    full-batch fp32, full-batch int4, and the neighbor mini-batch
 //!    fetch, seq + threaded, overlap on and off — while its `TierStats`
 //!    record O((P/g)²) inter-group messages, fewer than the flat pair
-//!    count.
+//!    count;
+//! 6. **SIMD kernel rung** (DESIGN.md §14) — `--agg-kernel simd` (and
+//!    the scalar `blocked` rung) is bit-exact with the seed default
+//!    (`auto`) on per-epoch loss bits and `CommStats` wire bits, fp32
+//!    and int4, both regimes, both transports, overlap on — aggregation
+//!    *and* the comm-path quantizers are pure performance knobs.
 
 use std::sync::Arc;
 use supergcn::comm::transport::{Fabric, TransportKind};
@@ -33,6 +38,7 @@ use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
 use supergcn::coordinator::planner::prepare;
 use supergcn::coordinator::trainer::{TrainConfig, Trainer};
 use supergcn::datasets;
+use supergcn::exec::{AggDispatch, AggKernel};
 use supergcn::perfmodel::MachineProfile;
 use supergcn::quant::Bits;
 use supergcn::sample::{SamplerConfig, SamplerKind};
@@ -271,6 +277,120 @@ fn hierarchical_mini_batch_neighbor_matches_flat_bitwise() {
             assert_loss_bits(&flat_loss, &hier_loss, &what);
             assert_comm_equal(&flat_comm, &hier_comm, &what);
             assert_hier_tiers(&flat_comm, &hier_comm, &what);
+        }
+    }
+}
+
+fn full_batch_run_kernel(
+    transport: TransportKind,
+    quant: Option<Bits>,
+    overlap: bool,
+    kernel: AggKernel,
+) -> (Vec<f32>, CommStats) {
+    let spec = datasets::by_name("arxiv-xs").unwrap();
+    let lg = spec.build();
+    let tc = TrainConfig {
+        epochs: 5,
+        lr: spec.lr,
+        quant,
+        transport,
+        overlap,
+        agg: AggDispatch::default().with_kernel(kernel),
+        seed: 42,
+        ..Default::default()
+    };
+    let (ctxs, mut cfg, _) = prepare(&lg, 4, tc.strategy, None, tc.seed).unwrap();
+    cfg.hidden = spec.hidden;
+    let mut tr = Trainer::new(ctxs, cfg, tc);
+    let losses = tr
+        .run(false)
+        .unwrap()
+        .iter()
+        .map(|s| s.train_loss)
+        .collect();
+    (losses, tr.comm_stats.clone())
+}
+
+fn mini_batch_run_kernel(
+    transport: TransportKind,
+    quant: Option<Bits>,
+    overlap: bool,
+    kernel: AggKernel,
+) -> (Vec<f32>, CommStats) {
+    let spec = datasets::by_name("arxiv-xs").unwrap();
+    let lg = Arc::new(spec.build());
+    let mc = MiniBatchConfig {
+        epochs: 3,
+        lr: spec.lr,
+        hidden: spec.hidden,
+        quant,
+        transport,
+        overlap,
+        agg: AggDispatch::default().with_kernel(kernel),
+        seed: 42,
+        ..Default::default()
+    };
+    let scfg = SamplerConfig {
+        batch_size: 128,
+        fanouts: vec![10, 5, 5],
+        seed: 42,
+        ..Default::default()
+    };
+    let mut tr = MiniBatchTrainer::new(lg, 3, SamplerKind::Neighbor, &scfg, mc).unwrap();
+    let losses = tr
+        .run(false)
+        .unwrap()
+        .iter()
+        .map(|s| s.train_loss)
+        .collect();
+    (losses, tr.comm_stats.clone())
+}
+
+#[test]
+fn simd_kernel_full_batch_matches_default_bitwise() {
+    // The CI matrix leg (filter: simd_kernel): the Simd rung — and the
+    // scalar Blocked rung it must shadow — may not move a single loss or
+    // wire bit vs the seed-default `auto` kernel. int4 routes the
+    // comm-path payloads through the SIMD quantizers (DESIGN.md §14).
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        for quant in [None, Some(Bits::Int4)] {
+            let (base_loss, base_comm) =
+                full_batch_run_kernel(transport, quant, true, AggKernel::Auto);
+            for kernel in [AggKernel::Blocked, AggKernel::Simd] {
+                let (loss, comm) = full_batch_run_kernel(transport, quant, true, kernel);
+                let what = format!(
+                    "simd full-batch {} {} kernel={}",
+                    transport.name(),
+                    quant.map(|b| b.name()).unwrap_or("fp32"),
+                    kernel.name()
+                );
+                assert_loss_bits(&base_loss, &loss, &what);
+                assert_comm_equal(&base_comm, &comm, &what);
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_kernel_mini_batch_matches_default_bitwise() {
+    // Same contract through the mini-batch fetch: the id-request/reply
+    // payloads are quantized by the dispatcher-routed pack/unpack, so
+    // int4 covers the SIMD wire format end to end.
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        for quant in [None, Some(Bits::Int4)] {
+            let (base_loss, base_comm) =
+                mini_batch_run_kernel(transport, quant, true, AggKernel::Auto);
+            for kernel in [AggKernel::Blocked, AggKernel::Simd] {
+                let (loss, comm) = mini_batch_run_kernel(transport, quant, true, kernel);
+                let what = format!(
+                    "simd mini-batch {} {} kernel={}",
+                    transport.name(),
+                    quant.map(|b| b.name()).unwrap_or("fp32"),
+                    kernel.name()
+                );
+                assert_loss_bits(&base_loss, &loss, &what);
+                assert_comm_equal(&base_comm, &comm, &what);
+            }
         }
     }
 }
