@@ -11,14 +11,13 @@
 //!     cargo run --release --example quickstart
 
 use std::sync::Arc;
-use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
 use supergcn::coordinator::planner::prepare;
-use supergcn::coordinator::trainer::{TrainConfig, Trainer};
 use supergcn::datasets;
 use supergcn::graph::stats::stats;
 use supergcn::hier::volume::RemoteStrategy;
 use supergcn::quant::Bits;
-use supergcn::sample::{SamplerConfig, SamplerKind};
+use supergcn::run::RunConfig;
+use supergcn::sample::SamplerKind;
 use supergcn::util::fmt_bytes;
 
 fn main() -> anyhow::Result<()> {
@@ -27,7 +26,9 @@ fn main() -> anyhow::Result<()> {
     println!("dataset {} — {}", spec.name, stats(&lg.graph));
 
     // ---- regime 1: full-batch (the paper's loop) -----------------------
-    let tc = TrainConfig {
+    // One RunConfig per run (DESIGN.md §15): trainers for both regimes
+    // are constructed through it instead of per-regime config literals.
+    let rc = RunConfig {
         epochs: 60,
         lr: spec.lr,
         quant: Some(Bits::Int2),
@@ -35,14 +36,14 @@ fn main() -> anyhow::Result<()> {
         strategy: RemoteStrategy::Hybrid,
         ..Default::default()
     };
-    let (ctxs, cfg, plans) = prepare(&lg, 4, tc.strategy, None, tc.seed)?;
+    let (ctxs, cfg, plans) = prepare(&lg, 4, rc.strategy, None, rc.seed)?;
     println!(
         "partitioned into {} workers; halo rows/layer: {}",
         plans.len(),
         plans.iter().map(|p| p.send_rows()).sum::<usize>()
     );
 
-    let mut tr = Trainer::new(ctxs, cfg, tc);
+    let mut tr = rc.full_batch_trainer(ctxs, cfg);
     let full_stats = tr.run(true)?;
     let last = full_stats.last().unwrap();
     println!(
@@ -53,19 +54,17 @@ fn main() -> anyhow::Result<()> {
     let full_epoch_bytes = full_stats[1].comm_data_bytes;
 
     // ---- regime 2: mini-batch neighbor sampling on the same substrate --
-    let scfg = SamplerConfig {
-        batch_size: 512,
-        fanouts: vec![15, 10, 5],
-        ..Default::default()
-    };
-    let mc = MiniBatchConfig {
+    let rc_mb = RunConfig {
+        sampler: SamplerKind::Neighbor,
         epochs: 60,
         lr: spec.lr,
         quant: Some(Bits::Int2),
         hidden: spec.hidden,
+        batch_size: 512,
+        fanouts: vec![15, 10, 5],
         ..Default::default()
     };
-    let mut mb = MiniBatchTrainer::new(Arc::new(lg), 4, SamplerKind::Neighbor, &scfg, mc)?;
+    let mut mb = rc_mb.minibatch_trainer(Arc::new(lg), 4)?;
     println!(
         "\nmini-batch: sampler={}, {} batches/epoch over the same 4-way partition",
         mb.sampler_name(),

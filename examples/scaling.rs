@@ -3,8 +3,8 @@
 //!
 //!     cargo run --release --example scaling -- --dataset products-s --procs 2,4,8,16
 
-use supergcn::coordinator::trainer::TrainConfig;
 use supergcn::exp::{steady_epoch_secs, train_native, Table};
+use supergcn::run::RunConfig;
 use supergcn::datasets;
 use supergcn::hier::volume::RemoteStrategy;
 use supergcn::perfmodel::MachineProfile;
@@ -31,21 +31,21 @@ fn main() -> anyhow::Result<()> {
         &["procs", "w/o comm opt (s/epoch)", "w/ comm opt (s/epoch)", "speedup"],
     );
     for k in a.get_usize_list("procs") {
-        let base = TrainConfig {
+        let base = RunConfig {
             strategy: RemoteStrategy::PostOnly,
             quant: None,
             machine: machine.clone(),
             ..Default::default()
         };
-        let opt = TrainConfig {
+        let opt = RunConfig {
             strategy: RemoteStrategy::Hybrid,
             quant: Some(Bits::Int2),
             label_prop: true,
             machine: machine.clone(),
             ..Default::default()
         };
-        let (s0, _) = train_native(&spec, k, base, Some(epochs))?;
-        let (s1, _) = train_native(&spec, k, opt, Some(epochs))?;
+        let (s0, _) = train_native(&spec, k, base.train_config(), Some(epochs))?;
+        let (s1, _) = train_native(&spec, k, opt.train_config(), Some(epochs))?;
         let t0 = steady_epoch_secs(&s0, epochs / 2);
         let t1 = steady_epoch_secs(&s1, epochs / 2);
         t.row(vec![

@@ -17,8 +17,8 @@ use supergcn::comm::transport::TransportKind;
 use supergcn::backend::xla::XlaBackend;
 use supergcn::backend::Backend;
 use supergcn::coordinator::planner::prepare;
-use supergcn::coordinator::trainer::{TrainConfig, Trainer};
 use supergcn::exec::{AggDispatch, AggKernel};
+use supergcn::run::RunConfig;
 use supergcn::graph::generate::sbm;
 use supergcn::graph::stats::stats;
 use supergcn::hier::volume::RemoteStrategy;
@@ -41,7 +41,9 @@ fn main() -> anyhow::Result<()> {
 
     let rt = Runtime::load(artifacts, "quickstart")?;
     let shape_cfg = rt.config.clone();
-    let tc = TrainConfig {
+    // One RunConfig describes the whole run (DESIGN.md §15) — the CLI,
+    // benches, and this driver all construct trainers through it.
+    let rc = RunConfig {
         epochs: 150,
         lr: 0.01,
         quant: Some(Bits::Int2),
@@ -71,14 +73,22 @@ fn main() -> anyhow::Result<()> {
         // CLI equivalent: `supergcn train --agg-kernel simd`
         // (the default `auto` already prefers it when the ISA is there).
         agg: AggDispatch::default().with_kernel(AggKernel::Simd),
+        // Fault tolerance (DESIGN.md §15) is off here, but the same
+        // struct drives it: `checkpoint_every: 10` saves a resumable
+        // checkpoint every 10 epochs, `resume: Some(path)` continues one
+        // with bit-identical losses, and `chaos: Some(FaultSpec { .. })`
+        // kills a rank mid-epoch to exercise the elastic re-plan.
+        // CLI equivalents: `supergcn train --checkpoint-every 10
+        // --checkpoint-path run.ckpt --resume run.ckpt
+        // --chaos rank=1,epoch=3`.
         ..Default::default()
     };
-    let (ctxs, cfg, _) = prepare(&lg, 4, tc.strategy, Some(shape_cfg), tc.seed)?;
+    let (ctxs, cfg, _) = prepare(&lg, 4, rc.strategy, Some(shape_cfg), rc.seed)?;
 
     // Phase 1: the full three-layer stack through PJRT, op-for-op against
     // the native kernels on worker 0's real padded tensors.
     println!("\n-- phase 1: XLA artifact ops vs native kernels (PJRT) --");
-    let params = ModelParams::init(&cfg, tc.seed);
+    let params = ModelParams::init(&cfg, rc.seed);
     let mut xla = XlaBackend::new(rt);
     let mut native = NativeBackend::new(cfg.clone());
     let n = cfg.n_pad;
@@ -106,7 +116,7 @@ fn main() -> anyhow::Result<()> {
 
     // Phase 2: the unified engine to convergence on the same contexts.
     println!("\n-- phase 2: exec::Engine training to convergence --");
-    let mut tr = Trainer::new(ctxs, cfg, tc);
+    let mut tr = rc.full_batch_trainer(ctxs, cfg);
     // Record per-rank spans for the whole run (DESIGN.md §13): pid =
     // rank, tid = lane; load the file at https://ui.perfetto.dev.
     // CLI equivalents: `supergcn train --trace trace_e2e.json

@@ -12,7 +12,7 @@
 //! negative; w/ comm-opt always ≥ w/o.
 
 use supergcn::coordinator::planner::prepare;
-use supergcn::coordinator::trainer::TrainConfig;
+use supergcn::run::RunConfig;
 use supergcn::datasets;
 use supergcn::exp::{steady_epoch_secs, train_native, Table};
 use supergcn::hier::remote_pairs;
@@ -39,21 +39,21 @@ fn main() {
         // Executed points.
         let mut compute_ref: Option<(usize, f64)> = None; // (P, epoch compute secs)
         for k in [4usize, 16, 64] {
-            let base = TrainConfig {
+            let base = RunConfig {
                 strategy: RemoteStrategy::PostOnly,
                 quant: None,
                 machine: machine.clone(),
                 ..Default::default()
             };
-            let opt = TrainConfig {
+            let opt = RunConfig {
                 strategy: RemoteStrategy::Hybrid,
                 quant: Some(Bits::Int2),
                 label_prop: true,
                 machine: machine.clone(),
                 ..Default::default()
             };
-            let (s0, _) = train_native(&spec, k, base, Some(epochs)).unwrap();
-            let (s1, _) = train_native(&spec, k, opt, Some(epochs)).unwrap();
+            let (s0, _) = train_native(&spec, k, base.train_config(), Some(epochs)).unwrap();
+            let (s1, _) = train_native(&spec, k, opt.train_config(), Some(epochs)).unwrap();
             let t0 = steady_epoch_secs(&s0, epochs);
             let t1 = steady_epoch_secs(&s1, epochs);
             t.row(vec![

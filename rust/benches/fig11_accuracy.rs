@@ -6,40 +6,40 @@
 //! the gap (and speeds convergence); DistGNN's staleness converges lower /
 //! noisier.
 
-use supergcn::coordinator::trainer::TrainConfig;
+use supergcn::run::RunConfig;
 use supergcn::datasets;
 use supergcn::exp::{best_test_acc, train_native, Table};
 use supergcn::hier::volume::RemoteStrategy;
 use supergcn::quant::Bits;
 
-fn settings() -> Vec<(&'static str, TrainConfig)> {
+fn settings() -> Vec<(&'static str, RunConfig)> {
     vec![
         (
             "DistGNN(cd-5)",
-            TrainConfig {
+            RunConfig {
                 strategy: RemoteStrategy::PreOnly,
                 delay_comm: 5,
                 ..Default::default()
             },
         ),
-        ("FP32 w/o LP", TrainConfig::default()),
+        ("FP32 w/o LP", RunConfig::default()),
         (
             "Int2 w/o LP",
-            TrainConfig {
+            RunConfig {
                 quant: Some(Bits::Int2),
                 ..Default::default()
             },
         ),
         (
             "FP32 w/ LP",
-            TrainConfig {
+            RunConfig {
                 label_prop: true,
                 ..Default::default()
             },
         ),
         (
             "Int2 w/ LP",
-            TrainConfig {
+            RunConfig {
                 quant: Some(Bits::Int2),
                 label_prop: true,
                 ..Default::default()
@@ -61,7 +61,7 @@ fn main() {
             &hdr_refs,
         );
         for (label, tc) in settings() {
-            let (stats, _) = train_native(&spec, k, tc, Some(epochs)).unwrap();
+            let (stats, _) = train_native(&spec, k, tc.train_config(), Some(epochs)).unwrap();
             let mut row = vec![label.to_string()];
             for i in 0..8 {
                 let e = ((i + 1) * every - 1).min(stats.len() - 1);

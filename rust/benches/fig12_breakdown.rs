@@ -11,7 +11,7 @@
 
 use supergcn::comm::transport::TransportKind;
 use supergcn::coordinator::planner::prepare;
-use supergcn::coordinator::trainer::{TrainConfig, Trainer};
+use supergcn::run::RunConfig;
 use supergcn::datasets;
 use supergcn::exec::{AggDispatch, AggKernel};
 use supergcn::exp::Table;
@@ -25,7 +25,7 @@ fn run(spec_name: &str, k: usize, opt: bool, epochs: usize) -> Breakdown {
     let spec = datasets::by_name(spec_name).unwrap();
     let lg = spec.build();
     let tc = if opt {
-        TrainConfig {
+        RunConfig {
             strategy: RemoteStrategy::Hybrid,
             quant: Some(Bits::Int2),
             label_prop: true,
@@ -35,7 +35,7 @@ fn run(spec_name: &str, k: usize, opt: bool, epochs: usize) -> Breakdown {
             ..Default::default()
         }
     } else {
-        TrainConfig {
+        RunConfig {
             strategy: RemoteStrategy::PostOnly,
             quant: None,
             machine: MachineProfile::abci(),
@@ -47,7 +47,7 @@ fn run(spec_name: &str, k: usize, opt: bool, epochs: usize) -> Breakdown {
         }
     };
     let (ctxs, cfg, _) = prepare(&lg, k, tc.strategy, None, tc.seed).unwrap();
-    let mut tr = Trainer::new(ctxs, cfg, tc);
+    let mut tr = tc.full_batch_trainer(ctxs, cfg);
     let stats = tr.run(false).unwrap();
     let mut total = Breakdown::new();
     for s in stats.iter().skip(1) {
@@ -82,7 +82,7 @@ fn main() {
     // run's OverlapLedger, overlap vs phase-serial model on the same run.
     let spec = datasets::by_name("products-s").unwrap();
     let lg = spec.build();
-    let tc = TrainConfig {
+    let tc = RunConfig {
         strategy: RemoteStrategy::Hybrid,
         quant: Some(Bits::Int2),
         label_prop: true,
@@ -94,7 +94,7 @@ fn main() {
         ..Default::default()
     };
     let (ctxs, cfg, _) = prepare(&lg, 8, tc.strategy, None, tc.seed).unwrap();
-    let mut tr = Trainer::new(ctxs, cfg, tc);
+    let mut tr = tc.full_batch_trainer(ctxs, cfg);
     // Trace the overlap view (DESIGN.md §13): spans from all 8 rank lanes
     // plus the driver lane land in one tracer; count reported below.
     let tracer = Tracer::new();

@@ -9,7 +9,7 @@
 //! communication becomes the bottleneck.
 
 use supergcn::coordinator::planner::partition_for;
-use supergcn::coordinator::trainer::TrainConfig;
+use supergcn::run::RunConfig;
 use supergcn::datasets;
 use supergcn::exp::{steady_epoch_secs, train_native, Table};
 use supergcn::hier::remote_pairs;
@@ -29,22 +29,22 @@ fn main() {
         );
         let mut prev_speedup = 0.0f64;
         for k in [4usize, 8, 16, 32] {
-            let distgnn = TrainConfig {
+            let distgnn = RunConfig {
                 strategy: RemoteStrategy::PreOnly,
                 delay_comm: 5,
                 quant: None,
                 machine: MachineProfile::abci(),
                 ..Default::default()
             };
-            let supergcn = TrainConfig {
+            let supergcn = RunConfig {
                 strategy: RemoteStrategy::Hybrid,
                 quant: Some(Bits::Int2),
                 label_prop: true,
                 machine: MachineProfile::abci(),
                 ..Default::default()
             };
-            let (s0, _) = train_native(&spec, k, distgnn, Some(epochs)).unwrap();
-            let (s1, _) = train_native(&spec, k, supergcn, Some(epochs)).unwrap();
+            let (s0, _) = train_native(&spec, k, distgnn.train_config(), Some(epochs)).unwrap();
+            let (s1, _) = train_native(&spec, k, supergcn.train_config(), Some(epochs)).unwrap();
             // DistGNN amortizes comm over cd epochs — average includes
             // both exchange and silent epochs, like the paper measures.
             let t0 = s0.iter().map(|s| s.modeled_secs).sum::<f64>() / s0.len() as f64;

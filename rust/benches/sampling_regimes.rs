@@ -10,12 +10,11 @@
 //!
 //!     cargo bench --bench sampling_regimes
 
-use supergcn::coordinator::minibatch::MiniBatchConfig;
-use supergcn::coordinator::trainer::TrainConfig;
 use supergcn::datasets;
 use supergcn::exp::{best_test_acc, steady_epoch_secs, train_minibatch, train_native, Table};
 use supergcn::quant::Bits;
-use supergcn::sample::{SamplerConfig, SamplerKind};
+use supergcn::run::RunConfig;
+use supergcn::sample::SamplerKind;
 use supergcn::util::fmt_bytes;
 
 fn main() {
@@ -41,12 +40,12 @@ fn main() {
         let qname = quant.map(|b| b.name()).unwrap_or("fp32");
 
         // Full-batch baseline (the paper's loop).
-        let tc = TrainConfig {
+        let tc = RunConfig {
             epochs,
             quant,
             ..Default::default()
         };
-        let (stats, _tr) = train_native(&spec, k, tc, Some(epochs)).unwrap();
+        let (stats, _tr) = train_native(&spec, k, tc.train_config(), Some(epochs)).unwrap();
         t.row(vec![
             "full-batch".into(),
             qname.into(),
@@ -64,18 +63,19 @@ fn main() {
             SamplerKind::SaintEdge,
             SamplerKind::Cluster,
         ] {
-            let scfg = SamplerConfig {
+            let rc = RunConfig {
+                sampler: kind,
+                epochs,
+                quant,
                 batch_size: 512,
                 fanouts: vec![15, 10, 5],
                 num_clusters: 4 * k,
                 ..Default::default()
             };
-            let mc = MiniBatchConfig {
-                epochs,
-                quant,
-                ..Default::default()
-            };
-            let (stats, _tr) = train_minibatch(&spec, k, kind, &scfg, mc, Some(epochs)).unwrap();
+            let (stats, _tr) = train_minibatch(
+                &spec, k, kind, &rc.sampler_config(), rc.minibatch_config(), Some(epochs),
+            )
+            .unwrap();
             t.row(vec![
                 kind.name().into(),
                 qname.into(),

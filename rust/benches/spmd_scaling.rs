@@ -32,14 +32,14 @@
 
 use supergcn::comm::transport::{Topology, TransportKind};
 use supergcn::comm::CommStats;
-use supergcn::coordinator::minibatch::MiniBatchConfig;
 use supergcn::coordinator::planner::{group_send_rows, prepare};
-use supergcn::coordinator::trainer::{EpochStats, TrainConfig, Trainer};
+use supergcn::coordinator::trainer::EpochStats;
 use supergcn::datasets;
 use supergcn::exec::OverlapLedger;
 use supergcn::exp::{train_minibatch, Table};
 use supergcn::obs::{Telemetry, Tracer};
-use supergcn::sample::{SamplerConfig, SamplerKind};
+use supergcn::run::RunConfig;
+use supergcn::sample::SamplerKind;
 use supergcn::util::json::{to_pretty, Json};
 
 /// Epoch wall seconds, skipping epoch 0 (allocation/lazy-init warmup).
@@ -82,16 +82,16 @@ fn main() -> anyhow::Result<()> {
     for &k in &ks {
         let run = |transport: TransportKind| -> anyhow::Result<(f64, f64, f64)> {
             let lg = spec.build();
-            let tc = TrainConfig {
+            let rc = RunConfig {
                 epochs,
                 lr: spec.lr,
                 transport,
                 seed: 42,
                 ..Default::default()
             };
-            let (ctxs, mut cfg, _) = prepare(&lg, k, tc.strategy, None, tc.seed)?;
+            let (ctxs, mut cfg, _) = prepare(&lg, k, rc.strategy, None, rc.seed)?;
             cfg.hidden = spec.hidden;
-            let mut tr = Trainer::new(ctxs, cfg, tc);
+            let mut tr = rc.full_batch_trainer(ctxs, cfg);
             let stats = tr.run(false)?;
             Ok((
                 steady_wall_secs(&stats),
@@ -114,20 +114,18 @@ fn main() -> anyhow::Result<()> {
     // ---- mini-batch regime (neighbor sampler) -----------------------
     for &k in &ks {
         let run = |transport: TransportKind| -> anyhow::Result<(f64, f64, f64)> {
-            let mc = MiniBatchConfig {
+            let rc = RunConfig {
+                sampler: SamplerKind::Neighbor,
                 epochs,
                 transport,
                 seed: 42,
-                ..Default::default()
-            };
-            let scfg = SamplerConfig {
                 batch_size: 128,
                 fanouts: vec![10, 5, 5],
-                seed: 42,
                 ..Default::default()
             };
-            let (stats, tr) =
-                train_minibatch(&spec, k, SamplerKind::Neighbor, &scfg, mc, None)?;
+            let (stats, tr) = train_minibatch(
+                &spec, k, SamplerKind::Neighbor, &rc.sampler_config(), rc.minibatch_config(), None,
+            )?;
             Ok((
                 steady_wall_secs(&stats),
                 tr.comm_stats.total_data_bytes(),
@@ -152,7 +150,7 @@ fn main() -> anyhow::Result<()> {
     let overlap_k = 4usize;
     let run_fb = |overlap: bool, tracer: Option<Tracer>| -> anyhow::Result<(f64, OverlapLedger)> {
         let lg = spec.build();
-        let tc = TrainConfig {
+        let rc = RunConfig {
             epochs,
             lr: spec.lr,
             transport: TransportKind::Threaded,
@@ -160,9 +158,9 @@ fn main() -> anyhow::Result<()> {
             seed: 42,
             ..Default::default()
         };
-        let (ctxs, mut cfg, _) = prepare(&lg, overlap_k, tc.strategy, None, tc.seed)?;
+        let (ctxs, mut cfg, _) = prepare(&lg, overlap_k, rc.strategy, None, rc.seed)?;
         cfg.hidden = spec.hidden;
-        let mut tr = Trainer::new(ctxs, cfg, tc);
+        let mut tr = rc.full_batch_trainer(ctxs, cfg);
         tr.telemetry = Telemetry { tracer, metrics: None };
         let stats = tr.run(false)?;
         let ledger = stats.last().unwrap().overlap.clone();
@@ -227,7 +225,7 @@ fn main() -> anyhow::Result<()> {
         .unwrap_or(2);
     let run_grouped = |group_size: usize| -> anyhow::Result<(Vec<f32>, CommStats)> {
         let lg = spec.build();
-        let tc = TrainConfig {
+        let rc = RunConfig {
             epochs,
             lr: spec.lr,
             transport: TransportKind::Threaded,
@@ -235,9 +233,9 @@ fn main() -> anyhow::Result<()> {
             seed: 42,
             ..Default::default()
         };
-        let (ctxs, mut cfg, _) = prepare(&lg, hier_k, tc.strategy, None, tc.seed)?;
+        let (ctxs, mut cfg, _) = prepare(&lg, hier_k, rc.strategy, None, rc.seed)?;
         cfg.hidden = spec.hidden;
-        let mut tr = Trainer::new(ctxs, cfg, tc);
+        let mut tr = rc.full_batch_trainer(ctxs, cfg);
         let losses = tr.run(false)?.iter().map(|s| s.train_loss).collect();
         Ok((losses, tr.comm_stats.clone()))
     };

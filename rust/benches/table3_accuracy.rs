@@ -5,40 +5,40 @@
 //! drop on hard datasets; LP restores it; DistGNN (cd-5 staleness) lands
 //! lower.
 
-use supergcn::coordinator::trainer::TrainConfig;
+use supergcn::run::RunConfig;
 use supergcn::datasets;
 use supergcn::exp::{best_test_acc, train_native, Table};
 use supergcn::hier::volume::RemoteStrategy;
 use supergcn::quant::Bits;
 
 fn main() {
-    let settings: Vec<(&str, TrainConfig)> = vec![
+    let settings: Vec<(&str, RunConfig)> = vec![
         (
             "DistGNN(cd-5)",
-            TrainConfig {
+            RunConfig {
                 strategy: RemoteStrategy::PreOnly,
                 delay_comm: 5,
                 ..Default::default()
             },
         ),
-        ("SuperGCN FP32 w/o LP", TrainConfig::default()),
+        ("SuperGCN FP32 w/o LP", RunConfig::default()),
         (
             "SuperGCN Int2 w/o LP",
-            TrainConfig {
+            RunConfig {
                 quant: Some(Bits::Int2),
                 ..Default::default()
             },
         ),
         (
             "SuperGCN FP32 w/ LP",
-            TrainConfig {
+            RunConfig {
                 label_prop: true,
                 ..Default::default()
             },
         ),
         (
             "SuperGCN Int2 w/ LP",
-            TrainConfig {
+            RunConfig {
                 quant: Some(Bits::Int2),
                 label_prop: true,
                 ..Default::default()
@@ -55,7 +55,7 @@ fn main() {
     for (label, tc) in &settings {
         let mut row = vec![label.to_string()];
         for &k in &procs {
-            let (stats, _) = train_native(&spec, k, tc.clone(), Some(50)).unwrap();
+            let (stats, _) = train_native(&spec, k, tc.train_config(), Some(50)).unwrap();
             row.push(format!("{:.2}", best_test_acc(&stats) * 100.0));
         }
         t.row(row);
@@ -66,7 +66,7 @@ fn main() {
     let spec2 = datasets::by_name("products-s").unwrap();
     let mut t2 = Table::new("Table 3 (cont.): products-s best test accuracy (%), 4 procs", &["method", "acc"]);
     for (label, tc) in &settings {
-        let (stats, _) = train_native(&spec2, 4, tc.clone(), Some(30)).unwrap();
+        let (stats, _) = train_native(&spec2, 4, tc.train_config(), Some(30)).unwrap();
         t2.row(vec![label.to_string(), format!("{:.2}", best_test_acc(&stats) * 100.0)]);
     }
     t2.print();

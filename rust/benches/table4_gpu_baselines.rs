@@ -8,12 +8,12 @@
 //! report our measured epoch time alongside the paper's own SuperGCN
 //! numbers and the GPU rows verbatim for context.
 
-use supergcn::coordinator::trainer::TrainConfig;
 use supergcn::datasets;
 use supergcn::exp::{best_test_acc, steady_epoch_secs, train_native, Table};
 use supergcn::hier::volume::RemoteStrategy;
 use supergcn::perfmodel::MachineProfile;
 use supergcn::quant::Bits;
+use supergcn::run::RunConfig;
 
 fn main() {
     // Paper Table 4 rows (products, reddit): (method, platform, time s, acc %).
@@ -44,14 +44,14 @@ fn main() {
         let spec = datasets::by_name(name).unwrap();
         let mut best: Option<(usize, f64, f32)> = None;
         for k in [4usize, 8, 16] {
-            let tc = TrainConfig {
+            let tc = RunConfig {
                 strategy: RemoteStrategy::Hybrid,
                 quant: Some(Bits::Int2),
                 label_prop: true,
                 machine: MachineProfile::abci(),
                 ..Default::default()
             };
-            let (stats, _) = train_native(&spec, k, tc, Some(30)).unwrap();
+            let (stats, _) = train_native(&spec, k, tc.train_config(), Some(30)).unwrap();
             let et = steady_epoch_secs(&stats, 10);
             let acc = best_test_acc(&stats);
             if best.map(|(_, t, _)| et < t).unwrap_or(true) {

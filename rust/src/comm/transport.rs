@@ -74,6 +74,109 @@ impl TransportKind {
     }
 }
 
+/// A chaos-injection order (CLI: `supergcn train --chaos rank=R,epoch=E`;
+/// test/bench only, DESIGN.md §15): kill rank `rank` at the start of its
+/// first collective in epoch `epoch`, exercising the poisoned-barrier
+/// propagation and the driver's elastic recovery path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Rank to kill.
+    pub rank: usize,
+    /// Epoch in which the kill fires (0-based, matching the trainers'
+    /// epoch counters).
+    pub epoch: usize,
+}
+
+impl FaultSpec {
+    /// Parse the CLI form `rank=R,epoch=E` (keys in either order, both
+    /// required).
+    pub fn parse(s: &str) -> anyhow::Result<FaultSpec> {
+        let mut rank = None;
+        let mut epoch = None;
+        for part in s.split(',') {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("chaos spec must be rank=R,epoch=E (got '{s}')"))?;
+            let n: usize = val
+                .trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("chaos {key} must be an integer, got '{val}'"))?;
+            match key.trim() {
+                "rank" => rank = Some(n),
+                "epoch" => epoch = Some(n),
+                other => anyhow::bail!("unknown chaos key '{other}' (expected rank/epoch)"),
+            }
+        }
+        match (rank, epoch) {
+            (Some(rank), Some(epoch)) => Ok(FaultSpec { rank, epoch }),
+            _ => anyhow::bail!("chaos spec must set both rank= and epoch= (got '{s}')"),
+        }
+    }
+}
+
+/// One-shot arming state for a [`FaultSpec`]: the trainers call
+/// [`FaultPlan::arm`] when building each epoch's fabric, and the kill
+/// fires at most once — the retry epoch after recovery gets an unarmed
+/// fabric, so a chaos run converges instead of dying forever.
+#[derive(Debug)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+    fired: std::sync::atomic::AtomicBool,
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec) -> Self {
+        Self {
+            spec,
+            fired: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    pub fn spec(&self) -> FaultSpec {
+        self.spec
+    }
+
+    /// Returns the rank to kill if the fault is scheduled for `epoch` and
+    /// has not fired yet (and marks it fired).
+    pub fn arm(&self, epoch: usize) -> Option<usize> {
+        use std::sync::atomic::Ordering;
+        if epoch == self.spec.epoch
+            && self
+                .fired
+                .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok()
+        {
+            Some(self.spec.rank)
+        } else {
+            None
+        }
+    }
+}
+
+/// Structural panic payload of a chaos-injected kill, so `run_ranks` can
+/// tell an injected fault from a genuine bug panic.
+pub(crate) struct ChaosKill;
+
+/// A rank thread died mid-epoch (panic or injected fault). The typed
+/// error lets the driver's elastic recovery identify *which* rank to
+/// re-plan around; the `Display` keeps the exact message shape the
+/// untyped bail used before ("rank {rank} thread panicked: {msg}").
+#[derive(Debug)]
+pub struct RankLost {
+    /// The rank whose thread died (first by rank order when several did).
+    pub rank: usize,
+    /// Stringified panic payload.
+    pub msg: String,
+}
+
+impl std::fmt::Display for RankLost {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rank {} thread panicked: {}", self.rank, self.msg)
+    }
+}
+
+impl std::error::Error for RankLost {}
+
 /// Physical placement of the SPMD ranks on simulated nodes (CLI:
 /// `supergcn train --group-size g`; DESIGN.md §12). Ranks are grouped
 /// contiguously — rank `r` lives in group `r / g` — mirroring how MPI
@@ -264,6 +367,9 @@ pub struct Fabric {
     /// calls, so the ring's partial/broadcast copies stop allocating once
     /// the pool is warm (the gradient shape is fixed for a whole run).
     pool: Mutex<Vec<Vec<f32>>>,
+    /// Chaos injection: this rank's thread panics at the entry of its
+    /// next collective (armed per epoch via [`FaultPlan::arm`]).
+    kill: Option<usize>,
 }
 
 impl Fabric {
@@ -283,6 +389,25 @@ impl Fabric {
             gather: Mutex::new((0..k).map(|_| None).collect()),
             barrier: PoisonBarrier::new(k),
             pool: Mutex::new(Vec::new()),
+            kill: None,
+        }
+    }
+
+    /// Arm chaos injection: `Some(rank)` makes that rank's thread die at
+    /// the entry of its next collective on this fabric (test/bench only —
+    /// see [`FaultSpec`]).
+    pub fn with_chaos(mut self, kill: Option<usize>) -> Self {
+        self.kill = kill;
+        self
+    }
+
+    /// Fire the armed kill if `rank` is the victim: emits a recovery
+    /// trace instant, then panics with the structural [`ChaosKill`]
+    /// payload (poisoning the fabric via the normal unwind path).
+    fn maybe_kill(&self, rank: usize) {
+        if self.kill == Some(rank) {
+            obs::instant(TraceCategory::Recovery, "chaos kill");
+            std::panic::panic_any(ChaosKill);
         }
     }
 
@@ -367,6 +492,7 @@ impl Fabric {
         stats: &mut CommStats,
     ) {
         let _sp = obs::span(TraceCategory::HaloPost, "post alltoallv");
+        self.maybe_kill(rank);
         assert_eq!(sends.len(), self.k, "send row must have one payload per rank");
         // Tier accounting first (a no-op on the flat topology), then the
         // logical per-payload charges in the same ascending-peer order the
@@ -412,6 +538,7 @@ impl Fabric {
         profile: &MachineProfile,
     ) -> f64 {
         let _sp = obs::span(TraceCategory::Collective, "ring allreduce");
+        self.maybe_kill(rank);
         let k = self.k;
         if k <= 1 {
             return 0.0;
@@ -475,6 +602,7 @@ impl Fabric {
     /// accumulation bit-for-bit.
     pub fn allgather_f64(&self, rank: usize, vals: Vec<f64>) -> Vec<Vec<f64>> {
         let _sp = obs::span(TraceCategory::Collective, "allgather f64");
+        self.maybe_kill(rank);
         {
             let mut slots = lock(&self.gather);
             debug_assert!(slots[rank].is_none(), "allgather slot not drained");
@@ -552,6 +680,8 @@ pub fn run_ranks(fabric: &Fabric, bodies: Vec<RankBody<'_>>) -> anyhow::Result<(
                             fabric.poison();
                             if p.downcast_ref::<FabricPoisoned>().is_some() {
                                 RankOutcome::PoisonUnwind
+                            } else if p.downcast_ref::<ChaosKill>().is_some() {
+                                RankOutcome::Panic("chaos-injected rank failure (--chaos)".into())
                             } else {
                                 RankOutcome::Panic(panic_message(p.as_ref()))
                             }
@@ -581,7 +711,9 @@ pub fn run_ranks(fabric: &Fabric, bodies: Vec<RankBody<'_>>) -> anyhow::Result<(
         }
     }
     if let Some((rank, msg)) = first_panic {
-        anyhow::bail!("rank {rank} thread panicked: {msg}");
+        // Typed so the driver's elastic recovery can downcast to learn
+        // *which* rank died; Display keeps the historical message shape.
+        return Err(anyhow::Error::new(RankLost { rank, msg }));
     }
     if poisoned_only {
         anyhow::bail!("SPMD fabric poisoned with no surviving root-cause record");
@@ -881,6 +1013,46 @@ mod tests {
         let msg = err.to_string();
         assert!(msg.contains("rank 1 died mid-exchange"), "payload lost: {msg}");
         assert!(msg.contains("panicked"), "panic class lost: {msg}");
+    }
+
+    #[test]
+    fn fault_spec_parse_accepts_both_orders_and_rejects_junk() {
+        assert_eq!(FaultSpec::parse("rank=1,epoch=3").unwrap(), FaultSpec { rank: 1, epoch: 3 });
+        assert_eq!(FaultSpec::parse("epoch=0,rank=2").unwrap(), FaultSpec { rank: 2, epoch: 0 });
+        for bad in ["", "rank=1", "epoch=2", "rank=x,epoch=1", "rank=1,when=2", "1,2"] {
+            assert!(FaultSpec::parse(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn fault_plan_arms_once_at_the_scheduled_epoch() {
+        let plan = FaultPlan::new(FaultSpec { rank: 2, epoch: 5 });
+        assert_eq!(plan.arm(4), None);
+        assert_eq!(plan.arm(5), Some(2));
+        // One-shot: the post-recovery retry of epoch 5 must run clean.
+        assert_eq!(plan.arm(5), None);
+        assert_eq!(plan.arm(6), None);
+    }
+
+    #[test]
+    fn chaos_kill_surfaces_as_typed_rank_lost() {
+        let k = 3;
+        let fabric = Fabric::new(k).with_chaos(Some(1));
+        let bodies: Vec<RankBody<'_>> = (0..k)
+            .map(|rank| {
+                let fabric = &fabric;
+                Box::new(move || {
+                    let _ = fabric.allgather_f64(rank, vec![rank as f64]);
+                    Ok(())
+                }) as RankBody<'_>
+            })
+            .collect();
+        let err = run_ranks(&fabric, bodies).unwrap_err();
+        let lost = err.downcast_ref::<RankLost>().expect("typed RankLost");
+        assert_eq!(lost.rank, 1);
+        let msg = err.to_string();
+        assert!(msg.contains("rank 1 thread panicked"), "{msg}");
+        assert!(msg.contains("chaos-injected"), "{msg}");
     }
 
     #[test]

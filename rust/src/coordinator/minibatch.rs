@@ -35,8 +35,10 @@
 //! the full-batch trainer to f32 round-off
 //! (`tests/trainer_equivalence.rs`).
 
-use super::trainer::EpochStats;
-use crate::comm::transport::{self, Fabric, RankBody, Topology, TransportKind};
+use super::trainer::{CheckpointPolicy, DriverSnapshot, EpochStats};
+use crate::comm::transport::{
+    self, Fabric, FaultPlan, RankBody, RankLost, Topology, TransportKind,
+};
 use crate::comm::{collective, CommStats};
 use crate::exec::{
     AggDispatch, Engine, LossSpec, LossTotals, MiniBatchCtx, MiniBatchRankCtx, OverlapLedger,
@@ -44,7 +46,7 @@ use crate::exec::{
 };
 use crate::graph::generate::LabelledGraph;
 use crate::model::optimizer::{OptKind, Optimizer};
-use crate::model::ModelParams;
+use crate::model::{checkpoint, ModelParams};
 use crate::obs::{self, ExchangeRow, Telemetry, TraceCategory};
 use crate::partition::Partition;
 use crate::perfmodel::{self, MachineProfile};
@@ -53,6 +55,7 @@ use crate::runtime::ShapeConfig;
 use crate::sample::{build_sampler, MiniBatch, Sampler, SamplerConfig, SamplerKind};
 use crate::util::timer::{Breakdown, Category, ALL_CATEGORIES};
 use anyhow::Result;
+use std::path::Path;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -125,6 +128,17 @@ pub struct MiniBatchTrainer {
     /// Rank placement (`--group-size`, DESIGN.md §12), built once per run.
     topo: Topology,
     epoch: usize,
+    /// Epoch-boundary checkpointing (None = off; DESIGN.md §15).
+    pub ckpt: Option<CheckpointPolicy>,
+    /// Chaos injection (`--chaos`; test/bench only).
+    pub chaos: Option<FaultPlan>,
+    /// Elastic rank-failure recovery: when set, a rank loss re-plans the
+    /// failed shard across survivors instead of killing the run. (The
+    /// trainer already owns the graph + partition, so no extra context is
+    /// needed, unlike the full-batch `ElasticCtx`.)
+    pub elastic: bool,
+    /// Rank losses absorbed so far this run.
+    recovered: usize,
 }
 
 impl MiniBatchTrainer {
@@ -188,6 +202,10 @@ impl MiniBatchTrainer {
             telemetry: Telemetry::default(),
             topo,
             epoch: 0,
+            ckpt: None,
+            chaos: None,
+            elastic: false,
+            recovered: 0,
         })
     }
 
@@ -229,7 +247,8 @@ impl MiniBatchTrainer {
         // same order the sequential path charges `epoch_comm`, so the
         // end-of-epoch merge is bit-identical).
         let fabric = if threaded {
-            Some(Fabric::with_topology(self.topo))
+            let kill = self.chaos.as_ref().and_then(|c| c.arm(self.epoch));
+            Some(Fabric::with_topology(self.topo).with_chaos(kill))
         } else {
             None
         };
@@ -545,25 +564,132 @@ impl MiniBatchTrainer {
         Ok((lane_totals, clock, summed, ledger))
     }
 
-    /// Train for the configured number of epochs.
+    /// Snapshot all driver-owned mutable training state at an epoch
+    /// boundary. The mini-batch driver owns no RNG (samplers are pure
+    /// functions of `(seed, epoch, batch)`), so the RNG slot holds zeros.
+    pub fn snapshot(&self) -> DriverSnapshot {
+        let (m, v, t) = self.opt.state();
+        DriverSnapshot {
+            flat: self.params.flatten(),
+            opt_m: m.to_vec(),
+            opt_v: v.to_vec(),
+            opt_t: t,
+            rng: [0; 4],
+            epoch: self.epoch,
+        }
+    }
+
+    /// Restore a [`MiniBatchTrainer::snapshot`] (inverse operation).
+    pub fn restore(&mut self, s: &DriverSnapshot) {
+        self.params.unflatten_into(&s.flat);
+        self.opt
+            .restore(&s.opt_m, &s.opt_v, s.opt_t)
+            .expect("snapshot taken from this run always fits");
+        self.epoch = s.epoch;
+    }
+
+    /// Write a v2 checkpoint of the current state to `path` (the epoch
+    /// counter is the completed-epoch count).
+    pub fn save_checkpoint(&self, path: &Path, fingerprint: u64) -> Result<()> {
+        checkpoint::save_state(&self.params, &self.opt, [0; 4], self.epoch, fingerprint, path)
+    }
+
+    fn maybe_checkpoint(&self) -> Result<()> {
+        let Some(p) = &self.ckpt else { return Ok(()) };
+        if p.every > 0 && (self.epoch % p.every == 0 || self.epoch == self.mc.epochs) {
+            self.save_checkpoint(&p.path, p.fingerprint)?;
+        }
+        Ok(())
+    }
+
+    /// Restore a v2 checkpoint and continue from its epoch (see
+    /// `Trainer::resume_from` for the fingerprint contract).
+    pub fn resume_from(&mut self, path: &Path, fingerprint: Option<u64>) -> Result<usize> {
+        let st = checkpoint::load_state(&mut self.params, &mut self.opt, path)?;
+        if let Some(fp) = fingerprint {
+            anyhow::ensure!(
+                st.fingerprint == fp,
+                "checkpoint config fingerprint mismatch: file {:#018x} vs run {:#018x} — \
+                 resume needs the numerics-identical config that wrote the checkpoint",
+                st.fingerprint,
+                fp
+            );
+        }
+        self.epoch = st.epoch;
+        obs::instant(TraceCategory::Recovery, "resume");
+        Ok(st.epoch)
+    }
+
+    /// Elastic recovery from a rank loss (DESIGN.md §15): drop the failed
+    /// rank from the partition, reassign its rows to the survivors, and
+    /// restore the epoch-boundary snapshot — the retried epoch then
+    /// replays all rounds (a mid-epoch loss has already stepped the
+    /// optimizer, so the rollback is what makes the retry deterministic).
+    /// Model shapes are graph-level (no re-fit needed, unlike full-batch).
+    fn recover(&mut self, err: anyhow::Error, snap: &DriverSnapshot) -> Result<()> {
+        let failed = match err.downcast_ref::<RankLost>() {
+            Some(lost) if self.elastic && self.part.k >= 2 => lost.rank,
+            _ => return Err(err),
+        };
+        if self.recovered + 2 > self.part.k {
+            return Err(err.context(format!(
+                "rank {failed} lost with no recovery budget left ({} already absorbed)",
+                self.recovered
+            )));
+        }
+        let new_part = super::planner::survivor_partition(&self.lg.graph, &self.part, failed)?;
+        let k2 = new_part.k;
+        let _scope = self.telemetry.tracer.as_ref().map(|t| t.lane_scope(0, 1));
+        obs::instant(TraceCategory::Recovery, "elastic re-plan");
+        if let Some(m) = &self.telemetry.metrics {
+            m.counter_add("recovery.rank_lost.count", 1.0);
+        }
+        eprintln!(
+            "rank {failed} lost in epoch {}: re-planned its shard across {k2} survivors, \
+             retrying the epoch ({err:#})",
+            snap.epoch
+        );
+        self.part = new_part;
+        // Run totals restart at the survivor count (`CommStats::merge`
+        // requires matching k — DESIGN.md §15).
+        self.comm_stats = CommStats::new(k2);
+        self.topo = Topology::new(k2, self.mc.group_size);
+        self.recovered += 1;
+        self.restore(snap);
+        Ok(())
+    }
+
+    /// Train until the configured epoch count (a resumed run returns the
+    /// tail). A rank loss with `elastic` set re-plans and retries the
+    /// epoch; every other error propagates.
     pub fn run(&mut self, log: bool) -> Result<Vec<EpochStats>> {
-        let mut out = Vec::with_capacity(self.mc.epochs);
-        for e in 0..self.mc.epochs {
-            let s = self.epoch()?;
-            if log && (e % 10 == 0 || e + 1 == self.mc.epochs) {
-                eprintln!(
-                    "epoch {:4}  loss {:.4}  train {:.4}  val {:.4}  test {:.4}  \
-                     modeled {:.4}s  fetched {}",
-                    s.epoch,
-                    s.train_loss,
-                    s.train_acc,
-                    s.val_acc,
-                    s.test_acc,
-                    s.modeled_secs,
-                    crate::util::fmt_bytes(s.comm_data_bytes),
-                );
+        let total = self.mc.epochs;
+        let mut out = Vec::with_capacity(total.saturating_sub(self.epoch));
+        while self.epoch < total {
+            let guard = self.elastic.then(|| self.snapshot());
+            match self.epoch() {
+                Ok(s) => {
+                    if log && (s.epoch % 10 == 0 || s.epoch + 1 == total) {
+                        eprintln!(
+                            "epoch {:4}  loss {:.4}  train {:.4}  val {:.4}  test {:.4}  \
+                             modeled {:.4}s  fetched {}",
+                            s.epoch,
+                            s.train_loss,
+                            s.train_acc,
+                            s.val_acc,
+                            s.test_acc,
+                            s.modeled_secs,
+                            crate::util::fmt_bytes(s.comm_data_bytes),
+                        );
+                    }
+                    self.maybe_checkpoint()?;
+                    out.push(s);
+                }
+                Err(e) => match guard {
+                    Some(snap) => self.recover(e, &snap)?,
+                    None => return Err(e),
+                },
             }
-            out.push(s);
         }
         Ok(out)
     }

@@ -370,14 +370,81 @@ pub fn prepare(
     seed: u64,
 ) -> Result<(Vec<WorkerCtx>, ShapeConfig, Vec<WorkerPlan>)> {
     let part = partition_for(lg, k, seed);
-    let plans = crate::hier::plan::build_plans(&lg.graph, &part, strategy);
-    crate::hier::plan::validate_plans(&lg.graph, &part, &plans).context("plan validation")?;
+    prepare_parts(lg, &part, strategy, cfg, 64)
+}
+
+/// [`prepare`] from an existing partition: plans → contexts. This is the
+/// entry the elastic recovery path reuses after [`survivor_partition`]
+/// shrinks the worker set (DESIGN.md §15); `hidden` only matters when
+/// `cfg` is `None` and a fit config is derived.
+pub fn prepare_parts(
+    lg: &LabelledGraph,
+    part: &crate::partition::Partition,
+    strategy: crate::hier::volume::RemoteStrategy,
+    cfg: Option<ShapeConfig>,
+    hidden: usize,
+) -> Result<(Vec<WorkerCtx>, ShapeConfig, Vec<WorkerPlan>)> {
+    let plans = crate::hier::plan::build_plans(&lg.graph, part, strategy);
+    crate::hier::plan::validate_plans(&lg.graph, part, &plans).context("plan validation")?;
     let cfg = match cfg {
         Some(c) => c,
-        None => fit_config("fit", lg.feat_dim, 64, lg.num_classes, &plans),
+        None => fit_config("fit", lg.feat_dim, hidden, lg.num_classes, &plans),
     };
     let ctxs = build_worker_ctxs(lg, &plans, &cfg)?;
     Ok((ctxs, cfg, plans))
+}
+
+/// Elastic re-plan after a rank failure (DESIGN.md §15): drop rank
+/// `failed` from `part`, renumber the survivors densely (ranks above the
+/// failed one shift down by one, so surviving shards keep their node
+/// sets), and redistribute every node of the failed shard to the survivor
+/// owning the most of its in-neighbors — the same locality objective the
+/// multilevel partitioner optimizes. Fully deterministic: ties go to the
+/// lowest survivor rank, and nodes with no surviving neighbor owner are
+/// dealt round-robin across survivors in node order.
+pub fn survivor_partition(
+    g: &crate::graph::CsrGraph,
+    part: &crate::partition::Partition,
+    failed: usize,
+) -> Result<crate::partition::Partition> {
+    anyhow::ensure!(
+        part.k >= 2,
+        "cannot re-plan around rank {failed}: no survivors in a {}-way partition",
+        part.k
+    );
+    anyhow::ensure!(failed < part.k, "failed rank {failed} out of range (k={})", part.k);
+    let k2 = part.k - 1;
+    let remap = |p: u32| if (p as usize) > failed { p - 1 } else { p };
+    let mut assign = vec![0u32; part.assign.len()];
+    let mut rr = 0usize;
+    let mut votes = vec![0usize; part.k];
+    for (v, a) in assign.iter_mut().enumerate() {
+        let owner = part.assign[v] as usize;
+        if owner != failed {
+            *a = remap(part.assign[v]);
+            continue;
+        }
+        votes.iter_mut().for_each(|c| *c = 0);
+        for &u in g.in_neighbors(v) {
+            votes[part.assign[u as usize] as usize] += 1;
+        }
+        let mut best = (usize::MAX, 0usize);
+        for (q, &c) in votes.iter().enumerate() {
+            if q != failed && c > best.1 {
+                best = (q, c);
+            }
+        }
+        *a = if best.1 > 0 {
+            remap(best.0 as u32)
+        } else {
+            let q = (rr % k2) as u32;
+            rr += 1;
+            q
+        };
+    }
+    let out = crate::partition::Partition { k: k2, assign };
+    out.validate(g.n)?;
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -510,6 +577,35 @@ mod tests {
         let mut small = fitted.clone();
         small.n_pad = 128;
         assert!(build_worker_ctxs(&lg, &plans, &small).is_err());
+    }
+
+    #[test]
+    fn survivor_partition_covers_and_renumbers() {
+        let lg = sbm(400, 4, 8.0, 0.85, 16, 0.5, 9);
+        let part = partition_for(&lg, 4, 42);
+        for failed in 0..4 {
+            let sp = survivor_partition(&lg.graph, &part, failed).unwrap();
+            assert_eq!(sp.k, 3);
+            sp.validate(lg.n()).unwrap();
+            // Surviving shards keep their nodes (renumbered densely).
+            for v in 0..lg.n() {
+                let owner = part.assign[v] as usize;
+                if owner != failed {
+                    let expect = if owner > failed { owner - 1 } else { owner };
+                    assert_eq!(sp.assign[v] as usize, expect, "node {v} moved off survivor");
+                }
+            }
+            // Deterministic: a second call is identical.
+            let sp2 = survivor_partition(&lg.graph, &part, failed).unwrap();
+            assert_eq!(sp.assign, sp2.assign);
+            // The survivor plan must still validate end to end.
+            let (ctxs, _, _) =
+                prepare_parts(&lg, &sp, RemoteStrategy::Hybrid, None, 64).unwrap();
+            assert_eq!(ctxs.len(), 3);
+        }
+        assert!(survivor_partition(&lg.graph, &part, 4).is_err());
+        let one = crate::partition::Partition { k: 1, assign: vec![0; lg.n()] };
+        assert!(survivor_partition(&lg.graph, &one, 0).is_err());
     }
 
     #[test]

@@ -26,18 +26,19 @@
 //! single-machine gradient to f32 round-off — property-checked in
 //! `rust/tests/trainer_equivalence.rs`.
 
-use super::planner::WorkerCtx;
-use crate::comm::transport::{self, Fabric, RankBody, Topology, TransportKind};
+use super::planner::{self, WorkerCtx};
+use crate::comm::transport::{self, Fabric, FaultPlan, RankBody, RankLost, Topology, TransportKind};
 use crate::comm::{collective, CommStats};
 use crate::exec::{
     AggDispatch, Engine, FullBatchCtx, FullBatchRankCtx, FullBatchState, LaneHalo, LossSpec,
     LossTotals, LpInputs, OverlapLedger, StageClock, Tapes, SPLIT_NONE,
 };
-use crate::graph::generate::{SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
+use crate::graph::generate::{LabelledGraph, SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
 use crate::hier::volume::RemoteStrategy;
 use crate::model::labelprop::{self, LpSelection};
 use crate::model::optimizer::{OptKind, Optimizer};
-use crate::model::ModelParams;
+use crate::model::{checkpoint, ModelParams};
+use crate::partition::Partition;
 use crate::obs::{self, ExchangeRow, Telemetry, TraceCategory};
 use crate::perfmodel::{self, MachineProfile};
 use crate::quant::Bits;
@@ -45,6 +46,8 @@ use crate::runtime::ShapeConfig;
 use crate::util::rng::Rng;
 use crate::util::timer::{Breakdown, Category, ALL_CATEGORIES};
 use anyhow::Result;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Training-run configuration (one Fig. 11 curve = one of these).
@@ -107,6 +110,47 @@ impl Default for TrainConfig {
     }
 }
 
+/// Epoch-boundary checkpointing policy (`--checkpoint-every` /
+/// `--checkpoint-path`; DESIGN.md §15). The fingerprint is
+/// `RunConfig::fingerprint()` of the run — written into every file and
+/// verified on `--resume`.
+#[derive(Clone, Debug)]
+pub struct CheckpointPolicy {
+    /// Save every N completed epochs (and at the final epoch). 0 = never.
+    pub every: usize,
+    pub path: PathBuf,
+    pub fingerprint: u64,
+}
+
+/// What elastic rank-failure recovery needs that the worker contexts
+/// alone can't provide: the full graph and the live partition, so the
+/// driver can re-plan onto the survivors (DESIGN.md §15).
+pub struct ElasticCtx {
+    pub lg: Arc<LabelledGraph>,
+    /// The partition the current worker contexts were built from (updated
+    /// on every recovery).
+    pub part: Partition,
+    /// Recovery budget: how many rank losses may be absorbed before the
+    /// error propagates (typically `k - 1`).
+    pub max_failures: usize,
+}
+
+/// Epoch-boundary snapshot of all driver-owned mutable training state —
+/// everything a retried epoch reads. Taken before each epoch when elastic
+/// recovery is armed; restoring it makes the retry bit-identical to a run
+/// that started on the survivor plan with this state.
+#[derive(Clone, Debug)]
+pub struct DriverSnapshot {
+    pub(crate) flat: Vec<f32>,
+    pub(crate) opt_m: Vec<f32>,
+    pub(crate) opt_v: Vec<f32>,
+    pub(crate) opt_t: u64,
+    /// Driver RNG (full-batch label-prop selection; the mini-batch driver
+    /// owns no RNG and stores zeros).
+    pub(crate) rng: [u64; 4],
+    pub(crate) epoch: usize,
+}
+
 /// Per-epoch observables.
 #[derive(Clone, Debug)]
 pub struct EpochStats {
@@ -151,6 +195,18 @@ pub struct Trainer {
     topo: Topology,
     epoch: usize,
     rng: Rng,
+    /// Epoch-boundary checkpointing (None = off). Set via
+    /// `run::RunConfig::full_batch_trainer*`.
+    pub ckpt: Option<CheckpointPolicy>,
+    /// Chaos injection (`--chaos`; test/bench only): armed once per run,
+    /// fires on the scheduled epoch's fabric.
+    pub chaos: Option<FaultPlan>,
+    /// Elastic rank-failure recovery (None = rank loss is fatal, the
+    /// pre-§15 behavior). Requires the graph, so only the
+    /// graph-owning construction path enables it.
+    pub elastic: Option<ElasticCtx>,
+    /// Rank losses absorbed so far this run.
+    recovered: usize,
 }
 
 impl Trainer {
@@ -184,6 +240,10 @@ impl Trainer {
             topo,
             epoch: 0,
             rng,
+            ckpt: None,
+            chaos: None,
+            elastic: None,
+            recovered: 0,
         }
     }
 
@@ -318,7 +378,8 @@ impl Trainer {
             t.clear_grads();
         }
 
-        let fabric = Fabric::with_topology(self.topo);
+        let kill = self.chaos.as_ref().and_then(|c| c.arm(self.epoch));
+        let fabric = Fabric::with_topology(self.topo).with_chaos(kill);
         let mut outs: Vec<RankOut> = (0..k).map(|_| RankOut::new(k)).collect();
         {
             // Shared inputs are `&` (Sync); each rank thread exclusively
@@ -473,18 +534,163 @@ impl Trainer {
         stats
     }
 
-    /// Train for the configured number of epochs, returning per-epoch stats.
-    pub fn run(&mut self, log: bool) -> Result<Vec<EpochStats>> {
-        let mut out = Vec::with_capacity(self.tc.epochs);
-        for e in 0..self.tc.epochs {
-            let s = self.epoch()?;
-            if log && (e % 10 == 0 || e + 1 == self.tc.epochs) {
-                eprintln!(
-                    "epoch {:4}  loss {:.4}  train {:.4}  val {:.4}  test {:.4}  modeled {:.4}s",
-                    s.epoch, s.train_loss, s.train_acc, s.val_acc, s.test_acc, s.modeled_secs
-                );
+    /// Snapshot all driver-owned mutable training state at an epoch
+    /// boundary (params, optimizer moments, RNG, epoch counter).
+    pub fn snapshot(&self) -> DriverSnapshot {
+        let (m, v, t) = self.opt.state();
+        DriverSnapshot {
+            flat: self.params.flatten(),
+            opt_m: m.to_vec(),
+            opt_v: v.to_vec(),
+            opt_t: t,
+            rng: self.rng.state(),
+            epoch: self.epoch,
+        }
+    }
+
+    /// Restore a [`Trainer::snapshot`] (inverse operation; same run, so
+    /// the lengths always match).
+    pub fn restore(&mut self, s: &DriverSnapshot) {
+        self.params.unflatten_into(&s.flat);
+        self.opt
+            .restore(&s.opt_m, &s.opt_v, s.opt_t)
+            .expect("snapshot taken from this run always fits");
+        self.rng = Rng::from_state(s.rng);
+        self.epoch = s.epoch;
+    }
+
+    /// Write a v2 checkpoint of the current state to `path`. The saved
+    /// epoch counter is the *completed*-epoch count, and the RNG state is
+    /// post-epoch — restoring continues the run bit-identically.
+    pub fn save_checkpoint(&self, path: &Path, fingerprint: u64) -> Result<()> {
+        checkpoint::save_state(&self.params, &self.opt, self.rng.state(), self.epoch, fingerprint, path)
+    }
+
+    fn maybe_checkpoint(&self) -> Result<()> {
+        let Some(p) = &self.ckpt else { return Ok(()) };
+        if p.every > 0 && (self.epoch % p.every == 0 || self.epoch == self.tc.epochs) {
+            self.save_checkpoint(&p.path, p.fingerprint)?;
+        }
+        Ok(())
+    }
+
+    /// Restore a v2 checkpoint and continue from its epoch. When
+    /// `fingerprint` is `Some`, the file's config fingerprint must match
+    /// (resuming under numerics-changing config drift is refused).
+    /// Returns the epoch training resumes from.
+    pub fn resume_from(&mut self, path: &Path, fingerprint: Option<u64>) -> Result<usize> {
+        let st = checkpoint::load_state(&mut self.params, &mut self.opt, path)?;
+        if let Some(fp) = fingerprint {
+            anyhow::ensure!(
+                st.fingerprint == fp,
+                "checkpoint config fingerprint mismatch: file {:#018x} vs run {:#018x} — \
+                 resume needs the numerics-identical config that wrote the checkpoint",
+                st.fingerprint,
+                fp
+            );
+        }
+        self.rng = Rng::from_state(st.rng_state);
+        self.epoch = st.epoch;
+        obs::instant(TraceCategory::Recovery, "resume");
+        Ok(st.epoch)
+    }
+
+    /// Elastic recovery from a rank loss (DESIGN.md §15): drop the failed
+    /// rank, re-plan its shard across the survivors, rebuild every
+    /// plan-shaped buffer, and restore the epoch-boundary snapshot so the
+    /// retried epoch is bit-identical to a fresh run on the survivor plan
+    /// with the same driver state. Anything that is not a typed
+    /// [`RankLost`] — or that exceeds the recovery budget — propagates.
+    fn recover(&mut self, err: anyhow::Error, snap: &DriverSnapshot) -> Result<()> {
+        let failed = match err.downcast_ref::<RankLost>() {
+            Some(lost) if self.k() >= 2 => lost.rank,
+            _ => return Err(err),
+        };
+        let (lg, part) = {
+            let el = self.elastic.as_ref().expect("recover is only called with elastic armed");
+            if self.recovered >= el.max_failures {
+                return Err(err.context(format!(
+                    "rank {failed} lost with no recovery budget left ({} already absorbed)",
+                    self.recovered
+                )));
             }
-            out.push(s);
+            (el.lg.clone(), el.part.clone())
+        };
+        let new_part = planner::survivor_partition(&lg.graph, &part, failed)?;
+        let k2 = new_part.k;
+        // Re-fit with the *same* model dims (f_in/hidden/classes), so the
+        // restored parameters stay shape-compatible; only the plan-shaped
+        // padding (n_pad, e_*, r_*) may change.
+        let plans = crate::hier::plan::build_plans(&lg.graph, &new_part, self.tc.strategy);
+        crate::hier::plan::validate_plans(&lg.graph, &new_part, &plans)?;
+        let shapes = planner::fit_config(
+            &self.shapes.name,
+            self.shapes.f_in,
+            self.shapes.hidden,
+            self.shapes.classes,
+            &plans,
+        );
+        let ctxs = planner::build_worker_ctxs(&lg, &plans, &shapes)?;
+
+        let _scope = self.telemetry.tracer.as_ref().map(|t| t.lane_scope(0, 1));
+        obs::instant(TraceCategory::Recovery, "elastic re-plan");
+        if let Some(m) = &self.telemetry.metrics {
+            m.counter_add("recovery.rank_lost.count", 1.0);
+        }
+        eprintln!(
+            "rank {failed} lost in epoch {}: re-planned its shard across {k2} survivors, \
+             retrying the epoch ({err:#})",
+            snap.epoch
+        );
+
+        self.workers = ctxs;
+        self.shapes = shapes;
+        self.engine = Engine::new(&self.shapes, true, self.tc.agg.clone());
+        self.fb = FullBatchState::new(&self.shapes, k2);
+        self.tapes = None;
+        self.rank_tapes = Vec::new();
+        self.lp_sels = (0..k2)
+            .map(|_| LpSelection {
+                embedded: vec![],
+                loss_mask: vec![0.0; self.shapes.n_pad],
+            })
+            .collect();
+        // Run totals restart at the survivor count — `CommStats::merge`
+        // requires matching k, so pre-failure totals cannot carry over
+        // (documented in DESIGN.md §15).
+        self.comm_stats = CommStats::new(k2);
+        self.topo = Topology::new(k2, self.tc.group_size);
+        self.elastic.as_mut().expect("checked above").part = new_part;
+        self.recovered += 1;
+        self.restore(snap);
+        Ok(())
+    }
+
+    /// Train until the configured epoch count, returning per-epoch stats
+    /// (for the epochs run here — a resumed run returns the tail). A rank
+    /// loss with elastic recovery armed re-plans and retries the epoch;
+    /// every other error propagates.
+    pub fn run(&mut self, log: bool) -> Result<Vec<EpochStats>> {
+        let total = self.tc.epochs;
+        let mut out = Vec::with_capacity(total.saturating_sub(self.epoch));
+        while self.epoch < total {
+            let guard = self.elastic.is_some().then(|| self.snapshot());
+            match self.epoch() {
+                Ok(s) => {
+                    if log && (s.epoch % 10 == 0 || s.epoch + 1 == total) {
+                        eprintln!(
+                            "epoch {:4}  loss {:.4}  train {:.4}  val {:.4}  test {:.4}  modeled {:.4}s",
+                            s.epoch, s.train_loss, s.train_acc, s.val_acc, s.test_acc, s.modeled_secs
+                        );
+                    }
+                    self.maybe_checkpoint()?;
+                    out.push(s);
+                }
+                Err(e) => match guard {
+                    Some(snap) => self.recover(e, &snap)?,
+                    None => return Err(e),
+                },
+            }
         }
         Ok(out)
     }

@@ -31,6 +31,7 @@ pub mod obs;
 pub mod partition;
 pub mod perfmodel;
 pub mod quant;
+pub mod run;
 pub mod runtime;
 pub mod sample;
 pub mod util;

@@ -12,25 +12,25 @@
 //!   datasets    list the Table-2-style catalog
 
 use anyhow::Result;
-use supergcn::comm::transport::{Topology, TransportKind};
-use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
-use supergcn::exec::{AggDispatch, AggKernel};
+use supergcn::comm::transport::{FaultSpec, TransportKind};
+use supergcn::exec::AggKernel;
 use supergcn::coordinator::planner::prepare;
-use supergcn::coordinator::trainer::{TrainConfig, Trainer};
+use supergcn::coordinator::trainer::Trainer;
 use supergcn::graph::generate::LabelledGraph;
-use supergcn::sample::{SamplerConfig, SamplerKind};
+use supergcn::run::RunConfig;
+use supergcn::sample::SamplerKind;
+use std::path::PathBuf;
 use std::sync::Arc;
 use supergcn::datasets;
 use supergcn::exp::Table;
 use supergcn::graph::stats::stats;
 use supergcn::hier::volume::{volume, RemoteStrategy, ALL_STRATEGIES};
 use supergcn::hier::remote_pairs;
-use supergcn::model::optimizer::OptKind;
 use supergcn::obs::{MetricsRegistry, Telemetry, Tracer};
 use supergcn::partition::{self, multilevel};
 use supergcn::perfmodel::{crossover_procs, fig7_sweep, MachineProfile};
 use supergcn::quant::Bits;
-use supergcn::util::args::Args;
+use supergcn::util::args::{self, Args, Conflict, FlagTable};
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -64,7 +64,12 @@ fn main() {
                  default `auto` prefers it when the ISA is detected (DESIGN.md\n\
                  §14). `--trace out.json` records per-rank\n\
                  spans to a Perfetto/chrome trace; `--metrics-json out.json` writes\n\
-                 the epoch-structured metrics report (DESIGN.md §13). `benchcmp`\n\
+                 the epoch-structured metrics report (DESIGN.md §13).\n\
+                 `--checkpoint-every N` writes a resumable checkpoint (weights,\n\
+                 optimizer moments, RNG, epoch) every N epochs; `--resume <path>`\n\
+                 continues it with bit-identical losses; `--chaos rank=R,epoch=E`\n\
+                 (threaded transport only) kills a rank mid-epoch to exercise the\n\
+                 elastic survivor re-plan (DESIGN.md §15). `benchcmp`\n\
                  gates CI on the committed BENCH_seed.json."
             );
             Ok(())
@@ -112,35 +117,119 @@ fn parse_quant(s: &str) -> Result<Option<Bits>> {
     })
 }
 
-fn cmd_train(argv: &[String]) -> Result<()> {
-    let a = Args::new("supergcn train", "distributed full-batch GCN training")
-        .opt("dataset", "arxiv-s", "catalog dataset name (see `datasets`)")
-        .opt("procs", "4", "number of simulated workers")
-        .opt("epochs", "0", "override epochs (0 = dataset default)")
-        .opt("backend", "native", "native | xla")
-        .opt("config", "quickstart", "artifact config (xla backend)")
-        .opt("artifacts", "artifacts", "artifacts directory (xla backend)")
-        .opt("quant", "fp32", "fp32 | int2 | int4 | int8")
-        .opt("strategy", "hybrid", "raw | pre | post | hybrid")
-        .opt("machine", "abci", "abci | fugaku network model")
-        .opt("delay-comm", "1", "halo exchange every N epochs (DistGNN cd-N)")
+/// Everything `supergcn train` parses: the run-independent CLI fields
+/// plus the unified [`RunConfig`] the typed flag table writes into.
+#[derive(Default)]
+struct TrainCli {
+    dataset: String,
+    procs: usize,
+    epochs: usize,
+    backend: String,
+    config: String,
+    artifacts: String,
+    trace: Option<String>,
+    metrics_json: Option<String>,
+    run: RunConfig,
+}
+
+/// The declarative `train` flag table: one row per flag — name, default,
+/// help line, typed parser, and (for full-batch-only flags) the
+/// applies-to-sampler constraint checked when `--sampler` is not `full`.
+/// `--help` and the unknown-flag error are generated from the rows.
+fn train_flag_table() -> FlagTable<TrainCli> {
+    FlagTable::new("supergcn train", "distributed full-batch GCN training")
+        .gate(|c: &TrainCli| c.run.sampler != SamplerKind::Full)
+        .opt("dataset", "arxiv-s", "catalog dataset name (see `datasets`)", |c, v| {
+            c.dataset = v.to_string();
+            Ok(())
+        })
+        .opt("procs", "4", "number of simulated workers", |c, v| {
+            c.procs = args::parse_usize("procs", v)?;
+            Ok(())
+        })
+        .opt("epochs", "0", "override epochs (0 = dataset default)", |c, v| {
+            c.epochs = args::parse_usize("epochs", v)?;
+            Ok(())
+        })
+        .opt("backend", "native", "native | xla", |c, v| {
+            c.backend = v.to_string();
+            Ok(())
+        })
+        .opt("config", "quickstart", "artifact config (xla backend)", |c, v| {
+            c.config = v.to_string();
+            Ok(())
+        })
+        .opt("artifacts", "artifacts", "artifacts directory (xla backend)", |c, v| {
+            c.artifacts = v.to_string();
+            Ok(())
+        })
+        .opt("quant", "fp32", "fp32 | int2 | int4 | int8", |c, v| {
+            c.run.quant = parse_quant(v)?;
+            Ok(())
+        })
+        .opt_gated(
+            "strategy",
+            "hybrid",
+            "raw | pre | post | hybrid",
+            |c, v| {
+                c.run.strategy = parse_strategy(v)?;
+                Ok(())
+            },
+            Conflict {
+                active: |c: &TrainCli| c.run.strategy != RemoteStrategy::Hybrid,
+                error: "--strategy only applies to --sampler full (mini-batch fetches whole rows; \
+                        leave the default 'hybrid')",
+            },
+        )
+        .opt("machine", "abci", "abci | fugaku network model", |c, v| {
+            c.run.machine = parse_machine(v)?;
+            Ok(())
+        })
+        .opt_gated(
+            "delay-comm",
+            "1",
+            "halo exchange every N epochs (DistGNN cd-N)",
+            |c, v| {
+                c.run.delay_comm = args::parse_usize("delay-comm", v)?;
+                Ok(())
+            },
+            Conflict {
+                active: |c: &TrainCli| c.run.delay_comm > 1,
+                error: "--delay-comm only applies to --sampler full (mini-batch rounds are synchronous)",
+            },
+        )
         .opt(
             "agg-kernel",
             "auto",
             "auto | vanilla | sorted | blocked | parallel | spmm | simd (§4 dispatch)",
+            |c, v| {
+                c.run.agg.kernel = AggKernel::parse(v)?;
+                Ok(())
+            },
         )
         .opt(
             "agg-threshold",
             "4096",
             "contribution/nnz count below which parallel aggregation falls back to serial",
+            |c, v| {
+                c.run.agg.parallel_min_work = args::parse_usize("agg-threshold", v)?;
+                Ok(())
+            },
         )
-        .opt("agg-threads", "1", "threads for the parallel aggregation kernels")
+        .opt("agg-threads", "1", "threads for the parallel aggregation kernels", |c, v| {
+            c.run.agg.threads = args::parse_usize("agg-threads", v)?;
+            Ok(())
+        })
         .opt(
             "transport",
             "seq",
             "seq | threaded — step SPMD ranks sequentially (modeled parallel time \
              only) or run one OS thread per rank with mailbox collectives for real \
              multi-core wall-clock scaling; bit-exact either way (DESIGN.md §10)",
+            |c, v| {
+                c.run.transport = TransportKind::parse(v)?;
+                Ok(())
+            },
         )
         .opt(
             "rank-threads",
@@ -148,6 +237,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             "OS threads for --transport threaded (0 = one per worker; any other \
              value must equal --procs — blocking mailbox collectives need every \
              rank resident)",
+            |c, v| {
+                c.run.rank_threads = args::parse_usize("rank-threads", v)?;
+                Ok(())
+            },
         )
         .opt(
             "overlap",
@@ -155,6 +248,10 @@ fn cmd_train(argv: &[String]) -> Result<()> {
             "off | on — post each layer's halo exchange before interior \
              aggregation so wire time overlaps compute (boundary rows finish \
              after receipt); bit-exact with 'off' (DESIGN.md §11)",
+            |c, v| {
+                c.run.overlap = parse_overlap(v)?;
+                Ok(())
+            },
         )
         .opt(
             "group-size",
@@ -163,133 +260,155 @@ fn cmd_train(argv: &[String]) -> Result<()> {
              exchange staging cross-node payloads through per-node leaders \
              (O((P/g)²) inter-node messages, intra-node tier accounted \
              separately); bit-exact with the flat exchange (DESIGN.md §12)",
+            |c, v| {
+                c.run.group_size = args::parse_usize("group-size", v)?;
+                Ok(())
+            },
         )
-        .opt("seed", "42", "random seed")
+        .opt("seed", "42", "random seed", |c, v| {
+            c.run.seed = args::parse_u64("seed", v)?;
+            Ok(())
+        })
         .opt(
             "trace",
             "",
             "write a Perfetto/chrome trace_event JSON of per-rank spans here \
              (pid = rank, tid = lane; empty = tracing off, zero overhead — \
              DESIGN.md §13)",
+            |c, v| {
+                c.trace = Some(v.to_string()).filter(|s| !s.is_empty());
+                Ok(())
+            },
         )
         .opt(
             "metrics-json",
             "",
             "write the epoch-structured metrics report here (replaces the \
              console summary; empty = off — DESIGN.md §13)",
+            |c, v| {
+                c.metrics_json = Some(v.to_string()).filter(|s| !s.is_empty());
+                Ok(())
+            },
         )
         .opt(
             "sampler",
             "full",
             "full | neighbor | saint-rw | saint-node | saint-edge | cluster",
+            |c, v| {
+                c.run.sampler = SamplerKind::parse(v)?;
+                Ok(())
+            },
         )
-        .opt("batch-size", "512", "mini-batch target nodes / SAINT node budget")
-        .opt("fanouts", "15,10,5", "per-layer neighbor fan-outs (comma-separated)")
-        .opt("walk-length", "3", "SAINT random-walk length")
-        .opt("clusters", "0", "Cluster-GCN cluster count (0 = auto)")
-        .opt("cluster-batch", "1", "clusters unioned per batch")
-        .flag("label-prop", "enable masked label propagation")
-        .parse_from(argv)?;
+        .opt("batch-size", "512", "mini-batch target nodes / SAINT node budget", |c, v| {
+            c.run.batch_size = args::parse_usize("batch-size", v)?;
+            Ok(())
+        })
+        .opt("fanouts", "15,10,5", "per-layer neighbor fan-outs (comma-separated)", |c, v| {
+            c.run.fanouts = args::parse_usize_list("fanouts", v)?;
+            Ok(())
+        })
+        .opt("walk-length", "3", "SAINT random-walk length", |c, v| {
+            c.run.walk_length = args::parse_usize("walk-length", v)?;
+            Ok(())
+        })
+        .opt("clusters", "0", "Cluster-GCN cluster count (0 = auto)", |c, v| {
+            c.run.num_clusters = args::parse_usize("clusters", v)?;
+            Ok(())
+        })
+        .opt("cluster-batch", "1", "clusters unioned per batch", |c, v| {
+            c.run.clusters_per_batch = args::parse_usize("cluster-batch", v)?;
+            Ok(())
+        })
+        .flag_gated(
+            "label-prop",
+            "enable masked label propagation",
+            |c, _| {
+                c.run.label_prop = true;
+                Ok(())
+            },
+            Conflict {
+                active: |c: &TrainCli| c.run.label_prop,
+                error: "--label-prop only applies to --sampler full (the full-batch loop)",
+            },
+        )
+        .opt(
+            "checkpoint-every",
+            "0",
+            "save a resumable checkpoint (weights, optimizer moments, RNG, epoch) \
+             every N completed epochs (0 = off — DESIGN.md §15)",
+            |c, v| {
+                c.run.checkpoint_every = args::parse_usize("checkpoint-every", v)?;
+                Ok(())
+            },
+        )
+        .opt(
+            "checkpoint-path",
+            "supergcn.ckpt",
+            "where --checkpoint-every writes (overwritten on each save)",
+            |c, v| {
+                c.run.checkpoint_path = PathBuf::from(v);
+                Ok(())
+            },
+        )
+        .opt(
+            "resume",
+            "",
+            "resume training from this checkpoint — per-epoch losses stay \
+             bit-identical to the uninterrupted run; the config fingerprint \
+             must match (empty = fresh run — DESIGN.md §15)",
+            |c, v| {
+                c.run.resume = (!v.is_empty()).then(|| PathBuf::from(v));
+                Ok(())
+            },
+        )
+        .opt(
+            "chaos",
+            "",
+            "kill rank R mid-epoch E ('rank=R,epoch=E'; test/bench fault \
+             injection exercising the elastic survivor re-plan; requires \
+             --transport threaded; empty = off — DESIGN.md §15)",
+            |c, v| {
+                c.run.chaos = if v.is_empty() { None } else { Some(FaultSpec::parse(v)?) };
+                Ok(())
+            },
+        )
+}
 
-    let spec = datasets::by_name(&a.get_str("dataset"))?;
-    let k = a.get_usize("procs");
-    let epochs = a.get_usize("epochs");
+fn cmd_train(argv: &[String]) -> Result<()> {
+    let mut cli = TrainCli::default();
+    train_flag_table().parse_into(&mut cli, argv)?;
+
+    let spec = datasets::by_name(&cli.dataset)?;
+    let k = cli.procs;
     let lg = spec.build();
     println!("dataset {} ({}): {}", spec.name, spec.paper_analog, stats(&lg.graph));
 
-    let agg = AggDispatch::default()
-        .with_kernel(AggKernel::parse(&a.get_str("agg-kernel"))?)
-        .with_threads(a.get_usize("agg-threads"))
-        .with_parallel_min_work(a.get_usize("agg-threshold"));
-    let transport = TransportKind::parse(&a.get_str("transport"))?;
-    let rank_threads = a.get_usize("rank-threads");
-    TransportKind::validate_rank_threads(rank_threads, k)?;
-    let overlap = parse_overlap(&a.get_str("overlap"))?;
-    let group_size = a.get_usize("group-size");
-    Topology::validate_group_size(group_size, k)?;
-    let trace_path = Some(a.get_str("trace")).filter(|s| !s.is_empty());
-    let metrics_path = Some(a.get_str("metrics-json")).filter(|s| !s.is_empty());
-    let tc = TrainConfig {
-        epochs: if epochs == 0 { spec.epochs } else { epochs },
-        lr: spec.lr,
-        opt: OptKind::Adam,
-        quant: parse_quant(&a.get_str("quant"))?,
-        label_prop: a.get_flag("label-prop"),
-        lp_frac: 0.5,
-        strategy: parse_strategy(&a.get_str("strategy"))?,
-        delay_comm: a.get_usize("delay-comm"),
-        machine: parse_machine(&a.get_str("machine"))?,
-        agg: agg.clone(),
-        transport,
-        rank_threads,
-        overlap,
-        group_size,
-        seed: a.get_u64("seed"),
-    };
-
-    let backend_name = a.get_str("backend");
-    let kind = SamplerKind::parse(&a.get_str("sampler"))?;
-    if kind != SamplerKind::Full {
+    // Dataset-derived hyperparameters land in the RunConfig after parsing
+    // (they are spec defaults, not flags).
+    cli.run.epochs = if cli.epochs == 0 { spec.epochs } else { cli.epochs };
+    cli.run.lr = spec.lr;
+    cli.run.hidden = spec.hidden;
+    if cli.run.sampler != SamplerKind::Full {
         anyhow::ensure!(
-            backend_name == "native",
-            "mini-batch samplers run on the native engine (got --backend {backend_name})"
+            cli.backend == "native",
+            "mini-batch samplers run on the native engine (got --backend {})",
+            cli.backend
         );
-        // Full-batch-only options must not silently vanish.
-        anyhow::ensure!(
-            !tc.label_prop,
-            "--label-prop only applies to --sampler full (the full-batch loop)"
-        );
-        anyhow::ensure!(
-            tc.delay_comm <= 1,
-            "--delay-comm only applies to --sampler full (mini-batch rounds are synchronous)"
-        );
-        anyhow::ensure!(
-            tc.strategy == RemoteStrategy::Hybrid,
-            "--strategy only applies to --sampler full (mini-batch fetches whole rows; \
-             leave the default 'hybrid')"
-        );
-        let scfg = SamplerConfig {
-            batch_size: a.get_usize("batch-size"),
-            fanouts: a.get_usize_list("fanouts"),
-            walk_length: a.get_usize("walk-length"),
-            num_clusters: a.get_usize("clusters"),
-            clusters_per_batch: a.get_usize("cluster-batch"),
-            seed: tc.seed,
-            ..Default::default()
-        };
-        // Reject bad values here with the CLI error path; the sampler
-        // constructors enforce the same invariants with assert!.
-        anyhow::ensure!(scfg.batch_size >= 1, "--batch-size must be >= 1");
-        anyhow::ensure!(
-            !scfg.fanouts.is_empty() && scfg.fanouts.iter().all(|&f| f >= 1),
-            "--fanouts must be a non-empty comma-separated list of integers >= 1"
-        );
-        let mc = MiniBatchConfig {
-            epochs: tc.epochs,
-            lr: spec.lr,
-            opt: OptKind::Adam,
-            quant: tc.quant,
-            hidden: spec.hidden,
-            layernorm: false,
-            agg,
-            transport: tc.transport,
-            rank_threads: tc.rank_threads,
-            overlap: tc.overlap,
-            group_size: tc.group_size,
-            machine: tc.machine.clone(),
-            seed: tc.seed,
-        };
-        return run_minibatch_training(Arc::new(lg), k, kind, scfg, mc, trace_path, metrics_path);
     }
-    let (ctxs, cfg) = match backend_name.as_str() {
+    cli.run.validate(k)?;
+    let rc = cli.run;
+    if rc.sampler != SamplerKind::Full {
+        return run_minibatch_training(Arc::new(lg), k, &rc, cli.trace, cli.metrics_json);
+    }
+    let tr = match cli.backend.as_str() {
         "xla" => {
             // Load + warm the AOT artifact set so a broken artifact dir
             // fails fast; per-op artifact execution is cross-validated in
             // tests/backend_parity.rs, while the training hot loop always
             // runs on the unified exec::Engine (DESIGN.md §9).
             let mut rt = supergcn::runtime::Runtime::load(
-                std::path::Path::new(&a.get_str("artifacts")),
-                &a.get_str("config"),
+                std::path::Path::new(&cli.artifacts),
+                &cli.config,
             )?;
             let cfg = rt.config.clone();
             let warmed = rt.warmup()?;
@@ -299,17 +418,17 @@ fn cmd_train(argv: &[String]) -> Result<()> {
                 rt.platform(),
                 warmed.len()
             );
-            let (ctxs, cfg, _) = prepare(&lg, k, tc.strategy, Some(cfg), tc.seed)?;
-            (ctxs, cfg)
+            let (ctxs, cfg, _) = prepare(&lg, k, rc.strategy, Some(cfg), rc.seed)?;
+            // Artifact-shaped runs keep the pre-§15 fatal-rank-loss
+            // behavior (re-planning would need shapes the manifest fixed).
+            rc.full_batch_trainer(ctxs, cfg)
         }
-        "native" => {
-            let (ctxs, mut cfg, _) = prepare(&lg, k, tc.strategy, None, tc.seed)?;
-            cfg.hidden = spec.hidden;
-            (ctxs, cfg)
-        }
+        // The native path owns the graph, so elastic rank-failure
+        // recovery is armed (DESIGN.md §15).
+        "native" => rc.full_batch_trainer_elastic(Arc::new(lg), k)?,
         other => anyhow::bail!("unknown backend '{other}'"),
     };
-    run_training(ctxs, cfg, tc, trace_path, metrics_path)
+    run_training(tr, &rc, cli.trace, cli.metrics_json)
 }
 
 /// Construct the run's telemetry sinks from the CLI paths: a sink exists
@@ -352,29 +471,31 @@ fn write_metrics(
 }
 
 fn run_training(
-    ctxs: Vec<supergcn::coordinator::planner::WorkerCtx>,
-    cfg: supergcn::runtime::ShapeConfig,
-    tc: TrainConfig,
+    mut tr: Trainer,
+    rc: &RunConfig,
     trace_path: Option<String>,
     metrics_path: Option<String>,
 ) -> Result<()> {
     println!(
         "training: {} workers, config={}, transport={}, overlap={}, group-size={}, \
          agg-kernel={}, quant={:?}, lp={}, strategy={}, machine={}",
-        ctxs.len(),
-        cfg.name,
-        tc.transport.name(),
-        if tc.overlap { "on" } else { "off" },
-        tc.group_size,
-        tc.agg.kernel.name(),
-        tc.quant.map(|b| b.name()).unwrap_or("fp32"),
-        tc.label_prop,
-        tc.strategy.name(),
-        tc.machine.name,
+        tr.workers.len(),
+        tr.shapes.name,
+        tr.tc.transport.name(),
+        if tr.tc.overlap { "on" } else { "off" },
+        tr.tc.group_size,
+        tr.tc.agg.kernel.name(),
+        tr.tc.quant.map(|b| b.name()).unwrap_or("fp32"),
+        tr.tc.label_prop,
+        tr.tc.strategy.name(),
+        tr.tc.machine.name,
     );
-    let epochs = tc.epochs;
-    let mut tr = Trainer::new(ctxs, cfg, tc);
+    let epochs = rc.epochs;
     tr.telemetry = build_telemetry(&trace_path, &metrics_path);
+    if let Some(p) = &rc.resume {
+        let e = tr.resume_from(p, Some(rc.fingerprint()))?;
+        println!("resumed from {} at epoch {e}", p.display());
+    }
     let run = tr.run(true);
     write_trace(&tr.telemetry.tracer, &trace_path)?;
     let stats = run?;
@@ -390,7 +511,11 @@ fn report_summary(
     stats: &[supergcn::coordinator::trainer::EpochStats],
     comm: &supergcn::comm::CommStats,
 ) {
-    let last = stats.last().unwrap();
+    // A resumed run that was already at its final epoch trains nothing.
+    let Some(last) = stats.last() else {
+        println!("\ndone: nothing to train ({epochs} epochs already completed)");
+        return;
+    };
     let steady = supergcn::exp::steady_epoch_secs(stats, 10);
     println!(
         "\ndone: {} epochs  loss {:.4}  train {:.4}  val {:.4}  test {:.4}",
@@ -419,13 +544,10 @@ fn report_summary(
     }
 }
 
-#[allow(clippy::too_many_arguments)]
 fn run_minibatch_training(
     lg: Arc<LabelledGraph>,
     k: usize,
-    kind: SamplerKind,
-    scfg: SamplerConfig,
-    mc: MiniBatchConfig,
+    rc: &RunConfig,
     trace_path: Option<String>,
     metrics_path: Option<String>,
 ) -> Result<()> {
@@ -433,20 +555,24 @@ fn run_minibatch_training(
         "mini-batch training: {} workers, sampler={}, transport={}, group-size={}, \
          quant={}, machine={}",
         k,
-        kind.name(),
-        mc.transport.name(),
-        mc.group_size,
-        mc.quant.map(|b| b.name()).unwrap_or("fp32"),
-        mc.machine.name,
+        rc.sampler.name(),
+        rc.transport.name(),
+        rc.group_size,
+        rc.quant.map(|b| b.name()).unwrap_or("fp32"),
+        rc.machine.name,
     );
-    let epochs = mc.epochs;
-    let mut tr = MiniBatchTrainer::new(lg, k, kind, &scfg, mc)?;
+    let epochs = rc.epochs;
+    let mut tr = rc.minibatch_trainer(lg, k)?;
     tr.telemetry = build_telemetry(&trace_path, &metrics_path);
     println!(
         "  {} batches/epoch over the {}-way partition",
         tr.batches_per_epoch(),
         tr.k()
     );
+    if let Some(p) = &rc.resume {
+        let e = tr.resume_from(p, Some(rc.fingerprint()))?;
+        println!("resumed from {} at epoch {e}", p.display());
+    }
     let run = tr.run(true);
     write_trace(&tr.telemetry.tracer, &trace_path)?;
     let stats = run?;

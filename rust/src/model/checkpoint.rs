@@ -1,18 +1,90 @@
 //! Model checkpointing: binary save/load of the flattened parameters plus
 //! shape metadata, so long training runs (and the examples) can resume.
+//!
+//! Two on-disk formats (DESIGN.md §15):
+//!
+//! * **v1** (`SGCNCKP1`) — weights + epoch counter only. Kept for old
+//!   files; `save`/`load` below.
+//! * **v2** (`SGCNCKP2`) — the fault-tolerance format: weights, optimizer
+//!   moments + step count, driver RNG state, epoch counter, and the
+//!   `RunConfig` fingerprint, so `--resume` can verify the run is
+//!   numerics-identical to the one that wrote the file.
+//!   `save_state`/`load_state` below.
+//!
+//! Both loaders are hardened: truncated, corrupt, or version-mismatched
+//! files return a descriptive `Err` (never a panic) before any state is
+//! mutated beyond the passed-in buffers.
 
+use super::optimizer::Optimizer;
 use super::ModelParams;
 use anyhow::{Context, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"SGCNCKP1";
+const MAGIC_V2: &[u8; 8] = b"SGCNCKP2";
 
-/// Save parameters (+ the epoch counter) to `path`.
-pub fn save(params: &ModelParams, epoch: usize, path: &Path) -> Result<()> {
-    let mut w = BufWriter::new(std::fs::File::create(path)?);
-    w.write_all(MAGIC)?;
-    w.write_all(&(epoch as u64).to_le_bytes())?;
+/// Driver-side counters restored from a v2 checkpoint (weights and
+/// optimizer moments land directly in the `ModelParams`/`Optimizer`
+/// passed to [`load_state`]).
+#[derive(Clone, Copy, Debug)]
+pub struct RestoredState {
+    /// Completed-epoch count at save time (training resumes here).
+    pub epoch: usize,
+    /// `RunConfig::fingerprint()` of the run that wrote the file.
+    pub fingerprint: u64,
+    /// Driver RNG state (xoshiro256**) captured after the saved epoch.
+    pub rng_state: [u64; 4],
+}
+
+/// Checked little-endian reader: every failed read names what was being
+/// read instead of surfacing a bare "failed to fill whole buffer".
+struct Reader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> Reader<R> {
+    fn bytes8(&mut self, what: &str) -> Result<[u8; 8]> {
+        let mut b = [0u8; 8];
+        self.r
+            .read_exact(&mut b)
+            .with_context(|| format!("checkpoint truncated or unreadable while reading {what}"))?;
+        Ok(b)
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes8(what)?))
+    }
+
+    fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        let mut out = vec![0f32; n];
+        let mut b = [0u8; 4];
+        for v in &mut out {
+            self.r.read_exact(&mut b).with_context(|| {
+                format!("checkpoint truncated or unreadable while reading {what}")
+            })?;
+            *v = f32::from_le_bytes(b);
+        }
+        Ok(out)
+    }
+
+    fn expect_eof(&mut self) -> Result<()> {
+        let mut b = [0u8; 1];
+        match self.r.read(&mut b) {
+            Ok(0) => Ok(()),
+            Ok(_) => anyhow::bail!("checkpoint has trailing bytes past the declared payload"),
+            Err(e) => Err(e).context("checking checkpoint end"),
+        }
+    }
+}
+
+fn open(path: &Path) -> Result<Reader<BufReader<std::fs::File>>> {
+    Ok(Reader {
+        r: BufReader::new(std::fs::File::open(path).context("opening checkpoint")?),
+    })
+}
+
+fn write_shapes(w: &mut impl Write, params: &ModelParams) -> std::io::Result<()> {
     w.write_all(&(params.num_classes as u64).to_le_bytes())?;
     w.write_all(&(params.f_in as u64).to_le_bytes())?;
     w.write_all(&(params.layers.len() as u64).to_le_bytes())?;
@@ -20,58 +92,149 @@ pub fn save(params: &ModelParams, epoch: usize, path: &Path) -> Result<()> {
         w.write_all(&(l.fin as u64).to_le_bytes())?;
         w.write_all(&(l.fout as u64).to_le_bytes())?;
     }
-    let flat = params.flatten();
-    w.write_all(&(flat.len() as u64).to_le_bytes())?;
-    for v in &flat {
+    Ok(())
+}
+
+fn write_f32s(w: &mut impl Write, xs: &[f32]) -> std::io::Result<()> {
+    for v in xs {
         w.write_all(&v.to_le_bytes())?;
     }
     Ok(())
 }
 
-/// Load a checkpoint into `params` (shapes must match); returns the epoch.
-pub fn load(params: &mut ModelParams, path: &Path) -> Result<usize> {
-    let mut r = BufReader::new(std::fs::File::open(path).context("opening checkpoint")?);
-    let mut m = [0u8; 8];
-    r.read_exact(&mut m)?;
-    anyhow::ensure!(&m == MAGIC, "not a supergcn checkpoint");
-    let mut u64buf = [0u8; 8];
-    let mut next = |r: &mut BufReader<std::fs::File>| -> Result<u64> {
-        r.read_exact(&mut u64buf)?;
-        Ok(u64::from_le_bytes(u64buf))
-    };
-    let epoch = next(&mut r)? as usize;
-    let classes = next(&mut r)? as usize;
-    let f_in = next(&mut r)? as usize;
+/// Check the shape header against `params`; shared by both loaders.
+fn read_shapes(r: &mut Reader<impl Read>, params: &ModelParams) -> Result<()> {
+    let classes = r.u64("class count")? as usize;
+    let f_in = r.u64("input feature dim")? as usize;
     anyhow::ensure!(
         classes == params.num_classes && f_in == params.f_in,
         "checkpoint shape mismatch: classes {classes}/f_in {f_in}"
     );
-    let n_layers = next(&mut r)? as usize;
+    let n_layers = r.u64("layer count")? as usize;
     anyhow::ensure!(n_layers == params.layers.len(), "layer count mismatch");
     for l in &params.layers {
-        let fin = next(&mut r)? as usize;
-        let fout = next(&mut r)? as usize;
+        let fin = r.u64("layer input dim")? as usize;
+        let fout = r.u64("layer output dim")? as usize;
         anyhow::ensure!(fin == l.fin && fout == l.fout, "layer dim mismatch");
     }
-    let n = next(&mut r)? as usize;
-    anyhow::ensure!(n == params.n_params(), "parameter count mismatch");
-    let mut flat = vec![0f32; n];
-    let mut f4 = [0u8; 4];
-    for v in &mut flat {
-        r.read_exact(&mut f4)?;
-        *v = f32::from_le_bytes(f4);
+    Ok(())
+}
+
+/// Save parameters (+ the epoch counter) to `path` (v1 format).
+pub fn save(params: &ModelParams, epoch: usize, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(MAGIC)?;
+    w.write_all(&(epoch as u64).to_le_bytes())?;
+    write_shapes(&mut w, params)?;
+    let flat = params.flatten();
+    w.write_all(&(flat.len() as u64).to_le_bytes())?;
+    write_f32s(&mut w, &flat)?;
+    Ok(())
+}
+
+/// Load a v1 checkpoint into `params` (shapes must match); returns the
+/// epoch.
+pub fn load(params: &mut ModelParams, path: &Path) -> Result<usize> {
+    let mut r = open(path)?;
+    let m = r.bytes8("magic")?;
+    if &m == MAGIC_V2 {
+        anyhow::bail!(
+            "checkpoint version mismatch: found v2 (SGCNCKP2, full training state) — \
+             load it with checkpoint::load_state / --resume"
+        );
     }
+    anyhow::ensure!(&m == MAGIC, "not a supergcn checkpoint");
+    let epoch = r.u64("epoch counter")? as usize;
+    read_shapes(&mut r, params)?;
+    let n = r.u64("parameter count")? as usize;
+    anyhow::ensure!(n == params.n_params(), "parameter count mismatch");
+    let flat = r.f32s(n, "parameter values")?;
+    r.expect_eof()?;
     params.unflatten_into(&flat);
     Ok(epoch)
+}
+
+/// Save the full training state (v2): weights, optimizer moments + step
+/// count, driver RNG state, epoch counter, and the config fingerprint.
+pub fn save_state(
+    params: &ModelParams,
+    opt: &Optimizer,
+    rng_state: [u64; 4],
+    epoch: usize,
+    fingerprint: u64,
+    path: &Path,
+) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path).context("creating checkpoint")?);
+    w.write_all(MAGIC_V2)?;
+    w.write_all(&fingerprint.to_le_bytes())?;
+    w.write_all(&(epoch as u64).to_le_bytes())?;
+    for s in rng_state {
+        w.write_all(&s.to_le_bytes())?;
+    }
+    write_shapes(&mut w, params)?;
+    let (m, v, t) = opt.state();
+    w.write_all(&t.to_le_bytes())?;
+    let flat = params.flatten();
+    anyhow::ensure!(
+        m.len() == flat.len() && v.len() == flat.len(),
+        "optimizer moments ({}/{}) do not match the parameter count ({})",
+        m.len(),
+        v.len(),
+        flat.len()
+    );
+    w.write_all(&(flat.len() as u64).to_le_bytes())?;
+    write_f32s(&mut w, &flat)?;
+    write_f32s(&mut w, m)?;
+    write_f32s(&mut w, v)?;
+    Ok(())
+}
+
+/// Load a v2 checkpoint: weights into `params`, moments + step count into
+/// `opt`; returns the restored driver counters. Nothing is mutated until
+/// the whole file has been read and validated.
+pub fn load_state(params: &mut ModelParams, opt: &mut Optimizer, path: &Path) -> Result<RestoredState> {
+    let mut r = open(path)?;
+    let magic = r.bytes8("magic")?;
+    if &magic == MAGIC {
+        anyhow::bail!(
+            "checkpoint version mismatch: found v1 (SGCNCKP1, weights only) — a resumable \
+             checkpoint needs optimizer/RNG state; re-save with --checkpoint-every"
+        );
+    }
+    anyhow::ensure!(&magic == MAGIC_V2, "not a supergcn checkpoint");
+    let fingerprint = r.u64("config fingerprint")?;
+    let epoch = r.u64("epoch counter")? as usize;
+    let mut rng_state = [0u64; 4];
+    for (i, s) in rng_state.iter_mut().enumerate() {
+        *s = r.u64(&format!("RNG state word {i}"))?;
+    }
+    read_shapes(&mut r, params)?;
+    let t = r.u64("optimizer step count")?;
+    let n = r.u64("parameter count")? as usize;
+    anyhow::ensure!(n == params.n_params(), "parameter count mismatch");
+    let flat = r.f32s(n, "parameter values")?;
+    let m = r.f32s(n, "optimizer first moments")?;
+    let v = r.f32s(n, "optimizer second moments")?;
+    r.expect_eof()?;
+    params.unflatten_into(&flat);
+    opt.restore(&m, &v, t)?;
+    Ok(RestoredState { epoch, fingerprint, rng_state })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::optimizer::OptKind;
     use crate::model::test_config;
 
     fn tmp(name: &str) -> std::path::PathBuf {
         std::env::temp_dir().join(format!("supergcn_ckpt_{}_{name}", std::process::id()))
+    }
+
+    fn params_and_opt(seed: u64) -> (ModelParams, Optimizer) {
+        let p = ModelParams::init(&test_config(), seed);
+        let n = p.n_params();
+        (p, Optimizer::new(OptKind::Adam, 0.01, n))
     }
 
     #[test]
@@ -104,7 +267,107 @@ mod tests {
         let path = tmp("garb.bin");
         std::fs::write(&path, b"NOTACKPT").unwrap();
         let mut p = ModelParams::init(&test_config(), 1);
-        assert!(load(&mut p, &path).is_err());
+        let err = load(&mut p, &path).unwrap_err();
+        assert!(err.to_string().contains("not a supergcn checkpoint"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn state_roundtrip_bit_identical() {
+        let (mut p, mut opt) = params_and_opt(3);
+        // Take a few optimizer steps so the moments are non-trivial.
+        let grads: Vec<f32> = (0..p.n_params()).map(|i| (i as f32).sin()).collect();
+        let mut flat = p.flatten();
+        for _ in 0..3 {
+            opt.step(&mut flat, &grads);
+        }
+        p.unflatten_into(&flat);
+        let rng = [1u64, 2, 3, 4];
+        let path = tmp("v2rt.bin");
+        save_state(&p, &opt, rng, 17, 0xDEAD_BEEF, &path).unwrap();
+
+        let (mut q, mut opt2) = params_and_opt(99);
+        let st = load_state(&mut q, &mut opt2, &path).unwrap();
+        assert_eq!(st.epoch, 17);
+        assert_eq!(st.fingerprint, 0xDEAD_BEEF);
+        assert_eq!(st.rng_state, rng);
+        assert_eq!(q.flatten(), p.flatten());
+        assert_eq!(opt2.state().0, opt.state().0);
+        assert_eq!(opt2.state().1, opt.state().1);
+        assert_eq!(opt2.state().2, opt.state().2);
+
+        // save → load → save is bit-identical on disk.
+        let path2 = tmp("v2rt2.bin");
+        save_state(&q, &opt2, st.rng_state, st.epoch, st.fingerprint, &path2).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), std::fs::read(&path2).unwrap());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&path2).ok();
+    }
+
+    #[test]
+    fn truncated_v2_rejected_at_every_cut() {
+        let (p, opt) = params_and_opt(5);
+        let path = tmp("v2trunc.bin");
+        save_state(&p, &opt, [9, 8, 7, 6], 2, 1, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // Cut the file at several prefixes spanning header, shapes, and
+        // payload; every one must fail with a descriptive error, and the
+        // target buffers must be left loadable afterwards.
+        for cut in [0, 4, 8, 15, 40, 80, full.len() / 2, full.len() - 1] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            let (mut q, mut o2) = params_and_opt(5);
+            let err = load_state(&mut q, &mut o2, &path).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("truncated") || msg.contains("mismatch"),
+                "cut {cut}: unexpected error {msg}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn trailing_garbage_rejected() {
+        let (p, opt) = params_and_opt(5);
+        let path = tmp("v2trail.bin");
+        save_state(&p, &opt, [0; 4], 0, 0, &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.push(0xAB);
+        std::fs::write(&path, &bytes).unwrap();
+        let (mut q, mut o2) = params_and_opt(5);
+        let err = load_state(&mut q, &mut o2, &path).unwrap_err();
+        assert!(err.to_string().contains("trailing bytes"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn version_mismatch_both_directions() {
+        let (p, opt) = params_and_opt(5);
+        let v1 = tmp("v1file.bin");
+        let v2 = tmp("v2file.bin");
+        save(&p, 3, &v1).unwrap();
+        save_state(&p, &opt, [0; 4], 3, 0, &v2).unwrap();
+
+        let (mut q, mut o2) = params_and_opt(5);
+        let err = load_state(&mut q, &mut o2, &v1).unwrap_err();
+        assert!(err.to_string().contains("found v1"), "{err:#}");
+        let err = load(&mut q, &v2).unwrap_err();
+        assert!(err.to_string().contains("found v2"), "{err:#}");
+        std::fs::remove_file(&v1).ok();
+        std::fs::remove_file(&v2).ok();
+    }
+
+    #[test]
+    fn v2_shape_mismatch_rejected() {
+        let (p, opt) = params_and_opt(5);
+        let path = tmp("v2mm.bin");
+        save_state(&p, &opt, [0; 4], 0, 0, &path).unwrap();
+        let mut cfg2 = test_config();
+        cfg2.classes = 8;
+        let mut q = ModelParams::init(&cfg2, 1);
+        let mut o2 = Optimizer::new(OptKind::Adam, 0.01, q.n_params());
+        let err = load_state(&mut q, &mut o2, &path).unwrap_err();
+        assert!(err.to_string().contains("shape mismatch"), "{err:#}");
         std::fs::remove_file(&path).ok();
     }
 }

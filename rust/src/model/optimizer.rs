@@ -29,6 +29,28 @@ impl Optimizer {
         }
     }
 
+    /// Optimizer state for checkpointing: (first moments, second moments,
+    /// step count). Restore with [`Optimizer::restore`].
+    pub fn state(&self) -> (&[f32], &[f32], u64) {
+        (&self.m, &self.v, self.t)
+    }
+
+    /// Restore checkpointed moments + step count (inverse of
+    /// [`Optimizer::state`]).
+    pub fn restore(&mut self, m: &[f32], v: &[f32], t: u64) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            m.len() == self.m.len() && v.len() == self.v.len(),
+            "optimizer state length mismatch: got {}/{} moments, expected {}",
+            m.len(),
+            v.len(),
+            self.m.len()
+        );
+        self.m.copy_from_slice(m);
+        self.v.copy_from_slice(v);
+        self.t = t;
+        Ok(())
+    }
+
     /// Apply one update in place: `params -= lr * step(grads)`.
     pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
         assert_eq!(params.len(), grads.len());

@@ -46,9 +46,12 @@ pub enum TraceCategory {
     Fetch,
     /// Coarse engine phases (forward/backward/loss stages).
     Phase,
+    /// Fault-tolerance events: chaos kills, elastic re-plans, resumes
+    /// (DESIGN.md §15).
+    Recovery,
 }
 
-pub const ALL_TRACE_CATEGORIES: [TraceCategory; 10] = [
+pub const ALL_TRACE_CATEGORIES: [TraceCategory; 11] = [
     TraceCategory::Agg,
     TraceCategory::QuantPack,
     TraceCategory::QuantUnpack,
@@ -59,6 +62,7 @@ pub const ALL_TRACE_CATEGORIES: [TraceCategory; 10] = [
     TraceCategory::OptStep,
     TraceCategory::Fetch,
     TraceCategory::Phase,
+    TraceCategory::Recovery,
 ];
 
 impl TraceCategory {
@@ -74,6 +78,7 @@ impl TraceCategory {
             TraceCategory::OptStep => "opt_step",
             TraceCategory::Fetch => "fetch",
             TraceCategory::Phase => "phase",
+            TraceCategory::Recovery => "recovery",
         }
     }
 }

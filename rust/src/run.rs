@@ -1,0 +1,446 @@
+//! Unified run configuration (DESIGN.md §15).
+//!
+//! One `RunConfig` describes a whole training run — regime selection
+//! (`sampler`), numerics (lr/quant/strategy/...), executor shape
+//! (transport/overlap/group-size), and the fault-tolerance policy
+//! (checkpointing, resume, chaos injection). It is the **single
+//! construction path** for both trainers: the CLI, benches, and examples
+//! build a `RunConfig` and call [`RunConfig::full_batch_trainer`] /
+//! [`RunConfig::minibatch_trainer`] instead of assembling
+//! `TrainConfig`/`MiniBatchConfig`/`SamplerConfig` literals by hand, so
+//! validation and the checkpoint fingerprint live in exactly one place.
+//!
+//! The [`RunConfig::fingerprint`] hash covers every field that affects
+//! the training numerics (seed, lr, quant, sampler shape, ...) and
+//! deliberately excludes the fields that are bit-exactness-preserving by
+//! construction (transport, overlap, group-size, agg kernel —
+//! `tests/spmd_parity.rs`) or pure accounting (machine profile, epoch
+//! count, checkpoint knobs). A checkpoint therefore resumes under any
+//! executor shape, but never under numerics that would silently diverge.
+
+use crate::comm::transport::{FaultPlan, FaultSpec, Topology, TransportKind};
+use crate::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
+use crate::coordinator::planner::{self, WorkerCtx};
+use crate::coordinator::trainer::{CheckpointPolicy, ElasticCtx, TrainConfig, Trainer};
+use crate::exec::AggDispatch;
+use crate::graph::generate::LabelledGraph;
+use crate::hier::volume::RemoteStrategy;
+use crate::model::optimizer::OptKind;
+use crate::perfmodel::MachineProfile;
+use crate::quant::Bits;
+use crate::runtime::ShapeConfig;
+use crate::sample::{SamplerConfig, SamplerKind};
+use crate::util::rng::SplitMix64;
+use anyhow::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Everything a training run needs, in one struct (DESIGN.md §15).
+/// Construct with struct-update syntax over [`RunConfig::default`].
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Training regime: `Full` runs the full-batch [`Trainer`], anything
+    /// else the mini-batch loop over that sampler.
+    pub sampler: SamplerKind,
+    pub epochs: usize,
+    pub lr: f32,
+    pub opt: OptKind,
+    /// Halo / fetched-row quantization (None = FP32).
+    pub quant: Option<Bits>,
+    pub hidden: usize,
+    /// Masked label propagation (§6.1(1); full-batch only).
+    pub label_prop: bool,
+    pub lp_frac: f64,
+    /// Remote-graph strategy (full-batch only; mini-batch fetches rows).
+    pub strategy: RemoteStrategy,
+    /// Halo exchange every N epochs (full-batch only; 1 = synchronous).
+    pub delay_comm: usize,
+    /// Mini-batch engine LayerNorm toggle (see `MiniBatchConfig`).
+    pub layernorm: bool,
+    pub machine: MachineProfile,
+    pub agg: AggDispatch,
+    pub transport: TransportKind,
+    pub rank_threads: usize,
+    pub overlap: bool,
+    pub group_size: usize,
+    pub seed: u64,
+    /// Sampler hyperparameters (mini-batch regimes; see `SamplerConfig`).
+    pub batch_size: usize,
+    pub fanouts: Vec<usize>,
+    pub walk_length: usize,
+    pub num_clusters: usize,
+    pub clusters_per_batch: usize,
+    pub norm_batches: usize,
+    /// Save a v2 checkpoint every N completed epochs (0 = off;
+    /// `--checkpoint-every`).
+    pub checkpoint_every: usize,
+    pub checkpoint_path: PathBuf,
+    /// Restore this checkpoint before training (`--resume`).
+    pub resume: Option<PathBuf>,
+    /// Chaos injection: kill one rank mid-epoch (`--chaos rank=R,epoch=E`;
+    /// threaded transport only — test/bench hook, DESIGN.md §15).
+    pub chaos: Option<FaultSpec>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            sampler: SamplerKind::Full,
+            epochs: 100,
+            lr: 0.01,
+            opt: OptKind::Adam,
+            quant: None,
+            hidden: 64,
+            label_prop: false,
+            lp_frac: 0.5,
+            strategy: RemoteStrategy::Hybrid,
+            delay_comm: 1,
+            layernorm: false,
+            machine: MachineProfile::abci(),
+            agg: AggDispatch::default(),
+            transport: TransportKind::Sequential,
+            rank_threads: 0,
+            overlap: false,
+            group_size: 1,
+            seed: 42,
+            batch_size: 512,
+            fanouts: vec![15, 10, 5],
+            walk_length: 3,
+            num_clusters: 0,
+            clusters_per_batch: 1,
+            norm_batches: 20,
+            checkpoint_every: 0,
+            checkpoint_path: PathBuf::from("supergcn.ckpt"),
+            resume: None,
+            chaos: None,
+        }
+    }
+}
+
+/// Fold one 64-bit word into the running fingerprint. SplitMix64 over
+/// the xor keeps single-bit input changes avalanching across the hash.
+fn mix(h: &mut u64, v: u64) {
+    *h = SplitMix64::new(*h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64();
+}
+
+fn mix_str(h: &mut u64, s: &str) {
+    mix(h, s.len() as u64);
+    for b in s.as_bytes() {
+        mix(h, *b as u64);
+    }
+}
+
+impl RunConfig {
+    /// The derived full-batch config (numerics + executor shape; the
+    /// epoch budget rides along for `Trainer::run`'s loop bound).
+    pub fn train_config(&self) -> TrainConfig {
+        TrainConfig {
+            epochs: self.epochs,
+            lr: self.lr,
+            opt: self.opt,
+            quant: self.quant,
+            label_prop: self.label_prop,
+            lp_frac: self.lp_frac,
+            strategy: self.strategy,
+            delay_comm: self.delay_comm,
+            machine: self.machine.clone(),
+            agg: self.agg.clone(),
+            transport: self.transport,
+            rank_threads: self.rank_threads,
+            overlap: self.overlap,
+            group_size: self.group_size,
+            seed: self.seed,
+        }
+    }
+
+    /// The derived mini-batch config.
+    pub fn minibatch_config(&self) -> MiniBatchConfig {
+        MiniBatchConfig {
+            epochs: self.epochs,
+            lr: self.lr,
+            opt: self.opt,
+            quant: self.quant,
+            hidden: self.hidden,
+            layernorm: self.layernorm,
+            agg: self.agg.clone(),
+            transport: self.transport,
+            rank_threads: self.rank_threads,
+            overlap: self.overlap,
+            group_size: self.group_size,
+            machine: self.machine.clone(),
+            seed: self.seed,
+        }
+    }
+
+    /// The derived sampler hyperparameters.
+    pub fn sampler_config(&self) -> SamplerConfig {
+        SamplerConfig {
+            batch_size: self.batch_size,
+            fanouts: self.fanouts.clone(),
+            walk_length: self.walk_length,
+            num_clusters: self.num_clusters,
+            clusters_per_batch: self.clusters_per_batch,
+            norm_batches: self.norm_batches,
+            seed: self.seed,
+        }
+    }
+
+    /// Validate the whole configuration against a worker count — the one
+    /// checking path the CLI, benches, and examples all share.
+    pub fn validate(&self, workers: usize) -> Result<()> {
+        TransportKind::validate_rank_threads(self.rank_threads, workers)?;
+        Topology::validate_group_size(self.group_size, workers)?;
+        if self.sampler != SamplerKind::Full {
+            anyhow::ensure!(self.batch_size >= 1, "--batch-size must be >= 1");
+            anyhow::ensure!(
+                !self.fanouts.is_empty() && self.fanouts.iter().all(|&f| f >= 1),
+                "--fanouts must be a non-empty comma-separated list of integers >= 1"
+            );
+        }
+        if let Some(c) = self.chaos {
+            anyhow::ensure!(
+                self.transport == TransportKind::Threaded,
+                "--chaos requires --transport threaded (a rank failure is a rank-thread panic)"
+            );
+            anyhow::ensure!(
+                c.rank < workers,
+                "--chaos rank {} out of range for {workers} workers",
+                c.rank
+            );
+        }
+        Ok(())
+    }
+
+    /// Hash of every numerics-affecting field — written into checkpoints
+    /// and required to match on `--resume` (see the module docs for what
+    /// is deliberately excluded and why).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0x5347_434e_0000_0002; // "SGCN" + fingerprint rev
+        mix(&mut h, self.lr.to_bits() as u64);
+        mix(&mut h, match self.opt {
+            OptKind::Sgd => 1,
+            OptKind::Adam => 2,
+        });
+        mix_str(&mut h, self.quant.map(|b| b.name()).unwrap_or("fp32"));
+        mix(&mut h, self.label_prop as u64);
+        mix(&mut h, self.lp_frac.to_bits());
+        mix_str(&mut h, self.strategy.name());
+        mix(&mut h, self.delay_comm as u64);
+        mix(&mut h, self.hidden as u64);
+        mix(&mut h, self.layernorm as u64);
+        mix_str(&mut h, self.sampler.name());
+        mix(&mut h, self.batch_size as u64);
+        mix(&mut h, self.fanouts.len() as u64);
+        for &f in &self.fanouts {
+            mix(&mut h, f as u64);
+        }
+        mix(&mut h, self.walk_length as u64);
+        mix(&mut h, self.num_clusters as u64);
+        mix(&mut h, self.clusters_per_batch as u64);
+        mix(&mut h, self.norm_batches as u64);
+        mix(&mut h, self.seed);
+        h
+    }
+
+    /// The checkpoint policy this config asks for (None when
+    /// `checkpoint_every` is 0).
+    pub fn checkpoint_policy(&self) -> Option<CheckpointPolicy> {
+        (self.checkpoint_every > 0).then(|| CheckpointPolicy {
+            every: self.checkpoint_every,
+            path: self.checkpoint_path.clone(),
+            fingerprint: self.fingerprint(),
+        })
+    }
+
+    /// Build the full-batch trainer over prepared worker contexts (the
+    /// xla-backend path, where shapes come from an artifact manifest; no
+    /// elastic recovery — re-planning needs the graph, see
+    /// [`RunConfig::full_batch_trainer_elastic`]).
+    pub fn full_batch_trainer(&self, ctxs: Vec<WorkerCtx>, shapes: ShapeConfig) -> Trainer {
+        let mut tr = Trainer::new(ctxs, shapes, self.train_config());
+        tr.ckpt = self.checkpoint_policy();
+        tr.chaos = self.chaos.map(FaultPlan::new);
+        tr
+    }
+
+    /// Partition `lg` across `k` workers, prepare contexts, and build the
+    /// full-batch trainer with elastic rank-failure recovery armed
+    /// (DESIGN.md §15). Equivalent numerics to `planner::prepare` +
+    /// [`RunConfig::full_batch_trainer`].
+    pub fn full_batch_trainer_elastic(&self, lg: Arc<LabelledGraph>, k: usize) -> Result<Trainer> {
+        let part = planner::partition_for(&lg, k, self.seed);
+        let (ctxs, cfg, _) = planner::prepare_parts(&lg, &part, self.strategy, None, self.hidden)?;
+        let mut tr = self.full_batch_trainer(ctxs, cfg);
+        tr.elastic = Some(ElasticCtx {
+            lg,
+            part,
+            max_failures: k.saturating_sub(1),
+        });
+        Ok(tr)
+    }
+
+    /// Build the mini-batch trainer (elastic recovery is always armed:
+    /// the trainer owns the graph and partition it needs to re-plan).
+    pub fn minibatch_trainer(&self, lg: Arc<LabelledGraph>, k: usize) -> Result<MiniBatchTrainer> {
+        let mut tr = MiniBatchTrainer::new(
+            lg,
+            k,
+            self.sampler,
+            &self.sampler_config(),
+            self.minibatch_config(),
+        )?;
+        tr.ckpt = self.checkpoint_policy();
+        tr.chaos = self.chaos.map(FaultPlan::new);
+        tr.elastic = true;
+        Ok(tr)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_ignores_executor_shape_and_budget() {
+        let base = RunConfig::default();
+        let fp = base.fingerprint();
+        let variants = [
+            RunConfig {
+                epochs: 7,
+                ..base.clone()
+            },
+            RunConfig {
+                transport: TransportKind::Threaded,
+                overlap: true,
+                group_size: 2,
+                ..base.clone()
+            },
+            RunConfig {
+                machine: MachineProfile::fugaku(),
+                ..base.clone()
+            },
+            RunConfig {
+                checkpoint_every: 3,
+                checkpoint_path: PathBuf::from("elsewhere.ckpt"),
+                ..base.clone()
+            },
+        ];
+        for v in &variants {
+            assert_eq!(v.fingerprint(), fp, "executor/budget field leaked into fingerprint");
+        }
+    }
+
+    #[test]
+    fn fingerprint_tracks_numerics() {
+        let base = RunConfig::default();
+        let fp = base.fingerprint();
+        let variants = [
+            RunConfig {
+                lr: 0.02,
+                ..base.clone()
+            },
+            RunConfig {
+                seed: 43,
+                ..base.clone()
+            },
+            RunConfig {
+                quant: Some(Bits::Int2),
+                ..base.clone()
+            },
+            RunConfig {
+                sampler: SamplerKind::Neighbor,
+                ..base.clone()
+            },
+            RunConfig {
+                fanouts: vec![15, 10],
+                ..base.clone()
+            },
+            RunConfig {
+                hidden: 32,
+                ..base.clone()
+            },
+        ];
+        for v in &variants {
+            assert_ne!(v.fingerprint(), fp, "numerics field missing from fingerprint");
+        }
+    }
+
+    #[test]
+    fn converters_copy_every_shared_field() {
+        let rc = RunConfig {
+            epochs: 9,
+            lr: 0.05,
+            quant: Some(Bits::Int4),
+            hidden: 48,
+            transport: TransportKind::Threaded,
+            overlap: true,
+            group_size: 2,
+            seed: 7,
+            batch_size: 33,
+            fanouts: vec![4, 2],
+            ..RunConfig::default()
+        };
+        let tc = rc.train_config();
+        assert_eq!(tc.epochs, 9);
+        assert_eq!(tc.lr, 0.05);
+        assert_eq!(tc.quant, Some(Bits::Int4));
+        assert_eq!(tc.transport, TransportKind::Threaded);
+        assert!(tc.overlap);
+        assert_eq!(tc.group_size, 2);
+        assert_eq!(tc.seed, 7);
+        let mc = rc.minibatch_config();
+        assert_eq!(mc.hidden, 48);
+        assert_eq!(mc.seed, 7);
+        assert_eq!(mc.quant, Some(Bits::Int4));
+        let sc = rc.sampler_config();
+        assert_eq!(sc.batch_size, 33);
+        assert_eq!(sc.fanouts, vec![4, 2]);
+        assert_eq!(sc.seed, 7);
+    }
+
+    #[test]
+    fn validate_checks_sampler_and_chaos() {
+        let mut rc = RunConfig {
+            sampler: SamplerKind::Neighbor,
+            fanouts: vec![],
+            ..RunConfig::default()
+        };
+        let e = rc.validate(4).unwrap_err().to_string();
+        assert!(e.contains("--fanouts must be a non-empty"), "{e}");
+        rc.fanouts = vec![5, 3];
+        rc.batch_size = 0;
+        let e = rc.validate(4).unwrap_err().to_string();
+        assert!(e.contains("--batch-size must be >= 1"), "{e}");
+
+        let rc = RunConfig {
+            chaos: Some(FaultSpec { rank: 1, epoch: 2 }),
+            ..RunConfig::default()
+        };
+        let e = rc.validate(4).unwrap_err().to_string();
+        assert!(e.contains("--chaos requires --transport threaded"), "{e}");
+        let rc = RunConfig {
+            chaos: Some(FaultSpec { rank: 9, epoch: 2 }),
+            transport: TransportKind::Threaded,
+            ..rc
+        };
+        let e = rc.validate(4).unwrap_err().to_string();
+        assert!(e.contains("out of range for 4 workers"), "{e}");
+        let rc = RunConfig {
+            chaos: Some(FaultSpec { rank: 1, epoch: 2 }),
+            ..rc
+        };
+        rc.validate(4).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_policy_off_by_default() {
+        assert!(RunConfig::default().checkpoint_policy().is_none());
+        let rc = RunConfig {
+            checkpoint_every: 5,
+            ..RunConfig::default()
+        };
+        let p = rc.checkpoint_policy().unwrap();
+        assert_eq!(p.every, 5);
+        assert_eq!(p.fingerprint, rc.fingerprint());
+    }
+}

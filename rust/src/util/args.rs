@@ -182,6 +182,206 @@ impl Args {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Typed flag tables
+// ---------------------------------------------------------------------------
+
+/// Fallible typed parses with the same messages the legacy [`Args`]
+/// getters panic with — [`FlagTable`] appliers return these as clean
+/// errors instead of aborting.
+pub fn parse_usize(name: &str, v: &str) -> anyhow::Result<usize> {
+    v.parse()
+        .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'"))
+}
+
+pub fn parse_u64(name: &str, v: &str) -> anyhow::Result<u64> {
+    v.parse()
+        .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'"))
+}
+
+pub fn parse_f64(name: &str, v: &str) -> anyhow::Result<f64> {
+    v.parse()
+        .map_err(|_| anyhow::anyhow!("--{name} expects a float, got '{v}'"))
+}
+
+/// Comma-separated usize list (e.g. `--fanouts 15,10,5`).
+pub fn parse_usize_list(name: &str, v: &str) -> anyhow::Result<Vec<usize>> {
+    v.split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| {
+            s.trim()
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects comma-separated ints, got '{v}'"))
+        })
+        .collect()
+}
+
+/// A flag that only applies under some mode: when the table's gate is
+/// active and `active(cfg)` reports a non-default value, parsing fails
+/// with `error` (e.g. full-batch-only flags under a mini-batch sampler).
+pub struct Conflict<C> {
+    pub active: fn(&C) -> bool,
+    pub error: &'static str,
+}
+
+struct Entry<C> {
+    name: &'static str,
+    default: &'static str,
+    help: &'static str,
+    is_flag: bool,
+    apply: fn(&mut C, &str) -> anyhow::Result<()>,
+    conflict: Option<Conflict<C>>,
+}
+
+/// Declarative **typed** flag table: each row names a flag, its default,
+/// its help line, a fallible value parser writing into the config, and an
+/// optional applies-under-this-mode constraint. `parse_into` tokenizes
+/// through [`Args`] (so `--key=value`, generated `--help`, and the
+/// loud unknown-flag error are shared), applies every row — defaults
+/// included — then enforces the constraint column.
+pub struct FlagTable<C> {
+    program: &'static str,
+    about: &'static str,
+    entries: Vec<Entry<C>>,
+    gate: Option<fn(&C) -> bool>,
+}
+
+impl<C> FlagTable<C> {
+    pub fn new(program: &'static str, about: &'static str) -> Self {
+        Self {
+            program,
+            about,
+            entries: Vec::new(),
+            gate: None,
+        }
+    }
+
+    /// Install the mode predicate the `Conflict` column is checked under.
+    pub fn gate(mut self, g: fn(&C) -> bool) -> Self {
+        self.gate = Some(g);
+        self
+    }
+
+    /// Register a `--name <value>` option.
+    pub fn opt(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+        apply: fn(&mut C, &str) -> anyhow::Result<()>,
+    ) -> Self {
+        self.entries.push(Entry {
+            name,
+            default,
+            help,
+            is_flag: false,
+            apply,
+            conflict: None,
+        });
+        self
+    }
+
+    /// Register a `--name <value>` option that only applies when the
+    /// table's gate predicate is false.
+    pub fn opt_gated(
+        mut self,
+        name: &'static str,
+        default: &'static str,
+        help: &'static str,
+        apply: fn(&mut C, &str) -> anyhow::Result<()>,
+        conflict: Conflict<C>,
+    ) -> Self {
+        self.entries.push(Entry {
+            name,
+            default,
+            help,
+            is_flag: false,
+            apply,
+            conflict: Some(conflict),
+        });
+        self
+    }
+
+    /// Register a boolean `--name` flag (applier sees `"true"` when set).
+    pub fn flag(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        apply: fn(&mut C, &str) -> anyhow::Result<()>,
+    ) -> Self {
+        self.entries.push(Entry {
+            name,
+            default: "",
+            help,
+            is_flag: true,
+            apply,
+            conflict: None,
+        });
+        self
+    }
+
+    /// Register a gated boolean `--name` flag.
+    pub fn flag_gated(
+        mut self,
+        name: &'static str,
+        help: &'static str,
+        apply: fn(&mut C, &str) -> anyhow::Result<()>,
+        conflict: Conflict<C>,
+    ) -> Self {
+        self.entries.push(Entry {
+            name,
+            default: "",
+            help,
+            is_flag: true,
+            apply,
+            conflict: Some(conflict),
+        });
+        self
+    }
+
+    fn args(&self) -> Args {
+        let mut a = Args::new(self.program, self.about);
+        for e in &self.entries {
+            a = if e.is_flag {
+                a.flag(e.name, e.help)
+            } else {
+                a.opt(e.name, e.default, e.help)
+            };
+        }
+        a
+    }
+
+    pub fn usage(&self) -> String {
+        self.args().usage()
+    }
+
+    /// Tokenize `argv`, apply every row into `cfg` (defaults included),
+    /// then check the constraint column under the gate predicate.
+    pub fn parse_into(&self, cfg: &mut C, argv: &[String]) -> anyhow::Result<()> {
+        let a = self.args().parse_from(argv)?;
+        for e in &self.entries {
+            if e.is_flag {
+                if a.get_flag(e.name) {
+                    (e.apply)(cfg, "true")?;
+                }
+            } else {
+                let v = a.get_str(e.name);
+                (e.apply)(cfg, &v)?;
+            }
+        }
+        if self.gate.map(|g| g(cfg)).unwrap_or(false) {
+            for e in &self.entries {
+                if let Some(c) = &e.conflict {
+                    if (c.active)(cfg) {
+                        anyhow::bail!("{}", c.error);
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -233,5 +433,113 @@ mod tests {
             .parse_from(&sv(&["--procs", "2,4,8,16"]))
             .unwrap();
         assert_eq!(a.get_usize_list("procs"), vec![2, 4, 8, 16]);
+    }
+
+    #[derive(Default)]
+    struct Cfg {
+        procs: usize,
+        mode: String,
+        fast: bool,
+        extra: usize,
+    }
+
+    fn table() -> FlagTable<Cfg> {
+        FlagTable::new("t", "test table")
+            .gate(|c: &Cfg| c.mode == "mini")
+            .opt("procs", "4", "worker count", |c, v| {
+                c.procs = parse_usize("procs", v)?;
+                Ok(())
+            })
+            .opt("mode", "full", "full | mini", |c, v| {
+                c.mode = v.to_string();
+                Ok(())
+            })
+            .opt_gated(
+                "extra",
+                "1",
+                "full-only knob",
+                |c, v| {
+                    c.extra = parse_usize("extra", v)?;
+                    Ok(())
+                },
+                Conflict {
+                    active: |c: &Cfg| c.extra > 1,
+                    error: "--extra only applies to --mode full",
+                },
+            )
+            .flag("fast", "go fast", |c, _| {
+                c.fast = true;
+                Ok(())
+            })
+    }
+
+    #[test]
+    fn flag_table_applies_defaults_and_overrides() {
+        let mut c = Cfg::default();
+        table().parse_into(&mut c, &sv(&[])).unwrap();
+        assert_eq!(c.procs, 4);
+        assert_eq!(c.mode, "full");
+        assert_eq!(c.extra, 1);
+        assert!(!c.fast);
+
+        let mut c = Cfg::default();
+        table()
+            .parse_into(&mut c, &sv(&["--procs=8", "--fast"]))
+            .unwrap();
+        assert_eq!(c.procs, 8);
+        assert!(c.fast);
+    }
+
+    #[test]
+    fn flag_table_typed_errors_and_unknown_flags() {
+        let mut c = Cfg::default();
+        let e = table()
+            .parse_into(&mut c, &sv(&["--procs", "many"]))
+            .unwrap_err()
+            .to_string();
+        assert_eq!(e, "--procs expects an integer, got 'many'");
+        let e = table()
+            .parse_into(&mut c, &sv(&["--nope"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown option --nope"), "{e}");
+        assert!(e.contains("--procs"), "usage listing missing: {e}");
+    }
+
+    #[test]
+    fn flag_table_conflicts_fire_only_under_the_gate() {
+        // Non-default gated value outside the gated mode: fine.
+        let mut c = Cfg::default();
+        table().parse_into(&mut c, &sv(&["--extra", "3"])).unwrap();
+        assert_eq!(c.extra, 3);
+        // Same value with the gate active: rejected with the row's error.
+        let mut c = Cfg::default();
+        let e = table()
+            .parse_into(&mut c, &sv(&["--extra", "3", "--mode", "mini"]))
+            .unwrap_err()
+            .to_string();
+        assert_eq!(e, "--extra only applies to --mode full");
+        // Default value under the gate: fine.
+        let mut c = Cfg::default();
+        table().parse_into(&mut c, &sv(&["--mode", "mini"])).unwrap();
+    }
+
+    #[test]
+    fn typed_parse_helpers_match_legacy_messages() {
+        assert_eq!(parse_usize("n", "5").unwrap(), 5);
+        assert_eq!(
+            parse_usize("n", "x").unwrap_err().to_string(),
+            "--n expects an integer, got 'x'"
+        );
+        assert_eq!(
+            parse_f64("n", "x").unwrap_err().to_string(),
+            "--n expects a float, got 'x'"
+        );
+        assert_eq!(parse_usize_list("n", "1, 2,3").unwrap(), vec![1, 2, 3]);
+        assert_eq!(
+            parse_usize_list("n", "1,a").unwrap_err().to_string(),
+            "--n expects comma-separated ints, got '1,a'"
+        );
+        assert_eq!(parse_u64("n", "9").unwrap(), 9);
     }
 }

@@ -46,6 +46,17 @@ impl Rng {
         }
     }
 
+    /// Raw generator state, for checkpointing (restore with
+    /// [`Rng::from_state`]).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild from a checkpointed [`Rng::state`] snapshot.
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Self { s }
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);

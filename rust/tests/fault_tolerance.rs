@@ -1,0 +1,340 @@
+//! Fault-tolerance contract tests (DESIGN.md §15).
+//!
+//! Three guarantees, each pinned to the bit:
+//!
+//! 1. **Checkpoint round-trip** — a v2 checkpoint restores the exact
+//!    driver state that wrote it (params, optimizer moments, RNG, epoch),
+//!    so re-saving a freshly resumed trainer reproduces the file
+//!    byte-for-byte.
+//! 2. **Resume equivalence** — `--checkpoint-every` + `--resume` splits a
+//!    run in two with per-epoch losses bit-identical to the uninterrupted
+//!    run, in both training regimes and under both transports.
+//! 3. **Elastic recovery** — a rank killed mid-epoch (the `--chaos`
+//!    injection hook) is absorbed at the epoch boundary: the failed
+//!    shard is re-planned across the survivors and the run continues
+//!    with losses bit-identical to a fresh run on the survivor plan
+//!    started from the pre-failure snapshot.
+//!
+//! The chaos legs write a recovery trace to `$SUPERGCN_CHAOS_TRACE` when
+//! set (the CI `chaos-smoke` job uploads it as a workflow artifact).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use supergcn::comm::transport::{FaultSpec, TransportKind};
+use supergcn::coordinator::minibatch::MiniBatchTrainer;
+use supergcn::coordinator::planner::{partition_for, prepare_parts, survivor_partition};
+use supergcn::coordinator::trainer::EpochStats;
+use supergcn::graph::generate::{sbm, LabelledGraph};
+use supergcn::model::optimizer::OptKind;
+use supergcn::obs::{Telemetry, Tracer};
+use supergcn::run::RunConfig;
+use supergcn::sample::SamplerKind;
+
+/// Small SBM workload: big enough that every rank owns halo rows, small
+/// enough that the threaded chaos legs stay fast.
+fn lg() -> Arc<LabelledGraph> {
+    Arc::new(sbm(360, 4, 8.0, 0.8, 12, 0.5, 7))
+}
+
+/// Unique scratch path per (process, test) — tests run in parallel.
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("supergcn_ckpt_{}_{name}", std::process::id()))
+}
+
+fn loss_bits(stats: &[EpochStats]) -> Vec<u32> {
+    stats.iter().map(|s| s.train_loss.to_bits()).collect()
+}
+
+fn assert_bits_eq(a: &[u32], b: &[u32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: epoch count diverged");
+    for (e, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x, y, "{what}: loss bits diverged at position {e}");
+    }
+}
+
+// ---- 1. checkpoint round-trip ---------------------------------------
+
+#[test]
+fn checkpoint_roundtrip_is_byte_identical() {
+    for opt in [OptKind::Adam, OptKind::Sgd] {
+        let rc = RunConfig {
+            epochs: 4,
+            opt,
+            ..Default::default()
+        };
+        let fp = rc.fingerprint();
+        let p1 = tmp(&format!("rt1_{opt:?}"));
+        let p2 = tmp(&format!("rt2_{opt:?}"));
+
+        let mut tr = rc.full_batch_trainer_elastic(lg(), 3).unwrap();
+        tr.run(false).unwrap();
+        tr.save_checkpoint(&p1, fp).unwrap();
+
+        // A fresh trainer resumed from the file holds the exact same
+        // driver state — re-saving must reproduce the file bit-for-bit.
+        let mut tr2 = rc.full_batch_trainer_elastic(lg(), 3).unwrap();
+        let epoch = tr2.resume_from(&p1, Some(fp)).unwrap();
+        assert_eq!(epoch, 4, "resume must land on the saved epoch counter");
+        tr2.save_checkpoint(&p2, fp).unwrap();
+
+        let b1 = std::fs::read(&p1).unwrap();
+        let b2 = std::fs::read(&p2).unwrap();
+        assert_eq!(b1, b2, "{opt:?}: resumed re-save must be byte-identical");
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
+    }
+}
+
+#[test]
+fn resume_refuses_fingerprint_mismatch() {
+    let rc = RunConfig {
+        epochs: 2,
+        ..Default::default()
+    };
+    let p = tmp("mismatch");
+    let mut tr = rc.full_batch_trainer_elastic(lg(), 3).unwrap();
+    tr.run(false).unwrap();
+    tr.save_checkpoint(&p, rc.fingerprint()).unwrap();
+
+    // A numerics-changing drift (different lr) must be refused…
+    let drifted = RunConfig {
+        lr: 0.05,
+        ..rc.clone()
+    };
+    assert_ne!(rc.fingerprint(), drifted.fingerprint());
+    let mut tr2 = drifted.full_batch_trainer_elastic(lg(), 3).unwrap();
+    let err = tr2
+        .resume_from(&p, Some(drifted.fingerprint()))
+        .unwrap_err();
+    assert!(
+        format!("{err:#}").contains("fingerprint mismatch"),
+        "unexpected error: {err:#}"
+    );
+
+    // …while an executor-shape drift (epochs / checkpoint knobs) resumes
+    // fine: the fingerprint deliberately excludes it.
+    let extended = RunConfig {
+        epochs: 9,
+        checkpoint_every: 3,
+        ..rc.clone()
+    };
+    assert_eq!(rc.fingerprint(), extended.fingerprint());
+    let mut tr3 = extended.full_batch_trainer_elastic(lg(), 3).unwrap();
+    assert_eq!(tr3.resume_from(&p, Some(extended.fingerprint())).unwrap(), 2);
+    let _ = std::fs::remove_file(&p);
+}
+
+// ---- 2. resume equivalence ------------------------------------------
+
+#[test]
+fn resume_matches_uninterrupted_full_batch() {
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        let total = 9usize;
+        let cut = 6usize;
+        let path = tmp(&format!("fb_{}", transport.name()));
+
+        // A: the uninterrupted reference.
+        let rc_a = RunConfig {
+            epochs: total,
+            transport,
+            ..Default::default()
+        };
+        let mut a = rc_a.full_batch_trainer_elastic(lg(), 3).unwrap();
+        let sa = a.run(false).unwrap();
+
+        // B: same numerics, stopped at the cut with a checkpoint written
+        // there (epochs and checkpoint knobs are fingerprint-neutral).
+        let rc_b = RunConfig {
+            epochs: cut,
+            checkpoint_every: cut,
+            checkpoint_path: path.clone(),
+            ..rc_a.clone()
+        };
+        assert_eq!(rc_a.fingerprint(), rc_b.fingerprint());
+        let mut b = rc_b.full_batch_trainer_elastic(lg(), 3).unwrap();
+        let sb = b.run(false).unwrap();
+
+        // C: a fresh process resuming the checkpoint to the full length.
+        let mut c = rc_a.full_batch_trainer_elastic(lg(), 3).unwrap();
+        assert_eq!(c.resume_from(&path, Some(rc_a.fingerprint())).unwrap(), cut);
+        let sc = c.run(false).unwrap();
+
+        let what = format!("full-batch resume ({})", transport.name());
+        assert_bits_eq(&loss_bits(&sb), &loss_bits(&sa[..cut]), &what);
+        assert_bits_eq(&loss_bits(&sc), &loss_bits(&sa[cut..]), &what);
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn resume_matches_uninterrupted_minibatch() {
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        let total = 5usize;
+        let cut = 3usize;
+        let path = tmp(&format!("mb_{}", transport.name()));
+
+        let rc_a = RunConfig {
+            sampler: SamplerKind::Neighbor,
+            epochs: total,
+            transport,
+            batch_size: 64,
+            fanouts: vec![4, 3],
+            ..Default::default()
+        };
+        let mut a = rc_a.minibatch_trainer(lg(), 3).unwrap();
+        let sa = a.run(false).unwrap();
+
+        let rc_b = RunConfig {
+            epochs: cut,
+            checkpoint_every: cut,
+            checkpoint_path: path.clone(),
+            ..rc_a.clone()
+        };
+        assert_eq!(rc_a.fingerprint(), rc_b.fingerprint());
+        let mut b = rc_b.minibatch_trainer(lg(), 3).unwrap();
+        let sb = b.run(false).unwrap();
+
+        let mut c = rc_a.minibatch_trainer(lg(), 3).unwrap();
+        assert_eq!(c.resume_from(&path, Some(rc_a.fingerprint())).unwrap(), cut);
+        let sc = c.run(false).unwrap();
+
+        let what = format!("mini-batch resume ({})", transport.name());
+        assert_bits_eq(&loss_bits(&sb), &loss_bits(&sa[..cut]), &what);
+        assert_bits_eq(&loss_bits(&sc), &loss_bits(&sa[cut..]), &what);
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+// ---- 3. elastic rank-failure recovery -------------------------------
+
+#[test]
+fn chaos_rank_loss_recovers_full_batch() {
+    let graph = lg();
+    let total = 7usize;
+    let fail_epoch = 3usize;
+    let failed_rank = 1usize;
+
+    // A: the chaos run — rank 1's thread is killed entering epoch 3; the
+    // driver re-plans its shard across the 3 survivors and retries. The
+    // CI chaos-smoke leg runs exactly this shape (threaded, group-size 2,
+    // overlap on) and uploads the recovery trace.
+    let rc = RunConfig {
+        epochs: total,
+        transport: TransportKind::Threaded,
+        overlap: true,
+        group_size: 2,
+        chaos: Some(FaultSpec {
+            rank: failed_rank,
+            epoch: fail_epoch,
+        }),
+        ..Default::default()
+    };
+    let tracer = Tracer::new();
+    let mut a = rc.full_batch_trainer_elastic(graph.clone(), 4).unwrap();
+    a.telemetry = Telemetry {
+        tracer: Some(tracer.clone()),
+        metrics: None,
+    };
+    let sa = a.run(false).unwrap();
+    assert_eq!(sa.len(), total, "every epoch must complete despite the kill");
+    assert_eq!(a.k(), 3, "the failed rank must be gone from the plan");
+    assert!(tracer.span_count() > 0, "recovery must land in the trace");
+    if let Ok(path) = std::env::var("SUPERGCN_CHAOS_TRACE") {
+        tracer.write(&path).unwrap();
+    }
+
+    // B: pre-failure reference — same config minus chaos, run to the
+    // boundary the kill interrupted. Bit-identical prefix.
+    let rc_b = RunConfig {
+        epochs: fail_epoch,
+        chaos: None,
+        ..rc.clone()
+    };
+    let mut b = rc_b.full_batch_trainer_elastic(graph.clone(), 4).unwrap();
+    let sb = b.run(false).unwrap();
+    assert_bits_eq(
+        &loss_bits(&sa[..fail_epoch]),
+        &loss_bits(&sb),
+        "full-batch chaos prefix",
+    );
+
+    // C: post-failure reference — a fresh trainer on the survivor plan,
+    // started from B's epoch-boundary state. The recovered run's tail
+    // must match it bit-for-bit.
+    let part = partition_for(&graph, 4, rc.seed);
+    let survivors = survivor_partition(&graph.graph, &part, failed_rank).unwrap();
+    let (ctxs, cfg, _) =
+        prepare_parts(&graph, &survivors, rc.strategy, None, rc.hidden).unwrap();
+    let rc_c = RunConfig {
+        chaos: None,
+        ..rc.clone()
+    };
+    let mut c = rc_c.full_batch_trainer(ctxs, cfg);
+    c.restore(&b.snapshot());
+    let sc = c.run(false).unwrap();
+    assert_bits_eq(
+        &loss_bits(&sa[fail_epoch..]),
+        &loss_bits(&sc),
+        "full-batch chaos tail",
+    );
+}
+
+#[test]
+fn chaos_rank_loss_recovers_minibatch() {
+    let graph = lg();
+    let total = 5usize;
+    let fail_epoch = 2usize;
+    let failed_rank = 1usize;
+
+    let rc = RunConfig {
+        sampler: SamplerKind::Neighbor,
+        epochs: total,
+        transport: TransportKind::Threaded,
+        batch_size: 64,
+        fanouts: vec![4, 3],
+        chaos: Some(FaultSpec {
+            rank: failed_rank,
+            epoch: fail_epoch,
+        }),
+        ..Default::default()
+    };
+    let mut a = rc.minibatch_trainer(graph.clone(), 3).unwrap();
+    let sa = a.run(false).unwrap();
+    assert_eq!(sa.len(), total, "every epoch must complete despite the kill");
+    assert_eq!(a.k(), 2, "the failed rank must be gone from the plan");
+
+    let rc_b = RunConfig {
+        epochs: fail_epoch,
+        chaos: None,
+        ..rc.clone()
+    };
+    let mut b = rc_b.minibatch_trainer(graph.clone(), 3).unwrap();
+    let sb = b.run(false).unwrap();
+    assert_bits_eq(
+        &loss_bits(&sa[..fail_epoch]),
+        &loss_bits(&sb),
+        "mini-batch chaos prefix",
+    );
+
+    let part = partition_for(&graph, 3, rc.seed);
+    let survivors = survivor_partition(&graph.graph, &part, failed_rank).unwrap();
+    let rc_c = RunConfig {
+        chaos: None,
+        ..rc.clone()
+    };
+    let mut c = MiniBatchTrainer::with_partition(
+        graph.clone(),
+        survivors,
+        rc_c.sampler,
+        &rc_c.sampler_config(),
+        rc_c.minibatch_config(),
+    )
+    .unwrap();
+    c.restore(&b.snapshot());
+    let sc = c.run(false).unwrap();
+    assert_bits_eq(
+        &loss_bits(&sa[fail_epoch..]),
+        &loss_bits(&sc),
+        "mini-batch chaos tail",
+    );
+}
