@@ -81,6 +81,16 @@ fn main() -> anyhow::Result<()> {
         // CLI equivalents: `supergcn train --checkpoint-every 10
         // --checkpoint-path run.ckpt --resume run.ckpt
         // --chaos rank=1,epoch=3`.
+        //
+        // The remote-feature cache (DESIGN.md §16) also rides this
+        // struct, but applies to the *mini-batch* fetch path — this
+        // full-batch driver exchanges halos, not feature rows, and
+        // `validate()` rejects a TTL here. On a sampler run,
+        // `feature_cache_rows: 512, feature_cache_ttl: 2` caches fetched
+        // remote rows per rank for 2 rounds, skipping both wire legs on
+        // a hit; TTL=0 (the default) is byte-for-byte the uncached path.
+        // CLI equivalent: `supergcn train --sampler neighbor
+        // --feature-cache-rows 512 --feature-cache-ttl 2`.
         ..Default::default()
     };
     let (ctxs, cfg, _) = prepare(&lg, 4, rc.strategy, Some(shape_cfg), rc.seed)?;

@@ -8,6 +8,11 @@
 //! fewer bytes than full-batch halos; SAINT trades coverage for the
 //! cheapest epochs; Int2 shrinks the fetched-row volume ~16x on top.
 //!
+//! A second table sweeps the remote-feature cache (DESIGN.md §16):
+//! TTL in {0,1,2,4} x capacity in {0, 1%, 5% of remote rows} on the
+//! neighbor sampler, reporting wire bytes, hit rate, and the
+//! final-loss delta vs the TTL=0 identity.
+//!
 //!     cargo bench --bench sampling_regimes
 
 use supergcn::datasets;
@@ -87,4 +92,83 @@ fn main() {
         }
     }
     t.print();
+
+    // ---- feature-cache staleness sweep (DESIGN.md §16) ----------------
+    // Neighbor fetch with the bounded-staleness row cache: TTL x capacity
+    // grid on a lighter frontier than the table above (smaller batch and
+    // a 2-hop fanout, so a few-percent capacity can actually cover the
+    // hot set). fp32 rows are immutable, so every cached fp32 run keeps
+    // the TTL=0 loss bits and the delta column isolates pure wire
+    // savings; int4 rows reuse a dequantized row for up to TTL rounds,
+    // so their delta is the staleness cost of skipping a freshly
+    // re-quantized fetch.
+    let cache_epochs = 12usize;
+    let remote_rows = spec.n - spec.n / k; // rows outside a rank's own shard
+    let sweep = |quant: Option<Bits>, rows: usize, ttl: usize| {
+        let rc = RunConfig {
+            sampler: SamplerKind::Neighbor,
+            epochs: cache_epochs,
+            quant,
+            batch_size: 128,
+            fanouts: vec![8, 4],
+            feature_cache_rows: rows,
+            feature_cache_ttl: ttl,
+            ..Default::default()
+        };
+        let (stats, tr) = train_minibatch(
+            &spec,
+            k,
+            SamplerKind::Neighbor,
+            &rc.sampler_config(),
+            rc.minibatch_config(),
+            Some(cache_epochs),
+        )
+        .unwrap();
+        (stats.last().unwrap().train_loss, tr.comm_stats.clone())
+    };
+    let mut ct = Table::new(
+        &format!(
+            "feature cache sweep: neighbor on {} @ {k} ranks, {cache_epochs} epochs \
+             (capacity as % of the {remote_rows} remote rows)",
+            spec.name
+        ),
+        &["quant", "ttl", "capacity", "epoch data", "hit rate", "wire saved", "loss vs ttl=0"],
+    );
+    for quant in [None, Some(Bits::Int4)] {
+        let qname = quant.map(|b| b.name()).unwrap_or("fp32");
+        let (base_loss, base_comm) = sweep(quant, 0, 0);
+        ct.row(vec![
+            qname.into(),
+            "0".into(),
+            "off".into(),
+            fmt_bytes(base_comm.total_data_bytes() / cache_epochs as f64),
+            "-".into(),
+            "-".into(),
+            "baseline".into(),
+        ]);
+        for ttl in [1usize, 2, 4] {
+            for pct in [0usize, 1, 5] {
+                let rows = remote_rows * pct / 100;
+                let (loss, comm) = sweep(quant, rows, ttl);
+                let c = &comm.cache;
+                ct.row(vec![
+                    qname.into(),
+                    ttl.to_string(),
+                    if pct == 0 {
+                        "0 rows".into()
+                    } else {
+                        format!("{pct}% ({rows})")
+                    },
+                    fmt_bytes(comm.total_data_bytes() / cache_epochs as f64),
+                    format!("{:.1}%", c.hit_rate() * 100.0),
+                    fmt_bytes(c.total_saved_bytes()),
+                    format!(
+                        "{:+.3}%",
+                        (loss as f64 - base_loss as f64) / (base_loss as f64).max(1e-12) * 100.0
+                    ),
+                ]);
+            }
+        }
+    }
+    ct.print();
 }

@@ -309,6 +309,85 @@ fn main() -> anyhow::Result<()> {
         supergcn::perfmodel::inter_group_messages(hier_k, hier_g),
     );
 
+    // ---- feature-cache section (DESIGN.md §16) ------------------------
+    // Mini-batch neighbor fetch with the remote-feature cache on (TTL
+    // from SUPERGCN_BENCH_CACHE_TTL; CI pins 1) vs the TTL=0 identity:
+    // fp32 rows are immutable, so the runs differ only in wire volume —
+    // the `cache` JSON block below is what the CI bench-smoke leg
+    // validates (hit rate > 0, saved bytes > 0).
+    let cache_k = 4usize;
+    let cache_ttl: usize = std::env::var("SUPERGCN_BENCH_CACHE_TTL")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1);
+    let cache_rows = 512usize;
+    let run_cached = |ttl: usize| -> anyhow::Result<(Vec<f32>, CommStats)> {
+        let rc = RunConfig {
+            sampler: SamplerKind::Neighbor,
+            epochs,
+            transport: TransportKind::Threaded,
+            seed: 42,
+            batch_size: 128,
+            fanouts: vec![10, 5, 5],
+            feature_cache_rows: if ttl > 0 { cache_rows } else { 0 },
+            feature_cache_ttl: ttl,
+            ..Default::default()
+        };
+        let (stats, tr) = train_minibatch(
+            &spec, cache_k, SamplerKind::Neighbor, &rc.sampler_config(), rc.minibatch_config(),
+            None,
+        )?;
+        Ok((
+            stats.iter().map(|s| s.train_loss).collect(),
+            tr.comm_stats.clone(),
+        ))
+    };
+    let (uncached_loss, uncached_comm) = run_cached(0)?;
+    let (cached_loss, cached_comm) = run_cached(cache_ttl.max(1))?;
+    // fp32 hits return the exact fetched bits, so the loss curve must
+    // not move at any TTL.
+    for (e, (a, b)) in uncached_loss.iter().zip(cached_loss.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "epoch {e}: fp32 feature cache must be bit-exact with TTL=0"
+        );
+    }
+    let cstats = &cached_comm.cache;
+    assert!(cstats.total_hits() > 0, "cache section recorded no hits");
+    let uncached_bytes = uncached_comm.total_data_bytes();
+    let cached_bytes = cached_comm.total_data_bytes();
+    let mut ct = Table::new(
+        &format!(
+            "feature cache: mini-batch @ {cache_k} ranks, ttl={} rows={cache_rows} \
+             (fp32 — bit-exact with ttl=0, wire-only win)",
+            cache_ttl.max(1)
+        ),
+        &["config", "fetch data", "hit rate", "hits", "evictions", "wire saved"],
+    );
+    ct.row(vec![
+        "ttl=0 (uncached)".to_string(),
+        supergcn::util::fmt_bytes(uncached_bytes),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    ct.row(vec![
+        format!("ttl={}", cache_ttl.max(1)),
+        supergcn::util::fmt_bytes(cached_bytes),
+        format!("{:.1}%", cstats.hit_rate() * 100.0),
+        cstats.total_hits().to_string(),
+        cstats.total_evictions().to_string(),
+        supergcn::util::fmt_bytes(cstats.total_saved_bytes()),
+    ]);
+    ct.print();
+    println!(
+        "fetch volume cut {:.1}% by caching remote rows for {} round(s)",
+        (1.0 - cached_bytes / uncached_bytes.max(1e-12)) * 100.0,
+        cache_ttl.max(1)
+    );
+
     // ---- report ------------------------------------------------------
     let mut table = Table::new(
         "SPMD transport scaling: wall secs, seq vs threaded (bit-exact runs)",
@@ -400,6 +479,22 @@ fn main() -> anyhow::Result<()> {
                         "modeled_flat_secs",
                         Json::Num(flat_comm.modeled_comm_secs()),
                     ),
+                    ("losses_bit_exact", Json::Bool(true)),
+                ]),
+            ),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("ranks", Json::Num(cache_k as f64)),
+                    ("ttl", Json::Num(cache_ttl.max(1) as f64)),
+                    ("rows", Json::Num(cache_rows as f64)),
+                    ("hit_rate", Json::Num(cstats.hit_rate())),
+                    ("hits", Json::Num(cstats.total_hits() as f64)),
+                    ("misses", Json::Num(cstats.total_misses() as f64)),
+                    ("evictions", Json::Num(cstats.total_evictions() as f64)),
+                    ("saved_bytes", Json::Num(cstats.total_saved_bytes())),
+                    ("uncached_data_bytes", Json::Num(uncached_bytes)),
+                    ("cached_data_bytes", Json::Num(cached_bytes)),
                     ("losses_bit_exact", Json::Bool(true)),
                 ]),
             ),

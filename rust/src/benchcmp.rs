@@ -19,9 +19,10 @@ pub type BenchRow = (String, f64);
 /// loudly, not pass it vacuously), or a row missing its key fields.
 ///
 /// Forward-compatibility contract: only the fields named here are read —
-/// unknown top-level keys (e.g. the `obs` telemetry block newer bench
-/// records carry) and unknown per-row keys are ignored, so a grown record
-/// schema never fails the gate against an older committed baseline.
+/// unknown top-level keys (e.g. the `obs` telemetry and feature-`cache`
+/// blocks newer bench records carry) and unknown per-row keys are
+/// ignored, so a grown record schema never fails the gate against an
+/// older committed baseline.
 pub fn load_rows(path: &str) -> Result<Vec<BenchRow>> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| anyhow::anyhow!("cannot read {path}: {e}"))?;
@@ -243,13 +244,17 @@ mod tests {
 
     #[test]
     fn unknown_keys_are_ignored_not_errors() {
-        // A newer record carrying a top-level `obs` telemetry block and
-        // extra per-row keys must still load against the documented
-        // schema — the comparator reads only the fields it names.
+        // A newer record carrying top-level `obs` telemetry and `cache`
+        // (DESIGN.md §16) blocks and extra per-row keys must still load
+        // against the documented schema — the comparator reads only the
+        // fields it names, so a grown record never fails the gate against
+        // an older committed baseline.
         let p = write(
             "forward-compat",
             "{\"bench\": \"spmd_scaling\", \
               \"obs\": {\"span_count\": 1234, \"trace\": \"trace_ci.json\"}, \
+              \"cache\": {\"ttl\": 1, \"rows\": 512, \"hit_rate\": 0.4, \
+                          \"saved_bytes\": 123456.0}, \
               \"rows\": [{\"regime\": \"full-batch\", \"ranks\": 2, \
                           \"threaded_wall_secs\": 0.5, \
                           \"span_count\": 99, \"future_field\": [1, 2]}]}",

@@ -146,6 +146,87 @@ impl TierStats {
     }
 }
 
+/// Remote-feature cache accounting for the mini-batch fetch (DESIGN.md
+/// §16). Vectors are indexed by the *requesting* rank — the rank whose
+/// cache produced the hit/miss — mirroring the sender-indexed
+/// [`TierStats`] convention, so the threaded transport's per-rank shards
+/// each populate one entry and the merge reproduces the sequential
+/// totals bit-for-bit. All entries stay zero when the cache is disabled
+/// (`--feature-cache-ttl 0`): the fetch never touches this struct.
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    /// Probe hits (rows served from cache, skipping both fetch legs).
+    pub hits: Vec<usize>,
+    /// Probe misses (rows fetched over the wire as before).
+    pub misses: Vec<usize>,
+    /// Residents displaced by frequency-ranked admission.
+    pub evictions: Vec<usize>,
+    /// Wire bits the hits avoided (request-leg id + reply-leg row share;
+    /// analytic for quantized replies).
+    pub saved_bits: Vec<f64>,
+}
+
+impl CacheStats {
+    pub fn new(k: usize) -> Self {
+        Self {
+            hits: vec![0; k],
+            misses: vec![0; k],
+            evictions: vec![0; k],
+            saved_bits: vec![0.0; k],
+        }
+    }
+
+    pub fn total_hits(&self) -> usize {
+        self.hits.iter().sum()
+    }
+
+    pub fn total_misses(&self) -> usize {
+        self.misses.iter().sum()
+    }
+
+    pub fn total_evictions(&self) -> usize {
+        self.evictions.iter().sum()
+    }
+
+    pub fn total_saved_bytes(&self) -> f64 {
+        self.saved_bits.iter().sum::<f64>() / 8.0
+    }
+
+    /// Hits over probes; `0.0` before any probe.
+    pub fn hit_rate(&self) -> f64 {
+        let probes = self.total_hits() + self.total_misses();
+        if probes == 0 {
+            0.0
+        } else {
+            self.total_hits() as f64 / probes as f64
+        }
+    }
+
+    /// Any cache activity recorded? (Always `false` at TTL 0.)
+    pub fn is_active(&self) -> bool {
+        self.total_hits() + self.total_misses() > 0
+    }
+
+    /// Fold one rank's round counters under its requester index.
+    pub fn charge(&mut self, from: usize, r: crate::exec::featcache::CacheRound) {
+        self.hits[from] += r.hits;
+        self.misses[from] += r.misses;
+        self.evictions[from] += r.evictions;
+        self.saved_bits[from] += r.saved_bits;
+    }
+
+    fn merge(&mut self, other: &CacheStats) {
+        let k = self.hits.len();
+        assert_eq!(other.hits.len(), k, "CacheStats rank-count mismatch");
+        for i in 0..k {
+            self.hits[i] += other.hits[i];
+            self.misses[i] += other.misses[i];
+            self.evictions[i] += other.evictions[i];
+            self.saved_bits[i] += other.saved_bits[i];
+        }
+    }
+}
+
 /// Accumulated communication accounting for one training run.
 #[derive(Clone, Debug, Default)]
 pub struct CommStats {
@@ -162,6 +243,11 @@ pub struct CommStats {
     /// fields above are charged identically either way — the bit-exactness
     /// contract of DESIGN.md §12).
     pub tiers: TierStats,
+    /// Remote-feature cache accounting (populated only when the
+    /// mini-batch fetch runs with `--feature-cache-ttl > 0`; the logical
+    /// wire fields above then shrink by exactly the traffic the hits
+    /// skipped — DESIGN.md §16).
+    pub cache: CacheStats,
 }
 
 impl CommStats {
@@ -172,6 +258,7 @@ impl CommStats {
             messages: vec![vec![0; k]; k],
             modeled_send_secs: vec![0.0; k],
             tiers: TierStats::new(k),
+            cache: CacheStats::new(k),
         }
     }
 
@@ -294,6 +381,7 @@ impl crate::obs::Mergeable for CommStats {
             self.modeled_send_secs[i] += other.modeled_send_secs[i];
         }
         self.tiers.merge(&other.tiers);
+        self.cache.merge(&other.cache);
     }
 }
 

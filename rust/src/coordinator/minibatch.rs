@@ -41,8 +41,8 @@ use crate::comm::transport::{
 };
 use crate::comm::{collective, CommStats};
 use crate::exec::{
-    AggDispatch, Engine, LossSpec, LossTotals, MiniBatchCtx, MiniBatchRankCtx, OverlapLedger,
-    StageClock,
+    AggDispatch, Engine, FeatCacheConfig, FetchScratch, LossSpec, LossTotals, MiniBatchCtx,
+    MiniBatchRankCtx, OverlapLedger, StageClock,
 };
 use crate::graph::generate::LabelledGraph;
 use crate::model::optimizer::{OptKind, Optimizer};
@@ -89,6 +89,14 @@ pub struct MiniBatchConfig {
     pub group_size: usize,
     pub machine: MachineProfile,
     pub seed: u64,
+    /// Remote-feature cache capacity in rows per rank (CLI:
+    /// `--feature-cache-rows`; DESIGN.md §16). Meaningful only when
+    /// `feature_cache_ttl > 0`.
+    pub feature_cache_rows: usize,
+    /// Remote-feature cache TTL in fetch rounds (CLI:
+    /// `--feature-cache-ttl`; DESIGN.md §16). 0 disables the cache
+    /// entirely — byte-for-byte the uncached fetch path.
+    pub feature_cache_ttl: usize,
 }
 
 impl Default for MiniBatchConfig {
@@ -107,6 +115,8 @@ impl Default for MiniBatchConfig {
             group_size: 1,
             machine: MachineProfile::abci(),
             seed: 42,
+            feature_cache_rows: 0,
+            feature_cache_ttl: 0,
         }
     }
 }
@@ -139,6 +149,10 @@ pub struct MiniBatchTrainer {
     pub elastic: bool,
     /// Rank losses absorbed so far this run.
     recovered: usize,
+    /// Per-rank fetch scratch: remote-feature cache + payload buffer pool
+    /// (DESIGN.md §16). Rebuilt (= cache invalidated) on elastic
+    /// recovery, since ownership changes under the survivor plan.
+    fetch: Vec<FetchScratch>,
 }
 
 impl MiniBatchTrainer {
@@ -190,6 +204,10 @@ impl MiniBatchTrainer {
         let engine = Engine::new(&shapes, mc.layernorm, mc.agg.clone());
         let k = part.k;
         let topo = Topology::new(k, mc.group_size);
+        let cache_cfg = FeatCacheConfig {
+            rows: mc.feature_cache_rows,
+            ttl: mc.feature_cache_ttl,
+        };
         Ok(Self {
             lg,
             part,
@@ -206,7 +224,16 @@ impl MiniBatchTrainer {
             chaos: None,
             elastic: false,
             recovered: 0,
+            fetch: FetchScratch::fleet(k, cache_cfg),
         })
+    }
+
+    /// The configured cache shape (used to rebuild scratch on recovery).
+    fn cache_cfg(&self) -> FeatCacheConfig {
+        FeatCacheConfig {
+            rows: self.mc.feature_cache_rows,
+            ttl: self.mc.feature_cache_ttl,
+        }
     }
 
     pub fn k(&self) -> usize {
@@ -262,6 +289,11 @@ impl MiniBatchTrainer {
         let mut sync = 0f64;
         let mut totals = LossTotals::default();
         let mut epoch_ledger = OverlapLedger::new(0);
+        // Lend the fetch scratch (feature cache + payload pool) to the
+        // round bodies for the epoch; restored below. An error path drops
+        // the borrowed state, but `recover` rebuilds it anyway (the cache
+        // must be invalidated on re-plan — DESIGN.md §16).
+        let mut fetch = std::mem::take(&mut self.fetch);
 
         for round in 0..rounds {
             let lo = round * k;
@@ -316,7 +348,7 @@ impl MiniBatchTrainer {
                 .collect();
 
             // ---- execute the round under the configured transport -----
-            let (lane_totals, clock, summed, round_ledger) = if threaded {
+            let step = if threaded {
                 self.round_threaded(
                     &batches,
                     &per_lane,
@@ -324,9 +356,20 @@ impl MiniBatchTrainer {
                     round,
                     fabric.as_ref().expect("fabric exists when threaded"),
                     &mut shards,
-                )?
+                    &mut fetch,
+                )
             } else {
-                self.round_sequential(&batches, &per_lane, &rows, round, &mut epoch_comm)?
+                self.round_sequential(&batches, &per_lane, &rows, round, &mut epoch_comm, &mut fetch)
+            };
+            let (lane_totals, clock, summed, round_ledger) = match step {
+                Ok(v) => v,
+                Err(e) => {
+                    // Hand the scratch back before propagating so a
+                    // caller that retries (elastic recovery rebuilds it
+                    // anyway) never sees an empty fleet.
+                    self.fetch = fetch;
+                    return Err(e);
+                }
             };
             epoch_ledger.absorb(&round_ledger);
 
@@ -366,6 +409,7 @@ impl MiniBatchTrainer {
                 collective::allreduce_max(&clock.quant_lane_totals()),
             );
         }
+        self.fetch = fetch;
         // Fold the threaded transport's per-rank shards (each populated
         // only its own sender row) into the epoch accounting.
         for s in &shards {
@@ -401,6 +445,14 @@ impl MiniBatchTrainer {
                 m.counter_add("comm.tier_intra.msgs", epoch_comm.tiers.total_intra_msgs() as f64);
                 m.counter_add("comm.tier_inter.msgs", epoch_comm.tiers.total_inter_msgs() as f64);
                 m.counter_add("comm.two_tier.secs", epoch_comm.tiers.modeled_two_tier_secs());
+            }
+            // Remote-feature cache (DESIGN.md §16): populated only when
+            // `--feature-cache-ttl > 0` saw at least one probe.
+            if epoch_comm.cache.is_active() {
+                m.counter_add("cache.hit.count", epoch_comm.cache.total_hits() as f64);
+                m.counter_add("cache.miss.count", epoch_comm.cache.total_misses() as f64);
+                m.counter_add("cache.eviction.count", epoch_comm.cache.total_evictions() as f64);
+                m.counter_add("cache.saved.bytes", epoch_comm.cache.total_saved_bytes());
             }
             // Measured interior/comm/boundary per fetch exchange, next to
             // the §11 model of both schedules on the same inputs.
@@ -438,6 +490,7 @@ impl MiniBatchTrainer {
 
     /// One round, sequential transport: fetch + engine forward/backward
     /// for every lane inside this thread, then the gradient allreduce.
+    #[allow(clippy::too_many_arguments)]
     fn round_sequential(
         &self,
         batches: &[MiniBatch],
@@ -445,6 +498,7 @@ impl MiniBatchTrainer {
         rows: &[usize],
         round: usize,
         epoch_comm: &mut CommStats,
+        fetch: &mut [FetchScratch],
     ) -> Result<(Vec<LossTotals>, StageClock, Vec<f32>, OverlapLedger)> {
         let k = self.part.k;
         let mut tapes = self.engine.tapes(rows, &self.params);
@@ -462,7 +516,8 @@ impl MiniBatchTrainer {
             self.mc.overlap,
             epoch_comm,
         )
-        .with_topology(self.topo);
+        .with_topology(self.topo)
+        .with_scratch(fetch);
         self.engine
             .forward(&self.params, &mut ctx, &mut tapes, None, &mut clock)?;
 
@@ -510,6 +565,7 @@ impl MiniBatchTrainer {
     /// round's ms-scale engine pass; resident rank threads with a
     /// round-start rendezvous are the upgrade path if profiles ever show
     /// the spawns.
+    #[allow(clippy::too_many_arguments)]
     fn round_threaded(
         &self,
         batches: &[MiniBatch],
@@ -518,6 +574,7 @@ impl MiniBatchTrainer {
         round: usize,
         fabric: &Fabric,
         shards: &mut [CommStats],
+        fetch: &mut [FetchScratch],
     ) -> Result<(Vec<LossTotals>, StageClock, Vec<f32>, OverlapLedger)> {
         let k = self.part.k;
         let lg: &LabelledGraph = &self.lg;
@@ -534,8 +591,9 @@ impl MiniBatchTrainer {
         let bodies: Vec<RankBody<'_>> = outs
             .iter_mut()
             .zip(shards.iter_mut())
+            .zip(fetch.iter_mut())
             .enumerate()
-            .map(|(w, (out, shard))| {
+            .map(|(w, ((out, shard), scratch))| {
                 let rows_w = rows[w];
                 let tr = tracer.clone();
                 Box::new(move || {
@@ -543,8 +601,8 @@ impl MiniBatchTrainer {
                     // scope flushes even on panic unwind.
                     let _scope = tr.as_ref().map(|t| t.lane_scope(w, 0));
                     run_rank_round(
-                        w, out, shard, fabric, lg, assign, batches, per_lane, rows_w, engine,
-                        params, machine, quant, seed, epoch, round, overlap,
+                        w, out, shard, scratch, fabric, lg, assign, batches, per_lane, rows_w,
+                        engine, params, machine, quant, seed, epoch, round, overlap,
                     )
                 }) as RankBody<'_>
             })
@@ -654,6 +712,10 @@ impl MiniBatchTrainer {
         // requires matching k — DESIGN.md §15).
         self.comm_stats = CommStats::new(k2);
         self.topo = Topology::new(k2, self.mc.group_size);
+        // Row ownership changed under the survivor plan, so every cached
+        // remote row (and its frequency history) is invalid: rebuild the
+        // scratch fleet cold at the survivor count (DESIGN.md §16).
+        self.fetch = FetchScratch::fleet(k2, self.cache_cfg());
         self.recovered += 1;
         self.restore(snap);
         Ok(())
@@ -670,9 +732,20 @@ impl MiniBatchTrainer {
             match self.epoch() {
                 Ok(s) => {
                     if log && (s.epoch % 10 == 0 || s.epoch + 1 == total) {
+                        // Cache column only when the feature cache is on
+                        // (run-cumulative hit rate / saved wire bytes).
+                        let cache = if self.comm_stats.cache.is_active() {
+                            format!(
+                                "  cache {:.0}% hit, {} saved",
+                                self.comm_stats.cache.hit_rate() * 100.0,
+                                crate::util::fmt_bytes(self.comm_stats.cache.total_saved_bytes()),
+                            )
+                        } else {
+                            String::new()
+                        };
                         eprintln!(
                             "epoch {:4}  loss {:.4}  train {:.4}  val {:.4}  test {:.4}  \
-                             modeled {:.4}s  fetched {}",
+                             modeled {:.4}s  fetched {}{}",
                             s.epoch,
                             s.train_loss,
                             s.train_acc,
@@ -680,6 +753,7 @@ impl MiniBatchTrainer {
                             s.test_acc,
                             s.modeled_secs,
                             crate::util::fmt_bytes(s.comm_data_bytes),
+                            cache,
                         );
                     }
                     self.maybe_checkpoint()?;
@@ -745,6 +819,7 @@ fn run_rank_round(
     w: usize,
     out: &mut RoundOut,
     shard: &mut CommStats,
+    scratch: &mut FetchScratch,
     fabric: &Fabric,
     lg: &LabelledGraph,
     assign: &[u32],
@@ -766,7 +841,8 @@ fn run_rank_round(
     {
         let mut ctx = MiniBatchRankCtx::new(
             w, lg, assign, batch, machine, quant, seed, epoch, round, overlap, fabric, shard,
-        );
+        )
+        .with_scratch(scratch);
         engine.forward(params, &mut ctx, &mut tapes, None, &mut clock)?;
         let (labels, split) = match batch {
             Some(mb) => batch_meta(lg, mb),

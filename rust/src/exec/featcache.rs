@@ -1,0 +1,381 @@
+//! Per-rank remote-feature cache with bounded staleness for the
+//! mini-batch fetch path (DESIGN.md §16).
+//!
+//! The fetch in `exec/minibatch.rs` pays full wire cost for every remote
+//! feature row every round, even though batch frontiers overlap heavily
+//! round to round (the skew observation behind Min et al.'s GPU feature
+//! caching, PAPERS.md) and the full-batch regime already tolerates
+//! bounded staleness via `delay_comm`. [`FeatCache`] closes that gap: a
+//! rank consults its cache before issuing id requests, and a hit skips
+//! *both* fetch legs — the id never rides the request exchange and the
+//! owner never packs (or quantizes) the reply row.
+//!
+//! Contract highlights (the full rules live in DESIGN.md §16):
+//!
+//! * **TTL gate** — `ttl == 0` disables the cache *structurally*: no
+//!   probe, no insert, no counter ever runs, so the disabled
+//!   configuration is byte-for-byte the uncached fetch (the identity the
+//!   parity suite pins).
+//! * **Round-scoped TTL** — an entry fetched at round `g` (the cache's
+//!   own monotone fetch-round counter, ticked once per `load_inputs`,
+//!   spanning epochs) hits while `cur_round − g <= ttl`; on the probe
+//!   after that it is dropped and refetched.
+//! * **Frequency-ranked admission** — every probe bumps the id's request
+//!   frequency; a fetched row is admitted when there is free capacity,
+//!   or by displacing the resident with the strictly smallest
+//!   `(frequency, fetch_round, id)` key — a total order, so eviction is
+//!   deterministic regardless of map iteration order.
+//! * **Post-decode values** — rows are cached *after* dequantization, so
+//!   a hit reproduces the decoded bits of the round that fetched it
+//!   exactly; staleness (and, under quantization, the round-salted
+//!   `qseed` plus reply regrouping) is the only numerical difference a
+//!   TTL > 0 run can observe.
+//!
+//! [`PayloadPool`] is the satellite buffer recycler: the fetch's
+//! request/reply `Vec<f32>` bodies are grabbed from and recycled into a
+//! per-rank free list across rounds (the `Fabric::allreduce_sum` scratch
+//! trick), instead of reallocating every round. Recycled buffers are
+//! cleared before reuse, so pooling is bit-invisible. [`FetchScratch`]
+//! bundles one rank's cache + pool; the mini-batch trainer owns one per
+//! rank across rounds and rebuilds them on elastic re-plan (recovery
+//! changes ownership, so every cached row is invalidated wholesale).
+
+use crate::comm::Payload;
+use std::collections::HashMap;
+
+/// Cache knobs as they arrive from `--feature-cache-rows` /
+/// `--feature-cache-ttl` (via `run::RunConfig` and
+/// `coordinator::minibatch::MiniBatchConfig`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FeatCacheConfig {
+    /// Capacity in feature rows per rank (`--feature-cache-rows`). With
+    /// `ttl > 0` and zero capacity the cache probes (and counts misses)
+    /// but can never admit — the degenerate sweep point.
+    pub rows: usize,
+    /// Time-to-live in fetch rounds (`--feature-cache-ttl`); `0` disables
+    /// the cache entirely.
+    pub ttl: usize,
+}
+
+impl FeatCacheConfig {
+    /// The structural gate: when `false`, callers skip every cache code
+    /// path, making the disabled run byte-for-byte identical to a build
+    /// without the cache.
+    pub fn enabled(&self) -> bool {
+        self.ttl > 0
+    }
+}
+
+/// Per-round cache counters, drained into
+/// [`CacheStats`](crate::comm::CacheStats) by the fetch after each round.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheRound {
+    pub hits: usize,
+    pub misses: usize,
+    pub evictions: usize,
+    /// Wire bits a hit avoided: the 32-bit id on the request leg plus the
+    /// row's share of the reply leg (exact for fp32; analytic — packed
+    /// element bits plus the amortized group-param share — for quantized
+    /// replies, whose grouping depends on the rows that *are* sent).
+    pub saved_bits: f64,
+}
+
+struct Entry {
+    row: Vec<f32>,
+    fetch_round: u64,
+}
+
+/// One rank's remote-feature cache (frequency-ranked admission, bounded
+/// capacity, round-scoped TTL). All state is rank-private and every
+/// operation is deterministic in the probe/admit call order, so the
+/// sequential transport (lane `w` driving `scratch[w]`) and the threaded
+/// transport (rank `w` driving its own scratch) evolve bit-identically.
+pub struct FeatCache {
+    cfg: FeatCacheConfig,
+    /// Resident rows by global node id.
+    map: HashMap<u32, Entry>,
+    /// Request frequency per remote id (admission ranking); bumped on
+    /// every probe, monotone over the cache's lifetime.
+    freq: HashMap<u32, u64>,
+    /// Monotone fetch-round counter (ticks once per `load_inputs`,
+    /// spanning epochs — TTL windows do not reset at epoch boundaries).
+    round: u64,
+    stats: CacheRound,
+}
+
+impl FeatCache {
+    pub fn new(cfg: FeatCacheConfig) -> Self {
+        Self {
+            cfg,
+            map: HashMap::new(),
+            freq: HashMap::new(),
+            round: 0,
+            stats: CacheRound::default(),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled()
+    }
+
+    /// Resident row count (capacity-bounded).
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Advance the fetch-round counter; call exactly once per
+    /// `load_inputs` (idle lanes included — every lane participates in
+    /// every round, so counters stay aligned across ranks).
+    pub fn begin_round(&mut self) {
+        self.round += 1;
+    }
+
+    /// Look up `id`, bumping its request frequency. A fresh entry
+    /// (`cur_round − fetch_round <= ttl`) is a hit; a stale entry is
+    /// dropped (freeing its slot before this round's admissions) and, like
+    /// an absent id, counted as a miss.
+    pub fn probe(&mut self, id: u32) -> Option<&[f32]> {
+        *self.freq.entry(id).or_insert(0) += 1;
+        let fresh = match self.map.get(&id) {
+            Some(e) => self.round - e.fetch_round <= self.cfg.ttl as u64,
+            None => false,
+        };
+        if fresh {
+            self.stats.hits += 1;
+            self.map.get(&id).map(|e| e.row.as_slice())
+        } else {
+            self.stats.misses += 1;
+            self.map.remove(&id);
+            None
+        }
+    }
+
+    /// Offer a freshly decoded row for admission. Admits into free
+    /// capacity, or displaces the resident with the smallest
+    /// `(frequency, fetch_round, id)` key — but only when the candidate's
+    /// frequency is *strictly* higher (frequency-ranked admission: a
+    /// cold row never churns out an equally warm resident).
+    pub fn admit(&mut self, id: u32, row: &[f32]) {
+        if self.cfg.rows == 0 {
+            return;
+        }
+        if self.map.len() >= self.cfg.rows && !self.map.contains_key(&id) {
+            let victim = match self.victim() {
+                Some(v) => v,
+                None => return,
+            };
+            let cand_freq = self.freq.get(&id).copied().unwrap_or(0);
+            if cand_freq <= self.freq_of(victim) {
+                return;
+            }
+            self.map.remove(&victim);
+            self.stats.evictions += 1;
+        }
+        self.map.insert(
+            id,
+            Entry {
+                row: row.to_vec(),
+                fetch_round: self.round,
+            },
+        );
+    }
+
+    /// Charge wire bits a hit avoided (computed by the fetch, which knows
+    /// the feature width and quantization level).
+    pub fn add_saved_bits(&mut self, bits: f64) {
+        self.stats.saved_bits += bits;
+    }
+
+    /// Drain this round's counters (the fetch charges them into
+    /// `CommStats::cache` under the rank's sender index).
+    pub fn take_round_stats(&mut self) -> CacheRound {
+        std::mem::take(&mut self.stats)
+    }
+
+    /// The deterministic eviction candidate: minimum
+    /// `(frequency, fetch_round, id)` over the residents — a total order
+    /// (id breaks every tie), so the choice is independent of `HashMap`
+    /// iteration order.
+    fn victim(&self) -> Option<u32> {
+        self.map
+            .iter()
+            .map(|(&id, e)| (self.freq_of(id), e.fetch_round, id))
+            .min()
+            .map(|(_, _, id)| id)
+    }
+
+    fn freq_of(&self, id: u32) -> u64 {
+        self.freq.get(&id).copied().unwrap_or(0)
+    }
+}
+
+/// Free list of `Vec<f32>` bodies for the fetch's request/reply payloads
+/// (the `Fabric::allreduce_sum` scratch-pool idiom, but rank-private — no
+/// lock). Buffers are cleared on grab, so a warm pool produces the exact
+/// bytes a fresh allocation would; under the threaded transport a buffer
+/// sent to a peer is simply recycled into the *receiver's* pool.
+#[derive(Default)]
+pub struct PayloadPool {
+    free: Vec<Vec<f32>>,
+}
+
+impl PayloadPool {
+    /// Take an empty buffer (recycled capacity when the pool is warm).
+    pub fn grab(&mut self) -> Vec<f32> {
+        let mut v = self.free.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    pub fn recycle(&mut self, v: Vec<f32>) {
+        self.free.push(v);
+    }
+
+    /// Recycle the body of a consumed payload (quantized payloads own no
+    /// `Vec<f32>` body; they drop as usual).
+    pub fn recycle_payload(&mut self, p: Payload) {
+        if let Payload::F32(v) = p {
+            self.free.push(v);
+        }
+    }
+}
+
+/// One rank's persistent fetch scratch: feature cache + payload pool.
+/// Owned by the mini-batch trainer across rounds and epochs; rebuilt
+/// from scratch on elastic recovery (ownership changed — every cached
+/// row is invalid).
+pub struct FetchScratch {
+    pub cache: FeatCache,
+    pub pool: PayloadPool,
+}
+
+impl FetchScratch {
+    pub fn new(cfg: FeatCacheConfig) -> Self {
+        Self {
+            cache: FeatCache::new(cfg),
+            pool: PayloadPool::default(),
+        }
+    }
+
+    /// One scratch per rank (the trainer's per-rank fleet).
+    pub fn fleet(k: usize, cfg: FeatCacheConfig) -> Vec<FetchScratch> {
+        (0..k).map(|_| FetchScratch::new(cfg)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(rows: usize, ttl: usize) -> FeatCache {
+        FeatCache::new(FeatCacheConfig { rows, ttl })
+    }
+
+    #[test]
+    fn ttl_zero_is_disabled() {
+        assert!(!FeatCacheConfig { rows: 64, ttl: 0 }.enabled());
+        assert!(FeatCacheConfig { rows: 64, ttl: 1 }.enabled());
+    }
+
+    #[test]
+    fn hit_within_ttl_then_expires() {
+        let mut c = cache(4, 2);
+        c.begin_round();
+        assert!(c.probe(7).is_none());
+        c.admit(7, &[1.0, 2.0]);
+        // Rounds +1 and +2 are within the window; +3 is stale.
+        c.begin_round();
+        assert_eq!(c.probe(7), Some(&[1.0, 2.0][..]));
+        c.begin_round();
+        assert_eq!(c.probe(7), Some(&[1.0, 2.0][..]));
+        c.begin_round();
+        assert!(c.probe(7).is_none());
+        let s = c.take_round_stats();
+        assert_eq!((s.hits, s.misses), (2, 2));
+    }
+
+    #[test]
+    fn eviction_is_deterministic_lowest_freq_oldest_round_smallest_id() {
+        let mut c = cache(2, 8);
+        c.begin_round();
+        // id 3 requested twice, id 5 once — 3 is warmer.
+        c.probe(3);
+        c.probe(3);
+        c.probe(5);
+        c.admit(3, &[3.0]);
+        c.admit(5, &[5.0]);
+        // id 9 at freq 2 displaces the lowest-freq resident (5, freq 1).
+        c.begin_round();
+        c.probe(9);
+        c.probe(9);
+        c.admit(9, &[9.0]);
+        assert!(c.probe(3).is_some());
+        assert!(c.probe(9).is_some());
+        c.begin_round();
+        assert!(c.probe(5).is_none());
+        // Tie on frequency and round falls through to the smallest id:
+        // fill a fresh cache with equally warm residents and displace.
+        let mut c = cache(2, 8);
+        c.begin_round();
+        c.probe(10);
+        c.probe(11);
+        c.admit(10, &[1.0]);
+        c.admit(11, &[1.1]);
+        c.begin_round();
+        c.probe(12);
+        c.probe(12); // freq 2 > freq 1: admit by displacing id 10 (smallest).
+        c.admit(12, &[1.2]);
+        c.begin_round();
+        assert!(c.probe(11).is_some());
+        assert!(c.probe(12).is_some());
+        c.begin_round();
+        assert!(c.probe(10).is_none());
+    }
+
+    #[test]
+    fn cold_candidate_never_displaces_a_warmer_resident() {
+        let mut c = cache(1, 8);
+        c.begin_round();
+        c.probe(1);
+        c.probe(1);
+        c.admit(1, &[1.0]);
+        c.begin_round();
+        c.probe(2); // freq 1 vs resident freq 2: rejected.
+        c.admit(2, &[2.0]);
+        assert!(c.probe(1).is_some());
+        c.begin_round();
+        assert!(c.probe(2).is_none());
+        assert_eq!(c.take_round_stats().evictions, 0);
+    }
+
+    #[test]
+    fn zero_capacity_counts_misses_but_never_admits() {
+        let mut c = cache(0, 4);
+        for _ in 0..3 {
+            c.begin_round();
+            assert!(c.probe(42).is_none());
+            c.admit(42, &[0.5]);
+        }
+        assert!(c.is_empty());
+        let s = c.take_round_stats();
+        assert_eq!((s.hits, s.misses), (0, 3));
+    }
+
+    #[test]
+    fn pool_grab_is_cleared_and_reuses_capacity() {
+        let mut p = PayloadPool::default();
+        let mut v = p.grab();
+        v.extend_from_slice(&[1.0, 2.0, 3.0]);
+        let cap = v.capacity();
+        p.recycle(v);
+        let v2 = p.grab();
+        assert!(v2.is_empty());
+        assert_eq!(v2.capacity(), cap);
+        p.recycle_payload(Payload::F32(vec![9.0]));
+        assert!(p.grab().is_empty());
+    }
+}

@@ -13,6 +13,7 @@
 //! transports is pinned by `tests/spmd_parity.rs`.
 
 use super::dispatch::AggDispatch;
+use super::featcache::{FeatCache, FetchScratch, PayloadPool};
 use super::{GraphContext, OverlapLedger};
 use crate::agg::spmm::CsrMatrix;
 use crate::comm::transport::Fabric;
@@ -20,7 +21,7 @@ use crate::comm::{alltoallv_routed, CommStats, Payload, Topology};
 use crate::graph::generate::LabelledGraph;
 use crate::obs::{self, TraceCategory};
 use crate::perfmodel::MachineProfile;
-use crate::quant::Bits;
+use crate::quant::{Bits, GROUP_ROWS};
 use crate::sample::{mix2, MiniBatch};
 use anyhow::Result;
 use std::time::Instant;
@@ -56,6 +57,11 @@ pub struct MiniBatchCtx<'a> {
     topo: Topology,
     ledger: OverlapLedger,
     comm: &'a mut CommStats,
+    /// Per-lane persistent fetch scratch (feature cache + payload pool,
+    /// DESIGN.md §16), lent by the trainer for this round; `None` (unit
+    /// tests, callers without a trainer) runs the legacy allocate-per-
+    /// round fetch with the cache structurally absent.
+    scratch: Option<&'a mut [FetchScratch]>,
     /// The induced weighted adjacency per lane, in the form `agg::spmm`
     /// wants (built once per round, shared by all three layers).
     mats: Vec<Option<CsrMatrix>>,
@@ -95,6 +101,7 @@ impl<'a> MiniBatchCtx<'a> {
             topo: Topology::flat(lanes),
             ledger: OverlapLedger::new(lanes),
             comm,
+            scratch: None,
             mats,
         }
     }
@@ -107,16 +114,77 @@ impl<'a> MiniBatchCtx<'a> {
         self
     }
 
+    /// Lend the trainer's per-lane fetch scratch (`scratch[w]` = lane
+    /// `w`'s feature cache + payload pool) for this round. Without it the
+    /// fetch allocates per round and never consults a cache.
+    pub fn with_scratch(mut self, scratch: &'a mut [FetchScratch]) -> Self {
+        self.scratch = Some(scratch);
+        self
+    }
+
     /// Hand the round's overlap accounting back to the driver (empty when
     /// `--overlap off`).
     pub fn take_ledger(&mut self) -> OverlapLedger {
         std::mem::take(&mut self.ledger)
     }
 
-    /// Owner side of the fetch: serve every id request addressed to `o`.
+    /// Build every lane's id-request send row: probe the lane's feature
+    /// cache when one is enabled (hits fill `x` directly — a rank-local
+    /// read — and leave the id off the wire), pool-backed payloads for
+    /// the misses. Returns per-lane hit masks aligned with `n_id`
+    /// (empty = no cache).
+    fn build_requests(&mut self, f: usize, x: &mut [Vec<f32>]) -> (Vec<Vec<Payload>>, Vec<Vec<bool>>) {
+        let k = self.per_lane.len();
+        if let Some(s) = self.scratch.as_deref_mut() {
+            for sc in s.iter_mut() {
+                if sc.cache.enabled() {
+                    sc.cache.begin_round();
+                }
+            }
+        }
+        let mut req_sends: Vec<Vec<Payload>> = Vec::with_capacity(k);
+        let mut from_cache: Vec<Vec<bool>> = vec![Vec::new(); k];
+        for w in 0..k {
+            let bi = match self.per_lane[w] {
+                Some(bi) => bi,
+                None => {
+                    req_sends.push((0..k).map(|_| Payload::Empty).collect());
+                    continue;
+                }
+            };
+            let mb = &self.batches[bi];
+            let ids_by_owner = match self.scratch.as_deref_mut() {
+                Some(s) if s[w].cache.enabled() => {
+                    let (ids, mask) = request_ids_cached(
+                        mb,
+                        self.assign,
+                        w,
+                        k,
+                        f,
+                        self.quant,
+                        &mut s[w].cache,
+                        &mut x[w],
+                    );
+                    from_cache[w] = mask;
+                    ids
+                }
+                _ => request_ids(mb, self.assign, w, k),
+            };
+            let mut row = Vec::with_capacity(k);
+            for ids in &ids_by_owner {
+                let pool = self.scratch.as_deref_mut().map(|s| &mut s[w].pool);
+                row.push(ids_payload(ids, pool));
+            }
+            req_sends.push(row);
+        }
+        (req_sends, from_cache)
+    }
+
+    /// Owner side of the fetch: serve every id request addressed to `o`
+    /// (consumed request bodies recycle into `o`'s payload pool).
     fn serve_requests(
-        &self,
-        req_recvs: &[Vec<Payload>],
+        &mut self,
+        req_recvs: &mut [Vec<Payload>],
         disp: &AggDispatch,
         quant_secs: &mut [f64],
     ) -> Vec<Vec<Payload>> {
@@ -124,27 +192,46 @@ impl<'a> MiniBatchCtx<'a> {
         let mut reply_sends: Vec<Vec<Payload>> = (0..k)
             .map(|_| (0..k).map(|_| Payload::Empty).collect())
             .collect();
-        for (o, row) in req_recvs.iter().enumerate() {
-            for (w, payload) in row.iter().enumerate() {
-                let ids = match payload {
-                    Payload::F32(v) if !v.is_empty() => v,
-                    _ => continue,
-                };
-                reply_sends[o][w] = reply_payload(
-                    self.lg,
-                    ids,
-                    self.quant,
-                    self.seed,
-                    self.epoch,
-                    self.round,
-                    o,
-                    w,
-                    disp,
-                    &mut quant_secs[o],
-                );
+        for (o, row) in req_recvs.iter_mut().enumerate() {
+            for (w, slot) in row.iter_mut().enumerate() {
+                let payload = std::mem::replace(slot, Payload::Empty);
+                if let Payload::F32(ids) = &payload {
+                    if !ids.is_empty() {
+                        let pool = self.scratch.as_deref_mut().map(|s| &mut s[o].pool);
+                        reply_sends[o][w] = reply_payload(
+                            self.lg,
+                            ids,
+                            self.quant,
+                            self.seed,
+                            self.epoch,
+                            self.round,
+                            o,
+                            w,
+                            disp,
+                            &mut quant_secs[o],
+                            pool,
+                        );
+                    }
+                }
+                if let Some(s) = self.scratch.as_deref_mut() {
+                    s[o].pool.recycle_payload(payload);
+                }
             }
         }
         reply_sends
+    }
+
+    /// Drain each lane's per-round cache counters into the requester-
+    /// indexed [`CommStats::cache`] rows (no-op when the cache is
+    /// disabled — the counters never ticked).
+    fn charge_cache_stats(&mut self) {
+        if let Some(s) = self.scratch.as_deref_mut() {
+            for (w, sc) in s.iter_mut().enumerate() {
+                if sc.cache.enabled() {
+                    self.comm.cache.charge(w, sc.cache.take_round_stats());
+                }
+            }
+        }
     }
 }
 
@@ -168,19 +255,13 @@ impl GraphContext for MiniBatchCtx<'_> {
         let _sp = obs::span(TraceCategory::Fetch, "fetch batch rows");
         let k = self.per_lane.len();
         let f = self.lg.feat_dim;
-        // ---- id requests --------------------------------------------
-        let req_sends: Vec<Vec<Payload>> = (0..k)
-            .map(|w| match self.per_lane[w] {
-                Some(bi) => request_ids(&self.batches[bi], self.assign, w, k)
-                    .iter()
-                    .map(|ids| ids_payload(ids))
-                    .collect(),
-                None => (0..k).map(|_| Payload::Empty).collect(),
-            })
-            .collect();
+        // ---- id requests (cache hits are filled into x here and never
+        // reach the wire) ---------------------------------------------
+        let (req_sends, from_cache) = self.build_requests(f, x);
         if !self.overlap {
-            let req_recvs = alltoallv_routed(req_sends, self.topo, self.machine, &mut *self.comm);
-            let reply_sends = self.serve_requests(&req_recvs, disp, quant_secs);
+            let mut req_recvs =
+                alltoallv_routed(req_sends, self.topo, self.machine, &mut *self.comm);
+            let reply_sends = self.serve_requests(&mut req_recvs, disp, quant_secs);
             let mut replies =
                 alltoallv_routed(reply_sends, self.topo, self.machine, &mut *self.comm);
             for w in 0..k {
@@ -191,9 +272,27 @@ impl GraphContext for MiniBatchCtx<'_> {
                 let mb = &self.batches[bi];
                 let decoded = decode_replies(&mut replies[w], disp, &mut quant_secs[w]);
                 let t = Instant::now();
-                assemble_x(self.lg, self.assign, mb, w, &decoded, f, &mut x[w])?;
+                let cache = match self.scratch.as_deref_mut() {
+                    Some(s) if s[w].cache.enabled() => Some(&mut s[w].cache),
+                    _ => None,
+                };
+                assemble_x(
+                    self.lg,
+                    self.assign,
+                    mb,
+                    w,
+                    &decoded,
+                    f,
+                    &mut x[w],
+                    &from_cache[w],
+                    cache,
+                )?;
                 secs[w] += t.elapsed().as_secs_f64();
+                if let Some(s) = self.scratch.as_deref_mut() {
+                    recycle_decoded(decoded, &mut s[w].pool);
+                }
             }
+            self.charge_cache_stats();
             return Ok(());
         }
         // Overlap schedule: the request exchange is posted, the locally
@@ -209,18 +308,30 @@ impl GraphContext for MiniBatchCtx<'_> {
                 secs[w] += interior_secs[w];
             }
         }
-        let req_recvs = alltoallv_routed(req_sends, self.topo, self.machine, &mut *self.comm);
+        let mut req_recvs = alltoallv_routed(req_sends, self.topo, self.machine, &mut *self.comm);
         let mut req_comm_secs = vec![0f64; k];
         for w in 0..k {
             req_comm_secs[w] = self.comm.modeled_send_secs[w] - before_req[w];
         }
-        let reply_sends = self.serve_requests(&req_recvs, disp, quant_secs);
+        let reply_sends = self.serve_requests(&mut req_recvs, disp, quant_secs);
+        // A lane whose reply row is all-empty (it served no rows — e.g.
+        // it owns nothing this round) sends nothing on the reply leg:
+        // charge it 0 explicitly rather than trusting the delta of a row
+        // the exchange never touched.
+        let sent_reply: Vec<bool> = reply_sends
+            .iter()
+            .map(|row| row.iter().any(|p| !p.is_empty()))
+            .collect();
         let before_reply = self.comm.modeled_send_secs.clone();
         let mut replies =
             alltoallv_routed(reply_sends, self.topo, self.machine, &mut *self.comm);
         let mut reply_comm_secs = vec![0f64; k];
         for w in 0..k {
-            reply_comm_secs[w] = self.comm.modeled_send_secs[w] - before_reply[w];
+            reply_comm_secs[w] = if sent_reply[w] {
+                self.comm.modeled_send_secs[w] - before_reply[w]
+            } else {
+                0.0
+            };
         }
         let mut boundary_secs = vec![0f64; k];
         for w in 0..k {
@@ -231,10 +342,27 @@ impl GraphContext for MiniBatchCtx<'_> {
             let mb = &self.batches[bi];
             let decoded = decode_replies(&mut replies[w], disp, &mut quant_secs[w]);
             let t = Instant::now();
-            assemble_remote(self.assign, mb, w, &decoded, f, &mut x[w])?;
+            let cache = match self.scratch.as_deref_mut() {
+                Some(s) if s[w].cache.enabled() => Some(&mut s[w].cache),
+                _ => None,
+            };
+            assemble_remote(
+                self.assign,
+                mb,
+                w,
+                &decoded,
+                f,
+                &mut x[w],
+                &from_cache[w],
+                cache,
+            )?;
             boundary_secs[w] = t.elapsed().as_secs_f64();
             secs[w] += boundary_secs[w];
+            if let Some(s) = self.scratch.as_deref_mut() {
+                recycle_decoded(decoded, &mut s[w].pool);
+            }
         }
+        self.charge_cache_stats();
         // Only the request leg overlaps the local-row copy; the reply
         // wire is serial and goes in its own stage so the model never
         // claims to hide it behind interior compute.
@@ -319,18 +447,72 @@ fn request_ids(mb: &MiniBatch, assign: &[u32], w: usize, k: usize) -> Vec<Vec<u3
     req
 }
 
-/// Ids travel as an F32 payload (`n < 2^24` keeps them exact — enforced
-/// at trainer construction).
-fn ids_payload(ids: &[u32]) -> Payload {
-    if ids.is_empty() {
-        Payload::Empty
-    } else {
-        Payload::F32(ids.iter().map(|&v| v as f32).collect())
+/// Wire bits one cache hit avoids: the 32-bit id on the request leg plus
+/// the row's reply-leg share — exact for fp32; analytic under
+/// quantization (packed element bits plus the amortized per-group param
+/// share, since the actual grouping depends on which rows *are* sent).
+fn hit_saved_bits(f: usize, quant: Option<Bits>) -> f64 {
+    let row_bits = match quant {
+        Some(bits) => (f * bits.bits()) as f64 + 64.0 / GROUP_ROWS as f64,
+        None => (f * 32) as f64,
+    };
+    32.0 + row_bits
+}
+
+/// Cache-aware [`request_ids`] (DESIGN.md §16): probe the lane's cache
+/// for every remote id in `n_id` order — hits copy the cached row
+/// straight into `x` (a rank-local read; the id never reaches the wire)
+/// and charge the saved bits; misses land in the per-owner request
+/// lists. Returns the miss lists plus the hit mask aligned with `n_id`.
+#[allow(clippy::too_many_arguments)]
+fn request_ids_cached(
+    mb: &MiniBatch,
+    assign: &[u32],
+    w: usize,
+    k: usize,
+    f: usize,
+    quant: Option<Bits>,
+    cache: &mut FeatCache,
+    x: &mut [f32],
+) -> (Vec<Vec<u32>>, Vec<bool>) {
+    let mut req: Vec<Vec<u32>> = vec![Vec::new(); k];
+    let mut mask = vec![false; mb.n_id.len()];
+    for (i, &v) in mb.n_id.iter().enumerate() {
+        let o = assign[v as usize] as usize;
+        if o == w {
+            continue;
+        }
+        if let Some(row) = cache.probe(v) {
+            x[i * f..(i + 1) * f].copy_from_slice(row);
+            mask[i] = true;
+            cache.add_saved_bits(hit_saved_bits(f, quant));
+        } else {
+            req[o].push(v);
+        }
     }
+    (req, mask)
+}
+
+/// Ids travel as an F32 payload (`n < 2^24` keeps them exact — enforced
+/// at trainer construction); the body comes from the lane's payload pool
+/// when one is lent (cleared on grab, so pooling is bit-invisible).
+fn ids_payload(ids: &[u32], pool: Option<&mut PayloadPool>) -> Payload {
+    if ids.is_empty() {
+        return Payload::Empty;
+    }
+    let mut v = match pool {
+        Some(p) => p.grab(),
+        None => Vec::with_capacity(ids.len()),
+    };
+    v.extend(ids.iter().map(|&x| x as f32));
+    Payload::F32(v)
 }
 
 /// Owner `o` serves requester `w`: gather the requested feature rows,
-/// optionally quantizing them (quantize time charged to the owner).
+/// optionally quantizing them (quantize time charged to the owner). The
+/// gather buffer comes from `o`'s payload pool when one is lent: under
+/// fp32 it ships as the reply body (the requester recycles it after
+/// assembly), under quantization it recycles right after the pack.
 #[allow(clippy::too_many_arguments)]
 fn reply_payload(
     lg: &LabelledGraph,
@@ -343,10 +525,14 @@ fn reply_payload(
     w: usize,
     disp: &AggDispatch,
     quant_secs: &mut f64,
+    mut pool: Option<&mut PayloadPool>,
 ) -> Payload {
     let f = lg.feat_dim;
     let rows = ids.len();
-    let mut buf = Vec::with_capacity(rows * f);
+    let mut buf = match pool.as_deref_mut() {
+        Some(p) => p.grab(),
+        None => Vec::with_capacity(rows * f),
+    };
     for &idf in ids {
         buf.extend_from_slice(lg.feature_row(idf as usize));
     }
@@ -360,6 +546,9 @@ fn reply_payload(
             );
             let q = disp.quantize(&buf, rows, f, bits, qseed);
             *quant_secs += t.elapsed().as_secs_f64();
+            if let Some(p) = pool {
+                p.recycle(buf);
+            }
             Payload::Quant(q)
         }
         None => Payload::F32(buf),
@@ -409,7 +598,13 @@ fn assemble_local(
 
 /// Fill the remotely owned batch rows from the decoded replies (the
 /// *boundary* half — each reply consumed front to back, exactly once, in
-/// `n_id` order, matching the owner's packing order).
+/// `n_id` order, matching the owner's packing order). Rows flagged in
+/// `from_cache` (aligned with `n_id`; empty = no cache) were already
+/// filled from the lane's feature cache and consume no reply row; every
+/// freshly decoded row is offered to `cache` for admission — *after*
+/// dequantization, so a later hit reproduces this round's decode bits
+/// exactly (DESIGN.md §16).
+#[allow(clippy::too_many_arguments)]
 fn assemble_remote(
     assign: &[u32],
     mb: &MiniBatch,
@@ -417,6 +612,8 @@ fn assemble_remote(
     decoded: &[Option<Vec<f32>>],
     f: usize,
     x: &mut [f32],
+    from_cache: &[bool],
+    mut cache: Option<&mut FeatCache>,
 ) -> Result<()> {
     let mut cursors = vec![0usize; decoded.len()];
     for (i, &v) in mb.n_id.iter().enumerate() {
@@ -424,12 +621,19 @@ fn assemble_remote(
         if o == w {
             continue;
         }
+        if from_cache.get(i).copied().unwrap_or(false) {
+            continue;
+        }
         let rows = decoded[o]
             .as_ref()
             .ok_or_else(|| anyhow::anyhow!("missing reply from {o} to {w}"))?;
         let c = cursors[o];
         anyhow::ensure!((c + 1) * f <= rows.len(), "reply row underflow");
-        x[i * f..(i + 1) * f].copy_from_slice(&rows[c * f..(c + 1) * f]);
+        let row = &rows[c * f..(c + 1) * f];
+        x[i * f..(i + 1) * f].copy_from_slice(row);
+        if let Some(cache) = cache.as_deref_mut() {
+            cache.admit(v, row);
+        }
         cursors[o] += 1;
     }
     Ok(())
@@ -437,8 +641,9 @@ fn assemble_remote(
 
 /// Interleave local rows and decoded remote rows into the lane's batch
 /// input matrix — the blocking-schedule assembly; every row is written by
-/// exactly one of the two halves, so local-then-remote produces the
-/// identical matrix.
+/// exactly one of the two halves (or was pre-filled from the feature
+/// cache), so local-then-remote produces the identical matrix.
+#[allow(clippy::too_many_arguments)]
 fn assemble_x(
     lg: &LabelledGraph,
     assign: &[u32],
@@ -447,9 +652,20 @@ fn assemble_x(
     decoded: &[Option<Vec<f32>>],
     f: usize,
     x: &mut [f32],
+    from_cache: &[bool],
+    cache: Option<&mut FeatCache>,
 ) -> Result<()> {
     assemble_local(lg, assign, mb, w, f, x);
-    assemble_remote(assign, mb, w, decoded, f, x)
+    assemble_remote(assign, mb, w, decoded, f, x, from_cache, cache)
+}
+
+/// Recycle the decoded fp32 reply bodies into the requester's pool (the
+/// buffers a peer's serve allocated migrate to this rank's free list —
+/// steady-state the fetch allocates nothing per round).
+fn recycle_decoded(decoded: Vec<Option<Vec<f32>>>, pool: &mut PayloadPool) {
+    for d in decoded.into_iter().flatten() {
+        pool.recycle(d);
+    }
 }
 
 /// Single-rank mini-batch context for the threaded transport: lane
@@ -474,6 +690,10 @@ pub struct MiniBatchRankCtx<'a> {
     ledger: OverlapLedger,
     fabric: &'a Fabric,
     comm: &'a mut CommStats,
+    /// This rank's persistent fetch scratch (feature cache + payload
+    /// pool), lent by the trainer; the rank-threaded counterpart of
+    /// [`MiniBatchCtx`]'s per-lane slice.
+    scratch: Option<&'a mut FetchScratch>,
     mat: Option<CsrMatrix>,
 }
 
@@ -508,8 +728,15 @@ impl<'a> MiniBatchRankCtx<'a> {
             ledger: OverlapLedger::new(1),
             fabric,
             comm,
+            scratch: None,
             mat,
         }
+    }
+
+    /// Lend this rank's persistent fetch scratch for the round.
+    pub fn with_scratch(mut self, scratch: &'a mut FetchScratch) -> Self {
+        self.scratch = Some(scratch);
+        self
     }
 
     /// Hand this rank's single-lane overlap accounting back to the driver
@@ -518,46 +745,85 @@ impl<'a> MiniBatchRankCtx<'a> {
         std::mem::take(&mut self.ledger)
     }
 
-    /// This rank's id-request send row.
-    fn request_row(&self) -> Vec<Payload> {
+    /// This rank's id-request send row (cache hits fill `x` directly and
+    /// stay off the wire); returns the hit mask aligned with `n_id`.
+    fn request_row(&mut self, f: usize, x: &mut [f32]) -> (Vec<Payload>, Vec<bool>) {
         let k = self.fabric.k();
-        match self.batch {
-            Some(mb) => request_ids(mb, self.assign, self.rank, k)
-                .iter()
-                .map(|ids| ids_payload(ids))
-                .collect(),
-            None => (0..k).map(|_| Payload::Empty).collect(),
+        if let Some(sc) = self.scratch.as_deref_mut() {
+            if sc.cache.enabled() {
+                sc.cache.begin_round();
+            }
         }
+        let mb = match self.batch {
+            Some(mb) => mb,
+            None => return ((0..k).map(|_| Payload::Empty).collect(), Vec::new()),
+        };
+        let (ids_by_owner, mask) = match self.scratch.as_deref_mut() {
+            Some(sc) if sc.cache.enabled() => request_ids_cached(
+                mb,
+                self.assign,
+                self.rank,
+                k,
+                f,
+                self.quant,
+                &mut sc.cache,
+                x,
+            ),
+            _ => (request_ids(mb, self.assign, self.rank, k), Vec::new()),
+        };
+        let mut row = Vec::with_capacity(k);
+        for ids in &ids_by_owner {
+            let pool = self.scratch.as_deref_mut().map(|sc| &mut sc.pool);
+            row.push(ids_payload(ids, pool));
+        }
+        (row, mask)
     }
 
-    /// Serve the id requests addressed to this owner.
+    /// Serve the id requests addressed to this owner (consumed request
+    /// bodies recycle into this rank's payload pool).
     fn serve_row(
-        &self,
-        req_recvs: &[Payload],
+        &mut self,
+        req_recvs: &mut [Payload],
         disp: &AggDispatch,
         quant_secs: &mut f64,
     ) -> Vec<Payload> {
         let k = self.fabric.k();
         let mut reply_sends: Vec<Payload> = (0..k).map(|_| Payload::Empty).collect();
-        for (w, payload) in req_recvs.iter().enumerate() {
-            let ids = match payload {
-                Payload::F32(v) if !v.is_empty() => v,
-                _ => continue,
-            };
-            reply_sends[w] = reply_payload(
-                self.lg,
-                ids,
-                self.quant,
-                self.seed,
-                self.epoch,
-                self.round,
-                self.rank,
-                w,
-                disp,
-                quant_secs,
-            );
+        for (w, slot) in req_recvs.iter_mut().enumerate() {
+            let payload = std::mem::replace(slot, Payload::Empty);
+            if let Payload::F32(ids) = &payload {
+                if !ids.is_empty() {
+                    let pool = self.scratch.as_deref_mut().map(|sc| &mut sc.pool);
+                    reply_sends[w] = reply_payload(
+                        self.lg,
+                        ids,
+                        self.quant,
+                        self.seed,
+                        self.epoch,
+                        self.round,
+                        self.rank,
+                        w,
+                        disp,
+                        quant_secs,
+                        pool,
+                    );
+                }
+            }
+            if let Some(sc) = self.scratch.as_deref_mut() {
+                sc.pool.recycle_payload(payload);
+            }
         }
         reply_sends
+    }
+
+    /// Drain this rank's round cache counters into its requester-indexed
+    /// [`CommStats::cache`] row.
+    fn charge_cache_stats(&mut self) {
+        if let Some(sc) = self.scratch.as_deref_mut() {
+            if sc.cache.enabled() {
+                self.comm.cache.charge(self.rank, sc.cache.take_round_stats());
+            }
+        }
     }
 }
 
@@ -577,25 +843,43 @@ impl GraphContext for MiniBatchRankCtx<'_> {
         let f = self.lg.feat_dim;
         if !self.overlap {
             // Blocking schedule: request → serve → reply → assemble.
-            let req_sends = self.request_row();
-            let req_recvs =
+            let (req_sends, from_cache) = self.request_row(f, &mut x[0]);
+            let mut req_recvs =
                 self.fabric.alltoallv(self.rank, req_sends, self.machine, self.comm);
-            let reply_sends = self.serve_row(&req_recvs, disp, &mut quant_secs[0]);
+            let reply_sends = self.serve_row(&mut req_recvs, disp, &mut quant_secs[0]);
             let mut replies =
                 self.fabric.alltoallv(self.rank, reply_sends, self.machine, self.comm);
             if let Some(mb) = self.batch {
                 let decoded = decode_replies(&mut replies, disp, &mut quant_secs[0]);
                 let t = Instant::now();
-                assemble_x(self.lg, self.assign, mb, self.rank, &decoded, f, &mut x[0])?;
+                let cache = match self.scratch.as_deref_mut() {
+                    Some(sc) if sc.cache.enabled() => Some(&mut sc.cache),
+                    _ => None,
+                };
+                assemble_x(
+                    self.lg,
+                    self.assign,
+                    mb,
+                    self.rank,
+                    &decoded,
+                    f,
+                    &mut x[0],
+                    &from_cache,
+                    cache,
+                )?;
                 secs[0] += t.elapsed().as_secs_f64();
+                if let Some(sc) = self.scratch.as_deref_mut() {
+                    recycle_decoded(decoded, &mut sc.pool);
+                }
             }
+            self.charge_cache_stats();
             return Ok(());
         }
         // Overlap schedule: post the id requests, copy the locally owned
         // batch rows while peers deposit, then complete, serve, and fill
         // the remotely owned rows from the replies.
         let before_req = self.comm.modeled_send_secs[self.rank];
-        let req_sends = self.request_row();
+        let (req_sends, from_cache) = self.request_row(f, &mut x[0]);
         self.fabric
             .post_alltoallv(self.rank, req_sends, self.machine, self.comm);
         let mut interior = 0f64;
@@ -605,22 +889,46 @@ impl GraphContext for MiniBatchRankCtx<'_> {
             interior = t.elapsed().as_secs_f64();
             secs[0] += interior;
         }
-        let req_recvs = self.fabric.complete_alltoallv(self.rank);
+        let mut req_recvs = self.fabric.complete_alltoallv(self.rank);
         let req_comm = self.comm.modeled_send_secs[self.rank] - before_req;
-        let reply_sends = self.serve_row(&req_recvs, disp, &mut quant_secs[0]);
+        let reply_sends = self.serve_row(&mut req_recvs, disp, &mut quant_secs[0]);
+        // An owner that served no rows sends nothing on the reply leg —
+        // charge it 0 explicitly (see the sequential schedule's note).
+        let sent_reply = reply_sends.iter().any(|p| !p.is_empty());
         let before_reply = self.comm.modeled_send_secs[self.rank];
         self.fabric
             .post_alltoallv(self.rank, reply_sends, self.machine, self.comm);
         let mut replies = self.fabric.complete_alltoallv(self.rank);
-        let reply_comm = self.comm.modeled_send_secs[self.rank] - before_reply;
+        let reply_comm = if sent_reply {
+            self.comm.modeled_send_secs[self.rank] - before_reply
+        } else {
+            0.0
+        };
         let mut boundary = 0f64;
         if let Some(mb) = self.batch {
             let decoded = decode_replies(&mut replies, disp, &mut quant_secs[0]);
             let t = Instant::now();
-            assemble_remote(self.assign, mb, self.rank, &decoded, f, &mut x[0])?;
+            let cache = match self.scratch.as_deref_mut() {
+                Some(sc) if sc.cache.enabled() => Some(&mut sc.cache),
+                _ => None,
+            };
+            assemble_remote(
+                self.assign,
+                mb,
+                self.rank,
+                &decoded,
+                f,
+                &mut x[0],
+                &from_cache,
+                cache,
+            )?;
             boundary = t.elapsed().as_secs_f64();
             secs[0] += boundary;
+            if let Some(sc) = self.scratch.as_deref_mut() {
+                recycle_decoded(decoded, &mut sc.pool);
+            }
         }
+        self.charge_cache_stats();
         // Two stages — only the request leg overlaps the local-row copy
         // (see FETCH_REQ_STAGE docs).
         let st = self.ledger.push(FETCH_REQ_STAGE);

@@ -21,10 +21,12 @@
 //! (`Σ_stage max_lane t(stage, lane)`).
 
 pub mod dispatch;
+pub mod featcache;
 pub mod fullbatch;
 pub mod minibatch;
 
 pub use dispatch::{AggDispatch, AggKernel};
+pub use featcache::{FeatCache, FeatCacheConfig, FetchScratch, PayloadPool};
 pub use fullbatch::{FullBatchCtx, FullBatchRankCtx, FullBatchState, LaneHalo};
 pub use minibatch::{MiniBatchCtx, MiniBatchRankCtx};
 

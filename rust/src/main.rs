@@ -69,7 +69,11 @@ fn main() {
                  optimizer moments, RNG, epoch) every N epochs; `--resume <path>`\n\
                  continues it with bit-identical losses; `--chaos rank=R,epoch=E`\n\
                  (threaded transport only) kills a rank mid-epoch to exercise the\n\
-                 elastic survivor re-plan (DESIGN.md §15). `benchcmp`\n\
+                 elastic survivor re-plan (DESIGN.md §15).\n\
+                 `--feature-cache-rows N --feature-cache-ttl T` cache fetched\n\
+                 remote feature rows per rank for T mini-batch rounds, skipping\n\
+                 both request and reply wire legs on a hit (TTL=0 = off,\n\
+                 byte-for-byte the uncached path — DESIGN.md §16). `benchcmp`\n\
                  gates CI on the committed BENCH_seed.json."
             );
             Ok(())
@@ -362,6 +366,28 @@ fn train_flag_table() -> FlagTable<TrainCli> {
             },
         )
         .opt(
+            "feature-cache-rows",
+            "0",
+            "remote-feature cache capacity in rows per rank (mini-batch only; \
+             frequency-ranked admission, meaningful with --feature-cache-ttl > 0 — \
+             DESIGN.md §16)",
+            |c, v| {
+                c.run.feature_cache_rows = args::parse_usize("feature-cache-rows", v)?;
+                Ok(())
+            },
+        )
+        .opt(
+            "feature-cache-ttl",
+            "0",
+            "rounds a cached remote feature row may be reused before it must be \
+             re-fetched (mini-batch only; 0 = cache off, byte-for-byte the \
+             uncached fetch path — DESIGN.md §16)",
+            |c, v| {
+                c.run.feature_cache_ttl = args::parse_usize("feature-cache-ttl", v)?;
+                Ok(())
+            },
+        )
+        .opt(
             "chaos",
             "",
             "kill rank R mid-epoch E ('rank=R,epoch=E'; test/bench fault \
@@ -540,6 +566,17 @@ fn report_summary(
             supergcn::util::fmt_bytes(comm.tiers.total_intra_bits() / 8.0),
             comm.tiers.total_intra_msgs(),
             comm.tiers.modeled_two_tier_secs(),
+        );
+    }
+    if comm.cache.is_active() {
+        println!(
+            "feature cache: {} hits / {} misses ({:.1}% hit rate), {} evictions, \
+             {} wire saved (DESIGN.md §16)",
+            comm.cache.total_hits(),
+            comm.cache.total_misses(),
+            comm.cache.hit_rate() * 100.0,
+            comm.cache.total_evictions(),
+            supergcn::util::fmt_bytes(comm.cache.total_saved_bytes()),
         );
     }
 }

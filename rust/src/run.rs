@@ -80,6 +80,14 @@ pub struct RunConfig {
     /// Chaos injection: kill one rank mid-epoch (`--chaos rank=R,epoch=E`;
     /// threaded transport only — test/bench hook, DESIGN.md §15).
     pub chaos: Option<FaultSpec>,
+    /// Remote-feature cache capacity in rows per rank
+    /// (`--feature-cache-rows`; mini-batch only, DESIGN.md §16).
+    pub feature_cache_rows: usize,
+    /// Remote-feature cache TTL in fetch rounds (`--feature-cache-ttl`;
+    /// 0 = cache off, byte-for-byte the uncached path — DESIGN.md §16).
+    /// When > 0, stale rows change the training numerics, so TTL and
+    /// capacity join the checkpoint fingerprint.
+    pub feature_cache_ttl: usize,
 }
 
 impl Default for RunConfig {
@@ -113,6 +121,8 @@ impl Default for RunConfig {
             checkpoint_path: PathBuf::from("supergcn.ckpt"),
             resume: None,
             chaos: None,
+            feature_cache_rows: 0,
+            feature_cache_ttl: 0,
         }
     }
 }
@@ -169,6 +179,8 @@ impl RunConfig {
             group_size: self.group_size,
             machine: self.machine.clone(),
             seed: self.seed,
+            feature_cache_rows: self.feature_cache_rows,
+            feature_cache_ttl: self.feature_cache_ttl,
         }
     }
 
@@ -195,6 +207,13 @@ impl RunConfig {
             anyhow::ensure!(
                 !self.fanouts.is_empty() && self.fanouts.iter().all(|&f| f >= 1),
                 "--fanouts must be a non-empty comma-separated list of integers >= 1"
+            );
+        }
+        if self.feature_cache_ttl > 0 {
+            anyhow::ensure!(
+                self.sampler != SamplerKind::Full,
+                "--feature-cache-ttl applies to the mini-batch fetch path only \
+                 (the full-batch regime exchanges halos, not feature rows)"
             );
         }
         if let Some(c) = self.chaos {
@@ -239,6 +258,13 @@ impl RunConfig {
         mix(&mut h, self.clusters_per_batch as u64);
         mix(&mut h, self.norm_batches as u64);
         mix(&mut h, self.seed);
+        // The cache changes numerics only when TTL > 0 (stale rows feed
+        // the engine); TTL=0 is the bit-exact identity, so a cache-off
+        // checkpoint stays resumable regardless of the capacity knob.
+        if self.feature_cache_ttl > 0 {
+            mix(&mut h, self.feature_cache_ttl as u64);
+            mix(&mut h, self.feature_cache_rows as u64);
+        }
         h
     }
 
@@ -324,6 +350,12 @@ mod tests {
                 checkpoint_path: PathBuf::from("elsewhere.ckpt"),
                 ..base.clone()
             },
+            // TTL=0 is the identity, so capacity alone must not shift
+            // the fingerprint (DESIGN.md §16).
+            RunConfig {
+                feature_cache_rows: 512,
+                ..base.clone()
+            },
         ];
         for v in &variants {
             assert_eq!(v.fingerprint(), fp, "executor/budget field leaked into fingerprint");
@@ -359,10 +391,25 @@ mod tests {
                 hidden: 32,
                 ..base.clone()
             },
+            RunConfig {
+                feature_cache_ttl: 2,
+                ..base.clone()
+            },
         ];
         for v in &variants {
             assert_ne!(v.fingerprint(), fp, "numerics field missing from fingerprint");
         }
+        // With the cache live (TTL>0), capacity is numerics-affecting.
+        let on = RunConfig {
+            feature_cache_ttl: 2,
+            feature_cache_rows: 64,
+            ..base.clone()
+        };
+        let on2 = RunConfig {
+            feature_cache_rows: 128,
+            ..on.clone()
+        };
+        assert_ne!(on.fingerprint(), on2.fingerprint());
     }
 
     #[test]
@@ -378,6 +425,8 @@ mod tests {
             seed: 7,
             batch_size: 33,
             fanouts: vec![4, 2],
+            feature_cache_rows: 96,
+            feature_cache_ttl: 3,
             ..RunConfig::default()
         };
         let tc = rc.train_config();
@@ -392,6 +441,8 @@ mod tests {
         assert_eq!(mc.hidden, 48);
         assert_eq!(mc.seed, 7);
         assert_eq!(mc.quant, Some(Bits::Int4));
+        assert_eq!(mc.feature_cache_rows, 96);
+        assert_eq!(mc.feature_cache_ttl, 3);
         let sc = rc.sampler_config();
         assert_eq!(sc.batch_size, 33);
         assert_eq!(sc.fanouts, vec![4, 2]);
@@ -427,6 +478,20 @@ mod tests {
         assert!(e.contains("out of range for 4 workers"), "{e}");
         let rc = RunConfig {
             chaos: Some(FaultSpec { rank: 1, epoch: 2 }),
+            ..rc
+        };
+        rc.validate(4).unwrap();
+
+        // Feature cache is a mini-batch knob: TTL>0 under the full-batch
+        // regime is a config error; under a sampler it validates.
+        let rc = RunConfig {
+            feature_cache_ttl: 1,
+            ..RunConfig::default()
+        };
+        let e = rc.validate(4).unwrap_err().to_string();
+        assert!(e.contains("--feature-cache-ttl applies to the mini-batch"), "{e}");
+        let rc = RunConfig {
+            sampler: SamplerKind::Neighbor,
             ..rc
         };
         rc.validate(4).unwrap();

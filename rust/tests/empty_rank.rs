@@ -109,6 +109,68 @@ fn full_batch_trains_with_an_empty_rank_seq_and_threaded() {
     }
 }
 
+/// Regression: the overlapped fetch charges `FETCH_REPLY_STAGE` per
+/// sending lane. A lane that owns zero feature rows serves no replies,
+/// so its reply-leg comm column must be *exactly* 0.0 — not a stale
+/// delta read off the shared `CommStats` around the exchange.
+#[test]
+fn empty_rank_reply_leg_is_charged_exactly_zero() {
+    let lg = Arc::new(graph());
+    let part = partition_with_empty_part(lg.n());
+    let scfg = SamplerConfig {
+        batch_size: 64,
+        fanouts: vec![5, 5, 5],
+        seed: 7,
+        ..Default::default()
+    };
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        let mc = MiniBatchConfig {
+            epochs: 1,
+            transport,
+            overlap: true,
+            ..Default::default()
+        };
+        let mut tr = MiniBatchTrainer::with_partition(
+            lg.clone(),
+            part.clone(),
+            SamplerKind::Neighbor,
+            &scfg,
+            mc,
+        )
+        .unwrap();
+        let stats = tr.run(false).unwrap();
+        let ledger = &stats[0].overlap;
+        let reply: Vec<_> = ledger
+            .stages
+            .iter()
+            .filter(|s| s.label == "fetch reply")
+            .collect();
+        assert!(
+            !reply.is_empty(),
+            "{}: overlap run must record fetch-reply stages",
+            transport.name()
+        );
+        let mut others_served = false;
+        for st in &reply {
+            assert_eq!(
+                st.comm[2],
+                0.0,
+                "{}: the row-less lane sent no replies, so its reply-leg \
+                 comm must be exactly zero",
+                transport.name()
+            );
+            if st.comm[0] > 0.0 || st.comm[1] > 0.0 {
+                others_served = true;
+            }
+        }
+        assert!(
+            others_served,
+            "{}: row-owning lanes must charge reply wire time (non-vacuous check)",
+            transport.name()
+        );
+    }
+}
+
 #[test]
 fn mini_batch_trains_with_an_empty_rank_seq_and_threaded() {
     let lg = Arc::new(graph());

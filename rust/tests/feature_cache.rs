@@ -1,0 +1,362 @@
+//! Remote-feature cache acceptance tests (DESIGN.md §16).
+//!
+//! 1. **TTL=0 identity** — `--feature-cache-ttl 0` (any capacity) is
+//!    bit-exact with the seed's uncached fetch: per-epoch loss bits and
+//!    `CommStats` wire bits, both transports × overlap on/off ×
+//!    group-size ∈ {1, 2}. The CI spmd-parity leg runs the identity
+//!    filter of this file.
+//! 2. **fp32 hits are pure comm wins** — fp32 feature rows are immutable,
+//!    so a cache hit reproduces the fetched bits exactly: TTL>0 keeps the
+//!    loss curve bit-identical while the wire bits shrink by exactly the
+//!    analytic saved-bits the cache charges.
+//! 3. **Determinism** — runs with the cache live are bit-reproducible and
+//!    transport-parity (the per-rank caches evolve in the identical
+//!    probe/admit order on both executors), and eviction pressure does
+//!    not break either property.
+//! 4. **Capacity monotonicity** — more capacity never lowers the hit
+//!    rate on the same workload.
+//! 5. **Elastic invalidation** — after a chaos rank loss the cache is
+//!    rebuilt cold at the survivor count: the recovered run's tail is
+//!    bit-identical to a fresh survivor-plan run started from the
+//!    pre-failure snapshot (which also starts cold).
+//! 6. **Quantized window equality** — rows are cached post-dequant, so a
+//!    hit within the TTL window returns the fused-decode bits of the
+//!    fetch round exactly.
+
+use std::sync::Arc;
+use supergcn::comm::transport::{FaultSpec, TransportKind};
+use supergcn::comm::CommStats;
+use supergcn::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
+use supergcn::coordinator::planner::{partition_for, survivor_partition};
+use supergcn::datasets;
+use supergcn::exec::{FeatCache, FeatCacheConfig};
+use supergcn::quant::{fused, Bits};
+use supergcn::run::RunConfig;
+use supergcn::sample::{SamplerConfig, SamplerKind};
+
+fn assert_loss_bits(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: epoch counts diverged");
+    for (e, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: epoch {e} loss diverged: {x} vs {y}");
+    }
+}
+
+fn assert_comm_equal(a: &CommStats, b: &CommStats, what: &str) {
+    assert_eq!(a.data_bits, b.data_bits, "{what}: data bits diverged");
+    assert_eq!(a.param_bits, b.param_bits, "{what}: param bits diverged");
+    assert_eq!(a.messages, b.messages, "{what}: message counts diverged");
+    assert_eq!(
+        a.modeled_send_secs, b.modeled_send_secs,
+        "{what}: modeled wire seconds diverged"
+    );
+    assert!(a.total_data_bytes() > 0.0, "{what}: no traffic — vacuous test");
+}
+
+/// The parity-suite mini-batch workload (arxiv-xs, k=3, neighbor) plus
+/// the two cache knobs.
+fn cache_run(
+    transport: TransportKind,
+    quant: Option<Bits>,
+    overlap: bool,
+    group_size: usize,
+    cache_rows: usize,
+    cache_ttl: usize,
+) -> (Vec<f32>, CommStats) {
+    let spec = datasets::by_name("arxiv-xs").unwrap();
+    let lg = Arc::new(spec.build());
+    let mc = MiniBatchConfig {
+        epochs: 3,
+        lr: spec.lr,
+        hidden: spec.hidden,
+        quant,
+        transport,
+        overlap,
+        group_size,
+        seed: 42,
+        feature_cache_rows: cache_rows,
+        feature_cache_ttl: cache_ttl,
+        ..Default::default()
+    };
+    let scfg = SamplerConfig {
+        batch_size: 128,
+        fanouts: vec![10, 5, 5],
+        seed: 42,
+        ..Default::default()
+    };
+    let mut tr = MiniBatchTrainer::new(lg, 3, SamplerKind::Neighbor, &scfg, mc).unwrap();
+    let losses = tr.run(false).unwrap().iter().map(|s| s.train_loss).collect();
+    (losses, tr.comm_stats.clone())
+}
+
+#[test]
+fn ttl0_is_bit_exact_with_the_uncached_seed_path() {
+    // The identity gate: TTL=0 must be byte-for-byte today's fetch — the
+    // capacity knob alone may not change a single loss or wire bit, and
+    // no cache counter may record anything. Full executor matrix.
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        for overlap in [false, true] {
+            for group_size in [1usize, 2] {
+                let (base_loss, base_comm) =
+                    cache_run(transport, None, overlap, group_size, 0, 0);
+                let (off_loss, off_comm) =
+                    cache_run(transport, None, overlap, group_size, 256, 0);
+                let what = format!(
+                    "ttl0 identity {} overlap={overlap} g={group_size}",
+                    transport.name()
+                );
+                assert_loss_bits(&base_loss, &off_loss, &what);
+                assert_comm_equal(&base_comm, &off_comm, &what);
+                assert!(!base_comm.cache.is_active(), "{what}: seed run counted cache");
+                assert!(!off_comm.cache.is_active(), "{what}: disabled cache counted");
+            }
+        }
+    }
+}
+
+#[test]
+fn fp32_cache_saves_wire_bytes_without_changing_loss_bits() {
+    // fp32 rows are immutable, so a hit returns the exact bits a fresh
+    // fetch would: the loss curve is bit-identical to TTL=0 while the
+    // data leg shrinks by exactly the analytic saved-bits (32-bit id on
+    // the request leg + 32f row on the reply leg per hit) — integer bit
+    // counts, so the f64 accounting is exact.
+    let (base_loss, base_comm) =
+        cache_run(TransportKind::Sequential, None, false, 1, 0, 0);
+    let (hit_loss, hit_comm) =
+        cache_run(TransportKind::Sequential, None, false, 1, 512, 2);
+    assert_loss_bits(&base_loss, &hit_loss, "fp32 cache");
+    let cache = &hit_comm.cache;
+    assert!(cache.is_active(), "cache never probed");
+    assert!(cache.total_hits() > 0, "no hits at 512 rows / TTL 2");
+    assert!(cache.hit_rate() > 0.0);
+    let base_bits: f64 = base_comm.data_bits.iter().flatten().sum();
+    let hit_bits: f64 = hit_comm.data_bits.iter().flatten().sum();
+    assert!(hit_bits < base_bits, "cache saved nothing: {hit_bits} vs {base_bits}");
+    let saved = cache.total_saved_bytes() * 8.0;
+    assert!(
+        (base_bits - hit_bits - saved).abs() < 1e-6,
+        "saved-bits accounting drifted: wire delta {} vs charged {saved}",
+        base_bits - hit_bits
+    );
+}
+
+#[test]
+fn cache_on_runs_are_transport_and_overlap_parity() {
+    // With the cache live the executor matrix must still agree to the
+    // bit: the per-rank caches see the identical probe/admit sequence on
+    // every transport/schedule/topology, so losses, wire bits, and the
+    // cache counters themselves all match.
+    let (base_loss, base_comm) =
+        cache_run(TransportKind::Sequential, None, false, 1, 256, 2);
+    assert!(base_comm.cache.total_hits() > 0, "vacuous: no hits in the base run");
+    for transport in [TransportKind::Sequential, TransportKind::Threaded] {
+        for overlap in [false, true] {
+            for group_size in [1usize, 2] {
+                let (loss, comm) = cache_run(transport, None, overlap, group_size, 256, 2);
+                let what = format!(
+                    "cache-on parity {} overlap={overlap} g={group_size}",
+                    transport.name()
+                );
+                assert_loss_bits(&base_loss, &loss, &what);
+                assert_comm_equal(&base_comm, &comm, &what);
+                assert_eq!(
+                    base_comm.cache.hits, comm.cache.hits,
+                    "{what}: per-rank hit counts diverged"
+                );
+                assert_eq!(
+                    base_comm.cache.misses, comm.cache.misses,
+                    "{what}: per-rank miss counts diverged"
+                );
+                assert_eq!(
+                    base_comm.cache.evictions, comm.cache.evictions,
+                    "{what}: per-rank eviction counts diverged"
+                );
+                assert_eq!(
+                    base_comm.cache.saved_bits, comm.cache.saved_bits,
+                    "{what}: per-rank saved bits diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn eviction_pressure_keeps_runs_deterministic() {
+    // A deliberately tight cache (heavy eviction churn) must stay
+    // bit-reproducible: eviction picks the minimum (freq, round, id) key
+    // — a total order — so HashMap iteration order never leaks into the
+    // run. Two fresh runs agree bit-for-bit, counters included.
+    let run = || cache_run(TransportKind::Sequential, None, false, 1, 24, 2);
+    let (loss_a, comm_a) = run();
+    let (loss_b, comm_b) = run();
+    assert!(
+        comm_a.cache.total_evictions() > 0,
+        "capacity 24 must churn (got {} evictions)",
+        comm_a.cache.total_evictions()
+    );
+    assert_loss_bits(&loss_a, &loss_b, "eviction determinism");
+    assert_comm_equal(&comm_a, &comm_b, "eviction determinism");
+    assert_eq!(comm_a.cache.hits, comm_b.cache.hits);
+    assert_eq!(comm_a.cache.evictions, comm_b.cache.evictions);
+    assert_eq!(comm_a.cache.saved_bits, comm_b.cache.saved_bits);
+}
+
+#[test]
+fn hit_rate_is_monotone_in_capacity() {
+    // Same workload, growing capacity: the hit rate never drops. The
+    // zero-capacity point is the degenerate sweep anchor — it probes
+    // (counts misses) but can never admit.
+    let mut last = -1.0f64;
+    for rows in [0usize, 16, 128, 1024] {
+        let (_, comm) = cache_run(TransportKind::Sequential, None, false, 1, rows, 2);
+        let hr = comm.cache.hit_rate();
+        assert!(comm.cache.is_active(), "rows={rows}: TTL>0 must probe");
+        if rows == 0 {
+            assert_eq!(comm.cache.total_hits(), 0, "zero capacity cannot hit");
+        }
+        assert!(
+            hr >= last,
+            "hit rate fell from {last:.4} to {hr:.4} when capacity grew to {rows}"
+        );
+        last = hr;
+    }
+    assert!(last > 0.0, "largest capacity never hit — vacuous sweep");
+}
+
+#[test]
+fn cache_is_rebuilt_cold_after_elastic_recovery() {
+    // Chaos kills rank 1 entering epoch 2; recovery re-plans across the
+    // 2 survivors and must invalidate the cache wholesale (ownership
+    // changed). Reference: a fresh survivor-plan trainer — whose cache
+    // also starts cold — restored from the pre-failure snapshot. Tails
+    // bit-identical ⇔ the recovered cache carried nothing across.
+    let spec = datasets::by_name("arxiv-xs").unwrap();
+    let graph = Arc::new(spec.build());
+    let total = 4usize;
+    let fail_epoch = 2usize;
+    let failed_rank = 1usize;
+    let rc = RunConfig {
+        sampler: SamplerKind::Neighbor,
+        epochs: total,
+        lr: spec.lr,
+        hidden: spec.hidden,
+        transport: TransportKind::Threaded,
+        batch_size: 128,
+        fanouts: vec![10, 5, 5],
+        feature_cache_rows: 256,
+        feature_cache_ttl: 2,
+        chaos: Some(FaultSpec {
+            rank: failed_rank,
+            epoch: fail_epoch,
+        }),
+        ..Default::default()
+    };
+    rc.validate(3).unwrap();
+    let mut a = rc.minibatch_trainer(graph.clone(), 3).unwrap();
+    let sa = a.run(false).unwrap();
+    assert_eq!(sa.len(), total);
+    assert_eq!(a.k(), 2, "the failed rank must be gone from the plan");
+    assert!(sa.iter().all(|s| s.train_loss.is_finite()));
+    assert!(a.comm_stats.cache.is_active(), "survivor epochs must keep caching");
+
+    // B: pre-failure reference (same config minus chaos) provides the
+    // epoch-boundary snapshot the recovery rolled back to.
+    let rc_b = RunConfig {
+        epochs: fail_epoch,
+        chaos: None,
+        ..rc.clone()
+    };
+    let mut b = rc_b.minibatch_trainer(graph.clone(), 3).unwrap();
+    let sb = b.run(false).unwrap();
+    assert_loss_bits(
+        &sa[..fail_epoch].iter().map(|s| s.train_loss).collect::<Vec<_>>(),
+        &sb.iter().map(|s| s.train_loss).collect::<Vec<_>>(),
+        "chaos prefix with cache",
+    );
+
+    // C: fresh trainer on the survivor plan (cold cache), restored from
+    // B's snapshot, run to the full length.
+    let part = partition_for(&graph, 3, rc.seed);
+    let survivors = survivor_partition(&graph.graph, &part, failed_rank).unwrap();
+    let rc_c = RunConfig {
+        chaos: None,
+        ..rc.clone()
+    };
+    let mut c = MiniBatchTrainer::with_partition(
+        graph.clone(),
+        survivors,
+        SamplerKind::Neighbor,
+        &rc_c.sampler_config(),
+        rc_c.minibatch_config(),
+    )
+    .unwrap();
+    c.restore(&b.snapshot());
+    let sc = c.run(false).unwrap();
+    assert_loss_bits(
+        &sa[fail_epoch..].iter().map(|s| s.train_loss).collect::<Vec<_>>(),
+        &sc.iter().map(|s| s.train_loss).collect::<Vec<_>>(),
+        "chaos tail with cache (cold-rebuild invariant)",
+    );
+}
+
+#[test]
+fn int4_cached_rows_equal_the_fresh_decode_within_the_window() {
+    // The post-dequant contract: what the cache returns inside the TTL
+    // window is bit-identical to the fused int4 decode of the round that
+    // fetched the row — the cache stores decoded values, never re-rounds.
+    let f = 24usize;
+    let rows = 6usize;
+    let x: Vec<f32> = (0..rows * f).map(|i| ((i as f32) * 0.37).sin()).collect();
+    let q = fused::quantize(&x, rows, f, Bits::Int4, 0xFEED_BEEF);
+    let decoded = fused::dequantize(&q);
+
+    let mut c = FeatCache::new(FeatCacheConfig { rows: 16, ttl: 2 });
+    c.begin_round();
+    for r in 0..rows {
+        let id = r as u32;
+        assert!(c.probe(id).is_none(), "cold cache must miss");
+        c.admit(id, &decoded[r * f..(r + 1) * f]);
+    }
+    // Rounds +1 and +2 are inside the window: every row returns the
+    // decode bits of the fetch round exactly.
+    for _ in 0..2 {
+        c.begin_round();
+        for r in 0..rows {
+            let hit = c.probe(r as u32).expect("within TTL window");
+            let want = &decoded[r * f..(r + 1) * f];
+            assert_eq!(hit.len(), f);
+            for (a, b) in hit.iter().zip(want.iter()) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "cached int4 row {r} diverged from its fresh decode"
+                );
+            }
+        }
+    }
+    // One round past the window: stale, dropped, must re-fetch.
+    c.begin_round();
+    for r in 0..rows {
+        assert!(c.probe(r as u32).is_none(), "row {r} must expire past TTL");
+    }
+}
+
+#[test]
+fn int4_cache_run_completes_and_saves_wire() {
+    // Run-level quantized smoke: the TTL>0 int4 run (stale rows feed the
+    // engine, qseed varies per round) must stay finite and still shrink
+    // the wire by its charged saved-bits.
+    let (base_loss, base_comm) =
+        cache_run(TransportKind::Sequential, Some(Bits::Int4), false, 1, 0, 0);
+    let (loss, comm) =
+        cache_run(TransportKind::Sequential, Some(Bits::Int4), false, 1, 512, 1);
+    assert!(loss.iter().all(|l| l.is_finite()));
+    assert!(base_loss.iter().all(|l| l.is_finite()));
+    assert!(comm.cache.total_hits() > 0);
+    assert!(comm.cache.total_saved_bytes() > 0.0);
+    let base_bits: f64 = base_comm.data_bits.iter().flatten().sum::<f64>()
+        + base_comm.param_bits.iter().flatten().sum::<f64>();
+    let bits: f64 = comm.data_bits.iter().flatten().sum::<f64>()
+        + comm.param_bits.iter().flatten().sum::<f64>();
+    assert!(bits < base_bits, "int4 cache saved nothing: {bits} vs {base_bits}");
+}
