@@ -91,6 +91,19 @@ fn main() -> anyhow::Result<()> {
         // a hit; TTL=0 (the default) is byte-for-byte the uncached path.
         // CLI equivalent: `supergcn train --sampler neighbor
         // --feature-cache-rows 512 --feature-cache-ttl 2`.
+        //
+        // Out-of-core storage (DESIGN.md §17): `graph_dir: Some(dir)`
+        // trains through the mmap-backed `graph::store::GraphStore`
+        // instead of an in-process dataset — per-epoch losses stay
+        // bit-identical, and `graph_dir` deliberately stays out of the
+        // resume fingerprint (storage is not a numeric knob). This
+        // driver builds its graph in memory, so it leaves the default.
+        // CLI equivalents: `supergcn synth --out dir` streams a
+        // synthetic graph to dir/graph.sgcn, `supergcn prepare
+        // --graph-dir dir --workers 4` cuts per-rank shard files, and
+        // `supergcn train --graph-dir dir [--store mem]` trains from
+        // them (`--store mem` materializes the same bytes on the heap
+        // as the memory-footprint reference).
         ..Default::default()
     };
     let (ctxs, cfg, _) = prepare(&lg, 4, rc.strategy, Some(shape_cfg), rc.seed)?;

@@ -33,10 +33,14 @@
 use supergcn::comm::transport::{Topology, TransportKind};
 use supergcn::comm::CommStats;
 use supergcn::coordinator::planner::{group_send_rows, prepare};
+use supergcn::coordinator::shard;
 use supergcn::coordinator::trainer::EpochStats;
 use supergcn::datasets;
 use supergcn::exec::OverlapLedger;
 use supergcn::exp::{train_minibatch, Table};
+use supergcn::graph::store::GraphStore;
+use supergcn::graph::synth::{generate_to_store, SynthConfig};
+use supergcn::hier::volume::RemoteStrategy;
 use supergcn::obs::{Telemetry, Tracer};
 use supergcn::run::RunConfig;
 use supergcn::sample::SamplerKind;
@@ -388,6 +392,74 @@ fn main() -> anyhow::Result<()> {
         cache_ttl.max(1)
     );
 
+    // ---- out-of-core section (DESIGN.md §17) --------------------------
+    // Stream a synthetic graph to disk, `prepare` per-rank shards, and
+    // train mini-batch from the mmap-backed store with the materialized
+    // in-memory run over the *same* block partition as the bit-exactness
+    // reference. The `oocore` JSON block below is what the CI bench-smoke
+    // leg validates; `cargo bench --bench oocore` runs the 100M+-edge
+    // full-scale version of the same pipeline.
+    let oo_k = 4usize;
+    let oo_dir = std::env::temp_dir().join(format!("supergcn_bench_oocore_{}", std::process::id()));
+    std::fs::create_dir_all(&oo_dir)?;
+    let oo_path = oo_dir.join("graph.sgcn");
+    let oo_cfg = SynthConfig {
+        n: if smoke { 4_000 } else { 20_000 },
+        avg_deg: 8,
+        window: 256,
+        feat_dim: 16,
+        num_classes: 8,
+        seed: 42,
+        ..Default::default()
+    };
+    let oo_synth = generate_to_store(&oo_cfg, &oo_path)?;
+    let oo_store = GraphStore::open(&oo_path)?;
+    let oo_shards = shard::write_shards(&oo_store, oo_k, RemoteStrategy::Hybrid, 42, &oo_dir)?;
+    let oo_shard_bytes: u64 = oo_shards.iter().map(|s| s.bytes).sum();
+    let oo_run = |store: GraphStore| -> anyhow::Result<(Vec<f32>, f64)> {
+        let rc = RunConfig {
+            sampler: SamplerKind::Neighbor,
+            epochs,
+            transport: TransportKind::Threaded,
+            seed: 42,
+            batch_size: 128,
+            fanouts: vec![6, 4],
+            ..Default::default()
+        };
+        let mut tr = rc.minibatch_trainer_oocore(store, oo_k)?;
+        let stats = tr.run(false)?;
+        Ok((
+            stats.iter().map(|s| s.train_loss).collect(),
+            steady_wall_secs(&stats),
+        ))
+    };
+    let (oo_mmap_loss, oo_mmap_secs) = oo_run(oo_store.clone())?;
+    let (oo_mem_loss, oo_mem_secs) = oo_run(oo_store.materialize())?;
+    for (e, (a, b)) in oo_mmap_loss.iter().zip(oo_mem_loss.iter()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "epoch {e}: mmap-backed training must be bit-exact with in-memory"
+        );
+    }
+    let oo_rss = supergcn::graph::store::peak_rss_bytes().unwrap_or(0);
+    let mut oot = Table::new(
+        &format!(
+            "out-of-core: synth {} nodes / {} edges @ {oo_k} ranks, mmap vs \
+             materialized (bit-exact losses asserted)",
+            oo_synth.n, oo_synth.m
+        ),
+        &["metric", "value"],
+    );
+    oot.row(vec!["store file".into(), supergcn::util::fmt_bytes(oo_synth.file_bytes as f64)]);
+    oot.row(vec!["shard files".into(), supergcn::util::fmt_bytes(oo_shard_bytes as f64)]);
+    oot.row(vec!["mapped bytes".into(), supergcn::util::fmt_bytes(oo_store.mapped_bytes() as f64)]);
+    oot.row(vec!["mmap wall s".into(), format!("{oo_mmap_secs:.4}")]);
+    oot.row(vec!["mem wall s".into(), format!("{oo_mem_secs:.4}")]);
+    oot.row(vec!["proc peak rss".into(), supergcn::util::fmt_bytes(oo_rss as f64)]);
+    oot.print();
+    std::fs::remove_dir_all(&oo_dir).ok();
+
     // ---- report ------------------------------------------------------
     let mut table = Table::new(
         "SPMD transport scaling: wall secs, seq vs threaded (bit-exact runs)",
@@ -495,6 +567,21 @@ fn main() -> anyhow::Result<()> {
                     ("saved_bytes", Json::Num(cstats.total_saved_bytes())),
                     ("uncached_data_bytes", Json::Num(uncached_bytes)),
                     ("cached_data_bytes", Json::Num(cached_bytes)),
+                    ("losses_bit_exact", Json::Bool(true)),
+                ]),
+            ),
+            (
+                "oocore",
+                Json::obj(vec![
+                    ("ranks", Json::Num(oo_k as f64)),
+                    ("nodes", Json::Num(oo_synth.n as f64)),
+                    ("edges", Json::Num(oo_synth.m as f64)),
+                    ("store_file_bytes", Json::Num(oo_synth.file_bytes as f64)),
+                    ("shard_bytes", Json::Num(oo_shard_bytes as f64)),
+                    ("mapped_bytes", Json::Num(oo_store.mapped_bytes() as f64)),
+                    ("mmap_wall_secs", Json::Num(oo_mmap_secs)),
+                    ("mem_wall_secs", Json::Num(oo_mem_secs)),
+                    ("peak_rss_bytes", Json::Num(oo_rss as f64)),
                     ("losses_bit_exact", Json::Bool(true)),
                 ]),
             ),

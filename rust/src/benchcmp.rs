@@ -244,17 +244,22 @@ mod tests {
 
     #[test]
     fn unknown_keys_are_ignored_not_errors() {
-        // A newer record carrying top-level `obs` telemetry and `cache`
-        // (DESIGN.md §16) blocks and extra per-row keys must still load
-        // against the documented schema — the comparator reads only the
-        // fields it names, so a grown record never fails the gate against
-        // an older committed baseline.
+        // A newer record carrying top-level `obs` telemetry, `cache`
+        // (DESIGN.md §16), and `oocore` (DESIGN.md §17) blocks and extra
+        // per-row keys must still load against the documented schema —
+        // the comparator reads only the fields it names, so a grown
+        // record never fails the gate against an older committed
+        // baseline.
         let p = write(
             "forward-compat",
             "{\"bench\": \"spmd_scaling\", \
               \"obs\": {\"span_count\": 1234, \"trace\": \"trace_ci.json\"}, \
               \"cache\": {\"ttl\": 1, \"rows\": 512, \"hit_rate\": 0.4, \
                           \"saved_bytes\": 123456.0}, \
+              \"oocore\": {\"ranks\": 4, \"edges\": 160000.0, \
+                           \"mapped_bytes\": 1048576.0, \
+                           \"peak_rss_bytes\": 2097152.0, \
+                           \"losses_bit_exact\": true}, \
               \"rows\": [{\"regime\": \"full-batch\", \"ranks\": 2, \
                           \"threaded_wall_secs\": 0.5, \
                           \"span_count\": 99, \"future_field\": [1, 2]}]}",

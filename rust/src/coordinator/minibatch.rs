@@ -44,7 +44,7 @@ use crate::exec::{
     AggDispatch, Engine, FeatCacheConfig, FetchScratch, LossSpec, LossTotals, MiniBatchCtx,
     MiniBatchRankCtx, OverlapLedger, StageClock,
 };
-use crate::graph::generate::LabelledGraph;
+use crate::graph::store::{major_page_faults, peak_rss_bytes, GraphStore};
 use crate::model::optimizer::{OptKind, Optimizer};
 use crate::model::{checkpoint, ModelParams};
 use crate::obs::{self, ExchangeRow, Telemetry, TraceCategory};
@@ -56,7 +56,6 @@ use crate::sample::{build_sampler, MiniBatch, Sampler, SamplerConfig, SamplerKin
 use crate::util::timer::{Breakdown, Category, ALL_CATEGORIES};
 use anyhow::Result;
 use std::path::Path;
-use std::sync::Arc;
 use std::time::Instant;
 
 /// Mini-batch training configuration.
@@ -122,7 +121,9 @@ impl Default for MiniBatchConfig {
 }
 
 pub struct MiniBatchTrainer {
-    pub lg: Arc<LabelledGraph>,
+    /// The graph + node data behind the storage abstraction (DESIGN.md
+    /// §17): `Mem` for in-process graphs, `Mmap` for `--graph-dir` runs.
+    pub store: GraphStore,
     /// The SPMD worker partition (ownership of feature rows).
     pub part: Partition,
     sampler: Box<dyn Sampler>,
@@ -157,41 +158,48 @@ pub struct MiniBatchTrainer {
 
 impl MiniBatchTrainer {
     /// Partition with the same weighted multilevel call the full-batch
-    /// `planner::prepare` uses (shared `planner::partition_for`), then
-    /// build the sampler and model.
+    /// `planner::prepare` uses (shared `planner::partition_for`) when the
+    /// in-memory backend is available, or the streaming
+    /// `planner::block_partition` on an mmap store; then build the
+    /// sampler and model.
     pub fn new(
-        lg: Arc<LabelledGraph>,
+        graph: impl Into<GraphStore>,
         k: usize,
         kind: SamplerKind,
         scfg: &SamplerConfig,
         mc: MiniBatchConfig,
     ) -> Result<Self> {
         anyhow::ensure!(k >= 1, "need at least one worker");
-        let part = super::planner::partition_for(&lg, k, mc.seed);
-        Self::with_partition(lg, part, kind, scfg, mc)
+        let store = graph.into();
+        let part = match store.labelled() {
+            Some(lg) => super::planner::partition_for(lg, k, mc.seed),
+            None => super::planner::block_partition(&store, k),
+        };
+        Self::with_partition(store, part, kind, scfg, mc)
     }
 
     /// Run over an externally built partition (tests compare against the
     /// full-batch trainer on the *same* partitioning through this).
     pub fn with_partition(
-        lg: Arc<LabelledGraph>,
+        graph: impl Into<GraphStore>,
         part: Partition,
         kind: SamplerKind,
         scfg: &SamplerConfig,
         mc: MiniBatchConfig,
     ) -> Result<Self> {
-        part.validate(lg.n())?;
+        let store = graph.into();
+        part.validate(store.n())?;
         anyhow::ensure!(
-            lg.n() < (1 << 24),
+            store.n() < (1 << 24),
             "node ids must fit the f32 id wire encoding"
         );
-        let sampler = build_sampler(kind, &lg, scfg);
+        let sampler = build_sampler(kind, &store, scfg)?;
         let shapes = ShapeConfig {
             name: format!("minibatch-{}", kind.name()),
             n_pad: 0,
-            f_in: lg.feat_dim,
+            f_in: store.feat_dim(),
             hidden: mc.hidden,
-            classes: lg.num_classes,
+            classes: store.num_classes(),
             e_local: 0,
             e_pre: 0,
             p_pre: 0,
@@ -209,7 +217,7 @@ impl MiniBatchTrainer {
             ttl: mc.feature_cache_ttl,
         };
         Ok(Self {
-            lg,
+            store,
             part,
             sampler,
             mc,
@@ -454,6 +462,16 @@ impl MiniBatchTrainer {
                 m.counter_add("cache.eviction.count", epoch_comm.cache.total_evictions() as f64);
                 m.counter_add("cache.saved.bytes", epoch_comm.cache.total_saved_bytes());
             }
+            // Out-of-core store telemetry (DESIGN.md §17): mapped bytes
+            // are 0 on the in-memory backend; RSS and major-fault
+            // readings are process-wide (`/proc/self`), absent off-Linux.
+            m.gauge_set("store.mapped.bytes", self.store.mapped_bytes() as f64);
+            if let Some(rss) = peak_rss_bytes() {
+                m.gauge_set("store.peak_rss.bytes", rss as f64);
+            }
+            if let Some(faults) = major_page_faults() {
+                m.gauge_set("store.faults_major.count", faults as f64);
+            }
             // Measured interior/comm/boundary per fetch exchange, next to
             // the §11 model of both schedules on the same inputs.
             for st in &epoch_ledger.stages {
@@ -504,7 +522,7 @@ impl MiniBatchTrainer {
         let mut tapes = self.engine.tapes(rows, &self.params);
         let mut clock = StageClock::new(k);
         let mut ctx = MiniBatchCtx::new(
-            &self.lg,
+            &self.store,
             &self.part.assign,
             batches,
             per_lane,
@@ -524,7 +542,7 @@ impl MiniBatchTrainer {
         let metas: Vec<(Vec<u32>, Vec<u8>)> = per_lane
             .iter()
             .map(|slot| match slot {
-                Some(bi) => batch_meta(&self.lg, &batches[*bi]),
+                Some(bi) => batch_meta(&self.store, &batches[*bi]),
                 None => (Vec::new(), Vec::new()),
             })
             .collect();
@@ -577,7 +595,7 @@ impl MiniBatchTrainer {
         fetch: &mut [FetchScratch],
     ) -> Result<(Vec<LossTotals>, StageClock, Vec<f32>, OverlapLedger)> {
         let k = self.part.k;
-        let lg: &LabelledGraph = &self.lg;
+        let store: &GraphStore = &self.store;
         let assign: &[u32] = &self.part.assign;
         let engine = &self.engine;
         let params = &self.params;
@@ -601,7 +619,7 @@ impl MiniBatchTrainer {
                     // scope flushes even on panic unwind.
                     let _scope = tr.as_ref().map(|t| t.lane_scope(w, 0));
                     run_rank_round(
-                        w, out, shard, scratch, fabric, lg, assign, batches, per_lane, rows_w,
+                        w, out, shard, scratch, fabric, store, assign, batches, per_lane, rows_w,
                         engine, params, machine, quant, seed, epoch, round, overlap,
                     )
                 }) as RankBody<'_>
@@ -695,7 +713,13 @@ impl MiniBatchTrainer {
                 self.recovered
             )));
         }
-        let new_part = super::planner::survivor_partition(&self.lg.graph, &self.part, failed)?;
+        let Some(csr) = self.store.csr() else {
+            return Err(err.context(
+                "elastic recovery needs the in-memory graph backend to re-plan survivors; \
+                 --graph-dir (mmap) runs cannot combine with --elastic",
+            ));
+        };
+        let new_part = super::planner::survivor_partition(csr, &self.part, failed)?;
         let k2 = new_part.k;
         let _scope = self.telemetry.tracer.as_ref().map(|t| t.lane_scope(0, 1));
         obs::instant(TraceCategory::Recovery, "elastic re-plan");
@@ -770,11 +794,11 @@ impl MiniBatchTrainer {
 }
 
 /// Per-batch loss metadata: (labels, split tags) for the target rows.
-fn batch_meta(lg: &LabelledGraph, mb: &MiniBatch) -> (Vec<u32>, Vec<u8>) {
+fn batch_meta(store: &GraphStore, mb: &MiniBatch) -> (Vec<u32>, Vec<u8>) {
     let nt = mb.n_target;
     (
-        mb.n_id[..nt].iter().map(|&v| lg.labels[v as usize]).collect(),
-        mb.n_id[..nt].iter().map(|&v| lg.split[v as usize]).collect(),
+        mb.n_id[..nt].iter().map(|&v| store.label(v as usize)).collect(),
+        mb.n_id[..nt].iter().map(|&v| store.split_of(v as usize)).collect(),
     )
 }
 
@@ -821,7 +845,7 @@ fn run_rank_round(
     shard: &mut CommStats,
     scratch: &mut FetchScratch,
     fabric: &Fabric,
-    lg: &LabelledGraph,
+    store: &GraphStore,
     assign: &[u32],
     batches: &[MiniBatch],
     per_lane: &[Option<usize>],
@@ -840,12 +864,12 @@ fn run_rank_round(
     let batch = per_lane[w].map(|bi| &batches[bi]);
     {
         let mut ctx = MiniBatchRankCtx::new(
-            w, lg, assign, batch, machine, quant, seed, epoch, round, overlap, fabric, shard,
+            w, store, assign, batch, machine, quant, seed, epoch, round, overlap, fabric, shard,
         )
         .with_scratch(scratch);
         engine.forward(params, &mut ctx, &mut tapes, None, &mut clock)?;
         let (labels, split) = match batch {
-            Some(mb) => batch_meta(lg, mb),
+            Some(mb) => batch_meta(store, mb),
             None => (Vec::new(), Vec::new()),
         };
         let spec = LossSpec {
@@ -871,7 +895,8 @@ fn run_rank_round(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::generate::sbm;
+    use crate::graph::generate::{sbm, LabelledGraph};
+    use std::sync::Arc;
 
     fn lg(n: usize, seed: u64) -> Arc<LabelledGraph> {
         Arc::new(sbm(n, 4, 8.0, 0.85, 16, 0.6, seed))

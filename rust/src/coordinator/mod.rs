@@ -12,9 +12,14 @@
 //!   mini-batches from `sample::` drive the *same* engine over the
 //!   remote-row-fetch context, so both regimes share one layer
 //!   implementation and one comm accounting.
+//! * [`shard`] — self-contained per-rank shard files written by
+//!   `supergcn prepare` (DESIGN.md §17): each holds one worker's halo
+//!   plan plus its local feature/label/split rows, so `train
+//!   --graph-dir` builds contexts without re-touching the global graph.
 
 pub mod minibatch;
 pub mod planner;
+pub mod shard;
 pub mod trainer;
 
 pub use minibatch::{MiniBatchConfig, MiniBatchTrainer};

@@ -9,9 +9,69 @@
 use crate::backend::{LayerSpec, SegSpec};
 use crate::comm::transport::Topology;
 use crate::graph::generate::{LabelledGraph, SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
+use crate::graph::store::GraphStore;
 use crate::hier::plan::WorkerPlan;
 use crate::runtime::ShapeConfig;
 use anyhow::{Context, Result};
+
+/// Node-data access for context building: `build_one` fills features,
+/// labels, and masks through this, so the same padding/layout code runs
+/// against the global in-memory graph, the mmap-backed store, and a
+/// per-rank shard file (which only holds *local* rows). Each lookup gets
+/// both coordinates of a node — its local index `i` in
+/// `plan.local_nodes` and its global id `v` — and a backend uses
+/// whichever one indexes its storage (DESIGN.md §17).
+pub trait NodeSource {
+    fn feat_dim(&self) -> usize;
+    fn num_classes(&self) -> usize;
+    fn feature_row(&self, i: usize, v: u32) -> &[f32];
+    fn label(&self, i: usize, v: u32) -> u32;
+    fn split(&self, i: usize, v: u32) -> u8;
+}
+
+impl NodeSource for LabelledGraph {
+    fn feat_dim(&self) -> usize {
+        self.feat_dim
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn feature_row(&self, _i: usize, v: u32) -> &[f32] {
+        LabelledGraph::feature_row(self, v as usize)
+    }
+
+    fn label(&self, _i: usize, v: u32) -> u32 {
+        self.labels[v as usize]
+    }
+
+    fn split(&self, _i: usize, v: u32) -> u8 {
+        self.split[v as usize]
+    }
+}
+
+impl NodeSource for GraphStore {
+    fn feat_dim(&self) -> usize {
+        GraphStore::feat_dim(self)
+    }
+
+    fn num_classes(&self) -> usize {
+        GraphStore::num_classes(self)
+    }
+
+    fn feature_row(&self, _i: usize, v: u32) -> &[f32] {
+        GraphStore::feature_row(self, v as usize)
+    }
+
+    fn label(&self, _i: usize, v: u32) -> u32 {
+        GraphStore::label(self, v as usize)
+    }
+
+    fn split(&self, _i: usize, v: u32) -> u8 {
+        GraphStore::split_of(self, v as usize)
+    }
+}
 
 /// The Pallas edge block; padded index arrays are multiples of this.
 pub const EB: usize = 128;
@@ -155,22 +215,39 @@ pub fn check_fits(cfg: &ShapeConfig, plans: &[WorkerPlan]) -> Result<()> {
     Ok(())
 }
 
-/// Build all worker contexts.
+/// Build all worker contexts from the in-memory graph.
 pub fn build_worker_ctxs(
     lg: &LabelledGraph,
     plans: &[WorkerPlan],
     cfg: &ShapeConfig,
 ) -> Result<Vec<WorkerCtx>> {
+    build_worker_ctxs_src(lg, plans, cfg)
+}
+
+/// Build all worker contexts from any [`NodeSource`] — the in-memory
+/// graph, the mmap-backed store, and (via [`build_one`]) per-rank shard
+/// files all produce bit-identical contexts for identical plans.
+pub fn build_worker_ctxs_src<S: NodeSource + ?Sized>(
+    src: &S,
+    plans: &[WorkerPlan],
+    cfg: &ShapeConfig,
+) -> Result<Vec<WorkerCtx>> {
     check_fits(cfg, plans)?;
-    anyhow::ensure!(lg.feat_dim == cfg.f_in, "feature dim mismatch");
-    anyhow::ensure!(lg.num_classes <= cfg.classes, "class count exceeds config");
+    anyhow::ensure!(src.feat_dim() == cfg.f_in, "feature dim mismatch");
+    anyhow::ensure!(src.num_classes() <= cfg.classes, "class count exceeds config");
     plans
         .iter()
-        .map(|p| build_one(lg, p, cfg))
+        .map(|p| build_one(src, p, cfg))
         .collect::<Result<Vec<_>>>()
 }
 
-fn build_one(lg: &LabelledGraph, plan: &WorkerPlan, cfg: &ShapeConfig) -> Result<WorkerCtx> {
+/// Build one worker's padded context from its plan, filling node data
+/// through the [`NodeSource`].
+pub fn build_one<S: NodeSource + ?Sized>(
+    src: &S,
+    plan: &WorkerPlan,
+    cfg: &ShapeConfig,
+) -> Result<WorkerCtx> {
     let n_pad = cfg.n_pad;
     let zero = cfg.zero_row() as u32;
     let trash = cfg.trash_row() as u32;
@@ -265,7 +342,7 @@ fn build_one(lg: &LabelledGraph, plan: &WorkerPlan, cfg: &ShapeConfig) -> Result
     }
 
     // ---- features / labels / masks ---------------------------------------
-    let f = lg.feat_dim;
+    let f = src.feat_dim();
     let mut features = vec![0f32; n_pad * f];
     let mut labels = vec![0u32; n_pad];
     let mut train_mask = vec![false; n_pad];
@@ -273,10 +350,9 @@ fn build_one(lg: &LabelledGraph, plan: &WorkerPlan, cfg: &ShapeConfig) -> Result
     let mut val_mask = vec![0f32; n_pad];
     let mut test_mask = vec![0f32; n_pad];
     for (i, &v) in plan.local_nodes.iter().enumerate() {
-        let v = v as usize;
-        features[i * f..(i + 1) * f].copy_from_slice(lg.feature_row(v));
-        labels[i] = lg.labels[v];
-        match lg.split[v] {
+        features[i * f..(i + 1) * f].copy_from_slice(src.feature_row(i, v));
+        labels[i] = src.label(i, v);
+        match src.split(i, v) {
             SPLIT_TRAIN => {
                 train_mask[i] = true;
                 train_mask_f[i] = 1.0;
@@ -391,6 +467,60 @@ pub fn prepare_parts(
         None => fit_config("fit", lg.feat_dim, hidden, lg.num_classes, &plans),
     };
     let ctxs = build_worker_ctxs(lg, &plans, &cfg)?;
+    Ok((ctxs, cfg, plans))
+}
+
+/// Streaming block partition over a store (DESIGN.md §17): contiguous id
+/// ranges cut at weight quantiles, with the §7.2 vertex weights
+/// (`1 + in_degree + 4·is_train`). This is exactly `partition::block`
+/// over `partition::vertex_weights(g, Some(train_mask), 4)` — pinned
+/// equal in tests — but computed in two bounded-memory scans instead of
+/// materializing the weight vector. The multilevel partitioner needs the
+/// whole CSR on the heap; this is the partition the out-of-core path
+/// (`supergcn prepare` / `train --graph-dir`) plans with, on both
+/// backends, so mmap and in-memory training see identical partitions.
+pub fn block_partition(store: &GraphStore, k: usize) -> crate::partition::Partition {
+    let n = store.n();
+    let node_weight = |v: usize| -> u64 {
+        let bonus = if store.split_of(v) == SPLIT_TRAIN { 4 } else { 0 };
+        1 + store.in_degree(v) as u64 + bonus
+    };
+    let mut total = 0u64;
+    for v in 0..n {
+        total += node_weight(v);
+    }
+    let mut assign = vec![0u32; n];
+    let mut acc = 0u64;
+    let mut p = 0u32;
+    for (v, slot) in assign.iter_mut().enumerate() {
+        while (p as usize) + 1 < k && acc * k as u64 >= total * (p as u64 + 1) {
+            p += 1;
+        }
+        *slot = p;
+        acc += node_weight(v);
+    }
+    crate::partition::Partition { k, assign }
+}
+
+/// [`prepare_parts`] over a [`GraphStore`]: plans → contexts without
+/// assuming a heap CSR. With a `Mem` backend this is bit-identical to
+/// [`prepare_parts`] on the same partition (the generic planning code is
+/// literally the same); with the mmap backend it is the out-of-core
+/// planning path.
+pub fn prepare_store(
+    store: &GraphStore,
+    part: &crate::partition::Partition,
+    strategy: crate::hier::volume::RemoteStrategy,
+    cfg: Option<ShapeConfig>,
+    hidden: usize,
+) -> Result<(Vec<WorkerCtx>, ShapeConfig, Vec<WorkerPlan>)> {
+    let plans = crate::hier::plan::build_plans(store, part, strategy);
+    crate::hier::plan::validate_plans(store, part, &plans).context("plan validation")?;
+    let cfg = match cfg {
+        Some(c) => c,
+        None => fit_config("fit", store.feat_dim(), hidden, store.num_classes(), &plans),
+    };
+    let ctxs = build_worker_ctxs_src(store, &plans, &cfg)?;
     Ok((ctxs, cfg, plans))
 }
 
@@ -606,6 +736,44 @@ mod tests {
         assert!(survivor_partition(&lg.graph, &part, 4).is_err());
         let one = crate::partition::Partition { k: 1, assign: vec![0; lg.n()] };
         assert!(survivor_partition(&lg.graph, &one, 0).is_err());
+    }
+
+    #[test]
+    fn block_partition_matches_materialized_block() {
+        let lg = sbm(500, 4, 8.0, 0.85, 16, 0.5, 5);
+        let mask: Vec<bool> = lg.split.iter().map(|&s| s == SPLIT_TRAIN).collect();
+        let weights = crate::partition::vertex_weights(&lg.graph, Some(&mask), 4);
+        let want = crate::partition::block(lg.n(), 3, &weights);
+        let store = GraphStore::from(lg);
+        let got = block_partition(&store, 3);
+        assert_eq!(got.assign, want.assign);
+        got.validate(store.n()).unwrap();
+    }
+
+    #[test]
+    fn prepare_store_matches_prepare_parts_bitwise() {
+        let lg = sbm(400, 4, 7.0, 0.8, 12, 0.5, 21);
+        let lg2 = lg.clone();
+        let store = GraphStore::from(lg2);
+        let part = block_partition(&store, 3);
+        let (ctxs_a, cfg_a, plans_a) =
+            prepare_parts(&lg, &part, RemoteStrategy::Hybrid, None, 64).unwrap();
+        let (ctxs_b, cfg_b, plans_b) =
+            prepare_store(&store, &part, RemoteStrategy::Hybrid, None, 64).unwrap();
+        assert_eq!(cfg_a.n_pad, cfg_b.n_pad);
+        assert_eq!(cfg_a.e_local, cfg_b.e_local);
+        assert_eq!(plans_a.len(), plans_b.len());
+        for (a, b) in plans_a.iter().zip(plans_b.iter()) {
+            assert_eq!(a.local_nodes, b.local_nodes);
+            assert_eq!(a.local_edges, b.local_edges);
+            assert_eq!(a.degrees, b.degrees);
+        }
+        for (a, b) in ctxs_a.iter().zip(ctxs_b.iter()) {
+            assert_eq!(a.features, b.features);
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.train_mask_f, b.train_mask_f);
+            assert_eq!(a.spec.local.gather, b.spec.local.gather);
+        }
     }
 
     #[test]

@@ -1,0 +1,681 @@
+//! Per-rank shard files (`SGCNSHD1`) — the output of `supergcn prepare`
+//! and the input of `supergcn train --graph-dir` (DESIGN.md §17).
+//!
+//! A shard is **self-contained**: it carries one worker's halo plan (the
+//! full [`WorkerPlan`] — local node manifest, local edges, true global
+//! degrees, per-peer send/recv halo specs) plus exactly the node data
+//! that worker needs (feature / label / split rows in `local_nodes`
+//! order). Training from shards therefore never touches the global graph
+//! again: rank `r` opens `shard_00000r` and nothing else, which is what
+//! bounds per-rank memory to its own slice of the dataset.
+//!
+//! Shards are produced deterministically from `(store, k, strategy,
+//! seed)`: the streaming block partition and the generic plan builder are
+//! pure functions of the graph, so the same inputs yield byte-identical
+//! shard files — pinned in tests. The reader follows the
+//! `model::checkpoint` v2 contract: every failed read names its field,
+//! shape inconsistencies are descriptive `Err`s, and trailing bytes are
+//! rejected.
+
+use super::planner::{self, NodeSource, WorkerCtx};
+use crate::graph::store::GraphStore;
+use crate::hier::plan::{RecvPlan, SendPlan, WorkerPlan};
+use crate::hier::volume::RemoteStrategy;
+use crate::obs::trace::{span, TraceCategory};
+use crate::partition::Partition;
+use crate::runtime::ShapeConfig;
+use anyhow::{Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+const MAGIC: &[u8; 8] = b"SGCNSHD1";
+const VERSION: u64 = 1;
+
+/// Stable on-disk codes for [`RemoteStrategy`] (do not renumber).
+fn strategy_code(s: RemoteStrategy) -> u64 {
+    match s {
+        RemoteStrategy::Raw => 0,
+        RemoteStrategy::PreOnly => 1,
+        RemoteStrategy::PostOnly => 2,
+        RemoteStrategy::Hybrid => 3,
+    }
+}
+
+fn strategy_from_code(c: u64) -> Result<RemoteStrategy> {
+    Ok(match c {
+        0 => RemoteStrategy::Raw,
+        1 => RemoteStrategy::PreOnly,
+        2 => RemoteStrategy::PostOnly,
+        3 => RemoteStrategy::Hybrid,
+        _ => anyhow::bail!("unknown remote strategy code {c} in shard header"),
+    })
+}
+
+/// `dir/shard_00042.sgcnshard` — zero-padded so a directory listing
+/// sorts in rank order.
+pub fn shard_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("shard_{rank:05}.sgcnshard"))
+}
+
+/// One rank's loaded shard: the halo plan plus local node data. Implements
+/// [`NodeSource`] (indexed by *local* position — the shard only holds its
+/// own rows), so `planner::build_one` assembles the exact same padded
+/// [`WorkerCtx`] it would have built from the global graph.
+#[derive(Clone, Debug)]
+pub struct Shard {
+    pub k: usize,
+    pub rank: usize,
+    pub n_global: usize,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    pub strategy: RemoteStrategy,
+    pub seed: u64,
+    pub plan: WorkerPlan,
+    /// Local rows, `n_local × feat_dim`, in `plan.local_nodes` order.
+    features: Vec<f32>,
+    labels: Vec<u32>,
+    split: Vec<u8>,
+    /// On-disk size, for the `store.shard.bytes` gauge.
+    pub file_bytes: u64,
+}
+
+impl NodeSource for Shard {
+    fn feat_dim(&self) -> usize {
+        self.feat_dim
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn feature_row(&self, i: usize, _v: u32) -> &[f32] {
+        &self.features[i * self.feat_dim..(i + 1) * self.feat_dim]
+    }
+
+    fn label(&self, i: usize, _v: u32) -> u32 {
+        self.labels[i]
+    }
+
+    fn split(&self, i: usize, _v: u32) -> u8 {
+        self.split[i]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------------
+
+struct ShardWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> ShardWriter<W> {
+    fn u64(&mut self, x: u64) -> Result<()> {
+        self.w.write_all(&x.to_le_bytes())?;
+        Ok(())
+    }
+
+    fn u32s(&mut self, xs: &[u32]) -> Result<()> {
+        self.u64(xs.len() as u64)?;
+        for &x in xs {
+            self.w.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    fn pairs(&mut self, xs: &[(u32, u32)]) -> Result<()> {
+        self.u64(xs.len() as u64)?;
+        for &(a, b) in xs {
+            self.w.write_all(&a.to_le_bytes())?;
+            self.w.write_all(&b.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}
+
+/// Write one rank's shard file. Node data is pulled row by row through
+/// the store, so the working set stays bounded regardless of graph size.
+pub fn write_shard(
+    store: &GraphStore,
+    plan: &WorkerPlan,
+    k: usize,
+    strategy: RemoteStrategy,
+    seed: u64,
+    path: &Path,
+) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating shard file {path:?}"))?;
+    let mut w = ShardWriter { w: BufWriter::new(f) };
+
+    // ---- header ---------------------------------------------------------
+    w.w.write_all(MAGIC)?;
+    w.u64(VERSION)?;
+    w.u64(k as u64)?;
+    w.u64(plan.worker as u64)?;
+    w.u64(store.n() as u64)?;
+    w.u64(store.feat_dim() as u64)?;
+    w.u64(store.num_classes() as u64)?;
+    w.u64(strategy_code(strategy))?;
+    w.u64(seed)?;
+
+    // ---- halo plan ------------------------------------------------------
+    w.u32s(&plan.local_nodes)?;
+    w.pairs(&plan.local_edges)?;
+    w.u32s(&plan.degrees)?;
+    anyhow::ensure!(plan.sends.len() == k, "send plan count {} != k {k}", plan.sends.len());
+    anyhow::ensure!(plan.recvs.len() == k, "recv plan count {} != k {k}", plan.recvs.len());
+    for sp in &plan.sends {
+        w.u64(sp.peer as u64)?;
+        w.u32s(&sp.pre_gather)?;
+        w.u32s(&sp.pre_seg)?;
+        w.u64(sp.n_pre_segments as u64)?;
+        w.u32s(&sp.post_rows)?;
+    }
+    for rp in &plan.recvs {
+        w.u64(rp.peer as u64)?;
+        w.u32s(&rp.pre_dst)?;
+        w.u64(rp.n_post_rows as u64)?;
+        w.pairs(&rp.post_edges)?;
+    }
+
+    // ---- local node data, in local_nodes order --------------------------
+    for &v in &plan.local_nodes {
+        for &x in store.feature_row(v as usize) {
+            w.w.write_all(&x.to_le_bytes())?;
+        }
+    }
+    for &v in &plan.local_nodes {
+        w.w.write_all(&store.label(v as usize).to_le_bytes())?;
+    }
+    for &v in &plan.local_nodes {
+        w.w.write_all(&[store.split_of(v as usize)])?;
+    }
+    w.w.flush()
+        .with_context(|| format!("flushing shard file {path:?}"))?;
+    Ok(())
+}
+
+/// Per-rank summary returned by [`write_shards`], for the `prepare` CLI
+/// report and the `store.shard.bytes` gauge.
+#[derive(Clone, Debug)]
+pub struct ShardInfo {
+    pub rank: usize,
+    pub path: PathBuf,
+    pub n_local: usize,
+    pub bytes: u64,
+}
+
+/// The streaming `prepare` pipeline: block-partition the store, build +
+/// validate halo plans (the exact generic code the in-memory path runs),
+/// and write one self-contained shard per rank into `dir`. Deterministic:
+/// same `(graph bytes, k, strategy, seed)` ⇒ byte-identical shard files.
+pub fn write_shards(
+    store: &GraphStore,
+    k: usize,
+    strategy: RemoteStrategy,
+    seed: u64,
+    dir: &Path,
+) -> Result<Vec<ShardInfo>> {
+    anyhow::ensure!(k >= 1, "prepare needs at least 1 worker");
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating shard directory {dir:?}"))?;
+    let part = planner::block_partition(store, k);
+    let plans = crate::hier::plan::build_plans(store, &part, strategy);
+    crate::hier::plan::validate_plans(store, &part, &plans).context("plan validation")?;
+    let mut out = Vec::with_capacity(k);
+    for plan in &plans {
+        let path = shard_path(dir, plan.worker);
+        write_shard(store, plan, k, strategy, seed, &path)
+            .with_context(|| format!("writing shard for rank {}", plan.worker))?;
+        let bytes = std::fs::metadata(&path)
+            .with_context(|| format!("stat of shard file {path:?}"))?
+            .len();
+        out.push(ShardInfo {
+            rank: plan.worker,
+            path,
+            n_local: plan.n_local(),
+            bytes,
+        });
+    }
+    Ok(out)
+}
+
+/// The partition the shards in `dir` were cut with — reconstructed from
+/// the shard manifests (each shard lists its global node ids), so
+/// trainers that need the global assignment don't re-partition.
+pub fn partition_of(shards: &[Shard]) -> Result<Partition> {
+    anyhow::ensure!(!shards.is_empty(), "no shards to reconstruct a partition from");
+    let n = shards[0].n_global;
+    let k = shards[0].k;
+    let mut assign = vec![u32::MAX; n];
+    for sh in shards {
+        for &v in &sh.plan.local_nodes {
+            anyhow::ensure!(
+                (v as usize) < n,
+                "shard {}: node id {v} out of range for n_global {n}",
+                sh.rank
+            );
+            anyhow::ensure!(
+                assign[v as usize] == u32::MAX,
+                "node {v} claimed by two shards ({} and {})",
+                assign[v as usize],
+                sh.rank
+            );
+            assign[v as usize] = sh.rank as u32;
+        }
+    }
+    if let Some(v) = assign.iter().position(|&a| a == u32::MAX) {
+        anyhow::bail!("node {v} owned by no shard — incomplete shard set");
+    }
+    let part = Partition { k, assign };
+    part.validate(n)?;
+    Ok(part)
+}
+
+// ---------------------------------------------------------------------------
+// Reading
+// ---------------------------------------------------------------------------
+
+/// Checked little-endian reader: every failed read names what was being
+/// read (the `model::checkpoint` v2 Reader contract).
+struct Reader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> Reader<R> {
+    fn bytes8(&mut self, what: &str) -> Result<[u8; 8]> {
+        let mut b = [0u8; 8];
+        self.r
+            .read_exact(&mut b)
+            .with_context(|| format!("shard file truncated or unreadable while reading {what}"))?;
+        Ok(b)
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes8(what)?))
+    }
+
+    fn len(&mut self, what: &str, cap: usize) -> Result<usize> {
+        let l = self.u64(what)? as usize;
+        anyhow::ensure!(l <= cap, "{what} length {l} exceeds plausible bound {cap}");
+        Ok(l)
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.r
+            .read_exact(&mut b)
+            .with_context(|| format!("shard file truncated or unreadable while reading {what}"))?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u32s(&mut self, n: usize, what: &str) -> Result<Vec<u32>> {
+        let mut v = Vec::with_capacity(n);
+        let mut buf = [0u8; 4 * 1024];
+        let mut left = n;
+        while left > 0 {
+            let take = left.min(buf.len() / 4);
+            let b = &mut buf[..take * 4];
+            self.r
+                .read_exact(b)
+                .with_context(|| format!("shard file truncated or unreadable while reading {what}"))?;
+            for c in b.chunks_exact(4) {
+                v.push(u32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            left -= take;
+        }
+        Ok(v)
+    }
+
+    fn f32s(&mut self, n: usize, what: &str) -> Result<Vec<f32>> {
+        Ok(self.u32s(n, what)?.into_iter().map(f32::from_bits).collect())
+    }
+
+    fn pairs(&mut self, n: usize, what: &str) -> Result<Vec<(u32, u32)>> {
+        let flat = self.u32s(n * 2, what)?;
+        Ok(flat.chunks_exact(2).map(|c| (c[0], c[1])).collect())
+    }
+
+    fn u8s(&mut self, n: usize, what: &str) -> Result<Vec<u8>> {
+        let mut v = vec![0u8; n];
+        self.r
+            .read_exact(&mut v)
+            .with_context(|| format!("shard file truncated or unreadable while reading {what}"))?;
+        Ok(v)
+    }
+
+    fn expect_eof(&mut self) -> Result<()> {
+        let mut b = [0u8; 1];
+        match self.r.read(&mut b) {
+            Ok(0) => Ok(()),
+            Ok(_) => anyhow::bail!("shard file has trailing bytes past the declared payload"),
+            Err(e) => Err(e).context("checking shard file end"),
+        }
+    }
+}
+
+/// Load + validate one shard file. Wrapped in a `fetch` span so shard
+/// loading shows up in the trace next to the mini-batch fetch legs.
+pub fn load_shard(path: &Path) -> Result<Shard> {
+    let _sp = span(TraceCategory::Fetch, "shard load");
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening shard file {path:?}"))?;
+    let file_bytes = file
+        .metadata()
+        .with_context(|| format!("stat of shard file {path:?}"))?
+        .len();
+    let mut r = Reader { r: BufReader::new(file) };
+
+    // ---- header ---------------------------------------------------------
+    let magic = r.bytes8("magic")?;
+    anyhow::ensure!(&magic == MAGIC, "bad magic: not a supergcn shard file");
+    let version = r.u64("version")?;
+    anyhow::ensure!(
+        version == VERSION,
+        "unsupported shard format version {version} (this build reads v{VERSION})"
+    );
+    let k = r.u64("worker count")? as usize;
+    let rank = r.u64("rank")? as usize;
+    let n_global = r.u64("global node count")? as usize;
+    let feat_dim = r.u64("feature dim")? as usize;
+    let num_classes = r.u64("class count")? as usize;
+    let strategy = strategy_from_code(r.u64("remote strategy")?)?;
+    let seed = r.u64("partition seed")?;
+    anyhow::ensure!(k >= 1, "shard header declares zero workers");
+    anyhow::ensure!(rank < k, "shard rank {rank} out of range for k={k}");
+    anyhow::ensure!(feat_dim >= 1, "shard header declares zero feature dim");
+
+    // Length sanity bounds: nothing in a shard can exceed the whole file
+    // in elements, so corrupt headers fail fast instead of allocating.
+    let cap = (file_bytes as usize).max(1);
+
+    // ---- halo plan ------------------------------------------------------
+    let n_local = r.len("local node count", n_global.min(cap))?;
+    let local_nodes = r.u32s(n_local, "local node ids")?;
+    let n_edges = r.len("local edge count", cap)?;
+    let local_edges = r.pairs(n_edges, "local edges")?;
+    let n_deg = r.len("degree count", cap)?;
+    anyhow::ensure!(
+        n_deg == n_local,
+        "degree count {n_deg} != local node count {n_local}"
+    );
+    let degrees = r.u32s(n_deg, "degrees")?;
+
+    let mut sends = Vec::with_capacity(k);
+    for i in 0..k {
+        let peer = r.u64("send peer")? as usize;
+        anyhow::ensure!(peer == i, "send plan {i} names peer {peer} (file out of order)");
+        let ng = r.len("pre_gather length", cap)?;
+        let pre_gather = r.u32s(ng, "pre_gather")?;
+        let ns = r.len("pre_seg length", cap)?;
+        anyhow::ensure!(ns == ng, "pre_seg length {ns} != pre_gather length {ng}");
+        let pre_seg = r.u32s(ns, "pre_seg")?;
+        let n_pre_segments = r.u64("pre segment count")? as usize;
+        let np = r.len("post_rows length", cap)?;
+        let post_rows = r.u32s(np, "post_rows")?;
+        sends.push(SendPlan {
+            peer,
+            pre_gather,
+            pre_seg,
+            n_pre_segments,
+            post_rows,
+        });
+    }
+    let mut recvs = Vec::with_capacity(k);
+    for i in 0..k {
+        let peer = r.u64("recv peer")? as usize;
+        anyhow::ensure!(peer == i, "recv plan {i} names peer {peer} (file out of order)");
+        let nd = r.len("pre_dst length", cap)?;
+        let pre_dst = r.u32s(nd, "pre_dst")?;
+        let n_post_rows = r.u64("post row count")? as usize;
+        let ne = r.len("post edge count", cap)?;
+        let post_edges = r.pairs(ne, "post_edges")?;
+        recvs.push(RecvPlan {
+            peer,
+            pre_dst,
+            n_post_rows,
+            post_edges,
+        });
+    }
+    let plan = WorkerPlan {
+        worker: rank,
+        local_nodes,
+        local_edges,
+        degrees,
+        sends,
+        recvs,
+    };
+    plan.validate()
+        .with_context(|| format!("shard file {path:?} carries an invalid halo plan"))?;
+    for &v in &plan.local_nodes {
+        anyhow::ensure!(
+            (v as usize) < n_global,
+            "local node id {v} out of range for global node count {n_global}"
+        );
+    }
+
+    // ---- local node data ------------------------------------------------
+    let features = r.f32s(n_local * feat_dim, "features")?;
+    let labels = r.u32s(n_local, "labels")?;
+    let split = r.u8s(n_local, "split")?;
+    r.expect_eof()?;
+    if let Some(&l) = labels.iter().find(|&&l| l as usize >= num_classes.max(1)) {
+        anyhow::bail!("label {l} out of range for class count {num_classes}");
+    }
+    if let Some(&s) = split.iter().find(|&&s| s > 3) {
+        anyhow::bail!("split tag {s} is not a known split (0..=3)");
+    }
+
+    Ok(Shard {
+        k,
+        rank,
+        n_global,
+        feat_dim,
+        num_classes,
+        strategy,
+        seed,
+        plan,
+        features,
+        labels,
+        split,
+        file_bytes,
+    })
+}
+
+/// Load the full shard set of a prepared directory: `shard_00000` …
+/// `shard_{k-1}`, cross-checked for a consistent header (same k /
+/// n_global / dims / strategy / seed in every file).
+pub fn load_shards(dir: &Path) -> Result<Vec<Shard>> {
+    let first = load_shard(&shard_path(dir, 0))
+        .with_context(|| format!("loading shard set from {dir:?}"))?;
+    let k = first.k;
+    let mut shards = Vec::with_capacity(k);
+    shards.push(first);
+    for rank in 1..k {
+        let sh = load_shard(&shard_path(dir, rank))
+            .with_context(|| format!("loading shard set from {dir:?}"))?;
+        let a = &shards[0];
+        anyhow::ensure!(sh.rank == rank, "shard file for rank {rank} declares rank {}", sh.rank);
+        anyhow::ensure!(
+            sh.k == a.k
+                && sh.n_global == a.n_global
+                && sh.feat_dim == a.feat_dim
+                && sh.num_classes == a.num_classes
+                && sh.strategy == a.strategy
+                && sh.seed == a.seed,
+            "shard {rank} header disagrees with shard 0 (mixed prepare outputs in {dir:?}?)"
+        );
+        shards.push(sh);
+    }
+    Ok(shards)
+}
+
+/// Total on-disk bytes of a shard set (the `store.shard.bytes` gauge).
+pub fn total_bytes(shards: &[Shard]) -> u64 {
+    shards.iter().map(|s| s.file_bytes).sum()
+}
+
+/// Assemble padded worker contexts from a loaded shard set. Bit-identical
+/// to `prepare_store` on the same graph + partition: the plans are the
+/// same (written at prepare time), and `build_one` fills node data
+/// through the same [`NodeSource`] code path, just indexed locally.
+pub fn build_ctxs_from_shards(
+    shards: &[Shard],
+    hidden: usize,
+) -> Result<(Vec<WorkerCtx>, ShapeConfig)> {
+    anyhow::ensure!(!shards.is_empty(), "no shards to build contexts from");
+    let plans: Vec<WorkerPlan> = shards.iter().map(|s| s.plan.clone()).collect();
+    let cfg = planner::fit_config(
+        "fit",
+        shards[0].feat_dim,
+        hidden,
+        shards[0].num_classes,
+        &plans,
+    );
+    let ctxs = shards
+        .iter()
+        .map(|sh| planner::build_one(sh, &sh.plan, &cfg))
+        .collect::<Result<Vec<_>>>()?;
+    Ok((ctxs, cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::sbm;
+
+    fn tmp(name: &str) -> PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("supergcn_shard_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    fn small_store() -> GraphStore {
+        GraphStore::from(sbm(400, 4, 7.0, 0.8, 12, 0.5, 21))
+    }
+
+    #[test]
+    fn shard_roundtrip_preserves_plan_and_node_data() {
+        let store = small_store();
+        let dir = tmp("rt");
+        let infos = write_shards(&store, 3, RemoteStrategy::Hybrid, 42, &dir).unwrap();
+        assert_eq!(infos.len(), 3);
+        let shards = load_shards(&dir).unwrap();
+        let part = planner::block_partition(&store, 3);
+        let plans = crate::hier::plan::build_plans(&store, &part, RemoteStrategy::Hybrid);
+        for (sh, plan) in shards.iter().zip(plans.iter()) {
+            assert_eq!(sh.plan.local_nodes, plan.local_nodes);
+            assert_eq!(sh.plan.local_edges, plan.local_edges);
+            assert_eq!(sh.plan.degrees, plan.degrees);
+            for (a, b) in sh.plan.sends.iter().zip(plan.sends.iter()) {
+                assert_eq!(a.pre_gather, b.pre_gather);
+                assert_eq!(a.pre_seg, b.pre_seg);
+                assert_eq!(a.n_pre_segments, b.n_pre_segments);
+                assert_eq!(a.post_rows, b.post_rows);
+            }
+            for (a, b) in sh.plan.recvs.iter().zip(plan.recvs.iter()) {
+                assert_eq!(a.pre_dst, b.pre_dst);
+                assert_eq!(a.n_post_rows, b.n_post_rows);
+                assert_eq!(a.post_edges, b.post_edges);
+            }
+            for (i, &v) in sh.plan.local_nodes.iter().enumerate() {
+                assert_eq!(NodeSource::feature_row(sh, i, v), store.feature_row(v as usize));
+                assert_eq!(NodeSource::label(sh, i, v), store.label(v as usize));
+                assert_eq!(NodeSource::split(sh, i, v), store.split_of(v as usize));
+            }
+        }
+        let rebuilt = partition_of(&shards).unwrap();
+        assert_eq!(rebuilt.assign, part.assign);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_ctxs_match_prepare_store_bitwise() {
+        let store = small_store();
+        let dir = tmp("ctx");
+        write_shards(&store, 3, RemoteStrategy::Hybrid, 42, &dir).unwrap();
+        let shards = load_shards(&dir).unwrap();
+        let (ctxs_s, cfg_s) = build_ctxs_from_shards(&shards, 64).unwrap();
+        let part = planner::block_partition(&store, 3);
+        let (ctxs_m, cfg_m, _) =
+            planner::prepare_store(&store, &part, RemoteStrategy::Hybrid, None, 64).unwrap();
+        assert_eq!(cfg_s.n_pad, cfg_m.n_pad);
+        assert_eq!(cfg_s.e_local, cfg_m.e_local);
+        for (a, b) in ctxs_s.iter().zip(ctxs_m.iter()) {
+            assert_eq!(a.features, b.features);
+            assert_eq!(a.labels, b.labels);
+            assert_eq!(a.train_mask_f, b.train_mask_f);
+            assert_eq!(a.val_mask, b.val_mask);
+            assert_eq!(a.spec.local.gather, b.spec.local.gather);
+            assert_eq!(a.spec.deg_inv, b.spec.deg_inv);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shards_are_deterministic_byte_identical() {
+        let store = small_store();
+        let (d1, d2) = (tmp("det1"), tmp("det2"));
+        write_shards(&store, 4, RemoteStrategy::Hybrid, 7, &d1).unwrap();
+        write_shards(&store, 4, RemoteStrategy::Hybrid, 7, &d2).unwrap();
+        for rank in 0..4 {
+            let a = std::fs::read(shard_path(&d1, rank)).unwrap();
+            let b = std::fs::read(shard_path(&d2, rank)).unwrap();
+            assert_eq!(a, b, "shard {rank} not byte-identical across runs");
+            assert_eq!(&a[..8], MAGIC);
+        }
+        std::fs::remove_dir_all(&d1).ok();
+        std::fs::remove_dir_all(&d2).ok();
+    }
+
+    #[test]
+    fn truncated_shard_names_the_field() {
+        let store = small_store();
+        let dir = tmp("trunc");
+        write_shards(&store, 2, RemoteStrategy::Hybrid, 1, &dir).unwrap();
+        let p = shard_path(&dir, 0);
+        let full = std::fs::read(&p).unwrap();
+        for (cut, field) in [
+            (4usize, "magic"),
+            (12, "version"),
+            (40, "feature dim"),
+            (80, "local node ids"),
+        ] {
+            std::fs::write(&p, &full[..cut]).unwrap();
+            let err = load_shard(&p).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("truncated") && msg.contains(field),
+                "cut {cut}: expected field {field} in {msg}"
+            );
+        }
+        // Trailing garbage rejected.
+        let mut bytes = full.clone();
+        bytes.push(0x5A);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = load_shard(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("trailing bytes"), "{err:#}");
+        // Bad magic rejected.
+        let mut bad = full.clone();
+        bad[..8].copy_from_slice(b"NOTSHARD");
+        std::fs::write(&p, &bad).unwrap();
+        let err = load_shard(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("not a supergcn shard"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mixed_shard_sets_rejected() {
+        let store = small_store();
+        let dir = tmp("mixed");
+        write_shards(&store, 2, RemoteStrategy::Hybrid, 1, &dir).unwrap();
+        // Overwrite rank 1 with a different-seed prepare: header disagrees.
+        let other = tmp("mixed_other");
+        write_shards(&store, 2, RemoteStrategy::Hybrid, 99, &other).unwrap();
+        std::fs::copy(shard_path(&other, 1), shard_path(&dir, 1)).unwrap();
+        let err = load_shards(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("disagrees"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&other).ok();
+    }
+}

@@ -207,6 +207,10 @@ pub struct Trainer {
     pub elastic: Option<ElasticCtx>,
     /// Rank losses absorbed so far this run.
     recovered: usize,
+    /// Total bytes of the per-rank shard files these contexts came from
+    /// (0 when built in memory; set by the `--graph-dir` path so the
+    /// per-epoch metrics carry `store.shard.bytes` — DESIGN.md §17).
+    pub store_shard_bytes: u64,
 }
 
 impl Trainer {
@@ -244,6 +248,7 @@ impl Trainer {
             chaos: None,
             elastic: None,
             recovered: 0,
+            store_shard_bytes: 0,
         }
     }
 
@@ -499,6 +504,15 @@ impl Trainer {
                 m.counter_add("comm.tier_intra.msgs", epoch_comm.tiers.total_intra_msgs() as f64);
                 m.counter_add("comm.tier_inter.msgs", epoch_comm.tiers.total_inter_msgs() as f64);
                 m.counter_add("comm.two_tier.secs", epoch_comm.tiers.modeled_two_tier_secs());
+            }
+            // Out-of-core storage telemetry (DESIGN.md §17): shard bytes
+            // are nonzero only when the contexts came from `supergcn
+            // prepare` files; peak RSS is process-wide (absent off-Linux).
+            if self.store_shard_bytes > 0 {
+                m.gauge_set("store.shard.bytes", self.store_shard_bytes as f64);
+            }
+            if let Some(rss) = crate::graph::store::peak_rss_bytes() {
+                m.gauge_set("store.peak_rss.bytes", rss as f64);
             }
             // Measured interior/comm/boundary per exchange, next to the
             // §11 model of both schedules on the same inputs.

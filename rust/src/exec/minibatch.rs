@@ -18,7 +18,7 @@ use super::{GraphContext, OverlapLedger};
 use crate::agg::spmm::CsrMatrix;
 use crate::comm::transport::Fabric;
 use crate::comm::{alltoallv_routed, CommStats, Payload, Topology};
-use crate::graph::generate::LabelledGraph;
+use crate::graph::store::GraphStore;
 use crate::obs::{self, TraceCategory};
 use crate::perfmodel::MachineProfile;
 use crate::quant::{Bits, GROUP_ROWS};
@@ -40,7 +40,7 @@ const FETCH_REPLY_STAGE: &str = "fetch reply";
 /// One round's view: worker lane `w` processes `batches[per_lane[w]]`
 /// (idle lanes — `None` — run zero-row no-ops through the engine).
 pub struct MiniBatchCtx<'a> {
-    lg: &'a LabelledGraph,
+    store: &'a GraphStore,
     /// Partition ownership of global feature rows.
     assign: &'a [u32],
     batches: &'a [MiniBatch],
@@ -70,7 +70,7 @@ pub struct MiniBatchCtx<'a> {
 impl<'a> MiniBatchCtx<'a> {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
-        lg: &'a LabelledGraph,
+        store: &'a GraphStore,
         assign: &'a [u32],
         batches: &'a [MiniBatch],
         per_lane: &'a [Option<usize>],
@@ -88,7 +88,7 @@ impl<'a> MiniBatchCtx<'a> {
             .collect();
         let lanes = per_lane.len();
         Self {
-            lg,
+            store,
             assign,
             batches,
             per_lane,
@@ -199,7 +199,7 @@ impl<'a> MiniBatchCtx<'a> {
                     if !ids.is_empty() {
                         let pool = self.scratch.as_deref_mut().map(|s| &mut s[o].pool);
                         reply_sends[o][w] = reply_payload(
-                            self.lg,
+                            self.store,
                             ids,
                             self.quant,
                             self.seed,
@@ -254,7 +254,7 @@ impl GraphContext for MiniBatchCtx<'_> {
     ) -> Result<()> {
         let _sp = obs::span(TraceCategory::Fetch, "fetch batch rows");
         let k = self.per_lane.len();
-        let f = self.lg.feat_dim;
+        let f = self.store.feat_dim();
         // ---- id requests (cache hits are filled into x here and never
         // reach the wire) ---------------------------------------------
         let (req_sends, from_cache) = self.build_requests(f, x);
@@ -277,7 +277,7 @@ impl GraphContext for MiniBatchCtx<'_> {
                     _ => None,
                 };
                 assemble_x(
-                    self.lg,
+                    self.store,
                     self.assign,
                     mb,
                     w,
@@ -303,7 +303,7 @@ impl GraphContext for MiniBatchCtx<'_> {
         for w in 0..k {
             if let Some(bi) = self.per_lane[w] {
                 let t = Instant::now();
-                assemble_local(self.lg, self.assign, &self.batches[bi], w, f, &mut x[w]);
+                assemble_local(self.store, self.assign, &self.batches[bi], w, f, &mut x[w]);
                 interior_secs[w] = t.elapsed().as_secs_f64();
                 secs[w] += interior_secs[w];
             }
@@ -515,7 +515,7 @@ fn ids_payload(ids: &[u32], pool: Option<&mut PayloadPool>) -> Payload {
 /// assembly), under quantization it recycles right after the pack.
 #[allow(clippy::too_many_arguments)]
 fn reply_payload(
-    lg: &LabelledGraph,
+    store: &GraphStore,
     ids: &[f32],
     quant: Option<Bits>,
     seed: u64,
@@ -527,14 +527,14 @@ fn reply_payload(
     quant_secs: &mut f64,
     mut pool: Option<&mut PayloadPool>,
 ) -> Payload {
-    let f = lg.feat_dim;
+    let f = store.feat_dim();
     let rows = ids.len();
     let mut buf = match pool.as_deref_mut() {
         Some(p) => p.grab(),
         None => Vec::with_capacity(rows * f),
     };
     for &idf in ids {
-        buf.extend_from_slice(lg.feature_row(idf as usize));
+        buf.extend_from_slice(store.feature_row(idf as usize));
     }
     match quant {
         Some(bits) => {
@@ -582,7 +582,7 @@ fn decode_replies(
 /// half — needs no remote data, so the overlap schedule runs it while the
 /// id exchange is outstanding).
 fn assemble_local(
-    lg: &LabelledGraph,
+    store: &GraphStore,
     assign: &[u32],
     mb: &MiniBatch,
     w: usize,
@@ -591,7 +591,7 @@ fn assemble_local(
 ) {
     for (i, &v) in mb.n_id.iter().enumerate() {
         if assign[v as usize] as usize == w {
-            x[i * f..(i + 1) * f].copy_from_slice(lg.feature_row(v as usize));
+            x[i * f..(i + 1) * f].copy_from_slice(store.feature_row(v as usize));
         }
     }
 }
@@ -645,7 +645,7 @@ fn assemble_remote(
 /// cache), so local-then-remote produces the identical matrix.
 #[allow(clippy::too_many_arguments)]
 fn assemble_x(
-    lg: &LabelledGraph,
+    store: &GraphStore,
     assign: &[u32],
     mb: &MiniBatch,
     w: usize,
@@ -655,7 +655,7 @@ fn assemble_x(
     from_cache: &[bool],
     cache: Option<&mut FeatCache>,
 ) -> Result<()> {
-    assemble_local(lg, assign, mb, w, f, x);
+    assemble_local(store, assign, mb, w, f, x);
     assemble_remote(assign, mb, w, decoded, f, x, from_cache, cache)
 }
 
@@ -671,12 +671,12 @@ fn recycle_decoded(decoded: Vec<Option<Vec<f32>>>, pool: &mut PayloadPool) {
 /// Single-rank mini-batch context for the threaded transport: lane
 /// `rank`'s batch only (or `None` for an idle lane — it still serves
 /// feature rows it owns and participates in every collective). All
-/// mutable state is the rank's own; shared inputs (`LabelledGraph`,
+/// mutable state is the rank's own; shared inputs ([`GraphStore`],
 /// ownership assignment) are `&` — the Send/Sync contract of
 /// DESIGN.md §10.
 pub struct MiniBatchRankCtx<'a> {
     rank: usize,
-    lg: &'a LabelledGraph,
+    store: &'a GraphStore,
     assign: &'a [u32],
     batch: Option<&'a MiniBatch>,
     machine: &'a MachineProfile,
@@ -701,7 +701,7 @@ impl<'a> MiniBatchRankCtx<'a> {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         rank: usize,
-        lg: &'a LabelledGraph,
+        store: &'a GraphStore,
         assign: &'a [u32],
         batch: Option<&'a MiniBatch>,
         machine: &'a MachineProfile,
@@ -716,7 +716,7 @@ impl<'a> MiniBatchRankCtx<'a> {
         let mat = batch.map(induced_csr);
         Self {
             rank,
-            lg,
+            store,
             assign,
             batch,
             machine,
@@ -795,7 +795,7 @@ impl<'a> MiniBatchRankCtx<'a> {
                 if !ids.is_empty() {
                     let pool = self.scratch.as_deref_mut().map(|sc| &mut sc.pool);
                     reply_sends[w] = reply_payload(
-                        self.lg,
+                        self.store,
                         ids,
                         self.quant,
                         self.seed,
@@ -840,7 +840,7 @@ impl GraphContext for MiniBatchRankCtx<'_> {
         quant_secs: &mut [f64],
     ) -> Result<()> {
         let _sp = obs::span(TraceCategory::Fetch, "fetch batch rows");
-        let f = self.lg.feat_dim;
+        let f = self.store.feat_dim();
         if !self.overlap {
             // Blocking schedule: request → serve → reply → assemble.
             let (req_sends, from_cache) = self.request_row(f, &mut x[0]);
@@ -857,7 +857,7 @@ impl GraphContext for MiniBatchRankCtx<'_> {
                     _ => None,
                 };
                 assemble_x(
-                    self.lg,
+                    self.store,
                     self.assign,
                     mb,
                     self.rank,
@@ -885,7 +885,7 @@ impl GraphContext for MiniBatchRankCtx<'_> {
         let mut interior = 0f64;
         if let Some(mb) = self.batch {
             let t = Instant::now();
-            assemble_local(self.lg, self.assign, mb, self.rank, f, &mut x[0]);
+            assemble_local(self.store, self.assign, mb, self.rank, f, &mut x[0]);
             interior = t.elapsed().as_secs_f64();
             secs[0] += interior;
         }
@@ -1014,6 +1014,7 @@ mod tests {
     #[test]
     fn engine_backward_matches_finite_differences() {
         let lg = Arc::new(sbm(60, 3, 6.0, 0.9, 6, 0.3, 3));
+        let store = GraphStore::from(lg.clone());
         let mut sampler = FullSampler::new(lg.clone());
         let batches = vec![sampler.sample(0, 0)];
         let per_lane = vec![Some(0usize)];
@@ -1036,7 +1037,7 @@ mod tests {
         let run = |p: &ModelParams, want_grads: bool| -> (f64, Vec<f32>) {
             let mut comm = CommStats::new(1);
             let mut ctx = MiniBatchCtx::new(
-                &lg, &assign, &batches, &per_lane, &machine, None, 5, 0, 0, false, &mut comm,
+                &store, &assign, &batches, &per_lane, &machine, None, 5, 0, 0, false, &mut comm,
             );
             let mut tapes = engine.tapes(&rows, p);
             let mut clock = StageClock::new(1);
@@ -1086,6 +1087,7 @@ mod tests {
     #[test]
     fn idle_lanes_are_noops() {
         let lg = Arc::new(sbm(80, 3, 5.0, 0.9, 6, 0.3, 9));
+        let store = GraphStore::from(lg.clone());
         let mut sampler = FullSampler::new(lg.clone());
         let batches = vec![sampler.sample(0, 0)];
         // Lane 1 idle.
@@ -1098,7 +1100,7 @@ mod tests {
         let rows = vec![batches[0].n(), 0];
         let mut comm = CommStats::new(2);
         let mut ctx = MiniBatchCtx::new(
-            &lg, &assign, &batches, &per_lane, &machine, None, 1, 0, 0, false, &mut comm,
+            &store, &assign, &batches, &per_lane, &machine, None, 1, 0, 0, false, &mut comm,
         );
         let mut tapes = engine.tapes(&rows, &params);
         let mut clock = StageClock::new(2);

@@ -1,28 +1,39 @@
 //! Graph IO: text edge lists (interoperability) and a compact binary CSR
 //! format (fast reload of generated datasets between bench runs).
+//!
+//! Both loaders are hardened to the `model::checkpoint` v2 Reader
+//! contract: truncated, corrupt, or shape-inconsistent inputs return a
+//! descriptive `Err` naming the offending field — never a panic, never a
+//! bare "failed to fill whole buffer" — and every loaded graph passes
+//! [`CsrGraph::validate`] before it is handed to callers.
 
 use super::CsrGraph;
+use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 /// Write `src dst` lines (CSR order). Lines starting with `#` or `%` are
 /// comments on read.
-pub fn write_edge_list(g: &CsrGraph, path: &Path) -> anyhow::Result<()> {
+pub fn write_edge_list(g: &CsrGraph, path: &Path) -> Result<()> {
     let mut w = BufWriter::new(std::fs::File::create(path)?);
     writeln!(w, "# supergcn edge list: n={} m={}", g.n, g.m())?;
-    for (s, d) in g.edges() {
+    // Lazy edge scan: no O(m) edge-list materialization on write.
+    for (s, d) in g.edges_iter() {
         writeln!(w, "{s} {d}")?;
     }
     Ok(())
 }
 
-/// Read an edge list; `n` is inferred as max id + 1 unless given.
-pub fn read_edge_list(path: &Path, n: Option<usize>) -> anyhow::Result<CsrGraph> {
-    let r = BufReader::new(std::fs::File::open(path)?);
+/// Read an edge list; `n` is inferred as max id + 1 unless given. Every
+/// malformed line errors with its line number and the offending field.
+pub fn read_edge_list(path: &Path, n: Option<usize>) -> Result<CsrGraph> {
+    let r = BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("opening edge list {path:?}"))?,
+    );
     let mut edges = Vec::new();
     let mut max_id = 0u32;
     for (lineno, line) in r.lines().enumerate() {
-        let line = line?;
+        let line = line.with_context(|| format!("edge list {path:?} unreadable at line {}", lineno + 1))?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
             continue;
@@ -31,22 +42,67 @@ pub fn read_edge_list(path: &Path, n: Option<usize>) -> anyhow::Result<CsrGraph>
         let s: u32 = it
             .next()
             .ok_or_else(|| anyhow::anyhow!("line {}: missing src", lineno + 1))?
-            .parse()?;
+            .parse()
+            .with_context(|| format!("line {}: src is not a node id", lineno + 1))?;
         let d: u32 = it
             .next()
             .ok_or_else(|| anyhow::anyhow!("line {}: missing dst", lineno + 1))?
-            .parse()?;
+            .parse()
+            .with_context(|| format!("line {}: dst is not a node id", lineno + 1))?;
         max_id = max_id.max(s).max(d);
         edges.push((s, d));
     }
     let n = n.unwrap_or(if edges.is_empty() { 0 } else { max_id as usize + 1 });
-    Ok(CsrGraph::from_edges(n, &edges))
+    if let Some((s, d)) = edges.iter().find(|&&(s, d)| s as usize >= n || d as usize >= n) {
+        anyhow::bail!("edge ({s}, {d}) out of range for declared n={n}");
+    }
+    let g = CsrGraph::from_edges(n, &edges);
+    g.validate()
+        .with_context(|| format!("edge list {path:?} built an invalid graph"))?;
+    Ok(g)
 }
 
 const MAGIC: &[u8; 8] = b"SGCNCSR1";
 
+/// Checked little-endian reader: every failed read names what was being
+/// read (the `model::checkpoint` v2 Reader contract).
+struct Reader<R: Read> {
+    r: R,
+}
+
+impl<R: Read> Reader<R> {
+    fn bytes8(&mut self, what: &str) -> Result<[u8; 8]> {
+        let mut b = [0u8; 8];
+        self.r
+            .read_exact(&mut b)
+            .with_context(|| format!("graph file truncated or unreadable while reading {what}"))?;
+        Ok(b)
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes8(what)?))
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.r
+            .read_exact(&mut b)
+            .with_context(|| format!("graph file truncated or unreadable while reading {what}"))?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn expect_eof(&mut self) -> Result<()> {
+        let mut b = [0u8; 1];
+        match self.r.read(&mut b) {
+            Ok(0) => Ok(()),
+            Ok(_) => anyhow::bail!("graph file has trailing bytes past the declared payload"),
+            Err(e) => Err(e).context("checking graph file end"),
+        }
+    }
+}
+
 /// Compact binary CSR dump.
-pub fn write_binary(g: &CsrGraph, path: &Path) -> anyhow::Result<()> {
+pub fn write_binary(g: &CsrGraph, path: &Path) -> Result<()> {
     let mut w = BufWriter::new(std::fs::File::create(path)?);
     w.write_all(MAGIC)?;
     w.write_all(&(g.n as u64).to_le_bytes())?;
@@ -60,29 +116,28 @@ pub fn write_binary(g: &CsrGraph, path: &Path) -> anyhow::Result<()> {
     Ok(())
 }
 
-pub fn read_binary(path: &Path) -> anyhow::Result<CsrGraph> {
-    let mut r = BufReader::new(std::fs::File::open(path)?);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
+pub fn read_binary(path: &Path) -> Result<CsrGraph> {
+    let mut r = Reader {
+        r: BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening graph file {path:?}"))?,
+        ),
+    };
+    let magic = r.bytes8("magic")?;
     anyhow::ensure!(&magic == MAGIC, "bad magic: not a supergcn CSR file");
-    let mut b8 = [0u8; 8];
-    r.read_exact(&mut b8)?;
-    let n = u64::from_le_bytes(b8) as usize;
-    r.read_exact(&mut b8)?;
-    let m = u64::from_le_bytes(b8) as usize;
+    let n = r.u64("node count")? as usize;
+    let m = r.u64("edge count")? as usize;
     let mut row_ptr = Vec::with_capacity(n + 1);
     for _ in 0..=n {
-        r.read_exact(&mut b8)?;
-        row_ptr.push(u64::from_le_bytes(b8) as usize);
+        row_ptr.push(r.u64("row_ptr")? as usize);
     }
     let mut col_idx = Vec::with_capacity(m);
-    let mut b4 = [0u8; 4];
     for _ in 0..m {
-        r.read_exact(&mut b4)?;
-        col_idx.push(u32::from_le_bytes(b4));
+        col_idx.push(r.u32("col_idx")?);
     }
+    r.expect_eof()?;
     let g = CsrGraph { n, row_ptr, col_idx };
-    g.validate()?;
+    g.validate()
+        .with_context(|| format!("graph file {path:?} fails CSR validation"))?;
     Ok(g)
 }
 
@@ -118,6 +173,28 @@ mod tests {
     }
 
     #[test]
+    fn edge_list_names_the_bad_field() {
+        let p = tmp("el_bad.txt");
+        std::fs::write(&p, "0 1\n2 frog\n").unwrap();
+        let err = read_edge_list(&p, None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2") && msg.contains("dst"), "{msg}");
+        std::fs::write(&p, "0\n").unwrap();
+        let err = read_edge_list(&p, None).unwrap_err();
+        assert!(format!("{err:#}").contains("missing dst"), "{err:#}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn edge_list_rejects_out_of_range_ids() {
+        let p = tmp("el_oor.txt");
+        std::fs::write(&p, "0 1\n5 1\n").unwrap();
+        let err = read_edge_list(&p, Some(3)).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
     fn binary_roundtrip() {
         let g = erdos_renyi(100, 700, 2);
         let p = tmp("g.bin");
@@ -131,7 +208,61 @@ mod tests {
     fn binary_rejects_garbage() {
         let p = tmp("bad.bin");
         std::fs::write(&p, b"NOTMAGIC........").unwrap();
-        assert!(read_binary(&p).is_err());
+        let err = read_binary(&p).unwrap_err();
+        assert!(err.to_string().contains("not a supergcn CSR file"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_truncation_names_the_field() {
+        let g = erdos_renyi(30, 120, 3);
+        let p = tmp("trunc.bin");
+        write_binary(&g, &p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        // Cuts landing in the header, row_ptr, and col_idx sections.
+        for (cut, field) in [
+            (4usize, "magic"),
+            (12, "node count"),
+            (20, "edge count"),
+            (24 + 8 * 10, "row_ptr"),
+            (24 + 8 * 31 + 4 * 5, "col_idx"),
+        ] {
+            std::fs::write(&p, &full[..cut]).unwrap();
+            let err = read_binary(&p).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("truncated") && msg.contains(field),
+                "cut {cut}: expected field {field} in {msg}"
+            );
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_trailing_garbage_rejected() {
+        let g = erdos_renyi(10, 30, 4);
+        let p = tmp("trail.bin");
+        write_binary(&g, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes.push(0x5A);
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_binary(&p).unwrap_err();
+        assert!(err.to_string().contains("trailing bytes"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn binary_shape_inconsistency_rejected() {
+        let g = erdos_renyi(10, 30, 5);
+        let p = tmp("shape.bin");
+        write_binary(&g, &p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Corrupt row_ptr[1] to a value past m: validation must name it.
+        let off = 8 + 8 + 8 + 8; // magic, n, m, row_ptr[0]
+        bytes[off..off + 8].copy_from_slice(&(10_000u64).to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = read_binary(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("CSR validation"), "{err:#}");
         std::fs::remove_file(&p).ok();
     }
 }

@@ -7,6 +7,36 @@
 pub mod generate;
 pub mod io;
 pub mod stats;
+pub mod store;
+pub mod synth;
+
+/// Read-only topology access — the trait `hier::remote_pairs`,
+/// `hier::plan`, and the streaming partitioner are generic over, so the
+/// identical planning code runs against the in-memory [`CsrGraph`] and
+/// the mmap-backed [`store::GraphStore`] and produces identical plans by
+/// construction (the bit-exactness contract of DESIGN.md §17).
+pub trait GraphTopo {
+    /// Node count.
+    fn num_nodes(&self) -> usize;
+    /// In-degree of `v`.
+    fn in_degree(&self, v: usize) -> usize;
+    /// In-neighbors (sources) of `v`, sorted ascending.
+    fn in_neighbors(&self, v: usize) -> &[u32];
+}
+
+impl GraphTopo for CsrGraph {
+    fn num_nodes(&self) -> usize {
+        self.n
+    }
+
+    fn in_degree(&self, v: usize) -> usize {
+        CsrGraph::in_degree(self, v)
+    }
+
+    fn in_neighbors(&self, v: usize) -> &[u32] {
+        CsrGraph::in_neighbors(self, v)
+    }
+}
 
 /// Compressed-sparse-row graph: for each node `v`, `row_ptr[v]..row_ptr[v+1]`
 /// indexes `col_idx` with the **in-neighbors** of `v` (aggregation pulls
@@ -64,30 +94,49 @@ impl CsrGraph {
         &self.col_idx[self.row_ptr[v]..self.row_ptr[v + 1]]
     }
 
-    /// Out-degrees (computed; not stored).
-    pub fn out_degrees(&self) -> Vec<usize> {
-        let mut deg = vec![0usize; self.n];
+    /// Accumulate out-degree counts into `deg` (callers own the buffer, so
+    /// chunked scans can fold many graphs/slices without reallocating).
+    pub fn out_degrees_into(&self, deg: &mut [usize]) {
+        assert!(deg.len() >= self.n, "out-degree buffer too small");
         for &s in &self.col_idx {
             deg[s as usize] += 1;
         }
+    }
+
+    /// Out-degrees (computed; not stored).
+    pub fn out_degrees(&self) -> Vec<usize> {
+        let mut deg = vec![0usize; self.n];
+        self.out_degrees_into(&mut deg);
         deg
+    }
+
+    /// Lazy arc iterator `(src, dst)` in CSR order — no `Vec<(u32, u32)>`
+    /// materialization, so edge scans stay O(1) memory on large graphs.
+    pub fn edges_iter(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.rows(0..self.n).edges()
     }
 
     /// Flat arc list `(src, dst)` in CSR order.
     pub fn edges(&self) -> Vec<(u32, u32)> {
-        let mut out = Vec::with_capacity(self.m());
-        for v in 0..self.n {
-            for &s in self.in_neighbors(v) {
-                out.push((s, v as u32));
-            }
+        self.edges_iter().collect()
+    }
+
+    /// Borrow the CSR rows of `range` as a [`CsrRows`] view: the chunked
+    /// access primitive the streaming partitioner and `graph::stats` scan
+    /// with instead of materializing edge lists.
+    pub fn rows(&self, range: std::ops::Range<usize>) -> CsrRows<'_> {
+        assert!(range.end <= self.n, "row range past n");
+        CsrRows {
+            start: range.start,
+            row_ptr: &self.row_ptr[range.start..range.end + 1],
+            col_idx: &self.col_idx,
         }
-        out
     }
 
     /// The reverse graph (CSR over out-neighbors): needed by the backward
     /// pass, where cotangents flow dst → src.
     pub fn transpose(&self) -> CsrGraph {
-        let rev: Vec<(u32, u32)> = self.edges().iter().map(|&(s, d)| (d, s)).collect();
+        let rev: Vec<(u32, u32)> = self.edges_iter().map(|(s, d)| (d, s)).collect();
         CsrGraph::from_edges(self.n, &rev)
     }
 
@@ -126,18 +175,84 @@ impl CsrGraph {
         CsrGraph::from_edges(nodes.len(), &edges)
     }
 
-    /// Validate structural invariants (used by property tests).
+    /// Validate structural invariants — monotone `row_ptr` bracketing
+    /// exactly `col_idx`, in-range sources, and sorted rows (every builder
+    /// and every loader in `graph::io` / `graph::store` runs this, so a
+    /// corrupt file can never reach the aggregation kernels).
     pub fn validate(&self) -> anyhow::Result<()> {
-        anyhow::ensure!(self.row_ptr.len() == self.n + 1, "row_ptr length");
-        anyhow::ensure!(self.row_ptr[0] == 0, "row_ptr[0]");
-        anyhow::ensure!(*self.row_ptr.last().unwrap() == self.col_idx.len(), "row_ptr[-1]");
+        anyhow::ensure!(
+            self.row_ptr.len() == self.n + 1,
+            "row_ptr length {} != n+1 ({})",
+            self.row_ptr.len(),
+            self.n + 1
+        );
+        anyhow::ensure!(self.row_ptr[0] == 0, "row_ptr[0] = {} != 0", self.row_ptr[0]);
+        anyhow::ensure!(
+            *self.row_ptr.last().unwrap() == self.col_idx.len(),
+            "row_ptr[-1] = {} != edge count {}",
+            self.row_ptr.last().unwrap(),
+            self.col_idx.len()
+        );
         for v in 0..self.n {
             anyhow::ensure!(self.row_ptr[v] <= self.row_ptr[v + 1], "row_ptr monotone at {v}");
+        }
+        for v in 0..self.n {
+            let row = self.in_neighbors(v);
+            for w in row.windows(2) {
+                anyhow::ensure!(w[0] <= w[1], "row {v} not sorted ({} after {})", w[1], w[0]);
+            }
         }
         for &s in &self.col_idx {
             anyhow::ensure!((s as usize) < self.n, "col_idx {s} out of range (n={})", self.n);
         }
         Ok(())
+    }
+}
+
+/// A borrowed view of a contiguous CSR row range (`GraphStore::rows` and
+/// `CsrGraph::rows` both hand these out): chunked scans iterate row
+/// ranges instead of materializing `edges()`.
+#[derive(Clone, Copy)]
+pub struct CsrRows<'a> {
+    /// Global id of the first row in the view.
+    pub start: usize,
+    /// `len+1` offsets into the *global* `col_idx` (not rebased).
+    pub row_ptr: &'a [usize],
+    /// The full column array the offsets index.
+    pub col_idx: &'a [u32],
+}
+
+impl<'a> CsrRows<'a> {
+    /// Rows in the view.
+    pub fn len(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// In-neighbors of the `i`-th row of the view (global id `start + i`).
+    #[inline]
+    pub fn in_neighbors(&self, i: usize) -> &'a [u32] {
+        &self.col_idx[self.row_ptr[i]..self.row_ptr[i + 1]]
+    }
+
+    /// In-degree of the `i`-th row of the view.
+    #[inline]
+    pub fn in_degree(&self, i: usize) -> usize {
+        self.row_ptr[i + 1] - self.row_ptr[i]
+    }
+
+    /// Lazy `(src, dst)` arcs of the view, dst ascending — the chunked
+    /// replacement for `CsrGraph::edges()`.
+    pub fn edges(self) -> impl Iterator<Item = (u32, u32)> + 'a {
+        let start = self.start;
+        (0..self.len()).flat_map(move |i| {
+            self.in_neighbors(i)
+                .iter()
+                .map(move |&s| (s, (start + i) as u32))
+        })
     }
 }
 
@@ -176,6 +291,47 @@ mod tests {
         let od = g.out_degrees();
         assert_eq!(od, vec![2, 1, 2]);
         assert_eq!(od.iter().sum::<usize>(), g.m());
+        // The chunk-friendly accumulator folds into a caller buffer.
+        let mut acc = vec![0usize; 3];
+        g.out_degrees_into(&mut acc);
+        g.out_degrees_into(&mut acc);
+        assert_eq!(acc, vec![4, 2, 4]);
+    }
+
+    #[test]
+    fn edges_iter_matches_materialized_edges() {
+        let g = toy();
+        let lazy: Vec<(u32, u32)> = g.edges_iter().collect();
+        assert_eq!(lazy, g.edges());
+    }
+
+    #[test]
+    fn rows_view_windows_the_csr() {
+        let g = toy();
+        let all = g.rows(0..g.n);
+        assert_eq!(all.len(), 3);
+        assert_eq!(all.in_neighbors(2), g.in_neighbors(2));
+        let tail = g.rows(1..3);
+        assert_eq!(tail.len(), 2);
+        assert_eq!(tail.start, 1);
+        assert_eq!(tail.in_neighbors(0), g.in_neighbors(1));
+        assert_eq!(tail.in_degree(1), g.in_degree(2));
+        let arcs: Vec<(u32, u32)> = tail.edges().collect();
+        let want: Vec<(u32, u32)> = g.edges_iter().filter(|&(_, d)| d >= 1).collect();
+        assert_eq!(arcs, want);
+        assert!(g.rows(2..2).is_empty());
+    }
+
+    #[test]
+    fn validate_rejects_unsorted_rows() {
+        let mut g = toy();
+        g.validate().unwrap();
+        // Swap two sources within one row: structurally fine, but the
+        // sorted-rows invariant every builder establishes is broken.
+        let (a, b) = (g.row_ptr[2], g.row_ptr[2] + 1);
+        g.col_idx.swap(a, b);
+        let err = g.validate().unwrap_err();
+        assert!(err.to_string().contains("not sorted"), "{err}");
     }
 
     #[test]

@@ -18,7 +18,20 @@ pub struct GraphStats {
 }
 
 pub fn stats(g: &CsrGraph) -> GraphStats {
-    let mut degs: Vec<usize> = (0..g.n).map(|v| g.in_degree(v)).collect();
+    // Degree scan through the chunked `rows()` view — the same access
+    // pattern the streaming partitioner uses, so the scan touches the
+    // CSR window by window instead of random-indexing the whole graph.
+    const CHUNK: usize = 1 << 14;
+    let mut degs: Vec<usize> = Vec::with_capacity(g.n);
+    let mut lo = 0;
+    while lo < g.n {
+        let hi = (lo + CHUNK).min(g.n);
+        let view = g.rows(lo..hi);
+        for i in 0..view.len() {
+            degs.push(view.in_degree(i));
+        }
+        lo = hi;
+    }
     degs.sort_unstable();
     let m = g.m();
     let n = g.n.max(1);

@@ -1,0 +1,1065 @@
+//! Out-of-core graph storage (DESIGN.md §17): one [`GraphStore`]
+//! abstraction over the in-memory [`LabelledGraph`] and an mmap-backed
+//! binary on-disk format, so planning, sampling, and both exec families
+//! read graph topology and feature rows through the same slice-oriented
+//! API regardless of whether the graph lives on the heap or on disk.
+//!
+//! ## On-disk format (`SGCNGRF1`)
+//!
+//! ```text
+//! magic     8 B   b"SGCNGRF1"
+//! version   u64   1
+//! n, m, feat_dim, num_classes   u64 each
+//! section table: 5 × (offset u64, byte-len u64) for
+//!     row_ptr  (n+1) × u64
+//!     col_idx   m    × u32
+//!     features  n·f  × f32 (row-major)
+//!     labels    n    × u32
+//!     split     n    × u8
+//! ```
+//!
+//! All values little-endian; every section offset is 8-byte aligned
+//! (zero padding between sections), so an mmap of the file can be
+//! reinterpreted as `&[u64]`/`&[u32]`/`&[f32]` directly. Section offsets
+//! are *derivable* from the shape header — the stored table exists so a
+//! corrupt or truncated file fails `open` with an error naming the
+//! offending section instead of serving garbage slices.
+//!
+//! The mmap path uses raw `mmap(2)`/`munmap(2)` declarations (the build
+//! is offline — no new crates); non-unix targets and
+//! `SUPERGCN_NO_MMAP=1` fall back to a heap read with identical
+//! semantics.
+
+use super::generate::{LabelledGraph, SPLIT_TEST, SPLIT_TRAIN, SPLIT_VAL};
+use super::{CsrGraph, CsrRows, GraphTopo};
+use anyhow::{Context, Result};
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+const MAGIC: &[u8; 8] = b"SGCNGRF1";
+const VERSION: u64 = 1;
+/// Header: magic + version + 4 shape words + 5 × (offset, len).
+const HEADER_BYTES: usize = 8 + 8 + 4 * 8 + 5 * 16;
+const SECTION_NAMES: [&str; 5] = ["row_ptr", "col_idx", "features", "labels", "split"];
+
+fn align8(x: usize) -> usize {
+    (x + 7) & !7
+}
+
+/// Section layout derived from the shape header; the on-disk table must
+/// match this exactly.
+fn section_layout(n: usize, m: usize, feat_dim: usize) -> [(usize, usize); 5] {
+    let lens = [
+        (n + 1) * 8,
+        m * 4,
+        n * feat_dim * 4,
+        n * 4,
+        n,
+    ];
+    let mut out = [(0usize, 0usize); 5];
+    let mut off = HEADER_BYTES;
+    for (slot, len) in out.iter_mut().zip(lens) {
+        *slot = (off, len);
+        off = align8(off + len);
+    }
+    out
+}
+
+fn file_bytes(n: usize, m: usize, feat_dim: usize) -> usize {
+    let s = section_layout(n, m, feat_dim);
+    // The split section (u8) is the last; no trailing pad.
+    s[4].0 + s[4].1
+}
+
+// ---------------------------------------------------------------------
+// Streaming writer
+// ---------------------------------------------------------------------
+
+/// Streaming writer for the on-disk format: sections are appended in
+/// order, in chunks of any size, and [`StoreWriter::finish`] verifies
+/// every section received exactly its declared element count — a partial
+/// write can never produce a file that opens.
+pub struct StoreWriter {
+    w: BufWriter<std::fs::File>,
+    n: usize,
+    m: usize,
+    feat_dim: usize,
+    /// Elements written so far per section.
+    written: [usize; 5],
+    /// Section currently being appended (monotone).
+    cur: usize,
+}
+
+impl StoreWriter {
+    pub fn create(
+        path: &Path,
+        n: usize,
+        m: usize,
+        feat_dim: usize,
+        num_classes: usize,
+    ) -> Result<Self> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating graph store {path:?}"))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        for v in [n, m, feat_dim, num_classes] {
+            w.write_all(&(v as u64).to_le_bytes())?;
+        }
+        for (off, len) in section_layout(n, m, feat_dim) {
+            w.write_all(&(off as u64).to_le_bytes())?;
+            w.write_all(&(len as u64).to_le_bytes())?;
+        }
+        Ok(Self {
+            w,
+            n,
+            m,
+            feat_dim,
+            written: [0; 5],
+            cur: 0,
+        })
+    }
+
+    fn expected(&self, s: usize) -> usize {
+        match s {
+            0 => self.n + 1,
+            1 => self.m,
+            2 => self.n * self.feat_dim,
+            3 => self.n,
+            _ => self.n,
+        }
+    }
+
+    fn advance_to(&mut self, s: usize, add: usize) -> Result<()> {
+        anyhow::ensure!(
+            s >= self.cur,
+            "store sections must be written in order ({} after {})",
+            SECTION_NAMES[s],
+            SECTION_NAMES[self.cur]
+        );
+        // Close out (and pad) every section between cur and s.
+        while self.cur < s {
+            let c = self.cur;
+            anyhow::ensure!(
+                self.written[c] == self.expected(c),
+                "store section {} incomplete: {} of {} elements written",
+                SECTION_NAMES[c],
+                self.written[c],
+                self.expected(c)
+            );
+            let (off, len) = section_layout(self.n, self.m, self.feat_dim)[c];
+            let pad = align8(off + len) - (off + len);
+            self.w.write_all(&[0u8; 7][..pad])?;
+            self.cur += 1;
+        }
+        self.written[s] += add;
+        anyhow::ensure!(
+            self.written[s] <= self.expected(s),
+            "store section {} overflow: {} elements past the declared {}",
+            SECTION_NAMES[s],
+            self.written[s],
+            self.expected(s)
+        );
+        Ok(())
+    }
+
+    pub fn row_ptr(&mut self, chunk: &[u64]) -> Result<()> {
+        self.advance_to(0, chunk.len())?;
+        for &v in chunk {
+            self.w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn col_idx(&mut self, chunk: &[u32]) -> Result<()> {
+        self.advance_to(1, chunk.len())?;
+        for &v in chunk {
+            self.w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn features(&mut self, chunk: &[f32]) -> Result<()> {
+        self.advance_to(2, chunk.len())?;
+        for &v in chunk {
+            self.w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn labels(&mut self, chunk: &[u32]) -> Result<()> {
+        self.advance_to(3, chunk.len())?;
+        for &v in chunk {
+            self.w.write_all(&v.to_le_bytes())?;
+        }
+        Ok(())
+    }
+
+    pub fn split(&mut self, chunk: &[u8]) -> Result<()> {
+        self.advance_to(4, chunk.len())?;
+        self.w.write_all(chunk)?;
+        Ok(())
+    }
+
+    pub fn finish(mut self) -> Result<()> {
+        self.advance_to(4, 0)?;
+        anyhow::ensure!(
+            self.written[4] == self.expected(4),
+            "store section split incomplete: {} of {} elements written",
+            self.written[4],
+            self.expected(4)
+        );
+        self.w.flush().context("flushing graph store")?;
+        Ok(())
+    }
+}
+
+/// Write an in-memory [`LabelledGraph`] out as a graph-store file.
+pub fn write_store(lg: &LabelledGraph, path: &Path) -> Result<()> {
+    let g = &lg.graph;
+    let mut w = StoreWriter::create(path, g.n, g.m(), lg.feat_dim, lg.num_classes)?;
+    let rp: Vec<u64> = g.row_ptr.iter().map(|&p| p as u64).collect();
+    w.row_ptr(&rp)?;
+    w.col_idx(&g.col_idx)?;
+    w.features(&lg.features)?;
+    w.labels(&lg.labels)?;
+    w.split(&lg.split)?;
+    w.finish()
+}
+
+// ---------------------------------------------------------------------
+// Mmap backend
+// ---------------------------------------------------------------------
+
+#[cfg(unix)]
+mod sys {
+    use core::ffi::c_void;
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+/// Backing bytes of an opened store: a read-only file mapping on unix, a
+/// heap buffer (8-byte aligned via `Vec<u64>`) elsewhere or when
+/// `SUPERGCN_NO_MMAP=1`.
+enum MapBuf {
+    #[cfg(unix)]
+    Mapped {
+        ptr: *const u8,
+        len: usize,
+    },
+    Heap {
+        buf: Vec<u64>,
+        len: usize,
+    },
+}
+
+// The mapping is read-only and never remapped after construction.
+unsafe impl Send for MapBuf {}
+unsafe impl Sync for MapBuf {}
+
+impl MapBuf {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            MapBuf::Mapped { ptr, len } => unsafe { std::slice::from_raw_parts(*ptr, *len) },
+            MapBuf::Heap { buf, len } => unsafe {
+                std::slice::from_raw_parts(buf.as_ptr() as *const u8, *len)
+            },
+        }
+    }
+
+    fn is_mapped(&self) -> bool {
+        match self {
+            #[cfg(unix)]
+            MapBuf::Mapped { .. } => true,
+            MapBuf::Heap { .. } => false,
+        }
+    }
+}
+
+impl Drop for MapBuf {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if let MapBuf::Mapped { ptr, len } = self {
+            unsafe {
+                sys::munmap(*ptr as *mut core::ffi::c_void, *len);
+            }
+        }
+    }
+}
+
+fn map_file(path: &Path) -> Result<MapBuf> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening graph store {path:?}"))?;
+    let len = f
+        .metadata()
+        .with_context(|| format!("statting graph store {path:?}"))?
+        .len() as usize;
+    anyhow::ensure!(len > 0, "graph store {path:?} is empty");
+    let force_heap = std::env::var_os("SUPERGCN_NO_MMAP").is_some_and(|v| v == "1");
+    #[cfg(unix)]
+    if !force_heap {
+        use std::os::unix::io::AsRawFd;
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize != -1 {
+            return Ok(MapBuf::Mapped {
+                ptr: ptr as *const u8,
+                len,
+            });
+        }
+        // mmap refused (exotic filesystem): fall through to the heap read.
+    }
+    let _ = force_heap;
+    let mut buf = vec![0u64; len.div_ceil(8)];
+    let dst = unsafe { std::slice::from_raw_parts_mut(buf.as_mut_ptr() as *mut u8, len) };
+    let mut r = std::io::BufReader::new(f);
+    r.read_exact(dst)
+        .with_context(|| format!("reading graph store {path:?}"))?;
+    Ok(MapBuf::Heap { buf, len })
+}
+
+/// Reinterpret an 8-byte-aligned little-endian byte run as `&[T]`.
+/// Sound because every section offset is 8-byte aligned, the mmap base is
+/// page aligned, and T is a plain-old-data numeric type.
+fn cast_slice<T: Copy>(bytes: &[u8]) -> &[T] {
+    let size = std::mem::size_of::<T>();
+    debug_assert_eq!(bytes.len() % size, 0);
+    debug_assert_eq!(bytes.as_ptr() as usize % std::mem::align_of::<T>(), 0);
+    unsafe { std::slice::from_raw_parts(bytes.as_ptr() as *const T, bytes.len() / size) }
+}
+
+/// An opened on-disk graph: header validated, sections exposed as typed
+/// slices over the mapping. Cheap to share (`Arc` inside [`GraphStore`]).
+pub struct MmapGraph {
+    buf: MapBuf,
+    pub n: usize,
+    pub m: usize,
+    pub feat_dim: usize,
+    pub num_classes: usize,
+    sections: [(usize, usize); 5],
+    path: PathBuf,
+}
+
+impl MmapGraph {
+    /// Open and validate a graph-store file. Shape inconsistencies,
+    /// truncation, and a corrupt section table all fail here with an
+    /// error naming the offending field; `row_ptr` is additionally
+    /// checked for the CSR bracketing invariants so slice accessors can
+    /// never index out of bounds.
+    pub fn open(path: &Path) -> Result<Self> {
+        anyhow::ensure!(
+            std::mem::size_of::<usize>() == 8,
+            "the mmap graph store requires a 64-bit platform"
+        );
+        let buf = map_file(path)?;
+        let bytes = buf.bytes();
+        anyhow::ensure!(
+            bytes.len() >= HEADER_BYTES,
+            "graph store {path:?} truncated while reading header ({} of {HEADER_BYTES} bytes)",
+            bytes.len()
+        );
+        anyhow::ensure!(&bytes[..8] == MAGIC, "not a supergcn graph store (bad magic)");
+        let word = |i: usize| u64::from_le_bytes(bytes[8 * i..8 * i + 8].try_into().unwrap());
+        let version = word(1);
+        anyhow::ensure!(
+            version == VERSION,
+            "graph store version mismatch: found {version}, this build reads v{VERSION}"
+        );
+        let (n, m, feat_dim, num_classes) = (
+            word(2) as usize,
+            word(3) as usize,
+            word(4) as usize,
+            word(5) as usize,
+        );
+        anyhow::ensure!(feat_dim > 0, "graph store declares feat_dim = 0");
+        anyhow::ensure!(num_classes > 0, "graph store declares num_classes = 0");
+        let expected = section_layout(n, m, feat_dim);
+        let mut sections = [(0usize, 0usize); 5];
+        for (i, slot) in sections.iter_mut().enumerate() {
+            let off = word(6 + 2 * i) as usize;
+            let len = word(7 + 2 * i) as usize;
+            anyhow::ensure!(
+                (off, len) == expected[i],
+                "graph store section table corrupt: {} at offset {off} len {len}, \
+                 expected offset {} len {} for the declared shape",
+                SECTION_NAMES[i],
+                expected[i].0,
+                expected[i].1
+            );
+            *slot = (off, len);
+        }
+        let want = file_bytes(n, m, feat_dim);
+        anyhow::ensure!(
+            bytes.len() == want,
+            "graph store {path:?} truncated or padded: {} bytes on disk, {want} declared \
+             (section {} ends the payload)",
+            bytes.len(),
+            SECTION_NAMES[4]
+        );
+        let g = Self {
+            buf,
+            n,
+            m,
+            feat_dim,
+            num_classes,
+            sections,
+            path: path.to_path_buf(),
+        };
+        // CSR bracketing: everything slice accessors rely on.
+        let rp = g.row_ptr();
+        anyhow::ensure!(rp[0] == 0, "graph store row_ptr[0] = {} != 0", rp[0]);
+        anyhow::ensure!(
+            rp[n] as usize == m,
+            "graph store row_ptr[-1] = {} != edge count {m}",
+            rp[n]
+        );
+        for v in 0..n {
+            anyhow::ensure!(rp[v] <= rp[v + 1], "graph store row_ptr not monotone at node {v}");
+        }
+        Ok(g)
+    }
+
+    fn section<T: Copy>(&self, i: usize) -> &[T] {
+        let (off, len) = self.sections[i];
+        cast_slice(&self.buf.bytes()[off..off + len])
+    }
+
+    pub fn row_ptr(&self) -> &[u64] {
+        self.section(0)
+    }
+
+    pub fn col_idx(&self) -> &[u32] {
+        self.section(1)
+    }
+
+    pub fn features(&self) -> &[f32] {
+        self.section(2)
+    }
+
+    pub fn labels(&self) -> &[u32] {
+        self.section(3)
+    }
+
+    pub fn split(&self) -> &[u8] {
+        self.section(4)
+    }
+
+    /// `row_ptr` reinterpreted as `&[usize]` (64-bit platforms only —
+    /// enforced at `open`), so [`CsrRows`] views work unchanged.
+    fn row_ptr_usize(&self) -> &[usize] {
+        let rp = self.row_ptr();
+        unsafe { std::slice::from_raw_parts(rp.as_ptr() as *const usize, rp.len()) }
+    }
+
+    #[inline]
+    pub fn in_neighbors(&self, v: usize) -> &[u32] {
+        let rp = self.row_ptr();
+        &self.col_idx()[rp[v] as usize..rp[v + 1] as usize]
+    }
+
+    /// Total bytes of the backing file (the `store.mapped.bytes` gauge).
+    pub fn bytes(&self) -> usize {
+        self.buf.bytes().len()
+    }
+
+    /// Whether the backing is a real file mapping (false on the heap
+    /// fallback path).
+    pub fn is_mapped(&self) -> bool {
+        self.buf.is_mapped()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Deep validation beyond what `open` checks: in-range sorted rows,
+    /// labels under `num_classes`, split tags in the known set. O(m + n);
+    /// run by tests and by `prepare` before partitioning.
+    pub fn validate_deep(&self) -> Result<()> {
+        for v in 0..self.n {
+            let row = self.in_neighbors(v);
+            for w in row.windows(2) {
+                anyhow::ensure!(w[0] <= w[1], "row {v} not sorted ({} after {})", w[1], w[0]);
+            }
+            for &s in row {
+                anyhow::ensure!(
+                    (s as usize) < self.n,
+                    "col_idx {s} out of range (n={}) in row {v}",
+                    self.n
+                );
+            }
+        }
+        for (v, &l) in self.labels().iter().enumerate() {
+            anyhow::ensure!(
+                (l as usize) < self.num_classes,
+                "label {l} at node {v} out of range (num_classes={})",
+                self.num_classes
+            );
+        }
+        for (v, &s) in self.split().iter().enumerate() {
+            anyhow::ensure!(
+                s <= SPLIT_TEST,
+                "split tag {s} at node {v} is not a known split"
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// The unified store
+// ---------------------------------------------------------------------
+
+/// Graph + feature storage behind one slice-oriented API: the in-memory
+/// [`LabelledGraph`] backend (everything the repo did before) and the
+/// mmap backend (out-of-core training, DESIGN.md §17). Cloning is cheap —
+/// both backends are `Arc`ed.
+#[derive(Clone)]
+pub enum GraphStore {
+    Mem(Arc<LabelledGraph>),
+    Mmap(Arc<MmapGraph>),
+}
+
+impl From<Arc<LabelledGraph>> for GraphStore {
+    fn from(lg: Arc<LabelledGraph>) -> Self {
+        GraphStore::Mem(lg)
+    }
+}
+
+impl From<LabelledGraph> for GraphStore {
+    fn from(lg: LabelledGraph) -> Self {
+        GraphStore::Mem(Arc::new(lg))
+    }
+}
+
+impl GraphStore {
+    /// Open an on-disk store (mmap backend).
+    pub fn open(path: &Path) -> Result<GraphStore> {
+        Ok(GraphStore::Mmap(Arc::new(MmapGraph::open(path)?)))
+    }
+
+    pub fn n(&self) -> usize {
+        match self {
+            GraphStore::Mem(lg) => lg.n(),
+            GraphStore::Mmap(g) => g.n,
+        }
+    }
+
+    pub fn m(&self) -> usize {
+        match self {
+            GraphStore::Mem(lg) => lg.graph.m(),
+            GraphStore::Mmap(g) => g.m,
+        }
+    }
+
+    pub fn feat_dim(&self) -> usize {
+        match self {
+            GraphStore::Mem(lg) => lg.feat_dim,
+            GraphStore::Mmap(g) => g.feat_dim,
+        }
+    }
+
+    pub fn num_classes(&self) -> usize {
+        match self {
+            GraphStore::Mem(lg) => lg.num_classes,
+            GraphStore::Mmap(g) => g.num_classes,
+        }
+    }
+
+    #[inline]
+    pub fn in_degree(&self, v: usize) -> usize {
+        match self {
+            GraphStore::Mem(lg) => lg.graph.in_degree(v),
+            GraphStore::Mmap(g) => {
+                let rp = g.row_ptr();
+                (rp[v + 1] - rp[v]) as usize
+            }
+        }
+    }
+
+    #[inline]
+    pub fn in_neighbors(&self, v: usize) -> &[u32] {
+        match self {
+            GraphStore::Mem(lg) => lg.graph.in_neighbors(v),
+            GraphStore::Mmap(g) => g.in_neighbors(v),
+        }
+    }
+
+    /// Source endpoint of edge `e` in CSR order (`col_idx[e]`). Together
+    /// with [`GraphStore::edge_dst`] this gives the samplers a uniform
+    /// edge-index view identical on both backends (SAINT-Edge draws).
+    #[inline]
+    pub fn edge_src(&self, e: usize) -> u32 {
+        match self {
+            GraphStore::Mem(lg) => lg.graph.col_idx[e],
+            GraphStore::Mmap(g) => g.col_idx()[e],
+        }
+    }
+
+    /// Destination of edge `e`: the row whose `row_ptr` run contains `e`
+    /// (binary search — the same `partition_point` rule on both backends).
+    #[inline]
+    pub fn edge_dst(&self, e: usize) -> usize {
+        match self {
+            GraphStore::Mem(lg) => lg.graph.row_ptr.partition_point(|&p| p <= e) - 1,
+            GraphStore::Mmap(g) => g.row_ptr().partition_point(|&p| (p as usize) <= e) - 1,
+        }
+    }
+
+    /// Borrow a contiguous CSR row range — the chunked scan primitive the
+    /// streaming partitioner and planner iterate with.
+    pub fn rows(&self, range: std::ops::Range<usize>) -> CsrRows<'_> {
+        match self {
+            GraphStore::Mem(lg) => lg.graph.rows(range),
+            GraphStore::Mmap(g) => {
+                assert!(range.end <= g.n, "row range past n");
+                CsrRows {
+                    start: range.start,
+                    row_ptr: &g.row_ptr_usize()[range.start..range.end + 1],
+                    col_idx: g.col_idx(),
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn feature_row(&self, v: usize) -> &[f32] {
+        match self {
+            GraphStore::Mem(lg) => lg.feature_row(v),
+            GraphStore::Mmap(g) => {
+                let f = g.feat_dim;
+                &g.features()[v * f..(v + 1) * f]
+            }
+        }
+    }
+
+    /// Gather the feature rows of `ids` into `out` (`ids.len() × feat_dim`,
+    /// row-major) — the batched fetch the exec contexts use.
+    pub fn feature_rows(&self, ids: &[u32], out: &mut [f32]) {
+        let f = self.feat_dim();
+        assert!(out.len() >= ids.len() * f, "feature_rows output too small");
+        for (i, &v) in ids.iter().enumerate() {
+            out[i * f..(i + 1) * f].copy_from_slice(self.feature_row(v as usize));
+        }
+    }
+
+    #[inline]
+    pub fn label(&self, v: usize) -> u32 {
+        match self {
+            GraphStore::Mem(lg) => lg.labels[v],
+            GraphStore::Mmap(g) => g.labels()[v],
+        }
+    }
+
+    #[inline]
+    pub fn split_of(&self, v: usize) -> u8 {
+        match self {
+            GraphStore::Mem(lg) => lg.split[v],
+            GraphStore::Mmap(g) => g.split()[v],
+        }
+    }
+
+    /// `(train, val, test)` counts, streamed.
+    pub fn count_split(&self) -> (usize, usize, usize) {
+        let (mut tr, mut va, mut te) = (0, 0, 0);
+        for v in 0..self.n() {
+            match self.split_of(v) {
+                SPLIT_TRAIN => tr += 1,
+                SPLIT_VAL => va += 1,
+                SPLIT_TEST => te += 1,
+                _ => {}
+            }
+        }
+        (tr, va, te)
+    }
+
+    /// Induced subgraph over `nodes` (local CSR, same contract as
+    /// [`CsrGraph::induced`] — identical output on both backends).
+    pub fn induced(&self, nodes: &[u32]) -> CsrGraph {
+        match self {
+            GraphStore::Mem(lg) => lg.graph.induced(nodes),
+            GraphStore::Mmap(g) => {
+                let mut loc: std::collections::HashMap<u32, u32> =
+                    std::collections::HashMap::with_capacity(nodes.len());
+                for (i, &v) in nodes.iter().enumerate() {
+                    let prev = loc.insert(v, i as u32);
+                    debug_assert!(prev.is_none(), "duplicate node {v}");
+                }
+                let mut edges = Vec::new();
+                for (i, &v) in nodes.iter().enumerate() {
+                    for &s in g.in_neighbors(v as usize) {
+                        if let Some(&ls) = loc.get(&s) {
+                            edges.push((ls, i as u32));
+                        }
+                    }
+                }
+                CsrGraph::from_edges(nodes.len(), &edges)
+            }
+        }
+    }
+
+    /// The in-memory CSR, when this store has one. `None` on the mmap
+    /// backend — callers that fundamentally need a heap CSR (multilevel
+    /// partitioning, the full/cluster samplers, elastic re-planning) use
+    /// this to fail with a descriptive error instead of silently
+    /// materializing a 100M-edge graph.
+    pub fn csr(&self) -> Option<&CsrGraph> {
+        match self {
+            GraphStore::Mem(lg) => Some(&lg.graph),
+            GraphStore::Mmap(_) => None,
+        }
+    }
+
+    /// The in-memory labelled graph, when this store wraps one.
+    pub fn labelled(&self) -> Option<&Arc<LabelledGraph>> {
+        match self {
+            GraphStore::Mem(lg) => Some(lg),
+            GraphStore::Mmap(_) => None,
+        }
+    }
+
+    /// Bytes mapped from disk (0 for the in-memory backend) — the
+    /// `store.mapped.bytes` gauge.
+    pub fn mapped_bytes(&self) -> usize {
+        match self {
+            GraphStore::Mem(_) => 0,
+            GraphStore::Mmap(g) => g.bytes(),
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            GraphStore::Mem(_) => "mem",
+            GraphStore::Mmap(_) => "mmap",
+        }
+    }
+
+    /// Write this store out in the on-disk format, streaming in chunks —
+    /// `write → open → write` is byte-identical (pinned in tests).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let (n, m, f) = (self.n(), self.m(), self.feat_dim());
+        let mut w = StoreWriter::create(path, n, m, f, self.num_classes())?;
+        const CHUNK: usize = 1 << 16;
+        let mut rp_chunk = Vec::with_capacity(CHUNK);
+        let mut off = 0u64;
+        rp_chunk.push(0u64);
+        for v in 0..n {
+            off += self.in_degree(v) as u64;
+            rp_chunk.push(off);
+            if rp_chunk.len() >= CHUNK {
+                w.row_ptr(&rp_chunk)?;
+                rp_chunk.clear();
+            }
+        }
+        w.row_ptr(&rp_chunk)?;
+        for start in (0..n).step_by(CHUNK) {
+            let rows = self.rows(start..(start + CHUNK).min(n));
+            for i in 0..rows.len() {
+                w.col_idx(rows.in_neighbors(i))?;
+            }
+        }
+        for v in 0..n {
+            w.features(self.feature_row(v))?;
+        }
+        let mut lab = Vec::with_capacity(CHUNK);
+        for v in 0..n {
+            lab.push(self.label(v));
+            if lab.len() >= CHUNK {
+                w.labels(&lab)?;
+                lab.clear();
+            }
+        }
+        w.labels(&lab)?;
+        let mut sp = Vec::with_capacity(CHUNK);
+        for v in 0..n {
+            sp.push(self.split_of(v));
+            if sp.len() >= CHUNK {
+                w.split(&sp)?;
+                sp.clear();
+            }
+        }
+        w.split(&sp)?;
+        w.finish()
+    }
+
+    /// Copy this store into the in-memory backend (a heap
+    /// [`LabelledGraph`] holding the same data). The deliberate inverse
+    /// of out-of-core: the memory-budget comparison trains the same
+    /// `graph.sgcn` twice — once materialized, once mmapped — and pins
+    /// both the loss-bit parity and the RSS gap. Cheap clone on a store
+    /// that is already in memory.
+    pub fn materialize(&self) -> GraphStore {
+        if let GraphStore::Mem(lg) = self {
+            return GraphStore::Mem(lg.clone());
+        }
+        let (n, f) = (self.n(), self.feat_dim());
+        let mut row_ptr = Vec::with_capacity(n + 1);
+        row_ptr.push(0usize);
+        let mut col_idx = Vec::with_capacity(self.m());
+        let mut features = Vec::with_capacity(n * f);
+        let mut labels = Vec::with_capacity(n);
+        let mut split = Vec::with_capacity(n);
+        for v in 0..n {
+            col_idx.extend_from_slice(self.in_neighbors(v));
+            row_ptr.push(col_idx.len());
+            features.extend_from_slice(self.feature_row(v));
+            labels.push(self.label(v));
+            split.push(self.split_of(v));
+        }
+        GraphStore::from(LabelledGraph {
+            graph: CsrGraph { n, row_ptr, col_idx },
+            features,
+            feat_dim: f,
+            labels,
+            num_classes: self.num_classes(),
+            split,
+        })
+    }
+}
+
+impl GraphTopo for GraphStore {
+    fn num_nodes(&self) -> usize {
+        self.n()
+    }
+
+    fn in_degree(&self, v: usize) -> usize {
+        GraphStore::in_degree(self, v)
+    }
+
+    fn in_neighbors(&self, v: usize) -> &[u32] {
+        GraphStore::in_neighbors(self, v)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Process memory introspection (the CI memory-budget gauges)
+// ---------------------------------------------------------------------
+
+/// Peak resident set size of this process in bytes (`VmHWM` from
+/// `/proc/self/status`). `None` off Linux — RLIMIT_RSS is a no-op there
+/// too, so the memory-budget gate *measures* instead of trusting a cap.
+pub fn peak_rss_bytes() -> Option<u64> {
+    let status = std::fs::read_to_string("/proc/self/status").ok()?;
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            let kb: u64 = rest.trim().trim_end_matches("kB").trim().parse().ok()?;
+            return Some(kb * 1024);
+        }
+    }
+    None
+}
+
+/// Major page faults of this process (`majflt` from `/proc/self/stat`) —
+/// the `store.faults_major.count` gauge: how often the mmap path really
+/// went to disk.
+pub fn major_page_faults() -> Option<u64> {
+    let stat = std::fs::read_to_string("/proc/self/stat").ok()?;
+    // Fields after the parenthesized comm; majflt is field 12 (1-based).
+    let after = stat.rsplit(')').next()?;
+    after.split_whitespace().nth(9)?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::sbm;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("supergcn_store_{}_{name}", std::process::id()))
+    }
+
+    fn toy_lg() -> LabelledGraph {
+        sbm(120, 4, 6.0, 0.7, 8, 2.0, 11)
+    }
+
+    #[test]
+    fn roundtrip_bytes_and_contents() {
+        let lg = toy_lg();
+        let p = tmp("rt.sgcn");
+        write_store(&lg, &p).unwrap();
+        let store = GraphStore::open(&p).unwrap();
+        assert_eq!(store.n(), lg.n());
+        assert_eq!(store.m(), lg.graph.m());
+        assert_eq!(store.feat_dim(), lg.feat_dim);
+        assert_eq!(store.num_classes(), lg.num_classes);
+        for v in 0..lg.n() {
+            assert_eq!(store.in_neighbors(v), lg.graph.in_neighbors(v));
+            assert_eq!(store.feature_row(v), lg.feature_row(v));
+            assert_eq!(store.label(v), lg.labels[v]);
+            assert_eq!(store.split_of(v), lg.split[v]);
+        }
+        if let GraphStore::Mmap(g) = &store {
+            g.validate_deep().unwrap();
+        }
+        // write → mmap → rewrite is byte-identical.
+        let p2 = tmp("rt2.sgcn");
+        store.write(&p2).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), std::fs::read(&p2).unwrap());
+        // And so is the Mem backend writing the same graph.
+        let p3 = tmp("rt3.sgcn");
+        GraphStore::from(lg).write(&p3).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), std::fs::read(&p3).unwrap());
+        for p in [&p, &p2, &p3] {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn rows_and_gather_match_mem_backend() {
+        let lg = toy_lg();
+        let p = tmp("rows.sgcn");
+        write_store(&lg, &p).unwrap();
+        let mm = GraphStore::open(&p).unwrap();
+        let mem = GraphStore::from(lg);
+        let rows_mm = mm.rows(10..50);
+        let rows_mem = mem.rows(10..50);
+        assert_eq!(rows_mm.len(), rows_mem.len());
+        for i in 0..rows_mm.len() {
+            assert_eq!(rows_mm.in_neighbors(i), rows_mem.in_neighbors(i));
+        }
+        let arcs_mm: Vec<_> = rows_mm.edges().collect();
+        let arcs_mem: Vec<_> = rows_mem.edges().collect();
+        assert_eq!(arcs_mm, arcs_mem);
+        let ids = [3u32, 77, 5, 5, 119];
+        let f = mem.feat_dim();
+        let mut a = vec![0f32; ids.len() * f];
+        let mut b = vec![0f32; ids.len() * f];
+        mm.feature_rows(&ids, &mut a);
+        mem.feature_rows(&ids, &mut b);
+        assert_eq!(a, b);
+        let nodes = [4u32, 9, 40, 41, 42];
+        assert_eq!(mm.induced(&nodes), mem.induced(&nodes));
+        assert_eq!(mm.count_split(), mem.count_split());
+        assert!(mm.mapped_bytes() > 0);
+        assert_eq!(mem.mapped_bytes(), 0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn open_rejects_corruption_naming_the_field() {
+        let lg = toy_lg();
+        let p = tmp("bad.sgcn");
+        write_store(&lg, &p).unwrap();
+        let full = std::fs::read(&p).unwrap();
+
+        // Bad magic.
+        let mut b = full.clone();
+        b[0] = b'X';
+        std::fs::write(&p, &b).unwrap();
+        let err = GraphStore::open(&p).unwrap_err();
+        assert!(err.to_string().contains("bad magic"), "{err}");
+
+        // Wrong version.
+        let mut b = full.clone();
+        b[8..16].copy_from_slice(&99u64.to_le_bytes());
+        std::fs::write(&p, &b).unwrap();
+        let err = GraphStore::open(&p).unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "{err}");
+
+        // Corrupt section table entry (features offset).
+        let mut b = full.clone();
+        let feat_entry = 8 + 8 + 4 * 8 + 2 * 16;
+        b[feat_entry..feat_entry + 8].copy_from_slice(&7u64.to_le_bytes());
+        std::fs::write(&p, &b).unwrap();
+        let err = GraphStore::open(&p).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("section table") && msg.contains("features"), "{msg}");
+
+        // Truncated payload.
+        std::fs::write(&p, &full[..full.len() - 3]).unwrap();
+        let err = GraphStore::open(&p).unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+
+        // Header-only truncation.
+        std::fs::write(&p, &full[..40]).unwrap();
+        let err = GraphStore::open(&p).unwrap_err();
+        assert!(err.to_string().contains("header"), "{err}");
+
+        // Non-monotone row_ptr.
+        let mut b = full.clone();
+        let rp1 = HEADER_BYTES + 8; // row_ptr[1]
+        b[rp1..rp1 + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&p, &b).unwrap();
+        let err = GraphStore::open(&p).unwrap_err();
+        assert!(err.to_string().contains("monotone"), "{err}");
+
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn heap_fallback_reads_identically() {
+        // The env-forced heap path must behave exactly like the mapping.
+        let lg = toy_lg();
+        let p = tmp("heap.sgcn");
+        write_store(&lg, &p).unwrap();
+        std::env::set_var("SUPERGCN_NO_MMAP", "1");
+        let heap = GraphStore::open(&p);
+        std::env::remove_var("SUPERGCN_NO_MMAP");
+        let heap = heap.unwrap();
+        if let GraphStore::Mmap(g) = &heap {
+            assert!(!g.is_mapped(), "SUPERGCN_NO_MMAP=1 must force the heap path");
+        }
+        for v in 0..lg.n() {
+            assert_eq!(heap.in_neighbors(v), lg.graph.in_neighbors(v));
+            assert_eq!(heap.feature_row(v), lg.feature_row(v));
+        }
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn writer_enforces_section_discipline() {
+        let p = tmp("disc.sgcn");
+        let mut w = StoreWriter::create(&p, 2, 1, 1, 2).unwrap();
+        w.row_ptr(&[0, 1]).unwrap();
+        // Jumping to features with row_ptr incomplete must fail.
+        let err = w.features(&[0.0]).unwrap_err();
+        assert!(err.to_string().contains("incomplete"), "{err}");
+        std::fs::remove_file(&p).ok();
+
+        let mut w = StoreWriter::create(&p, 2, 1, 1, 2).unwrap();
+        w.row_ptr(&[0, 1, 1]).unwrap();
+        w.col_idx(&[0]).unwrap();
+        // Going back a section must fail.
+        let err = w.row_ptr(&[0]).unwrap_err();
+        assert!(err.to_string().contains("order"), "{err}");
+        std::fs::remove_file(&p).ok();
+
+        // finish() with missing tail sections must fail.
+        let mut w = StoreWriter::create(&p, 2, 1, 1, 2).unwrap();
+        w.row_ptr(&[0, 1, 1]).unwrap();
+        w.col_idx(&[0]).unwrap();
+        w.features(&[1.0, 2.0]).unwrap();
+        w.labels(&[0, 1]).unwrap();
+        let err = w.finish().unwrap_err();
+        assert!(err.to_string().contains("split"), "{err}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rss_probes_report_on_linux() {
+        if cfg!(target_os = "linux") {
+            assert!(peak_rss_bytes().unwrap() > 0);
+            assert!(major_page_faults().is_some());
+        }
+    }
+}

@@ -21,7 +21,7 @@ pub mod prepost;
 pub mod vertex_cover;
 pub mod volume;
 
-use crate::graph::CsrGraph;
+use crate::graph::GraphTopo;
 use crate::partition::Partition;
 
 /// The cut arcs from one producer worker to one consumer worker,
@@ -85,10 +85,13 @@ impl RemotePair {
 
 /// Extract all non-empty remote pairs of a partition.
 /// `pairs[p][c]` collects arcs src∈part p → dst∈part c, p ≠ c.
-pub fn remote_pairs(g: &CsrGraph, part: &Partition) -> Vec<RemotePair> {
+/// Generic over [`GraphTopo`], so the mmap-backed store plans through the
+/// exact same code path as the in-memory CSR (identical pairs, bit for
+/// bit — DESIGN.md §17).
+pub fn remote_pairs<G: GraphTopo + ?Sized>(g: &G, part: &Partition) -> Vec<RemotePair> {
     let k = part.k;
     let mut map: Vec<Vec<Vec<(u32, u32)>>> = vec![vec![Vec::new(); k]; k];
-    for d in 0..g.n {
+    for d in 0..g.num_nodes() {
         let pd = part.assign[d] as usize;
         for &s in g.in_neighbors(d) {
             let ps = part.assign[s as usize] as usize;
@@ -116,6 +119,7 @@ pub fn remote_pairs(g: &CsrGraph, part: &Partition) -> Vec<RemotePair> {
 mod tests {
     use super::*;
     use crate::graph::generate::erdos_renyi;
+    use crate::graph::CsrGraph;
     use crate::partition::random;
     use crate::util::propcheck::{prop_assert, propcheck};
 

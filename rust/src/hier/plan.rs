@@ -8,7 +8,7 @@
 use super::prepost::{split_pair, PrePostSplit};
 use super::volume::RemoteStrategy;
 use super::{remote_pairs, RemotePair};
-use crate::graph::CsrGraph;
+use crate::graph::GraphTopo;
 use crate::partition::Partition;
 
 /// What worker `w` sends to one peer each layer.
@@ -166,11 +166,18 @@ fn strategy_split(pair: &RemotePair, strategy: RemoteStrategy) -> PrePostSplit {
 }
 
 /// Build all worker plans for `(graph, partition)` under `strategy`.
-pub fn build_plans(g: &CsrGraph, part: &Partition, strategy: RemoteStrategy) -> Vec<WorkerPlan> {
+/// Generic over [`GraphTopo`]: the mmap-backed store and the in-memory
+/// CSR run the identical code and produce identical plans (DESIGN.md
+/// §17) — the parity the out-of-core training path rests on.
+pub fn build_plans<G: GraphTopo + ?Sized>(
+    g: &G,
+    part: &Partition,
+    strategy: RemoteStrategy,
+) -> Vec<WorkerPlan> {
     let k = part.k;
     let nodes = part.part_nodes();
     // global → local index maps.
-    let mut g2l = vec![u32::MAX; g.n];
+    let mut g2l = vec![u32::MAX; g.num_nodes()];
     for p in 0..k {
         for (i, &v) in nodes[p].iter().enumerate() {
             g2l[v as usize] = i as u32;
@@ -188,7 +195,7 @@ pub fn build_plans(g: &CsrGraph, part: &Partition, strategy: RemoteStrategy) -> 
         .collect();
 
     // Local edges, sorted by destination (clustering for §4 operators).
-    for d in 0..g.n {
+    for d in 0..g.num_nodes() {
         let pd = part.assign[d] as usize;
         for &s in g.in_neighbors(d) {
             if part.assign[s as usize] as usize == pd {
@@ -243,7 +250,11 @@ pub fn build_plans(g: &CsrGraph, part: &Partition, strategy: RemoteStrategy) -> 
 
 /// Global sanity: sends and recvs agree pairwise; every cut arc is realized
 /// exactly once across local edges, pre groups, and post edges.
-pub fn validate_plans(g: &CsrGraph, part: &Partition, plans: &[WorkerPlan]) -> anyhow::Result<()> {
+pub fn validate_plans<G: GraphTopo + ?Sized>(
+    g: &G,
+    part: &Partition,
+    plans: &[WorkerPlan],
+) -> anyhow::Result<()> {
     let k = part.k;
     anyhow::ensure!(plans.len() == k, "plan count");
     for w in 0..k {
@@ -263,7 +274,7 @@ pub fn validate_plans(g: &CsrGraph, part: &Partition, plans: &[WorkerPlan]) -> a
     }
     // Edge conservation: count aggregation contributions per destination.
     // Every global arc must contribute exactly once to its dst.
-    let mut contrib = vec![0usize; g.n];
+    let mut contrib = vec![0usize; g.num_nodes()];
     for plan in plans {
         for &(_, d) in &plan.local_edges {
             contrib[plan.local_nodes[d as usize] as usize] += 1;
@@ -286,7 +297,7 @@ pub fn validate_plans(g: &CsrGraph, part: &Partition, plans: &[WorkerPlan]) -> a
             }
         }
     }
-    for v in 0..g.n {
+    for v in 0..g.num_nodes() {
         // Dedup'd arcs: remote multi-arcs were collapsed, local kept.
         let mut ins: Vec<u32> = g.in_neighbors(v).to_vec();
         let pd = part.assign[v];
@@ -309,6 +320,7 @@ pub fn validate_plans(g: &CsrGraph, part: &Partition, plans: &[WorkerPlan]) -> a
 mod tests {
     use super::*;
     use crate::graph::generate::{rmat, sbm};
+    use crate::graph::CsrGraph;
     use crate::partition::{multilevel::multilevel, multilevel::MultilevelOpts, random, vertex_weights};
     use crate::util::propcheck::propcheck;
 

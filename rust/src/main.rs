@@ -6,6 +6,8 @@
 //! Subcommands:
 //!   train       end-to-end training run (native or xla backend);
 //!               --sampler full|neighbor|saint-rw|saint-node|saint-edge|cluster
+//!   synth       stream a synthetic labelled graph to an on-disk store
+//!   prepare     streaming-partition an on-disk graph into per-rank shards
 //!   partition   partition a dataset, report quality vs baselines
 //!   volume      Table-5-style comm-volume report across strategies
 //!   perfmodel   Fig-7 analytic speedup sweep
@@ -14,12 +16,15 @@
 use anyhow::Result;
 use supergcn::comm::transport::{FaultSpec, TransportKind};
 use supergcn::exec::AggKernel;
+use supergcn::coordinator::minibatch::MiniBatchTrainer;
 use supergcn::coordinator::planner::prepare;
+use supergcn::coordinator::shard;
 use supergcn::coordinator::trainer::Trainer;
-use supergcn::graph::generate::LabelledGraph;
+use supergcn::graph::store::GraphStore;
+use supergcn::graph::synth::{generate_to_store, SynthConfig};
 use supergcn::run::RunConfig;
 use supergcn::sample::SamplerKind;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use supergcn::datasets;
 use supergcn::exp::Table;
@@ -38,6 +43,8 @@ fn main() {
     let rest: Vec<String> = argv.iter().skip(1).cloned().collect();
     let r = match cmd {
         "train" => cmd_train(&rest),
+        "synth" => cmd_synth(&rest),
+        "prepare" => cmd_prepare(&rest),
         "partition" => cmd_partition(&rest),
         "volume" => cmd_volume(&rest),
         "perfmodel" => cmd_perfmodel(&rest),
@@ -45,7 +52,7 @@ fn main() {
         "datasets" => cmd_datasets(),
         _ => {
             eprintln!(
-                "usage: supergcn <train|partition|volume|perfmodel|benchcmp|datasets> [--help]\n\
+                "usage: supergcn <train|synth|prepare|partition|volume|perfmodel|benchcmp|datasets> [--help]\n\
                  SuperGCN: distributed full-batch and mini-batch GCN training for CPU\n\
                  supercomputers. `train --sampler full` is the paper's full-batch loop;\n\
                  `--sampler neighbor|saint-rw|saint-node|saint-edge|cluster` trains with\n\
@@ -74,7 +81,15 @@ fn main() {
                  remote feature rows per rank for T mini-batch rounds, skipping\n\
                  both request and reply wire legs on a hit (TTL=0 = off,\n\
                  byte-for-byte the uncached path — DESIGN.md §16). `benchcmp`\n\
-                 gates CI on the committed BENCH_seed.json."
+                 gates CI on the committed BENCH_seed.json.\n\
+                 Out-of-core (DESIGN.md §17): `synth --out DIR` streams a synthetic\n\
+                 labelled graph to DIR/graph.sgcn in bounded memory; `prepare\n\
+                 --graph-dir DIR --workers K` streaming-partitions it into K\n\
+                 self-contained per-rank shard files; `train --graph-dir DIR`\n\
+                 trains through the mmap store (full-batch from the shards,\n\
+                 mini-batch over the block partition) with per-epoch losses\n\
+                 bit-identical to the in-memory path (`--store mem` materializes\n\
+                 the same bytes on the heap as the footprint reference)."
             );
             Ok(())
         }
@@ -133,6 +148,9 @@ struct TrainCli {
     artifacts: String,
     trace: Option<String>,
     metrics_json: Option<String>,
+    /// `--store mem`: materialize the `--graph-dir` store on the heap
+    /// (the footprint/parity reference run — DESIGN.md §17).
+    store_mem: bool,
     run: RunConfig,
 }
 
@@ -388,6 +406,33 @@ fn train_flag_table() -> FlagTable<TrainCli> {
             },
         )
         .opt(
+            "graph-dir",
+            "",
+            "train out-of-core from this directory (`synth` wrote graph.sgcn, \
+             `prepare` wrote the per-rank shard files) through the mmap graph \
+             store; replaces --dataset, losses are bit-identical to the \
+             in-memory path (empty = in-process dataset — DESIGN.md §17)",
+            |c, v| {
+                c.run.graph_dir = (!v.is_empty()).then(|| PathBuf::from(v));
+                Ok(())
+            },
+        )
+        .opt(
+            "store",
+            "mmap",
+            "mmap | mem — with --graph-dir: map the on-disk store (bounded RSS) \
+             or materialize the same bytes on the heap (the memory-footprint \
+             reference; losses are bit-identical either way — DESIGN.md §17)",
+            |c, v| {
+                c.store_mem = match v {
+                    "mmap" => false,
+                    "mem" => true,
+                    _ => anyhow::bail!("--store must be mmap|mem"),
+                };
+                Ok(())
+            },
+        )
+        .opt(
             "chaos",
             "",
             "kill rank R mid-epoch E ('rank=R,epoch=E'; test/bench fault \
@@ -403,6 +448,14 @@ fn train_flag_table() -> FlagTable<TrainCli> {
 fn cmd_train(argv: &[String]) -> Result<()> {
     let mut cli = TrainCli::default();
     train_flag_table().parse_into(&mut cli, argv)?;
+
+    if let Some(dir) = cli.run.graph_dir.clone() {
+        return run_graph_dir_training(cli, &dir);
+    }
+    anyhow::ensure!(
+        !cli.store_mem,
+        "--store mem only applies with --graph-dir (in-process datasets already live on the heap)"
+    );
 
     let spec = datasets::by_name(&cli.dataset)?;
     let k = cli.procs;
@@ -424,7 +477,8 @@ fn cmd_train(argv: &[String]) -> Result<()> {
     cli.run.validate(k)?;
     let rc = cli.run;
     if rc.sampler != SamplerKind::Full {
-        return run_minibatch_training(Arc::new(lg), k, &rc, cli.trace, cli.metrics_json);
+        let tr = rc.minibatch_trainer(Arc::new(lg), k)?;
+        return run_minibatch_training(tr, &rc, cli.trace, cli.metrics_json);
     }
     let tr = match cli.backend.as_str() {
         "xla" => {
@@ -582,24 +636,23 @@ fn report_summary(
 }
 
 fn run_minibatch_training(
-    lg: Arc<LabelledGraph>,
-    k: usize,
+    mut tr: MiniBatchTrainer,
     rc: &RunConfig,
     trace_path: Option<String>,
     metrics_path: Option<String>,
 ) -> Result<()> {
     println!(
         "mini-batch training: {} workers, sampler={}, transport={}, group-size={}, \
-         quant={}, machine={}",
-        k,
+         quant={}, machine={}, store={}",
+        tr.k(),
         rc.sampler.name(),
         rc.transport.name(),
         rc.group_size,
         rc.quant.map(|b| b.name()).unwrap_or("fp32"),
         rc.machine.name,
+        tr.store.backend_name(),
     );
     let epochs = rc.epochs;
-    let mut tr = rc.minibatch_trainer(lg, k)?;
     tr.telemetry = build_telemetry(&trace_path, &metrics_path);
     println!(
         "  {} batches/epoch over the {}-way partition",
@@ -616,6 +669,131 @@ fn run_minibatch_training(
     if !write_metrics(&tr.telemetry.metrics, &metrics_path, &tr.telemetry.tracer)? {
         report_summary(epochs, &stats, &tr.comm_stats);
     }
+    Ok(())
+}
+
+/// The `--graph-dir` run path (DESIGN.md §17): open the on-disk store,
+/// then either drive the mini-batch loop over the streaming block
+/// partition or build the full-batch trainer straight from the
+/// `prepare` shard files. Ends by reporting the process peak RSS — the
+/// number the memory-budget CI job compares across backends.
+fn run_graph_dir_training(mut cli: TrainCli, dir: &Path) -> Result<()> {
+    anyhow::ensure!(
+        cli.backend == "native",
+        "--graph-dir runs on the native engine (got --backend {})",
+        cli.backend
+    );
+    if cli.epochs != 0 {
+        cli.run.epochs = cli.epochs;
+    }
+    let rc = cli.run.clone();
+    let mut store = GraphStore::open(&dir.join("graph.sgcn"))?;
+    if cli.store_mem {
+        store = store.materialize();
+    }
+    println!(
+        "graph dir {}: {} nodes, {} edges, feat {}, {} classes ({} backend, {} mapped)",
+        dir.display(),
+        store.n(),
+        store.m(),
+        store.feat_dim(),
+        store.num_classes(),
+        store.backend_name(),
+        supergcn::util::fmt_bytes(store.mapped_bytes() as f64),
+    );
+    let out = if rc.sampler != SamplerKind::Full {
+        rc.validate(cli.procs)?;
+        let tr = rc.minibatch_trainer_oocore(store, cli.procs)?;
+        run_minibatch_training(tr, &rc, cli.trace, cli.metrics_json)
+    } else {
+        // Full-batch contexts come out of the per-rank shard files; the
+        // worker count is whatever `prepare` cut, so drop the store
+        // mapping first and validate against the shards' k.
+        drop(store);
+        let tr = rc.full_batch_trainer_from_shards(dir)?;
+        rc.validate(tr.k())?;
+        run_training(tr, &rc, cli.trace, cli.metrics_json)
+    };
+    if let Some(rss) = supergcn::graph::store::peak_rss_bytes() {
+        println!("peak rss: {rss} bytes ({})", supergcn::util::fmt_bytes(rss as f64));
+    }
+    out
+}
+
+/// `supergcn synth`: stream a synthetic labelled graph into
+/// `<out>/graph.sgcn` in bounded memory (DESIGN.md §17).
+fn cmd_synth(argv: &[String]) -> Result<()> {
+    let a = Args::new(
+        "supergcn synth",
+        "stream a synthetic labelled graph to an on-disk store (writes <out>/graph.sgcn)",
+    )
+    .opt("out", "graphdir", "output directory")
+    .opt("nodes", "100000", "node count")
+    .opt("avg-deg", "8", "mean in-degree (per-node degree uniform in [1, 2·avg))")
+    .opt("window", "512", "source locality window in node ids")
+    .opt("feat", "32", "feature dimension")
+    .opt("classes", "8", "label classes")
+    .opt("train-frac", "0.6", "fraction of nodes in the train split")
+    .opt("val-frac", "0.2", "fraction of nodes in the val split")
+    .opt("seed", "42", "generator seed (same seed = byte-identical file)")
+    .parse_from(argv)?;
+    let dir = PathBuf::from(a.get_str("out"));
+    std::fs::create_dir_all(&dir)?;
+    let cfg = SynthConfig {
+        n: a.get_usize("nodes"),
+        avg_deg: a.get_usize("avg-deg"),
+        window: a.get_usize("window"),
+        feat_dim: a.get_usize("feat"),
+        num_classes: a.get_usize("classes"),
+        train_frac: a.get_f64("train-frac"),
+        val_frac: a.get_f64("val-frac"),
+        seed: a.get_u64("seed"),
+        ..Default::default()
+    };
+    let path = dir.join("graph.sgcn");
+    let st = generate_to_store(&cfg, &path)?;
+    println!(
+        "synth: {} nodes, {} edges -> {} ({})",
+        st.n,
+        st.m,
+        path.display(),
+        supergcn::util::fmt_bytes(st.file_bytes as f64),
+    );
+    Ok(())
+}
+
+/// `supergcn prepare`: streaming-partition `<graph-dir>/graph.sgcn` into
+/// one self-contained shard file per rank (DESIGN.md §17).
+fn cmd_prepare(argv: &[String]) -> Result<()> {
+    let a = Args::new(
+        "supergcn prepare",
+        "streaming-partition an on-disk graph into per-rank shard files",
+    )
+    .opt("graph-dir", "graphdir", "directory holding graph.sgcn (shards are written beside it)")
+    .opt("workers", "4", "ranks to shard for")
+    .opt("strategy", "hybrid", "raw | pre | post | hybrid (baked into the halo plans)")
+    .opt("seed", "42", "seed recorded in the shard headers")
+    .parse_from(argv)?;
+    let dir = PathBuf::from(a.get_str("graph-dir"));
+    let store = GraphStore::open(&dir.join("graph.sgcn"))?;
+    let strategy = parse_strategy(&a.get_str("strategy"))?;
+    let infos = shard::write_shards(&store, a.get_usize("workers"), strategy, a.get_u64("seed"), &dir)?;
+    let total: u64 = infos.iter().map(|s| s.bytes).sum();
+    for si in &infos {
+        println!(
+            "  rank {:>3}: {:>9} local nodes, {} -> {}",
+            si.rank,
+            si.n_local,
+            supergcn::util::fmt_bytes(si.bytes as f64),
+            si.path.display(),
+        );
+    }
+    println!(
+        "prepare: {} ranks, strategy {}, {} total shard bytes",
+        infos.len(),
+        strategy.name(),
+        supergcn::util::fmt_bytes(total as f64),
+    );
     Ok(())
 }
 

@@ -21,9 +21,11 @@
 use crate::comm::transport::{FaultPlan, FaultSpec, Topology, TransportKind};
 use crate::coordinator::minibatch::{MiniBatchConfig, MiniBatchTrainer};
 use crate::coordinator::planner::{self, WorkerCtx};
+use crate::coordinator::shard;
 use crate::coordinator::trainer::{CheckpointPolicy, ElasticCtx, TrainConfig, Trainer};
 use crate::exec::AggDispatch;
 use crate::graph::generate::LabelledGraph;
+use crate::graph::store::GraphStore;
 use crate::hier::volume::RemoteStrategy;
 use crate::model::optimizer::OptKind;
 use crate::perfmodel::MachineProfile;
@@ -32,7 +34,7 @@ use crate::runtime::ShapeConfig;
 use crate::sample::{SamplerConfig, SamplerKind};
 use crate::util::rng::SplitMix64;
 use anyhow::Result;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 /// Everything a training run needs, in one struct (DESIGN.md §15).
@@ -88,6 +90,13 @@ pub struct RunConfig {
     /// When > 0, stale rows change the training numerics, so TTL and
     /// capacity join the checkpoint fingerprint.
     pub feature_cache_ttl: usize,
+    /// Out-of-core mode (`--graph-dir`; DESIGN.md §17): train from an
+    /// on-disk graph directory (`graph.sgcn` + `supergcn prepare` shard
+    /// files) through the mmap [`GraphStore`] backend instead of an
+    /// in-process graph. Storage only — per-epoch losses are bit-exact
+    /// against the in-memory path, so it stays out of the fingerprint
+    /// and checkpoints resume across backends.
+    pub graph_dir: Option<PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -123,6 +132,7 @@ impl Default for RunConfig {
             chaos: None,
             feature_cache_rows: 0,
             feature_cache_ttl: 0,
+            graph_dir: None,
         }
     }
 }
@@ -227,6 +237,19 @@ impl RunConfig {
                 c.rank
             );
         }
+        if self.graph_dir.is_some() {
+            anyhow::ensure!(
+                self.chaos.is_none(),
+                "--chaos cannot combine with --graph-dir: elastic re-planning after a rank \
+                 loss needs the in-memory graph backend"
+            );
+            anyhow::ensure!(
+                self.sampler != SamplerKind::Cluster,
+                "sampler 'cluster' needs the in-memory graph backend; with --graph-dir use a \
+                 streaming sampler (neighbor|saint-rw|saint-node|saint-edge) or the full-batch \
+                 regime"
+            );
+        }
         Ok(())
     }
 
@@ -305,11 +328,17 @@ impl RunConfig {
         Ok(tr)
     }
 
-    /// Build the mini-batch trainer (elastic recovery is always armed:
-    /// the trainer owns the graph and partition it needs to re-plan).
-    pub fn minibatch_trainer(&self, lg: Arc<LabelledGraph>, k: usize) -> Result<MiniBatchTrainer> {
+    /// Build the mini-batch trainer. Elastic recovery arms itself only on
+    /// the in-memory backend (re-planning a lost rank walks the full
+    /// graph, which an mmap `--graph-dir` store deliberately never
+    /// materializes).
+    pub fn minibatch_trainer(
+        &self,
+        graph: impl Into<GraphStore>,
+        k: usize,
+    ) -> Result<MiniBatchTrainer> {
         let mut tr = MiniBatchTrainer::new(
-            lg,
+            graph,
             k,
             self.sampler,
             &self.sampler_config(),
@@ -317,7 +346,54 @@ impl RunConfig {
         )?;
         tr.ckpt = self.checkpoint_policy();
         tr.chaos = self.chaos.map(FaultPlan::new);
-        tr.elastic = true;
+        tr.elastic = tr.store.labelled().is_some();
+        Ok(tr)
+    }
+
+    /// Build the mini-batch trainer for a `--graph-dir` run: the
+    /// partition always comes from the streaming block partitioner —
+    /// also when the store was materialized in memory for a reference
+    /// run — so per-epoch losses are bit-identical across backends
+    /// (DESIGN.md §17).
+    pub fn minibatch_trainer_oocore(
+        &self,
+        store: GraphStore,
+        k: usize,
+    ) -> Result<MiniBatchTrainer> {
+        anyhow::ensure!(k >= 1, "need at least one worker");
+        let part = planner::block_partition(&store, k);
+        let mut tr = MiniBatchTrainer::with_partition(
+            store,
+            part,
+            self.sampler,
+            &self.sampler_config(),
+            self.minibatch_config(),
+        )?;
+        tr.ckpt = self.checkpoint_policy();
+        tr.chaos = self.chaos.map(FaultPlan::new);
+        tr.elastic = tr.store.labelled().is_some();
+        Ok(tr)
+    }
+
+    /// Build the full-batch trainer from `supergcn prepare` shard files
+    /// (DESIGN.md §17): each rank's context comes straight out of its
+    /// self-contained shard, so the global graph is never loaded. The
+    /// shards must have been prepared under the same remote-strategy the
+    /// run asks for (plans are baked in at prepare time).
+    pub fn full_batch_trainer_from_shards(&self, dir: &Path) -> Result<Trainer> {
+        let shards = shard::load_shards(dir)?;
+        anyhow::ensure!(
+            shards[0].strategy == self.strategy,
+            "shard files in {} were prepared with --strategy {}, but this run asks for {} — \
+             re-run `supergcn prepare` with the matching strategy",
+            dir.display(),
+            shards[0].strategy.name(),
+            self.strategy.name()
+        );
+        let bytes = shard::total_bytes(&shards);
+        let (ctxs, shapes) = shard::build_ctxs_from_shards(&shards, self.hidden)?;
+        let mut tr = self.full_batch_trainer(ctxs, shapes);
+        tr.store_shard_bytes = bytes;
         Ok(tr)
     }
 }
@@ -354,6 +430,12 @@ mod tests {
             // the fingerprint (DESIGN.md §16).
             RunConfig {
                 feature_cache_rows: 512,
+                ..base.clone()
+            },
+            // Storage backend is loss-bit-neutral (DESIGN.md §17), so a
+            // checkpoint written in memory resumes under --graph-dir.
+            RunConfig {
+                graph_dir: Some(PathBuf::from("/tmp/g")),
                 ..base.clone()
             },
         ];
@@ -490,6 +572,29 @@ mod tests {
         };
         let e = rc.validate(4).unwrap_err().to_string();
         assert!(e.contains("--feature-cache-ttl applies to the mini-batch"), "{e}");
+        let rc = RunConfig {
+            sampler: SamplerKind::Neighbor,
+            ..rc
+        };
+        rc.validate(4).unwrap();
+
+        // Out-of-core conflicts (DESIGN.md §17): no chaos/elastic re-plan
+        // and no in-memory-only sampler on the mmap backend.
+        let rc = RunConfig {
+            graph_dir: Some(PathBuf::from("/tmp/g")),
+            chaos: Some(FaultSpec { rank: 1, epoch: 2 }),
+            transport: TransportKind::Threaded,
+            ..RunConfig::default()
+        };
+        let e = rc.validate(4).unwrap_err().to_string();
+        assert!(e.contains("--chaos cannot combine with --graph-dir"), "{e}");
+        let rc = RunConfig {
+            graph_dir: Some(PathBuf::from("/tmp/g")),
+            sampler: SamplerKind::Cluster,
+            ..RunConfig::default()
+        };
+        let e = rc.validate(4).unwrap_err().to_string();
+        assert!(e.contains("needs the in-memory graph backend"), "{e}");
         let rc = RunConfig {
             sampler: SamplerKind::Neighbor,
             ..rc

@@ -33,9 +33,8 @@ pub use minibatch::{mean_edge_weights, MiniBatch};
 pub use neighbor::NeighborSampler;
 pub use saint::{SaintSampler, SaintVariant};
 
-use crate::graph::generate::LabelledGraph;
+use crate::graph::store::GraphStore;
 use crate::util::rng::{Rng, SplitMix64};
-use std::sync::Arc;
 
 /// A mini-batch producer. Implementations must be deterministic in
 /// `(seed, epoch, batch)` — two instances built with the same
@@ -129,33 +128,53 @@ impl Default for SamplerConfig {
     }
 }
 
-/// Build the sampler for `kind` over `lg`. `SamplerKind::Full` maps to
+/// Build the sampler for `kind` over `store`. `SamplerKind::Full` maps to
 /// [`FullSampler`] (the mini-batch engine's full-graph baseline); the
 /// CLI routes `--sampler full` to the full-batch [`crate::coordinator::Trainer`]
 /// instead.
+///
+/// Neighbor and the SAINT variants stream through the [`GraphStore`], so
+/// they run unchanged — and draw bit-identical batches — on the
+/// mmap-backed out-of-core path. `full` (clones the whole graph into
+/// every batch) and `cluster` (multilevel partitioning wants the heap
+/// CSR) fundamentally need the in-memory backend and return a
+/// descriptive error on an mmap store instead of silently materializing
+/// a 100M-edge graph.
 pub fn build_sampler(
     kind: SamplerKind,
-    lg: &Arc<LabelledGraph>,
+    store: &GraphStore,
     cfg: &SamplerConfig,
-) -> Box<dyn Sampler> {
-    match kind {
-        SamplerKind::Full => Box::new(FullSampler::new(lg.clone())),
+) -> anyhow::Result<Box<dyn Sampler>> {
+    let need_mem = |what: &str| {
+        anyhow::anyhow!(
+            "sampler '{what}' needs the in-memory graph backend; with \
+             --graph-dir use a streaming sampler (neighbor|saint-rw|saint-node|saint-edge)"
+        )
+    };
+    Ok(match kind {
+        SamplerKind::Full => {
+            let lg = store.labelled().ok_or_else(|| need_mem("full"))?;
+            Box::new(FullSampler::new(lg.clone()))
+        }
         SamplerKind::Neighbor => Box::new(NeighborSampler::new(
-            lg.clone(),
+            store.clone(),
             cfg.fanouts.clone(),
             cfg.batch_size,
             cfg.seed,
         )),
-        SamplerKind::SaintRw => Box::new(SaintSampler::new(lg.clone(), SaintVariant::Walk, cfg)),
-        SamplerKind::SaintNode => Box::new(SaintSampler::new(lg.clone(), SaintVariant::Node, cfg)),
-        SamplerKind::SaintEdge => Box::new(SaintSampler::new(lg.clone(), SaintVariant::Edge, cfg)),
-        SamplerKind::Cluster => Box::new(ClusterSampler::new(
-            lg.clone(),
-            cfg.num_clusters,
-            cfg.clusters_per_batch,
-            cfg.seed,
-        )),
-    }
+        SamplerKind::SaintRw => Box::new(SaintSampler::new(store.clone(), SaintVariant::Walk, cfg)),
+        SamplerKind::SaintNode => Box::new(SaintSampler::new(store.clone(), SaintVariant::Node, cfg)),
+        SamplerKind::SaintEdge => Box::new(SaintSampler::new(store.clone(), SaintVariant::Edge, cfg)),
+        SamplerKind::Cluster => {
+            let lg = store.labelled().ok_or_else(|| need_mem("cluster"))?;
+            Box::new(ClusterSampler::new(
+                lg.clone(),
+                cfg.num_clusters,
+                cfg.clusters_per_batch,
+                cfg.seed,
+            ))
+        }
+    })
 }
 
 /// Mix two words into one stream seed (SplitMix64 finalizer). Used to
@@ -181,8 +200,8 @@ mod tests {
     use super::*;
     use crate::graph::generate::sbm;
 
-    fn lg() -> Arc<LabelledGraph> {
-        Arc::new(sbm(300, 4, 8.0, 0.8, 8, 0.5, 7))
+    fn lg() -> GraphStore {
+        GraphStore::from(sbm(300, 4, 8.0, 0.8, 8, 0.5, 7))
     }
 
     #[test]
@@ -202,7 +221,7 @@ mod tests {
             ..Default::default()
         };
         for kind in SamplerKind::ALL {
-            let mut s = build_sampler(kind, &lg, &cfg);
+            let mut s = build_sampler(kind, &lg, &cfg).unwrap();
             assert!(s.batches_per_epoch() >= 1, "{}", s.name());
             let mb = s.sample(0, 0);
             mb.validate(lg.n()).unwrap();

@@ -16,12 +16,11 @@
 
 use super::minibatch::{csr_with_weights, MiniBatch};
 use super::{batch_rng, epoch_rng, Sampler};
-use crate::graph::generate::LabelledGraph;
+use crate::graph::store::GraphStore;
 use std::collections::HashMap;
-use std::sync::Arc;
 
 pub struct NeighborSampler {
-    lg: Arc<LabelledGraph>,
+    store: GraphStore,
     fanouts: Vec<usize>,
     batch_size: usize,
     seed: u64,
@@ -32,12 +31,12 @@ pub struct NeighborSampler {
 }
 
 impl NeighborSampler {
-    pub fn new(lg: Arc<LabelledGraph>, fanouts: Vec<usize>, batch_size: usize, seed: u64) -> Self {
+    pub fn new(store: GraphStore, fanouts: Vec<usize>, batch_size: usize, seed: u64) -> Self {
         assert!(!fanouts.is_empty(), "need at least one fan-out");
         assert!(fanouts.iter().all(|&f| f >= 1), "fan-outs must be >= 1");
         assert!(batch_size >= 1, "batch_size must be >= 1");
         Self {
-            lg,
+            store,
             fanouts,
             batch_size,
             seed,
@@ -47,7 +46,7 @@ impl NeighborSampler {
 
     /// Targets of `(epoch, batch)`: a slice of the epoch's permutation.
     fn targets_of(&mut self, epoch: usize, batch: usize) -> Vec<u32> {
-        let n = self.lg.n();
+        let n = self.store.n();
         if self.epoch_order.as_ref().map(|(e, _)| *e) != Some(epoch) {
             let mut order: Vec<u32> = (0..n as u32).collect();
             epoch_rng(self.seed, epoch).shuffle(&mut order);
@@ -66,12 +65,12 @@ impl Sampler for NeighborSampler {
     }
 
     fn batches_per_epoch(&self) -> usize {
-        self.lg.n().div_ceil(self.batch_size)
+        self.store.n().div_ceil(self.batch_size)
     }
 
     fn sample(&mut self, epoch: usize, batch: usize) -> MiniBatch {
         let targets = self.targets_of(epoch, batch);
-        let g = &self.lg.graph;
+        let g = &self.store;
         let mut rng = batch_rng(self.seed, epoch, batch);
 
         let mut n_id = targets.clone();
@@ -132,8 +131,8 @@ mod tests {
     use super::*;
     use crate::graph::generate::sbm;
 
-    fn lg() -> Arc<LabelledGraph> {
-        Arc::new(sbm(400, 4, 10.0, 0.8, 8, 0.5, 11))
+    fn lg() -> GraphStore {
+        GraphStore::from(sbm(400, 4, 10.0, 0.8, 8, 0.5, 11))
     }
 
     #[test]
@@ -198,7 +197,7 @@ mod tests {
         let mut s = NeighborSampler::new(lg(), vec![1_000], 400, 3);
         let mb = s.sample(0, 0);
         assert_eq!(mb.n_target, 400);
-        let g = &lg().graph;
+        let g = lg();
         for (i, &v) in mb.n_id.iter().enumerate() {
             assert_eq!(mb.adj.in_degree(i), g.in_degree(v as usize));
         }

@@ -13,9 +13,8 @@
 
 use super::minibatch::{mean_edge_weights, MiniBatch};
 use super::{batch_rng, mix2, Sampler, SamplerConfig};
-use crate::graph::generate::LabelledGraph;
+use crate::graph::store::GraphStore;
 use crate::util::rng::Rng;
-use std::sync::Arc;
 
 /// Which GraphSAINT subgraph distribution to draw from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,7 +38,7 @@ impl SaintVariant {
 }
 
 pub struct SaintSampler {
-    lg: Arc<LabelledGraph>,
+    store: GraphStore,
     variant: SaintVariant,
     batch_size: usize,
     walk_length: usize,
@@ -51,16 +50,16 @@ pub struct SaintSampler {
 }
 
 impl SaintSampler {
-    pub fn new(lg: Arc<LabelledGraph>, variant: SaintVariant, cfg: &SamplerConfig) -> Self {
+    pub fn new(store: GraphStore, variant: SaintVariant, cfg: &SamplerConfig) -> Self {
         assert!(cfg.batch_size >= 1);
-        let n = lg.n();
+        let n = store.n();
         let mut cum_deg = Vec::with_capacity(n + 1);
         cum_deg.push(0u64);
         for v in 0..n {
-            cum_deg.push(cum_deg[v] + lg.graph.in_degree(v) as u64 + 1);
+            cum_deg.push(cum_deg[v] + store.in_degree(v) as u64 + 1);
         }
         let mut s = Self {
-            lg,
+            store,
             variant,
             batch_size: cfg.batch_size,
             walk_length: cfg.walk_length.max(1),
@@ -80,7 +79,7 @@ impl SaintSampler {
 
     /// Pre-draw `draws` node sets and set inverse-coverage loss weights.
     fn estimate_coverage(&mut self, draws: usize) {
-        let n = self.lg.n();
+        let n = self.store.n();
         let mut counts = vec![0u32; n];
         for d in 0..draws {
             let mut rng = Rng::new(mix2(mix2(self.seed, 0xC0_7E_0A6E), d as u64));
@@ -101,8 +100,8 @@ impl SaintSampler {
 
     /// Draw one node set (sorted, distinct) according to the variant.
     fn node_set(&self, rng: &mut Rng) -> Vec<u32> {
-        let g = &self.lg.graph;
-        let n = g.n;
+        let g = &self.store;
+        let n = g.n();
         let mut set: Vec<u32> = Vec::with_capacity(self.batch_size + 1);
         match self.variant {
             SaintVariant::Node => {
@@ -124,9 +123,8 @@ impl SaintSampler {
                 } else {
                     for _ in 0..draws {
                         let e = rng.index(m);
-                        let dst = g.row_ptr.partition_point(|&p| p <= e) - 1;
-                        set.push(g.col_idx[e]);
-                        set.push(dst as u32);
+                        set.push(g.edge_src(e));
+                        set.push(g.edge_dst(e) as u32);
                     }
                 }
             }
@@ -158,13 +156,13 @@ impl Sampler for SaintSampler {
     }
 
     fn batches_per_epoch(&self) -> usize {
-        self.lg.n().div_ceil(self.batch_size)
+        self.store.n().div_ceil(self.batch_size)
     }
 
     fn sample(&mut self, epoch: usize, batch: usize) -> MiniBatch {
         let mut rng = batch_rng(self.seed ^ 0x5A1_7, epoch, batch);
         let n_id = self.node_set(&mut rng);
-        let adj = self.lg.graph.induced(&n_id);
+        let adj = self.store.induced(&n_id);
         let edge_weight = mean_edge_weights(&adj);
         let node_weight = n_id.iter().map(|&v| self.loss_weight[v as usize]).collect();
         MiniBatch {
@@ -183,8 +181,8 @@ mod tests {
     use super::*;
     use crate::graph::generate::sbm;
 
-    fn lg() -> Arc<LabelledGraph> {
-        Arc::new(sbm(500, 4, 10.0, 0.8, 8, 0.5, 21))
+    fn lg() -> GraphStore {
+        GraphStore::from(sbm(500, 4, 10.0, 0.8, 8, 0.5, 21))
     }
 
     fn cfg(bs: usize) -> SamplerConfig {
@@ -223,10 +221,10 @@ mod tests {
         let mut drawn_deg = 0f64;
         let mut drawn = 0f64;
         for (v, &h) in hits.iter().enumerate() {
-            drawn_deg += h as f64 * lg.graph.in_degree(v) as f64;
+            drawn_deg += h as f64 * lg.in_degree(v) as f64;
             drawn += h as f64;
         }
-        let global = lg.graph.m() as f64 / 500.0;
+        let global = lg.m() as f64 / 500.0;
         assert!(drawn_deg / drawn > global, "not degree biased");
     }
 
@@ -240,7 +238,7 @@ mod tests {
         // bottom decile (aggregated so single-node noise cancels).
         let lg = lg();
         let mut by_deg: Vec<usize> = (0..500).collect();
-        by_deg.sort_by_key(|&v| lg.graph.in_degree(v));
+        by_deg.sort_by_key(|&v| lg.in_degree(v));
         let mean_w = |vs: &[usize]| -> f64 {
             vs.iter().map(|&v| s.loss_weight[v] as f64).sum::<f64>() / vs.len() as f64
         };

@@ -10,6 +10,7 @@ use supergcn::coordinator::planner::{partition_for, prepare};
 use supergcn::coordinator::trainer::{TrainConfig, Trainer};
 use supergcn::datasets;
 use supergcn::graph::generate::LabelledGraph;
+use supergcn::graph::store::GraphStore;
 use supergcn::partition::multilevel::{multilevel, MultilevelOpts};
 use supergcn::partition::vertex_weights;
 use supergcn::quant::{fused, Bits};
@@ -32,9 +33,10 @@ fn scfg(seed: u64) -> SamplerConfig {
 #[test]
 fn samplers_are_seed_deterministic() {
     let lg = catalog_lg();
+    let store = GraphStore::from(lg.clone());
     for kind in SamplerKind::ALL {
-        let mut a = build_sampler(kind, &lg, &scfg(17));
-        let mut b = build_sampler(kind, &lg, &scfg(17));
+        let mut a = build_sampler(kind, &store, &scfg(17)).unwrap();
+        let mut b = build_sampler(kind, &store, &scfg(17)).unwrap();
         assert_eq!(a.batches_per_epoch(), b.batches_per_epoch());
         for (epoch, batch) in [(0usize, 0usize), (3, 1), (7, 0)] {
             let batch = batch.min(a.batches_per_epoch() - 1);
@@ -48,7 +50,7 @@ fn samplers_are_seed_deterministic() {
         }
         // A different seed must change the draw for the stochastic kinds.
         if kind != SamplerKind::Full && kind != SamplerKind::Cluster {
-            let mut c = build_sampler(kind, &lg, &scfg(18));
+            let mut c = build_sampler(kind, &store, &scfg(18)).unwrap();
             assert_ne!(c.sample(0, 0).n_id, a.sample(0, 0).n_id, "{}", kind.name());
         }
     }
@@ -149,7 +151,8 @@ fn quantized_fetch_roundtrip_is_unbiased_on_sampled_halo_rows() {
             ..Default::default()
         },
     );
-    let mut sampler = build_sampler(SamplerKind::Neighbor, &lg, &scfg(seed));
+    let store = GraphStore::from(lg.clone());
+    let mut sampler = build_sampler(SamplerKind::Neighbor, &store, &scfg(seed)).unwrap();
     let mb = sampler.sample(0, 0);
     let w = 0usize; // perspective of worker 0
     let halo: Vec<u32> = mb
